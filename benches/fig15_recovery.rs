@@ -1,0 +1,13 @@
+//! Bench harness regenerating: Figure 15 — recovery limit.
+//! Run: `cargo bench --bench fig15_recovery` (PB_SEEDS overrides the seed count).
+use paretobandit::exp::{exp8_recovery, ExpEnv};
+use paretobandit::sim::FlashScenario;
+
+fn main() {
+    let seeds: u64 = std::env::var("PB_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let env = ExpEnv::load(FlashScenario::GoodCheap);
+    let t0 = std::time::Instant::now();
+    let res = exp8_recovery::run(&env, seeds);
+    exp8_recovery::report(&res);
+    eprintln!("[fig15_recovery] {seeds} seeds in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,13 @@
+//! Bench harness regenerating: Figure 1 — stationary budget pacing.
+//! Run: `cargo bench --bench fig1_stationary` (PB_SEEDS overrides the seed count).
+use paretobandit::exp::{exp1_stationary, ExpEnv};
+use paretobandit::sim::FlashScenario;
+
+fn main() {
+    let seeds: u64 = std::env::var("PB_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let env = ExpEnv::load(FlashScenario::GoodCheap);
+    let t0 = std::time::Instant::now();
+    let res = exp1_stationary::run(&env, seeds);
+    exp1_stationary::report(&res);
+    eprintln!("[fig1_stationary] {seeds} seeds in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,13 @@
+//! Bench harness regenerating: Figure 3 — silent quality degradation.
+//! Run: `cargo bench --bench fig3_degradation` (PB_SEEDS overrides the seed count).
+use paretobandit::exp::{exp3_degradation, ExpEnv};
+use paretobandit::sim::FlashScenario;
+
+fn main() {
+    let seeds: u64 = std::env::var("PB_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let env = ExpEnv::load(FlashScenario::GoodCheap);
+    let t0 = std::time::Instant::now();
+    let res = exp3_degradation::run(&env, seeds);
+    exp3_degradation::report(&res);
+    eprintln!("[fig3_degradation] {seeds} seeds in {:.1}s", t0.elapsed().as_secs_f64());
+}

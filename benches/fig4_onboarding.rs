@@ -1,0 +1,13 @@
+//! Bench harness regenerating: Figures 4-5 — onboarding.
+//! Run: `cargo bench --bench fig4_onboarding` (PB_SEEDS overrides the seed count).
+use paretobandit::exp::{exp4_onboarding, ExpEnv};
+use paretobandit::sim::FlashScenario;
+
+fn main() {
+    let seeds: u64 = std::env::var("PB_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let env = ExpEnv::load(FlashScenario::GoodCheap);
+    let t0 = std::time::Instant::now();
+    let res = exp4_onboarding::run(&env, seeds);
+    exp4_onboarding::report(&res);
+    eprintln!("[fig4_onboarding] {seeds} seeds in {:.1}s", t0.elapsed().as_secs_f64());
+}

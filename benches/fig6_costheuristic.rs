@@ -1,0 +1,10 @@
+//! Bench harness regenerating: Appendix B / Figures 6-7 — cost heuristic
+//! validation (K=3 and K=4).  Run: `cargo bench --bench fig6_costheuristic`.
+use paretobandit::exp::{exp9_costheuristic, ExpEnv};
+use paretobandit::sim::FlashScenario;
+
+fn main() {
+    let env = ExpEnv::load(FlashScenario::GoodCheap);
+    exp9_costheuristic::report(&exp9_costheuristic::run(&env, 3));
+    exp9_costheuristic::report(&exp9_costheuristic::run(&env, 4));
+}

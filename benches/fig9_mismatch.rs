@@ -1,0 +1,13 @@
+//! Bench harness regenerating: Figures 9-10 — prior mismatch.
+//! Run: `cargo bench --bench fig9_mismatch` (PB_SEEDS overrides the seed count).
+use paretobandit::exp::{exp6_mismatch, ExpEnv};
+use paretobandit::sim::FlashScenario;
+
+fn main() {
+    let seeds: u64 = std::env::var("PB_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let env = ExpEnv::load(FlashScenario::GoodCheap);
+    let t0 = std::time::Instant::now();
+    let res = exp6_mismatch::run(&env, seeds);
+    exp6_mismatch::report(&res);
+    eprintln!("[fig9_mismatch] {seeds} seeds in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,8 @@
+//! Bench harness regenerating: Appendix F Tables 10-12 + Figures 13-14 —
+//! routing latency microbenchmark (8 configs, E2E pipeline, LLM ratios).
+//! Run: `cargo bench --bench tab10_latency`.
+use paretobandit::exp::latency;
+
+fn main() {
+    latency::report(&latency::run(true));
+}

@@ -1,0 +1,13 @@
+//! Bench harness regenerating: Table 2 + Figure 2 — cost drift.
+//! Run: `cargo bench --bench tab2_costdrift` (PB_SEEDS overrides the seed count).
+use paretobandit::exp::{exp2_costdrift, ExpEnv};
+use paretobandit::sim::FlashScenario;
+
+fn main() {
+    let seeds: u64 = std::env::var("PB_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let env = ExpEnv::load(FlashScenario::GoodCheap);
+    let t0 = std::time::Instant::now();
+    let res = exp2_costdrift::run(&env, seeds);
+    exp2_costdrift::report(&res);
+    eprintln!("[tab2_costdrift] {seeds} seeds in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,20 @@
+//! Bench harness regenerating: Appendix A Tables 3-4 — Pareto knee-point
+//! hyperparameter selection and T_adapt sensitivity.
+//! Run: `cargo bench --bench tab3_hyperopt` (PB_SEEDS, PB_TADAPT_SWEEP=1).
+use paretobandit::exp::{hyperopt, ExpEnv};
+use paretobandit::sim::FlashScenario;
+
+fn main() {
+    let seeds: u64 = std::env::var("PB_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(3);
+    let env = ExpEnv::load(FlashScenario::GoodCheap);
+    let res = hyperopt::run(&env, 500.0, true, seeds);
+    hyperopt::report(&res, "ParetoBandit (warmup)");
+    let res_tr = hyperopt::run(&env, 500.0, false, seeds);
+    hyperopt::report(&res_tr, "Tabula Rasa");
+    if std::env::var("PB_TADAPT_SWEEP").is_ok() {
+        for t in [250.0, 1000.0] {
+            let r = hyperopt::run(&env, t, true, seeds);
+            hyperopt::report(&r, "ParetoBandit (warmup)");
+        }
+    }
+}

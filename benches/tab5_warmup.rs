@@ -1,0 +1,13 @@
+//! Bench harness regenerating: Table 5 + Figure 8 — warmup ablation.
+//! Run: `cargo bench --bench tab5_warmup` (PB_SEEDS overrides the seed count).
+use paretobandit::exp::{exp5_warmup, ExpEnv};
+use paretobandit::sim::FlashScenario;
+
+fn main() {
+    let seeds: u64 = std::env::var("PB_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let env = ExpEnv::load(FlashScenario::GoodCheap);
+    let t0 = std::time::Instant::now();
+    let res = exp5_warmup::run(&env, seeds);
+    exp5_warmup::report(&res);
+    eprintln!("[tab5_warmup] {seeds} seeds in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,13 @@
+//! Bench harness regenerating: Tables 6-9 + Figure 12 — judge robustness.
+//! Run: `cargo bench --bench tab6_judges` (PB_SEEDS overrides the seed count).
+use paretobandit::exp::{exp7_judges, ExpEnv};
+use paretobandit::sim::FlashScenario;
+
+fn main() {
+    let seeds: u64 = std::env::var("PB_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let env = ExpEnv::load(FlashScenario::GoodCheap);
+    let t0 = std::time::Instant::now();
+    let res = exp7_judges::run(&env, seeds);
+    exp7_judges::report(&res);
+    eprintln!("[tab6_judges] {seeds} seeds in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,85 @@
+//! Hot-swap onboarding scenario (paper §4.5 in miniature): a K=3 portfolio
+//! learns from live traffic, then Gemini-2.5-Flash is registered at
+//! runtime with no priors.  Watch the forced-exploration burn-in, the
+//! discrimination phase and the equilibrium share — then the model is
+//! deleted again without downtime.
+//!
+//! ```text
+//! cargo run --release --example onboarding
+//! ```
+
+use paretobandit::exp::{allocation, rolling, run_phases, stream_order, Phase};
+use paretobandit::exp::{conditions, ExpEnv};
+use paretobandit::router::Prior;
+use paretobandit::sim::{EnvView, FlashScenario, Judge, FLASH};
+
+fn main() {
+    let env = ExpEnv::load(FlashScenario::GoodCheap);
+    let world_good = env.with_scenario(FlashScenario::GoodCheap);
+    let world_bad = env.with_scenario(FlashScenario::BadCheap);
+    let view = EnvView::normal(4);
+    let offline = conditions::fit_offline(&env, 3, Judge::R1);
+
+    for (label, world) in [("good & cheap", &world_good), ("bad & cheap", &world_bad)] {
+        let mut router =
+            conditions::paretobandit(&env, &offline, 3, Some(conditions::B_MODERATE), 11);
+        let order = stream_order(&env.corpus.test, 99);
+
+        // phase 1: learn on K=3
+        let l1 = run_phases(
+            &mut router,
+            world,
+            &env.contexts,
+            &env.corpus,
+            &[Phase {
+                prompts: order[..600].to_vec(),
+                view: &view,
+            }],
+            Judge::R1,
+        );
+        println!("\n=== scenario: {label} ===");
+        println!(
+            "phase 1 (K=3): reward {:.3}, cost ${:.2e}",
+            paretobandit::exp::mean_reward(&l1),
+            paretobandit::exp::mean_cost(&l1)
+        );
+
+        // hot-swap: register flash cold
+        let spec = &world.models[FLASH];
+        let id = router.add_model(spec.name, spec.price_in_per_m, spec.price_out_per_m, Prior::Cold);
+        println!(
+            "registered {} (arm {id}) -> {} forced pulls queued",
+            spec.name,
+            router.burnin_remaining(id)
+        );
+
+        // phase 2: live adoption
+        let l2 = run_phases(
+            &mut router,
+            world,
+            &env.contexts,
+            &env.corpus,
+            &[Phase {
+                prompts: order[600..].to_vec(),
+                view: &view,
+            }],
+            Judge::R1,
+        );
+        let share = rolling(&l2, 80, |s| if s.arm == FLASH { 1.0 } else { 0.0 });
+        print!("flash rolling share: ");
+        for i in (79..share.len()).step_by(160) {
+            print!("{:.0}% ", share[i] * 100.0);
+        }
+        println!(
+            "\nphase 2 (K=4): reward {:.3}, flash share (2nd half) {:.1}%, cost ${:.2e} (budget ${:.2e})",
+            paretobandit::exp::mean_reward(&l2),
+            100.0 * allocation(&l2[l2.len() / 2..], FLASH),
+            paretobandit::exp::mean_cost(&l2),
+            conditions::B_MODERATE
+        );
+
+        // clean removal
+        assert!(router.delete_model(id));
+        println!("deleted arm {id}; portfolio back to K=3 with no restart");
+    }
+}

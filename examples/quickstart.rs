@@ -1,0 +1,83 @@
+//! Quickstart: build a budget-paced router, feed it simulated traffic, and
+//! watch it discover the quality–cost frontier under a dollar ceiling.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use paretobandit::router::{ParetoRouter, Prior, RouterConfig};
+use paretobandit::util::rng::Rng;
+
+fn main() {
+    // 26-d contexts (25 whitened dims + bias), $6.6e-4/request ceiling
+    let d = 26;
+    let budget = 6.6e-4;
+    let mut router = ParetoRouter::new(RouterConfig::paretobandit(d, budget, 7));
+
+    // Register the paper's Table-1 portfolio ($/1M input, $/1M output).
+    let llama = router.add_model("llama-3.1-8b", 0.10, 0.10, Prior::Cold);
+    let mistral = router.add_model("mistral-large", 0.40, 1.60, Prior::Cold);
+    let gemini = router.add_model("gemini-2.5-pro", 1.25, 10.0, Prior::Cold);
+
+    // Simulated environment: mistral is the quality/cost sweet spot,
+    // gemini slightly better but 28x the price, llama cheap but weaker.
+    let means = [0.79, 0.92, 0.93];
+    let costs = [2.9e-5, 5.3e-4, 1.5e-2];
+
+    let mut rng = Rng::new(1);
+    let mut spend = 0.0;
+    let mut quality = 0.0;
+    let mut counts = [0usize; 3];
+    let steps = 4000;
+    for _ in 0..steps {
+        // whitened context (in production this comes from the AOT/PJRT
+        // featurizer — see examples/serve_demo.rs)
+        let mut x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        x[d - 1] = 1.0;
+
+        let decision = router.route(&x);
+        let arm = decision.arm;
+        let reward = (means[arm] + 0.03 * rng.normal()).clamp(0.0, 1.0);
+        let cost = costs[arm] * rng.lognormal(0.0, 0.3);
+        router.feedback(arm, &x, reward, cost);
+
+        counts[arm] += 1;
+        spend += cost;
+        quality += reward;
+    }
+
+    println!("after {steps} requests under a ${budget:.1e}/req ceiling:");
+    println!(
+        "  allocation: llama {:.1}%  mistral {:.1}%  gemini {:.1}%",
+        100.0 * counts[llama] as f64 / steps as f64,
+        100.0 * counts[mistral] as f64 / steps as f64,
+        100.0 * counts[gemini] as f64 / steps as f64,
+    );
+    println!(
+        "  mean cost  ${:.2e}/req ({:.0}% of ceiling)",
+        spend / steps as f64,
+        100.0 * spend / steps as f64 / budget
+    );
+    println!("  mean quality {:.3}", quality / steps as f64);
+    println!(
+        "  dual variable λ = {:.3}",
+        router.pacer().map(|p| p.lambda()).unwrap_or(0.0)
+    );
+
+    // hot-swap demo: a new model joins at runtime
+    let flash = router.add_model(
+        "gemini-2.5-flash",
+        0.30,
+        2.50,
+        Prior::Heuristic {
+            n_eff: 25.0,
+            r0: 0.7,
+        },
+    );
+    println!(
+        "\nadded '{}' at runtime (arm {}, {} forced-exploration pulls queued)",
+        "gemini-2.5-flash",
+        flash,
+        router.burnin_remaining(flash)
+    );
+}

@@ -1,0 +1,196 @@
+"""AOT entrypoint: lower the L2 graphs to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --outdir ../artifacts
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+Graphs are lowered with ``return_tuple=True`` — the Rust runtime unwraps
+with ``to_tuple1()``.
+
+Artifacts written:
+
+  embed_b1.hlo.txt   token ids [1, 64]  -> context [1, 26]
+  embed_b32.hlo.txt  token ids [32, 64] -> context [32, 26]
+  score.hlo.txt      arm bank (K=8 padded) + contexts [16, 26] -> [16, 8]
+  score_b1.hlo.txt   arm bank + context [1, 26] -> [1, 8]
+  meta.json          shapes + tokenizer spec + PCA provenance
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import simcorpus
+from .kernels import ref
+from .model import embed_model, score_model
+from .tokenizer import L_MAX, VOCAB_SIZE, tokenize
+from .weights import D_CTX, E_DIM, H_DIM, P_DIM, build_weights
+
+K_MAX = 8          # padded arm-bank capacity (hot-swap headroom)
+PCA_SEED = 777     # disjoint from the Rust experiment splits
+PCA_N = 4000
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def fit_pca(weights: dict) -> dict:
+    """Fit PCA(P_DIM) + whitening on embeddings of a disjoint corpus."""
+    prompts = simcorpus.sample_corpus(PCA_SEED, PCA_N)
+    ids = np.array([tokenize(p) for p in prompts], dtype=np.int32)
+    # reference (pure-jnp) path for the raw encoder, batched for memory
+    outs = []
+    for i in range(0, len(ids), 256):
+        chunk = jnp.asarray(ids[i:i + 256])
+        emb = jnp.asarray(weights["emb"])[chunk]
+        valid = (chunk != 0).astype(jnp.float32)[..., None]
+        pooled = (emb * valid).sum(axis=1) / jnp.maximum(valid.sum(axis=1), 1.0)
+        h1 = jnp.tanh(pooled @ weights["w1"] + weights["b1"][None, :])
+        h2 = jnp.tanh(h1 @ weights["w2"] + weights["b2"][None, :])
+        e = h2 / jnp.sqrt(jnp.sum(h2 * h2, -1, keepdims=True) + 1e-12)
+        outs.append(np.asarray(e))
+    e_all = np.concatenate(outs)                           # [N, H]
+    mu = e_all.mean(axis=0)
+    centered = e_all - mu
+    # SVD-based PCA
+    _, s, vt = np.linalg.svd(centered, full_matrices=False)
+    comps = vt[:P_DIM].T.astype(np.float32)                # [H, P]
+    var = (s[:P_DIM] ** 2) / (len(e_all) - 1)
+    inv_std = (1.0 / np.sqrt(np.maximum(var, 1e-12))).astype(np.float32)
+    return {"mu": mu.astype(np.float32), "comps": comps, "inv_std": inv_std}
+
+
+def build_params() -> dict:
+    w = build_weights()
+    w.update(fit_pca(w))
+    return {k: jnp.asarray(v) for k, v in w.items()}
+
+
+# Parameter order for the embed graph.  Weights are graph *parameters*,
+# not baked constants: ``as_hlo_text`` elides large literals
+# (``constant({...})``) and the text parser would refill them with zeros on
+# the Rust side.  The Rust runtime loads ``weights.bin`` and uploads these
+# once as device buffers.
+W_ORDER = ["emb", "w1", "b1", "w2", "b2", "mu", "comps", "inv_std"]
+
+
+def lower_embed(params: dict, batch: int) -> str:
+    def wrapped(*args):
+        ws = dict(zip(W_ORDER, args[: len(W_ORDER)]))
+        return (embed_model(ws, args[len(W_ORDER)]),)
+
+    specs = [
+        jax.ShapeDtypeStruct(params[k].shape, params[k].dtype) for k in W_ORDER
+    ] + [jax.ShapeDtypeStruct((batch, L_MAX), jnp.int32)]
+    return to_hlo_text(jax.jit(wrapped).lower(*specs))
+
+
+def write_weights_bin(path: str, params: dict) -> None:
+    """Binary weight artifact: magic | n | (name_len, name, ndim, dims,
+    f32 data) per tensor, little endian.  Rust mirror:
+    ``runtime::embedder::load_weights``."""
+    import struct
+
+    with open(path, "wb") as f:
+        f.write(struct.pack("<II", 0x50425754, len(W_ORDER)))  # "PBWT"
+        for name in W_ORDER:
+            arr = np.ascontiguousarray(np.asarray(params[name], dtype=np.float32))
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def lower_score(batch: int) -> str:
+    f32 = jnp.float32
+    specs = (
+        jax.ShapeDtypeStruct((K_MAX, D_CTX, D_CTX), f32),  # a_inv
+        jax.ShapeDtypeStruct((K_MAX, D_CTX), f32),         # theta
+        jax.ShapeDtypeStruct((K_MAX,), f32),               # infl
+        jax.ShapeDtypeStruct((K_MAX,), f32),               # cpen
+        jax.ShapeDtypeStruct((K_MAX,), f32),               # mask
+        jax.ShapeDtypeStruct((1,), f32),                   # alpha
+        jax.ShapeDtypeStruct((batch, D_CTX), f32),         # x
+    )
+    wrapped = lambda *a: (score_model(*a),)
+    return to_hlo_text(jax.jit(wrapped).lower(*specs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    params = build_params()
+
+    artifacts = {
+        "embed_b1.hlo.txt": lower_embed(params, 1),
+        "embed_b32.hlo.txt": lower_embed(params, 32),
+        "score_b1.hlo.txt": lower_score(1),
+        "score.hlo.txt": lower_score(16),
+    }
+    for name, text in artifacts.items():
+        path = os.path.join(args.outdir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars -> {path}")
+
+    wpath = os.path.join(args.outdir, "weights.bin")
+    write_weights_bin(wpath, params)
+    print(f"wrote {os.path.getsize(wpath):>9} bytes -> {wpath}")
+
+    meta = {
+        "vocab_size": VOCAB_SIZE,
+        "l_max": L_MAX,
+        "e_dim": E_DIM,
+        "h_dim": H_DIM,
+        "p_dim": P_DIM,
+        "d_ctx": D_CTX,
+        "k_max": K_MAX,
+        "hash": "fnv1a64",
+        "embed_batches": [1, 32],
+        "score_batches": [1, 16],
+        "weight_order": W_ORDER,
+        "pca": {"seed": PCA_SEED, "n": PCA_N},
+    }
+    with open(os.path.join(args.outdir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote meta.json (d_ctx={D_CTX}, k_max={K_MAX})")
+
+    # sanity: pallas path == reference path on a tiny batch
+    ids = jnp.asarray(
+        np.array([tokenize("w1 w2 mmlu_3 gsm8k_4"), tokenize("w5")],
+                 dtype=np.int32))
+    got = embed_model(params, ids)
+    want = ref.embed_ref(ids, params["emb"], params["w1"], params["b1"],
+                         params["w2"], params["b2"], params["mu"],
+                         params["comps"], params["inv_std"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+    print("self-check OK: pallas embed == jnp reference")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Pallas kernel: the featurizer hot-spot (SimEmbed MLP + PCA projection).
+
+The paper's context pipeline (§2.2) is all-MiniLM-L6-v2 -> PCA(25) ->
+whiten -> append bias.  Offline we substitute a deterministic surrogate
+("SimEmbed", DESIGN.md §6): mean-pooled hashed-token embeddings followed by
+a frozen random 2-layer MLP, L2-normalisation, and the PCA projection.  The
+token gather + mean-pool happens at the JAX level (gathers are not a good
+Pallas fit); this kernel fuses everything after pooling:
+
+    h1 = tanh(p @ W1 + b1)          # [B, E] -> [B, H]
+    h2 = tanh(h1 @ W2 + b2)         # [B, H] -> [B, H]
+    e  = h2 / ||h2||                # L2 normalise
+    y  = ((e - mu) @ C) * s         # PCA project + whiten  -> [B, P]
+
+TPU adaptation (DESIGN.md §7): weights (384x384 f32 ~ 0.6 MB each) are
+VMEM-resident for the whole grid; the batch dimension is tiled so each
+program instance performs three MXU matmuls on a [Bt, 384] activation
+block — the classic "weights stay, activations stream" schedule that a GPU
+implementation would express with threadblock tiling over shared memory.
+
+Lowered with interpret=True for CPU PJRT (Mosaic custom-calls cannot run on
+the CPU plugin).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mlp_pca_kernel(p_ref, w1_ref, b1_ref, w2_ref, b2_ref, mu_ref, c_ref,
+                    s_ref, out_ref):
+    p = p_ref[...]                                    # [Bt, E]
+    h1 = jnp.tanh(p @ w1_ref[...] + b1_ref[...][None, :])
+    h2 = jnp.tanh(h1 @ w2_ref[...] + b2_ref[...][None, :])
+    norm = jnp.sqrt(jnp.sum(h2 * h2, axis=-1, keepdims=True) + 1e-12)
+    e = h2 / norm
+    y = (e - mu_ref[...][None, :]) @ c_ref[...]
+    out_ref[...] = y * s_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def mlp_pca(pooled, w1, b1, w2, b2, mu, comps, inv_std, *, block_b: int = 8):
+    """Fused MLP + L2-norm + PCA whitening.
+
+    Args:
+      pooled:  [B, E] mean-pooled token embeddings.
+      w1, b1:  [E, H], [H] first layer.
+      w2, b2:  [H, H], [H] second layer.
+      mu:      [H] embedding mean (PCA centering).
+      comps:   [H, P] principal components.
+      inv_std: [P] whitening scale (1/sqrt(eigval)).
+
+    Returns:
+      [B, P] whitened PCA features.
+    """
+    b, e = pooled.shape
+    h = w1.shape[1]
+    p_dim = comps.shape[1]
+    bt = min(block_b, b)
+    grid = (pl.cdiv(b, bt),)
+    return pl.pallas_call(
+        _mlp_pca_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, e), lambda i: (i, 0)),
+            pl.BlockSpec((e, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h, p_dim), lambda i: (0, 0)),
+            pl.BlockSpec((p_dim,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, p_dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, p_dim), jnp.float32),
+        interpret=True,
+    )(pooled, w1, b1, w2, b2, mu, comps, inv_std)

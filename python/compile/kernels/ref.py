@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: pytest (and hypothesis sweeps) assert
+that the Pallas kernels match these implementations to float32 tolerance
+across shapes.  Keep them boring and obviously-correct.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BIG = 1e9
+
+
+def ucb_score_ref(x, a_inv, theta, infl, cpen, mask, alpha):
+    """Reference for kernels.ucb_score.ucb_score (paper Eq. 2 + Eq. 9)."""
+    exploit = x @ theta.T                                   # [B, K]
+    xa = jnp.einsum("bi,kij->bkj", x, a_inv)
+    quad = jnp.maximum(jnp.sum(xa * x[:, None, :], axis=-1), 0.0)
+    explore = alpha[0] * jnp.sqrt(quad * infl[None, :])
+    return exploit + explore - cpen[None, :] + (mask[None, :] - 1.0) * BIG
+
+
+def mlp_pca_ref(pooled, w1, b1, w2, b2, mu, comps, inv_std):
+    """Reference for kernels.embed.mlp_pca."""
+    h1 = jnp.tanh(pooled @ w1 + b1[None, :])
+    h2 = jnp.tanh(h1 @ w2 + b2[None, :])
+    e = h2 / jnp.sqrt(jnp.sum(h2 * h2, axis=-1, keepdims=True) + 1e-12)
+    return ((e - mu[None, :]) @ comps) * inv_std[None, :]
+
+
+def embed_ref(token_ids, emb_table, w1, b1, w2, b2, mu, comps, inv_std):
+    """Reference for the full embed model (gather + pool + mlp_pca + bias)."""
+    emb = emb_table[token_ids]                              # [B, L, E]
+    valid = (token_ids != 0).astype(jnp.float32)[..., None]
+    denom = jnp.maximum(valid.sum(axis=1), 1.0)
+    pooled = (emb * valid).sum(axis=1) / denom
+    y = mlp_pca_ref(pooled, w1, b1, w2, b2, mu, comps, inv_std)
+    ones = jnp.ones((y.shape[0], 1), dtype=y.dtype)
+    return jnp.concatenate([y, ones], axis=-1)

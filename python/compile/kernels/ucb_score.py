@@ -1,0 +1,94 @@
+"""Pallas kernel: fused budget-augmented LinUCB arm scoring (paper Eq. 2).
+
+For a batch of contexts ``x[B, d]`` and a padded bank of ``K`` arms the
+kernel computes, in one fused pass per batch tile::
+
+    score[b, k] = theta[k] . x[b]                          (exploit)
+                + alpha * sqrt(max(x[b]' A_inv[k] x[b], 0) * infl[k])
+                                                           (explore, Eq. 9)
+                - cpen[k]                                  (cost penalty)
+                + (mask[k] - 1) * BIG                      (hard ceiling)
+
+``infl[k]`` is the staleness variance inflation ``1 / max(gamma^dt_k,
+1/V_max)`` and ``cpen[k] = (lambda_c + lambda_t) * c_tilde_k`` — both are
+computed by the caller so the kernel stays a pure dense map.  Ineligible
+arms (hard budget ceiling, unregistered slots) carry ``mask[k] = 0`` and are
+pushed to ``-BIG`` so argmax never selects them.
+
+TPU adaptation note (DESIGN.md §7): at d=26 the whole arm bank fits in a
+single VMEM block, so the grid only partitions the batch dimension; the
+quadratic form is an MXU-unfriendly small contraction and is deliberately
+fused with the dot product to avoid a second HBM pass over ``x``.
+
+The kernel MUST be lowered with ``interpret=True`` — the CPU PJRT plugin
+cannot execute Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1e9  # mask offset for ineligible arms
+
+
+def _ucb_kernel(x_ref, ainv_ref, theta_ref, infl_ref, cpen_ref, mask_ref,
+                alpha_ref, out_ref):
+    x = x_ref[...]              # [Bt, d]
+    ainv = ainv_ref[...]        # [K, d, d]
+    theta = theta_ref[...]      # [K, d]
+    infl = infl_ref[...]        # [K]
+    cpen = cpen_ref[...]        # [K]
+    mask = mask_ref[...]        # [K]
+    alpha = alpha_ref[0]        # scalar
+
+    # exploit: [Bt, K]
+    exploit = x @ theta.T
+    # quadratic form x' A_inv x for every (row, arm): [Bt, K]
+    xa = jnp.einsum("bi,kij->bkj", x, ainv)
+    quad = jnp.sum(xa * x[:, None, :], axis=-1)
+    quad = jnp.maximum(quad, 0.0)
+    explore = alpha * jnp.sqrt(quad * infl[None, :])
+    out_ref[...] = exploit + explore - cpen[None, :] + (mask[None, :] - 1.0) * BIG
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def ucb_score(x, a_inv, theta, infl, cpen, mask, alpha, *, block_b: int = 16):
+    """Score every arm for every context row.
+
+    Args:
+      x:      [B, d] float32 contexts.
+      a_inv:  [K, d, d] cached precision inverses.
+      theta:  [K, d] ridge estimates.
+      infl:   [K] staleness variance inflation (>= 1).
+      cpen:   [K] total cost penalty (lambda_c + lambda_t) * c_tilde.
+      mask:   [K] 1.0 = eligible, 0.0 = filtered / unregistered.
+      alpha:  [1] exploration coefficient.
+      block_b: batch tile size.
+
+    Returns:
+      [B, K] float32 scores (ineligible arms ~ -1e9).
+    """
+    b, d = x.shape
+    k = theta.shape[0]
+    bt = min(block_b, b)
+    grid = (pl.cdiv(b, bt),)
+    return pl.pallas_call(
+        _ucb_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d, d), lambda i: (0, 0, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=True,
+    )(x, a_inv, theta, infl, cpen, mask, alpha)

@@ -1,0 +1,39 @@
+"""Layer-2 JAX model: the ParetoBandit featurizer + scorer compute graphs.
+
+Two graphs are AOT-lowered (``aot.py``) and executed from the Rust runtime
+via PJRT — python never runs on the request path:
+
+* ``embed_model``  — token ids -> 26-d whitened context (paper §2.2).
+  Gather + masked mean-pool in plain jnp, then the Pallas ``mlp_pca``
+  kernel, then the bias append.
+* ``score_model``  — padded arm bank + context batch -> Eq. 2 scores via
+  the Pallas ``ucb_score`` kernel.  Used by the Rust runtime to
+  cross-validate its native scorer and to serve batched scoring.
+
+Both call Pallas kernels so the kernels lower into the same HLO module.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.embed import mlp_pca
+from .kernels.ucb_score import ucb_score
+
+
+def embed_model(params: dict, token_ids):
+    """token_ids [B, L] int32 -> contexts [B, 26] float32."""
+    emb = params["emb"][token_ids]                         # [B, L, E]
+    valid = (token_ids != 0).astype(jnp.float32)[..., None]
+    denom = jnp.maximum(valid.sum(axis=1), 1.0)
+    pooled = (emb * valid).sum(axis=1) / denom             # [B, E]
+    y = mlp_pca(pooled, params["w1"], params["b1"], params["w2"],
+                params["b2"], params["mu"], params["comps"],
+                params["inv_std"])
+    ones = jnp.ones((y.shape[0], 1), dtype=y.dtype)
+    return jnp.concatenate([y, ones], axis=-1)
+
+
+def score_model(a_inv, theta, infl, cpen, mask, alpha, x):
+    """Batched budget-augmented UCB scores [B, K] (paper Eq. 2)."""
+    return ucb_score(x, a_inv, theta, infl, cpen, mask, alpha)

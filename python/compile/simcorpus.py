@@ -1,0 +1,59 @@
+"""Synthetic prompt corpus (python side) — used only to fit the PCA.
+
+The paper fits PCA on ~46k *disjoint* LMSYS prompts (§2.2).  Here the PCA
+is fitted on synthetic prompts drawn from the same nine benchmark families
+the Rust world simulator uses (DESIGN.md §6): each family mixes a shared
+vocabulary with family-specific terms, so embeddings cluster by family the
+way sentence embeddings cluster by topic.  The python and Rust generators
+share the vocabulary *specification* (word strings + mixing ratios), not an
+RNG stream — PCA only needs representative covariance.
+
+Rust mirror: ``rust/src/sim/corpus.rs``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# (name, specific-word ratio, min words, max words)
+BENCHMARKS: list[tuple[str, float, int, int]] = [
+    ("mmlu", 0.55, 18, 60),
+    ("gsm8k", 0.65, 30, 90),
+    ("hellaswag", 0.45, 25, 70),
+    ("bbh", 0.60, 20, 80),
+    ("arc", 0.50, 15, 50),
+    ("openbookqa", 0.50, 12, 45),
+    ("winogrande", 0.40, 15, 40),
+    ("truthfulqa", 0.45, 10, 40),
+    ("mbpp", 0.70, 20, 85),
+]
+
+N_SHARED = 200
+N_SPECIFIC = 120
+
+
+def shared_word(i: int) -> str:
+    return f"w{i}"
+
+
+def specific_word(bench: str, i: int) -> str:
+    return f"{bench}_{i}"
+
+
+def sample_prompt(rng: np.random.Generator, bench_idx: int) -> str:
+    """Draw one synthetic prompt from benchmark family ``bench_idx``."""
+    name, ratio, lo, hi = BENCHMARKS[bench_idx]
+    n = int(rng.integers(lo, hi + 1))
+    words = []
+    for _ in range(n):
+        if rng.random() < ratio:
+            words.append(specific_word(name, int(rng.integers(0, N_SPECIFIC))))
+        else:
+            words.append(shared_word(int(rng.integers(0, N_SHARED))))
+    return " ".join(words)
+
+
+def sample_corpus(seed: int, n: int) -> list[str]:
+    """n prompts, benchmarks round-robin (stratified)."""
+    rng = np.random.default_rng(seed)
+    return [sample_prompt(rng, i % len(BENCHMARKS)) for i in range(n)]

@@ -1,0 +1,45 @@
+"""Deterministic tokenizer shared (by specification) with the Rust side.
+
+The Rust coordinator must produce *identical* token ids for the same prompt
+text, because the AOT-lowered embedding graph consumes token ids.  The spec
+is deliberately trivial so both implementations stay in lock-step:
+
+  * lowercase the prompt
+  * split on ASCII whitespace
+  * FNV-1a 64-bit hash of each word's UTF-8 bytes
+  * vocab id = 1 + (hash % (VOCAB_SIZE - 1))   (id 0 is reserved for PAD)
+  * truncate / right-pad with 0 to L_MAX tokens
+
+Rust mirror: ``rust/src/sim/tokens.rs`` (unit tests on both sides pin the
+same known-answer vectors).
+"""
+
+from __future__ import annotations
+
+VOCAB_SIZE = 8192
+L_MAX = 64
+
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+_MASK64 = (1 << 64) - 1
+
+
+def fnv1a64(data: bytes) -> int:
+    """FNV-1a 64-bit hash (wrapping multiply)."""
+    h = _FNV_OFFSET
+    for b in data:
+        h ^= b
+        h = (h * _FNV_PRIME) & _MASK64
+    return h
+
+
+def word_id(word: str) -> int:
+    """Map a word to a vocab id in [1, VOCAB_SIZE)."""
+    return 1 + fnv1a64(word.encode("utf-8")) % (VOCAB_SIZE - 1)
+
+
+def tokenize(text: str, l_max: int = L_MAX) -> list[int]:
+    """Tokenize a prompt into a fixed-length id list (0-padded)."""
+    ids = [word_id(w) for w in text.lower().split()][:l_max]
+    ids += [0] * (l_max - len(ids))
+    return ids

@@ -1,0 +1,54 @@
+"""Deterministic SimEmbed weight generation.
+
+The surrogate sentence encoder ("SimEmbed", DESIGN.md §6) is a *frozen*
+random network: a hashed-token embedding table plus a 2-layer tanh MLP.
+Weights are generated from a fixed splitmix64 stream so `make artifacts` is
+bit-reproducible and the Rust side never needs the weights (it runs the
+AOT-lowered HLO).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .tokenizer import VOCAB_SIZE
+
+E_DIM = 384   # embedding width (matches all-MiniLM-L6-v2's 384)
+H_DIM = 384   # MLP hidden width
+P_DIM = 25    # PCA components (paper §2.2)
+D_CTX = 26    # 25 PCA dims + bias
+
+SEED = 0xC0FFEE
+
+
+def _splitmix64_stream(seed: int, n: int) -> np.ndarray:
+    """n uniform float64 in [0,1) from a splitmix64 counter stream."""
+    mask = (1 << 64) - 1
+    idx = np.arange(1, n + 1, dtype=np.uint64) * np.uint64(0x9E3779B97F4A7C15)
+    z = (np.uint64(seed & mask) + idx) & np.uint64(mask)
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    z = z ^ (z >> np.uint64(31))
+    return (z >> np.uint64(11)).astype(np.float64) / float(1 << 53)
+
+
+def _normal(seed: int, shape: tuple[int, ...]) -> np.ndarray:
+    """Box-Muller over the splitmix stream -> standard normals."""
+    n = int(np.prod(shape))
+    m = (n + 1) // 2
+    u = _splitmix64_stream(seed, 2 * m).reshape(2, m)
+    r = np.sqrt(-2.0 * np.log(np.maximum(u[0], 1e-300)))
+    z = np.concatenate([r * np.cos(2 * np.pi * u[1]),
+                        r * np.sin(2 * np.pi * u[1])])
+    return z[:n].reshape(shape).astype(np.float32)
+
+
+def build_weights() -> dict[str, np.ndarray]:
+    """Build the frozen SimEmbed parameters (deterministic)."""
+    emb = _normal(SEED + 1, (VOCAB_SIZE, E_DIM)) / np.sqrt(E_DIM)
+    emb[0] = 0.0  # PAD row
+    w1 = _normal(SEED + 2, (E_DIM, H_DIM)) * np.sqrt(2.0 / E_DIM)
+    b1 = _normal(SEED + 3, (H_DIM,)) * 0.01
+    w2 = _normal(SEED + 4, (H_DIM, H_DIM)) * np.sqrt(2.0 / H_DIM)
+    b2 = _normal(SEED + 5, (H_DIM,)) * 0.01
+    return {"emb": emb, "w1": w1, "b1": b1, "w2": w2, "b2": b2}

@@ -1,0 +1,62 @@
+"""Tokenizer spec tests — known-answer vectors pinned on BOTH sides.
+
+``rust/src/sim/tokens.rs`` carries the same vectors; if either side drifts,
+the AOT embedding graph would silently see different token ids.
+"""
+
+from __future__ import annotations
+
+from hypothesis import given, strategies as st
+
+from compile.tokenizer import L_MAX, VOCAB_SIZE, fnv1a64, tokenize, word_id
+
+# Known-answer FNV-1a 64 vectors (also asserted in rust/src/sim/tokens.rs).
+KNOWN_FNV = {
+    b"": 0xCBF29CE484222325,
+    b"a": 0xAF63DC4C8601EC8C,
+    b"hello": 0xA430D84680AABD0B,
+    b"w42": 0x5F40A71948F9E7DC,
+}
+
+# word_id known answers (cross-checked in rust).
+KNOWN_IDS = {"w42": 7488, "hello": 8181, "mmlu_3": 5975}
+
+
+def test_fnv_known_vectors():
+    for data, want in KNOWN_FNV.items():
+        assert fnv1a64(data) == want, data
+
+
+def test_word_id_known_vectors():
+    for w, want in KNOWN_IDS.items():
+        assert word_id(w) == want, w
+
+
+def test_word_id_range():
+    for w in ["a", "hello", "mmlu_3", "gsm8k_119", "W42"]:
+        assert 1 <= word_id(w.lower()) < VOCAB_SIZE
+
+
+def test_tokenize_pads_and_truncates():
+    ids = tokenize("w1 w2")
+    assert len(ids) == L_MAX and ids[2:] == [0] * (L_MAX - 2)
+    long = " ".join(f"w{i}" for i in range(200))
+    assert len(tokenize(long)) == L_MAX
+
+
+def test_tokenize_lowercases():
+    assert tokenize("Hello World") == tokenize("hello world")
+
+
+@given(st.text(alphabet=st.characters(codec="ascii"), max_size=200))
+def test_tokenize_total(text):
+    ids = tokenize(text)
+    assert len(ids) == L_MAX
+    assert all(0 <= i < VOCAB_SIZE for i in ids)
+
+
+@given(st.lists(st.sampled_from(["w1", "w2", "mmlu_0", "x"]), max_size=70))
+def test_tokenize_word_count(words):
+    ids = tokenize(" ".join(words))
+    nz = sum(1 for i in ids if i != 0)
+    assert nz == min(len(words), L_MAX)

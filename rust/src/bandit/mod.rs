@@ -1,0 +1,58 @@
+//! Contextual-bandit machinery: LinUCB arms with geometric forgetting,
+//! staleness inflation and offline-to-online warmup priors.
+
+mod arm;
+mod priors;
+pub mod thompson;
+
+pub use arm::ArmState;
+pub use priors::{heuristic_prior, OfflineStats};
+
+/// Adaptation-horizon coupling (paper Eq. 13):
+/// `T_adapt = -log(n_eff (1-γ) + 1) / log γ`.
+pub fn t_adapt(n_eff: f64, gamma: f64) -> f64 {
+    if gamma >= 1.0 {
+        return n_eff; // L'Hôpital limit: n_eff = T_adapt as γ→1
+    }
+    -((n_eff * (1.0 - gamma) + 1.0).ln()) / gamma.ln()
+}
+
+/// Inverse of Eq. 13: `n_eff = (γ^{-T_adapt} - 1) / (1-γ)`.
+pub fn n_eff_for_horizon(t_adapt_target: f64, gamma: f64) -> f64 {
+    if gamma >= 1.0 {
+        return t_adapt_target;
+    }
+    (gamma.powf(-t_adapt_target) - 1.0) / (1.0 - gamma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq13_roundtrip() {
+        for &gamma in &[0.994, 0.996, 0.997, 0.999] {
+            for &t in &[250.0, 500.0, 1000.0] {
+                let n = n_eff_for_horizon(t, gamma);
+                let back = t_adapt(n, gamma);
+                assert!((back - t).abs() < 1e-6, "γ={gamma} T={t} -> {back}");
+            }
+        }
+    }
+
+    #[test]
+    fn paper_anchor_values() {
+        // Appendix A/Table 4: T=500, γ=0.997 -> n_eff = 1164
+        assert!((n_eff_for_horizon(500.0, 0.997) - 1164.0).abs() < 1.0);
+        // T=250, γ=0.996 -> 431
+        assert!((n_eff_for_horizon(250.0, 0.996) - 431.0).abs() < 1.0);
+        // T=1000, γ=0.994 -> 68298
+        assert!((n_eff_for_horizon(1000.0, 0.994) - 68298.0).abs() < 100.0);
+    }
+
+    #[test]
+    fn gamma_one_limit() {
+        assert_eq!(n_eff_for_horizon(500.0, 1.0), 500.0);
+        assert_eq!(t_adapt(500.0, 1.0), 500.0);
+    }
+}

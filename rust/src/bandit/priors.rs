@@ -1,0 +1,209 @@
+//! Offline-to-online warmup priors (paper §3.4, Eqs. 10–12).
+//!
+//! Offline sufficient statistics `(A_off, b_off)` are fitted on historical
+//! prompt–reward data, scaled so the prior contributes `n_eff`
+//! pseudo-observations, and regularised with a mean-preserving correction
+//! so `A⁻¹ b ≈ θ̂_off` at the requested confidence level.
+
+use super::arm::ArmState;
+use crate::linalg::{Cholesky, Mat};
+
+/// Accumulator for one arm's offline statistics (no ridge included).
+#[derive(Clone, Debug)]
+pub struct OfflineStats {
+    d: usize,
+    pub a_off: Mat,
+    pub b_off: Vec<f64>,
+    pub n: u64,
+}
+
+impl OfflineStats {
+    pub fn new(d: usize) -> OfflineStats {
+        OfflineStats {
+            d,
+            a_off: Mat::zeros(d),
+            b_off: vec![0.0; d],
+            n: 0,
+        }
+    }
+
+    /// Absorb one offline (context, reward) pair.
+    pub fn push(&mut self, x: &[f64], r: f64) {
+        debug_assert_eq!(x.len(), self.d);
+        self.a_off.add_outer(1.0, x);
+        for i in 0..self.d {
+            self.b_off[i] += r * x[i];
+        }
+        self.n += 1;
+    }
+
+    /// Offline ridge estimate θ̂_off = (A_off + λ₀I)⁻¹ b_off.
+    pub fn theta_off(&self, lambda0: f64) -> Vec<f64> {
+        let mut a = self.a_off.clone();
+        a.add_diag(lambda0);
+        Cholesky::factor(&a)
+            .map(|ch| ch.solve(&self.b_off))
+            .unwrap_or_else(|| vec![0.0; self.d])
+    }
+
+    /// Build a warm-started arm (Eqs. 10–12):
+    ///
+    ///   s  = n_eff / A_off[d,d]          (precision mass in bias direction)
+    ///   A  = s·A_off + λ₀I
+    ///   b  = s·b_off + λ₀·θ̂_off
+    ///
+    /// The λ₀θ̂_off term prevents the ridge from shrinking the posterior
+    /// mean toward zero.  Falls back to a cold arm when no offline mass.
+    pub fn warm_arm(&self, n_eff: f64, lambda0: f64, t: u64) -> ArmState {
+        let d = self.d;
+        let bias_mass = self.a_off.at(d - 1, d - 1);
+        if bias_mass <= 0.0 || self.n == 0 {
+            return ArmState::cold(d, lambda0, t);
+        }
+        let s = n_eff / bias_mass;
+        let theta_off = self.theta_off(lambda0);
+        let mut a = self.a_off.clone();
+        a.scale(s);
+        a.add_diag(lambda0);
+        let mut b = self.b_off.clone();
+        for i in 0..d {
+            b[i] = s * b[i] + lambda0 * theta_off[i];
+        }
+        ArmState::from_stats(a, b, t).unwrap_or_else(|| ArmState::cold(d, lambda0, t))
+    }
+}
+
+/// Heuristic prior for models absent from the offline data (§3.4): `n_eff`
+/// pseudo-observations at isotropic uncertainty with a bias-only reward
+/// prediction `r0`.  Every pseudo-context has bias 1 (so the bias-direction
+/// precision mass is exactly `n_eff`) and isotropic non-bias components
+/// with variance 1/d.
+pub fn heuristic_prior(d: usize, n_eff: f64, r0: f64, lambda0: f64, t: u64) -> ArmState {
+    let mut a = Mat::scaled_identity(d, lambda0);
+    // isotropic spread in non-bias directions
+    for i in 0..d - 1 {
+        *a.at_mut(i, i) += n_eff / d as f64;
+    }
+    // full pseudo-observation mass on the bias axis
+    *a.at_mut(d - 1, d - 1) += n_eff;
+    let mut b = vec![0.0; d];
+    b[d - 1] = n_eff * r0;
+    ArmState::from_stats(a, b, t).expect("heuristic prior is SPD")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dot;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn ctx(rng: &mut Rng, d: usize) -> Vec<f64> {
+        let mut x = prop::vec_f64(rng, d, 1.0);
+        x[d - 1] = 1.0;
+        x
+    }
+
+    #[test]
+    fn warm_arm_preserves_offline_mean() {
+        // Eq. 12's correction must keep A⁻¹b ≈ θ̂_off for a range of n_eff
+        let d = 6;
+        let mut rng = Rng::new(10);
+        let truth = prop::vec_f64(&mut rng, d, 0.4);
+        let mut off = OfflineStats::new(d);
+        for _ in 0..2000 {
+            let x = ctx(&mut rng, d);
+            off.push(&x, dot(&truth, &x) + rng.normal() * 0.02);
+        }
+        let theta_off = off.theta_off(1.0);
+        for &n_eff in &[10.0, 100.0, 1164.0] {
+            let arm = off.warm_arm(n_eff, 1.0, 0);
+            for i in 0..d {
+                assert!(
+                    (arm.theta[i] - theta_off[i]).abs() < 0.02,
+                    "n_eff={n_eff} theta[{i}]={} off={}",
+                    arm.theta[i],
+                    theta_off[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn n_eff_controls_confidence() {
+        let d = 5;
+        let mut rng = Rng::new(11);
+        let mut off = OfflineStats::new(d);
+        for _ in 0..1000 {
+            let x = ctx(&mut rng, d);
+            off.push(&x, 0.8);
+        }
+        let weak = off.warm_arm(10.0, 1.0, 0);
+        let strong = off.warm_arm(1000.0, 1.0, 0);
+        let x = ctx(&mut rng, d);
+        assert!(
+            strong.variance(&x) < weak.variance(&x),
+            "stronger prior must mean smaller confidence bonus"
+        );
+    }
+
+    #[test]
+    fn bias_mass_is_observation_count() {
+        // with bias=1 contexts, A_off[d,d] equals the sample count, so the
+        // Eq. 10 scale is exactly n_eff/n
+        let d = 4;
+        let mut rng = Rng::new(12);
+        let mut off = OfflineStats::new(d);
+        for _ in 0..321 {
+            let x = ctx(&mut rng, d);
+            off.push(&x, 0.5);
+        }
+        assert!((off.a_off.at(d - 1, d - 1) - 321.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_offline_falls_back_to_cold() {
+        let off = OfflineStats::new(4);
+        let arm = off.warm_arm(100.0, 1.0, 7);
+        assert_eq!(arm.n_obs, 0);
+        assert!((arm.variance(&[0.0, 0.0, 0.0, 1.0]) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn heuristic_prior_predicts_r0_on_bias() {
+        let d = 26;
+        let arm = heuristic_prior(d, 50.0, 0.62, 1.0, 0);
+        let mut x = vec![0.0; d];
+        x[d - 1] = 1.0;
+        assert!((arm.predict(&x) - 0.62).abs() < 0.02, "{}", arm.predict(&x));
+        // substantial uncertainty remains off-bias
+        let mut y = vec![0.0; d];
+        y[0] = 1.0;
+        y[d - 1] = 1.0;
+        assert!(arm.variance(&y) > arm.variance(&x));
+    }
+
+    #[test]
+    fn online_evidence_overrides_prior_within_window() {
+        // §3.4: "steady-state quality is determined by online evidence"
+        let d = 4;
+        let mut rng = Rng::new(13);
+        let mut off = OfflineStats::new(d);
+        for _ in 0..1000 {
+            let x = ctx(&mut rng, d);
+            off.push(&x, 0.9); // prior believes reward 0.9
+        }
+        let mut arm = off.warm_arm(500.0, 1.0, 0);
+        let gamma = 0.99; // e-folding 100 steps
+        for t in 1..=1500u64 {
+            let x = ctx(&mut rng, d);
+            arm.observe(&x, 0.2, gamma, t); // reality is 0.2
+        }
+        let x = vec![0.0, 0.0, 0.0, 1.0];
+        assert!(
+            (arm.predict(&x) - 0.2).abs() < 0.05,
+            "prior must decay: {}",
+            arm.predict(&x)
+        );
+    }
+}

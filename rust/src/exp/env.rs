@@ -1,0 +1,106 @@
+//! Shared experiment environment: corpus + world + context matrix.
+//!
+//! Contexts come from the AOT/PJRT featurizer when artifacts are present
+//! (cached to `artifacts/contexts.bin` after the first bulk pass — the
+//! paper likewise evaluates on a precomputed embedding matrix), otherwise
+//! from the pure-Rust surrogate featurizer.
+
+use crate::runtime::{default_artifacts_dir, ArtifactMeta, ContextMatrixCache, Embedder, Runtime};
+use crate::sim::{model_bank, Corpus, FlashScenario, SimFeaturizer, World};
+
+/// Canonical world seed for all experiments (paper seeds offset from it).
+pub const WORLD_SEED: u64 = 42;
+
+/// Where the contexts came from (recorded in results).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ContextSource {
+    PjrtArtifacts,
+    PjrtCached,
+    Surrogate,
+}
+
+pub struct ExpEnv {
+    pub corpus: Corpus,
+    pub world: World,
+    /// context matrix indexed by prompt id
+    pub contexts: Vec<Vec<f64>>,
+    pub source: ContextSource,
+}
+
+impl ExpEnv {
+    /// Build the environment for a Flash scenario (contexts are scenario-
+    /// independent; only the model bank changes).
+    pub fn load(scenario: FlashScenario) -> ExpEnv {
+        let corpus = Corpus::build(WORLD_SEED);
+        let world = World::new(model_bank(scenario), WORLD_SEED, &corpus.prompts);
+        let (contexts, source) = Self::load_contexts(&corpus);
+        ExpEnv {
+            corpus,
+            world,
+            contexts,
+            source,
+        }
+    }
+
+    /// Rebuild only the world (scenario switch) sharing corpus + contexts.
+    pub fn with_scenario(&self, scenario: FlashScenario) -> World {
+        World::new(model_bank(scenario), WORLD_SEED, &self.corpus.prompts)
+    }
+
+    fn load_contexts(corpus: &Corpus) -> (Vec<Vec<f64>>, ContextSource) {
+        let dir = default_artifacts_dir();
+        let cache_path = dir.join("contexts.bin");
+        if cache_path.exists() {
+            if let Ok(ctx) = ContextMatrixCache::load(&cache_path) {
+                if ctx.len() == corpus.prompts.len() {
+                    return (ctx, ContextSource::PjrtCached);
+                }
+            }
+        }
+        if dir.join("meta.json").exists() {
+            match Self::embed_corpus(corpus, &dir) {
+                Ok(ctx) => {
+                    let _ = ContextMatrixCache::save(&cache_path, &ctx);
+                    return (ctx, ContextSource::PjrtArtifacts);
+                }
+                Err(e) => eprintln!("warn: PJRT embedding failed ({e:#}); using surrogate"),
+            }
+        }
+        let f = SimFeaturizer::new(WORLD_SEED);
+        (f.contexts(&corpus.prompts), ContextSource::Surrogate)
+    }
+
+    fn embed_corpus(
+        corpus: &Corpus,
+        dir: &std::path::Path,
+    ) -> anyhow::Result<Vec<Vec<f64>>> {
+        let rt = Runtime::cpu()?;
+        let meta = ArtifactMeta::load(dir)?;
+        let emb = Embedder::load(&rt, &meta)?;
+        let texts: Vec<&str> = corpus.prompts.iter().map(|p| p.text.as_str()).collect();
+        eprintln!(
+            "embedding {} prompts through the PJRT featurizer (one-time, cached)...",
+            texts.len()
+        );
+        emb.embed_many(&texts)
+    }
+
+    pub fn d(&self) -> usize {
+        self.contexts[0].len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_loads_with_consistent_shapes() {
+        let env = ExpEnv::load(FlashScenario::GoodCheap);
+        assert_eq!(env.contexts.len(), env.corpus.prompts.len());
+        assert_eq!(env.d(), 26);
+        // bias term present
+        assert!((env.contexts[0][25] - 1.0).abs() < 1e-5);
+        eprintln!("context source: {:?}", env.source);
+    }
+}

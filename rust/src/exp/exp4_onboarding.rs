@@ -1,0 +1,285 @@
+//! Experiment 4 — cold-start model onboarding (paper §4.5, Figures 4–5).
+//!
+//! After Phase-1 learning on the K=3 portfolio, Gemini-2.5-Flash is added
+//! via the hot-swap registry with no warmup priors and a 20-pull forced
+//! exploration burn-in.  Three scenario variants (good&cheap,
+//! good&expensive, bad&cheap) × four budget levels.  The bandit must
+//! discriminate: adopt good-cheap, budget-gate good-expensive, reject
+//! bad-cheap.
+
+use super::conditions::{self, fit_offline};
+use super::report::{self, Table};
+use super::{allocation, mean_cost, run_phases, stream_order, Phase, StepLog};
+use crate::router::Prior;
+use crate::sim::{EnvView, FlashScenario, Judge, World, FLASH};
+use crate::stats::{bootstrap_ci, Ci};
+use crate::util::json::Json;
+
+pub const PHASE_LEN: usize = 608;
+/// adoption = windowed Flash share sustained above this threshold
+pub const ADOPT_THRESH: f64 = 0.03;
+pub const WINDOW: usize = 60;
+
+pub struct Cell {
+    pub scenario: FlashScenario,
+    pub budget_name: &'static str,
+    /// Flash share in the second half of Phase 2 (equilibrium-ish)
+    pub flash_share: Ci,
+    /// steps from Flash addition to sustained adoption (None = never)
+    pub adoption_step: Option<f64>,
+    /// fraction of seeds that adopted
+    pub adopted_frac: f64,
+    /// Phase-2 cost/B (budgeted cells)
+    pub cost_ratio: Option<Ci>,
+}
+
+pub struct Exp4Result {
+    pub cells: Vec<Cell>,
+}
+
+pub fn scenario_name(s: FlashScenario) -> &'static str {
+    match s {
+        FlashScenario::GoodCheap => "good&cheap",
+        FlashScenario::GoodExpensive => "good&expensive",
+        FlashScenario::BadCheap => "bad&cheap",
+    }
+}
+
+fn run_seed(
+    env: &super::ExpEnv,
+    world: &World,
+    budget: Option<f64>,
+    offline: &[crate::bandit::OfflineStats],
+    seed: u64,
+) -> (Vec<StepLog>, Vec<StepLog>) {
+    let k = 3;
+    let view = EnvView::normal(world.k());
+    let mut router = conditions::paretobandit(env, offline, k, budget, seed);
+    let order = stream_order(&env.corpus.test, 9300 + seed);
+    let p1: Vec<u32> = order[..PHASE_LEN].to_vec();
+    let p2: Vec<u32> = order[PHASE_LEN..].to_vec(); // rest of the split
+    let l1 = run_phases(
+        &mut router,
+        world,
+        &env.contexts,
+        &env.corpus,
+        &[Phase {
+            prompts: p1,
+            view: &view,
+        }],
+        Judge::R1,
+    );
+    // hot-swap: register Flash with no warmup priors (cold)
+    let spec = &world.models[FLASH];
+    let id = router.add_model(spec.name, spec.price_in_per_m, spec.price_out_per_m, Prior::Cold);
+    debug_assert_eq!(id, FLASH);
+    let l2 = run_phases(
+        &mut router,
+        world,
+        &env.contexts,
+        &env.corpus,
+        &[Phase {
+            prompts: p2,
+            view: &view,
+        }],
+        Judge::R1,
+    );
+    (l1, l2)
+}
+
+/// First step in `log` where the rolling Flash share stays above the
+/// threshold for a sustained stretch.  Detection starts only after the
+/// forced-exploration burn-in has fully left the rolling window —
+/// otherwise the 20 unconditional pulls themselves read as "adoption".
+fn adoption_step(log: &[StepLog]) -> Option<usize> {
+    let share = super::rolling(log, WINDOW, |s| if s.arm == FLASH { 1.0 } else { 0.0 });
+    let start = 20 + WINDOW; // burn-in pulls + one full window
+    let hold = WINDOW; // must hold for a full window
+    let mut run = 0usize;
+    for (i, &v) in share.iter().enumerate().skip(start) {
+        if v >= ADOPT_THRESH {
+            run += 1;
+            if run >= hold {
+                return Some(i + 1 - run);
+            }
+        } else {
+            run = 0;
+        }
+    }
+    None
+}
+
+pub fn run(env: &super::ExpEnv, seeds: u64) -> Exp4Result {
+    let k = 3;
+    let offline = fit_offline(env, k, Judge::R1);
+    let mut cells = Vec::new();
+    for scenario in [
+        FlashScenario::GoodCheap,
+        FlashScenario::GoodExpensive,
+        FlashScenario::BadCheap,
+    ] {
+        let world = env.with_scenario(scenario);
+        for (bname, budget) in conditions::BUDGETS {
+            let mut shares = Vec::new();
+            let mut adopt_steps = Vec::new();
+            let mut adopted = 0usize;
+            let mut ratios = Vec::new();
+            for s in 0..seeds {
+                let (_l1, l2) = run_seed(env, &world, budget, &offline, 200 + s);
+                let half = l2.len() / 2;
+                let share = allocation(&l2[half..], FLASH);
+                shares.push(share);
+                // adopted = sustained equilibrium share, not transient
+                // staleness-driven re-exploration blips
+                if share >= ADOPT_THRESH {
+                    adopted += 1;
+                    if let Some(step) = adoption_step(&l2) {
+                        adopt_steps.push(step as f64);
+                    }
+                }
+                if let Some(b) = budget {
+                    ratios.push(mean_cost(&l2) / b);
+                }
+            }
+            cells.push(Cell {
+                scenario,
+                budget_name: bname,
+                flash_share: bootstrap_ci(&shares, 2000, 21),
+                adoption_step: if adopt_steps.is_empty() {
+                    None
+                } else {
+                    Some(crate::stats::mean(&adopt_steps))
+                },
+                adopted_frac: adopted as f64 / seeds as f64,
+                cost_ratio: if ratios.is_empty() {
+                    None
+                } else {
+                    Some(bootstrap_ci(&ratios, 2000, 22))
+                },
+            });
+        }
+    }
+    Exp4Result { cells }
+}
+
+pub fn report(res: &Exp4Result) {
+    report::banner("Experiment 4: cold-start onboarding K=3 -> K=4 (Figs. 4-5)");
+    let mut t = Table::new(&[
+        "scenario",
+        "budget",
+        "flash share (P2 2nd half)",
+        "adopted",
+        "adoption step",
+        "P2 cost/B",
+    ]);
+    for c in &res.cells {
+        t.row(vec![
+            scenario_name(c.scenario).to_string(),
+            c.budget_name.to_string(),
+            report::ci_str(&c.flash_share),
+            report::pct(c.adopted_frac),
+            c.adoption_step
+                .map(|s| format!("{s:.0}"))
+                .unwrap_or_else(|| "-".into()),
+            c.cost_ratio
+                .as_ref()
+                .map(|r| report::fx(r.est))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.print();
+    println!("(paper anchors: good&cheap adoption ~142 steps in all trials, loose ~10.2% vs tight ~4.4% share; good&expensive budget-gated; bad&cheap rejected in every seed)");
+    let j = Json::obj(vec![(
+        "cells",
+        Json::Arr(
+            res.cells
+                .iter()
+                .map(|c| {
+                    Json::obj(vec![
+                        ("scenario", Json::Str(scenario_name(c.scenario).into())),
+                        ("budget", Json::Str(c.budget_name.into())),
+                        ("flash_share", Json::Num(c.flash_share.est)),
+                        (
+                            "adoption_step",
+                            c.adoption_step.map(Json::Num).unwrap_or(Json::Null),
+                        ),
+                        ("adopted_frac", Json::Num(c.adopted_frac)),
+                        (
+                            "cost_ratio",
+                            c.cost_ratio
+                                .as_ref()
+                                .map(|r| Json::Num(r.est))
+                                .unwrap_or(Json::Null),
+                        ),
+                    ])
+                })
+                .collect(),
+        ),
+    )]);
+    report::write_json("exp4_onboarding.json", &j);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandit_discriminates_across_scenarios() {
+        let env = super::super::ExpEnv::load(FlashScenario::GoodCheap);
+        let res = run(&env, 3);
+        let get = |s: FlashScenario, b: &str| {
+            res.cells
+                .iter()
+                .find(|c| c.scenario == s && c.budget_name == b)
+                .unwrap()
+        };
+        // good&cheap: adopted at every budget
+        for b in ["tight", "moderate", "loose", "unconstrained"] {
+            let c = get(FlashScenario::GoodCheap, b);
+            assert!(
+                c.adopted_frac > 0.5,
+                "good&cheap {b} adoption {}",
+                c.adopted_frac
+            );
+        }
+        // bad&cheap: rejected (equilibrium share near the burn-in floor)
+        for b in ["tight", "moderate", "loose", "unconstrained"] {
+            let c = get(FlashScenario::BadCheap, b);
+            assert!(
+                c.flash_share.est < 0.05,
+                "bad&cheap {b} share {}",
+                c.flash_share.est
+            );
+        }
+        // good&expensive: budget-gated — tight share well below loose/uncon
+        let tight = get(FlashScenario::GoodExpensive, "tight").flash_share.est;
+        let uncon = get(FlashScenario::GoodExpensive, "unconstrained")
+            .flash_share
+            .est;
+        assert!(
+            tight < uncon * 0.6 + 0.01,
+            "expensive flash should be gated: tight {tight} uncon {uncon}"
+        );
+        // compliance through the transition.  The paper's Fig.-5 compliance
+        // claim is for Good&Cheap; the Good&Expensive burn-in is the
+        // "bounded exploration cost paid on production traffic"
+        // (Limitation 4) — 20 forced pulls of a frontier-priced model can
+        // transiently exceed a tight ceiling, so only a loose bound applies.
+        for c in &res.cells {
+            if let Some(r) = &c.cost_ratio {
+                let bound = if c.scenario == FlashScenario::GoodExpensive {
+                    1.9
+                } else {
+                    1.15
+                };
+                assert!(
+                    r.est < bound,
+                    "{:?} {} ratio {}",
+                    c.scenario,
+                    c.budget_name,
+                    r.est
+                );
+            }
+        }
+    }
+}

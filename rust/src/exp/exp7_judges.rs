@@ -1,0 +1,307 @@
+//! Experiment 7 — reward-signal robustness across judges (paper Appendix
+//! E, Tables 6–9 + Figure 12).
+//!
+//! A 2,000-prompt stratified sample is re-scored by three judge surrogates;
+//! we reproduce the population ordering (Table 6), cross-judge oracle
+//! capture (Table 7), per-response agreement (Table 8), gap-conditioned
+//! concordance (Table 9), and the cold-start regret replication (Fig. 12).
+
+use super::conditions;
+use super::report::{self, Table};
+use super::{run_phases, stream_order, Phase};
+use crate::router::baselines::RandomPolicy;
+use crate::sim::{EnvView, Judge, JUDGES};
+use crate::stats::{kendall_tau_b, kendall_w, mad_paired, mean, spearman};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+pub const SAMPLE_N: usize = 2000;
+
+pub struct Exp7Result {
+    /// Table 6: per-judge mean reward per model [judge][model]
+    pub means: [[f64; 3]; 3],
+    /// Table 7: follow row judge's oracle, evaluate with column judge
+    pub cross: [[f64; 3]; 3],
+    /// fraction of column judge's own oracle captured
+    pub capture: [[f64; 3]; 3],
+    /// Table 8: spearman / kendall / MAD / bias vs R1 for the two others
+    pub agreement: Vec<(&'static str, f64, f64, f64, f64)>,
+    /// Table 9: (gap-bin label, n, kendall W)
+    pub gap_w: Vec<(String, usize, f64)>,
+    /// Fig 12: per-judge (TR regret, Random regret)
+    pub regret: Vec<(&'static str, f64, f64)>,
+}
+
+fn judge_name(j: Judge) -> &'static str {
+    match j {
+        Judge::R1 => "R1",
+        Judge::GptMini => "GPT-4.1-mini",
+        Judge::Claude => "Claude-3.7",
+    }
+}
+
+pub fn run(env: &super::ExpEnv, seeds: u64) -> Exp7Result {
+    let k = 3;
+    // stratified sample: the val+test pool shuffled
+    let mut pool: Vec<u32> = env
+        .corpus
+        .val
+        .iter()
+        .chain(env.corpus.test.iter())
+        .copied()
+        .collect();
+    Rng::new(71).shuffle(&mut pool);
+    let sample: Vec<u32> = pool[..SAMPLE_N].to_vec();
+
+    // reward tensors [judge][prompt][model]
+    let mut r = vec![vec![[0.0f64; 3]; SAMPLE_N]; 3];
+    for (ji, &j) in JUDGES.iter().enumerate() {
+        for (pi, &pid) in sample.iter().enumerate() {
+            let p = env.corpus.prompt(pid);
+            for m in 0..k {
+                r[ji][pi][m] = env.world.judge_reward(j, p, m);
+            }
+        }
+    }
+
+    // Table 6: means
+    let mut means = [[0.0; 3]; 3];
+    for ji in 0..3 {
+        for m in 0..k {
+            means[ji][m] = mean(&r[ji].iter().map(|row| row[m]).collect::<Vec<_>>());
+        }
+    }
+
+    // Table 7: cross-judge oracle evaluation
+    let mut cross = [[0.0; 3]; 3];
+    let mut capture = [[0.0; 3]; 3];
+    for train in 0..3 {
+        for eval in 0..3 {
+            let mut s = 0.0;
+            for pi in 0..SAMPLE_N {
+                let best = (0..k)
+                    .max_by(|&a, &b| r[train][pi][a].partial_cmp(&r[train][pi][b]).unwrap())
+                    .unwrap();
+                s += r[eval][pi][best];
+            }
+            cross[train][eval] = s / SAMPLE_N as f64;
+        }
+    }
+    for train in 0..3 {
+        for eval in 0..3 {
+            capture[train][eval] = cross[train][eval] / cross[eval][eval];
+        }
+    }
+
+    // Table 8: per-response agreement vs R1 over 6000 (prompt, model) pairs
+    let flat = |ji: usize| -> Vec<f64> {
+        r[ji].iter().flat_map(|row| row.iter().copied()).collect()
+    };
+    let r1 = flat(0);
+    let mut agreement = Vec::new();
+    for ji in 1..3 {
+        let o = flat(ji);
+        agreement.push((
+            judge_name(JUDGES[ji]),
+            spearman(&r1, &o),
+            kendall_tau_b(&r1, &o),
+            mad_paired(&r1, &o),
+            mean(&o) - mean(&r1),
+        ));
+    }
+
+    // Table 9: gap-conditioned Kendall W
+    let bins = [
+        (0.00, 0.05),
+        (0.05, 0.10),
+        (0.10, 0.20),
+        (0.20, 0.30),
+        (0.30, 1.01),
+    ];
+    let mut gap_w = Vec::new();
+    for (lo, hi) in bins {
+        let mut ws = Vec::new();
+        for pi in 0..SAMPLE_N {
+            let row = &r[0][pi];
+            let mx = row.iter().cloned().fold(f64::MIN, f64::max);
+            let mn = row.iter().cloned().fold(f64::MAX, f64::min);
+            let gap = mx - mn; // R1's inter-model gap (Table 9)
+            if gap >= lo && gap < hi {
+                let raters: Vec<Vec<f64>> =
+                    (0..3).map(|ji| r[ji][pi].to_vec()).collect();
+                ws.push(kendall_w(&raters));
+            }
+        }
+        gap_w.push((format!("[{lo:.2},{hi:.2})"), ws.len(), mean(&ws)));
+    }
+
+    // Fig 12: cold-start regret per judge (val burn-in then test eval is
+    // approximated by a single pass on the sample — the shape claim is the
+    // TR-vs-Random reduction under every judge)
+    let view = EnvView::normal(env.world.k());
+    let mut regret = Vec::new();
+    for &j in &JUDGES {
+        let (mut tr_sum, mut rnd_sum) = (0.0, 0.0);
+        for s in 0..seeds {
+            let order = stream_order(&sample, 9600 + s);
+            let mut tr = conditions::tabula_rasa(env, k, None, 300 + s);
+            let phases = [Phase {
+                prompts: order.clone(),
+                view: &view,
+            }];
+            let log = run_phases(&mut tr, &env.world, &env.contexts, &env.corpus, &phases, j);
+            // regret vs judge-j oracle
+            tr_sum += log
+                .iter()
+                .map(|st| {
+                    env.world
+                        .oracle_reward(j, env.corpus.prompt(st.prompt), k)
+                        - st.reward
+                })
+                .sum::<f64>()
+                / seeds as f64;
+            let mut rnd = RandomPolicy::new(k, 300 + s);
+            let log = run_phases(&mut rnd, &env.world, &env.contexts, &env.corpus, &phases, j);
+            rnd_sum += log
+                .iter()
+                .map(|st| {
+                    env.world
+                        .oracle_reward(j, env.corpus.prompt(st.prompt), k)
+                        - st.reward
+                })
+                .sum::<f64>()
+                / seeds as f64;
+        }
+        regret.push((judge_name(j), tr_sum, rnd_sum));
+    }
+
+    Exp7Result {
+        means,
+        cross,
+        capture,
+        agreement,
+        gap_w,
+        regret,
+    }
+}
+
+pub fn report(res: &Exp7Result) {
+    report::banner("Experiment 7: judge robustness (Tables 6-9 + Fig. 12)");
+    println!("Table 6 — expected reward ordering (rows: judges; cols: gemini/mistral/llama):");
+    let mut t = Table::new(&["judge", "gemini", "mistral", "llama"]);
+    for (ji, j) in JUDGES.iter().enumerate() {
+        t.row(vec![
+            judge_name(*j).to_string(),
+            report::f3(res.means[ji][2]),
+            report::f3(res.means[ji][1]),
+            report::f3(res.means[ji][0]),
+        ]);
+    }
+    t.print();
+    println!("\nTable 7 — cross-judge oracle capture (row=train, col=eval):");
+    let mut t = Table::new(&["train\\eval", "R1", "GPT-mini", "Claude"]);
+    for train in 0..3 {
+        t.row(vec![
+            judge_name(JUDGES[train]).to_string(),
+            format!("{:.3} ({:.1}%)", res.cross[train][0], res.capture[train][0] * 100.0),
+            format!("{:.3} ({:.1}%)", res.cross[train][1], res.capture[train][1] * 100.0),
+            format!("{:.3} ({:.1}%)", res.cross[train][2], res.capture[train][2] * 100.0),
+        ]);
+    }
+    t.print();
+    println!("\nTable 8 — per-response agreement vs R1 (paper: ρ 0.633-0.658, τ 0.528-0.547, MAD ≈0.075):");
+    for (name, rho, tau, mad, bias) in &res.agreement {
+        println!("  {name:<14} ρ={rho:.3} τ_b={tau:.3} MAD={mad:.3} bias={bias:+.3}");
+    }
+    println!("\nTable 9 — gap-conditioned Kendall W (paper: 0.17 low-gap -> 0.71 high-gap):");
+    for (bin, n, w) in &res.gap_w {
+        println!("  gap {bin:<12} n={n:<5} W={w:.2}");
+    }
+    println!("\nFig 12 — cold-start regret (TR vs Random) per judge:");
+    for (name, tr, rnd) in &res.regret {
+        println!(
+            "  {name:<14} TR {tr:.1} vs Random {rnd:.1}  ({:.0}% reduction)",
+            (1.0 - tr / rnd) * 100.0
+        );
+    }
+    let j = Json::obj(vec![
+        (
+            "means",
+            Json::Arr(res.means.iter().map(|r| Json::arr_f64(r)).collect()),
+        ),
+        (
+            "capture",
+            Json::Arr(res.capture.iter().map(|r| Json::arr_f64(r)).collect()),
+        ),
+        (
+            "gap_w",
+            Json::Arr(
+                res.gap_w
+                    .iter()
+                    .map(|(b, n, w)| {
+                        Json::obj(vec![
+                            ("bin", Json::Str(b.clone())),
+                            ("n", Json::Num(*n as f64)),
+                            ("w", Json::Num(*w)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "regret",
+            Json::Arr(
+                res.regret
+                    .iter()
+                    .map(|(n, tr, rnd)| {
+                        Json::obj(vec![
+                            ("judge", Json::Str(n.to_string())),
+                            ("tabula_rasa", Json::Num(*tr)),
+                            ("random", Json::Num(*rnd)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    report::write_json("exp7_judges.json", &j);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::FlashScenario;
+
+    #[test]
+    fn judge_panel_preserves_paper_structure() {
+        let env = super::super::ExpEnv::load(FlashScenario::GoodCheap);
+        let res = run(&env, 2);
+        // Table 6 shape: identical ordering under every judge
+        for ji in 0..3 {
+            assert!(
+                res.means[ji][2] > res.means[ji][1] && res.means[ji][1] > res.means[ji][0],
+                "judge {ji} ordering {:?}",
+                res.means[ji]
+            );
+        }
+        // Table 7 shape: R1's oracle captures most of others' oracle
+        assert!(res.capture[0][1] > 0.95 && res.capture[0][2] > 0.95);
+        for t in 0..3 {
+            assert!((res.capture[t][t] - 1.0).abs() < 1e-9);
+        }
+        // Table 8 shape: moderate rank agreement
+        for (_, rho, tau, mad, _) in &res.agreement {
+            assert!(*rho > 0.45 && *rho < 0.85, "rho {rho}");
+            assert!(*tau > 0.3 && *tau < 0.8, "tau {tau}");
+            assert!(*mad > 0.03 && *mad < 0.15, "mad {mad}");
+        }
+        // Table 9 shape: W rises with the inter-model gap
+        let first = res.gap_w.first().unwrap().2;
+        let last = res.gap_w.last().unwrap().2;
+        assert!(last > first + 0.2, "W flat: {first} -> {last}");
+        // Fig 12 shape: TR beats Random under every judge
+        for (name, tr, rnd) in &res.regret {
+            assert!(tr < &(rnd * 0.8), "{name}: TR {tr} vs random {rnd}");
+        }
+    }
+}

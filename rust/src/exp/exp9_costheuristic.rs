@@ -1,0 +1,235 @@
+//! Experiment 9 — cost-heuristic validation (paper Appendix B, Figures
+//! 6–7): does the static log-normalised c̃ preserve the realised
+//! per-request cost ordering, and are the tiers separated in log-cost
+//! space?
+
+use super::report::{self, Table};
+use crate::pacer::c_tilde;
+use crate::stats::{cohens_d, mean, spearman, wilson_ci};
+use crate::util::json::Json;
+
+pub struct PairStat {
+    pub a: String,
+    pub b: String,
+    /// fraction of prompts where realised cost(a) < cost(b) (heuristic says
+    /// a is cheaper)
+    pub preserved: f64,
+    pub wilson: (f64, f64),
+    /// Cohen's d between the two log-cost distributions
+    pub d: f64,
+}
+
+pub struct Exp9Result {
+    pub k: usize,
+    pub pairs: Vec<PairStat>,
+    pub full_order_preserved: f64,
+    pub full_order_wilson: (f64, f64),
+    /// Spearman(word count, cost) per model
+    pub len_cost_rho: Vec<(String, f64)>,
+    /// Spearman(cost_i, cost_j) across models
+    pub cross_cost_rho: Vec<(String, String, f64)>,
+    pub ctilde: Vec<(String, f64)>,
+    pub cv: Vec<(String, f64)>,
+}
+
+pub fn run(env: &super::ExpEnv, k: usize) -> Exp9Result {
+    let val = &env.corpus.val;
+    let models = &env.world.models[..k];
+    // realised cost matrix on the validation split
+    let costs: Vec<Vec<f64>> = val
+        .iter()
+        .map(|&pid| {
+            (0..k)
+                .map(|m| env.world.cost(env.corpus.prompt(pid), m))
+                .collect()
+        })
+        .collect();
+    // rank models by heuristic c̃ (ties by blended rate)
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| {
+        models[a]
+            .blended_per_1k()
+            .partial_cmp(&models[b].blended_per_1k())
+            .unwrap()
+    });
+
+    // pairwise adjacent-tier preservation + Cohen's d on log cost
+    let mut pairs = Vec::new();
+    for w in order.windows(2) {
+        let (a, b) = (w[0], w[1]);
+        let wins = costs.iter().filter(|row| row[a] < row[b]).count() as u64;
+        let n = costs.len() as u64;
+        let la: Vec<f64> = costs.iter().map(|r| r[a].ln()).collect();
+        let lb: Vec<f64> = costs.iter().map(|r| r[b].ln()).collect();
+        pairs.push(PairStat {
+            a: models[a].name.to_string(),
+            b: models[b].name.to_string(),
+            preserved: wins as f64 / n as f64,
+            wilson: wilson_ci(wins, n),
+            d: cohens_d(&la, &lb),
+        });
+    }
+    // full-ordering preservation
+    let full = costs
+        .iter()
+        .filter(|row| order.windows(2).all(|w| row[w[0]] < row[w[1]]))
+        .count() as u64;
+    let n = costs.len() as u64;
+
+    // prompt-length <-> cost Spearman per model
+    let lens: Vec<f64> = val
+        .iter()
+        .map(|&pid| env.corpus.prompt(pid).n_words as f64)
+        .collect();
+    let len_cost_rho = (0..k)
+        .map(|m| {
+            let c: Vec<f64> = costs.iter().map(|r| r[m]).collect();
+            (models[m].name.to_string(), spearman(&lens, &c))
+        })
+        .collect();
+    // cross-model cost correlations
+    let mut cross = Vec::new();
+    for i in 0..k {
+        for j in (i + 1)..k {
+            let ci: Vec<f64> = costs.iter().map(|r| r[i]).collect();
+            let cj: Vec<f64> = costs.iter().map(|r| r[j]).collect();
+            cross.push((
+                models[i].name.to_string(),
+                models[j].name.to_string(),
+                spearman(&ci, &cj),
+            ));
+        }
+    }
+    let cv = (0..k)
+        .map(|m| {
+            let c: Vec<f64> = costs.iter().map(|r| r[m]).collect();
+            let mu = mean(&c);
+            let sd = crate::stats::std_dev(&c);
+            (models[m].name.to_string(), sd / mu)
+        })
+        .collect();
+    Exp9Result {
+        k,
+        pairs,
+        full_order_preserved: full as f64 / n as f64,
+        full_order_wilson: wilson_ci(full, n),
+        len_cost_rho,
+        cross_cost_rho: cross,
+        ctilde: (0..k)
+            .map(|m| (models[m].name.to_string(), c_tilde(models[m].blended_per_1k())))
+            .collect(),
+        cv,
+    }
+}
+
+pub fn report(res: &Exp9Result) {
+    report::banner(&format!(
+        "Experiment 9: cost heuristic validation, K={} (App. B, Figs. 6-7)",
+        res.k
+    ));
+    println!("c̃ snapshots:");
+    for (n, c) in &res.ctilde {
+        println!("  {n:<18} c̃ = {c:.3}");
+    }
+    let mut t = Table::new(&["pair (cheap < costly)", "preserved", "wilson 95%", "cohen d"]);
+    for p in &res.pairs {
+        t.row(vec![
+            format!("{} < {}", p.a, p.b),
+            report::pct(p.preserved),
+            format!("[{:.1}%, {:.1}%]", p.wilson.0 * 100.0, p.wilson.1 * 100.0),
+            format!("{:.2}", p.d),
+        ]);
+    }
+    t.print();
+    println!(
+        "full ordering preserved: {} (wilson [{:.1}%, {:.1}%])",
+        report::pct(res.full_order_preserved),
+        res.full_order_wilson.0 * 100.0,
+        res.full_order_wilson.1 * 100.0
+    );
+    println!("\nprompt length <-> cost Spearman (paper: 0.12-0.27):");
+    for (n, rho) in &res.len_cost_rho {
+        println!("  {n:<18} ρ = {rho:.2}");
+    }
+    println!("cross-model cost Spearman (paper: 0.56-0.68):");
+    for (a, b, rho) in &res.cross_cost_rho {
+        println!("  {a} ~ {b}: ρ = {rho:.2}");
+    }
+    println!("per-model cost CV (paper: 0.63-0.92, Flash 1.56):");
+    for (n, cv) in &res.cv {
+        println!("  {n:<18} CV = {cv:.2}");
+    }
+    let j = Json::obj(vec![
+        ("k", Json::Num(res.k as f64)),
+        ("full_order_preserved", Json::Num(res.full_order_preserved)),
+        (
+            "pairs",
+            Json::Arr(
+                res.pairs
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("a", Json::Str(p.a.clone())),
+                            ("b", Json::Str(p.b.clone())),
+                            ("preserved", Json::Num(p.preserved)),
+                            ("cohen_d", Json::Num(p.d)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    report::write_json(&format!("exp9_costheuristic_k{}.json", res.k), &j);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::FlashScenario;
+
+    #[test]
+    fn k3_ordering_nearly_always_preserved() {
+        let env = super::super::ExpEnv::load(FlashScenario::GoodCheap);
+        let res = run(&env, 3);
+        assert!(
+            res.full_order_preserved > 0.97,
+            "K=3 full order {}",
+            res.full_order_preserved
+        );
+        for p in &res.pairs {
+            assert!(p.d > 2.0, "adjacent tiers should be well separated: {}", p.d);
+        }
+        // correlations land in the paper's bands (loose)
+        for (_, rho) in &res.len_cost_rho {
+            assert!(*rho > 0.02 && *rho < 0.45, "len-cost ρ {rho}");
+        }
+        for (_, _, rho) in &res.cross_cost_rho {
+            assert!(*rho > 0.35 && *rho < 0.85, "cross ρ {rho}");
+        }
+    }
+
+    #[test]
+    fn k4_flash_pair_is_the_weak_one() {
+        let env = super::super::ExpEnv::load(FlashScenario::GoodCheap);
+        let res = run(&env, 4);
+        // with Flash inserted, full-order preservation drops well below 1
+        assert!(
+            res.full_order_preserved < 0.95,
+            "K=4 should be harder: {}",
+            res.full_order_preserved
+        );
+        // the weakest adjacent pair involves flash (paper: d = 0.68)
+        let min_pair = res
+            .pairs
+            .iter()
+            .min_by(|a, b| a.d.partial_cmp(&b.d).unwrap())
+            .unwrap();
+        assert!(
+            min_pair.a.contains("flash") || min_pair.b.contains("flash"),
+            "weakest pair {} ~ {}",
+            min_pair.a,
+            min_pair.b
+        );
+        assert!(min_pair.d < 2.0, "flash pair d {}", min_pair.d);
+    }
+}

@@ -1,0 +1,102 @@
+//! Result reporting: ASCII tables (paper-expected vs measured) + JSON
+//! dumps under `results/`.
+
+use std::path::PathBuf;
+
+use crate::util::json::Json;
+
+/// Where results land (`$PB_RESULTS` or `<repo>/results`).
+pub fn results_dir() -> PathBuf {
+    let dir = std::env::var("PB_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results"));
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+/// Write a JSON results file.
+pub fn write_json(name: &str, j: &Json) {
+    let path = results_dir().join(name);
+    if let Err(e) = std::fs::write(&path, j.to_string()) {
+        eprintln!("warn: could not write {}: {e}", path.display());
+    } else {
+        println!("  -> wrote {}", path.display());
+    }
+}
+
+/// Simple fixed-width ASCII table.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate().take(ncol) {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.header);
+        println!(
+            "{}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("--")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Format helpers.
+pub fn f3(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+pub fn f4(v: f64) -> String {
+    format!("{v:.4}")
+}
+
+pub fn fx(v: f64) -> String {
+    format!("{v:.2}x")
+}
+
+pub fn sci(v: f64) -> String {
+    format!("{v:.2e}")
+}
+
+pub fn ci_str(ci: &crate::stats::Ci) -> String {
+    format!("{:.4} [{:.4}, {:.4}]", ci.est, ci.lo, ci.hi)
+}
+
+pub fn pct(v: f64) -> String {
+    format!("{:.1}%", v * 100.0)
+}
+
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,30 @@
+//! # ParetoBandit
+//!
+//! Production-quality reproduction of *"ParetoBandit: Budget-Paced Adaptive
+//! Routing for Non-Stationary LLM Serving"* as a three-layer Rust + JAX +
+//! Pallas system (AOT via xla/PJRT):
+//!
+//! * **Layer 3 (this crate)** — the router/coordinator: LinUCB with
+//!   geometric forgetting, online primal–dual budget pacing, hot-swap model
+//!   registry, serving loop, experiment + statistics substrates.
+//! * **Layer 2** — JAX featurizer/scorer graphs (`python/compile/model.py`)
+//!   lowered once to HLO text (`artifacts/*.hlo.txt`).
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) fused into
+//!   the same HLO modules.
+//!
+//! Python never runs on the request path: `runtime` loads the artifacts via
+//! the PJRT C API and executes them from Rust.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bandit;
+pub mod exp;
+pub mod linalg;
+pub mod pacer;
+pub mod router;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod stats;
+pub mod util;

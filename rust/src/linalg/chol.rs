@@ -1,0 +1,157 @@
+//! Cholesky factorization for SPD systems.
+//!
+//! Backs (a) prior fitting (ridge solves over offline sufficient
+//! statistics), (b) the periodic exact inverse refresh that bounds
+//! Sherman–Morrison floating-point drift on long-running arms.
+
+use super::mat::Mat;
+
+/// Lower-triangular Cholesky factor L with A = L Lᵀ.
+pub struct Cholesky {
+    d: usize,
+    l: Vec<f64>, // row-major lower triangle (full square storage)
+}
+
+impl Cholesky {
+    /// Factor an SPD matrix. Returns None if not positive definite.
+    pub fn factor(a: &Mat) -> Option<Cholesky> {
+        let d = a.dim();
+        let mut l = vec![0.0; d * d];
+        for i in 0..d {
+            for j in 0..=i {
+                let mut s = a.at(i, j);
+                for k in 0..j {
+                    s -= l[i * d + k] * l[j * d + k];
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return None;
+                    }
+                    l[i * d + i] = s.sqrt();
+                } else {
+                    l[i * d + j] = s / l[j * d + j];
+                }
+            }
+        }
+        Some(Cholesky { d, l })
+    }
+
+    /// Solve A x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let d = self.d;
+        debug_assert_eq!(b.len(), d);
+        // forward: L y = b
+        let mut y = vec![0.0; d];
+        for i in 0..d {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.l[i * d + k] * y[k];
+            }
+            y[i] = s / self.l[i * d + i];
+        }
+        // backward: Lᵀ x = y
+        let mut x = vec![0.0; d];
+        for i in (0..d).rev() {
+            let mut s = y[i];
+            for k in (i + 1)..d {
+                s -= self.l[k * d + i] * x[k];
+            }
+            x[i] = s / self.l[i * d + i];
+        }
+        x
+    }
+
+    /// A⁻¹ via d solves against unit vectors.
+    pub fn inverse(&self) -> Mat {
+        let d = self.d;
+        let mut inv = Mat::zeros(d);
+        let mut e = vec![0.0; d];
+        for j in 0..d {
+            e[j] = 1.0;
+            let col = self.solve(&e);
+            e[j] = 0.0;
+            for i in 0..d {
+                *inv.at_mut(i, j) = col[i];
+            }
+        }
+        // symmetrize to kill round-off asymmetry
+        for i in 0..d {
+            for j in 0..i {
+                let m = 0.5 * (inv.at(i, j) + inv.at(j, i));
+                *inv.at_mut(i, j) = m;
+                *inv.at_mut(j, i) = m;
+            }
+        }
+        inv
+    }
+
+    /// y = L z (action of the lower factor — Gaussian sampling).
+    pub fn lower_mul(&self, z: &[f64]) -> Vec<f64> {
+        let d = self.d;
+        debug_assert_eq!(z.len(), d);
+        let mut y = vec![0.0; d];
+        for i in 0..d {
+            let mut s = 0.0;
+            for k in 0..=i {
+                s += self.l[i * d + k] * z[k];
+            }
+            y[i] = s;
+        }
+        y
+    }
+
+    /// log det(A) = 2 Σ log L_ii
+    pub fn logdet(&self) -> f64 {
+        let mut s = 0.0;
+        for i in 0..self.d {
+            s += self.l[i * self.d + i].ln();
+        }
+        2.0 * s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn solve_matches_direct() {
+        prop::for_cases(25, 11, |rng, _| {
+            let d = 2 + rng.below(12);
+            let a = Mat::from_rows(d, prop::spd(rng, d, 1.0));
+            let b = prop::vec_f64(rng, d, 3.0);
+            let ch = Cholesky::factor(&a).expect("SPD");
+            let x = ch.solve(&b);
+            let mut ax = vec![0.0; d];
+            a.matvec(&x, &mut ax);
+            for i in 0..d {
+                assert!((ax[i] - b[i]).abs() < 1e-8, "residual {}", ax[i] - b[i]);
+            }
+        });
+    }
+
+    #[test]
+    fn inverse_matches_gauss_jordan() {
+        prop::for_cases(15, 12, |rng, _| {
+            let d = 2 + rng.below(10);
+            let a = Mat::from_rows(d, prop::spd(rng, d, 1.0));
+            let inv_c = Cholesky::factor(&a).unwrap().inverse();
+            let inv_g = a.inverse_gauss_jordan().unwrap();
+            assert!(inv_c.max_abs_diff(&inv_g) < 1e-7);
+        });
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let mut m = Mat::scaled_identity(3, 1.0);
+        *m.at_mut(2, 2) = -1.0;
+        assert!(Cholesky::factor(&m).is_none());
+    }
+
+    #[test]
+    fn logdet_identity_zero() {
+        let m = Mat::scaled_identity(4, 1.0);
+        assert!(Cholesky::factor(&m).unwrap().logdet().abs() < 1e-12);
+    }
+}

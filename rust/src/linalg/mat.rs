@@ -1,0 +1,275 @@
+//! Row-major square matrix with the operations the bandit hot path needs.
+
+use super::dot;
+
+/// Dense square matrix, row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    d: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(d: usize) -> Mat {
+        Mat {
+            d,
+            data: vec![0.0; d * d],
+        }
+    }
+
+    /// lambda * I
+    pub fn scaled_identity(d: usize, lambda: f64) -> Mat {
+        let mut m = Mat::zeros(d);
+        for i in 0..d {
+            m.data[i * d + i] = lambda;
+        }
+        m
+    }
+
+    pub fn from_rows(d: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), d * d);
+        Mat { d, data }
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.d + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        &mut self.data[i * self.d + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// self *= s (every entry).
+    pub fn scale(&mut self, s: f64) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// self += s * I
+    pub fn add_diag(&mut self, s: f64) {
+        for i in 0..self.d {
+            self.data[i * self.d + i] += s;
+        }
+    }
+
+    /// self += c * x xᵀ  (rank-1 update).
+    pub fn add_outer(&mut self, c: f64, x: &[f64]) {
+        debug_assert_eq!(x.len(), self.d);
+        let d = self.d;
+        for i in 0..d {
+            let cxi = c * x[i];
+            let row = &mut self.data[i * d..(i + 1) * d];
+            for j in 0..d {
+                row[j] += cxi * x[j];
+            }
+        }
+    }
+
+    /// self += c * other
+    pub fn add_scaled(&mut self, c: f64, other: &Mat) {
+        debug_assert_eq!(self.d, other.d);
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += c * b;
+        }
+    }
+
+    /// y = A x
+    pub fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.d);
+        debug_assert_eq!(y.len(), self.d);
+        for i in 0..self.d {
+            y[i] = dot(self.row(i), x);
+        }
+    }
+
+    /// xᵀ A x  (A assumed symmetric).
+    #[inline]
+    pub fn quad_form(&self, x: &[f64]) -> f64 {
+        let d = self.d;
+        let mut total = 0.0;
+        for i in 0..d {
+            total += x[i] * dot(&self.data[i * d..(i + 1) * d], x);
+        }
+        total
+    }
+
+    /// Sherman–Morrison: given self = A⁻¹, update in place to (A + x xᵀ)⁻¹.
+    /// Returns xᵀ A⁻¹ x (useful to the caller).  O(d²).
+    pub fn sherman_morrison_update(&mut self, x: &[f64], scratch: &mut [f64]) -> f64 {
+        let d = self.d;
+        debug_assert_eq!(x.len(), d);
+        debug_assert_eq!(scratch.len(), d);
+        // u = A⁻¹ x  (A⁻¹ symmetric)
+        self.matvec(x, scratch);
+        let denom = 1.0 + dot(x, scratch);
+        let quad = denom - 1.0;
+        let c = 1.0 / denom;
+        for i in 0..d {
+            let ci = c * scratch[i];
+            let row = &mut self.data[i * d..(i + 1) * d];
+            for j in 0..d {
+                row[j] -= ci * scratch[j];
+            }
+        }
+        quad
+    }
+
+    /// Full Gauss–Jordan inversion with partial pivoting.  O(d³).
+    /// The paper's Table-10 baseline ("Cached Inv." / "Per-Route Inv.").
+    pub fn inverse_gauss_jordan(&self) -> Option<Mat> {
+        let d = self.d;
+        let mut a = self.data.clone();
+        let mut inv = Mat::scaled_identity(d, 1.0).data;
+        for col in 0..d {
+            // pivot
+            let mut piv = col;
+            let mut best = a[col * d + col].abs();
+            for r in (col + 1)..d {
+                let v = a[r * d + col].abs();
+                if v > best {
+                    best = v;
+                    piv = r;
+                }
+            }
+            if best < 1e-300 {
+                return None;
+            }
+            if piv != col {
+                for j in 0..d {
+                    a.swap(col * d + j, piv * d + j);
+                    inv.swap(col * d + j, piv * d + j);
+                }
+            }
+            let p = a[col * d + col];
+            let pinv = 1.0 / p;
+            for j in 0..d {
+                a[col * d + j] *= pinv;
+                inv[col * d + j] *= pinv;
+            }
+            for r in 0..d {
+                if r == col {
+                    continue;
+                }
+                let f = a[r * d + col];
+                if f == 0.0 {
+                    continue;
+                }
+                for j in 0..d {
+                    a[r * d + j] -= f * a[col * d + j];
+                    inv[r * d + j] -= f * inv[col * d + j];
+                }
+            }
+        }
+        Some(Mat { d, data: inv })
+    }
+
+    /// Max |self - other| entry.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identity_and_scale() {
+        let mut m = Mat::scaled_identity(3, 2.0);
+        assert_eq!(m.at(0, 0), 2.0);
+        assert_eq!(m.at(0, 1), 0.0);
+        m.scale(0.5);
+        assert_eq!(m.at(2, 2), 1.0);
+    }
+
+    #[test]
+    fn outer_product_update() {
+        let mut m = Mat::zeros(2);
+        m.add_outer(2.0, &[1.0, 3.0]);
+        assert_eq!(m.at(0, 0), 2.0);
+        assert_eq!(m.at(0, 1), 6.0);
+        assert_eq!(m.at(1, 0), 6.0);
+        assert_eq!(m.at(1, 1), 18.0);
+    }
+
+    #[test]
+    fn quad_form_matches_matvec() {
+        let mut rng = Rng::new(1);
+        let d = 5;
+        let a = Mat::from_rows(d, prop::spd(&mut rng, d, 0.5));
+        let x = prop::vec_f64(&mut rng, d, 2.0);
+        let mut y = vec![0.0; d];
+        a.matvec(&x, &mut y);
+        assert!((a.quad_form(&x) - dot(&x, &y)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn gauss_jordan_inverts() {
+        let mut rng = Rng::new(2);
+        let d = 8;
+        let a = Mat::from_rows(d, prop::spd(&mut rng, d, 1.0));
+        let inv = a.inverse_gauss_jordan().unwrap();
+        // A * A⁻¹ ≈ I
+        for i in 0..d {
+            for j in 0..d {
+                let mut s = 0.0;
+                for k in 0..d {
+                    s += a.at(i, k) * inv.at(k, j);
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((s - want).abs() < 1e-8, "({i},{j}) = {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn singular_returns_none() {
+        let m = Mat::zeros(3);
+        assert!(m.inverse_gauss_jordan().is_none());
+    }
+
+    #[test]
+    fn sherman_morrison_matches_full_inverse() {
+        prop::for_cases(30, 7, |rng, _| {
+            let d = 2 + rng.below(10);
+            let a = Mat::from_rows(d, prop::spd(rng, d, 1.0));
+            let mut inv = a.inverse_gauss_jordan().unwrap();
+            let x = prop::vec_f64(rng, d, 1.5);
+            let mut scratch = vec![0.0; d];
+            let quad = inv.sherman_morrison_update(&x, &mut scratch);
+            assert!(quad >= -1e-9, "quad form must be nonneg for SPD A");
+            // reference: invert (A + x xᵀ) directly
+            let mut a2 = a.clone();
+            a2.add_outer(1.0, &x);
+            let want = a2.inverse_gauss_jordan().unwrap();
+            assert!(
+                inv.max_abs_diff(&want) < 1e-7,
+                "SM drifted: {}",
+                inv.max_abs_diff(&want)
+            );
+        });
+    }
+}

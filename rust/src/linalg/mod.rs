@@ -1,0 +1,54 @@
+//! Small dense linear algebra for the LinUCB hot path.
+//!
+//! Everything the router needs is `O(d^2)` per request at `d = 26`: cached
+//! inverses, Sherman–Morrison rank-1 corrections, quadratic forms and
+//! mat-vec products.  A Cholesky solver backs prior fitting and the
+//! periodic inverse refresh that bounds Sherman–Morrison drift; a plain
+//! Gauss–Jordan inversion exists solely as the paper's Table-10 baseline.
+
+mod chol;
+mod mat;
+
+pub use chol::Cholesky;
+pub use mat::Mat;
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// L2 norm.
+#[inline]
+pub fn norm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_axpy_norm() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        assert_eq!(dot(&a, &b), 32.0);
+        let mut y = [1.0, 1.0, 1.0];
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, [3.0, 5.0, 7.0]);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+}

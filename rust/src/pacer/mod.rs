@@ -1,0 +1,216 @@
+//! Budget pacing: log-normalised cost, EMA cost signal, projected
+//! dual-ascent multiplier and the hard candidate ceiling (paper §3.2).
+
+/// Fixed market bounds for the log-normalised unit cost (Eq. 6), in dollars
+/// per 1k tokens.
+pub const C_FLOOR_PER_1K: f64 = 0.0001;
+pub const C_CEIL_PER_1K: f64 = 0.10;
+
+/// Log-normalised unit cost c̃ ∈ [0,1] from a blended $/1k-token rate
+/// (Eq. 6).  Rates at or below the market floor map to 0, at or above the
+/// ceiling to 1 — "any model priced at or below the floor is treated as
+/// zero-cost" (Appendix B).
+pub fn c_tilde(blended_per_1k: f64) -> f64 {
+    if blended_per_1k <= C_FLOOR_PER_1K {
+        return 0.0;
+    }
+    let v = (blended_per_1k.ln() - C_FLOOR_PER_1K.ln()) / (C_CEIL_PER_1K.ln() - C_FLOOR_PER_1K.ln());
+    v.clamp(0.0, 1.0)
+}
+
+/// BudgetPacer configuration (paper defaults in parentheses).
+#[derive(Clone, Copy, Debug)]
+pub struct PacerConfig {
+    /// operator budget ceiling B, $/request
+    pub budget: f64,
+    /// dual step size η (0.05)
+    pub eta: f64,
+    /// EMA smoothing α_ema (0.05, half-life ≈ 14 requests)
+    pub alpha_ema: f64,
+    /// projection cap λ̄ (5.0)
+    pub lambda_cap: f64,
+}
+
+impl PacerConfig {
+    pub fn new(budget: f64) -> PacerConfig {
+        PacerConfig {
+            budget,
+            eta: 0.05,
+            alpha_ema: 0.05,
+            lambda_cap: 5.0,
+        }
+    }
+}
+
+/// Online primal–dual budget pacer (Eqs. 3–4).
+///
+/// After each request's realised cost `c_t`:
+///
+///   c̄_t   = (1-α_ema) c̄_{t-1} + α_ema c_t
+///   λ_{t+1} = clip(λ_t + η (c̄_t / B − 1), 0, λ̄)
+///
+/// `c̄` initialises at B (Algorithm 1) so λ only rises once actual
+/// overspending is observed.
+#[derive(Clone, Debug)]
+pub struct BudgetPacer {
+    cfg: PacerConfig,
+    lambda: f64,
+    cbar: f64,
+}
+
+impl BudgetPacer {
+    pub fn new(cfg: PacerConfig) -> BudgetPacer {
+        BudgetPacer {
+            lambda: 0.0,
+            cbar: cfg.budget,
+            cfg,
+        }
+    }
+
+    /// Current dual variable λ_t.
+    #[inline]
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    /// EMA-smoothed cost signal c̄_t.
+    #[inline]
+    pub fn cbar(&self) -> f64 {
+        self.cbar
+    }
+
+    #[inline]
+    pub fn budget(&self) -> f64 {
+        self.cfg.budget
+    }
+
+    /// Operator changes the ceiling at runtime.
+    pub fn set_budget(&mut self, budget: f64) {
+        self.cfg.budget = budget;
+    }
+
+    /// Dual update after observing a realised request cost (Eqs. 3–4).
+    pub fn observe_cost(&mut self, cost: f64) {
+        let a = self.cfg.alpha_ema;
+        self.cbar = (1.0 - a) * self.cbar + a * cost;
+        let grad = self.cbar / self.cfg.budget - 1.0;
+        self.lambda = (self.lambda + self.cfg.eta * grad).clamp(0.0, self.cfg.lambda_cap);
+    }
+
+    /// Hard-ceiling price bound (§3.2 "two-layer enforcement"): when λ>0,
+    /// models whose blended price exceeds `c_max/(1+λ)` are excluded from
+    /// the candidate set.  Returns `f64::INFINITY` when λ=0 (no filter).
+    #[inline]
+    pub fn price_ceiling(&self, c_max: f64) -> f64 {
+        if self.lambda > 0.0 {
+            c_max / (1.0 + self.lambda)
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn c_tilde_paper_anchors() {
+        // Appendix B: Llama blended $0.10/M = $0.0001/1k -> exactly 0
+        assert_eq!(c_tilde(0.0001), 0.0);
+        // Mistral blended $1.0/M = $0.001/1k -> 1/3
+        assert!((c_tilde(0.001) - 1.0 / 3.0).abs() < 1e-9);
+        // Gemini-Pro blended $5.625/M -> 0.583
+        assert!((c_tilde(0.005625) - 0.583).abs() < 0.002);
+        // Gemini-Flash blended $1.4/M -> 0.382
+        assert!((c_tilde(0.0014) - 0.382).abs() < 0.002);
+        // bounds
+        assert_eq!(c_tilde(1e-9), 0.0);
+        assert_eq!(c_tilde(10.0), 1.0);
+    }
+
+    #[test]
+    fn c_tilde_monotone() {
+        prop::for_cases(100, 21, |rng, _| {
+            let a = 1e-6 + rng.f64() * 0.2;
+            let b = a + rng.f64() * 0.2;
+            assert!(c_tilde(a) <= c_tilde(b) + 1e-12);
+        });
+    }
+
+    #[test]
+    fn lambda_rises_on_overspend_falls_on_underspend() {
+        let mut p = BudgetPacer::new(PacerConfig::new(0.001));
+        for _ in 0..200 {
+            p.observe_cost(0.01); // 10x over budget
+        }
+        assert!(p.lambda() > 1.0, "λ={} after sustained overspend", p.lambda());
+        let high = p.lambda();
+        for _ in 0..500 {
+            p.observe_cost(0.00001);
+        }
+        assert!(p.lambda() < high * 0.2, "λ={} must decay", p.lambda());
+    }
+
+    #[test]
+    fn lambda_projection_bounds() {
+        let mut p = BudgetPacer::new(PacerConfig::new(1e-6));
+        for _ in 0..10_000 {
+            p.observe_cost(1.0);
+        }
+        assert!(p.lambda() <= 5.0 + 1e-12);
+        let mut q = BudgetPacer::new(PacerConfig::new(1.0));
+        for _ in 0..10_000 {
+            q.observe_cost(0.0);
+        }
+        assert!(q.lambda() >= 0.0);
+        assert_eq!(q.lambda(), 0.0);
+    }
+
+    #[test]
+    fn ema_smooths_single_spikes() {
+        // one expensive request must not spike λ (sawtooth prevention)
+        let mut p = BudgetPacer::new(PacerConfig::new(0.001));
+        for _ in 0..50 {
+            p.observe_cost(0.0005);
+        }
+        assert_eq!(p.lambda(), 0.0);
+        p.observe_cost(0.10); // 100x spike
+        assert!(p.lambda() < 0.3, "λ={} jumped on one spike", p.lambda());
+    }
+
+    #[test]
+    fn at_budget_is_stationary() {
+        let mut p = BudgetPacer::new(PacerConfig::new(0.002));
+        for _ in 0..1000 {
+            p.observe_cost(0.002);
+        }
+        assert!(p.lambda() < 1e-9);
+        assert!((p.cbar() - 0.002).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ceiling_inactive_at_lambda_zero_active_above() {
+        let mut p = BudgetPacer::new(PacerConfig::new(0.001));
+        assert_eq!(p.price_ceiling(10.0), f64::INFINITY);
+        for _ in 0..300 {
+            p.observe_cost(0.01);
+        }
+        let ceil = p.price_ceiling(10.0);
+        assert!(ceil < 10.0 && ceil >= 10.0 / 6.0);
+    }
+
+    #[test]
+    fn gradient_is_budget_normalized() {
+        // η(c̄/B − 1) — same relative overspend gives same λ path across
+        // portfolios with different absolute scales ("portfolio-independent")
+        let mut a = BudgetPacer::new(PacerConfig::new(0.001));
+        let mut b = BudgetPacer::new(PacerConfig::new(10.0));
+        for _ in 0..100 {
+            a.observe_cost(0.002);
+            b.observe_cost(20.0);
+        }
+        assert!((a.lambda() - b.lambda()).abs() < 1e-12);
+    }
+}

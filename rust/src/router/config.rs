@@ -1,0 +1,101 @@
+//! Router configuration (paper defaults from §3–4 and Appendix A).
+
+use crate::pacer::PacerConfig;
+
+/// Arm-selection rule (§3 design choice; ablated in
+/// `benches/ablation_design.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Exploration {
+    /// deterministic UCB score (the paper's choice)
+    Ucb,
+    /// posterior (Thompson) sampling with the same cost penalty
+    Thompson,
+}
+
+/// Full configuration for a [`super::ParetoRouter`].
+#[derive(Clone, Copy, Debug)]
+pub struct RouterConfig {
+    /// context dimensionality (26 = 25 PCA + bias, paper §2.2)
+    pub d: usize,
+    /// exploration coefficient α (knee-point selected: 0.01)
+    pub alpha: f64,
+    /// forgetting factor γ (knee-point selected: 0.997)
+    pub gamma: f64,
+    /// ridge regularisation λ₀
+    pub lambda0: f64,
+    /// static cost-penalty weight λ_c (default 0.3; 0 = quality-only)
+    pub lambda_c: f64,
+    /// staleness-inflation cap V_max (200)
+    pub v_max: f64,
+    /// random-tiebreak tolerance
+    pub tie_eps: f64,
+    /// forced-exploration pulls for a runtime-added model (§4.5: 20)
+    pub burn_in: u32,
+    /// budget pacer; `None` disables closed-loop budget control
+    pub pacer: Option<PacerConfig>,
+    /// RNG seed (tiebreaks / posterior sampling)
+    pub seed: u64,
+    /// arm-selection rule (default: UCB, the paper's choice)
+    pub exploration: Exploration,
+}
+
+impl RouterConfig {
+    /// Production ParetoBandit defaults (α=0.01, γ=0.997, λ_c=0.3,
+    /// V_max=200, 20-pull burn-in) with an active pacer at budget `b`.
+    ///
+    /// λ₀ is small relative to the whitened unit-variance features so the
+    /// cold-start confidence bonus α√(xᵀ(λ₀I)⁻¹x) ≈ α√(d/λ₀) genuinely
+    /// dominates the reward scale — this is what makes tabula-rasa
+    /// convergence possible at α=0.05 (paper Appendix C/E).
+    pub fn paretobandit(d: usize, budget: f64, seed: u64) -> RouterConfig {
+        RouterConfig {
+            d,
+            alpha: 0.01,
+            gamma: 0.997,
+            lambda0: 0.05,
+            lambda_c: 0.3,
+            v_max: 200.0,
+            tie_eps: 1e-9,
+            burn_in: 20,
+            pacer: Some(PacerConfig::new(budget)),
+            seed,
+            exploration: Exploration::Ucb,
+        }
+    }
+
+    /// Unconstrained variant: no pacer AND λ_c = 0 — quality-only routing
+    /// (§3.2: "λ_c = 0 recovers quality-only routing").  This matches the
+    /// paper's "unconstrained" evaluation condition, whose reward is
+    /// unaffected by quality-compensable drift but whose spend is not
+    /// controlled.
+    pub fn unconstrained(d: usize, seed: u64) -> RouterConfig {
+        let mut c = RouterConfig::paretobandit(d, f64::INFINITY, seed);
+        c.pacer = None;
+        c.lambda_c = 0.0;
+        c
+    }
+
+    /// Naive Bandit baseline (§4.1): γ=1 (infinite memory), static cost
+    /// penalty only, no pacer.
+    pub fn naive(d: usize, seed: u64) -> RouterConfig {
+        let mut c = RouterConfig::unconstrained(d, seed);
+        c.gamma = 1.0;
+        c
+    }
+
+    /// Forgetting Bandit ablation (§4.3): γ=0.997 but no pacer.
+    pub fn forgetting_only(d: usize, seed: u64) -> RouterConfig {
+        RouterConfig::unconstrained(d, seed)
+    }
+
+    /// Tabula-rasa hyperparameters (Appendix A knee-point for the no-prior
+    /// variant): α=0.05, γ=0.997.
+    pub fn tabula_rasa(d: usize, budget: Option<f64>, seed: u64) -> RouterConfig {
+        let mut c = match budget {
+            Some(b) => RouterConfig::paretobandit(d, b, seed),
+            None => RouterConfig::unconstrained(d, seed),
+        };
+        c.alpha = 0.05;
+        c
+    }
+}

@@ -1,0 +1,226 @@
+//! Asynchronous feedback support (paper §3.1/§3.6).
+//!
+//! The context vector is cached at route time so rewards arriving later
+//! (judge scores, RLHF labels, batch metrics) can update the bandit without
+//! re-encoding the prompt.  Two backends: in-memory (bounded FIFO) and an
+//! append-only JSON-lines file (the paper's SQLite role — see DESIGN.md §6
+//! substitutions).
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// A pending (routed, not-yet-rewarded) request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Pending {
+    pub request_id: u64,
+    pub arm: usize,
+    pub context: Vec<f64>,
+}
+
+/// Bounded in-memory context cache with FIFO eviction.
+pub struct ContextCache {
+    map: HashMap<u64, Pending>,
+    order: VecDeque<u64>,
+    capacity: usize,
+    evicted: u64,
+}
+
+impl ContextCache {
+    pub fn new(capacity: usize) -> ContextCache {
+        ContextCache {
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            capacity: capacity.max(1),
+            evicted: 0,
+        }
+    }
+
+    /// Cache a routed request.  Overwrites an existing id.
+    pub fn insert(&mut self, p: Pending) {
+        if !self.map.contains_key(&p.request_id) {
+            self.order.push_back(p.request_id);
+        }
+        self.map.insert(p.request_id, p);
+        while self.map.len() > self.capacity {
+            if let Some(old) = self.order.pop_front() {
+                if self.map.remove(&old).is_some() {
+                    self.evicted += 1;
+                }
+            }
+        }
+    }
+
+    /// Claim a pending request by id (removes it).
+    pub fn take(&mut self, request_id: u64) -> Option<Pending> {
+        self.map.remove(&request_id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+}
+
+/// Append-only JSONL persistence for routed requests and feedback events;
+/// `replay` restores the pending set across restarts.
+pub struct FileStore {
+    file: File,
+}
+
+impl FileStore {
+    pub fn open(path: &Path) -> std::io::Result<FileStore> {
+        Ok(FileStore {
+            file: OpenOptions::new().create(true).append(true).open(path)?,
+        })
+    }
+
+    pub fn log_route(&mut self, p: &Pending) -> std::io::Result<()> {
+        let j = Json::obj(vec![
+            ("ev", Json::Str("route".into())),
+            ("id", Json::Num(p.request_id as f64)),
+            ("arm", Json::Num(p.arm as f64)),
+            ("ctx", Json::arr_f64(&p.context)),
+        ]);
+        writeln!(self.file, "{}", j.to_string())
+    }
+
+    pub fn log_feedback(&mut self, request_id: u64, reward: f64, cost: f64) -> std::io::Result<()> {
+        let j = Json::obj(vec![
+            ("ev", Json::Str("feedback".into())),
+            ("id", Json::Num(request_id as f64)),
+            ("reward", Json::Num(reward)),
+            ("cost", Json::Num(cost)),
+        ]);
+        writeln!(self.file, "{}", j.to_string())
+    }
+
+    /// Rebuild the pending set: routes without matching feedback.
+    pub fn replay(path: &Path) -> std::io::Result<Vec<Pending>> {
+        let mut pending: HashMap<u64, Pending> = HashMap::new();
+        let f = File::open(path)?;
+        for line in BufReader::new(f).lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = match Json::parse(&line) {
+                Ok(j) => j,
+                Err(_) => continue, // tolerate torn tail writes
+            };
+            let id = j.get("id").and_then(Json::as_f64).unwrap_or(-1.0) as u64;
+            match j.get("ev").and_then(Json::as_str) {
+                Some("route") => {
+                    let arm = j.get("arm").and_then(Json::as_f64).unwrap_or(0.0) as usize;
+                    let ctx = j
+                        .get("ctx")
+                        .and_then(Json::as_arr)
+                        .map(|a| a.iter().filter_map(Json::as_f64).collect())
+                        .unwrap_or_default();
+                    pending.insert(
+                        id,
+                        Pending {
+                            request_id: id,
+                            arm,
+                            context: ctx,
+                        },
+                    );
+                }
+                Some("feedback") => {
+                    pending.remove(&id);
+                }
+                _ => {}
+            }
+        }
+        let mut v: Vec<Pending> = pending.into_values().collect();
+        v.sort_by_key(|p| p.request_id);
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_roundtrip_and_claim_once() {
+        let mut c = ContextCache::new(10);
+        c.insert(Pending {
+            request_id: 7,
+            arm: 2,
+            context: vec![1.0, 2.0],
+        });
+        let p = c.take(7).unwrap();
+        assert_eq!(p.arm, 2);
+        assert!(c.take(7).is_none(), "double-claim must fail");
+    }
+
+    #[test]
+    fn fifo_eviction_at_capacity() {
+        let mut c = ContextCache::new(3);
+        for i in 0..5u64 {
+            c.insert(Pending {
+                request_id: i,
+                arm: 0,
+                context: vec![],
+            });
+        }
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.evicted(), 2);
+        assert!(c.take(0).is_none() && c.take(1).is_none());
+        assert!(c.take(4).is_some());
+    }
+
+    #[test]
+    fn file_store_replay_restores_unmatched_routes() {
+        let dir = std::env::temp_dir().join(format!("pb_fs_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("feedback.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut fs = FileStore::open(&path).unwrap();
+            for i in 0..4u64 {
+                fs.log_route(&Pending {
+                    request_id: i,
+                    arm: (i % 3) as usize,
+                    context: vec![i as f64, 1.0],
+                })
+                .unwrap();
+            }
+            fs.log_feedback(1, 0.9, 1e-4).unwrap();
+            fs.log_feedback(3, 0.7, 2e-4).unwrap();
+        }
+        let pending = FileStore::replay(&path).unwrap();
+        let ids: Vec<u64> = pending.iter().map(|p| p.request_id).collect();
+        assert_eq!(ids, vec![0, 2]);
+        assert_eq!(pending[1].context, vec![2.0, 1.0]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn replay_tolerates_torn_lines() {
+        let dir = std::env::temp_dir().join(format!("pb_fs2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("torn.jsonl");
+        std::fs::write(
+            &path,
+            "{\"ev\":\"route\",\"id\":5,\"arm\":1,\"ctx\":[0.5]}\n{\"ev\":\"rou",
+        )
+        .unwrap();
+        let pending = FileStore::replay(&path).unwrap();
+        assert_eq!(pending.len(), 1);
+        assert_eq!(pending[0].request_id, 5);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,260 @@
+//! Quality-constrained routing (paper §6 Future Work vi): *minimize cost
+//! subject to a quality floor τ* — the dual objective to the main system's
+//! quality-max-under-budget.  "Inverts the pacer to track reward against a
+//! floor τ, providing an online counterpart to PROTEUS."
+//!
+//! Selection rule (mirror image of Eq. 2):
+//!
+//!   a_t = argmax [ −c̃_a + μ_t · ( θ̂ᵀx + α√(xᵀA⁻¹x·infl) ) ]
+//!
+//! with an inverted dual update: μ rises when the EMA reward falls below
+//! the floor (buy more quality), decays toward μ_min when above (save
+//! money).  A hard floor mirror of the candidate ceiling keeps arms whose
+//! *predicted* quality is hopeless out of the candidate set once μ is
+//! saturated.
+
+use crate::bandit::{ArmState, OfflineStats};
+use crate::router::{Policy, Prior, Registry};
+use crate::util::rng::Rng;
+
+/// QualityFloorRouter configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct FloorConfig {
+    pub d: usize,
+    /// the operator's quality floor τ ∈ (0,1)
+    pub tau: f64,
+    /// exploration coefficient
+    pub alpha: f64,
+    /// forgetting factor
+    pub gamma: f64,
+    pub lambda0: f64,
+    pub v_max: f64,
+    /// dual step size
+    pub eta: f64,
+    /// reward-EMA smoothing
+    pub alpha_ema: f64,
+    /// dual cap
+    pub mu_cap: f64,
+    pub seed: u64,
+}
+
+impl FloorConfig {
+    pub fn new(d: usize, tau: f64, seed: u64) -> FloorConfig {
+        FloorConfig {
+            d,
+            tau,
+            alpha: 0.05,
+            gamma: 0.997,
+            lambda0: 0.05,
+            v_max: 200.0,
+            eta: 1.0,
+            alpha_ema: 0.05,
+            mu_cap: 25.0,
+            seed,
+        }
+    }
+}
+
+/// Cost-minimizing router under a reward floor.
+pub struct QualityFloorRouter {
+    cfg: FloorConfig,
+    registry: Registry,
+    arms: Vec<Option<ArmState>>,
+    /// dual variable μ_t (price of quality)
+    mu: f64,
+    /// EMA-smoothed reward signal
+    rbar: f64,
+    t: u64,
+    rng: Rng,
+}
+
+impl QualityFloorRouter {
+    pub fn new(cfg: FloorConfig) -> QualityFloorRouter {
+        QualityFloorRouter {
+            mu: 1.0, // start neutral: quality and cost both matter
+            rbar: cfg.tau,
+            rng: Rng::new(cfg.seed),
+            cfg,
+            registry: Registry::new(),
+            arms: Vec::new(),
+            t: 0,
+        }
+    }
+
+    pub fn add_model(
+        &mut self,
+        name: &str,
+        price_in_per_m: f64,
+        price_out_per_m: f64,
+        prior: Prior,
+    ) -> usize {
+        let id = self.registry.add(name, price_in_per_m, price_out_per_m);
+        let arm = match prior {
+            Prior::Cold => ArmState::cold(self.cfg.d, self.cfg.lambda0, self.t),
+            Prior::Warm(off, n_eff) => off.warm_arm(n_eff, self.cfg.lambda0, self.t),
+            Prior::Heuristic { n_eff, r0 } => {
+                crate::bandit::heuristic_prior(self.cfg.d, n_eff, r0, self.cfg.lambda0, self.t)
+            }
+        };
+        self.arms.push(Some(arm));
+        id
+    }
+
+    /// Fit warm priors helper (parallel to the main router's usage).
+    pub fn add_models_warm(&mut self, specs: &[(&str, f64, f64)], offline: &[OfflineStats], n_eff: f64) {
+        for (i, (name, pi, po)) in specs.iter().enumerate() {
+            self.add_model(name, *pi, *po, Prior::Warm(&offline[i], n_eff));
+        }
+    }
+
+    pub fn mu(&self) -> f64 {
+        self.mu
+    }
+
+    pub fn rbar(&self) -> f64 {
+        self.rbar
+    }
+
+    /// Select: maximize −c̃ + μ·(quality UCB).
+    pub fn route(&mut self, x: &[f64]) -> usize {
+        let mut best = usize::MAX;
+        let mut best_score = f64::NEG_INFINITY;
+        let mut n_tied = 0usize;
+        for id in self.registry.active_ids() {
+            let arm = self.arms[id].as_ref().unwrap();
+            let e = self.registry.get(id).unwrap();
+            let infl = arm.staleness_inflation(self.cfg.gamma, self.cfg.v_max, self.t);
+            let q = arm.predict(x) + self.cfg.alpha * (arm.variance(x) * infl).sqrt();
+            let s = -e.c_tilde + self.mu * q;
+            if s > best_score + 1e-12 {
+                best_score = s;
+                best = id;
+                n_tied = 1;
+            } else if (s - best_score).abs() <= 1e-12 {
+                n_tied += 1;
+                if self.rng.below(n_tied) == 0 {
+                    best = id;
+                }
+            }
+        }
+        assert!(best != usize::MAX, "empty portfolio");
+        self.t += 1;
+        if let Some(arm) = self.arms[best].as_mut() {
+            arm.last_play = self.t;
+        }
+        best
+    }
+
+    /// Feedback: bandit update + inverted dual ascent on the reward EMA.
+    pub fn feedback(&mut self, arm: usize, x: &[f64], reward: f64, _cost: f64) {
+        if let Some(Some(a)) = self.arms.get_mut(arm) {
+            a.observe(x, reward, self.cfg.gamma, self.t);
+        }
+        let ae = self.cfg.alpha_ema;
+        self.rbar = (1.0 - ae) * self.rbar + ae * reward;
+        // μ rises when below the floor, falls when above (normalised by τ)
+        let grad = (self.cfg.tau - self.rbar) / self.cfg.tau;
+        self.mu = (self.mu + self.cfg.eta * grad).clamp(0.0, self.cfg.mu_cap);
+    }
+}
+
+impl Policy for QualityFloorRouter {
+    fn select(&mut self, x: &[f64]) -> usize {
+        self.route(x)
+    }
+    fn update(&mut self, arm: usize, x: &[f64], reward: f64, cost: f64) {
+        self.feedback(arm, x, reward, cost);
+    }
+    fn name(&self) -> &str {
+        "QualityFloor"
+    }
+    fn lambda(&self) -> f64 {
+        self.mu
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    const D: usize = 8;
+
+    fn ctx(rng: &mut Rng) -> Vec<f64> {
+        let mut x: Vec<f64> = (0..D).map(|_| rng.normal()).collect();
+        x[D - 1] = 1.0;
+        x
+    }
+
+    fn run(tau: f64, steps: usize) -> (f64, f64, [f64; 3]) {
+        let mut r = QualityFloorRouter::new(FloorConfig::new(D, tau, 1));
+        r.add_model("cheap", 0.10, 0.10, Prior::Cold);
+        r.add_model("mid", 0.40, 1.60, Prior::Cold);
+        r.add_model("frontier", 1.25, 10.0, Prior::Cold);
+        let means = [0.78, 0.90, 0.95];
+        let costs = [2.9e-5, 5.3e-4, 1.5e-2];
+        let mut rng = Rng::new(2);
+        let (mut rsum, mut csum) = (0.0, 0.0);
+        let mut alloc = [0.0; 3];
+        for _ in 0..steps {
+            let x = ctx(&mut rng);
+            let arm = r.route(&x);
+            let rew = (means[arm] + 0.03 * rng.normal()).clamp(0.0, 1.0);
+            r.feedback(arm, &x, rew, costs[arm]);
+            rsum += rew;
+            csum += costs[arm];
+            alloc[arm] += 1.0 / steps as f64;
+        }
+        (rsum / steps as f64, csum / steps as f64, alloc)
+    }
+
+    #[test]
+    fn meets_floor_at_minimum_cost() {
+        // τ = 0.88: must use the mid model (0.90), not the frontier
+        let (reward, cost, alloc) = run(0.88, 4000);
+        assert!(reward >= 0.865, "floor missed: {reward}");
+        assert!(
+            cost < 3.0e-3,
+            "should not buy the frontier to hit 0.88: {cost} {alloc:?}"
+        );
+        assert!(alloc[1] > 0.4, "mid model should dominate: {alloc:?}");
+    }
+
+    #[test]
+    fn low_floor_routes_cheap() {
+        // τ = 0.70: the cheapest model suffices
+        let (reward, cost, alloc) = run(0.70, 3000);
+        assert!(reward >= 0.70);
+        assert!(alloc[0] > 0.7, "cheap model should dominate: {alloc:?}");
+        assert!(cost < 2.0e-4, "{cost}");
+    }
+
+    #[test]
+    fn high_floor_buys_the_frontier() {
+        // τ = 0.94: only the frontier meets it
+        let (reward, _cost, alloc) = run(0.94, 4000);
+        assert!(alloc[2] > 0.5, "frontier must dominate: {alloc:?}");
+        assert!(reward > 0.91);
+    }
+
+    #[test]
+    fn mu_tracks_the_constraint() {
+        let mut r = QualityFloorRouter::new(FloorConfig::new(D, 0.9, 3));
+        r.add_model("cheap", 0.10, 0.10, Prior::Cold);
+        let mut rng = Rng::new(4);
+        // only a 0.7-quality model available: μ must saturate upward
+        for _ in 0..500 {
+            let x = ctx(&mut rng);
+            let arm = r.route(&x);
+            r.feedback(arm, &x, 0.7, 1e-5);
+        }
+        assert!(r.mu() > 3.0, "μ should rise while under the floor: {}", r.mu());
+        // now rewards exceed the floor: μ must decay
+        for _ in 0..2000 {
+            let x = ctx(&mut rng);
+            let arm = r.route(&x);
+            r.feedback(arm, &x, 0.97, 1e-5);
+        }
+        assert!(r.mu() < 1.0, "μ should decay once above the floor: {}", r.mu());
+    }
+}

@@ -1,0 +1,511 @@
+//! ParetoRouter — the paper's Algorithm 1.
+//!
+//! Composes LinUCB arms with geometric forgetting (§3.3), the budget pacer
+//! with two-layer enforcement (§3.2), warmup priors (§3.4) and the hot-swap
+//! registry with forced-exploration burn-in (§3.6).
+
+use crate::bandit::{heuristic_prior, ArmState, OfflineStats};
+use crate::pacer::BudgetPacer;
+use crate::router::config::RouterConfig;
+use crate::router::policy::Policy;
+use crate::router::registry::Registry;
+use crate::util::rng::Rng;
+
+/// How a new model's posterior is initialised (§3.4, §3.6).
+pub enum Prior<'a> {
+    /// Uninformative: A = λ₀I, b = 0.
+    Cold,
+    /// Offline sufficient statistics scaled to `n_eff` pseudo-observations
+    /// (Eqs. 10–12).
+    Warm(&'a OfflineStats, f64),
+    /// Heuristic isotropic prior with bias-only prediction `r0`.
+    Heuristic { n_eff: f64, r0: f64 },
+}
+
+/// Outcome of one routing decision (diagnostics included).
+#[derive(Clone, Debug)]
+pub struct RouteDecision {
+    /// chosen stable model id
+    pub arm: usize,
+    /// winning score (Eq. 2)
+    pub score: f64,
+    /// dual variable at decision time
+    pub lambda: f64,
+    /// true if this was a forced-exploration burn-in pull
+    pub forced: bool,
+    /// number of eligible arms after the hard ceiling
+    pub n_eligible: usize,
+}
+
+/// The budget-paced, non-stationarity-resilient contextual router.
+pub struct ParetoRouter {
+    cfg: RouterConfig,
+    registry: Registry,
+    arms: Vec<Option<ArmState>>, // slot-aligned with registry
+    burnin_left: Vec<u32>,
+    pacer: Option<BudgetPacer>,
+    t: u64,
+    rng: Rng,
+    // scratch for scoring without per-request allocation
+    score_buf: Vec<f64>,
+    id_buf: Vec<usize>,
+    name: String,
+}
+
+impl ParetoRouter {
+    pub fn new(cfg: RouterConfig) -> ParetoRouter {
+        ParetoRouter {
+            pacer: cfg.pacer.map(BudgetPacer::new),
+            rng: Rng::new(cfg.seed),
+            cfg,
+            registry: Registry::new(),
+            arms: Vec::new(),
+            burnin_left: Vec::new(),
+            t: 0,
+            score_buf: Vec::new(),
+            id_buf: Vec::new(),
+            name: "ParetoBandit".to_string(),
+        }
+    }
+
+    pub fn with_name(mut self, name: &str) -> ParetoRouter {
+        self.name = name.to_string();
+        self
+    }
+
+    pub fn config(&self) -> &RouterConfig {
+        &self.cfg
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn step(&self) -> u64 {
+        self.t
+    }
+
+    pub fn pacer(&self) -> Option<&BudgetPacer> {
+        self.pacer.as_ref()
+    }
+
+    /// Register a model (hot-swap `add_arm`, §3.6).  Burn-in pulls are
+    /// scheduled only for models added after routing has begun — the
+    /// initial portfolio explores through its cold-start confidence bonus.
+    pub fn add_model(
+        &mut self,
+        name: &str,
+        price_in_per_m: f64,
+        price_out_per_m: f64,
+        prior: Prior,
+    ) -> usize {
+        let id = self.registry.add(name, price_in_per_m, price_out_per_m);
+        let arm = match prior {
+            Prior::Cold => ArmState::cold(self.cfg.d, self.cfg.lambda0, self.t),
+            Prior::Warm(off, n_eff) => off.warm_arm(n_eff, self.cfg.lambda0, self.t),
+            Prior::Heuristic { n_eff, r0 } => {
+                heuristic_prior(self.cfg.d, n_eff, r0, self.cfg.lambda0, self.t)
+            }
+        };
+        debug_assert_eq!(self.arms.len(), id);
+        self.arms.push(Some(arm));
+        self.burnin_left
+            .push(if self.t > 0 { self.cfg.burn_in } else { 0 });
+        id
+    }
+
+    /// Deregister a model (hot-swap `delete_arm`).  Slot retired; stats
+    /// dropped.
+    pub fn delete_model(&mut self, id: usize) -> bool {
+        if self.registry.remove(id) {
+            self.arms[id] = None;
+            self.burnin_left[id] = 0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Oracle/operator list-price update (used by the Recalibrated
+    /// baseline and admin API).
+    pub fn reprice(&mut self, id: usize, price_in_per_m: f64, price_out_per_m: f64) -> bool {
+        self.registry.reprice(id, price_in_per_m, price_out_per_m)
+    }
+
+    /// Direct read access to an arm (diagnostics, tests).
+    pub fn arm(&self, id: usize) -> Option<&ArmState> {
+        self.arms.get(id).and_then(|a| a.as_ref())
+    }
+
+    /// One routing decision (Algorithm 1, lines 3–15).
+    pub fn route(&mut self, x: &[f64]) -> RouteDecision {
+        debug_assert_eq!(x.len(), self.cfg.d);
+        let lambda_t = self.pacer.as_ref().map_or(0.0, |p| p.lambda());
+
+        // --- forced-exploration burn-in (§3.6/§4.5) -----------------------
+        if let Some(id) = self.next_burnin() {
+            self.burnin_left[id] -= 1;
+            self.t += 1;
+            if let Some(arm) = self.arms[id].as_mut() {
+                arm.last_play = self.t;
+            }
+            return RouteDecision {
+                arm: id,
+                score: f64::NAN,
+                lambda: lambda_t,
+                forced: true,
+                n_eligible: 1,
+            };
+        }
+
+        // --- hard ceiling: candidate set A_t (lines 4–8) ------------------
+        let ceiling = self
+            .pacer
+            .as_ref()
+            .map_or(f64::INFINITY, |p| p.price_ceiling(self.registry.max_blended()));
+        self.id_buf.clear();
+        for id in 0..self.arms.len() {
+            if let Some(e) = self.registry.get(id) {
+                if e.blended_per_1k <= ceiling {
+                    self.id_buf.push(id);
+                }
+            }
+        }
+        if self.id_buf.is_empty() {
+            // circuit-breaker fallback: the cheapest model always survives
+            if let Some(id) = self.registry.cheapest_active() {
+                self.id_buf.push(id);
+            } else {
+                panic!("route() called with an empty portfolio");
+            }
+        }
+
+        // --- score eligible arms (lines 9–13, Eq. 2) ----------------------
+        let penalty_weight = self.cfg.lambda_c + lambda_t;
+        self.score_buf.clear();
+        let t_now = self.t;
+        for &id in &self.id_buf {
+            let arm = self.arms[id].as_ref().expect("active arm");
+            let e = self.registry.get(id).expect("active entry");
+            let infl = arm.staleness_inflation(self.cfg.gamma, self.cfg.v_max, t_now);
+            let quality = match self.cfg.exploration {
+                crate::router::Exploration::Ucb => {
+                    let v = arm.variance(x) * infl;
+                    arm.predict(x) + self.cfg.alpha * v.sqrt()
+                }
+                crate::router::Exploration::Thompson => {
+                    crate::bandit::thompson::thompson_score(
+                        arm, x, self.cfg.alpha, infl, &mut self.rng,
+                    )
+                }
+            };
+            self.score_buf.push(quality - penalty_weight * e.c_tilde);
+        }
+
+        // --- argmax with random tiebreak (line 14) -------------------------
+        let pick = self.rng.argmax_tiebreak(&self.score_buf, self.cfg.tie_eps);
+        let arm_id = self.id_buf[pick];
+        let score = self.score_buf[pick];
+        self.t += 1;
+        if let Some(arm) = self.arms[arm_id].as_mut() {
+            arm.last_play = self.t;
+        }
+        RouteDecision {
+            arm: arm_id,
+            score,
+            lambda: lambda_t,
+            forced: false,
+            n_eligible: self.id_buf.len(),
+        }
+    }
+
+    /// Feedback path (Algorithm 1, lines 16–26): reward update with
+    /// geometric forgetting, then the pacer dual update on realised cost.
+    pub fn feedback(&mut self, arm: usize, x: &[f64], reward: f64, cost: f64) {
+        if let Some(Some(a)) = self.arms.get_mut(arm) {
+            a.observe(x, reward, self.cfg.gamma, self.t);
+        }
+        if let Some(p) = self.pacer.as_mut() {
+            p.observe_cost(cost);
+        }
+    }
+
+    fn next_burnin(&self) -> Option<usize> {
+        (0..self.burnin_left.len())
+            .find(|&i| self.burnin_left[i] > 0 && self.registry.is_active(i))
+    }
+
+    /// Remaining forced pulls for a slot (tests/diagnostics).
+    pub fn burnin_remaining(&self, id: usize) -> u32 {
+        self.burnin_left.get(id).copied().unwrap_or(0)
+    }
+}
+
+impl Policy for ParetoRouter {
+    fn select(&mut self, x: &[f64]) -> usize {
+        self.route(x).arm
+    }
+
+    fn update(&mut self, arm: usize, x: &[f64], reward: f64, cost: f64) {
+        self.feedback(arm, x, reward, cost);
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn lambda(&self) -> f64 {
+        self.pacer.as_ref().map_or(0.0, |p| p.lambda())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pacer::PacerConfig;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    const D: usize = 8;
+
+    /// Whitened context: unit-variance dims + bias, matching what the real
+    /// featurizer produces (PCA components whitened to unit variance).
+    fn ctx(rng: &mut Rng) -> Vec<f64> {
+        let mut x: Vec<f64> = (0..D).map(|_| rng.normal()).collect();
+        x[D - 1] = 1.0;
+        x
+    }
+
+    /// three-tier portfolio matching Table 1's blended rates
+    fn portfolio(cfg: RouterConfig) -> ParetoRouter {
+        let mut r = ParetoRouter::new(cfg);
+        r.add_model("llama", 0.10, 0.10, Prior::Cold);
+        r.add_model("mistral", 0.40, 1.60, Prior::Cold);
+        r.add_model("gemini", 1.25, 10.0, Prior::Cold);
+        r
+    }
+
+    /// simulated environment: per-arm reward means + per-request costs
+    fn run(
+        router: &mut ParetoRouter,
+        means: &[f64; 3],
+        costs: &[f64; 3],
+        steps: usize,
+        seed: u64,
+    ) -> (Vec<usize>, f64) {
+        let mut rng = Rng::new(seed);
+        let mut counts = vec![0usize; 3];
+        let mut spend = 0.0;
+        for _ in 0..steps {
+            let x = ctx(&mut rng);
+            let d = router.route(&x);
+            counts[d.arm] += 1;
+            let r = (means[d.arm] + rng.normal() * 0.03).clamp(0.0, 1.0);
+            spend += costs[d.arm];
+            router.feedback(d.arm, &x, r, costs[d.arm]);
+        }
+        (counts, spend / steps as f64)
+    }
+
+    #[test]
+    fn learns_best_arm_without_budget_pressure() {
+        // tabula-rasa exploration rate (α=0.05); λ_c=0 so cost plays no role
+        let mut cfg = RouterConfig::tabula_rasa(D, None, 1);
+        cfg.lambda_c = 0.0;
+        let mut r = portfolio(cfg);
+        let (counts, _) = run(&mut r, &[0.3, 0.5, 0.9], &[1e-5, 1e-4, 1e-2], 1500, 2);
+        assert!(counts[2] > 1000, "best arm underplayed: {counts:?}");
+    }
+
+    #[test]
+    fn static_penalty_prefers_cheap_on_ties() {
+        // equal quality: λ_c must push allocation to the cheapest arm
+        let mut cfg = RouterConfig::tabula_rasa(D, None, 3);
+        cfg.lambda_c = 0.3;
+        let mut r = portfolio(cfg);
+        let (counts, _) = run(&mut r, &[0.8, 0.8, 0.8], &[1e-5, 1e-4, 1e-2], 1200, 4);
+        assert!(counts[0] > 800, "cheap arm should dominate: {counts:?}");
+    }
+
+    #[test]
+    fn pacer_enforces_budget_ceiling() {
+        // mistral is better but costs 1.77x the budget; the pacer must keep
+        // the long-run mean near (not over) the ceiling
+        let budget = 3.0e-4;
+        let cfg = RouterConfig::tabula_rasa(D, Some(budget), 5);
+        let mut r = portfolio(cfg);
+        let (_, mean_cost) = run(&mut r, &[0.75, 0.92, 0.95], &[2.9e-5, 5.3e-4, 1.5e-2], 4000, 6);
+        assert!(
+            mean_cost <= budget * 1.20,
+            "mean cost {mean_cost} vs budget {budget}"
+        );
+        assert!(mean_cost > budget * 0.3, "should actually use the budget: {mean_cost}");
+    }
+
+    #[test]
+    fn unconstrained_router_overspends_where_paced_complies() {
+        let budget = 2.3e-4;
+        let mut paced_cfg = RouterConfig::tabula_rasa(D, Some(budget), 7);
+        paced_cfg.burn_in = 20;
+        let mut free_cfg = RouterConfig::tabula_rasa(D, None, 7);
+        free_cfg.burn_in = 20;
+        let mut paced = portfolio(paced_cfg);
+        let mut free = portfolio(free_cfg);
+        let means = [0.75, 0.92, 0.95];
+        let costs = [2.9e-5, 5.3e-4, 1.5e-2];
+        let (_, cost_paced) = run(&mut paced, &means, &costs, 3000, 8);
+        let (_, cost_free) = run(&mut free, &means, &costs, 3000, 8);
+        assert!(
+            cost_free > cost_paced * 1.5,
+            "paced {cost_paced} vs free {cost_free}"
+        );
+        assert!(cost_paced <= budget * 1.25, "paced overshoot: {cost_paced}");
+    }
+
+    #[test]
+    fn hard_ceiling_filters_expensive_arms_under_pressure() {
+        let cfg = RouterConfig::paretobandit(D, 1e-4, 9);
+        let mut r = portfolio(cfg);
+        let mut rng = Rng::new(10);
+        // drive spending way over budget so λ rises
+        for _ in 0..400 {
+            let x = ctx(&mut rng);
+            let d = r.route(&x);
+            r.feedback(d.arm, &x, 0.9, 1.5e-2);
+        }
+        let x = ctx(&mut rng);
+        let d = r.route(&x);
+        assert!(d.lambda > 0.5, "λ={}", d.lambda);
+        assert!(d.n_eligible < 3, "ceiling must filter, got {}", d.n_eligible);
+    }
+
+    #[test]
+    fn candidate_set_never_empty() {
+        prop::for_cases(20, 30, |rng, _| {
+            let cfg = RouterConfig::paretobandit(D, 1e-7, rng.next_u64());
+            let mut r = portfolio(cfg);
+            for _ in 0..100 {
+                let x = ctx(rng);
+                let d = r.route(&x);
+                assert!(d.n_eligible >= 1);
+                r.feedback(d.arm, &x, rng.f64(), 1.5e-2);
+            }
+        });
+    }
+
+    #[test]
+    fn burn_in_forces_new_arm_exactly_n_pulls() {
+        let mut r = portfolio(RouterConfig::paretobandit(D, 1e-3, 11));
+        let mut rng = Rng::new(12);
+        for _ in 0..300 {
+            let x = ctx(&mut rng);
+            let d = r.route(&x);
+            r.feedback(d.arm, &x, 0.8, 1e-4);
+        }
+        let flash = r.add_model("flash", 0.30, 2.50, Prior::Cold);
+        assert_eq!(r.burnin_remaining(flash), 20);
+        let mut forced = 0;
+        for _ in 0..25 {
+            let x = ctx(&mut rng);
+            let d = r.route(&x);
+            if d.forced {
+                assert_eq!(d.arm, flash);
+                forced += 1;
+            }
+            r.feedback(d.arm, &x, 0.85, 1.4e-4);
+        }
+        assert_eq!(forced, 20);
+        assert_eq!(r.burnin_remaining(flash), 0);
+    }
+
+    #[test]
+    fn initial_portfolio_has_no_burn_in() {
+        let r = portfolio(RouterConfig::paretobandit(D, 1e-3, 13));
+        for id in 0..3 {
+            assert_eq!(r.burnin_remaining(id), 0);
+        }
+    }
+
+    #[test]
+    fn deleted_model_is_never_routed() {
+        let mut r = portfolio(RouterConfig::unconstrained(D, 14));
+        let mut rng = Rng::new(15);
+        assert!(r.delete_model(1));
+        for _ in 0..200 {
+            let x = ctx(&mut rng);
+            let d = r.route(&x);
+            assert_ne!(d.arm, 1);
+            r.feedback(d.arm, &x, 0.5, 1e-4);
+        }
+        // deleting twice fails cleanly
+        assert!(!r.delete_model(1));
+    }
+
+    #[test]
+    fn delete_during_burn_in_cancels_forced_pulls() {
+        let mut r = portfolio(RouterConfig::paretobandit(D, 1e-3, 16));
+        let mut rng = Rng::new(17);
+        for _ in 0..50 {
+            let x = ctx(&mut rng);
+            let d = r.route(&x);
+            r.feedback(d.arm, &x, 0.8, 1e-4);
+        }
+        let id = r.add_model("bad", 0.3, 2.5, Prior::Cold);
+        let x = ctx(&mut rng);
+        let d = r.route(&x);
+        assert!(d.forced && d.arm == id);
+        r.delete_model(id);
+        for _ in 0..30 {
+            let x = ctx(&mut rng);
+            let d = r.route(&x);
+            assert_ne!(d.arm, id);
+            r.feedback(d.arm, &x, 0.8, 1e-4);
+        }
+    }
+
+    #[test]
+    fn quality_degradation_triggers_rerouting() {
+        // §4.4 in miniature: mistral degrades silently at the same price
+        let cfg = RouterConfig::tabula_rasa(D, Some(6.6e-4), 18);
+        let mut r = portfolio(cfg);
+        let costs = [2.9e-5, 5.3e-4, 1.5e-2];
+        let mut rng = Rng::new(19);
+        let mut phase = |r: &mut ParetoRouter, means: [f64; 3], n: usize| {
+            let mut counts = [0usize; 3];
+            for _ in 0..n {
+                let x = ctx(&mut rng);
+                let d = r.route(&x);
+                counts[d.arm] += 1;
+                let rew = (means[d.arm] + rng.normal() * 0.02).clamp(0.0, 1.0);
+                r.feedback(d.arm, &x, rew, costs[d.arm]);
+            }
+            counts
+        };
+        let p1 = phase(&mut r, [0.79, 0.92, 0.93], 1000);
+        let p2 = phase(&mut r, [0.79, 0.60, 0.93], 1000); // mistral regresses
+        assert!(
+            (p2[1] as f64) < (p1[1] as f64) * 0.8,
+            "mistral allocation must drop: p1={p1:?} p2={p2:?}"
+        );
+    }
+
+    #[test]
+    fn warm_prior_biases_first_pulls() {
+        use crate::bandit::OfflineStats;
+        let mut off = OfflineStats::new(D);
+        let mut rng = Rng::new(20);
+        for _ in 0..500 {
+            let x = ctx(&mut rng);
+            off.push(&x, 0.95); // offline says this arm is great
+        }
+        let mut cfg = RouterConfig::unconstrained(D, 21);
+        cfg.lambda_c = 0.0;
+        cfg.alpha = 0.01;
+        let mut r = ParetoRouter::new(cfg);
+        r.add_model("a", 0.1, 0.1, Prior::Cold);
+        r.add_model("b", 0.1, 0.1, Prior::Warm(&off, 500.0));
+        let x = ctx(&mut rng);
+        let d = r.route(&x);
+        assert_eq!(d.arm, 1, "warm arm should win the first pull");
+    }
+}

@@ -1,0 +1,19 @@
+//! The policy interface the experiment harness and server drive.
+
+/// A routing policy under bandit feedback: pick an arm for a context, then
+/// learn from the realised (reward, cost) of the chosen arm only.
+pub trait Policy {
+    /// Select an arm (stable model id) for context `x`.
+    fn select(&mut self, x: &[f64]) -> usize;
+
+    /// Feed back the outcome of a previous selection.
+    fn update(&mut self, arm: usize, x: &[f64], reward: f64, cost: f64);
+
+    /// Display name (tables/plots).
+    fn name(&self) -> &str;
+
+    /// Current dual variable, if the policy has a pacer (diagnostics).
+    fn lambda(&self) -> f64 {
+        0.0
+    }
+}

@@ -1,0 +1,184 @@
+//! Hot-swap model registry (paper §3.6).
+//!
+//! Holds the operator-facing model portfolio: names, per-token pricing and
+//! the *frozen* log-normalised cost snapshot c̃ taken at registration time.
+//! The snapshot is deliberately static — the router's closed-loop budget
+//! control reacts to *realised* costs through the pacer's EMA (Eq. 3), not
+//! to listed prices; re-registration (`reprice`) models an operator or an
+//! oracle condition (the paper's "Recalibrated Bandit") pushing new list
+//! prices.
+
+use crate::pacer::c_tilde;
+
+/// One registered model endpoint.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    /// list price, $ per 1M input tokens
+    pub price_in_per_m: f64,
+    /// list price, $ per 1M output tokens
+    pub price_out_per_m: f64,
+    /// blended $/1k-token rate (1:1 in/out blend, Appendix B)
+    pub blended_per_1k: f64,
+    /// frozen log-normalised unit cost (Eq. 6)
+    pub c_tilde: f64,
+}
+
+impl ModelEntry {
+    fn new(name: &str, price_in_per_m: f64, price_out_per_m: f64) -> ModelEntry {
+        let blended_per_1k = (price_in_per_m + price_out_per_m) / 2.0 / 1000.0;
+        ModelEntry {
+            name: name.to_string(),
+            price_in_per_m,
+            price_out_per_m,
+            blended_per_1k,
+            c_tilde: c_tilde(blended_per_1k),
+        }
+    }
+}
+
+/// Slot-addressed registry; slots are never reused so arm ids stay stable
+/// across `delete_model` (matches the bandit's slot-aligned arm storage).
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    slots: Vec<Option<ModelEntry>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry { slots: Vec::new() }
+    }
+
+    /// Register a model; returns its stable arm id.
+    pub fn add(&mut self, name: &str, price_in_per_m: f64, price_out_per_m: f64) -> usize {
+        self.slots.push(Some(ModelEntry::new(name, price_in_per_m, price_out_per_m)));
+        self.slots.len() - 1
+    }
+
+    /// Remove a model. Its slot id is retired, never reused.
+    pub fn remove(&mut self, id: usize) -> bool {
+        match self.slots.get_mut(id) {
+            Some(s @ Some(_)) => {
+                *s = None;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Push new list prices (refreshes the c̃ snapshot).
+    pub fn reprice(&mut self, id: usize, price_in_per_m: f64, price_out_per_m: f64) -> bool {
+        if let Some(Some(e)) = self.slots.get_mut(id) {
+            *e = ModelEntry::new(&e.name.clone(), price_in_per_m, price_out_per_m);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn get(&self, id: usize) -> Option<&ModelEntry> {
+        self.slots.get(id).and_then(|s| s.as_ref())
+    }
+
+    pub fn is_active(&self, id: usize) -> bool {
+        matches!(self.slots.get(id), Some(Some(_)))
+    }
+
+    /// Stable ids of all active models.
+    pub fn active_ids(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|_| i))
+            .collect()
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Max blended $/1k rate among active models (c_max in §3.2).
+    pub fn max_blended(&self) -> f64 {
+        self.slots
+            .iter()
+            .flatten()
+            .map(|e| e.blended_per_1k)
+            .fold(0.0, f64::max)
+    }
+
+    /// Active id with the lowest blended rate (hard-ceiling fallback).
+    pub fn cheapest_active(&self) -> Option<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|e| (i, e.blended_per_1k)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(i, _)| i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn three() -> Registry {
+        let mut r = Registry::new();
+        // Table 1 portfolio (blended rates -> paper's c̃ values, Appendix B)
+        r.add("llama-3.1-8b", 0.10, 0.10);
+        r.add("mistral-large", 0.40, 1.60);
+        r.add("gemini-2.5-pro", 1.25, 10.0);
+        r
+    }
+
+    #[test]
+    fn c_tilde_snapshots_match_paper() {
+        let r = three();
+        assert_eq!(r.get(0).unwrap().c_tilde, 0.0); // at the floor
+        assert!((r.get(1).unwrap().c_tilde - 0.333).abs() < 0.002);
+        assert!((r.get(2).unwrap().c_tilde - 0.583).abs() < 0.002);
+    }
+
+    #[test]
+    fn ids_stable_across_remove() {
+        let mut r = three();
+        let flash = r.add("gemini-2.5-flash", 0.30, 2.50);
+        assert_eq!(flash, 3);
+        assert!(r.remove(1));
+        assert!(!r.is_active(1));
+        assert!(r.is_active(2));
+        assert_eq!(r.active_ids(), vec![0, 2, 3]);
+        // a later add gets a fresh slot, not the retired one
+        let id = r.add("new", 1.0, 1.0);
+        assert_eq!(id, 4);
+    }
+
+    #[test]
+    fn remove_twice_and_oob_are_false() {
+        let mut r = three();
+        assert!(r.remove(1));
+        assert!(!r.remove(1));
+        assert!(!r.remove(99));
+    }
+
+    #[test]
+    fn max_and_cheapest() {
+        let r = three();
+        assert_eq!(r.cheapest_active(), Some(0));
+        assert!((r.max_blended() - 0.005625).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reprice_refreshes_snapshot() {
+        let mut r = three();
+        let before = r.get(2).unwrap().c_tilde;
+        // Gemini price drop to $0.10/M (cost-drift Phase 2) -> c̃ ≈ 0
+        assert!(r.reprice(2, 0.10, 0.10));
+        let after = r.get(2).unwrap().c_tilde;
+        assert!(before > 0.5 && after == 0.0, "{before} -> {after}");
+        assert_eq!(r.get(2).unwrap().name, "gemini-2.5-pro");
+    }
+}

@@ -1,0 +1,106 @@
+//! Artifact metadata (`artifacts/meta.json` written by `python -m
+//! compile.aot`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Parsed `meta.json`: shapes + tokenizer spec the Rust side must honour.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub vocab_size: u32,
+    pub l_max: usize,
+    pub d_ctx: usize,
+    pub k_max: usize,
+    pub embed_batches: Vec<usize>,
+    pub score_batches: Vec<usize>,
+    pub dir: PathBuf,
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: &Path) -> Result<ArtifactMeta> {
+        let raw = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| format!("reading {}/meta.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&raw).map_err(|e| anyhow::anyhow!("meta.json: {e}"))?;
+        let num = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("meta.json missing '{k}'"))
+        };
+        let arr = |k: &str| -> Vec<usize> {
+            j.get(k)
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_f64).map(|v| v as usize).collect())
+                .unwrap_or_default()
+        };
+        let meta = ArtifactMeta {
+            vocab_size: num("vocab_size")? as u32,
+            l_max: num("l_max")? as usize,
+            d_ctx: num("d_ctx")? as usize,
+            k_max: num("k_max")? as usize,
+            embed_batches: arr("embed_batches"),
+            score_batches: arr("score_batches"),
+            dir: dir.to_path_buf(),
+        };
+        anyhow::ensure!(
+            j.get("hash").and_then(Json::as_str) == Some("fnv1a64"),
+            "tokenizer hash mismatch — rebuild artifacts"
+        );
+        anyhow::ensure!(meta.l_max == crate::sim::tokens::L_MAX, "L_MAX drift");
+        anyhow::ensure!(
+            meta.vocab_size == crate::sim::tokens::VOCAB_SIZE,
+            "VOCAB_SIZE drift"
+        );
+        Ok(meta)
+    }
+
+    pub fn embed_path(&self, batch: usize) -> PathBuf {
+        self.dir.join(format!("embed_b{batch}.hlo.txt"))
+    }
+
+    pub fn score_path(&self, batch: usize) -> PathBuf {
+        if batch == 1 {
+            self.dir.join("score_b1.hlo.txt")
+        } else {
+            self.dir.join("score.hlo.txt")
+        }
+    }
+}
+
+/// `$PB_ARTIFACTS` override or `<repo>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("PB_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    // crate root (works for `cargo test/run` from the workspace)
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_meta_when_artifacts_present() {
+        let dir = default_artifacts_dir();
+        if !dir.join("meta.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = ArtifactMeta::load(&dir).unwrap();
+        assert_eq!(m.d_ctx, 26);
+        assert_eq!(m.k_max, 8);
+        assert_eq!(m.l_max, 64);
+        assert!(m.embed_path(1).exists());
+        assert!(m.embed_path(32).exists());
+        assert!(m.score_path(16).exists());
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let e = ArtifactMeta::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{e:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,253 @@
+//! The production featurizer: token ids -> 26-d whitened context, executed
+//! through the AOT-lowered JAX/Pallas graph on the PJRT CPU client.
+//!
+//! Two compiled variants are kept (batch 1 for the serving hot path,
+//! batch 32 for bulk corpus embedding); bulk embedding results are cached
+//! on disk so experiments pay the PJRT cost once.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::{ArtifactMeta, Runtime};
+use crate::sim::tokens::{tokenize, L_MAX};
+
+const WEIGHTS_MAGIC: u32 = 0x5042_5754; // "PBWT"
+
+/// One tensor from `weights.bin` (written by `compile.aot.write_weights_bin`).
+pub struct WeightTensor {
+    /// tensor name (kept for diagnostics / manifest checks)
+    #[allow(dead_code)]
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Parse `artifacts/weights.bin`.
+pub fn load_weights(path: &Path) -> Result<Vec<WeightTensor>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let mut o = 0usize;
+    let rd_u32 = |o: &mut usize| -> Result<u32> {
+        anyhow::ensure!(*o + 4 <= bytes.len(), "truncated weights.bin");
+        let v = u32::from_le_bytes(bytes[*o..*o + 4].try_into().unwrap());
+        *o += 4;
+        Ok(v)
+    };
+    anyhow::ensure!(rd_u32(&mut o)? == WEIGHTS_MAGIC, "bad weights.bin magic");
+    let n = rd_u32(&mut o)? as usize;
+    let mut tensors = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = rd_u32(&mut o)? as usize;
+        let name = String::from_utf8(bytes[o..o + name_len].to_vec())?;
+        o += name_len;
+        let ndim = rd_u32(&mut o)? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(rd_u32(&mut o)? as usize);
+        }
+        let count: usize = dims.iter().product();
+        anyhow::ensure!(o + count * 4 <= bytes.len(), "truncated tensor {name}");
+        let mut data = Vec::with_capacity(count);
+        for i in 0..count {
+            data.push(f32::from_le_bytes(
+                bytes[o + i * 4..o + i * 4 + 4].try_into().unwrap(),
+            ));
+        }
+        o += count * 4;
+        tensors.push(WeightTensor { name, dims, data });
+    }
+    Ok(tensors)
+}
+
+/// Compiled featurizer.  The SimEmbed weights are uploaded once as device
+/// buffers (they are graph parameters — large constants cannot survive the
+/// HLO-text interchange) and reused for every request.
+pub struct Embedder {
+    client: xla::PjRtClient,
+    exe_b1: xla::PjRtLoadedExecutable,
+    exe_bn: xla::PjRtLoadedExecutable,
+    weights: Vec<xla::PjRtBuffer>,
+    batch_n: usize,
+    pub d_ctx: usize,
+}
+
+impl Embedder {
+    pub fn load(rt: &Runtime, meta: &ArtifactMeta) -> Result<Embedder> {
+        let batch_n = meta.embed_batches.iter().copied().max().unwrap_or(1);
+        let tensors = load_weights(&meta.dir.join("weights.bin"))?;
+        let client = rt.client().clone();
+        let weights = tensors
+            .iter()
+            .map(|t| {
+                client
+                    .buffer_from_host_buffer(&t.data, &t.dims, None)
+                    .map_err(anyhow::Error::from)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Embedder {
+            client,
+            exe_b1: rt.load_hlo_text(&meta.embed_path(1))?,
+            exe_bn: rt.load_hlo_text(&meta.embed_path(batch_n))?,
+            weights,
+            batch_n,
+            d_ctx: meta.d_ctx,
+        })
+    }
+
+    fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        ids: &[i32],
+        rows: usize,
+    ) -> Result<Vec<Vec<f64>>> {
+        let ids_buf = self
+            .client
+            .buffer_from_host_buffer(ids, &[rows, L_MAX], None)?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        args.push(&ids_buf);
+        let out = exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0].to_literal_sync()?;
+        let tup = out.to_tuple1()?;
+        let flat = tup.to_vec::<f32>()?;
+        anyhow::ensure!(flat.len() == rows * self.d_ctx, "bad output shape");
+        Ok(flat
+            .chunks(self.d_ctx)
+            .map(|c| c.iter().map(|&v| v as f64).collect())
+            .collect())
+    }
+
+    /// Embed one prompt (serving hot path, batch-1 executable).
+    pub fn embed_one(&self, text: &str) -> Result<Vec<f64>> {
+        let ids = tokenize(text);
+        Ok(self.run(&self.exe_b1, &ids, 1)?.remove(0))
+    }
+
+    /// Embed many prompts (batch executable + batch-1 remainder).
+    pub fn embed_many(&self, texts: &[&str]) -> Result<Vec<Vec<f64>>> {
+        let mut out = Vec::with_capacity(texts.len());
+        let mut i = 0;
+        let mut buf = vec![0i32; self.batch_n * L_MAX];
+        while i + self.batch_n <= texts.len() {
+            for (r, t) in texts[i..i + self.batch_n].iter().enumerate() {
+                buf[r * L_MAX..(r + 1) * L_MAX].copy_from_slice(&tokenize(t));
+            }
+            out.extend(self.run(&self.exe_bn, &buf, self.batch_n)?);
+            i += self.batch_n;
+        }
+        for t in &texts[i..] {
+            out.push(self.embed_one(t)?);
+        }
+        Ok(out)
+    }
+}
+
+/// Disk cache for a bulk-embedded context matrix (binary f32, little
+/// endian): magic, n, d, data.  Saves the one-time PJRT pass across runs.
+pub struct ContextMatrixCache;
+
+const MAGIC: u32 = 0x50_42_43_58; // "PBCX"
+
+impl ContextMatrixCache {
+    pub fn save(path: &Path, contexts: &[Vec<f64>]) -> Result<()> {
+        let n = contexts.len() as u32;
+        let d = contexts.first().map_or(0, |c| c.len()) as u32;
+        let mut bytes = Vec::with_capacity(12 + (n * d * 4) as usize);
+        bytes.extend_from_slice(&MAGIC.to_le_bytes());
+        bytes.extend_from_slice(&n.to_le_bytes());
+        bytes.extend_from_slice(&d.to_le_bytes());
+        for row in contexts {
+            for &v in row {
+                bytes.extend_from_slice(&(v as f32).to_le_bytes());
+            }
+        }
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Vec<Vec<f64>>> {
+        let bytes = std::fs::read(path)?;
+        anyhow::ensure!(bytes.len() >= 12, "truncated cache");
+        let rd = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+        anyhow::ensure!(rd(0) == MAGIC, "bad magic");
+        let n = rd(4) as usize;
+        let d = rd(8) as usize;
+        anyhow::ensure!(bytes.len() == 12 + n * d * 4, "size mismatch");
+        let mut out = Vec::with_capacity(n);
+        let mut o = 12;
+        for _ in 0..n {
+            let mut row = Vec::with_capacity(d);
+            for _ in 0..d {
+                row.push(f32::from_le_bytes(bytes[o..o + 4].try_into().unwrap()) as f64);
+                o += 4;
+            }
+            out.push(row);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::default_artifacts_dir;
+
+    fn try_embedder() -> Option<(Runtime, Embedder)> {
+        let dir = default_artifacts_dir();
+        if !dir.join("meta.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let meta = ArtifactMeta::load(&dir).unwrap();
+        let e = Embedder::load(&rt, &meta).unwrap();
+        Some((rt, e))
+    }
+
+    #[test]
+    fn embed_one_shape_and_bias() {
+        let Some((_rt, e)) = try_embedder() else { return };
+        let x = e.embed_one("w1 w2 mmlu_3 gsm8k_4").unwrap();
+        assert_eq!(x.len(), 26);
+        assert!((x[25] - 1.0).abs() < 1e-6, "bias {}", x[25]);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn batch_path_matches_single_path() {
+        let Some((_rt, e)) = try_embedder() else { return };
+        let texts: Vec<String> = (0..35).map(|i| format!("w{i} mmlu_{} w{}", i % 120, (i * 7) % 200)).collect();
+        let refs: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
+        let batch = e.embed_many(&refs).unwrap();
+        for (i, t) in refs.iter().enumerate() {
+            let single = e.embed_one(t).unwrap();
+            for j in 0..26 {
+                assert!(
+                    (batch[i][j] - single[j]).abs() < 1e-5,
+                    "row {i} dim {j}: {} vs {}",
+                    batch[i][j],
+                    single[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let Some((_rt, e)) = try_embedder() else { return };
+        let a = e.embed_one("hello world").unwrap();
+        let b = e.embed_one("hello world").unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn context_cache_roundtrip() {
+        let rows = vec![vec![1.0, 2.0, 3.0], vec![-0.5, 0.25, 4.0]];
+        let p = std::env::temp_dir().join(format!("pb_cache_{}.bin", std::process::id()));
+        ContextMatrixCache::save(&p, &rows).unwrap();
+        let back = ContextMatrixCache::load(&p).unwrap();
+        assert_eq!(back.len(), 2);
+        for (a, b) in rows.iter().flatten().zip(back.iter().flatten()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -1,0 +1,48 @@
+//! PJRT runtime: load and execute the AOT-compiled L2/L1 artifacts.
+//!
+//! `make artifacts` lowers the JAX featurizer (+ fused Pallas kernels) to
+//! HLO **text**; this module compiles those modules on the PJRT CPU client
+//! (`xla` crate) and executes them from the Rust request path — python is
+//! never involved at runtime.
+
+mod artifacts;
+mod embedder;
+mod scorer;
+
+pub use artifacts::{default_artifacts_dir, ArtifactMeta};
+pub use embedder::{ContextMatrixCache, Embedder};
+pub use scorer::{ArmBank, Scorer};
+
+use anyhow::Result;
+
+/// Shared PJRT CPU client (one per process).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the PJRT CPU client.
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Compile an HLO-text artifact into a loaded executable.
+    pub fn load_hlo_text(&self, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+}

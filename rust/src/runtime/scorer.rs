@@ -1,0 +1,247 @@
+//! AOT-lowered batched UCB scorer (the Pallas `ucb_score` kernel inside
+//! the L2 graph).  Used to cross-validate the native Rust scorer and to
+//! serve batched scoring requests.
+
+use anyhow::Result;
+
+use super::{ArtifactMeta, Runtime};
+
+/// A padded arm bank matching the AOT graph's static K_MAX.
+#[derive(Clone, Debug)]
+pub struct ArmBank {
+    pub k_max: usize,
+    pub d: usize,
+    /// [K, d, d] row-major
+    pub a_inv: Vec<f32>,
+    /// [K, d]
+    pub theta: Vec<f32>,
+    /// [K]
+    pub infl: Vec<f32>,
+    /// [K]
+    pub cpen: Vec<f32>,
+    /// [K] 1.0 eligible / 0.0 masked
+    pub mask: Vec<f32>,
+}
+
+impl ArmBank {
+    /// Empty bank: identity precision, zero estimates, everything masked.
+    pub fn empty(k_max: usize, d: usize) -> ArmBank {
+        let mut a_inv = vec![0.0f32; k_max * d * d];
+        for k in 0..k_max {
+            for i in 0..d {
+                a_inv[k * d * d + i * d + i] = 1.0;
+            }
+        }
+        ArmBank {
+            k_max,
+            d,
+            a_inv,
+            theta: vec![0.0; k_max * d],
+            infl: vec![1.0; k_max],
+            cpen: vec![0.0; k_max],
+            mask: vec![0.0; k_max],
+        }
+    }
+
+    /// Fill slot `k` from an arm's (A⁻¹, θ̂) plus its penalty/inflation.
+    pub fn set_slot(
+        &mut self,
+        k: usize,
+        a_inv: &crate::linalg::Mat,
+        theta: &[f64],
+        infl: f64,
+        cpen: f64,
+    ) {
+        let d = self.d;
+        assert_eq!(a_inv.dim(), d);
+        for i in 0..d {
+            for j in 0..d {
+                self.a_inv[k * d * d + i * d + j] = a_inv.at(i, j) as f32;
+            }
+        }
+        for i in 0..d {
+            self.theta[k * d + i] = theta[i] as f32;
+        }
+        self.infl[k] = infl as f32;
+        self.cpen[k] = cpen as f32;
+        self.mask[k] = 1.0;
+    }
+}
+
+/// Compiled scorer executable.
+pub struct Scorer {
+    exe_b1: xla::PjRtLoadedExecutable,
+    exe_bn: xla::PjRtLoadedExecutable,
+    batch_n: usize,
+    pub k_max: usize,
+    pub d: usize,
+}
+
+impl Scorer {
+    pub fn load(rt: &Runtime, meta: &ArtifactMeta) -> Result<Scorer> {
+        let batch_n = meta.score_batches.iter().copied().max().unwrap_or(1);
+        Ok(Scorer {
+            exe_b1: rt.load_hlo_text(&meta.score_path(1))?,
+            exe_bn: rt.load_hlo_text(&meta.score_path(batch_n))?,
+            batch_n,
+            k_max: meta.k_max,
+            d: meta.d_ctx,
+        })
+    }
+
+    fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        bank: &ArmBank,
+        alpha: f32,
+        x: &[f32],
+        rows: usize,
+    ) -> Result<Vec<f32>> {
+        let k = self.k_max as i64;
+        let d = self.d as i64;
+        let args = [
+            xla::Literal::vec1(&bank.a_inv).reshape(&[k, d, d])?,
+            xla::Literal::vec1(&bank.theta).reshape(&[k, d])?,
+            xla::Literal::vec1(&bank.infl),
+            xla::Literal::vec1(&bank.cpen),
+            xla::Literal::vec1(&bank.mask),
+            xla::Literal::vec1(&[alpha]),
+            xla::Literal::vec1(x).reshape(&[rows as i64, d])?,
+        ];
+        let out = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let flat = out.to_tuple1()?.to_vec::<f32>()?;
+        anyhow::ensure!(flat.len() == rows * self.k_max, "bad score shape");
+        Ok(flat)
+    }
+
+    /// Score one context against the bank -> [K_max] scores.
+    pub fn score_one(&self, bank: &ArmBank, alpha: f64, x: &[f64]) -> Result<Vec<f64>> {
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        Ok(self
+            .run(&self.exe_b1, bank, alpha as f32, &xf, 1)?
+            .into_iter()
+            .map(|v| v as f64)
+            .collect())
+    }
+
+    /// Score a batch (pads the tail row-wise) -> row-major [n, K_max].
+    pub fn score_many(&self, bank: &ArmBank, alpha: f64, xs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        let mut out = Vec::with_capacity(xs.len());
+        let mut i = 0;
+        while i < xs.len() {
+            let n = (xs.len() - i).min(self.batch_n);
+            let mut buf = vec![0.0f32; self.batch_n * self.d];
+            for (r, x) in xs[i..i + n].iter().enumerate() {
+                for (j, &v) in x.iter().enumerate() {
+                    buf[r * self.d + j] = v as f32;
+                }
+            }
+            let flat = self.run(&self.exe_bn, bank, alpha as f32, &buf, self.batch_n)?;
+            for r in 0..n {
+                out.push(
+                    flat[r * self.k_max..(r + 1) * self.k_max]
+                        .iter()
+                        .map(|&v| v as f64)
+                        .collect(),
+                );
+            }
+            i += n;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::runtime::default_artifacts_dir;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn try_scorer() -> Option<(Runtime, Scorer)> {
+        let dir = default_artifacts_dir();
+        if !dir.join("meta.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let meta = ArtifactMeta::load(&dir).unwrap();
+        let s = Scorer::load(&rt, &meta).unwrap();
+        Some((rt, s))
+    }
+
+    /// native Eq.-2 score for cross-validation
+    fn native_score(
+        a_inv: &Mat,
+        theta: &[f64],
+        infl: f64,
+        cpen: f64,
+        alpha: f64,
+        x: &[f64],
+    ) -> f64 {
+        let exploit: f64 = theta.iter().zip(x).map(|(t, v)| t * v).sum();
+        exploit + alpha * (a_inv.quad_form(x).max(0.0) * infl).sqrt() - cpen
+    }
+
+    #[test]
+    fn pallas_scorer_matches_native_rust() {
+        let Some((_rt, s)) = try_scorer() else { return };
+        let d = s.d;
+        let mut rng = Rng::new(99);
+        let mut bank = ArmBank::empty(s.k_max, d);
+        let mut native = Vec::new();
+        let x: Vec<f64> = (0..d).map(|_| rng.normal() * 0.5).collect();
+        let alpha = 0.05;
+        for k in 0..3 {
+            let a = Mat::from_rows(d, prop::spd(&mut rng, d, 0.5));
+            let a_inv = a.inverse_gauss_jordan().unwrap();
+            let theta: Vec<f64> = (0..d).map(|_| rng.normal() * 0.2).collect();
+            let infl = 1.0 + rng.f64() * 5.0;
+            let cpen = rng.f64();
+            bank.set_slot(k, &a_inv, &theta, infl, cpen);
+            native.push(native_score(&a_inv, &theta, infl, cpen, alpha, &x));
+        }
+        let scores = s.score_one(&bank, alpha, &x).unwrap();
+        for k in 0..3 {
+            assert!(
+                (scores[k] - native[k]).abs() < 1e-3,
+                "arm {k}: pallas {} vs native {}",
+                scores[k],
+                native[k]
+            );
+        }
+        // masked slots pushed far negative
+        for k in 3..s.k_max {
+            assert!(scores[k] < -1e8, "slot {k} = {}", scores[k]);
+        }
+    }
+
+    #[test]
+    fn batch_scoring_matches_single() {
+        let Some((_rt, s)) = try_scorer() else { return };
+        let d = s.d;
+        let mut rng = Rng::new(100);
+        let mut bank = ArmBank::empty(s.k_max, d);
+        for k in 0..4 {
+            let a = Mat::from_rows(d, prop::spd(&mut rng, d, 1.0));
+            let a_inv = a.inverse_gauss_jordan().unwrap();
+            let theta: Vec<f64> = (0..d).map(|_| rng.normal() * 0.2).collect();
+            bank.set_slot(k, &a_inv, &theta, 1.0, 0.1 * k as f64);
+        }
+        let xs: Vec<Vec<f64>> = (0..19)
+            .map(|_| (0..d).map(|_| rng.normal()).collect())
+            .collect();
+        let batch = s.score_many(&bank, 0.01, &xs).unwrap();
+        assert_eq!(batch.len(), 19);
+        for (i, x) in xs.iter().enumerate() {
+            let single = s.score_one(&bank, 0.01, x).unwrap();
+            for k in 0..4 {
+                assert!(
+                    (batch[i][k] - single[k]).abs() < 1e-4,
+                    "row {i} arm {k}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! Wire protocol: newline-delimited JSON requests/responses.
+//!
+//! Verbs:
+//!   route        {"op":"route","id":u64,"prompt":str}
+//!   feedback     {"op":"feedback","id":u64,"reward":f,"cost":f}
+//!   add_model    {"op":"add_model","name":str,"price_in":f,"price_out":f[,"n_eff":f,"r0":f]}
+//!   delete_model {"op":"delete_model","arm":u}
+//!   reprice      {"op":"reprice","arm":u,"price_in":f,"price_out":f}
+//!   set_budget   {"op":"set_budget","budget":f}
+//!   metrics      {"op":"metrics"}
+//!   shutdown     {"op":"shutdown"}
+//!
+//! The handler is a pure function over (state, request) so the protocol is
+//! unit-testable without sockets; `serve.rs` adds the TCP plumbing.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::router::{ContextCache, ParetoRouter, Pending, Prior};
+use crate::server::metrics::Metrics;
+use crate::util::json::Json;
+
+/// Text -> context featurizer abstraction (production: PJRT embedder;
+/// tests: any closure).
+pub trait Featurize {
+    fn featurize(&self, text: &str) -> anyhow::Result<Vec<f64>>;
+}
+
+impl<F: Fn(&str) -> anyhow::Result<Vec<f64>>> Featurize for F {
+    fn featurize(&self, text: &str) -> anyhow::Result<Vec<f64>> {
+        self(text)
+    }
+}
+
+/// Server-side state owned by the worker thread.
+pub struct ServerState {
+    pub router: ParetoRouter,
+    pub cache: ContextCache,
+    pub featurizer: Box<dyn Featurize>,
+    pub metrics: Arc<Metrics>,
+}
+
+fn err(msg: &str) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.to_string())),
+    ])
+}
+
+fn get_f(req: &Json, key: &str) -> Option<f64> {
+    req.get(key).and_then(Json::as_f64)
+}
+
+impl ServerState {
+    /// Handle one request; returns the response (and whether to shut down).
+    pub fn handle(&mut self, req: &Json) -> (Json, bool) {
+        let op = req.get("op").and_then(Json::as_str).unwrap_or("");
+        match op {
+            "route" => (self.op_route(req), false),
+            "feedback" => (self.op_feedback(req), false),
+            "add_model" => (self.op_add_model(req), false),
+            "delete_model" => (self.op_delete_model(req), false),
+            "reprice" => (self.op_reprice(req), false),
+            "set_budget" => (self.op_set_budget(req), false),
+            "metrics" => (self.metrics.snapshot(), false),
+            "shutdown" => (Json::obj(vec![("ok", Json::Bool(true))]), true),
+            _ => (err("unknown op"), false),
+        }
+    }
+
+    fn op_route(&mut self, req: &Json) -> Json {
+        let t0 = Instant::now();
+        let Some(id) = get_f(req, "id").map(|v| v as u64) else {
+            return err("route: missing id");
+        };
+        let Some(prompt) = req.get("prompt").and_then(Json::as_str) else {
+            return err("route: missing prompt");
+        };
+        let x = match self.featurizer.featurize(prompt) {
+            Ok(x) => x,
+            Err(e) => {
+                self.metrics
+                    .errors
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                return err(&format!("featurize: {e}"));
+            }
+        };
+        let t1 = Instant::now();
+        let d = self.router.route(&x);
+        let route_us = t1.elapsed().as_nanos() as f64 / 1e3;
+        let name = self
+            .router
+            .registry()
+            .get(d.arm)
+            .map(|e| e.name.clone())
+            .unwrap_or_default();
+        self.cache.insert(Pending {
+            request_id: id,
+            arm: d.arm,
+            context: x,
+        });
+        let e2e_us = t0.elapsed().as_nanos() as f64 / 1e3;
+        self.metrics.record_route(d.arm, route_us, e2e_us);
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("id", Json::Num(id as f64)),
+            ("arm", Json::Num(d.arm as f64)),
+            ("model", Json::Str(name)),
+            ("lambda", Json::Num(d.lambda)),
+            ("forced", Json::Bool(d.forced)),
+            ("route_us", Json::Num(route_us)),
+            ("e2e_us", Json::Num(e2e_us)),
+        ])
+    }
+
+    fn op_feedback(&mut self, req: &Json) -> Json {
+        let (Some(id), Some(reward), Some(cost)) = (
+            get_f(req, "id").map(|v| v as u64),
+            get_f(req, "reward"),
+            get_f(req, "cost"),
+        ) else {
+            return err("feedback: need id, reward, cost");
+        };
+        let Some(p) = self.cache.take(id) else {
+            return err("feedback: unknown or already-claimed id");
+        };
+        self.router.feedback(p.arm, &p.context, reward, cost);
+        self.metrics.record_feedback(reward, cost);
+        Json::obj(vec![("ok", Json::Bool(true)), ("arm", Json::Num(p.arm as f64))])
+    }
+
+    fn op_add_model(&mut self, req: &Json) -> Json {
+        let (Some(name), Some(pi), Some(po)) = (
+            req.get("name").and_then(Json::as_str),
+            get_f(req, "price_in"),
+            get_f(req, "price_out"),
+        ) else {
+            return err("add_model: need name, price_in, price_out");
+        };
+        let prior = match (get_f(req, "n_eff"), get_f(req, "r0")) {
+            (Some(n_eff), Some(r0)) => Prior::Heuristic { n_eff, r0 },
+            _ => Prior::Cold,
+        };
+        let arm = self.router.add_model(name, pi, po, prior);
+        Json::obj(vec![("ok", Json::Bool(true)), ("arm", Json::Num(arm as f64))])
+    }
+
+    fn op_delete_model(&mut self, req: &Json) -> Json {
+        match get_f(req, "arm").map(|v| v as usize) {
+            Some(arm) if self.router.delete_model(arm) => {
+                Json::obj(vec![("ok", Json::Bool(true))])
+            }
+            Some(_) => err("delete_model: no such arm"),
+            None => err("delete_model: need arm"),
+        }
+    }
+
+    fn op_reprice(&mut self, req: &Json) -> Json {
+        let (Some(arm), Some(pi), Some(po)) = (
+            get_f(req, "arm").map(|v| v as usize),
+            get_f(req, "price_in"),
+            get_f(req, "price_out"),
+        ) else {
+            return err("reprice: need arm, price_in, price_out");
+        };
+        if self.router.reprice(arm, pi, po) {
+            Json::obj(vec![("ok", Json::Bool(true))])
+        } else {
+            err("reprice: no such arm")
+        }
+    }
+
+    fn op_set_budget(&mut self, _req: &Json) -> Json {
+        // budget lives inside the pacer config; rebuilding the pacer mid-
+        // stream would discard λ state, so this is intentionally a no-op
+        // guard until the pacer grows a runtime setter on the router.
+        err("set_budget: not supported on a live pacer (restart with --budget)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::RouterConfig;
+
+    fn state() -> ServerState {
+        let mut router = ParetoRouter::new(RouterConfig::tabula_rasa(4, Some(1e-3), 1));
+        router.add_model("llama", 0.1, 0.1, Prior::Cold);
+        router.add_model("mistral", 0.4, 1.6, Prior::Cold);
+        ServerState {
+            router,
+            cache: ContextCache::new(1000),
+            featurizer: Box::new(|t: &str| {
+                Ok(vec![t.len() as f64 % 3.0, 0.0, 0.5, 1.0])
+            }),
+            metrics: Arc::new(Metrics::new()),
+        }
+    }
+
+    fn parse(s: &str) -> Json {
+        Json::parse(s).unwrap()
+    }
+
+    #[test]
+    fn route_feedback_roundtrip() {
+        let mut st = state();
+        let (resp, down) = st.handle(&parse(r#"{"op":"route","id":7,"prompt":"hello world"}"#));
+        assert!(!down);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        let arm = resp.get("arm").unwrap().as_f64().unwrap() as usize;
+        assert!(arm < 2);
+        let (resp, _) =
+            st.handle(&parse(r#"{"op":"feedback","id":7,"reward":0.9,"cost":0.0001}"#));
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        // double feedback on the same id is rejected
+        let (resp, _) =
+            st.handle(&parse(r#"{"op":"feedback","id":7,"reward":0.9,"cost":0.0001}"#));
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn hot_swap_via_api() {
+        let mut st = state();
+        let (resp, _) = st.handle(&parse(
+            r#"{"op":"add_model","name":"flash","price_in":0.3,"price_out":2.5,"n_eff":20,"r0":0.5}"#,
+        ));
+        let arm = resp.get("arm").unwrap().as_f64().unwrap() as usize;
+        assert_eq!(arm, 2);
+        let (resp, _) = st.handle(&parse(r#"{"op":"delete_model","arm":2}"#));
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        let (resp, _) = st.handle(&parse(r#"{"op":"delete_model","arm":2}"#));
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn metrics_reflect_traffic() {
+        let mut st = state();
+        for i in 0..5u64 {
+            let req = format!(r#"{{"op":"route","id":{i},"prompt":"q {i}"}}"#);
+            st.handle(&parse(&req));
+            let fb = format!(r#"{{"op":"feedback","id":{i},"reward":0.8,"cost":0.0002}}"#);
+            st.handle(&parse(&fb));
+        }
+        let (m, _) = st.handle(&parse(r#"{"op":"metrics"}"#));
+        assert_eq!(m.get("requests").unwrap().as_f64(), Some(5.0));
+        assert_eq!(m.get("feedbacks").unwrap().as_f64(), Some(5.0));
+        assert!((m.get("mean_cost").unwrap().as_f64().unwrap() - 2e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unknown_op_and_shutdown() {
+        let mut st = state();
+        let (resp, down) = st.handle(&parse(r#"{"op":"nope"}"#));
+        assert!(!down);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        let (_, down) = st.handle(&parse(r#"{"op":"shutdown"}"#));
+        assert!(down);
+    }
+
+    #[test]
+    fn malformed_requests_fail_cleanly() {
+        let mut st = state();
+        for bad in [
+            r#"{"op":"route"}"#,
+            r#"{"op":"feedback","id":1}"#,
+            r#"{"op":"add_model","name":"x"}"#,
+            r#"{"op":"reprice","arm":0}"#,
+        ] {
+            let (resp, down) = st.handle(&parse(bad));
+            assert!(!down);
+            assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{bad}");
+        }
+    }
+}

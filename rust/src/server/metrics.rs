@@ -1,0 +1,190 @@
+//! Serving metrics: counters, spend accounting and latency histograms.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// Fixed-boundary log-scale latency histogram (microseconds).
+pub struct LatencyHisto {
+    /// bucket upper bounds in us
+    bounds: Vec<f64>,
+    counts: Vec<AtomicU64>,
+    sum_us: Mutex<f64>,
+    n: AtomicU64,
+}
+
+impl LatencyHisto {
+    pub fn new() -> LatencyHisto {
+        // 1us .. ~100s, ~4 buckets/decade
+        let mut bounds = Vec::new();
+        let mut b = 1.0;
+        while b < 1.2e8 {
+            bounds.push(b);
+            b *= 1.7782794; // 10^(1/4)
+        }
+        let counts = (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect();
+        LatencyHisto {
+            bounds,
+            counts,
+            sum_us: Mutex::new(0.0),
+            n: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe_us(&self, us: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| us <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.n.fetch_add(1, Ordering::Relaxed);
+        *self.sum_us.lock().unwrap() += us;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        *self.sum_us.lock().unwrap() / n as f64
+    }
+
+    /// Approximate percentile from the histogram (upper bound of bucket).
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * n as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c.load(Ordering::Relaxed);
+            if acc >= target {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    f64::INFINITY
+                };
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+impl Default for LatencyHisto {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Global serving metrics.
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub feedbacks: AtomicU64,
+    pub errors: AtomicU64,
+    pub route_latency: LatencyHisto,
+    pub e2e_latency: LatencyHisto,
+    pub spend: Mutex<f64>,
+    pub reward_sum: Mutex<f64>,
+    pub per_arm: Mutex<Vec<u64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_route(&self, arm: usize, route_us: f64, e2e_us: f64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.route_latency.observe_us(route_us);
+        self.e2e_latency.observe_us(e2e_us);
+        let mut pa = self.per_arm.lock().unwrap();
+        if pa.len() <= arm {
+            pa.resize(arm + 1, 0);
+        }
+        pa[arm] += 1;
+    }
+
+    pub fn record_feedback(&self, reward: f64, cost: f64) {
+        self.feedbacks.fetch_add(1, Ordering::Relaxed);
+        *self.spend.lock().unwrap() += cost;
+        *self.reward_sum.lock().unwrap() += reward;
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let nf = self.feedbacks.load(Ordering::Relaxed);
+        let spend = *self.spend.lock().unwrap();
+        let rsum = *self.reward_sum.lock().unwrap();
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
+            ("feedbacks", Json::Num(nf as f64)),
+            ("errors", Json::Num(self.errors.load(Ordering::Relaxed) as f64)),
+            ("route_p50_us", Json::Num(self.route_latency.percentile_us(50.0))),
+            ("route_p95_us", Json::Num(self.route_latency.percentile_us(95.0))),
+            ("e2e_p50_us", Json::Num(self.e2e_latency.percentile_us(50.0))),
+            ("e2e_p95_us", Json::Num(self.e2e_latency.percentile_us(95.0))),
+            ("total_spend", Json::Num(spend)),
+            (
+                "mean_cost",
+                Json::Num(if nf > 0 { spend / nf as f64 } else { 0.0 }),
+            ),
+            (
+                "mean_reward",
+                Json::Num(if nf > 0 { rsum / nf as f64 } else { 0.0 }),
+            ),
+            (
+                "per_arm",
+                Json::Arr(
+                    self.per_arm
+                        .lock()
+                        .unwrap()
+                        .iter()
+                        .map(|&c| Json::Num(c as f64))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histo_percentiles_bracket() {
+        let h = LatencyHisto::new();
+        for i in 1..=1000 {
+            h.observe_us(i as f64);
+        }
+        let p50 = h.percentile_us(50.0);
+        let p95 = h.percentile_us(95.0);
+        assert!(p50 >= 400.0 && p50 <= 700.0, "p50={p50}");
+        assert!(p95 >= 900.0 && p95 <= 1300.0, "p95={p95}");
+        assert!((h.mean_us() - 500.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn metrics_snapshot_consistent() {
+        let m = Metrics::new();
+        m.record_route(1, 20.0, 900.0);
+        m.record_route(1, 25.0, 950.0);
+        m.record_route(0, 22.0, 800.0);
+        m.record_feedback(0.9, 1e-4);
+        m.record_feedback(0.8, 2e-4);
+        let s = m.snapshot();
+        assert_eq!(s.get("requests").unwrap().as_f64(), Some(3.0));
+        assert!((s.get("mean_cost").unwrap().as_f64().unwrap() - 1.5e-4).abs() < 1e-9);
+        assert_eq!(
+            s.get("per_arm").unwrap().idx(1).unwrap().as_f64(),
+            Some(2.0)
+        );
+    }
+}

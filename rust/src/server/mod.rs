@@ -1,0 +1,10 @@
+//! Serving stack: line-JSON TCP server, worker thread owning the router +
+//! PJRT featurizer, metrics registry.
+
+mod api;
+mod metrics;
+mod serve;
+
+pub use api::{Featurize, ServerState};
+pub use metrics::{LatencyHisto, Metrics};
+pub use serve::{Client, Server};

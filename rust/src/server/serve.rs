@@ -1,0 +1,296 @@
+//! TCP serving loop.
+//!
+//! tokio is unreachable in the offline build environment, so the server is
+//! a std::net design: N connection-handler threads (I/O + JSON parsing)
+//! funnel requests through an mpsc channel to a single worker thread that
+//! owns the router + PJRT featurizer (PJRT executables stay on one thread
+//! by construction).  Routing work is microseconds, embedding ~1 ms, so the
+//! worker is not the bottleneck until multi-thousand req/s.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::api::ServerState;
+use crate::util::json::Json;
+
+struct Job {
+    req: Json,
+    resp: mpsc::Sender<Json>,
+}
+
+/// Running server handle.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    tx: mpsc::Sender<Job>,
+    worker: Option<JoinHandle<()>>,
+    acceptor: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve until a `shutdown`
+    /// request arrives or the handle is dropped.
+    ///
+    /// Takes a state *builder* rather than the state itself: the worker
+    /// thread constructs (and exclusively owns) the router + featurizer —
+    /// PJRT executables and buffers are not `Send`, so they must be born
+    /// on the thread that uses them.
+    pub fn spawn<F>(addr: &str, build_state: F) -> Result<Server>
+    where
+        F: FnOnce() -> ServerState + Send + 'static,
+    {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::channel::<Job>();
+
+        // worker thread: owns router + featurizer
+        let wshutdown = shutdown.clone();
+        let worker = std::thread::Builder::new()
+            .name("pb-worker".into())
+            .spawn(move || {
+                let mut state = build_state();
+                while let Ok(job) = rx.recv() {
+                    if wshutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let (resp, down) = state.handle(&job.req);
+                    let _ = job.resp.send(resp);
+                    if down {
+                        wshutdown.store(true, Ordering::SeqCst);
+                        break;
+                    }
+                }
+            })?;
+
+        // acceptor thread: one handler thread per connection
+        let ashutdown = shutdown.clone();
+        let atx = tx.clone();
+        let acceptor = std::thread::Builder::new()
+            .name("pb-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if ashutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let _ = stream.set_nodelay(true); // line-RPC: kill Nagle
+                    let tx = atx.clone();
+                    let cshutdown = ashutdown.clone();
+                    let _ = std::thread::Builder::new()
+                        .name("pb-conn".into())
+                        .spawn(move || handle_conn(stream, tx, cshutdown));
+                }
+            })?;
+
+        Ok(Server {
+            addr: local,
+            shutdown,
+            tx,
+            worker: Some(worker),
+            acceptor: Some(acceptor),
+        })
+    }
+
+    /// Request shutdown and join threads.
+    pub fn stop(mut self) {
+        self.do_stop();
+    }
+
+    fn do_stop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // sentinel job unblocks the worker even while client connections
+        // (holding sender clones) are still open
+        let (rtx, _rrx) = mpsc::channel();
+        let _ = self.tx.send(Job {
+            req: Json::Null,
+            resp: rtx,
+        });
+        // dummy connection unblocks accept()
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.do_stop();
+    }
+}
+
+fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Job>, shutdown: Arc<AtomicBool>) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match Json::parse(&line) {
+            Ok(req) => {
+                let (rtx, rrx) = mpsc::channel();
+                if tx.send(Job { req, resp: rtx }).is_err() {
+                    break;
+                }
+                match rrx.recv() {
+                    Ok(r) => r,
+                    Err(_) => break,
+                }
+            }
+            Err(e) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::Str(format!("parse: {e}"))),
+            ]),
+        };
+        if writeln!(writer, "{}", resp.to_string()).is_err() {
+            break;
+        }
+    }
+}
+
+/// Line-JSON client (tests, examples, load generators).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    /// Send one request, wait for the response.
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        writeln!(self.writer, "{}", req.to_string())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(&line).map_err(|e| anyhow::anyhow!("client parse: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::{ContextCache, ParetoRouter, Prior, RouterConfig};
+    use crate::server::metrics::Metrics;
+
+    fn test_state() -> ServerState {
+        let mut router = ParetoRouter::new(RouterConfig::tabula_rasa(4, Some(1e-3), 1));
+        router.add_model("llama", 0.1, 0.1, Prior::Cold);
+        router.add_model("mistral", 0.4, 1.6, Prior::Cold);
+        ServerState {
+            router,
+            cache: ContextCache::new(4096),
+            featurizer: Box::new(|t: &str| {
+                let h = t.len() as f64;
+                Ok(vec![h % 2.0 - 0.5, (h % 5.0) / 5.0, 0.1, 1.0])
+            }),
+            metrics: std::sync::Arc::new(Metrics::new()),
+        }
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let server = Server::spawn("127.0.0.1:0", test_state).unwrap();
+        let mut c = Client::connect(&server.addr).unwrap();
+        for i in 0..20u64 {
+            let r = c
+                .call(&Json::obj(vec![
+                    ("op", Json::Str("route".into())),
+                    ("id", Json::Num(i as f64)),
+                    ("prompt", Json::Str(format!("question number {i}"))),
+                ]))
+                .unwrap();
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+            let _ = c
+                .call(&Json::obj(vec![
+                    ("op", Json::Str("feedback".into())),
+                    ("id", Json::Num(i as f64)),
+                    ("reward", Json::Num(0.85)),
+                    ("cost", Json::Num(1.2e-4)),
+                ]))
+                .unwrap();
+        }
+        let m = c
+            .call(&Json::obj(vec![("op", Json::Str("metrics".into()))]))
+            .unwrap();
+        assert_eq!(m.get("requests").unwrap().as_f64(), Some(20.0));
+        assert_eq!(m.get("feedbacks").unwrap().as_f64(), Some(20.0));
+        server.stop();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let server = Server::spawn("127.0.0.1:0", test_state).unwrap();
+        let addr = server.addr;
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            handles.push(std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                for i in 0..25u64 {
+                    let id = t * 1000 + i;
+                    let r = c
+                        .call(&Json::obj(vec![
+                            ("op", Json::Str("route".into())),
+                            ("id", Json::Num(id as f64)),
+                            ("prompt", Json::Str(format!("client {t} msg {i}"))),
+                        ]))
+                        .unwrap();
+                    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+                    c.call(&Json::obj(vec![
+                        ("op", Json::Str("feedback".into())),
+                        ("id", Json::Num(id as f64)),
+                        ("reward", Json::Num(0.8)),
+                        ("cost", Json::Num(1e-4)),
+                    ]))
+                    .unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut c = Client::connect(&addr).unwrap();
+        let m = c
+            .call(&Json::obj(vec![("op", Json::Str("metrics".into()))]))
+            .unwrap();
+        assert_eq!(m.get("requests").unwrap().as_f64(), Some(100.0));
+        server.stop();
+    }
+
+    #[test]
+    fn garbage_line_gets_error_not_disconnect() {
+        let server = Server::spawn("127.0.0.1:0", test_state).unwrap();
+        let mut c = Client::connect(&server.addr).unwrap();
+        let r = c.call(&Json::Str("not an object".into())).unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+        // connection still alive
+        let m = c
+            .call(&Json::obj(vec![("op", Json::Str("metrics".into()))]))
+            .unwrap();
+        assert!(m.get("requests").is_some());
+        server.stop();
+    }
+}

@@ -1,0 +1,236 @@
+//! Synthetic prompt corpus — the paper's nine-benchmark workload
+//! (DESIGN.md §6 substitution for the 11,983 real benchmark prompts).
+//!
+//! Each prompt belongs to one of nine benchmark families with a
+//! family-specific vocabulary mix, length range and latent difficulty; the
+//! vocabulary *specification* matches `python/compile/simcorpus.py` so the
+//! AOT featurizer clusters prompts by family exactly as a sentence encoder
+//! clusters real prompts by topic.
+
+use crate::util::rng::{mix2, Rng};
+
+/// (name, specific-word ratio, min words, max words, base difficulty)
+/// First four fields mirror python's `simcorpus.BENCHMARKS`; the base
+/// difficulty drives the world simulator's quality surfaces.
+pub const BENCHMARKS: [(&str, f64, usize, usize, f64); 9] = [
+    ("mmlu", 0.55, 18, 60, 0.55),
+    ("gsm8k", 0.65, 30, 90, 0.75),
+    ("hellaswag", 0.45, 25, 70, 0.30),
+    ("bbh", 0.60, 20, 80, 0.85),
+    ("arc", 0.50, 15, 50, 0.50),
+    ("openbookqa", 0.50, 12, 45, 0.40),
+    ("winogrande", 0.40, 15, 40, 0.35),
+    ("truthfulqa", 0.45, 10, 40, 0.60),
+    ("mbpp", 0.70, 20, 85, 0.70),
+];
+
+pub const N_BENCH: usize = 9;
+const N_SHARED: usize = 200;
+const N_SPECIFIC: usize = 120;
+
+/// Paper split sizes (§4.1).
+pub const N_TRAIN: usize = 8374;
+pub const N_VAL: usize = 1785;
+pub const N_TEST: usize = 1824;
+pub const N_TOTAL: usize = N_TRAIN + N_VAL + N_TEST; // 11,983
+
+/// One synthetic prompt with its latent generative state.
+#[derive(Clone, Debug)]
+pub struct Prompt {
+    /// global prompt id (stable across runs)
+    pub id: u32,
+    /// benchmark family index
+    pub bench: usize,
+    /// word count
+    pub n_words: usize,
+    /// latent difficulty in [0,1] (drives model quality surfaces)
+    pub difficulty: f64,
+    /// latent verbosity factor ~ N(0,1) (drives shared output length)
+    pub verbosity: f64,
+    /// prompt text (family-clustered synthetic words)
+    pub text: String,
+}
+
+impl Prompt {
+    /// Estimated input tokens (≈ 1.3 tokens/word).
+    #[inline]
+    pub fn in_tokens(&self) -> f64 {
+        self.n_words as f64 * 1.3
+    }
+}
+
+/// The three stratified splits (train fits priors, val tunes, test
+/// evaluates — §4.1).
+pub struct Corpus {
+    pub prompts: Vec<Prompt>,
+    pub train: Vec<u32>,
+    pub val: Vec<u32>,
+    pub test: Vec<u32>,
+}
+
+/// Deterministic per-prompt generation keyed on (corpus_seed, prompt_id).
+fn gen_prompt(corpus_seed: u64, id: u32) -> Prompt {
+    let mut rng = Rng::new(mix2(corpus_seed, id as u64));
+    let bench = (id as usize) % N_BENCH;
+    let (name, ratio, lo, hi, base_diff) = BENCHMARKS[bench];
+    let n_words = rng.range(lo, hi);
+    let mut words = Vec::with_capacity(n_words);
+    for _ in 0..n_words {
+        if rng.bernoulli(ratio) {
+            words.push(format!("{name}_{}", rng.below(N_SPECIFIC)));
+        } else {
+            words.push(format!("w{}", rng.below(N_SHARED)));
+        }
+    }
+    let difficulty = (base_diff + 0.18 * rng.normal()).clamp(0.0, 1.0);
+    // verbosity correlates weakly with prompt length (drives the paper's
+    // ρ=0.12–0.27 word-count ↔ cost correlation, Appendix B)
+    let len_z = (n_words as f64 - (lo + hi) as f64 / 2.0) / ((hi - lo) as f64 / 3.46);
+    let verbosity = 0.30 * len_z + 0.954 * rng.normal();
+    Prompt {
+        id,
+        bench,
+        n_words,
+        difficulty,
+        verbosity,
+        text: words.join(" "),
+    }
+}
+
+impl Corpus {
+    /// Build the full 11,983-prompt corpus with stratified splits.
+    pub fn build(seed: u64) -> Corpus {
+        let prompts: Vec<Prompt> = (0..N_TOTAL as u32).map(|id| gen_prompt(seed, id)).collect();
+        // stratified split: shuffle ids within each benchmark family, then
+        // cut proportionally (largest-remainder rounding to hit the exact
+        // paper counts).
+        let mut per_bench: Vec<Vec<u32>> = vec![Vec::new(); N_BENCH];
+        for p in &prompts {
+            per_bench[p.bench].push(p.id);
+        }
+        let mut rng = Rng::new(mix2(seed, 0xDEAD_BEEF));
+        for ids in &mut per_bench {
+            rng.shuffle(ids);
+        }
+        let (mut train, mut val, mut test) = (Vec::new(), Vec::new(), Vec::new());
+        for ids in &per_bench {
+            let n = ids.len();
+            let n_tr = (n * N_TRAIN + N_TOTAL / 2) / N_TOTAL;
+            let n_va = (n * N_VAL + N_TOTAL / 2) / N_TOTAL;
+            train.extend(&ids[..n_tr]);
+            val.extend(&ids[n_tr..n_tr + n_va]);
+            test.extend(&ids[n_tr + n_va..]);
+        }
+        // largest-remainder fixups to hit exact global counts
+        while train.len() > N_TRAIN {
+            val.push(train.pop().unwrap());
+        }
+        while val.len() > N_VAL {
+            test.push(val.pop().unwrap());
+        }
+        while train.len() < N_TRAIN {
+            train.push(val.pop().unwrap());
+        }
+        while val.len() < N_VAL && test.len() > N_TEST {
+            val.push(test.pop().unwrap());
+        }
+        Corpus {
+            prompts,
+            train,
+            val,
+            test,
+        }
+    }
+
+    pub fn prompt(&self, id: u32) -> &Prompt {
+        &self.prompts[id as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_sizes_match_paper() {
+        let c = Corpus::build(1);
+        assert_eq!(c.prompts.len(), 11_983);
+        assert_eq!(c.train.len(), 8374);
+        assert_eq!(c.val.len(), 1785);
+        assert_eq!(c.test.len(), 1824);
+    }
+
+    #[test]
+    fn splits_are_disjoint_and_cover() {
+        let c = Corpus::build(2);
+        let mut all: Vec<u32> = c
+            .train
+            .iter()
+            .chain(c.val.iter())
+            .chain(c.test.iter())
+            .copied()
+            .collect();
+        all.sort_unstable();
+        let n = all.len();
+        all.dedup();
+        assert_eq!(all.len(), n, "overlapping splits");
+        assert_eq!(all.len(), N_TOTAL);
+    }
+
+    #[test]
+    fn splits_are_stratified_by_source() {
+        let c = Corpus::build(3);
+        // each benchmark's share of the test split ≈ its corpus share
+        for b in 0..N_BENCH {
+            let share_test = c.test.iter().filter(|&&id| c.prompt(id).bench == b).count() as f64
+                / c.test.len() as f64;
+            assert!(
+                (share_test - 1.0 / 9.0).abs() < 0.02,
+                "bench {b} test share {share_test}"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let a = Corpus::build(7);
+        let b = Corpus::build(7);
+        let c = Corpus::build(8);
+        assert_eq!(a.prompt(100).text, b.prompt(100).text);
+        assert_ne!(a.prompt(100).text, c.prompt(100).text);
+    }
+
+    #[test]
+    fn prompt_lengths_within_family_ranges() {
+        let c = Corpus::build(4);
+        for p in &c.prompts {
+            let (_, _, lo, hi, _) = BENCHMARKS[p.bench];
+            assert!(p.n_words >= lo && p.n_words <= hi);
+            assert_eq!(p.text.split_whitespace().count(), p.n_words);
+        }
+    }
+
+    #[test]
+    fn difficulty_tracks_benchmark_base() {
+        let c = Corpus::build(5);
+        // gsm8k (0.75) must be harder on average than hellaswag (0.30)
+        let mean = |b: usize| {
+            let v: Vec<f64> = c
+                .prompts
+                .iter()
+                .filter(|p| p.bench == b)
+                .map(|p| p.difficulty)
+                .collect();
+            v.iter().sum::<f64>() / v.len() as f64
+        };
+        assert!(mean(1) > mean(2) + 0.3);
+    }
+
+    #[test]
+    fn vocab_is_family_clustered() {
+        let c = Corpus::build(6);
+        let p = c.prompts.iter().find(|p| p.bench == 0).unwrap();
+        assert!(p.text.contains("mmlu_") || p.text.contains("w"));
+        assert!(!p.text.contains("gsm8k_"));
+    }
+}

@@ -1,0 +1,131 @@
+//! Pure-Rust surrogate featurizer.
+//!
+//! The *production* context path is the AOT-lowered JAX/Pallas featurizer
+//! executed via PJRT (`runtime::Embedder`); experiments use it when
+//! artifacts are present (cached context matrix).  This surrogate exists as
+//! the artifact-free fallback so `cargo test` and the experiment harness
+//! work in isolation: it produces whitened 26-d contexts with the same
+//! information content (benchmark-family clusters + prompt length), which
+//! is exactly what the real embedding exposes to the bandit.
+
+use super::corpus::{Prompt, BENCHMARKS, N_BENCH};
+use crate::util::rng::{mix2, Rng};
+
+pub const D_CTX: usize = 26;
+
+/// Deterministic whitened featurizer.
+pub struct SimFeaturizer {
+    /// per-benchmark cluster centroids in the 25 non-bias dims
+    centroids: Vec<[f64; D_CTX - 1]>,
+    /// direction carrying prompt-length information
+    len_dir: [f64; D_CTX - 1],
+    seed: u64,
+}
+
+impl SimFeaturizer {
+    pub fn new(seed: u64) -> SimFeaturizer {
+        let mut rng = Rng::new(mix2(seed, 0xFEA7));
+        let mut centroids = Vec::with_capacity(N_BENCH);
+        for _ in 0..N_BENCH {
+            let mut c = [0.0; D_CTX - 1];
+            for v in &mut c {
+                *v = 0.80 * rng.normal();
+            }
+            centroids.push(c);
+        }
+        // demean across families so the context distribution is centered
+        // (the real PCA featurizer centers by construction)
+        for j in 0..D_CTX - 1 {
+            let mean: f64 = centroids.iter().map(|c| c[j]).sum::<f64>() / N_BENCH as f64;
+            for c in &mut centroids {
+                c[j] -= mean;
+            }
+        }
+        let mut len_dir = [0.0; D_CTX - 1];
+        for v in &mut len_dir {
+            *v = rng.normal() / ((D_CTX - 1) as f64).sqrt();
+        }
+        SimFeaturizer {
+            centroids,
+            len_dir,
+            seed,
+        }
+    }
+
+    /// Whitened 26-d context (unit-ish variance dims + trailing bias 1).
+    pub fn context(&self, p: &Prompt) -> Vec<f64> {
+        let (_, _, lo, hi, _) = BENCHMARKS[p.bench];
+        let len_z = (p.n_words as f64 - (lo + hi) as f64 / 2.0) / ((hi - lo) as f64 / 3.46);
+        let mut rng = Rng::new(mix2(self.seed ^ 0xC0, p.id as u64));
+        let mut x = Vec::with_capacity(D_CTX);
+        let c = &self.centroids[p.bench];
+        for j in 0..D_CTX - 1 {
+            x.push(c[j] + 0.30 * len_z * self.len_dir[j] + 0.55 * rng.normal());
+        }
+        x.push(1.0);
+        x
+    }
+
+    /// Contexts for a whole prompt set.
+    pub fn contexts(&self, prompts: &[Prompt]) -> Vec<Vec<f64>> {
+        prompts.iter().map(|p| self.context(p)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::corpus::Corpus;
+
+    #[test]
+    fn deterministic_and_bias_terminated() {
+        let c = Corpus::build(1);
+        let f = SimFeaturizer::new(1);
+        let a = f.context(&c.prompts[5]);
+        let b = f.context(&c.prompts[5]);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), D_CTX);
+        assert_eq!(a[D_CTX - 1], 1.0);
+    }
+
+    #[test]
+    fn roughly_whitened() {
+        let c = Corpus::build(2);
+        let f = SimFeaturizer::new(2);
+        let xs = f.contexts(&c.prompts[..2000]);
+        for j in 0..D_CTX - 1 {
+            let mean = xs.iter().map(|x| x[j]).sum::<f64>() / xs.len() as f64;
+            let var =
+                xs.iter().map(|x| (x[j] - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+            assert!(mean.abs() < 0.6, "dim {j} mean {mean}");
+            assert!(var > 0.2 && var < 2.2, "dim {j} var {var}");
+        }
+    }
+
+    #[test]
+    fn family_clusters_are_linearly_separable_enough() {
+        // same-family contexts must be closer than cross-family on average
+        let c = Corpus::build(3);
+        let f = SimFeaturizer::new(3);
+        let fam = |b: usize| -> Vec<Vec<f64>> {
+            c.prompts
+                .iter()
+                .filter(|p| p.bench == b)
+                .take(40)
+                .map(|p| f.context(p))
+                .collect()
+        };
+        let a = fam(0);
+        let b = fam(4);
+        let dist = |x: &[f64], y: &[f64]| -> f64 {
+            x.iter()
+                .zip(y)
+                .map(|(u, v)| (u - v) * (u - v))
+                .sum::<f64>()
+                .sqrt()
+        };
+        let within: f64 = (0..20).map(|i| dist(&a[i], &a[i + 20])).sum::<f64>() / 20.0;
+        let across: f64 = (0..20).map(|i| dist(&a[i], &b[i])).sum::<f64>() / 20.0;
+        assert!(within < across, "within {within} across {across}");
+    }
+}

@@ -1,0 +1,14 @@
+//! Simulation substrates: corpus, world (reward/cost matrices), judges,
+//! drift views, tokenizer parity and the surrogate featurizer.
+
+pub mod corpus;
+pub mod featurizer;
+pub mod tokens;
+pub mod world;
+
+pub use corpus::{Corpus, Prompt};
+pub use featurizer::SimFeaturizer;
+pub use world::{
+    model_bank, EnvView, FlashScenario, Judge, ModelSpec, World, FLASH, GEMINI_PRO, JUDGES, LLAMA,
+    MISTRAL,
+};

@@ -1,0 +1,78 @@
+//! Tokenizer — Rust mirror of `python/compile/tokenizer.py`.
+//!
+//! MUST stay in lock-step with the python spec: the AOT-lowered embedding
+//! graph consumes these token ids.  Known-answer vectors below are pinned
+//! on both sides (see `python/tests/test_tokenizer.py`).
+
+pub const VOCAB_SIZE: u32 = 8192;
+pub const L_MAX: usize = 64;
+
+const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+const FNV_PRIME: u64 = 0x100_0000_01B3;
+
+/// FNV-1a 64-bit hash (wrapping multiply).
+#[inline]
+pub fn fnv1a64(data: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Word -> vocab id in [1, VOCAB_SIZE). 0 is PAD.
+#[inline]
+pub fn word_id(word: &str) -> u32 {
+    1 + (fnv1a64(word.as_bytes()) % (VOCAB_SIZE as u64 - 1)) as u32
+}
+
+/// Tokenize a prompt: lowercase, split on whitespace, hash, pad/truncate
+/// to `L_MAX`.
+pub fn tokenize(text: &str) -> [i32; L_MAX] {
+    let lower = text.to_lowercase();
+    let mut out = [0i32; L_MAX];
+    for (i, w) in lower.split_whitespace().take(L_MAX).enumerate() {
+        out[i] = word_id(w) as i32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_vectors_match_python() {
+        assert_eq!(fnv1a64(b""), 0xCBF2_9CE4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xAF63_DC4C_8601_EC8C);
+        assert_eq!(fnv1a64(b"hello"), 0xA430_D846_80AA_BD0B);
+        assert_eq!(fnv1a64(b"w42"), 0x5F40_A719_48F9_E7DC);
+    }
+
+    #[test]
+    fn word_id_known_vectors_match_python() {
+        assert_eq!(word_id("w42"), 7488);
+        assert_eq!(word_id("hello"), 8181);
+        assert_eq!(word_id("mmlu_3"), 5975);
+    }
+
+    #[test]
+    fn tokenize_pads_truncates_lowercases() {
+        let t = tokenize("Hello W42");
+        assert_eq!(t[0], 8181);
+        assert_eq!(t[1], 7488);
+        assert!(t[2..].iter().all(|&v| v == 0));
+        let long: String = (0..200).map(|i| format!("w{i} ")).collect();
+        let t2 = tokenize(&long);
+        assert!(t2.iter().all(|&v| v != 0));
+    }
+
+    #[test]
+    fn ids_in_range() {
+        for w in ["a", "zzz", "mmlu_0", "gsm8k_119"] {
+            let id = word_id(w);
+            assert!(id >= 1 && id < VOCAB_SIZE);
+        }
+    }
+}

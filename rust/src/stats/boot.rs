@@ -1,0 +1,132 @@
+//! Percentile bootstrap confidence intervals (the paper's default: 95%
+//! percentile bootstrap, up to 10,000 resamples, seed-level resampling).
+
+use super::{mean, median};
+use crate::util::rng::Rng;
+
+/// A point estimate with a (lo, hi) confidence interval.
+#[derive(Clone, Copy, Debug)]
+pub struct Ci {
+    pub est: f64,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Ci {
+    pub fn contains(&self, v: f64) -> bool {
+        v >= self.lo && v <= self.hi
+    }
+
+    pub fn excludes_zero(&self) -> bool {
+        !self.contains(0.0)
+    }
+}
+
+fn percentile_sorted(v: &[f64], p: f64) -> f64 {
+    let idx = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = idx.floor() as usize;
+    let hi = idx.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (idx - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+fn bootstrap_stat<F: Fn(&[f64]) -> f64>(
+    xs: &[f64],
+    b: usize,
+    seed: u64,
+    conf: f64,
+    stat: F,
+) -> Ci {
+    assert!(!xs.is_empty());
+    let mut rng = Rng::new(seed);
+    let mut stats = Vec::with_capacity(b);
+    let mut resample = vec![0.0; xs.len()];
+    for _ in 0..b {
+        for r in resample.iter_mut() {
+            *r = xs[rng.below(xs.len())];
+        }
+        stats.push(stat(&resample));
+    }
+    stats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let alpha = (1.0 - conf) / 2.0 * 100.0;
+    Ci {
+        est: stat(xs),
+        lo: percentile_sorted(&stats, alpha),
+        hi: percentile_sorted(&stats, 100.0 - alpha),
+    }
+}
+
+/// 95% percentile-bootstrap CI of the mean.
+pub fn bootstrap_ci(xs: &[f64], b: usize, seed: u64) -> Ci {
+    bootstrap_stat(xs, b, seed, 0.95, mean)
+}
+
+/// 95% percentile-bootstrap CI of the median (resamples the median
+/// directly — appropriate for heavy-tailed regret distributions, App. D).
+pub fn bootstrap_ci_median(xs: &[f64], b: usize, seed: u64) -> Ci {
+    bootstrap_stat(xs, b, seed, 0.95, median)
+}
+
+/// Bootstrap CI for the mean of paired differences `a[i] - b[i]`, with
+/// optional Bonferroni widening for `m` simultaneous comparisons
+/// (confidence 1 - 0.05/m).
+pub fn paired_bootstrap_ci(a: &[f64], b: &[f64], boots: usize, seed: u64, m: usize) -> Ci {
+    assert_eq!(a.len(), b.len());
+    let diffs: Vec<f64> = a.iter().zip(b).map(|(x, y)| x - y).collect();
+    let conf = 1.0 - 0.05 / m.max(1) as f64;
+    bootstrap_stat(&diffs, boots, seed, conf, mean)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ci_brackets_true_mean() {
+        let mut rng = Rng::new(1);
+        let xs: Vec<f64> = (0..200).map(|_| 5.0 + rng.normal()).collect();
+        let ci = bootstrap_ci(&xs, 2000, 2);
+        assert!(ci.lo < 5.0 + 0.3 && ci.hi > 5.0 - 0.3, "{ci:?}");
+        assert!(ci.lo < ci.est && ci.est < ci.hi);
+    }
+
+    #[test]
+    fn ci_narrows_with_n() {
+        let mut rng = Rng::new(3);
+        let small: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
+        let large: Vec<f64> = (0..2000).map(|_| rng.normal()).collect();
+        let cs = bootstrap_ci(&small, 1000, 4);
+        let cl = bootstrap_ci(&large, 1000, 4);
+        assert!(cl.hi - cl.lo < cs.hi - cs.lo);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let a = bootstrap_ci(&xs, 500, 7);
+        let b = bootstrap_ci(&xs, 500, 7);
+        assert_eq!((a.lo, a.hi), (b.lo, b.hi));
+    }
+
+    #[test]
+    fn paired_detects_shift_and_bonferroni_widens() {
+        let mut rng = Rng::new(5);
+        let a: Vec<f64> = (0..100).map(|_| rng.normal() + 1.0).collect();
+        let b: Vec<f64> = (0..100).map(|_| rng.normal()).collect();
+        let ci1 = paired_bootstrap_ci(&a, &b, 2000, 6, 1);
+        let ci4 = paired_bootstrap_ci(&a, &b, 2000, 6, 4);
+        assert!(ci1.excludes_zero(), "{ci1:?}");
+        assert!(ci4.hi - ci4.lo > ci1.hi - ci1.lo, "Bonferroni must widen");
+    }
+
+    #[test]
+    fn median_ci_robust_to_outliers() {
+        let mut xs: Vec<f64> = (0..99).map(|i| i as f64 / 99.0).collect();
+        xs.push(1e6);
+        let ci = bootstrap_ci_median(&xs, 1000, 8);
+        assert!(ci.est < 1.0 && ci.hi < 2.0, "{ci:?}");
+    }
+}

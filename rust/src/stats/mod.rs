@@ -1,0 +1,118 @@
+//! Statistics toolkit backing the paper's evaluation: percentile bootstrap
+//! CIs, exact sign / Fisher tests with Holm–Bonferroni correction, rank
+//! correlations (Spearman ρ, Kendall τ_b and W), Wilson CIs and effect
+//! sizes.  All deterministic given a seed.
+
+mod boot;
+mod rank;
+mod tests;
+
+pub use boot::{bootstrap_ci, bootstrap_ci_median, paired_bootstrap_ci, Ci};
+pub use rank::{kendall_tau_b, kendall_w, spearman, wilson_ci};
+pub use tests::{fisher_exact_2x2, holm_bonferroni, sign_test};
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Sample standard deviation (n-1).
+pub fn std_dev_sample(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return f64::NAN;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Median (sorts a copy).
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Percentile in [0,100] with linear interpolation.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = idx.floor() as usize;
+    let hi = idx.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (idx - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Cohen's d between two samples (pooled sd).
+pub fn cohens_d(a: &[f64], b: &[f64]) -> f64 {
+    let (ma, mb) = (mean(a), mean(b));
+    let (sa, sb) = (std_dev_sample(a), std_dev_sample(b));
+    let (na, nb) = (a.len() as f64, b.len() as f64);
+    let pooled = (((na - 1.0) * sa * sa + (nb - 1.0) * sb * sb) / (na + nb - 2.0)).sqrt();
+    (mb - ma) / pooled
+}
+
+/// Mean absolute deviation between paired samples.
+pub fn mad_paired(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f64>() / a.len() as f64
+}
+
+/// Pearson correlation.
+pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (ma, mb) = (mean(a), mean(b));
+    let (mut cov, mut va, mut vb) = (0.0, 0.0, 0.0);
+    for i in 0..a.len() {
+        let (da, db) = (a[i] - ma, b[i] - mb);
+        cov += da * db;
+        va += da * da;
+        vb += db * db;
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+#[cfg(test)]
+mod base_tests {
+    use super::*;
+
+    #[test]
+    fn moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((std_dev(&xs) - (1.25f64).sqrt()).abs() < 1e-12);
+        assert_eq!(median(&xs), 2.5);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+    }
+
+    #[test]
+    fn cohens_d_known() {
+        // unit separation, unit sd -> d ≈ 1
+        let a: Vec<f64> = (0..100).map(|i| (i % 10) as f64 / 3.0).collect();
+        let b: Vec<f64> = a.iter().map(|x| x + 1.0).collect();
+        assert!((cohens_d(&a, &b) - 1.0 / std_dev_sample(&a)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pearson_perfect() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [2.0, 4.0, 6.0];
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-12);
+        let c = [3.0, 2.0, 1.0];
+        assert!((pearson(&a, &c) + 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,164 @@
+//! Rank statistics: Spearman ρ, Kendall τ_b, Kendall W, Wilson CI
+//! (Appendices B and E).
+
+use super::pearson;
+
+/// Average ranks (1-based) with ties averaged.
+pub fn ranks(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| xs[i].partial_cmp(&xs[j]).unwrap());
+    let mut r = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            r[k] = avg;
+        }
+        i = j + 1;
+    }
+    r
+}
+
+/// Spearman rank correlation (ties averaged).
+pub fn spearman(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    pearson(&ranks(a), &ranks(b))
+}
+
+/// Kendall τ_b (tie-corrected). O(n²) — fine at evaluation sizes.
+pub fn kendall_tau_b(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let (mut conc, mut disc, mut tie_a, mut tie_b) = (0i64, 0i64, 0i64, 0i64);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let da = a[i] - a[j];
+            let db = b[i] - b[j];
+            if da == 0.0 && db == 0.0 {
+                // tied in both: excluded from all counts
+            } else if da == 0.0 {
+                tie_a += 1;
+            } else if db == 0.0 {
+                tie_b += 1;
+            } else if (da > 0.0) == (db > 0.0) {
+                conc += 1;
+            } else {
+                disc += 1;
+            }
+        }
+    }
+    let n0 = (n * (n - 1) / 2) as f64;
+    let denom = ((n0 - tie_a as f64) * (n0 - tie_b as f64)).sqrt();
+    if denom == 0.0 {
+        return 0.0;
+    }
+    (conc - disc) as f64 / denom
+}
+
+/// Kendall's coefficient of concordance W for `m` raters over `n` items.
+/// `scores[rater][item]`.  No tie correction (continuous scores).
+pub fn kendall_w(scores: &[Vec<f64>]) -> f64 {
+    let m = scores.len();
+    assert!(m >= 2);
+    let n = scores[0].len();
+    assert!(n >= 2);
+    let mut rank_sums = vec![0.0; n];
+    for rater in scores {
+        let r = ranks(rater);
+        for i in 0..n {
+            rank_sums[i] += r[i];
+        }
+    }
+    let mean_r = rank_sums.iter().sum::<f64>() / n as f64;
+    let s: f64 = rank_sums.iter().map(|r| (r - mean_r) * (r - mean_r)).sum();
+    12.0 * s / (m as f64 * m as f64 * (n as f64 * n as f64 * n as f64 - n as f64))
+}
+
+/// 95% Wilson score interval for a proportion.
+pub fn wilson_ci(successes: u64, n: u64) -> (f64, f64) {
+    if n == 0 {
+        return (0.0, 1.0);
+    }
+    let z = 1.959963984540054f64;
+    let nf = n as f64;
+    let p = successes as f64 / nf;
+    let z2 = z * z;
+    let denom = 1.0 + z2 / nf;
+    let center = (p + z2 / (2.0 * nf)) / denom;
+    let half = z * (p * (1.0 - p) / nf + z2 / (4.0 * nf * nf)).sqrt() / denom;
+    ((center - half).max(0.0), (center + half).min(1.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ranks_with_ties() {
+        let r = ranks(&[10.0, 20.0, 20.0, 30.0]);
+        assert_eq!(r, vec![1.0, 2.5, 2.5, 4.0]);
+    }
+
+    #[test]
+    fn spearman_monotone_is_one() {
+        let a = [1.0, 2.0, 5.0, 9.0];
+        let b = [2.0, 4.0, 26.0, 82.0]; // any monotone transform
+        assert!((spearman(&a, &b) - 1.0).abs() < 1e-12);
+        let c = [4.0, 3.0, 2.0, 1.0];
+        assert!((spearman(&a, &c) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_noise_calibration() {
+        // x vs x+noise: ρ depends only on noise/signal ratio
+        let mut rng = Rng::new(1);
+        let x: Vec<f64> = (0..4000).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = x.iter().map(|v| v + rng.normal()).collect();
+        let rho = spearman(&x, &y);
+        // Pearson would be 1/sqrt(2) ≈ 0.707; Spearman slightly lower
+        assert!((rho - 0.68).abs() < 0.04, "{rho}");
+    }
+
+    #[test]
+    fn kendall_tau_known() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [1.0, 3.0, 2.0, 4.0];
+        // 5 concordant, 1 discordant -> tau = 4/6
+        assert!((kendall_tau_b(&a, &b) - 4.0 / 6.0).abs() < 1e-12);
+        assert!((kendall_tau_b(&a, &a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kendall_w_bounds() {
+        // perfect agreement -> W = 1
+        let scores = vec![
+            vec![0.1, 0.5, 0.9],
+            vec![0.2, 0.6, 0.8],
+            vec![0.15, 0.55, 0.95],
+        ];
+        assert!((kendall_w(&scores) - 1.0).abs() < 1e-12);
+        // systematic disagreement -> small W
+        let scores = vec![
+            vec![1.0, 2.0, 3.0],
+            vec![3.0, 1.0, 2.0],
+            vec![2.0, 3.0, 1.0],
+        ];
+        assert!(kendall_w(&scores) < 0.05);
+    }
+
+    #[test]
+    fn wilson_known_values() {
+        // 100% of 1766 (Appendix B): CI ≈ [99.8, 100.0]%
+        let (lo, hi) = wilson_ci(1766, 1766);
+        assert!(lo > 0.997 && hi == 1.0, "({lo}, {hi})");
+        // 79.7% of 1766: CI ≈ [77.7, 81.5]%
+        let (lo, hi) = wilson_ci((0.797f64 * 1766.0).round() as u64, 1766);
+        assert!((lo - 0.777).abs() < 0.004 && (hi - 0.815).abs() < 0.004, "({lo}, {hi})");
+    }
+}

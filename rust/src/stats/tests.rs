@@ -1,0 +1,167 @@
+//! Exact hypothesis tests + multiplicity correction (Appendices C–D).
+
+/// ln n! via lgamma-style Stirling series (exact enough for p-values).
+fn ln_factorial(n: u64) -> f64 {
+    if n < 2 {
+        return 0.0;
+    }
+    // Stirling with correction terms; exact table for small n
+    const TABLE: [f64; 21] = [
+        0.0,
+        0.0,
+        0.6931471805599453,
+        1.791759469228055,
+        3.1780538303479458,
+        4.787491742782046,
+        6.579251212010101,
+        8.525161361065415,
+        10.60460290274525,
+        12.801827480081469,
+        15.104412573075516,
+        17.502307845873887,
+        19.987214495661885,
+        22.552163853123425,
+        25.19122118273868,
+        27.89927138384089,
+        30.671860106080672,
+        33.50507345013689,
+        36.39544520803305,
+        39.339884187199495,
+        42.335616460753485,
+    ];
+    if n <= 20 {
+        return TABLE[n as usize];
+    }
+    let x = n as f64;
+    x * x.ln() - x + 0.5 * (2.0 * std::f64::consts::PI * x).ln() + 1.0 / (12.0 * x)
+        - 1.0 / (360.0 * x * x * x)
+}
+
+fn ln_choose(n: u64, k: u64) -> f64 {
+    ln_factorial(n) - ln_factorial(k) - ln_factorial(n - k)
+}
+
+/// Exact two-sided binomial sign test: `wins` successes out of `n`
+/// informative pairs under H0: p = 0.5.  Returns the p-value.
+pub fn sign_test(wins: u64, n: u64) -> f64 {
+    if n == 0 {
+        return 1.0;
+    }
+    let ln_half_n = n as f64 * 0.5f64.ln();
+    let pmf = |k: u64| (ln_choose(n, k) + ln_half_n).exp();
+    let k_lo = wins.min(n - wins);
+    // two-sided: double the smaller tail (standard exact sign test)
+    let tail: f64 = (0..=k_lo).map(pmf).sum();
+    (2.0 * tail).min(1.0)
+}
+
+/// Fisher exact test (two-sided, hypergeometric) on the 2x2 table
+/// [[a, b], [c, d]].  Two-sided by summing all tables with probability
+/// ≤ the observed table's.
+pub fn fisher_exact_2x2(a: u64, b: u64, c: u64, d: u64) -> f64 {
+    let row1 = a + b;
+    let row2 = c + d;
+    let col1 = a + c;
+    let n = row1 + row2;
+    if n == 0 {
+        return 1.0;
+    }
+    let ln_denom = ln_choose(n, col1);
+    let p_of = |x: u64| -> f64 {
+        // table (x, row1-x, col1-x, ...) valid iff bounds hold
+        (ln_choose(row1, x) + ln_choose(row2, col1 - x) - ln_denom).exp()
+    };
+    let x_min = col1.saturating_sub(row2);
+    let x_max = col1.min(row1);
+    let p_obs = p_of(a);
+    let mut total = 0.0;
+    for x in x_min..=x_max {
+        let p = p_of(x);
+        if p <= p_obs * (1.0 + 1e-9) {
+            total += p;
+        }
+    }
+    total.min(1.0)
+}
+
+/// Holm–Bonferroni step-down correction.  Input raw p-values; output
+/// adjusted p-values in the same order (monotone, capped at 1).
+pub fn holm_bonferroni(ps: &[f64]) -> Vec<f64> {
+    let m = ps.len();
+    let mut idx: Vec<usize> = (0..m).collect();
+    idx.sort_by(|&i, &j| ps[i].partial_cmp(&ps[j]).unwrap());
+    let mut adj = vec![0.0; m];
+    let mut running_max = 0.0f64;
+    for (rank, &i) in idx.iter().enumerate() {
+        let factor = (m - rank) as f64;
+        let p = (ps[i] * factor).min(1.0);
+        running_max = running_max.max(p);
+        adj[i] = running_max;
+    }
+    adj
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_factorial_exact_vs_stirling_seam() {
+        // continuity across the table/Stirling boundary
+        let direct: f64 = (1..=25u64).map(|i| (i as f64).ln()).sum();
+        assert!((ln_factorial(25) - direct).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sign_test_known_values() {
+        // 20/20 wins: p = 2 * 0.5^20 ≈ 1.9e-6  (paper: p < 1e-5 at 20 seeds)
+        let p = sign_test(20, 20);
+        assert!((p - 2.0 * 0.5f64.powi(20)).abs() < 1e-12);
+        // 17/20 wins: p ≈ 0.00258 (binom two-sided)
+        let p = sign_test(17, 20);
+        assert!((p - 0.002577).abs() < 1e-5, "{p}");
+        // 10/20: p = 1
+        assert!(sign_test(10, 20) > 0.99);
+        // symmetric
+        assert!((sign_test(3, 20) - sign_test(17, 20)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fisher_known_values() {
+        // classic tea-tasting 3/1/1/3: p = 0.4857...
+        let p = fisher_exact_2x2(3, 1, 1, 3);
+        assert!((p - 0.485714).abs() < 1e-5, "{p}");
+        // strong association
+        let p = fisher_exact_2x2(10, 0, 0, 10);
+        assert!(p < 1.1e-5, "{p}");
+        // no association
+        assert!(fisher_exact_2x2(5, 5, 5, 5) > 0.99);
+        // paper's App C table: warmup 0/20 vs TR 2/20 catastrophic -> n.s.
+        let p = fisher_exact_2x2(0, 20, 2, 18);
+        assert!(p > 0.4, "{p}");
+    }
+
+    #[test]
+    fn holm_adjustment_monotone_and_bounded() {
+        let raw = [0.01, 0.04, 0.03, 0.005];
+        let adj = holm_bonferroni(&raw);
+        // smallest raw p gets the full m multiplier
+        assert!((adj[3] - 0.02).abs() < 1e-12);
+        for (r, a) in raw.iter().zip(&adj) {
+            assert!(a >= r);
+            assert!(*a <= 1.0);
+        }
+        // order preserved under adjustment (monotone)
+        let mut idx: Vec<usize> = (0..4).collect();
+        idx.sort_by(|&i, &j| raw[i].partial_cmp(&raw[j]).unwrap());
+        for w in idx.windows(2) {
+            assert!(adj[w[0]] <= adj[w[1]] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn holm_all_significant_when_tiny() {
+        let adj = holm_bonferroni(&[1e-6, 1e-7, 1e-8]);
+        assert!(adj.iter().all(|&p| p < 0.001));
+    }
+}

@@ -1,0 +1,141 @@
+//! Criterion-style micro-benchmark harness (criterion is unreachable in the
+//! offline build environment; this reimplements the part we need: warmup,
+//! timed iterations, percentile summaries and throughput).
+//!
+//! Used both by `benches/*` (with `harness = false`) and by the latency
+//! experiment that regenerates paper Tables 10–12.
+
+use std::time::Instant;
+
+/// Summary statistics over per-iteration wall-clock samples (nanoseconds).
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub n: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchStats {
+    pub fn from_samples(mut ns: Vec<f64>) -> BenchStats {
+        assert!(!ns.is_empty());
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| -> f64 {
+            let idx = (p * (ns.len() - 1) as f64).round() as usize;
+            ns[idx]
+        };
+        BenchStats {
+            n: ns.len(),
+            mean_ns: ns.iter().sum::<f64>() / ns.len() as f64,
+            p50_ns: q(0.50),
+            p95_ns: q(0.95),
+            p99_ns: q(0.99),
+            min_ns: ns[0],
+            max_ns: *ns.last().unwrap(),
+        }
+    }
+
+    /// Requests per second implied by the mean latency.
+    pub fn throughput(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+
+    pub fn p50_us(&self) -> f64 {
+        self.p50_ns / 1e3
+    }
+
+    pub fn p95_us(&self) -> f64 {
+        self.p95_ns / 1e3
+    }
+}
+
+/// Time `f` for `warmup` unmeasured + `iters` measured iterations.
+/// Each call is timed individually (matches the paper's per-cycle
+/// percentile methodology, Table 10: 500 warmup + 4,500 measured).
+pub fn bench_each<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    BenchStats::from_samples(samples)
+}
+
+/// Time `f` in batches (for sub-microsecond bodies where per-call timer
+/// overhead would dominate): each sample is the mean over `batch` calls.
+pub fn bench_batched<F: FnMut()>(
+    warmup: usize,
+    samples: usize,
+    batch: usize,
+    mut f: F,
+) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        out.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+    }
+    BenchStats::from_samples(out)
+}
+
+/// Pretty one-line report.
+pub fn report(name: &str, s: &BenchStats) {
+    println!(
+        "{name:<40} p50 {:>10.2} us  p95 {:>10.2} us  mean {:>10.2} us  thrpt {:>10.0}/s",
+        s.p50_us(),
+        s.p95_us(),
+        s.mean_ns / 1e3,
+        s.throughput()
+    );
+}
+
+/// Prevent the optimizer from discarding a value (stable-rust black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles() {
+        let s = BenchStats::from_samples((1..=100).map(|i| i as f64).collect());
+        assert_eq!(s.n, 100);
+        assert!((s.p50_ns - 50.0).abs() <= 1.0);
+        assert!((s.p95_ns - 95.0).abs() <= 1.0);
+        assert_eq!(s.min_ns, 1.0);
+        assert_eq!(s.max_ns, 100.0);
+    }
+
+    #[test]
+    fn bench_runs_and_counts() {
+        let mut calls = 0usize;
+        let s = bench_each(5, 20, || calls += 1);
+        assert_eq!(calls, 25);
+        assert_eq!(s.n, 20);
+        assert!(s.mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn batched_amortizes() {
+        let s = bench_batched(1, 10, 100, || {
+            black_box(1 + 1);
+        });
+        assert_eq!(s.n, 10);
+        assert!(s.mean_ns < 1e6);
+    }
+}

@@ -1,0 +1,80 @@
+//! Mini property-testing harness (proptest is unreachable offline).
+//!
+//! `for_cases(n, seed, |rng, case| ...)` runs `n` randomized cases through a
+//! closure; on panic the failing case index + seed are reported so the case
+//! reproduces exactly.  Used by coordinator-invariant tests (routing,
+//! batching, pacer state) per the repro guidance.
+
+use super::rng::Rng;
+
+/// Run `n` randomized property cases.  The closure receives a fresh,
+/// case-indexed RNG so failures are independently reproducible.
+pub fn for_cases<F: FnMut(&mut Rng, usize)>(n: usize, seed: u64, mut f: F) {
+    for case in 0..n {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9).wrapping_add(case as u64));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng, case);
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed: case={case} seed={seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Random f64 vector with entries in [-scale, scale].
+pub fn vec_f64(rng: &mut Rng, n: usize, scale: f64) -> Vec<f64> {
+    (0..n).map(|_| (rng.f64() * 2.0 - 1.0) * scale).collect()
+}
+
+/// Random symmetric positive-definite matrix (row-major, d*d): M Mᵀ + εI.
+pub fn spd(rng: &mut Rng, d: usize, eps: f64) -> Vec<f64> {
+    let m: Vec<f64> = (0..d * d).map(|_| rng.normal() * 0.5).collect();
+    let mut a = vec![0.0; d * d];
+    for i in 0..d {
+        for j in 0..d {
+            let mut s = 0.0;
+            for k in 0..d {
+                s += m[i * d + k] * m[j * d + k];
+            }
+            a[i * d + j] = s + if i == j { eps } else { 0.0 };
+        }
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        for_cases(17, 1, |_, _| count += 1);
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    fn case_rngs_differ() {
+        let mut first = Vec::new();
+        for_cases(5, 2, |rng, _| first.push(rng.next_u64()));
+        assert_eq!(first.len(), 5);
+        let mut dedup = first.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 5);
+    }
+
+    #[test]
+    fn spd_is_symmetric_posdef_diag() {
+        let mut rng = Rng::new(3);
+        let d = 6;
+        let a = spd(&mut rng, d, 0.1);
+        for i in 0..d {
+            assert!(a[i * d + i] > 0.0);
+            for j in 0..d {
+                assert!((a[i * d + j] - a[j * d + i]).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Perf probes backing EXPERIMENTS.md §Perf (run with --ignored).
+use paretobandit::linalg::Mat;
+use paretobandit::router::{ParetoRouter, Prior, RouterConfig};
+use paretobandit::util::bench::{bench_batched, black_box};
+use paretobandit::util::rng::Rng;
+
+fn ctx(rng: &mut Rng, d: usize) -> Vec<f64> {
+    let mut x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    x[d - 1] = 1.0;
+    x
+}
+
+fn mk_router(d: usize) -> ParetoRouter {
+    let mut r = ParetoRouter::new(RouterConfig::paretobandit(d, 6.6e-4, 1));
+    r.add_model("a", 0.10, 0.10, Prior::Cold);
+    r.add_model("b", 0.40, 1.60, Prior::Cold);
+    r.add_model("c", 1.25, 10.0, Prior::Cold);
+    r
+}
+
+#[test]
+#[ignore]
+fn probe_route_alloc_variant() {
+    // (a) production route (scratch buffers reused on the router)
+    let mut rng = Rng::new(2);
+    let d = 26;
+    let xs: Vec<Vec<f64>> = (0..256).map(|_| ctx(&mut rng, d)).collect();
+    let mut r = mk_router(d);
+    let mut i = 0usize;
+    let prod = bench_batched(200, 300, 64, || {
+        black_box(r.route(&xs[i & 255]).arm);
+        i += 1;
+    });
+    // (b) simulated alloc-per-call variant: same math, fresh Vecs each call
+    let r2 = mk_router(d);
+    let mut j = 0usize;
+    let alloc = bench_batched(200, 300, 64, || {
+        let x = &xs[j & 255];
+        let mut ids: Vec<usize> = Vec::new();
+        let mut scores: Vec<f64> = Vec::new();
+        for id in 0..3usize {
+            ids.push(id);
+            let arm = r2.arm(id).unwrap();
+            let infl = arm.staleness_inflation(0.997, 200.0, 1);
+            scores.push(arm.predict(x) + 0.01 * (arm.variance(x) * infl).sqrt());
+        }
+        black_box(scores.iter().cloned().fold(f64::MIN, f64::max));
+        j += 1;
+    });
+    println!("route (reused buffers): {:.0} ns | alloc-per-call variant: {:.0} ns",
+        prod.mean_ns, alloc.mean_ns);
+}
+
+#[test]
+#[ignore]
+fn probe_refresh_cost() {
+    // marginal cost of the every-512 exact refresh in update()
+    let d = 26;
+    let mut rng = Rng::new(3);
+    let xs: Vec<Vec<f64>> = (0..256).map(|_| ctx(&mut rng, d)).collect();
+    let mut r = mk_router(d);
+    let mut i = 0usize;
+    let upd = bench_batched(200, 300, 64, || {
+        r.feedback(i % 3, &xs[i & 255], 0.8, 5e-4);
+        i += 1;
+    });
+    // a standalone Cholesky refresh at d=26 for scale
+    let a = Mat::from_rows(d, paretobandit::util::prop::spd(&mut Rng::new(4), d, 1.0));
+    let chol = bench_batched(50, 100, 16, || {
+        black_box(paretobandit::linalg::Cholesky::factor(&a).unwrap().inverse());
+    });
+    println!("update mean: {:.0} ns | exact refresh: {:.0} ns (amortised /512 = {:.1} ns)",
+        upd.mean_ns, chol.mean_ns, chol.mean_ns / 512.0);
+}
+
+#[test]
+#[ignore]
+fn probe_pallas_scorer_vs_native() {
+    use paretobandit::runtime::{default_artifacts_dir, ArmBank, ArtifactMeta, Runtime, Scorer};
+    let dir = default_artifacts_dir();
+    if !dir.join("meta.json").exists() { return; }
+    let rt = Runtime::cpu().unwrap();
+    let meta = ArtifactMeta::load(&dir).unwrap();
+    let s = Scorer::load(&rt, &meta).unwrap();
+    let mut rng = Rng::new(5);
+    let d = 26;
+    let mut bank = ArmBank::empty(s.k_max, d);
+    for k in 0..3 {
+        let a = Mat::from_rows(d, paretobandit::util::prop::spd(&mut rng, d, 1.0));
+        bank.set_slot(k, &a.inverse_gauss_jordan().unwrap(),
+                      &vec![0.1; d], 1.0, 0.1 * k as f64);
+    }
+    let x = ctx(&mut rng, d);
+    let pjrt1 = bench_batched(20, 60, 4, || {
+        black_box(s.score_one(&bank, 0.05, &x).unwrap());
+    });
+    let xs16: Vec<Vec<f64>> = (0..16).map(|_| ctx(&mut rng, d)).collect();
+    let pjrt16 = bench_batched(20, 60, 4, || {
+        black_box(s.score_many(&bank, 0.05, &xs16).unwrap());
+    });
+    let mut r = mk_router(d);
+    let mut i = 0usize;
+    let xs: Vec<Vec<f64>> = (0..64).map(|_| ctx(&mut rng, d)).collect();
+    let native = bench_batched(100, 200, 64, || {
+        black_box(r.route(&xs[i & 63]).arm);
+        i += 1;
+    });
+    println!("PJRT scorer b=1: {:.1} us | b=16: {:.1} us ({:.2} us/row) | native route: {:.2} us",
+        pjrt1.mean_ns / 1e3, pjrt16.mean_ns / 1e3, pjrt16.mean_ns / 16.0 / 1e3,
+        native.mean_ns / 1e3);
+}

@@ -1,0 +1,47 @@
+use paretobandit::linalg::Mat;
+use paretobandit::util::bench::{bench_batched, black_box};
+use paretobandit::util::prop;
+use paretobandit::util::rng::Rng;
+
+fn quad_sym(m: &Mat, x: &[f64]) -> f64 {
+    // exploit symmetry: sum_i x_i^2 a_ii + 2 sum_{i<j} x_i x_j a_ij
+    let d = m.dim();
+    let mut diag = 0.0;
+    let mut off = 0.0;
+    for i in 0..d {
+        let row = m.row(i);
+        diag += x[i] * x[i] * row[i];
+        let mut s = 0.0;
+        for j in (i + 1)..d {
+            s += row[j] * x[j];
+        }
+        off += x[i] * s;
+    }
+    diag + 2.0 * off
+}
+
+#[test]
+#[ignore]
+fn quad_form_variants() {
+    let mut rng = Rng::new(1);
+    for d in [26usize, 385] {
+        let m = Mat::from_rows(d, prop::spd(&mut rng, d, 1.0));
+        let xs: Vec<Vec<f64>> = (0..64).map(|_| prop::vec_f64(&mut rng, d, 1.0)).collect();
+        let mut i = 0;
+        let full = bench_batched(100, 200, 64, || {
+            black_box(m.quad_form(&xs[i & 63]));
+            i += 1;
+        });
+        let mut j = 0;
+        let half = bench_batched(100, 200, 64, || {
+            black_box(quad_sym(&m, &xs[j & 63]));
+            j += 1;
+        });
+        // correctness
+        for x in &xs[..8] {
+            assert!((m.quad_form(x) - quad_sym(&m, x)).abs() < 1e-9 * d as f64);
+        }
+        println!("d={d}: full {:.0} ns | symmetric-half {:.0} ns ({:+.0}%)",
+            full.mean_ns, half.mean_ns, (half.mean_ns/full.mean_ns - 1.0)*100.0);
+    }
+}
