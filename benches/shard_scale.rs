@@ -1,0 +1,145 @@
+//! Bench harness: sharded-engine throughput scaling, 1 -> 8 worker shards.
+//!
+//! Drives the full TCP line-JSON path (parallel clients, route + feedback
+//! round trips) against engines with an increasing shard count.  The
+//! featurizer carries a calibrated synthetic compute load standing in for
+//! the ~1 ms PJRT embedding, so the bench shows what sharding actually
+//! buys: parallel featurization across worker threads under one shared
+//! budget ledger.
+//!
+//! Run: `cargo bench --bench shard_scale`.  Env overrides:
+//!   PB_SHARD_REQS       requests per configuration   (default 4000)
+//!   PB_SHARD_CLIENTS    concurrent client threads    (default 8)
+//!   PB_SHARD_WORK_ITERS featurizer work per request  (default 30000)
+//!   PB_SHARD_MAX        largest shard count          (default 8)
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use paretobandit::pacer::{PacerConfig, SharedPacer};
+use paretobandit::router::{ContextCache, ParetoRouter, Prior, RouterConfig};
+use paretobandit::server::{Client, EngineConfig, Metrics, ServerState, ShardedEngine};
+use paretobandit::sim::hash_features;
+use paretobandit::util::env_or;
+use paretobandit::util::json::Json;
+
+const D: usize = 26;
+const BUDGET: f64 = 6.6e-4;
+
+/// Synthetic embedding load: `iters` FNV rounds (~tens of µs at 30k),
+/// standing in for the PJRT embed that dominates the single-worker path.
+fn busy_work(text: &str, iters: u64) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in text.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    for i in 0..iters {
+        h ^= i;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn spawn_engine(workers: usize, work_iters: u64) -> ShardedEngine {
+    let ledger = Arc::new(SharedPacer::new(PacerConfig::new(BUDGET)));
+    let build = move |shard: usize| {
+        let mut router =
+            ParetoRouter::new(RouterConfig::paretobandit(D, BUDGET, 7 + shard as u64));
+        router.use_shared_pacer(ledger.clone());
+        router.add_model("llama", 0.10, 0.10, Prior::Cold);
+        router.add_model("mistral", 0.40, 1.60, Prior::Cold);
+        router.add_model("gemini", 1.25, 10.0, Prior::Cold);
+        ServerState::new(
+            router,
+            ContextCache::new(65536),
+            Box::new(move |t: &str| {
+                let salt = busy_work(t, work_iters);
+                let mut x = hash_features(t, D);
+                x[0] += (salt % 2) as f64 * 1e-12; // keep the work observable
+                Ok(x)
+            }),
+            Arc::new(Metrics::new()),
+        )
+    };
+    let cfg = EngineConfig::new(workers).merge_every(Duration::from_millis(50));
+    ShardedEngine::spawn("127.0.0.1:0", cfg, build).expect("bind")
+}
+
+/// Drive `reqs` route+feedback pairs through `clients` parallel
+/// connections; returns wall-clock seconds.
+fn drive(engine: &ShardedEngine, reqs: u64, clients: u64) -> f64 {
+    let addr = engine.addr;
+    let per = reqs / clients;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).expect("connect");
+            for i in 0..per {
+                let id = c * 10_000_000 + i;
+                let r = client
+                    .call(&Json::obj(vec![
+                        ("op", Json::Str("route".into())),
+                        ("id", Json::Num(id as f64)),
+                        ("prompt", Json::Str(format!("client {c} request {i} payload"))),
+                    ]))
+                    .expect("route");
+                assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{r:?}");
+                client
+                    .call(&Json::obj(vec![
+                        ("op", Json::Str("feedback".into())),
+                        ("id", Json::Num(id as f64)),
+                        ("reward", Json::Num(0.8)),
+                        ("cost", Json::Num(2e-4)),
+                    ]))
+                    .expect("feedback");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let reqs: u64 = env_or("PB_SHARD_REQS", 4_000);
+    let clients: u64 = env_or("PB_SHARD_CLIENTS", 8);
+    let work_iters: u64 = env_or("PB_SHARD_WORK_ITERS", 30_000);
+    let max_shards: usize = env_or("PB_SHARD_MAX", 8);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "[shard_scale] {reqs} reqs/config, {clients} clients, \
+         {work_iters} featurizer work iters, {cores} cores"
+    );
+
+    let mut shard_counts = vec![1usize];
+    while *shard_counts.last().unwrap() < max_shards {
+        shard_counts.push(shard_counts.last().unwrap() * 2);
+    }
+
+    let mut baseline = 0.0f64;
+    println!("shards |    wall s |     req/s | speedup vs 1 shard");
+    println!("-------+-----------+-----------+-------------------");
+    for &workers in &shard_counts {
+        let engine = spawn_engine(workers, work_iters);
+        // warmup: fill caches, spin up connection handlers
+        drive(&engine, (reqs / 10).max(clients), clients);
+        let wall = drive(&engine, reqs, clients);
+        let rps = reqs as f64 / wall;
+        if workers == 1 {
+            baseline = rps;
+        }
+        println!(
+            "{workers:>6} | {wall:>9.2} | {rps:>9.0} | {:>6.2}x",
+            rps / baseline
+        );
+        engine.stop();
+    }
+    println!(
+        "\nreq/s should improve monotonically 1 -> {} shards while the shared \
+         ledger keeps one global budget (metrics op reports per-shard counters).",
+        shard_counts.last().unwrap()
+    );
+}

@@ -18,8 +18,8 @@ use std::sync::Arc;
 
 use paretobandit::router::{ContextCache, ParetoRouter, Prior, RouterConfig};
 use paretobandit::runtime::{default_artifacts_dir, ArtifactMeta, Embedder, Runtime};
-use paretobandit::server::{Client, Metrics, Server, ServerState};
-use paretobandit::sim::{model_bank, Corpus, FlashScenario, Judge, World};
+use paretobandit::server::{Client, Featurize, Metrics, Server, ServerState};
+use paretobandit::sim::{hash_features, model_bank, Corpus, FlashScenario, Judge, World};
 use paretobandit::util::json::Json;
 
 const N_REQUESTS: usize = 1824;
@@ -41,13 +41,22 @@ fn main() {
     let metrics = Arc::new(Metrics::new());
     let metrics_server = metrics.clone();
     let server = Server::spawn("127.0.0.1:0", move || {
-        let rt = Runtime::cpu().expect("PJRT CPU client");
         let meta = ArtifactMeta::load(&default_artifacts_dir()).expect("artifacts");
-        let emb = Embedder::load(&rt, &meta).expect("embedder");
+        // PJRT featurizer when the runtime is available (`pjrt` feature +
+        // xla crate); hashed surrogate otherwise so the demo still runs
+        // the full serving loop in stub builds
+        let d = meta.d_ctx;
+        let featurizer: Box<dyn Featurize> =
+            match Runtime::cpu().and_then(|rt| Embedder::load(&rt, &meta)) {
+                Ok(emb) => Box::new(move |t: &str| emb.embed_one(t)),
+                Err(e) => {
+                    eprintln!("serve_demo: PJRT unavailable ({e:#}); using hashed surrogate");
+                    Box::new(move |t: &str| Ok(hash_features(t, d)))
+                }
+            };
         // cold-start serving: tabula-rasa hyperparameters (α=0.05) —
         // the harder condition; warmup priors only improve on this
-        let mut router =
-            ParetoRouter::new(RouterConfig::tabula_rasa(meta.d_ctx, Some(BUDGET), 42));
+        let mut router = ParetoRouter::new(RouterConfig::tabula_rasa(d, Some(BUDGET), 42));
         for (name, pi, po) in [
             ("llama-3.1-8b", 0.10, 0.10),
             ("mistral-large", 0.40, 1.60),
@@ -55,12 +64,7 @@ fn main() {
         ] {
             router.add_model(name, pi, po, Prior::Cold);
         }
-        ServerState {
-            router,
-            cache: ContextCache::new(65536),
-            featurizer: Box::new(move |t: &str| emb.embed_one(t)),
-            metrics: metrics_server,
-        }
+        ServerState::new(router, ContextCache::new(65536), featurizer, metrics_server)
     })
     .expect("bind");
     println!("server on {} — driving {N_REQUESTS} requests from the test split", server.addr);

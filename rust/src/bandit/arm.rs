@@ -6,7 +6,12 @@
 //! * batched geometric forgetting `A ← γ^dt A`, `b ← γ^dt b` (Eqs. 7–8)
 //! * cached `A⁻¹` maintained by O(d²) Sherman–Morrison rank-1 corrections,
 //!   with a scalar division for the decay step (`A⁻¹ ← A⁻¹ / γ^dt`)
-//! * periodic exact refresh (Cholesky) to bound floating-point drift.
+//! * periodic exact refresh (Cholesky) to bound floating-point drift
+//! * mergeable deltas for the sharded engine: each arm tracks the (ΔA, Δb)
+//!   it accumulated since the last broadcast cycle (decayed in lockstep
+//!   with A and b), so replicas can fold each other's observations with
+//!   [`ArmState::merge`] and apply queued batches with
+//!   [`ArmState::observe_batch`] in one exact refresh.
 
 use crate::linalg::{dot, Cholesky, Mat};
 
@@ -38,6 +43,14 @@ pub struct ArmState {
     pub n_obs: u64,
     updates_since_refresh: u32,
     scratch: Vec<f64>,
+    /// ΔA accumulated since the last [`ArmState::reset_data`] (the shard's
+    /// unsynced delta in a merge/broadcast cycle); decayed in lockstep with
+    /// `a` so `a = decayed base + data_a` always holds
+    data_a: Mat,
+    /// Δb counterpart of `data_a`
+    data_b: Vec<f64>,
+    /// observations inside the current delta
+    data_n: u64,
 }
 
 impl ArmState {
@@ -55,6 +68,9 @@ impl ArmState {
             n_obs: 0,
             updates_since_refresh: 0,
             scratch: vec![0.0; d],
+            data_a: Mat::zeros(d),
+            data_b: vec![0.0; d],
+            data_n: 0,
         }
     }
 
@@ -76,6 +92,9 @@ impl ArmState {
             n_obs: 0,
             updates_since_refresh: 0,
             scratch: vec![0.0; d],
+            data_a: Mat::zeros(d),
+            data_b: vec![0.0; d],
+            data_n: 0,
         })
     }
 
@@ -104,10 +123,7 @@ impl ArmState {
         let dt = t.saturating_sub(self.last_upd);
         if gamma < 1.0 && dt > 0 {
             let factor = gamma.powi(dt.min(i32::MAX as u64) as i32).max(MIN_DECAY);
-            self.a.scale(factor);
-            for v in &mut self.b {
-                *v *= factor;
-            }
+            self.decay_stats(factor);
             if factor <= 1e-3 {
                 // inverse would amplify round-off through /factor; the
                 // decayed A is near-singular, so refresh exactly instead.
@@ -119,18 +135,117 @@ impl ArmState {
         }
         // rank-1 absorb
         self.a.add_outer(1.0, x);
+        self.data_a.add_outer(1.0, x);
         for i in 0..self.d {
             self.b[i] += r * x[i];
+            self.data_b[i] += r * x[i];
         }
         self.a_inv.sherman_morrison_update(x, &mut self.scratch);
         // θ̂ = A⁻¹ b  (O(d²))
         self.a_inv.matvec(&self.b, &mut self.theta);
         self.last_upd = t;
         self.n_obs += 1;
+        self.data_n += 1;
         self.updates_since_refresh += 1;
         if self.updates_since_refresh >= REFRESH_EVERY {
             self.refresh();
         }
+    }
+
+    /// Apply a decay factor to every sufficient statistic (A, b and the
+    /// merge delta, which must shrink in lockstep).
+    fn decay_stats(&mut self, factor: f64) {
+        self.a.scale(factor);
+        self.data_a.scale(factor);
+        for v in &mut self.b {
+            *v *= factor;
+        }
+        for v in &mut self.data_b {
+            *v *= factor;
+        }
+    }
+
+    /// Absorb a batch of observations in one step: a single decay to `t`,
+    /// the summed rank-1 updates, and ONE exact Cholesky refresh — instead
+    /// of per-event Sherman–Morrison corrections plus θ̂ recomputation.
+    /// Within-batch arrival-time differences are collapsed onto `t` (the
+    /// batched-forgetting approximation of Eqs. 7–8; the error is
+    /// O(1 - γ^P) for a merge-cycle length of P steps).
+    pub fn observe_batch(&mut self, obs: &[(&[f64], f64)], gamma: f64, t: u64) {
+        if obs.is_empty() {
+            return;
+        }
+        let dt = t.saturating_sub(self.last_upd);
+        if gamma < 1.0 && dt > 0 {
+            let factor = gamma.powi(dt.min(i32::MAX as u64) as i32).max(MIN_DECAY);
+            self.decay_stats(factor);
+            if factor <= 1e-3 {
+                self.a.add_diag(NUMERIC_RIDGE);
+            }
+        }
+        for &(x, r) in obs {
+            debug_assert_eq!(x.len(), self.d);
+            self.a.add_outer(1.0, x);
+            self.data_a.add_outer(1.0, x);
+            for i in 0..self.d {
+                self.b[i] += r * x[i];
+                self.data_b[i] += r * x[i];
+            }
+        }
+        self.n_obs += obs.len() as u64;
+        self.data_n += obs.len() as u64;
+        self.last_upd = t;
+        self.refresh();
+    }
+
+    /// Fold another replica's since-last-reset observation delta into this
+    /// posterior (the mergeable-statistics half of the sharded engine):
+    /// `A += decay·ΔA_other`, `b += decay·Δb_other`, then an exact refresh.
+    /// `decay` down-weights a stale replica (pass γ^Δt, or 1.0 when merge
+    /// cycles are short).  The caller must eventually `reset_data` on
+    /// `other` (the engine does so on adopt) so a delta is never folded
+    /// twice.
+    pub fn merge(&mut self, other: &ArmState, decay: f64) {
+        assert_eq!(self.d, other.d, "merge: dimension mismatch");
+        debug_assert!(decay >= 0.0, "merge: negative decay");
+        if other.data_n == 0 {
+            return;
+        }
+        self.a.add_scaled(decay, &other.data_a);
+        for i in 0..self.d {
+            self.b[i] += decay * other.data_b[i];
+        }
+        self.n_obs += other.data_n;
+        self.last_upd = self.last_upd.max(other.last_upd);
+        self.last_play = self.last_play.max(other.last_play);
+        self.refresh();
+    }
+
+    /// Observations inside the current merge delta.
+    #[inline]
+    pub fn delta_obs(&self) -> u64 {
+        self.data_n
+    }
+
+    /// Clear the merge delta — called once this replica's delta has been
+    /// folded into the global posterior and the global state adopted.
+    pub fn reset_data(&mut self) {
+        self.data_a.scale(0.0);
+        for v in &mut self.data_b {
+            *v = 0.0;
+        }
+        self.data_n = 0;
+    }
+
+    /// Re-anchor the forgetting clock to local step `t`.  Shard-local step
+    /// counters are not comparable across shards, so when an adopt brings
+    /// in statistics another shard refreshed, the router rebases them onto
+    /// its own clock ("fresh as of now"); arms with no cross-shard news
+    /// keep their local clock so staleness inflation still accrues (see
+    /// `ParetoRouter::adopt_arms`).
+    pub fn rebase(&mut self, t: u64) {
+        self.last_upd = t;
+        self.last_play = t;
     }
 
     /// Exact inverse + θ̂ recomputation from A, b.
@@ -305,6 +420,133 @@ mod tests {
         arm.last_play = 99;
         let infl = arm.staleness_inflation(0.997, 200.0, 100);
         assert!(infl < 1.01, "recent play must suppress inflation, got {infl}");
+    }
+
+    #[test]
+    fn merge_of_two_replicas_equals_single_stream() {
+        // two shards observe disjoint halves of a stream; folding one
+        // delta into the other must equal one arm that saw everything
+        let d = 5;
+        let mut rng = Rng::new(21);
+        let mut shard_a = ArmState::cold(d, 1.0, 0);
+        let mut shard_b = ArmState::cold(d, 1.0, 0);
+        let mut single = ArmState::cold(d, 1.0, 0);
+        for t in 1..=200u64 {
+            let x = ctx(&mut rng, d);
+            let r = 0.3 + 0.4 * (t % 2) as f64;
+            single.observe(&x, r, 1.0, t);
+            if t % 2 == 0 {
+                shard_a.observe(&x, r, 1.0, t);
+            } else {
+                shard_b.observe(&x, r, 1.0, t);
+            }
+        }
+        shard_a.merge(&shard_b, 1.0);
+        // merge refreshes exactly; put the reference on the same footing
+        // (its a_inv/θ̂ otherwise carry Sherman–Morrison cache drift)
+        single.refresh();
+        assert_eq!(shard_a.n_obs, 200);
+        for i in 0..d {
+            assert!(
+                (shard_a.theta[i] - single.theta[i]).abs() < 1e-8,
+                "theta[{i}]: merged {} vs single {}",
+                shard_a.theta[i],
+                single.theta[i]
+            );
+        }
+        let x = ctx(&mut rng, d);
+        assert!((shard_a.variance(&x) - single.variance(&x)).abs() < 1e-8);
+    }
+
+    #[test]
+    fn merge_folds_only_the_unsynced_delta() {
+        let d = 4;
+        let mut rng = Rng::new(22);
+        let mut base = ArmState::cold(d, 1.0, 0);
+        let mut other = ArmState::cold(d, 1.0, 0);
+        for t in 1..=50u64 {
+            let x = ctx(&mut rng, d);
+            other.observe(&x, 0.6, 1.0, t);
+        }
+        other.reset_data();
+        assert_eq!(other.delta_obs(), 0);
+        let before = base.theta.clone();
+        base.merge(&other, 1.0);
+        // nothing unsynced -> no-op
+        assert_eq!(base.n_obs, 0);
+        assert_eq!(base.theta, before);
+        // new observations after the reset are folded
+        let x = ctx(&mut rng, d);
+        other.observe(&x, 0.9, 1.0, 51);
+        assert_eq!(other.delta_obs(), 1);
+        base.merge(&other, 1.0);
+        assert_eq!(base.n_obs, 1);
+        let mut reference = ArmState::cold(d, 1.0, 0);
+        reference.observe(&x, 0.9, 1.0, 51);
+        for i in 0..d {
+            assert!((base.theta[i] - reference.theta[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn merge_decay_downweights_stale_deltas() {
+        let d = 3;
+        let x = vec![0.5, -0.25, 1.0];
+        let mut fresh = ArmState::cold(d, 1.0, 0);
+        let mut stale = ArmState::cold(d, 1.0, 0);
+        stale.observe(&x, 1.0, 1.0, 1);
+        let mut full = fresh.clone();
+        full.merge(&stale, 1.0);
+        fresh.merge(&stale, 0.25);
+        // down-weighted fold moves θ̂ strictly less than the full fold
+        assert!(fresh.predict(&x) > 0.0);
+        assert!(fresh.predict(&x) < full.predict(&x));
+    }
+
+    #[test]
+    fn observe_batch_matches_sequential_observes() {
+        let d = 6;
+        let mut rng = Rng::new(23);
+        let gamma = 0.997;
+        let mut seq = ArmState::cold(d, 1.0, 0);
+        let mut bat = ArmState::cold(d, 1.0, 0);
+        for t in 1..=40u64 {
+            let x = ctx(&mut rng, d);
+            seq.observe(&x, 0.7, gamma, t);
+            bat.observe(&x, 0.7, gamma, t);
+        }
+        // queue 16 observations, all applied at t=50
+        let obs: Vec<(Vec<f64>, f64)> =
+            (0..16).map(|i| (ctx(&mut rng, d), 0.2 + 0.04 * i as f64)).collect();
+        for (x, r) in &obs {
+            seq.observe(x, *r, gamma, 50);
+        }
+        let refs: Vec<(&[f64], f64)> = obs.iter().map(|(x, r)| (x.as_slice(), *r)).collect();
+        bat.observe_batch(&refs, gamma, 50);
+        // observe_batch ends on an exact refresh; do the same on the
+        // sequential arm so the comparison has no SM cache drift in it
+        seq.refresh();
+        assert_eq!(seq.n_obs, bat.n_obs);
+        assert_eq!(seq.last_upd, bat.last_upd);
+        for i in 0..d {
+            assert!(
+                (seq.theta[i] - bat.theta[i]).abs() < 1e-7,
+                "theta[{i}]: seq {} vs batch {}",
+                seq.theta[i],
+                bat.theta[i]
+            );
+        }
+    }
+
+    #[test]
+    fn rebase_suppresses_cross_shard_staleness() {
+        let mut arm = ArmState::cold(3, 1.0, 0);
+        arm.last_upd = 9_000; // timestamp from a faster shard's clock
+        arm.last_play = 9_000;
+        arm.rebase(10);
+        assert_eq!(arm.last_upd, 10);
+        // fresh-as-of-now: no inflation at the local clock
+        assert_eq!(arm.staleness_inflation(0.997, 200.0, 10), 1.0);
     }
 
     #[test]

@@ -15,8 +15,20 @@
 //! Python never runs on the request path: `runtime` loads the artifacts via
 //! the PJRT C API and executes them from Rust.
 //!
+//! Serving runs either through the single-worker reference server
+//! (`server::Server`) or the sharded production engine
+//! (`server::ShardedEngine`): N router replicas behind round-robin
+//! dispatch, one shared atomic budget ledger (`pacer::SharedPacer`) and a
+//! periodic posterior merge/broadcast cycle built on mergeable LinUCB
+//! sufficient statistics (`bandit::ArmState::merge`).
+//!
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+// Lint policy (clippy runs with -D warnings in CI): index loops mirror the
+// paper's linear-algebra notation throughout the numeric core, and Json's
+// `to_string` is the wire format writer, not a Display shortcut.
+#![allow(clippy::needless_range_loop, clippy::inherent_to_string)]
 
 pub mod bandit;
 pub mod exp;

@@ -3,19 +3,22 @@
 //!
 //! ```text
 //! paretobandit serve   [--addr 127.0.0.1:7878] [--budget 6.6e-4]
+//!                      [--workers N] [--merge-ms MS]
 //! paretobandit exp1..exp9 | hyperopt | latency | all  [--seeds 20]
 //! ```
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use paretobandit::exp::{
     exp1_stationary, exp2_costdrift, exp3_degradation, exp4_onboarding, exp5_warmup,
     exp6_mismatch, exp7_judges, exp8_recovery, exp9_costheuristic, hyperopt, latency, ExpEnv,
 };
+use paretobandit::pacer::{PacerConfig, SharedPacer};
 use paretobandit::router::{ContextCache, ParetoRouter, Prior, RouterConfig};
 use paretobandit::runtime::{default_artifacts_dir, ArtifactMeta, Embedder, Runtime};
-use paretobandit::server::{Metrics, Server, ServerState};
-use paretobandit::sim::FlashScenario;
+use paretobandit::server::{EngineConfig, Featurize, Metrics, ServerState, ShardedEngine};
+use paretobandit::sim::{hash_features, FlashScenario};
 
 fn arg_val(args: &[String], key: &str) -> Option<String> {
     args.iter()
@@ -115,18 +118,69 @@ fn with_env<F: FnOnce(&ExpEnv)>(f: F) {
     f(&env);
 }
 
+/// Context dimensionality: from the artifacts when present, else the
+/// paper's 26 (25 whitened dims + bias) for the surrogate featurizer.
+fn serving_d_ctx() -> usize {
+    let dir = default_artifacts_dir();
+    if dir.join("meta.json").exists() {
+        if let Ok(meta) = ArtifactMeta::load(&dir) {
+            return meta.d_ctx;
+        }
+    }
+    26
+}
+
+/// PJRT featurizer (per shard thread — PJRT handles are not `Send`).
+fn pjrt_featurizer(d: usize) -> anyhow::Result<Box<dyn Featurize>> {
+    let rt = Runtime::cpu()?;
+    let meta = ArtifactMeta::load(&default_artifacts_dir())?;
+    anyhow::ensure!(meta.d_ctx == d, "artifact d_ctx drifted");
+    let emb = Embedder::load(&rt, &meta)?;
+    Ok(Box::new(move |t: &str| emb.embed_one(t)))
+}
+
 fn serve(args: &[String]) {
     let addr = arg_val(args, "--addr").unwrap_or_else(|| "127.0.0.1:7878".to_string());
     let budget: f64 = arg_val(args, "--budget")
         .and_then(|s| s.parse().ok())
         .unwrap_or(6.6e-4);
-    let build = move || {
-        // built on the worker thread: PJRT handles are not Send
-        let dir = default_artifacts_dir();
-        let rt = Runtime::cpu().expect("PJRT CPU client");
-        let meta = ArtifactMeta::load(&dir).expect("artifacts (run `make artifacts`)");
-        let emb = Embedder::load(&rt, &meta).expect("embedder");
-        let mut router = ParetoRouter::new(RouterConfig::paretobandit(meta.d_ctx, budget, 42));
+    let workers: usize = arg_val(args, "--workers")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get().min(8)).unwrap_or(1)
+        })
+        .max(1);
+    let merge_ms: u64 = arg_val(args, "--merge-ms")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50);
+
+    // one global ledger: the $/request ceiling binds across all shards
+    let ledger = Arc::new(SharedPacer::new(PacerConfig::new(budget)));
+    let d = serving_d_ctx();
+    // probe artifacts once at startup; per-shard builders stay quiet on
+    // the expected (surrogate) path instead of warning N times
+    let artifacts_present = default_artifacts_dir().join("meta.json").exists();
+    if !artifacts_present {
+        eprintln!("featurizer: no AOT artifacts; serving with the hashed surrogate (d={d})");
+    }
+    let build = move |shard: usize| {
+        let featurizer: Box<dyn Featurize> = if artifacts_present {
+            match pjrt_featurizer(d) {
+                Ok(f) => f,
+                Err(e) => {
+                    eprintln!(
+                        "featurizer: shard {shard}: PJRT unavailable ({e:#}); \
+                         using hashed surrogate"
+                    );
+                    Box::new(move |t: &str| Ok(hash_features(t, d)))
+                }
+            }
+        } else {
+            Box::new(move |t: &str| Ok(hash_features(t, d)))
+        };
+        let mut router =
+            ParetoRouter::new(RouterConfig::paretobandit(d, budget, 42 + shard as u64));
+        router.use_shared_pacer(ledger.clone());
         // Table-1 portfolio with heuristic priors
         for (name, pi, po) in [
             ("llama-3.1-8b", 0.10, 0.10),
@@ -135,20 +189,22 @@ fn serve(args: &[String]) {
         ] {
             router.add_model(name, pi, po, Prior::Heuristic { n_eff: 25.0, r0: 0.7 });
         }
-        ServerState {
+        ServerState::new(
             router,
-            cache: ContextCache::new(65536),
-            featurizer: Box::new(move |t: &str| emb.embed_one(t)),
-            metrics: Arc::new(Metrics::new()),
-        }
+            ContextCache::new(65536),
+            featurizer,
+            Arc::new(Metrics::new()),
+        )
     };
-    let server = Server::spawn(&addr, build).expect("bind");
+    let cfg = EngineConfig::new(workers).merge_every(Duration::from_millis(merge_ms.max(1)));
+    let engine = ShardedEngine::spawn(&addr, cfg, build).expect("bind");
     println!(
-        "paretobandit serving on {} (budget ${budget}/req); line-JSON protocol; op=shutdown to stop",
-        server.addr
+        "paretobandit serving on {} ({workers} shard(s), merge every {merge_ms} ms, \
+         budget ${budget}/req); line-JSON protocol; op=shutdown to stop",
+        engine.addr
     );
-    // park until the worker shuts down
-    loop {
-        std::thread::sleep(std::time::Duration::from_millis(200));
+    while !engine.is_shutdown() {
+        std::thread::sleep(Duration::from_millis(200));
     }
+    engine.stop();
 }

@@ -1,5 +1,14 @@
 //! Budget pacing: log-normalised cost, EMA cost signal, projected
 //! dual-ascent multiplier and the hard candidate ceiling (paper §3.2).
+//!
+//! [`BudgetPacer`] is the paper's single-stream controller; [`SharedPacer`]
+//! lifts it to a deployment-wide atomic ledger so N worker shards enforce
+//! one global $/request ceiling, and [`PacerHandle`] lets a router hold
+//! either interchangeably.
+
+mod shared;
+
+pub use shared::{PacerHandle, SharedPacer};
 
 /// Fixed market bounds for the log-normalised unit cost (Eq. 6), in dollars
 /// per 1k tokens.

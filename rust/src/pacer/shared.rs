@@ -1,0 +1,235 @@
+//! Deployment-wide budget ledger shared by all worker shards.
+//!
+//! The paper's pacer (Eqs. 3–4) is a sequential EMA + dual-ascent update.
+//! Sharding the router must NOT shard the budget: the $/request ceiling is
+//! an operator constraint on the whole deployment, so every shard's
+//! realised costs flow into one [`SharedPacer`] and every shard reads the
+//! same dual variable λ.  The O(1) dual update runs under a mutex; λ is
+//! mirrored into an atomic so the read on every routing decision is
+//! lock-free.  The ledger additionally keeps an exact atomic account of
+//! total realised spend, which the compliance tests audit against the
+//! ceiling.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::{BudgetPacer, PacerConfig};
+
+/// Thread-safe budget pacer + spend ledger (see module docs).
+#[derive(Debug)]
+pub struct SharedPacer {
+    inner: Mutex<BudgetPacer>,
+    /// f64 bits of the current λ (lock-free read path)
+    lambda_bits: AtomicU64,
+    /// f64 bits of total realised spend (CAS accumulation)
+    spend_bits: AtomicU64,
+    /// number of realised-cost observations
+    n: AtomicU64,
+}
+
+impl SharedPacer {
+    pub fn new(cfg: PacerConfig) -> SharedPacer {
+        SharedPacer {
+            inner: Mutex::new(BudgetPacer::new(cfg)),
+            lambda_bits: AtomicU64::new(0f64.to_bits()),
+            spend_bits: AtomicU64::new(0f64.to_bits()),
+            n: AtomicU64::new(0),
+        }
+    }
+
+    /// Current dual variable λ_t (lock-free).
+    #[inline]
+    pub fn lambda(&self) -> f64 {
+        f64::from_bits(self.lambda_bits.load(Ordering::Acquire))
+    }
+
+    pub fn budget(&self) -> f64 {
+        self.inner.lock().unwrap().budget()
+    }
+
+    pub fn cbar(&self) -> f64 {
+        self.inner.lock().unwrap().cbar()
+    }
+
+    /// Operator changes the ceiling at runtime (λ state is preserved).
+    pub fn set_budget(&self, budget: f64) {
+        self.inner.lock().unwrap().set_budget(budget);
+    }
+
+    /// Dual update on a realised request cost, from any thread.
+    pub fn observe_cost(&self, cost: f64) {
+        {
+            let mut p = self.inner.lock().unwrap();
+            p.observe_cost(cost);
+            self.lambda_bits.store(p.lambda().to_bits(), Ordering::Release);
+        }
+        // ledger accumulation stays outside the pacer lock
+        let mut cur = self.spend_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + cost).to_bits();
+            match self
+                .spend_bits
+                .compare_exchange_weak(cur, next, Ordering::AcqRel, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+        self.n.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Total realised spend across all shards.
+    pub fn total_spend(&self) -> f64 {
+        f64::from_bits(self.spend_bits.load(Ordering::Acquire))
+    }
+
+    /// Number of cost observations absorbed.
+    pub fn observations(&self) -> u64 {
+        self.n.load(Ordering::Acquire)
+    }
+
+    /// Global mean realised $/request (0 before any observation).
+    pub fn mean_cost(&self) -> f64 {
+        let n = self.observations();
+        if n == 0 {
+            0.0
+        } else {
+            self.total_spend() / n as f64
+        }
+    }
+
+    /// Hard-ceiling price bound, identical to [`BudgetPacer::price_ceiling`]
+    /// but computed from the lock-free λ mirror.
+    #[inline]
+    pub fn price_ceiling(&self, c_max: f64) -> f64 {
+        let l = self.lambda();
+        if l > 0.0 {
+            c_max / (1.0 + l)
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// A router's view of its budget controller: either a private
+/// [`BudgetPacer`] (single-worker deployments, experiments) or a handle on
+/// the deployment-wide [`SharedPacer`] ledger (sharded engine).
+#[derive(Clone)]
+pub enum PacerHandle {
+    Local(BudgetPacer),
+    Shared(Arc<SharedPacer>),
+}
+
+impl PacerHandle {
+    #[inline]
+    pub fn lambda(&self) -> f64 {
+        match self {
+            PacerHandle::Local(p) => p.lambda(),
+            PacerHandle::Shared(s) => s.lambda(),
+        }
+    }
+
+    pub fn budget(&self) -> f64 {
+        match self {
+            PacerHandle::Local(p) => p.budget(),
+            PacerHandle::Shared(s) => s.budget(),
+        }
+    }
+
+    pub fn cbar(&self) -> f64 {
+        match self {
+            PacerHandle::Local(p) => p.cbar(),
+            PacerHandle::Shared(s) => s.cbar(),
+        }
+    }
+
+    pub fn set_budget(&mut self, budget: f64) {
+        match self {
+            PacerHandle::Local(p) => p.set_budget(budget),
+            PacerHandle::Shared(s) => s.set_budget(budget),
+        }
+    }
+
+    pub fn observe_cost(&mut self, cost: f64) {
+        match self {
+            PacerHandle::Local(p) => p.observe_cost(cost),
+            PacerHandle::Shared(s) => s.observe_cost(cost),
+        }
+    }
+
+    #[inline]
+    pub fn price_ceiling(&self, c_max: f64) -> f64 {
+        match self {
+            PacerHandle::Local(p) => p.price_ceiling(c_max),
+            PacerHandle::Shared(s) => s.price_ceiling(c_max),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_local_pacer_on_a_serial_stream() {
+        let cfg = PacerConfig::new(3e-4);
+        let shared = SharedPacer::new(cfg);
+        let mut local = BudgetPacer::new(cfg);
+        let costs = [1e-4, 9e-4, 2e-4, 5e-4, 5e-4, 1e-5, 7e-4];
+        for (i, &c) in costs.iter().cycle().take(500).enumerate() {
+            let c = c * (1.0 + 0.1 * (i % 3) as f64);
+            shared.observe_cost(c);
+            local.observe_cost(c);
+            assert!((shared.lambda() - local.lambda()).abs() < 1e-15);
+        }
+        assert!((shared.cbar() - local.cbar()).abs() < 1e-15);
+        assert_eq!(shared.observations(), 500);
+    }
+
+    #[test]
+    fn ledger_accounts_every_cost_across_threads() {
+        let shared = Arc::new(SharedPacer::new(PacerConfig::new(1e-3)));
+        let threads = 8;
+        let per = 5_000u64;
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let s = shared.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut spent = 0.0;
+                for i in 0..per {
+                    let c = 1e-4 * (1.0 + ((t * per + i) % 7) as f64);
+                    s.observe_cost(c);
+                    spent += c;
+                }
+                spent
+            }));
+        }
+        let expected: f64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(shared.observations(), threads * per);
+        let got = shared.total_spend();
+        assert!(
+            (got - expected).abs() <= expected * 1e-9,
+            "ledger {got} vs threads {expected}"
+        );
+        let lam = shared.lambda();
+        assert!((0.0..=5.0).contains(&lam) && lam.is_finite());
+    }
+
+    #[test]
+    fn handle_dispatches_to_both_backends() {
+        let cfg = PacerConfig::new(2e-4);
+        let mut local = PacerHandle::Local(BudgetPacer::new(cfg));
+        let mut shared = PacerHandle::Shared(Arc::new(SharedPacer::new(cfg)));
+        for _ in 0..300 {
+            local.observe_cost(2e-3);
+            shared.observe_cost(2e-3);
+        }
+        assert!((local.lambda() - shared.lambda()).abs() < 1e-15);
+        assert!(local.lambda() > 0.5);
+        assert!(local.price_ceiling(1.0) < 1.0);
+        assert_eq!(local.budget(), 2e-4);
+        local.set_budget(4e-4);
+        shared.set_budget(4e-4);
+        assert_eq!(local.budget(), shared.budget());
+    }
+}

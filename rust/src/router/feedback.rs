@@ -5,6 +5,13 @@
 //! re-encoding the prompt.  Two backends: in-memory (bounded FIFO) and an
 //! append-only JSON-lines file (the paper's SQLite role — see DESIGN.md §6
 //! substitutions).
+//!
+//! For the sharded engine, [`FeedbackQueue`] additionally buffers reward
+//! observations between merge cycles so they can be applied in one batched
+//! Cholesky refresh per arm ([`crate::router::ParetoRouter::feedback_batch`])
+//! instead of per-event rank-1 updates.  Costs are never queued: they hit
+//! the shared budget ledger at arrival time, because budget enforcement
+//! must stay realtime even when posterior updates are batched.
 
 use std::collections::HashMap;
 use std::collections::VecDeque;
@@ -70,6 +77,81 @@ impl ContextCache {
 
     pub fn evicted(&self) -> u64 {
         self.evicted
+    }
+}
+
+/// One reward observation awaiting batched application (sharded mode).
+#[derive(Clone, Debug)]
+pub struct FeedbackEvent {
+    pub arm: usize,
+    pub context: Vec<f64>,
+    pub reward: f64,
+}
+
+/// Default [`FeedbackQueue`] bound, matching the serve-path context cache.
+const DEFAULT_QUEUE_CAP: usize = 1 << 16;
+
+/// Reward observations queued between merge cycles (see module docs).
+///
+/// Bounded like every other serving-path buffer: if merge cycles stall
+/// (e.g. a wedged sibling shard holding up the merger) the oldest rewards
+/// are shed rather than growing memory without limit; sheds are counted.
+#[derive(Debug)]
+pub struct FeedbackQueue {
+    events: VecDeque<FeedbackEvent>,
+    capacity: usize,
+    dropped: u64,
+}
+
+impl Default for FeedbackQueue {
+    fn default() -> Self {
+        FeedbackQueue::new()
+    }
+}
+
+impl FeedbackQueue {
+    pub fn new() -> FeedbackQueue {
+        FeedbackQueue::with_capacity(DEFAULT_QUEUE_CAP)
+    }
+
+    pub fn with_capacity(capacity: usize) -> FeedbackQueue {
+        FeedbackQueue {
+            events: VecDeque::new(),
+            capacity: capacity.max(1),
+            dropped: 0,
+        }
+    }
+
+    pub fn push(&mut self, ev: FeedbackEvent) {
+        self.events.push_back(ev);
+        while self.events.len() > self.capacity {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events shed because the queue hit its bound.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Drain the shed counter (the caller accounts it, e.g. into serving
+    /// metrics, so queue overflow is never silent).
+    pub fn take_dropped(&mut self) -> u64 {
+        std::mem::take(&mut self.dropped)
+    }
+
+    /// Take all queued events, leaving the queue empty (and reusable).
+    pub fn drain(&mut self) -> Vec<FeedbackEvent> {
+        std::mem::take(&mut self.events).into()
     }
 }
 
@@ -152,6 +234,48 @@ impl FileStore {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn queue_push_drain_and_reuse() {
+        let mut q = FeedbackQueue::new();
+        assert!(q.is_empty());
+        for i in 0..5usize {
+            q.push(FeedbackEvent {
+                arm: i % 2,
+                context: vec![i as f64, 1.0],
+                reward: 0.1 * i as f64,
+            });
+        }
+        assert_eq!(q.len(), 5);
+        let evs = q.drain();
+        assert_eq!(evs.len(), 5);
+        assert_eq!(evs[3].arm, 1);
+        assert!(q.is_empty(), "drain must leave the queue reusable");
+        q.push(FeedbackEvent {
+            arm: 0,
+            context: vec![],
+            reward: 1.0,
+        });
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.dropped(), 0);
+    }
+
+    #[test]
+    fn queue_sheds_oldest_at_capacity() {
+        let mut q = FeedbackQueue::with_capacity(3);
+        for i in 0..5usize {
+            q.push(FeedbackEvent {
+                arm: i,
+                context: vec![],
+                reward: 0.0,
+            });
+        }
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.dropped(), 2);
+        let evs = q.drain();
+        assert_eq!(evs.first().unwrap().arm, 2, "oldest events are shed first");
+        assert_eq!(evs.last().unwrap().arm, 4);
+    }
 
     #[test]
     fn cache_roundtrip_and_claim_once() {

@@ -11,7 +11,7 @@ mod registry;
 
 pub use config::{Exploration, RouterConfig};
 pub use floor::{FloorConfig, QualityFloorRouter};
-pub use feedback::{ContextCache, FileStore, Pending};
+pub use feedback::{ContextCache, FeedbackEvent, FeedbackQueue, FileStore, Pending};
 pub use pareto::{ParetoRouter, Prior, RouteDecision};
 pub use policy::Policy;
 pub use registry::{ModelEntry, Registry};

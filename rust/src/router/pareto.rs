@@ -4,9 +4,12 @@
 //! with two-layer enforcement (§3.2), warmup priors (§3.4) and the hot-swap
 //! registry with forced-exploration burn-in (§3.6).
 
+use std::sync::Arc;
+
 use crate::bandit::{heuristic_prior, ArmState, OfflineStats};
-use crate::pacer::BudgetPacer;
+use crate::pacer::{BudgetPacer, PacerHandle, SharedPacer};
 use crate::router::config::RouterConfig;
+use crate::router::feedback::FeedbackEvent;
 use crate::router::policy::Policy;
 use crate::router::registry::Registry;
 use crate::util::rng::Rng;
@@ -43,7 +46,7 @@ pub struct ParetoRouter {
     registry: Registry,
     arms: Vec<Option<ArmState>>, // slot-aligned with registry
     burnin_left: Vec<u32>,
-    pacer: Option<BudgetPacer>,
+    pacer: Option<PacerHandle>,
     t: u64,
     rng: Rng,
     // scratch for scoring without per-request allocation
@@ -55,7 +58,7 @@ pub struct ParetoRouter {
 impl ParetoRouter {
     pub fn new(cfg: RouterConfig) -> ParetoRouter {
         ParetoRouter {
-            pacer: cfg.pacer.map(BudgetPacer::new),
+            pacer: cfg.pacer.map(|p| PacerHandle::Local(BudgetPacer::new(p))),
             rng: Rng::new(cfg.seed),
             cfg,
             registry: Registry::new(),
@@ -85,8 +88,27 @@ impl ParetoRouter {
         self.t
     }
 
-    pub fn pacer(&self) -> Option<&BudgetPacer> {
+    pub fn pacer(&self) -> Option<&PacerHandle> {
         self.pacer.as_ref()
+    }
+
+    /// Replace the private pacer with a handle on the deployment-wide
+    /// ledger, so this replica enforces the *global* $/request ceiling
+    /// (sharded engine).  Any λ state of the previous pacer is discarded —
+    /// call before serving traffic.
+    pub fn use_shared_pacer(&mut self, ledger: Arc<SharedPacer>) {
+        self.pacer = Some(PacerHandle::Shared(ledger));
+    }
+
+    /// Runtime budget change; `false` when no pacer is configured.
+    pub fn set_budget(&mut self, budget: f64) -> bool {
+        match self.pacer.as_mut() {
+            Some(p) => {
+                p.set_budget(budget);
+                true
+            }
+            None => false,
+        }
     }
 
     /// Register a model (hot-swap `add_arm`, §3.6).  Burn-in pulls are
@@ -225,8 +247,81 @@ impl ParetoRouter {
         if let Some(Some(a)) = self.arms.get_mut(arm) {
             a.observe(x, reward, self.cfg.gamma, self.t);
         }
+        self.observe_cost(cost);
+    }
+
+    /// Pacer dual update alone — used when the reward half of feedback is
+    /// queued for a batched merge cycle but budget control must be
+    /// realtime.
+    pub fn observe_cost(&mut self, cost: f64) {
         if let Some(p) = self.pacer.as_mut() {
             p.observe_cost(cost);
+        }
+    }
+
+    /// Apply a drained feedback queue in one pass: observations are grouped
+    /// per arm and each touched arm does a single decay + summed rank-1
+    /// updates + ONE exact Cholesky refresh ([`ArmState::observe_batch`]),
+    /// instead of per-event Sherman–Morrison corrections.  Costs are NOT
+    /// handled here — they were paid to the pacer at arrival time.
+    pub fn feedback_batch(&mut self, events: &[FeedbackEvent]) {
+        if events.is_empty() {
+            return;
+        }
+        let n = self.arms.len();
+        let mut per_arm: Vec<Vec<(&[f64], f64)>> = vec![Vec::new(); n];
+        for ev in events {
+            if ev.arm < n && ev.context.len() == self.cfg.d {
+                per_arm[ev.arm].push((ev.context.as_slice(), ev.reward));
+            }
+        }
+        let gamma = self.cfg.gamma;
+        let t = self.t;
+        for (id, obs) in per_arm.iter().enumerate() {
+            if obs.is_empty() {
+                continue;
+            }
+            if let Some(Some(a)) = self.arms.get_mut(id) {
+                a.observe_batch(obs, gamma, t);
+            }
+        }
+    }
+
+    /// Snapshot every arm replica (slot-aligned), including merge deltas —
+    /// what a shard hands the merge cycle.
+    pub fn export_arms(&self) -> Vec<Option<ArmState>> {
+        self.arms.clone()
+    }
+
+    /// Replace local arm posteriors with broadcast global ones, clearing
+    /// each merge delta so the next cycle folds only post-adopt
+    /// observations.  Clock handling (shard step clocks are not
+    /// comparable, so the global timestamps are meaningless here):
+    ///
+    /// * the global posterior gained observations this shard hasn't seen
+    ///   (`n_obs` grew beyond the local count) → rebase onto the local
+    ///   "now": the merged stats are fresh as of this adopt;
+    /// * no cross-shard news → KEEP the local clock.  A globally idle arm
+    ///   must keep accruing staleness inflation and pending γ^dt decay
+    ///   exactly as in the single-worker router; rebasing it every cycle
+    ///   would permanently suppress re-exploration of degraded models.
+    ///
+    /// Slots missing on either side (hot-swap races are excluded by the
+    /// engine's serialized admin path) are left untouched.
+    pub fn adopt_arms(&mut self, global: &[Option<ArmState>]) {
+        let t = self.t;
+        for (slot, incoming) in self.arms.iter_mut().zip(global.iter()) {
+            if let (Some(local), Some(g)) = (slot.as_mut(), incoming.as_ref()) {
+                let mut adopted = g.clone();
+                if adopted.n_obs > local.n_obs {
+                    adopted.rebase(t);
+                } else {
+                    adopted.last_upd = local.last_upd;
+                    adopted.last_play = local.last_play;
+                }
+                adopted.reset_data();
+                *local = adopted;
+            }
         }
     }
 
@@ -487,6 +582,172 @@ mod tests {
             (p2[1] as f64) < (p1[1] as f64) * 0.8,
             "mistral allocation must drop: p1={p1:?} p2={p2:?}"
         );
+    }
+
+    #[test]
+    fn shared_ledger_couples_replica_budgets() {
+        use crate::pacer::SharedPacer;
+        let budget = 2e-4;
+        let ledger = std::sync::Arc::new(SharedPacer::new(PacerConfig::new(budget)));
+        let mut a = portfolio(RouterConfig::paretobandit(D, budget, 30));
+        let mut b = portfolio(RouterConfig::paretobandit(D, budget, 31));
+        a.use_shared_pacer(ledger.clone());
+        b.use_shared_pacer(ledger.clone());
+        let mut rng = Rng::new(32);
+        // only replica A overspends...
+        for _ in 0..300 {
+            let x = ctx(&mut rng);
+            let d = a.route(&x);
+            a.feedback(d.arm, &x, 0.9, 1.5e-2);
+        }
+        // ...but replica B feels the global dual pressure immediately
+        let x = ctx(&mut rng);
+        let d = b.route(&x);
+        assert!(d.lambda > 0.5, "shared λ not visible on replica B: {}", d.lambda);
+        assert!(d.n_eligible < 3, "global ceiling must filter on replica B");
+        assert_eq!(ledger.observations(), 300);
+    }
+
+    #[test]
+    fn feedback_batch_matches_per_event_feedback() {
+        // γ=1 so batch-vs-sequential agreement is exact (no within-batch
+        // decay gaps to collapse); junk events must be ignored harmlessly
+        let mut cfg = RouterConfig::unconstrained(D, 33);
+        cfg.gamma = 1.0;
+        let mut live = portfolio(cfg);
+        let mut queued = portfolio(cfg);
+        let mut rng = Rng::new(34);
+        let mut events = Vec::new();
+        for i in 0..60usize {
+            let x = ctx(&mut rng);
+            let arm = i % 3;
+            let r = 0.4 + 0.5 * rng.f64();
+            live.feedback(arm, &x, r, 1e-4);
+            events.push(crate::router::FeedbackEvent {
+                arm,
+                context: x,
+                reward: r,
+            });
+        }
+        // malformed events: unknown arm, wrong dimension
+        events.push(crate::router::FeedbackEvent {
+            arm: 99,
+            context: vec![1.0; D],
+            reward: 0.5,
+        });
+        events.push(crate::router::FeedbackEvent {
+            arm: 0,
+            context: vec![1.0; 2],
+            reward: 0.5,
+        });
+        queued.feedback_batch(&events);
+        for id in 0..3 {
+            let (la, qa) = (live.arm(id).unwrap(), queued.arm(id).unwrap());
+            assert_eq!(la.n_obs, qa.n_obs);
+            let x = ctx(&mut rng);
+            assert!(
+                (la.predict(&x) - qa.predict(&x)).abs() < 1e-7,
+                "arm {id}: live {} vs batched {}",
+                la.predict(&x),
+                qa.predict(&x)
+            );
+        }
+    }
+
+    #[test]
+    fn export_merge_adopt_roundtrip_converges_replicas() {
+        // two replicas see disjoint traffic; one merge/broadcast cycle must
+        // leave both with the union posterior
+        let mut cfg = RouterConfig::unconstrained(D, 35);
+        cfg.gamma = 1.0;
+        let mut a = portfolio(cfg);
+        let mut b = portfolio(cfg);
+        let mut rng = Rng::new(36);
+        for i in 0..120 {
+            let x = ctx(&mut rng);
+            let arm = i % 3;
+            if i % 2 == 0 {
+                a.route(&x);
+                a.feedback(arm, &x, 0.8, 1e-4);
+            } else {
+                b.route(&x);
+                b.feedback(arm, &x, 0.3, 1e-4);
+            }
+        }
+        // coordinator fold: global = A's replica + B's delta
+        let mut global = a.export_arms();
+        let b_arms = b.export_arms();
+        for (g, other) in global.iter_mut().zip(b_arms.iter()) {
+            if let (Some(g), Some(o)) = (g.as_mut(), o.as_ref()) {
+                g.merge(o, 1.0);
+            }
+        }
+        a.adopt_arms(&global);
+        b.adopt_arms(&global);
+        for id in 0..3 {
+            let (aa, ba) = (a.arm(id).unwrap(), b.arm(id).unwrap());
+            assert_eq!(aa.n_obs, ba.n_obs, "arm {id} observation counts diverge");
+            assert_eq!(aa.delta_obs(), 0, "adopt must clear the merge delta");
+            let x = ctx(&mut rng);
+            assert!((aa.predict(&x) - ba.predict(&x)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn adopt_keeps_staleness_clock_for_globally_idle_arms() {
+        // an arm nobody observed must keep accruing staleness inflation
+        // across merge cycles, or degraded models are never re-explored
+        let mut cfg = RouterConfig::unconstrained(D, 40);
+        cfg.gamma = 0.997;
+        let mut a = portfolio(cfg);
+        let mut b = portfolio(cfg);
+        let mut rng = Rng::new(41);
+        // both shards observe arms 0 and 1 only; arm 2 stays idle
+        for i in 0..60 {
+            let x = ctx(&mut rng);
+            a.route(&x);
+            a.feedback(i % 2, &x, 0.8, 1e-4);
+            b.route(&x);
+            b.feedback(i % 2, &x, 0.8, 1e-4);
+        }
+        let mut global = a.export_arms();
+        for (g, o) in global.iter_mut().zip(b.export_arms().iter()) {
+            if let (Some(g), Some(o)) = (g.as_mut(), o.as_ref()) {
+                g.merge(o, 1.0);
+            }
+        }
+        a.adopt_arms(&global);
+        // observed arms gained cross-shard data -> rebased to "now"
+        assert_eq!(a.arm(0).unwrap().last_upd, a.step());
+        // the never-observed arm keeps its original update clock...
+        assert_eq!(a.arm(2).unwrap().last_upd, 0);
+        // ...so if it stays unplayed, inflation keeps growing with the
+        // local clock instead of being reset by every merge cycle
+        // (last_play may be recent from exploration pulls, hence the
+        // forward-looking probe)
+        let t_future = a.step() + 500;
+        let infl = a.arm(2).unwrap().staleness_inflation(0.997, 200.0, t_future);
+        assert!(infl > 1.1, "idle arm must accrue inflation, got {infl}");
+    }
+
+    #[test]
+    fn set_budget_takes_effect_without_resetting_lambda() {
+        let mut r = portfolio(RouterConfig::paretobandit(D, 1e-4, 37));
+        let mut rng = Rng::new(38);
+        for _ in 0..300 {
+            let x = ctx(&mut rng);
+            let d = r.route(&x);
+            r.feedback(d.arm, &x, 0.9, 1.5e-2);
+        }
+        let lam = r.pacer().unwrap().lambda();
+        assert!(lam > 0.5);
+        assert!(r.set_budget(5e-2));
+        assert_eq!(r.pacer().unwrap().budget(), 5e-2);
+        // λ preserved (decays via its own dynamics, not a reset)
+        assert_eq!(r.pacer().unwrap().lambda(), lam);
+        let mut free = ParetoRouter::new(RouterConfig::unconstrained(D, 39));
+        free.add_model("m", 0.1, 0.1, Prior::Cold);
+        assert!(!free.set_budget(1e-3), "no pacer -> set_budget must fail");
     }
 
     #[test]

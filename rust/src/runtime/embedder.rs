@@ -10,6 +10,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use super::{ArtifactMeta, Runtime};
+#[cfg(feature = "pjrt")]
 use crate::sim::tokens::{tokenize, L_MAX};
 
 const WEIGHTS_MAGIC: u32 = 0x5042_5754; // "PBWT"
@@ -59,9 +60,32 @@ pub fn load_weights(path: &Path) -> Result<Vec<WeightTensor>> {
     Ok(tensors)
 }
 
+/// Stub featurizer: loading always fails in a build without the `pjrt`
+/// feature (servers fall back to `sim::hash_features`).
+#[cfg(not(feature = "pjrt"))]
+pub struct Embedder {
+    pub d_ctx: usize,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Embedder {
+    pub fn load(_rt: &Runtime, _meta: &ArtifactMeta) -> Result<Embedder> {
+        anyhow::bail!("{}", super::STUB_MSG)
+    }
+
+    pub fn embed_one(&self, _text: &str) -> Result<Vec<f64>> {
+        anyhow::bail!("{}", super::STUB_MSG)
+    }
+
+    pub fn embed_many(&self, _texts: &[&str]) -> Result<Vec<Vec<f64>>> {
+        anyhow::bail!("{}", super::STUB_MSG)
+    }
+}
+
 /// Compiled featurizer.  The SimEmbed weights are uploaded once as device
 /// buffers (they are graph parameters — large constants cannot survive the
 /// HLO-text interchange) and reused for every request.
+#[cfg(feature = "pjrt")]
 pub struct Embedder {
     client: xla::PjRtClient,
     exe_b1: xla::PjRtLoadedExecutable,
@@ -71,6 +95,7 @@ pub struct Embedder {
     pub d_ctx: usize,
 }
 
+#[cfg(feature = "pjrt")]
 impl Embedder {
     pub fn load(rt: &Runtime, meta: &ArtifactMeta) -> Result<Embedder> {
         let batch_n = meta.embed_batches.iter().copied().max().unwrap_or(1);
@@ -188,6 +213,34 @@ impl ContextMatrixCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn context_cache_roundtrip() {
+        let rows = vec![vec![1.0, 2.0, 3.0], vec![-0.5, 0.25, 4.0]];
+        let p = std::env::temp_dir().join(format!("pb_cache_{}.bin", std::process::id()));
+        ContextMatrixCache::save(&p, &rows).unwrap();
+        let back = ContextMatrixCache::load(&p).unwrap();
+        assert_eq!(back.len(), 2);
+        for (a, b) in rows.iter().flatten().zip(back.iter().flatten()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_embedder_fails_loudly_not_silently() {
+        let e = Runtime::cpu().unwrap_err();
+        assert!(format!("{e}").contains("pjrt"), "{e}");
+        let stub = Embedder { d_ctx: 26 };
+        assert!(stub.embed_one("hello").is_err());
+        assert!(stub.embed_many(&["a", "b"]).is_err());
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
+mod pjrt_tests {
+    use super::*;
     use crate::runtime::default_artifacts_dir;
 
     fn try_embedder() -> Option<(Runtime, Embedder)> {
@@ -236,18 +289,5 @@ mod tests {
         let a = e.embed_one("hello world").unwrap();
         let b = e.embed_one("hello world").unwrap();
         assert_eq!(a, b);
-    }
-
-    #[test]
-    fn context_cache_roundtrip() {
-        let rows = vec![vec![1.0, 2.0, 3.0], vec![-0.5, 0.25, 4.0]];
-        let p = std::env::temp_dir().join(format!("pb_cache_{}.bin", std::process::id()));
-        ContextMatrixCache::save(&p, &rows).unwrap();
-        let back = ContextMatrixCache::load(&p).unwrap();
-        assert_eq!(back.len(), 2);
-        for (a, b) in rows.iter().flatten().zip(back.iter().flatten()) {
-            assert!((a - b).abs() < 1e-6);
-        }
-        let _ = std::fs::remove_file(&p);
     }
 }

@@ -4,22 +4,39 @@
 //! HLO **text**; this module compiles those modules on the PJRT CPU client
 //! (`xla` crate) and executes them from the Rust request path — python is
 //! never involved at runtime.
+//!
+//! The PJRT half is gated behind the `pjrt` cargo feature because the
+//! `xla` crate only exists in the rust_pallas toolchain image (there is no
+//! crates.io access in the offline build).  Without the feature,
+//! [`Runtime`], [`Embedder`] and [`Scorer`] compile as stubs whose
+//! constructors return errors, and the serving stack falls back to the
+//! pure-Rust surrogate featurizer; everything artifact-format related
+//! ([`ArtifactMeta`], [`load_weights`], [`ContextMatrixCache`],
+//! [`ArmBank`]) stays fully functional.
 
 mod artifacts;
 mod embedder;
 mod scorer;
 
 pub use artifacts::{default_artifacts_dir, ArtifactMeta};
-pub use embedder::{ContextMatrixCache, Embedder};
+pub use embedder::{load_weights, ContextMatrixCache, Embedder, WeightTensor};
 pub use scorer::{ArmBank, Scorer};
 
 use anyhow::Result;
 
+/// Error text shared by every stubbed entry point.
+#[cfg(not(feature = "pjrt"))]
+pub(crate) const STUB_MSG: &str =
+    "PJRT runtime unavailable: built without the `pjrt` feature (requires the `xla` crate \
+     from the rust_pallas toolchain image)";
+
 /// Shared PJRT CPU client (one per process).
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create the PJRT CPU client.
     pub fn cpu() -> Result<Runtime> {
@@ -44,5 +61,22 @@ impl Runtime {
         )?;
         let comp = xla::XlaComputation::from_proto(&proto);
         Ok(self.client.compile(&comp)?)
+    }
+}
+
+/// Stub PJRT client: construction always fails (see module docs).
+#[cfg(not(feature = "pjrt"))]
+#[derive(Debug)]
+pub struct Runtime {}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Always errors in a stub build.
+    pub fn cpu() -> Result<Runtime> {
+        anyhow::bail!("{}", STUB_MSG)
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
     }
 }

@@ -68,7 +68,37 @@ impl ArmBank {
     }
 }
 
+/// Stub scorer: loading always fails in a build without the `pjrt`
+/// feature (the native Rust scorer in `router::pareto` is the fallback —
+/// and the production default).
+#[cfg(not(feature = "pjrt"))]
+pub struct Scorer {
+    pub k_max: usize,
+    pub d: usize,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Scorer {
+    pub fn load(_rt: &Runtime, _meta: &ArtifactMeta) -> Result<Scorer> {
+        anyhow::bail!("{}", super::STUB_MSG)
+    }
+
+    pub fn score_one(&self, _bank: &ArmBank, _alpha: f64, _x: &[f64]) -> Result<Vec<f64>> {
+        anyhow::bail!("{}", super::STUB_MSG)
+    }
+
+    pub fn score_many(
+        &self,
+        _bank: &ArmBank,
+        _alpha: f64,
+        _xs: &[Vec<f64>],
+    ) -> Result<Vec<Vec<f64>>> {
+        anyhow::bail!("{}", super::STUB_MSG)
+    }
+}
+
 /// Compiled scorer executable.
+#[cfg(feature = "pjrt")]
 pub struct Scorer {
     exe_b1: xla::PjRtLoadedExecutable,
     exe_bn: xla::PjRtLoadedExecutable,
@@ -77,6 +107,7 @@ pub struct Scorer {
     pub d: usize,
 }
 
+#[cfg(feature = "pjrt")]
 impl Scorer {
     pub fn load(rt: &Runtime, meta: &ArtifactMeta) -> Result<Scorer> {
         let batch_n = meta.score_batches.iter().copied().max().unwrap_or(1);
@@ -153,6 +184,25 @@ impl Scorer {
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
+    #[test]
+    fn arm_bank_masks_and_fills_slots() {
+        let d = 4;
+        let mut bank = ArmBank::empty(3, d);
+        assert!(bank.mask.iter().all(|&m| m == 0.0));
+        let a_inv = crate::linalg::Mat::scaled_identity(d, 2.0);
+        bank.set_slot(1, &a_inv, &[0.1, 0.2, 0.3, 0.4], 1.5, 0.25);
+        assert_eq!(bank.mask, vec![0.0, 1.0, 0.0]);
+        assert_eq!(bank.infl[1], 1.5);
+        assert_eq!(bank.cpen[1], 0.25);
+        assert_eq!(bank.a_inv[d * d], 2.0); // slot 1, entry (0,0)
+        assert_eq!(bank.theta[d + 2], 0.3);
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
+mod pjrt_tests {
     use super::*;
     use crate::linalg::Mat;
     use crate::runtime::default_artifacts_dir;

@@ -8,15 +8,17 @@
 //!   reprice      {"op":"reprice","arm":u,"price_in":f,"price_out":f}
 //!   set_budget   {"op":"set_budget","budget":f}
 //!   metrics      {"op":"metrics"}
+//!   sync         {"op":"sync"}          (sharded engine only: force a merge cycle)
 //!   shutdown     {"op":"shutdown"}
 //!
 //! The handler is a pure function over (state, request) so the protocol is
-//! unit-testable without sockets; `serve.rs` adds the TCP plumbing.
+//! unit-testable without sockets; `serve.rs` adds the TCP plumbing for one
+//! worker and `engine.rs` for N sharded workers.
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::router::{ContextCache, ParetoRouter, Pending, Prior};
+use crate::router::{ContextCache, FeedbackEvent, FeedbackQueue, ParetoRouter, Pending, Prior};
 use crate::server::metrics::Metrics;
 use crate::util::json::Json;
 
@@ -32,15 +34,71 @@ impl<F: Fn(&str) -> anyhow::Result<Vec<f64>>> Featurize for F {
     }
 }
 
-/// Server-side state owned by the worker thread.
+/// Server-side state owned by one worker (the single server's only worker,
+/// or one shard of the sharded engine).
 pub struct ServerState {
     pub router: ParetoRouter,
     pub cache: ContextCache,
     pub featurizer: Box<dyn Featurize>,
     pub metrics: Arc<Metrics>,
+    /// worker shard index (0 in the single-worker server)
+    pub shard: usize,
+    /// `Some` switches feedback to sharded mode: rewards are queued for
+    /// the batched merge cycle while costs still hit the pacer per event
+    pub queue: Option<FeedbackQueue>,
 }
 
-fn err(msg: &str) -> Json {
+impl ServerState {
+    /// Single-worker state (shard 0, per-event feedback).
+    pub fn new(
+        router: ParetoRouter,
+        cache: ContextCache,
+        featurizer: Box<dyn Featurize>,
+        metrics: Arc<Metrics>,
+    ) -> ServerState {
+        ServerState {
+            router,
+            cache,
+            featurizer,
+            metrics,
+            shard: 0,
+            queue: None,
+        }
+    }
+
+    /// Apply all queued reward observations in one batched pass; returns
+    /// how many were applied.  Rewards the bounded queue had to shed are
+    /// accounted into the metrics registry so overflow is never silent.
+    /// No-op outside sharded mode.
+    pub fn apply_queued(&mut self) -> usize {
+        let Some(q) = self.queue.as_mut() else {
+            return 0;
+        };
+        let shed = q.take_dropped();
+        if shed > 0 {
+            self.metrics
+                .dropped_rewards
+                .fetch_add(shed, std::sync::atomic::Ordering::Relaxed);
+        }
+        if q.is_empty() {
+            return 0;
+        }
+        let events = q.drain();
+        self.router.feedback_batch(&events);
+        events.len()
+    }
+}
+
+/// One in-flight request handed to a worker thread (the single server's
+/// worker or one engine shard), answered over a oneshot-style channel.
+/// Shared so the reference server and the sharded engine cannot drift.
+pub(crate) struct Job {
+    pub(crate) req: Json,
+    pub(crate) resp: std::sync::mpsc::Sender<Json>,
+}
+
+/// Error response in the wire format (shared with the sharded engine).
+pub(crate) fn err(msg: &str) -> Json {
     Json::obj(vec![
         ("ok", Json::Bool(false)),
         ("error", Json::Str(msg.to_string())),
@@ -100,7 +158,7 @@ impl ServerState {
             context: x,
         });
         let e2e_us = t0.elapsed().as_nanos() as f64 / 1e3;
-        self.metrics.record_route(d.arm, route_us, e2e_us);
+        self.metrics.record_route(self.shard, d.arm, route_us, e2e_us);
         Json::obj(vec![
             ("ok", Json::Bool(true)),
             ("id", Json::Num(id as f64)),
@@ -108,6 +166,7 @@ impl ServerState {
             ("model", Json::Str(name)),
             ("lambda", Json::Num(d.lambda)),
             ("forced", Json::Bool(d.forced)),
+            ("shard", Json::Num(self.shard as f64)),
             ("route_us", Json::Num(route_us)),
             ("e2e_us", Json::Num(e2e_us)),
         ])
@@ -124,7 +183,19 @@ impl ServerState {
         let Some(p) = self.cache.take(id) else {
             return err("feedback: unknown or already-claimed id");
         };
-        self.router.feedback(p.arm, &p.context, reward, cost);
+        match self.queue.as_mut() {
+            // sharded mode: queue the reward for the batched merge cycle,
+            // but pay the cost to the (shared) pacer right now
+            Some(q) => {
+                q.push(FeedbackEvent {
+                    arm: p.arm,
+                    context: p.context,
+                    reward,
+                });
+                self.router.observe_cost(cost);
+            }
+            None => self.router.feedback(p.arm, &p.context, reward, cost),
+        }
         self.metrics.record_feedback(reward, cost);
         Json::obj(vec![("ok", Json::Bool(true)), ("arm", Json::Num(p.arm as f64))])
     }
@@ -170,11 +241,20 @@ impl ServerState {
         }
     }
 
-    fn op_set_budget(&mut self, _req: &Json) -> Json {
-        // budget lives inside the pacer config; rebuilding the pacer mid-
-        // stream would discard λ state, so this is intentionally a no-op
-        // guard until the pacer grows a runtime setter on the router.
-        err("set_budget: not supported on a live pacer (restart with --budget)")
+    fn op_set_budget(&mut self, req: &Json) -> Json {
+        let Some(budget) = get_f(req, "budget") else {
+            return err("set_budget: need budget");
+        };
+        if !budget.is_finite() || budget <= 0.0 {
+            return err("set_budget: budget must be positive and finite");
+        }
+        // the pacer keeps its λ state across the change — only the ceiling
+        // the dual gradient is normalised against moves
+        if self.router.set_budget(budget) {
+            Json::obj(vec![("ok", Json::Bool(true)), ("budget", Json::Num(budget))])
+        } else {
+            err("set_budget: router has no pacer (started without --budget)")
+        }
     }
 }
 
@@ -187,14 +267,12 @@ mod tests {
         let mut router = ParetoRouter::new(RouterConfig::tabula_rasa(4, Some(1e-3), 1));
         router.add_model("llama", 0.1, 0.1, Prior::Cold);
         router.add_model("mistral", 0.4, 1.6, Prior::Cold);
-        ServerState {
+        ServerState::new(
             router,
-            cache: ContextCache::new(1000),
-            featurizer: Box::new(|t: &str| {
-                Ok(vec![t.len() as f64 % 3.0, 0.0, 0.5, 1.0])
-            }),
-            metrics: Arc::new(Metrics::new()),
-        }
+            ContextCache::new(1000),
+            Box::new(|t: &str| Ok(vec![t.len() as f64 % 3.0, 0.0, 0.5, 1.0])),
+            Arc::new(Metrics::new()),
+        )
     }
 
     fn parse(s: &str) -> Json {
@@ -245,6 +323,42 @@ mod tests {
         assert_eq!(m.get("requests").unwrap().as_f64(), Some(5.0));
         assert_eq!(m.get("feedbacks").unwrap().as_f64(), Some(5.0));
         assert!((m.get("mean_cost").unwrap().as_f64().unwrap() - 2e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn set_budget_roundtrip() {
+        let mut st = state();
+        let (resp, _) = st.handle(&parse(r#"{"op":"set_budget","budget":0.002}"#));
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(st.router.pacer().unwrap().budget(), 0.002);
+        let (resp, _) = st.handle(&parse(r#"{"op":"set_budget","budget":-1}"#));
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        let (resp, _) = st.handle(&parse(r#"{"op":"set_budget"}"#));
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn queued_mode_defers_rewards_until_apply() {
+        let mut st = state();
+        st.shard = 2;
+        st.queue = Some(crate::router::FeedbackQueue::new());
+        for i in 0..6u64 {
+            let req = format!(r#"{{"op":"route","id":{i},"prompt":"question {i}"}}"#);
+            let (resp, _) = st.handle(&parse(&req));
+            assert_eq!(resp.get("shard").unwrap().as_f64(), Some(2.0));
+            let fb = format!(r#"{{"op":"feedback","id":{i},"reward":0.9,"cost":0.002}}"#);
+            let (resp, _) = st.handle(&parse(&fb));
+            assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        }
+        // rewards deferred: no arm has absorbed an observation yet...
+        let n_before: u64 = (0..2).map(|i| st.router.arm(i).unwrap().n_obs).sum();
+        assert_eq!(n_before, 0);
+        // ...but costs were paid to the pacer in realtime (2x over budget)
+        assert!(st.router.pacer().unwrap().cbar() > 1e-3);
+        assert_eq!(st.apply_queued(), 6);
+        let n_after: u64 = (0..2).map(|i| st.router.arm(i).unwrap().n_obs).sum();
+        assert_eq!(n_after, 6);
+        assert_eq!(st.apply_queued(), 0, "queue must be empty after apply");
     }
 
     #[test]

@@ -1,0 +1,889 @@
+//! Sharded serving engine: N worker shards, one global budget.
+//!
+//! The single-worker [`super::Server`] tops out when embedding (~1 ms) or
+//! routing work saturates its one thread.  This engine scales the same
+//! line-JSON protocol across N shards, each owning an independent
+//! [`crate::router::ParetoRouter`] replica plus its own featurizer (PJRT
+//! executables are not `Send`, so every replica is built on its own
+//! thread):
+//!
+//! * **dispatch** — connection handlers parse requests and round-robin
+//!   `route` ops across shards; `feedback` is routed to the shard that
+//!   owns the pending context (an id→shard owner table, FIFO-bounded like
+//!   the per-shard context caches).
+//! * **global budget** — every replica holds a
+//!   [`crate::pacer::SharedPacer`] handle, so the dollar ceiling binds
+//!   across the whole deployment, not per replica: one shard's overspend
+//!   raises λ for all of them immediately.
+//! * **merge/broadcast cycle** — rewards are queued per shard and applied
+//!   in one batched Cholesky refresh per arm at each cycle; the merger
+//!   then folds every shard's posterior delta into a global posterior
+//!   ([`ArmState::merge`]) and broadcasts it back, so shards learn from
+//!   each other's feedback.  Cycles run on a timer and on demand via the
+//!   `sync` op.
+//! * **admin ops** (`add_model` / `delete_model` / `reprice` /
+//!   `set_budget`) are serialized through the merger thread and applied to
+//!   every shard in the same order, keeping slot ids aligned across
+//!   replicas.
+//!
+//! Shard clocks are local: with round-robin dispatch each replica sees
+//! ~1/N of the traffic, so the forgetting horizon measured in *global*
+//! requests stretches by ~N (operators can compensate with γ^N if drift
+//! tracking at high shard counts matters).  Cross-shard step counters are
+//! not comparable, so adopted posteriors that gained cross-shard
+//! observations are rebased onto the local clock, while globally idle
+//! arms keep their local staleness clock (see
+//! [`crate::router::ParetoRouter::adopt_arms`]).
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::api::{err, Job, ServerState};
+use super::metrics::Metrics;
+use crate::bandit::ArmState;
+use crate::router::FeedbackQueue;
+use crate::util::json::Json;
+
+/// Owner-table capacity *per shard*: ids routed but not yet claimed by
+/// feedback.  Scaled by the worker count at spawn so the dispatcher can
+/// track at least as many pending ids as the shard context caches hold in
+/// aggregate (65,536 each at the `serve` default) — otherwise the table
+/// would evict owner entries whose contexts are still live in a cache.
+const OWNER_CAP_PER_SHARD: usize = 1 << 16;
+/// How long the merger waits for a shard's sync report before skipping it.
+const SYNC_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Engine configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// worker shard count (≥1)
+    pub workers: usize,
+    /// timer-driven merge/broadcast period
+    pub merge_interval: Duration,
+}
+
+impl EngineConfig {
+    pub fn new(workers: usize) -> EngineConfig {
+        EngineConfig {
+            workers: workers.max(1),
+            merge_interval: Duration::from_millis(50),
+        }
+    }
+
+    pub fn merge_every(mut self, interval: Duration) -> EngineConfig {
+        // floor: a zero interval would make the merger's deadline loop
+        // spin on run_cycle forever, starving Stop/Admin/Cycle commands
+        // and hanging shutdown
+        self.merge_interval = interval.max(Duration::from_millis(1));
+        self
+    }
+}
+
+/// A shard's sync reply: which broadcast it last adopted + its replica.
+struct SyncReport {
+    /// epoch of the last adopted broadcast (0 = never adopted)
+    epoch: u64,
+    arms: Vec<Option<ArmState>>,
+}
+
+enum ShardMsg {
+    Job(Job),
+    /// apply queued feedback, then report the arm replica snapshot
+    Sync(mpsc::Sender<SyncReport>),
+    /// adopt the broadcast global posterior stamped with its epoch
+    Adopt(u64, Arc<Vec<Option<ArmState>>>),
+    Stop,
+}
+
+enum MergeCmd {
+    /// run a merge cycle now; ack with a summary when a sender is given
+    Cycle(Option<mpsc::Sender<Json>>),
+    /// apply an admin op to every shard in order; ack with shard 0's reply
+    Admin(Json, mpsc::Sender<Json>),
+    Stop,
+}
+
+/// FIFO-bounded id→shard owner table for pending feedback.
+///
+/// `remove` (a claimed feedback) leaves its queue entry behind, and ids
+/// may be reused by clients, so each entry carries a generation: cleanup
+/// only evicts a map entry when the popped queue entry is its *current*
+/// generation — a stale entry can never evict a live reinsertion.
+struct OwnerTable {
+    map: HashMap<u64, (usize, u64)>,
+    order: VecDeque<(u64, u64)>,
+    cap: usize,
+    gen: u64,
+}
+
+impl OwnerTable {
+    fn new(cap: usize) -> OwnerTable {
+        OwnerTable {
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            cap: cap.max(1),
+            gen: 0,
+        }
+    }
+
+    fn insert(&mut self, id: u64, shard: usize) {
+        self.gen += 1;
+        self.map.insert(id, (shard, self.gen));
+        self.order.push_back((id, self.gen));
+        // bound the map at `cap` live entries and the queue (which also
+        // holds stale entries for claimed/reinserted ids) at 2x cap
+        while self.map.len() > self.cap || self.order.len() > 2 * self.cap {
+            match self.order.pop_front() {
+                Some((old, old_gen)) => {
+                    if self.map.get(&old).map(|&(_, g)| g) == Some(old_gen) {
+                        self.map.remove(&old);
+                    }
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Current (shard, generation) for a pending id.
+    fn get(&self, id: u64) -> Option<(usize, u64)> {
+        self.map.get(&id).copied()
+    }
+
+    /// Remove the entry only if it is still the generation the caller
+    /// observed — a concurrent re-route of the same id (new generation)
+    /// must not be unclaimed by an older request's completion.
+    fn remove_if(&mut self, id: u64, gen: u64) -> bool {
+        if self.map.get(&id).map(|&(_, g)| g) == Some(gen) {
+            self.map.remove(&id);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Shared dispatch state used by every connection-handler thread.
+struct Dispatch {
+    shard_txs: Vec<mpsc::Sender<ShardMsg>>,
+    merge_tx: mpsc::Sender<MergeCmd>,
+    next: AtomicUsize,
+    owners: Mutex<OwnerTable>,
+    metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+    addr: std::net::SocketAddr,
+}
+
+impl Dispatch {
+    fn forward(&self, shard: usize, req: Json) -> Json {
+        let (tx, rx) = mpsc::channel();
+        if self.shard_txs[shard].send(ShardMsg::Job(Job { req, resp: tx })).is_err() {
+            return err("shard unavailable");
+        }
+        rx.recv().unwrap_or_else(|_| err("shard dropped request"))
+    }
+
+    /// Handle one request; returns (response, initiate shutdown?).
+    fn dispatch(&self, req: Json) -> (Json, bool) {
+        let op = req.get("op").and_then(Json::as_str).unwrap_or("").to_string();
+        match op.as_str() {
+            "route" => {
+                let id = req.get("id").and_then(Json::as_f64).map(|v| v as u64);
+                let shard =
+                    self.next.fetch_add(1, Ordering::Relaxed) % self.shard_txs.len();
+                let resp = self.forward(shard, req);
+                // claim ownership only once the shard accepted the route —
+                // a failed route (bad prompt, reused id) must not disturb
+                // an earlier still-pending mapping, mirroring op_route,
+                // which only inserts into the cache after validation.
+                // (A feedback racing its own route on a second connection
+                // can still miss the mapping; the same request pattern is
+                // unserviceable on the single-worker server too.)
+                if let Some(id) = id {
+                    if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+                        self.owners.lock().unwrap().insert(id, shard);
+                    }
+                }
+                (resp, false)
+            }
+            "feedback" => {
+                let id = req.get("id").and_then(Json::as_f64).map(|v| v as u64);
+                // peek, don't claim: a malformed feedback (missing reward/
+                // cost) must leave the pending id claimable by a corrected
+                // retry, matching the single-worker server's behaviour;
+                // the claim after success is generation-conditional so a
+                // concurrent re-route of the same id is never unclaimed
+                let owner = id.and_then(|id| self.owners.lock().unwrap().get(id));
+                match owner {
+                    Some((shard, gen)) => {
+                        let resp = self.forward(shard, req);
+                        if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+                            if let Some(id) = id {
+                                self.owners.lock().unwrap().remove_if(id, gen);
+                            }
+                        }
+                        (resp, false)
+                    }
+                    None => (err("feedback: unknown or already-claimed id"), false),
+                }
+            }
+            "metrics" => (self.metrics.snapshot(), false),
+            "sync" => {
+                let (tx, rx) = mpsc::channel();
+                if self.merge_tx.send(MergeCmd::Cycle(Some(tx))).is_err() {
+                    return (err("merger unavailable"), false);
+                }
+                (
+                    rx.recv().unwrap_or_else(|_| err("merger dropped request")),
+                    false,
+                )
+            }
+            "add_model" | "delete_model" | "reprice" | "set_budget" => {
+                let (tx, rx) = mpsc::channel();
+                if self.merge_tx.send(MergeCmd::Admin(req, tx)).is_err() {
+                    return (err("merger unavailable"), false);
+                }
+                (
+                    rx.recv().unwrap_or_else(|_| err("merger dropped request")),
+                    false,
+                )
+            }
+            "shutdown" => (Json::obj(vec![("ok", Json::Bool(true))]), true),
+            _ => (err("unknown op"), false),
+        }
+    }
+
+    /// Signal every thread to stop (idempotent).
+    fn initiate_stop(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _ = self.merge_tx.send(MergeCmd::Stop);
+        for tx in &self.shard_txs {
+            let _ = tx.send(ShardMsg::Stop);
+        }
+        // dummy connection unblocks accept()
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// Running sharded engine handle.
+pub struct ShardedEngine {
+    pub addr: std::net::SocketAddr,
+    dispatch: Arc<Dispatch>,
+    metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+    shards: Vec<JoinHandle<()>>,
+    merger: Option<JoinHandle<()>>,
+    acceptor: Option<JoinHandle<()>>,
+}
+
+impl ShardedEngine {
+    /// Bind `addr` and serve with `cfg.workers` shards.  `build(shard)`
+    /// runs on each shard's own thread (PJRT featurizers must be born on
+    /// the thread that uses them); the engine overrides the built state's
+    /// shard id, feedback queue and metrics registry so all replicas
+    /// report into one place.
+    pub fn spawn<F>(addr: &str, cfg: EngineConfig, build: F) -> Result<ShardedEngine>
+    where
+        F: Fn(usize) -> ServerState + Send + Sync + 'static,
+    {
+        let workers = cfg.workers.max(1);
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(Metrics::new());
+        metrics.workers.store(workers as u64, Ordering::Relaxed);
+
+        let build = Arc::new(build);
+        let mut shard_txs = Vec::with_capacity(workers);
+        let mut shards = Vec::with_capacity(workers);
+        for shard in 0..workers {
+            let (tx, rx) = mpsc::channel::<ShardMsg>();
+            shard_txs.push(tx);
+            let build = build.clone();
+            let metrics = metrics.clone();
+            shards.push(
+                std::thread::Builder::new()
+                    .name(format!("pb-shard-{shard}"))
+                    .spawn(move || {
+                        let mut state = (*build)(shard);
+                        state.shard = shard;
+                        state.metrics = metrics;
+                        if state.queue.is_none() {
+                            state.queue = Some(FeedbackQueue::new());
+                        }
+                        shard_loop(state, rx);
+                    })?,
+            );
+        }
+
+        let (merge_tx, merge_rx) = mpsc::channel::<MergeCmd>();
+        let merger = {
+            let txs = shard_txs.clone();
+            let metrics = metrics.clone();
+            // re-floor in case the config was built by hand rather than
+            // through merge_every (same liveness concern)
+            let interval = cfg.merge_interval.max(Duration::from_millis(1));
+            std::thread::Builder::new()
+                .name("pb-merger".into())
+                .spawn(move || merger_loop(merge_rx, txs, metrics, interval))?
+        };
+
+        let dispatch = Arc::new(Dispatch {
+            shard_txs,
+            merge_tx,
+            next: AtomicUsize::new(0),
+            owners: Mutex::new(OwnerTable::new(workers.saturating_mul(OWNER_CAP_PER_SHARD))),
+            metrics: metrics.clone(),
+            shutdown: shutdown.clone(),
+            addr: local,
+        });
+
+        let acceptor = {
+            let dispatch = dispatch.clone();
+            let shutdown = shutdown.clone();
+            std::thread::Builder::new()
+                .name("pb-accept".into())
+                .spawn(move || {
+                    for conn in listener.incoming() {
+                        if shutdown.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let Ok(stream) = conn else { continue };
+                        let _ = stream.set_nodelay(true); // line-RPC: kill Nagle
+                        let dispatch = dispatch.clone();
+                        let _ = std::thread::Builder::new()
+                            .name("pb-conn".into())
+                            .spawn(move || handle_conn(stream, dispatch));
+                    }
+                })?
+        };
+
+        Ok(ShardedEngine {
+            addr: local,
+            dispatch,
+            metrics,
+            shutdown,
+            shards,
+            merger: Some(merger),
+            acceptor: Some(acceptor),
+        })
+    }
+
+    /// Shared metrics registry (all shards report here).
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    /// True once a client issued `shutdown` or `stop` was called.
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Request shutdown and join all threads.
+    pub fn stop(mut self) {
+        self.do_stop();
+    }
+
+    fn do_stop(&mut self) {
+        self.dispatch.initiate_stop();
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        if let Some(m) = self.merger.take() {
+            let _ = m.join();
+        }
+        for s in self.shards.drain(..) {
+            let _ = s.join();
+        }
+    }
+}
+
+impl Drop for ShardedEngine {
+    fn drop(&mut self) {
+        self.do_stop();
+    }
+}
+
+fn shard_loop(mut state: ServerState, rx: mpsc::Receiver<ShardMsg>) {
+    let mut epoch = 0u64;
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ShardMsg::Job(job) => {
+                let (resp, _down) = state.handle(&job.req);
+                let _ = job.resp.send(resp);
+            }
+            ShardMsg::Sync(reply) => {
+                state.apply_queued();
+                let _ = reply.send(SyncReport {
+                    epoch,
+                    arms: state.router.export_arms(),
+                });
+            }
+            ShardMsg::Adopt(e, global) => {
+                state.router.adopt_arms(&global);
+                epoch = e;
+            }
+            ShardMsg::Stop => break,
+        }
+    }
+}
+
+fn merger_loop(
+    rx: mpsc::Receiver<MergeCmd>,
+    shard_txs: Vec<mpsc::Sender<ShardMsg>>,
+    metrics: Arc<Metrics>,
+    interval: Duration,
+) {
+    let mut next_epoch = 1u64;
+    // deadline-based timer: every received command would otherwise restart
+    // the full interval, so sustained admin traffic at a period shorter
+    // than the merge interval would starve timer-driven cycles entirely
+    let mut next_fire = Instant::now() + interval;
+    loop {
+        let now = Instant::now();
+        if now >= next_fire {
+            run_cycle(&shard_txs, &metrics, &mut next_epoch);
+            next_fire = Instant::now() + interval;
+            continue;
+        }
+        match rx.recv_timeout(next_fire - now) {
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                run_cycle(&shard_txs, &metrics, &mut next_epoch);
+                next_fire = Instant::now() + interval;
+            }
+            Ok(MergeCmd::Cycle(ack)) => {
+                let shards = run_cycle(&shard_txs, &metrics, &mut next_epoch);
+                next_fire = Instant::now() + interval;
+                if let Some(ack) = ack {
+                    let _ = ack.send(Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("synced_shards", Json::Num(shards as f64)),
+                        (
+                            "merges",
+                            Json::Num(metrics.merges.load(Ordering::Relaxed) as f64),
+                        ),
+                    ]));
+                }
+            }
+            Ok(MergeCmd::Admin(req, ack)) => {
+                // same order on every shard keeps slot ids aligned
+                let mut first: Option<Json> = None;
+                for tx in &shard_txs {
+                    let (t, r) = mpsc::channel();
+                    if tx
+                        .send(ShardMsg::Job(Job {
+                            req: req.clone(),
+                            resp: t,
+                        }))
+                        .is_err()
+                    {
+                        continue;
+                    }
+                    if let Ok(resp) = r.recv_timeout(SYNC_TIMEOUT) {
+                        first.get_or_insert(resp);
+                    }
+                }
+                let _ = ack.send(first.unwrap_or_else(|| err("no shard answered")));
+            }
+            Ok(MergeCmd::Stop) | Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+}
+
+/// One merge/broadcast cycle; returns how many shards reported.
+///
+/// Stateless all-reduce: the global posterior is rebuilt each cycle as
+/// the *freshest* replica (base + its own delta) plus every other shard's
+/// delta.  Freshness is the shard's adoption epoch — the highest epoch
+/// identifies the latest broadcast base, and equal epochs mean identical
+/// bases, so the fold is exact up to base-decay skew between shard clocks
+/// (bounded by γ^Δt over one cycle).  Total n_obs cannot serve as the
+/// freshness key: after a sync timeout a stale-based shard can carry MORE
+/// observations than a fresh one, and basing on it would drop the other
+/// shards' previous-cycle contributions.
+///
+/// A shard that misses the sync timeout is excluded from the fold and —
+/// crucially — from the adopt broadcast: adopting clears a replica's
+/// delta, so broadcasting to it would silently discard every observation
+/// it made this cycle.  Its delta (which then spans multiple cycles, and
+/// is exactly what the fresh base lacks) is folded when it next reports.
+/// If ALL most-recently-adopted shards time out in the same cycle, their
+/// base-only contributions are absent from that cycle's global — a known
+/// approximation under sustained overload; budget enforcement is
+/// unaffected (costs flow through the realtime shared ledger, never
+/// through merge cycles).
+fn run_cycle(
+    shard_txs: &[mpsc::Sender<ShardMsg>],
+    metrics: &Arc<Metrics>,
+    next_epoch: &mut u64,
+) -> usize {
+    let mut replies = Vec::with_capacity(shard_txs.len());
+    for (shard, tx) in shard_txs.iter().enumerate() {
+        let (t, r) = mpsc::channel();
+        if tx.send(ShardMsg::Sync(t)).is_ok() {
+            replies.push((shard, r));
+        }
+    }
+    let mut reporters = Vec::with_capacity(replies.len());
+    let mut reports: Vec<SyncReport> = Vec::with_capacity(replies.len());
+    for (shard, r) in replies {
+        if let Ok(report) = r.recv_timeout(SYNC_TIMEOUT) {
+            reporters.push(shard);
+            reports.push(report);
+        }
+    }
+    if reports.is_empty() {
+        return 0;
+    }
+    let base = (0..reports.len())
+        .max_by_key(|&i| reports[i].epoch)
+        .unwrap_or(0);
+    let mut global = reports[base].arms.clone();
+    for (i, report) in reports.iter().enumerate() {
+        if i == base {
+            continue;
+        }
+        for (g, other) in global.iter_mut().zip(report.arms.iter()) {
+            if let (Some(g), Some(o)) = (g.as_mut(), o.as_ref()) {
+                g.merge(o, 1.0);
+            }
+        }
+    }
+    let epoch = *next_epoch;
+    *next_epoch += 1;
+    let global = Arc::new(global);
+    for &shard in &reporters {
+        let _ = shard_txs[shard].send(ShardMsg::Adopt(epoch, global.clone()));
+    }
+    metrics.merges.fetch_add(1, Ordering::Relaxed);
+    reports.len()
+}
+
+fn handle_conn(stream: TcpStream, dispatch: Arc<Dispatch>) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        if dispatch.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (resp, down) = match Json::parse(&line) {
+            Ok(req) => dispatch.dispatch(req),
+            Err(e) => (err(&format!("parse: {e}")), false),
+        };
+        let write_failed = writeln!(writer, "{}", resp.to_string()).is_err();
+        if down {
+            dispatch.initiate_stop();
+            break;
+        }
+        if write_failed {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pacer::{PacerConfig, SharedPacer};
+    use crate::router::{ContextCache, ParetoRouter, Prior, RouterConfig};
+    use crate::server::serve::Client;
+    use crate::sim::hash_features;
+
+    const D: usize = 6;
+
+    fn spawn_engine(workers: usize, budget: f64, interval: Duration) -> ShardedEngine {
+        let ledger = Arc::new(SharedPacer::new(PacerConfig::new(budget)));
+        let build = move |shard: usize| {
+            let mut router =
+                ParetoRouter::new(RouterConfig::tabula_rasa(D, Some(budget), 100 + shard as u64));
+            router.use_shared_pacer(ledger.clone());
+            router.add_model("llama", 0.1, 0.1, Prior::Cold);
+            router.add_model("mistral", 0.4, 1.6, Prior::Cold);
+            ServerState::new(
+                router,
+                ContextCache::new(4096),
+                Box::new(|t: &str| Ok(hash_features(t, D))),
+                Arc::new(Metrics::new()),
+            )
+        };
+        ShardedEngine::spawn("127.0.0.1:0", EngineConfig::new(workers).merge_every(interval), build)
+            .unwrap()
+    }
+
+    fn call(c: &mut Client, req: Json) -> Json {
+        c.call(&req).unwrap()
+    }
+
+    #[test]
+    fn routes_round_robin_and_feedback_finds_its_shard() {
+        let engine = spawn_engine(4, 1e-3, Duration::from_secs(60));
+        let mut c = Client::connect(&engine.addr).unwrap();
+        let mut shards_seen = [false; 4];
+        for i in 0..40u64 {
+            let r = call(
+                &mut c,
+                Json::obj(vec![
+                    ("op", Json::Str("route".into())),
+                    ("id", Json::Num(i as f64)),
+                    ("prompt", Json::Str(format!("prompt number {i}"))),
+                ]),
+            );
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+            shards_seen[r.get("shard").unwrap().as_f64().unwrap() as usize] = true;
+            let f = call(
+                &mut c,
+                Json::obj(vec![
+                    ("op", Json::Str("feedback".into())),
+                    ("id", Json::Num(i as f64)),
+                    ("reward", Json::Num(0.8)),
+                    ("cost", Json::Num(1e-4)),
+                ]),
+            );
+            assert_eq!(f.get("ok").unwrap().as_bool(), Some(true), "{f:?}");
+        }
+        assert!(shards_seen.iter().all(|&s| s), "round-robin must hit every shard");
+        // double feedback on a claimed id fails at the dispatcher
+        let f = call(
+            &mut c,
+            Json::obj(vec![
+                ("op", Json::Str("feedback".into())),
+                ("id", Json::Num(3.0)),
+                ("reward", Json::Num(0.8)),
+                ("cost", Json::Num(1e-4)),
+            ]),
+        );
+        assert_eq!(f.get("ok").unwrap().as_bool(), Some(false));
+        let m = call(&mut c, Json::obj(vec![("op", Json::Str("metrics".into()))]));
+        assert_eq!(m.get("requests").unwrap().as_f64(), Some(40.0));
+        assert_eq!(m.get("feedbacks").unwrap().as_f64(), Some(40.0));
+        assert_eq!(m.get("workers").unwrap().as_f64(), Some(4.0));
+        let per_shard = m.get("per_shard").unwrap().as_arr().unwrap();
+        assert_eq!(per_shard.len(), 4);
+        for s in per_shard {
+            assert_eq!(s.as_f64(), Some(10.0), "exact round-robin split");
+        }
+        engine.stop();
+    }
+
+    #[test]
+    fn sync_op_merges_and_broadcasts() {
+        let engine = spawn_engine(2, 1e-3, Duration::from_secs(60));
+        let mut c = Client::connect(&engine.addr).unwrap();
+        for i in 0..20u64 {
+            call(
+                &mut c,
+                Json::obj(vec![
+                    ("op", Json::Str("route".into())),
+                    ("id", Json::Num(i as f64)),
+                    ("prompt", Json::Str(format!("q {i}"))),
+                ]),
+            );
+            call(
+                &mut c,
+                Json::obj(vec![
+                    ("op", Json::Str("feedback".into())),
+                    ("id", Json::Num(i as f64)),
+                    ("reward", Json::Num(0.7)),
+                    ("cost", Json::Num(1e-4)),
+                ]),
+            );
+        }
+        let s = call(&mut c, Json::obj(vec![("op", Json::Str("sync".into()))]));
+        assert_eq!(s.get("ok").unwrap().as_bool(), Some(true), "{s:?}");
+        assert_eq!(s.get("synced_shards").unwrap().as_f64(), Some(2.0));
+        assert!(s.get("merges").unwrap().as_f64().unwrap() >= 1.0);
+        engine.stop();
+    }
+
+    #[test]
+    fn admin_ops_apply_to_all_shards_consistently() {
+        let engine = spawn_engine(3, 1e-3, Duration::from_millis(20));
+        let mut c = Client::connect(&engine.addr).unwrap();
+        let r = call(
+            &mut c,
+            Json::obj(vec![
+                ("op", Json::Str("add_model".into())),
+                ("name", Json::Str("flash".into())),
+                ("price_in", Json::Num(0.3)),
+                ("price_out", Json::Num(2.5)),
+            ]),
+        );
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(r.get("arm").unwrap().as_f64(), Some(2.0));
+        // traffic reaches the new arm on whatever shard serves it, and the
+        // engine keeps serving across the merge cycles in between
+        for i in 0..30u64 {
+            let r = call(
+                &mut c,
+                Json::obj(vec![
+                    ("op", Json::Str("route".into())),
+                    ("id", Json::Num(i as f64)),
+                    ("prompt", Json::Str(format!("after hot-swap {i}"))),
+                ]),
+            );
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+            call(
+                &mut c,
+                Json::obj(vec![
+                    ("op", Json::Str("feedback".into())),
+                    ("id", Json::Num(i as f64)),
+                    ("reward", Json::Num(0.8)),
+                    ("cost", Json::Num(2e-4)),
+                ]),
+            );
+        }
+        let r = call(
+            &mut c,
+            Json::obj(vec![
+                ("op", Json::Str("delete_model".into())),
+                ("arm", Json::Num(2.0)),
+            ]),
+        );
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        // deleting again fails on every shard the same way
+        let r = call(
+            &mut c,
+            Json::obj(vec![
+                ("op", Json::Str("delete_model".into())),
+                ("arm", Json::Num(2.0)),
+            ]),
+        );
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+        let r = call(
+            &mut c,
+            Json::obj(vec![
+                ("op", Json::Str("set_budget".into())),
+                ("budget", Json::Num(5e-4)),
+            ]),
+        );
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        engine.stop();
+    }
+
+    #[test]
+    fn shutdown_op_stops_the_engine() {
+        let engine = spawn_engine(2, 1e-3, Duration::from_millis(20));
+        let mut c = Client::connect(&engine.addr).unwrap();
+        let r = call(&mut c, Json::obj(vec![("op", Json::Str("shutdown".into()))]));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        for _ in 0..100 {
+            if engine.is_shutdown() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(engine.is_shutdown());
+        engine.stop();
+    }
+
+    #[test]
+    fn concurrent_clients_across_shards() {
+        let engine = spawn_engine(4, 1e-3, Duration::from_millis(10));
+        let addr = engine.addr;
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            handles.push(std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                for i in 0..50u64 {
+                    let id = t * 1_000 + i;
+                    let r = c
+                        .call(&Json::obj(vec![
+                            ("op", Json::Str("route".into())),
+                            ("id", Json::Num(id as f64)),
+                            ("prompt", Json::Str(format!("client {t} msg {i}"))),
+                        ]))
+                        .unwrap();
+                    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+                    c.call(&Json::obj(vec![
+                        ("op", Json::Str("feedback".into())),
+                        ("id", Json::Num(id as f64)),
+                        ("reward", Json::Num(0.8)),
+                        ("cost", Json::Num(1e-4)),
+                    ]))
+                    .unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut c = Client::connect(&addr).unwrap();
+        let m = c
+            .call(&Json::obj(vec![("op", Json::Str("metrics".into()))]))
+            .unwrap();
+        assert_eq!(m.get("requests").unwrap().as_f64(), Some(200.0));
+        assert_eq!(m.get("feedbacks").unwrap().as_f64(), Some(200.0));
+        engine.stop();
+    }
+
+    /// Test helper mirroring the dispatcher's peek-then-claim sequence.
+    fn claim(t: &mut OwnerTable, id: u64) -> Option<usize> {
+        let (shard, gen) = t.get(id)?;
+        assert!(t.remove_if(id, gen));
+        Some(shard)
+    }
+
+    #[test]
+    fn owner_table_evicts_fifo() {
+        let mut t = OwnerTable::new(3);
+        for i in 0..5u64 {
+            t.insert(i, i as usize);
+        }
+        assert!(t.get(0).is_none() && t.get(1).is_none());
+        assert_eq!(claim(&mut t, 4), Some(4));
+        // re-insertion supersedes: the latest shard wins
+        let mut t = OwnerTable::new(2);
+        t.insert(7, 0);
+        t.insert(7, 1);
+        t.insert(8, 0);
+        assert_eq!(claim(&mut t, 7), Some(1));
+        assert_eq!(claim(&mut t, 8), Some(0));
+    }
+
+    #[test]
+    fn owner_table_stale_entries_never_evict_a_reused_id() {
+        // claimed feedbacks leave stale queue entries; cleanup popping one
+        // must not evict a later reinsertion of the same id
+        let mut t = OwnerTable::new(2);
+        for cycle in 0..3 {
+            t.insert(1, cycle);
+            assert_eq!(claim(&mut t, 1), Some(cycle));
+        }
+        t.insert(1, 7); // live reuse of the claimed id
+        t.insert(2, 0); // queue now exceeds 2x cap -> cleanup pops stale 1s
+        assert_eq!(
+            t.get(1).map(|(shard, _)| shard),
+            Some(7),
+            "stale entry evicted the live reuse"
+        );
+        assert_eq!(claim(&mut t, 1), Some(7));
+        assert_eq!(claim(&mut t, 2), Some(0));
+    }
+
+    #[test]
+    fn owner_table_claim_is_generation_conditional() {
+        // an old request's completion must not unclaim a newer re-route
+        let mut t = OwnerTable::new(8);
+        t.insert(5, 0);
+        let (_, old_gen) = t.get(5).unwrap();
+        t.insert(5, 3); // concurrent re-route supersedes
+        assert!(!t.remove_if(5, old_gen), "stale claim must be a no-op");
+        assert_eq!(t.get(5).map(|(shard, _)| shard), Some(3));
+        let (_, gen) = t.get(5).unwrap();
+        assert!(t.remove_if(5, gen));
+        assert!(t.get(5).is_none());
+    }
+}

@@ -83,17 +83,26 @@ impl Default for LatencyHisto {
     }
 }
 
-/// Global serving metrics.
+/// Global serving metrics, shared by every worker shard of an engine.
 #[derive(Default)]
 pub struct Metrics {
     pub requests: AtomicU64,
     pub feedbacks: AtomicU64,
     pub errors: AtomicU64,
+    /// completed merge/broadcast cycles (sharded engine)
+    pub merges: AtomicU64,
+    /// reward observations shed by bounded feedback queues (sharded
+    /// engine under merge-cycle stall — nonzero means posterior data loss)
+    pub dropped_rewards: AtomicU64,
+    /// worker shard count (0 until an engine sets it; reported as ≥1)
+    pub workers: AtomicU64,
     pub route_latency: LatencyHisto,
     pub e2e_latency: LatencyHisto,
     pub spend: Mutex<f64>,
     pub reward_sum: Mutex<f64>,
     pub per_arm: Mutex<Vec<u64>>,
+    /// routed-request counts per worker shard
+    pub per_shard: Mutex<Vec<u64>>,
 }
 
 impl Metrics {
@@ -101,7 +110,7 @@ impl Metrics {
         Metrics::default()
     }
 
-    pub fn record_route(&self, arm: usize, route_us: f64, e2e_us: f64) {
+    pub fn record_route(&self, shard: usize, arm: usize, route_us: f64, e2e_us: f64) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.route_latency.observe_us(route_us);
         self.e2e_latency.observe_us(e2e_us);
@@ -110,6 +119,12 @@ impl Metrics {
             pa.resize(arm + 1, 0);
         }
         pa[arm] += 1;
+        drop(pa);
+        let mut ps = self.per_shard.lock().unwrap();
+        if ps.len() <= shard {
+            ps.resize(shard + 1, 0);
+        }
+        ps[shard] += 1;
     }
 
     pub fn record_feedback(&self, reward: f64, cost: f64) {
@@ -150,6 +165,26 @@ impl Metrics {
                         .collect(),
                 ),
             ),
+            (
+                "workers",
+                Json::Num(self.workers.load(Ordering::Relaxed).max(1) as f64),
+            ),
+            ("merges", Json::Num(self.merges.load(Ordering::Relaxed) as f64)),
+            (
+                "dropped_rewards",
+                Json::Num(self.dropped_rewards.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "per_shard",
+                Json::Arr(
+                    self.per_shard
+                        .lock()
+                        .unwrap()
+                        .iter()
+                        .map(|&c| Json::Num(c as f64))
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -174,9 +209,9 @@ mod tests {
     #[test]
     fn metrics_snapshot_consistent() {
         let m = Metrics::new();
-        m.record_route(1, 20.0, 900.0);
-        m.record_route(1, 25.0, 950.0);
-        m.record_route(0, 22.0, 800.0);
+        m.record_route(0, 1, 20.0, 900.0);
+        m.record_route(1, 1, 25.0, 950.0);
+        m.record_route(1, 0, 22.0, 800.0);
         m.record_feedback(0.9, 1e-4);
         m.record_feedback(0.8, 2e-4);
         let s = m.snapshot();
@@ -186,5 +221,16 @@ mod tests {
             s.get("per_arm").unwrap().idx(1).unwrap().as_f64(),
             Some(2.0)
         );
+        // shard 0 took one route, shard 1 two
+        assert_eq!(
+            s.get("per_shard").unwrap().idx(0).unwrap().as_f64(),
+            Some(1.0)
+        );
+        assert_eq!(
+            s.get("per_shard").unwrap().idx(1).unwrap().as_f64(),
+            Some(2.0)
+        );
+        // single-worker default is reported as one shard
+        assert_eq!(s.get("workers").unwrap().as_f64(), Some(1.0));
     }
 }

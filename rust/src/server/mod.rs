@@ -1,10 +1,12 @@
-//! Serving stack: line-JSON TCP server, worker thread owning the router +
-//! PJRT featurizer, metrics registry.
+//! Serving stack: line-JSON TCP protocol, the single-worker reference
+//! server, the sharded production engine and the metrics registry.
 
 mod api;
+mod engine;
 mod metrics;
 mod serve;
 
 pub use api::{Featurize, ServerState};
+pub use engine::{EngineConfig, ShardedEngine};
 pub use metrics::{LatencyHisto, Metrics};
 pub use serve::{Client, Server};

@@ -1,11 +1,19 @@
-//! TCP serving loop.
+//! Single-worker TCP serving loop.
 //!
 //! tokio is unreachable in the offline build environment, so the server is
-//! a std::net design: N connection-handler threads (I/O + JSON parsing)
-//! funnel requests through an mpsc channel to a single worker thread that
-//! owns the router + PJRT featurizer (PJRT executables stay on one thread
-//! by construction).  Routing work is microseconds, embedding ~1 ms, so the
-//! worker is not the bottleneck until multi-thousand req/s.
+//! a std::net design: connection-handler threads (I/O + JSON parsing)
+//! funnel requests through an mpsc channel to one worker thread that owns
+//! the router + featurizer (PJRT executables are not `Send`, so they live
+//! on the thread that built them).
+//!
+//! One worker saturates around a thousand req/s — embedding (~1 ms)
+//! dominates the ~20 µs routing decision — so this loop is the
+//! low-traffic / reference deployment.  The production path for the
+//! multi-thousand-req/s regime is [`super::ShardedEngine`]: N replicas of
+//! this worker behind round-robin dispatch, a shared atomic budget ledger
+//! and a periodic posterior merge/broadcast cycle.  The wire protocol
+//! (`api.rs`) is identical in both, and this server behaves like a
+//! degenerate one-shard engine with per-event (unbatched) feedback.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -16,13 +24,8 @@ use std::thread::JoinHandle;
 
 use anyhow::Result;
 
-use super::api::ServerState;
+use super::api::{Job, ServerState};
 use crate::util::json::Json;
-
-struct Job {
-    req: Json,
-    resp: mpsc::Sender<Json>,
-}
 
 /// Running server handle.
 pub struct Server {
@@ -200,15 +203,15 @@ mod tests {
         let mut router = ParetoRouter::new(RouterConfig::tabula_rasa(4, Some(1e-3), 1));
         router.add_model("llama", 0.1, 0.1, Prior::Cold);
         router.add_model("mistral", 0.4, 1.6, Prior::Cold);
-        ServerState {
+        ServerState::new(
             router,
-            cache: ContextCache::new(4096),
-            featurizer: Box::new(|t: &str| {
+            ContextCache::new(4096),
+            Box::new(|t: &str| {
                 let h = t.len() as f64;
                 Ok(vec![h % 2.0 - 0.5, (h % 5.0) / 5.0, 0.1, 1.0])
             }),
-            metrics: std::sync::Arc::new(Metrics::new()),
-        }
+            std::sync::Arc::new(Metrics::new()),
+        )
     }
 
     #[test]

@@ -13,6 +13,41 @@ use crate::util::rng::{mix2, Rng};
 
 pub const D_CTX: usize = 26;
 
+/// Deterministic text featurizer for serving *arbitrary* prompts without
+/// PJRT artifacts (the [`SimFeaturizer`] above needs corpus `Prompt`
+/// metadata).  Hashed bag-of-words: each token contributes a pseudo-random
+/// direction in the `d-1` non-bias dims, the sum is scaled by 1/√n so dims
+/// stay unit-ish variance, and the trailing dim is the bias 1 — the
+/// whitened-context contract the router expects.  Used by the server's
+/// surrogate fallback, the sharded-engine tests and the throughput bench.
+pub fn hash_features(text: &str, d: usize) -> Vec<f64> {
+    assert!(d >= 2, "need at least one feature dim plus bias");
+    let mut x = vec![0.0; d];
+    let mut n_tokens = 0u64;
+    for tok in text.split_whitespace() {
+        // FNV-1a over the token bytes
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for byte in tok.bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        n_tokens += 1;
+        for (i, v) in x.iter_mut().take(d - 1).enumerate() {
+            let u = (mix2(h, i as u64) >> 11) as f64 / (1u64 << 53) as f64;
+            // uniform on [-√3, √3]: zero mean, unit variance per token
+            *v += (u * 2.0 - 1.0) * 3f64.sqrt();
+        }
+    }
+    if n_tokens > 0 {
+        let s = 1.0 / (n_tokens as f64).sqrt();
+        for v in x.iter_mut().take(d - 1) {
+            *v *= s;
+        }
+    }
+    x[d - 1] = 1.0;
+    x
+}
+
 /// Deterministic whitened featurizer.
 pub struct SimFeaturizer {
     /// per-benchmark cluster centroids in the 25 non-bias dims
@@ -76,6 +111,29 @@ impl SimFeaturizer {
 mod tests {
     use super::*;
     use crate::sim::corpus::Corpus;
+
+    #[test]
+    fn hash_features_contract() {
+        let a = hash_features("what is the capital of peru", 8);
+        let b = hash_features("what is the capital of peru", 8);
+        assert_eq!(a, b, "deterministic");
+        assert_eq!(a.len(), 8);
+        assert_eq!(a[7], 1.0, "bias dim");
+        let c = hash_features("completely different text here", 8);
+        assert_ne!(a, c, "distinct prompts must differ");
+        // empty prompt still yields a valid (bias-only) context
+        let e = hash_features("", 8);
+        assert_eq!(e[7], 1.0);
+        assert!(e[..7].iter().all(|&v| v == 0.0));
+        // unit-ish variance over many prompts
+        let xs: Vec<Vec<f64>> = (0..500)
+            .map(|i| hash_features(&format!("prompt number {i} with words {}", i * 7), 8))
+            .collect();
+        for j in 0..7 {
+            let var = xs.iter().map(|x| x[j] * x[j]).sum::<f64>() / xs.len() as f64;
+            assert!(var > 0.2 && var < 3.0, "dim {j} var {var}");
+        }
+    }
 
     #[test]
     fn deterministic_and_bias_terminated() {

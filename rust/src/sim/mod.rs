@@ -7,7 +7,7 @@ pub mod tokens;
 pub mod world;
 
 pub use corpus::{Corpus, Prompt};
-pub use featurizer::SimFeaturizer;
+pub use featurizer::{hash_features, SimFeaturizer};
 pub use world::{
     model_bank, EnvView, FlashScenario, Judge, ModelSpec, World, FLASH, GEMINI_PRO, JUDGES, LLAMA,
     MISTRAL,

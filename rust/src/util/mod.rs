@@ -4,3 +4,25 @@ pub mod bench;
 pub mod json;
 pub mod prop;
 pub mod rng;
+
+/// Parse an env-var override, falling back to `default` when unset or
+/// unparsable — the `CRITERION_MEASUREMENT_TIME` pattern used by the PB_*
+/// knobs in perf tests and benches so slow runners loosen budgets instead
+/// of flaking.
+pub fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::env_or;
+
+    // no set_var here: mutating the environment races concurrent getenv in
+    // the parallel test binary (UB on glibc); the parse path is covered by
+    // the integration tests that run with PB_* knobs exported
+    #[test]
+    fn env_or_falls_back_when_unset() {
+        assert_eq!(env_or("PB_SURELY_UNSET_VAR_XYZ", 42u64), 42);
+        assert_eq!(env_or("PB_SURELY_UNSET_VAR_XYZ", 3.5f64), 3.5);
+    }
+}

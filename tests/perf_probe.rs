@@ -1,8 +1,43 @@
-//! Perf probes backing EXPERIMENTS.md §Perf (run with --ignored).
+//! Perf probes backing EXPERIMENTS.md §Perf (run with --ignored), plus a
+//! CI-safe latency guard that runs by default: its threshold comes from
+//! the PB_ROUTE_BUDGET_US env var (the CRITERION_MEASUREMENT_TIME
+//! override pattern), so slow shared runners loosen the budget instead of
+//! flaking.
 use paretobandit::linalg::Mat;
 use paretobandit::router::{ParetoRouter, Prior, RouterConfig};
 use paretobandit::util::bench::{bench_batched, black_box};
+use paretobandit::util::env_or;
 use paretobandit::util::rng::Rng;
+
+/// Not #[ignore]: guards against gross routing-path regressions (e.g. an
+/// accidental O(d^3) per decision) on every `cargo test`.  The default
+/// budget is ~100x the release-mode figure so debug builds and loaded CI
+/// runners pass; tighten via PB_ROUTE_BUDGET_US when measuring for real.
+#[test]
+fn route_decision_within_latency_budget() {
+    let budget_us: f64 = env_or("PB_ROUTE_BUDGET_US", 2_000.0);
+    let samples: usize = env_or("PB_PERF_SAMPLES", 200);
+    let d = 26;
+    let mut rng = Rng::new(1);
+    let xs: Vec<Vec<f64>> = (0..256).map(|_| ctx(&mut rng, d)).collect();
+    let mut r = mk_router(d);
+    // warm the posteriors so the measured path includes realistic scoring
+    for i in 0..600usize {
+        let x = &xs[i & 255];
+        let dec = r.route(x);
+        r.feedback(dec.arm, x, 0.8, 2e-4);
+    }
+    let mut i = 0usize;
+    let stats = bench_batched(50, samples, 32, || {
+        black_box(r.route(&xs[i & 255]).arm);
+        i += 1;
+    });
+    let p50_us = stats.p50_ns / 1e3;
+    assert!(
+        p50_us <= budget_us,
+        "route() p50 {p50_us:.1}us exceeds PB_ROUTE_BUDGET_US={budget_us}us"
+    );
+}
 
 fn ctx(rng: &mut Rng, d: usize) -> Vec<f64> {
     let mut x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();

@@ -1,0 +1,182 @@
+//! Sharded-engine acceptance: K shards fed round-robin from one client
+//! must (a) converge to the same arm ranking as the 1-shard baseline on
+//! stationary traffic — shards only see 1/K of the stream, so this only
+//! holds because the merge/broadcast cycle shares posteriors — and (b)
+//! hold the *global* mean per-request cost within the paper's 0.4%
+//! overshoot tolerance of the budget ceiling, which only holds because the
+//! dollar ledger is shared rather than per-replica.
+//!
+//! Override the traffic volume with PB_CONV_REQS (same env-override
+//! pattern as CRITERION_MEASUREMENT_TIME) when running on slow hardware.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use paretobandit::pacer::{PacerConfig, SharedPacer};
+use paretobandit::router::{ContextCache, ParetoRouter, Prior, RouterConfig};
+use paretobandit::server::{Client, EngineConfig, Metrics, ServerState, ShardedEngine};
+use paretobandit::sim::hash_features;
+use paretobandit::util::env_or;
+use paretobandit::util::json::Json;
+use paretobandit::util::rng::Rng;
+
+const D: usize = 8;
+const BUDGET: f64 = 4e-4;
+/// realised $/request per arm (mistral is the value pick at 2x budget, so
+/// the pacer must mix it with llama; gemini is 6x budget)
+const COSTS: [f64; 3] = [1e-4, 8e-4, 2.4e-3];
+/// gemini's quality plateaus below mistral's: paying 6x the budget buys
+/// nothing, so a correct router must rank it last
+const QUALITY: [f64; 3] = [0.55, 0.90, 0.80];
+/// force a merge cycle this often (timer merges are disabled so runs are
+/// deterministic)
+const SYNC_EVERY: u64 = 500;
+
+fn spawn_engine(workers: usize) -> ShardedEngine {
+    let ledger = Arc::new(SharedPacer::new(PacerConfig::new(BUDGET)));
+    let build = move |shard: usize| {
+        // tabula-rasa hyperparameters: cold-start exploration must work
+        // without warmup priors (α=0.05 keeps the confidence bonus on the
+        // reward scale — the paper's no-prior knee point)
+        let mut router =
+            ParetoRouter::new(RouterConfig::tabula_rasa(D, Some(BUDGET), 1000 + shard as u64));
+        router.use_shared_pacer(ledger.clone());
+        router.add_model("llama", 0.10, 0.10, Prior::Cold);
+        router.add_model("mistral", 0.40, 1.60, Prior::Cold);
+        router.add_model("gemini", 1.00, 3.00, Prior::Cold);
+        ServerState::new(
+            router,
+            ContextCache::new(65536),
+            Box::new(|t: &str| Ok(hash_features(t, D))),
+            Arc::new(Metrics::new()),
+        )
+    };
+    let cfg = EngineConfig::new(workers).merge_every(Duration::from_secs(3600));
+    ShardedEngine::spawn("127.0.0.1:0", cfg, build).unwrap()
+}
+
+struct RunResult {
+    counts: [u64; 3],
+    /// mean $/request over the post-warmup window
+    mean_cost_post: f64,
+}
+
+/// Drive `reqs` stationary requests through an engine; rewards depend only
+/// on the arm (plus noise), costs are fixed per arm.
+fn drive(workers: usize, reqs: u64) -> RunResult {
+    let engine = spawn_engine(workers);
+    let mut client = Client::connect(&engine.addr).unwrap();
+    let mut rng = Rng::new(7);
+    let warmup = reqs / 3;
+    let mut counts = [0u64; 3];
+    let mut post_spend = 0.0;
+    let mut post_n = 0u64;
+    for i in 0..reqs {
+        let resp = client
+            .call(&Json::obj(vec![
+                ("op", Json::Str("route".into())),
+                ("id", Json::Num(i as f64)),
+                ("prompt", Json::Str(format!("stationary prompt {} tail {}", i % 97, i % 13))),
+            ]))
+            .unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+        let arm = resp.get("arm").unwrap().as_f64().unwrap() as usize;
+        assert!(arm < 3);
+        counts[arm] += 1;
+        let cost = COSTS[arm];
+        let reward = (QUALITY[arm] + rng.normal() * 0.03).clamp(0.0, 1.0);
+        if i >= warmup {
+            post_spend += cost;
+            post_n += 1;
+        }
+        let fb = client
+            .call(&Json::obj(vec![
+                ("op", Json::Str("feedback".into())),
+                ("id", Json::Num(i as f64)),
+                ("reward", Json::Num(reward)),
+                ("cost", Json::Num(cost)),
+            ]))
+            .unwrap();
+        assert_eq!(fb.get("ok").and_then(Json::as_bool), Some(true), "{fb:?}");
+        if (i + 1) % SYNC_EVERY == 0 {
+            let s = client
+                .call(&Json::obj(vec![("op", Json::Str("sync".into()))]))
+                .unwrap();
+            assert_eq!(s.get("ok").and_then(Json::as_bool), Some(true), "{s:?}");
+        }
+    }
+    // final cycle so every shard ends on the merged global posterior
+    client
+        .call(&Json::obj(vec![("op", Json::Str("sync".into()))]))
+        .unwrap();
+    let m = client
+        .call(&Json::obj(vec![("op", Json::Str("metrics".into()))]))
+        .unwrap();
+    assert_eq!(m.get("requests").unwrap().as_f64(), Some(reqs as f64));
+    assert_eq!(m.get("workers").unwrap().as_f64(), Some(workers as f64));
+    // round-robin dispatch splits routes across shards exactly evenly
+    let per_shard = m.get("per_shard").unwrap().as_arr().unwrap();
+    assert_eq!(per_shard.len(), workers);
+    for s in per_shard {
+        let n = s.as_f64().unwrap();
+        assert!(
+            (n - reqs as f64 / workers as f64).abs() <= 1.0,
+            "unbalanced shard load: {n} of {reqs}"
+        );
+    }
+    engine.stop();
+    RunResult {
+        counts,
+        mean_cost_post: post_spend / post_n as f64,
+    }
+}
+
+fn ranking(counts: &[u64; 3]) -> [usize; 3] {
+    let mut order = [0usize, 1, 2];
+    order.sort_by_key(|&a| std::cmp::Reverse(counts[a]));
+    order
+}
+
+#[test]
+fn four_shards_match_single_shard_ranking_and_hold_the_global_budget() {
+    let reqs: u64 = env_or("PB_CONV_REQS", 21_000);
+    let single = drive(1, reqs);
+    let sharded = drive(4, reqs);
+
+    // (a) same final arm ranking as the 1-shard baseline
+    let r1 = ranking(&single.counts);
+    let r4 = ranking(&sharded.counts);
+    assert_eq!(
+        r1, r4,
+        "rankings diverge: 1-shard {:?} vs 4-shard {:?}",
+        single.counts, sharded.counts
+    );
+    // the 6x-over-budget arm must end up last in both
+    assert_eq!(r1[2], 2, "gemini should be rank 3: {:?}", single.counts);
+    // the ranking is meaningful: top two arms are clearly separated
+    for r in [&single, &sharded] {
+        let top = r.counts[r4[0]] as f64;
+        let second = r.counts[r4[1]] as f64;
+        assert!(
+            top > second * 1.1,
+            "degenerate ranking, counts too close: {:?}",
+            r.counts
+        );
+    }
+
+    // (b) global mean $/request within the paper's 0.4% overshoot
+    // tolerance of the ceiling, post-warmup — for BOTH configurations;
+    // for the sharded one this exercises the shared atomic ledger
+    for (label, r) in [("1-shard", &single), ("4-shard", &sharded)] {
+        assert!(
+            r.mean_cost_post <= BUDGET * 1.004,
+            "{label}: mean ${:.6e}/req exceeds ceiling ${BUDGET:.1e} by >0.4%",
+            r.mean_cost_post
+        );
+        assert!(
+            r.mean_cost_post >= BUDGET * 0.5,
+            "{label}: budget underused (${:.6e}/req) — pacer stuck on the cheap arm?",
+            r.mean_cost_post
+        );
+    }
+}
