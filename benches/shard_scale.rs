@@ -12,16 +12,18 @@
 //!   PB_SHARD_CLIENTS    concurrent client threads    (default 8)
 //!   PB_SHARD_WORK_ITERS featurizer work per request  (default 30000)
 //!   PB_SHARD_MAX        largest shard count          (default 8)
+//!   PB_SHARD_BATCH      route_batch/feedback_batch chunk size
+//!                       (default 0 = per-request round-trips)
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use paretobandit::client::ParetoClient;
 use paretobandit::pacer::{PacerConfig, SharedPacer};
 use paretobandit::router::{ContextCache, ParetoRouter, Prior, RouterConfig};
-use paretobandit::server::{Client, EngineConfig, Metrics, ServerState, ShardedEngine};
+use paretobandit::server::{EngineConfig, Metrics, ServerState, ShardedEngine};
 use paretobandit::sim::hash_features;
 use paretobandit::util::env_or;
-use paretobandit::util::json::Json;
 
 const D: usize = 26;
 const BUDGET: f64 = 6.6e-4;
@@ -66,34 +68,43 @@ fn spawn_engine(workers: usize, work_iters: u64) -> ShardedEngine {
     ShardedEngine::spawn("127.0.0.1:0", cfg, build).expect("bind")
 }
 
-/// Drive `reqs` route+feedback pairs through `clients` parallel
-/// connections; returns wall-clock seconds.
-fn drive(engine: &ShardedEngine, reqs: u64, clients: u64) -> f64 {
+/// Drive `reqs` route+feedback pairs through `clients` parallel typed-SDK
+/// connections; returns wall-clock seconds.  `batch > 1` switches each
+/// client to route_batch/feedback_batch chunks of that size, amortizing
+/// socket round-trips across the engine's cross-shard fan-out.
+fn drive(engine: &ShardedEngine, reqs: u64, clients: u64, batch: u64) -> f64 {
     let addr = engine.addr;
     let per = reqs / clients;
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for c in 0..clients {
         handles.push(std::thread::spawn(move || {
-            let mut client = Client::connect(&addr).expect("connect");
-            for i in 0..per {
-                let id = c * 10_000_000 + i;
-                let r = client
-                    .call(&Json::obj(vec![
-                        ("op", Json::Str("route".into())),
-                        ("id", Json::Num(id as f64)),
-                        ("prompt", Json::Str(format!("client {c} request {i} payload"))),
-                    ]))
-                    .expect("route");
-                assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{r:?}");
-                client
-                    .call(&Json::obj(vec![
-                        ("op", Json::Str("feedback".into())),
-                        ("id", Json::Num(id as f64)),
-                        ("reward", Json::Num(0.8)),
-                        ("cost", Json::Num(2e-4)),
-                    ]))
-                    .expect("feedback");
+            let mut client = ParetoClient::connect(addr).expect("connect");
+            if batch <= 1 {
+                for i in 0..per {
+                    let id = c * 10_000_000 + i;
+                    client
+                        .route(id, &format!("client {c} request {i} payload"))
+                        .expect("route");
+                    client.feedback(id, 0.8, 2e-4).expect("feedback");
+                }
+            } else {
+                let mut i = 0;
+                while i < per {
+                    let n = batch.min(per - i);
+                    let items: Vec<(u64, String)> = (i..i + n)
+                        .map(|k| (c * 10_000_000 + k, format!("client {c} request {k} payload")))
+                        .collect();
+                    let routed = client.route_batch(&items).expect("route_batch");
+                    let fb: Vec<(u64, f64, f64)> = routed
+                        .iter()
+                        .map(|r| (r.as_ref().expect("route item").id, 0.8, 2e-4))
+                        .collect();
+                    for ack in client.feedback_batch(&fb).expect("feedback_batch") {
+                        ack.expect("feedback item");
+                    }
+                    i += n;
+                }
             }
         }));
     }
@@ -108,10 +119,11 @@ fn main() {
     let clients: u64 = env_or("PB_SHARD_CLIENTS", 8);
     let work_iters: u64 = env_or("PB_SHARD_WORK_ITERS", 30_000);
     let max_shards: usize = env_or("PB_SHARD_MAX", 8);
+    let batch: u64 = env_or("PB_SHARD_BATCH", 0);
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     println!(
         "[shard_scale] {reqs} reqs/config, {clients} clients, \
-         {work_iters} featurizer work iters, {cores} cores"
+         {work_iters} featurizer work iters, batch {batch}, {cores} cores"
     );
 
     let mut shard_counts = vec![1usize];
@@ -125,8 +137,8 @@ fn main() {
     for &workers in &shard_counts {
         let engine = spawn_engine(workers, work_iters);
         // warmup: fill caches, spin up connection handlers
-        drive(&engine, (reqs / 10).max(clients), clients);
-        let wall = drive(&engine, reqs, clients);
+        drive(&engine, (reqs / 10).max(clients), clients, batch);
+        let wall = drive(&engine, reqs, clients, batch);
         let rps = reqs as f64 / wall;
         if workers == 1 {
             baseline = rps;

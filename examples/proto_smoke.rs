@@ -1,0 +1,99 @@
+//! Protocol-v2 conformance smoke against a LIVE server process.
+//!
+//! CI starts `paretobandit serve --workers 4` and points this driver at
+//! it; unlike the in-process integration tests this exercises the real
+//! binary end-to-end (flag parsing, featurizer fallback, real sockets).
+//! Drives: route_batch (64 prompts, one round-trip, request order,
+//! cross-shard fan-out) -> feedback_batch -> hot-swap by name ->
+//! set_budget -> sync -> malformed input (structured codes, connection
+//! survives) -> shutdown.
+//!
+//! ```text
+//! cargo run --release -- serve --addr 127.0.0.1:7979 --workers 4 &
+//! cargo run --release --example proto_smoke -- 127.0.0.1:7979
+//! ```
+
+use paretobandit::client::{ClientError, ParetoClient};
+use paretobandit::router::ModelRef;
+use paretobandit::server::ErrorCode;
+use paretobandit::util::json::Json;
+
+fn main() {
+    let addr = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "127.0.0.1:7979".to_string());
+    let mut c = ParetoClient::connect(addr.as_str()).expect("connect");
+
+    // --- batch verbs: 64 prompts in one round-trip, results in order ---
+    let items: Vec<(u64, String)> = (0..64).map(|i| (i, format!("smoke prompt {i}"))).collect();
+    let routed = c.route_batch(&items).expect("route_batch");
+    assert_eq!(routed.len(), 64);
+    let mut shards = std::collections::BTreeSet::new();
+    for (k, r) in routed.iter().enumerate() {
+        let r = r.as_ref().expect("route item");
+        assert_eq!(r.id, k as u64, "results must be in request order");
+        shards.insert(r.shard);
+    }
+    println!("route_batch: 64 items in one round-trip across shards {shards:?}");
+    let fb: Vec<(u64, f64, f64)> = (0..64).map(|i| (i, 0.8, 2e-4)).collect();
+    for ack in c.feedback_batch(&fb).expect("feedback_batch") {
+        ack.expect("feedback item");
+    }
+    println!("feedback_batch: 64 acks ok");
+
+    // --- hot-swap by name through the serialized admin path ------------
+    let arm = c
+        .add_model("smoke-flash", 0.3, 2.5, Some((20.0, 0.5)))
+        .expect("add_model");
+    match c.add_model("smoke-flash", 0.3, 2.5, None) {
+        Err(ClientError::Api(e)) => assert_eq!(e.code, ErrorCode::DuplicateModel),
+        other => panic!("duplicate add_model must fail with a typed code: {other:?}"),
+    }
+    assert_eq!(
+        c.reprice(&ModelRef::Name("smoke-flash".into()), 0.2, 2.0)
+            .expect("reprice"),
+        arm,
+        "reprice by name must hit the add_model slot"
+    );
+    assert_eq!(
+        c.delete_model(&ModelRef::Name("smoke-flash".into()))
+            .expect("delete_model"),
+        arm
+    );
+    println!("hot-swap by name: add/reprice/delete hit slot {arm}");
+
+    // --- runtime budget + forced merge cycle ----------------------------
+    c.set_budget(1e-3).expect("set_budget");
+    let s = c.sync().expect("sync");
+    assert!(s.synced_shards >= 1, "sync must report shards: {s:?}");
+    println!("set_budget + sync: {} shard(s) merged", s.synced_shards);
+
+    // --- malformed input: structured codes, id echo, connection lives --
+    let r = c
+        .call_raw(&Json::obj(vec![
+            ("op", Json::Str("frobnicate".into())),
+            ("id", Json::Num(9.0)),
+        ]))
+        .expect("raw call");
+    assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(r.get("code").and_then(Json::as_str), Some("bad_request"));
+    assert_eq!(r.get("id").and_then(Json::as_f64), Some(9.0));
+    let r = c
+        .call_raw(&Json::obj(vec![("op", Json::Str("route".into())), ("id", Json::Num(77.0))]))
+        .expect("raw call");
+    assert_eq!(r.get("code").and_then(Json::as_str), Some("bad_request"));
+    assert_eq!(r.get("id").and_then(Json::as_f64), Some(77.0), "errors echo the id");
+    println!("malformed input: structured bad_request with id echo");
+
+    let m = c.metrics().expect("metrics");
+    assert!(m.get("requests").and_then(Json::as_f64).unwrap_or(0.0) >= 64.0);
+    println!(
+        "metrics: {} requests, {} feedbacks, {} worker(s)",
+        m.get("requests").and_then(Json::as_f64).unwrap_or(0.0),
+        m.get("feedbacks").and_then(Json::as_f64).unwrap_or(0.0),
+        m.get("workers").and_then(Json::as_f64).unwrap_or(0.0),
+    );
+
+    c.shutdown().expect("shutdown");
+    println!("protocol v2 conformance: OK");
+}

@@ -16,11 +16,11 @@
 
 use std::sync::Arc;
 
+use paretobandit::client::ParetoClient;
 use paretobandit::router::{ContextCache, ParetoRouter, Prior, RouterConfig};
 use paretobandit::runtime::{default_artifacts_dir, ArtifactMeta, Embedder, Runtime};
-use paretobandit::server::{Client, Featurize, Metrics, Server, ServerState};
+use paretobandit::server::{Featurize, Metrics, Server, ServerState};
 use paretobandit::sim::{hash_features, model_bank, Corpus, FlashScenario, Judge, World};
-use paretobandit::util::json::Json;
 
 const N_REQUESTS: usize = 1824;
 const BUDGET: f64 = 6.6e-4;
@@ -69,45 +69,28 @@ fn main() {
     .expect("bind");
     println!("server on {} — driving {N_REQUESTS} requests from the test split", server.addr);
 
-    let mut client = Client::connect(&server.addr).expect("connect");
+    let mut client = ParetoClient::connect(server.addr).expect("connect");
     let t0 = std::time::Instant::now();
     let mut spend = 0.0;
     let mut quality = 0.0;
     let mut counts = vec![0usize; 3];
     for (i, &pid) in corpus.test.iter().take(N_REQUESTS).enumerate() {
         let prompt = corpus.prompt(pid);
-        // 1. route
-        let resp = client
-            .call(&Json::obj(vec![
-                ("op", Json::Str("route".into())),
-                ("id", Json::Num(i as f64)),
-                ("prompt", Json::Str(prompt.text.clone())),
-            ]))
-            .expect("route");
-        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
-        let arm = resp.get("arm").unwrap().as_f64().unwrap() as usize;
-        counts[arm] += 1;
+        // 1. route (typed SDK; the wire format lives in server::proto)
+        let routed = client.route(i as u64, &prompt.text).expect("route");
+        counts[routed.arm] += 1;
         // 2. "dispatch to the LLM" -> judge score + realised cost
-        let reward = world.reward(prompt, arm);
-        let cost = world.cost(prompt, arm);
+        let reward = world.reward(prompt, routed.arm);
+        let cost = world.cost(prompt, routed.arm);
         spend += cost;
         quality += reward;
         // 3. asynchronous feedback path
-        let fb = client
-            .call(&Json::obj(vec![
-                ("op", Json::Str("feedback".into())),
-                ("id", Json::Num(i as f64)),
-                ("reward", Json::Num(reward)),
-                ("cost", Json::Num(cost)),
-            ]))
-            .expect("feedback");
-        assert_eq!(fb.get("ok").and_then(Json::as_bool), Some(true));
+        let arm = client.feedback(i as u64, reward, cost).expect("feedback");
+        assert_eq!(arm, routed.arm);
     }
     let wall = t0.elapsed().as_secs_f64();
 
-    let m = client
-        .call(&Json::obj(vec![("op", Json::Str("metrics".into()))]))
-        .unwrap();
+    let m = client.metrics().expect("metrics");
     println!("\n== end-to-end results ==");
     println!(
         "requests            {} in {:.1}s -> {:.0} req/s (incl. client round-trips)",

@@ -1,0 +1,472 @@
+//! Typed client SDK for the v2 wire protocol.
+//!
+//! [`ParetoClient`] speaks protocol v2 (see `server::proto` and the README
+//! protocol reference) over one TCP connection: typed methods for every
+//! verb, structured [`ApiError`]s carrying the server's machine-readable
+//! error code, and the batch verbs (`route_batch` / `feedback_batch`)
+//! that amortize socket round-trips and JSON parsing — one line in, one
+//! line out, per-item results in request order.
+//!
+//! v1 fallback: against a pre-v2 server (responses without a `"v"`
+//! field), the single-verb methods work unchanged and the batch methods
+//! transparently degrade to per-item calls, so tooling built on this SDK
+//! runs against either server generation.  Name-based model addressing
+//! ([`ModelRef::Name`]) is v2-only.
+//!
+//! ```no_run
+//! use paretobandit::client::ParetoClient;
+//! let mut c = ParetoClient::connect("127.0.0.1:7878").unwrap();
+//! let routed = c.route(1, "what is the capital of peru").unwrap();
+//! c.feedback(1, 0.9, 2e-4).unwrap();
+//! println!("served by {} on shard {}", routed.model, routed.shard);
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use crate::router::ModelRef;
+use crate::server::proto::{ErrorCode, PROTO_V};
+use crate::util::json::Json;
+
+/// A structured server-side error: the machine-readable code, the human
+/// message and the echoed request id (when the server could parse one).
+#[derive(Clone, Debug)]
+pub struct ApiError {
+    pub code: ErrorCode,
+    pub msg: String,
+    pub id: Option<u64>,
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} [{}]", self.msg, self.code.as_str())
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+/// SDK error: either the transport failed (socket, malformed response) or
+/// the server answered with a typed protocol error.
+#[derive(Debug)]
+pub enum ClientError {
+    Transport(String),
+    Api(ApiError),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Transport(m) => write!(f, "transport: {m}"),
+            ClientError::Api(e) => write!(f, "api: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<std::io::Error> for ClientError {
+    fn from(e: std::io::Error) -> ClientError {
+        ClientError::Transport(e.to_string())
+    }
+}
+
+pub type ClientResult<T> = Result<T, ClientError>;
+
+/// One successful routing decision.
+#[derive(Clone, Debug)]
+pub struct Routed {
+    pub id: u64,
+    pub arm: usize,
+    pub model: String,
+    pub lambda: f64,
+    pub forced: bool,
+    pub shard: usize,
+}
+
+/// `sync` acknowledgement.
+#[derive(Clone, Copy, Debug)]
+pub struct SyncInfo {
+    pub synced_shards: usize,
+    pub merges: u64,
+}
+
+/// Typed line-JSON client for the ParetoBandit serving protocol.
+pub struct ParetoClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    /// set once a batch verb discovers a pre-v2 server; batch methods
+    /// then degrade to per-item calls
+    v1_fallback: bool,
+}
+
+impl ParetoClient {
+    /// Connect to a server (`"127.0.0.1:7878"`, a `SocketAddr`, ...).
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> ClientResult<ParetoClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?; // line-RPC: kill Nagle
+        Ok(ParetoClient {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+            v1_fallback: false,
+        })
+    }
+
+    /// Send one raw request object and return the raw response object
+    /// (escape hatch; the typed methods are built on this).
+    pub fn call_raw(&mut self, req: &Json) -> ClientResult<Json> {
+        writeln!(self.writer, "{}", req.to_string())?;
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            return Err(ClientError::Transport("server closed the connection".into()));
+        }
+        Json::parse(&line).map_err(|e| ClientError::Transport(format!("response parse: {e}")))
+    }
+
+    fn api_error(resp: &Json) -> ApiError {
+        ApiError {
+            code: resp
+                .get("code")
+                .and_then(Json::as_str)
+                .and_then(ErrorCode::from_wire)
+                .unwrap_or(ErrorCode::BadRequest),
+            msg: resp
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown error")
+                .to_string(),
+            id: resp.get("id").and_then(Json::as_f64).map(|v| v as u64),
+        }
+    }
+
+    fn expect_ok(resp: Json) -> ClientResult<Json> {
+        if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+            Ok(resp)
+        } else {
+            Err(ClientError::Api(Self::api_error(&resp)))
+        }
+    }
+
+    fn parse_routed(r: &Json) -> Option<Routed> {
+        Some(Routed {
+            id: r.get("id")?.as_f64()? as u64,
+            arm: r.get("arm")?.as_f64()? as usize,
+            model: r.get("model")?.as_str()?.to_string(),
+            lambda: r.get("lambda")?.as_f64()?,
+            forced: r.get("forced")?.as_bool()?,
+            // pre-shard-engine servers did not report a shard
+            shard: r.get("shard").and_then(Json::as_f64).unwrap_or(0.0) as usize,
+        })
+    }
+
+    fn versioned(mut fields: Vec<(&str, Json)>) -> Json {
+        let mut all = vec![("v", Json::Num(PROTO_V as f64))];
+        all.append(&mut fields);
+        Json::obj(all)
+    }
+
+    // ------------------------------------------------------------------
+    // request path
+
+    /// Route one prompt.
+    pub fn route(&mut self, id: u64, prompt: &str) -> ClientResult<Routed> {
+        match self.route_item(id, prompt)? {
+            Ok(r) => Ok(r),
+            Err(e) => Err(ClientError::Api(e)),
+        }
+    }
+
+    /// transport-vs-api split used by both the single path and the v1
+    /// batch fallback (an item failure must not abort a whole batch)
+    fn route_item(&mut self, id: u64, prompt: &str) -> ClientResult<Result<Routed, ApiError>> {
+        let resp = self.call_raw(&Self::versioned(vec![
+            ("op", Json::Str("route".into())),
+            ("id", Json::Num(id as f64)),
+            ("prompt", Json::Str(prompt.to_string())),
+        ]))?;
+        if resp.get("ok").and_then(Json::as_bool) != Some(true) {
+            return Ok(Err(Self::api_error(&resp)));
+        }
+        Self::parse_routed(&resp)
+            .map(Ok)
+            .ok_or_else(|| ClientError::Transport("malformed route response".into()))
+    }
+
+    /// Report reward + realised cost for a routed id; returns the arm
+    /// that served it.
+    pub fn feedback(&mut self, id: u64, reward: f64, cost: f64) -> ClientResult<usize> {
+        match self.feedback_item(id, reward, cost)? {
+            Ok(arm) => Ok(arm),
+            Err(e) => Err(ClientError::Api(e)),
+        }
+    }
+
+    fn feedback_item(
+        &mut self,
+        id: u64,
+        reward: f64,
+        cost: f64,
+    ) -> ClientResult<Result<usize, ApiError>> {
+        let resp = self.call_raw(&Self::versioned(vec![
+            ("op", Json::Str("feedback".into())),
+            ("id", Json::Num(id as f64)),
+            ("reward", Json::Num(reward)),
+            ("cost", Json::Num(cost)),
+        ]))?;
+        if resp.get("ok").and_then(Json::as_bool) != Some(true) {
+            return Ok(Err(Self::api_error(&resp)));
+        }
+        Ok(Ok(resp.get("arm").and_then(Json::as_f64).unwrap_or(0.0) as usize))
+    }
+
+    /// Route a batch of `(id, prompt)` items in ONE socket round-trip;
+    /// per-item results come back in request order.  Against a pre-v2
+    /// server this transparently degrades to per-item calls.
+    pub fn route_batch<S: AsRef<str>>(
+        &mut self,
+        items: &[(u64, S)],
+    ) -> ClientResult<Vec<Result<Routed, ApiError>>> {
+        if self.v1_fallback {
+            return items
+                .iter()
+                .map(|(id, p)| self.route_item(*id, p.as_ref()))
+                .collect();
+        }
+        let req = Self::versioned(vec![
+            ("op", Json::Str("route_batch".into())),
+            (
+                "items",
+                Json::Arr(
+                    items
+                        .iter()
+                        .map(|(id, p)| {
+                            Json::obj(vec![
+                                ("id", Json::Num(*id as f64)),
+                                ("prompt", Json::Str(p.as_ref().to_string())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        let resp = self.call_raw(&req)?;
+        if resp.get("ok").and_then(Json::as_bool) != Some(true) {
+            // a pre-v2 server answers without a "v" stamp and does not
+            // know the batch verbs: fall back to per-item calls
+            if resp.get("v").is_none() {
+                self.v1_fallback = true;
+                return items
+                    .iter()
+                    .map(|(id, p)| self.route_item(*id, p.as_ref()))
+                    .collect();
+            }
+            return Err(ClientError::Api(Self::api_error(&resp)));
+        }
+        let results = resp
+            .get("results")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ClientError::Transport("malformed route_batch response".into()))?;
+        if results.len() != items.len() {
+            return Err(ClientError::Transport(format!(
+                "route_batch: {} results for {} items",
+                results.len(),
+                items.len()
+            )));
+        }
+        results
+            .iter()
+            .map(|r| {
+                if r.get("ok").and_then(Json::as_bool) == Some(true) {
+                    Self::parse_routed(r)
+                        .map(Ok)
+                        .ok_or_else(|| ClientError::Transport("malformed batch item".into()))
+                } else {
+                    Ok(Err(Self::api_error(r)))
+                }
+            })
+            .collect()
+    }
+
+    /// Report a batch of `(id, reward, cost)` observations in ONE socket
+    /// round-trip; per-item acks (the serving arm) in request order.
+    pub fn feedback_batch(
+        &mut self,
+        items: &[(u64, f64, f64)],
+    ) -> ClientResult<Vec<Result<usize, ApiError>>> {
+        if self.v1_fallback {
+            return items
+                .iter()
+                .map(|&(id, r, c)| self.feedback_item(id, r, c))
+                .collect();
+        }
+        let req = Self::versioned(vec![
+            ("op", Json::Str("feedback_batch".into())),
+            (
+                "items",
+                Json::Arr(
+                    items
+                        .iter()
+                        .map(|&(id, reward, cost)| {
+                            Json::obj(vec![
+                                ("id", Json::Num(id as f64)),
+                                ("reward", Json::Num(reward)),
+                                ("cost", Json::Num(cost)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        let resp = self.call_raw(&req)?;
+        if resp.get("ok").and_then(Json::as_bool) != Some(true) {
+            if resp.get("v").is_none() {
+                self.v1_fallback = true;
+                return items
+                    .iter()
+                    .map(|&(id, r, c)| self.feedback_item(id, r, c))
+                    .collect();
+            }
+            return Err(ClientError::Api(Self::api_error(&resp)));
+        }
+        let results = resp
+            .get("results")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ClientError::Transport("malformed feedback_batch response".into()))?;
+        if results.len() != items.len() {
+            return Err(ClientError::Transport(format!(
+                "feedback_batch: {} results for {} items",
+                results.len(),
+                items.len()
+            )));
+        }
+        Ok(results
+            .iter()
+            .map(|r| {
+                if r.get("ok").and_then(Json::as_bool) == Some(true) {
+                    Ok(r.get("arm").and_then(Json::as_f64).unwrap_or(0.0) as usize)
+                } else {
+                    Err(Self::api_error(r))
+                }
+            })
+            .collect())
+    }
+
+    // ------------------------------------------------------------------
+    // admin path
+
+    /// Register a model; `prior` is an optional `(n_eff, r0)` heuristic
+    /// prior.  Returns the stable arm id.  Duplicate active names are
+    /// rejected with [`ErrorCode::DuplicateModel`].
+    pub fn add_model(
+        &mut self,
+        name: &str,
+        price_in: f64,
+        price_out: f64,
+        prior: Option<(f64, f64)>,
+    ) -> ClientResult<usize> {
+        let mut fields = vec![
+            ("op", Json::Str("add_model".into())),
+            ("name", Json::Str(name.to_string())),
+            ("price_in", Json::Num(price_in)),
+            ("price_out", Json::Num(price_out)),
+        ];
+        if let Some((n_eff, r0)) = prior {
+            fields.push(("n_eff", Json::Num(n_eff)));
+            fields.push(("r0", Json::Num(r0)));
+        }
+        let resp = Self::expect_ok(self.call_raw(&Self::versioned(fields))?)?;
+        resp.get("arm")
+            .and_then(Json::as_f64)
+            .map(|a| a as usize)
+            .ok_or_else(|| ClientError::Transport("malformed add_model response".into()))
+    }
+
+    /// Retire a model by arm id or name; returns the retired slot.
+    /// (Name addressing is v2-only.)
+    pub fn delete_model(&mut self, model: &ModelRef) -> ClientResult<usize> {
+        let mut fields = vec![("op", Json::Str("delete_model".into()))];
+        push_model_ref(&mut fields, model);
+        let resp = Self::expect_ok(self.call_raw(&Self::versioned(fields))?)?;
+        Ok(arm_or_ref(&resp, model))
+    }
+
+    /// Push new list prices by arm id or name; returns the slot hit.
+    pub fn reprice(
+        &mut self,
+        model: &ModelRef,
+        price_in: f64,
+        price_out: f64,
+    ) -> ClientResult<usize> {
+        let mut fields = vec![
+            ("op", Json::Str("reprice".into())),
+            ("price_in", Json::Num(price_in)),
+            ("price_out", Json::Num(price_out)),
+        ];
+        push_model_ref(&mut fields, model);
+        let resp = Self::expect_ok(self.call_raw(&Self::versioned(fields))?)?;
+        Ok(arm_or_ref(&resp, model))
+    }
+
+    /// Change the $/request ceiling at runtime; echoes the new budget.
+    pub fn set_budget(&mut self, budget: f64) -> ClientResult<f64> {
+        let resp = Self::expect_ok(self.call_raw(&Self::versioned(vec![
+            ("op", Json::Str("set_budget".into())),
+            ("budget", Json::Num(budget)),
+        ]))?)?;
+        Ok(resp.get("budget").and_then(Json::as_f64).unwrap_or(budget))
+    }
+
+    /// Serving-metrics snapshot (counters, latency percentiles, per-shard
+    /// and per-arm splits) as raw JSON.
+    pub fn metrics(&mut self) -> ClientResult<Json> {
+        let resp = self.call_raw(&Self::versioned(vec![("op", Json::Str("metrics".into()))]))?;
+        // pre-v2 servers returned the bare snapshot with neither "ok"
+        // nor "v"; that shape is a success, not an error
+        if resp.get("ok").is_none() && resp.get("v").is_none() {
+            return Ok(resp);
+        }
+        Self::expect_ok(resp)
+    }
+
+    /// Force a merge/broadcast cycle (engine) or a well-defined no-op
+    /// (single-worker server, which answers as a 1-shard engine).
+    pub fn sync(&mut self) -> ClientResult<SyncInfo> {
+        let resp = Self::expect_ok(
+            self.call_raw(&Self::versioned(vec![("op", Json::Str("sync".into()))]))?,
+        )?;
+        Ok(SyncInfo {
+            synced_shards: resp
+                .get("synced_shards")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0) as usize,
+            merges: resp.get("merges").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        })
+    }
+
+    /// Ask the server to shut down.
+    pub fn shutdown(&mut self) -> ClientResult<()> {
+        Self::expect_ok(
+            self.call_raw(&Self::versioned(vec![("op", Json::Str("shutdown".into()))]))?,
+        )?;
+        Ok(())
+    }
+}
+
+fn push_model_ref(fields: &mut Vec<(&str, Json)>, model: &ModelRef) {
+    match model {
+        ModelRef::Arm(a) => fields.push(("arm", Json::Num(*a as f64))),
+        ModelRef::Name(n) => fields.push(("model", Json::Str(n.clone()))),
+    }
+}
+
+/// The resolved slot from a v2 response; a v1 server omits it, in which
+/// case an arm-addressed request already knows its slot.
+fn arm_or_ref(resp: &Json, model: &ModelRef) -> usize {
+    resp.get("arm")
+        .and_then(Json::as_f64)
+        .map(|a| a as usize)
+        .unwrap_or(match model {
+            ModelRef::Arm(a) => *a,
+            ModelRef::Name(_) => 0,
+        })
+}

@@ -20,7 +20,10 @@
 //! (`server::ShardedEngine`): N router replicas behind round-robin
 //! dispatch, one shared atomic budget ledger (`pacer::SharedPacer`) and a
 //! periodic posterior merge/broadcast cycle built on mergeable LinUCB
-//! sufficient statistics (`bandit::ArmState::merge`).
+//! sufficient statistics (`bandit::ArmState::merge`).  Both paths speak
+//! wire protocol v2 (`server::proto`): typed requests/responses,
+//! structured error codes, name-based model addressing and batch verbs;
+//! `client::ParetoClient` is the matching typed SDK.
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
@@ -31,6 +34,7 @@
 #![allow(clippy::needless_range_loop, clippy::inherent_to_string)]
 
 pub mod bandit;
+pub mod client;
 pub mod exp;
 pub mod linalg;
 pub mod pacer;

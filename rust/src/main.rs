@@ -200,7 +200,7 @@ fn serve(args: &[String]) {
     let engine = ShardedEngine::spawn(&addr, cfg, build).expect("bind");
     println!(
         "paretobandit serving on {} ({workers} shard(s), merge every {merge_ms} ms, \
-         budget ${budget}/req); line-JSON protocol; op=shutdown to stop",
+         budget ${budget}/req); line-JSON protocol v2 (v1 accepted); op=shutdown to stop",
         engine.addr
     );
     while !engine.is_shutdown() {

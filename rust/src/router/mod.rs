@@ -14,7 +14,7 @@ pub use floor::{FloorConfig, QualityFloorRouter};
 pub use feedback::{ContextCache, FeedbackEvent, FeedbackQueue, FileStore, Pending};
 pub use pareto::{ParetoRouter, Prior, RouteDecision};
 pub use policy::Policy;
-pub use registry::{ModelEntry, Registry};
+pub use registry::{ModelEntry, ModelRef, Registry};
 
 /// Baseline policies (paper §4.1 conditions + standard comparators).
 pub mod baselines {

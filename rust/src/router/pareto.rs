@@ -122,6 +122,29 @@ impl ParetoRouter {
         prior: Prior,
     ) -> usize {
         let id = self.registry.add(name, price_in_per_m, price_out_per_m);
+        self.push_arm(id, prior);
+        id
+    }
+
+    /// Checked registration for the wire API: rejects a `name` that is
+    /// already active (via [`Registry::try_add`], the single home of the
+    /// uniqueness rule) so name addressing stays unambiguous.  The
+    /// unchecked [`ParetoRouter::add_model`] remains available for
+    /// simulation harnesses that reuse display names.
+    pub fn try_add_model(
+        &mut self,
+        name: &str,
+        price_in_per_m: f64,
+        price_out_per_m: f64,
+        prior: Prior,
+    ) -> Option<usize> {
+        let id = self.registry.try_add(name, price_in_per_m, price_out_per_m)?;
+        self.push_arm(id, prior);
+        Some(id)
+    }
+
+    /// Arm-side bookkeeping for a freshly allocated registry slot.
+    fn push_arm(&mut self, id: usize, prior: Prior) {
         let arm = match prior {
             Prior::Cold => ArmState::cold(self.cfg.d, self.cfg.lambda0, self.t),
             Prior::Warm(off, n_eff) => off.warm_arm(n_eff, self.cfg.lambda0, self.t),
@@ -133,7 +156,6 @@ impl ParetoRouter {
         self.arms.push(Some(arm));
         self.burnin_left
             .push(if self.t > 0 { self.cfg.burn_in } else { 0 });
-        id
     }
 
     /// Deregister a model (hot-swap `delete_arm`).  Slot retired; stats

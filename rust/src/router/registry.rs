@@ -10,6 +10,25 @@
 
 use crate::pacer::c_tilde;
 
+/// Wire-level model address: by stable arm id or by registered name.
+/// Name addressing is what operators script against (`"model":
+/// "gemini-2.5-pro"`); arm addressing is the stable slot id handed back
+/// by `add_model` and is what pipelined clients cache.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ModelRef {
+    Arm(usize),
+    Name(String),
+}
+
+impl std::fmt::Display for ModelRef {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ModelRef::Arm(a) => write!(f, "arm {a}"),
+            ModelRef::Name(n) => write!(f, "model '{n}'"),
+        }
+    }
+}
+
 /// One registered model endpoint.
 #[derive(Clone, Debug)]
 pub struct ModelEntry {
@@ -49,10 +68,43 @@ impl Registry {
         Registry { slots: Vec::new() }
     }
 
-    /// Register a model; returns its stable arm id.
+    /// Register a model; returns its stable arm id.  Unchecked: duplicate
+    /// active names are allowed here (simulation harnesses reuse display
+    /// names); the wire API registers through [`Registry::try_add`].
     pub fn add(&mut self, name: &str, price_in_per_m: f64, price_out_per_m: f64) -> usize {
         self.slots.push(Some(ModelEntry::new(name, price_in_per_m, price_out_per_m)));
         self.slots.len() - 1
+    }
+
+    /// Checked registration: rejects a name that is already active, so
+    /// name addressing stays unambiguous.  A retired name (its slot was
+    /// removed) may be re-registered and gets a fresh slot.
+    pub fn try_add(
+        &mut self,
+        name: &str,
+        price_in_per_m: f64,
+        price_out_per_m: f64,
+    ) -> Option<usize> {
+        if self.find(name).is_some() {
+            return None;
+        }
+        Some(self.add(name, price_in_per_m, price_out_per_m))
+    }
+
+    /// First active slot registered under `name`.
+    pub fn find(&self, name: &str) -> Option<usize> {
+        self.slots.iter().enumerate().find_map(|(i, s)| match s {
+            Some(e) if e.name == name => Some(i),
+            _ => None,
+        })
+    }
+
+    /// Resolve a wire-level model reference to an active slot id.
+    pub fn resolve(&self, r: &ModelRef) -> Option<usize> {
+        match r {
+            ModelRef::Arm(a) => self.is_active(*a).then_some(*a),
+            ModelRef::Name(n) => self.find(n),
+        }
     }
 
     /// Remove a model. Its slot id is retired, never reused.
@@ -169,6 +221,45 @@ mod tests {
         let r = three();
         assert_eq!(r.cheapest_active(), Some(0));
         assert!((r.max_blended() - 0.005625).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duplicate_active_name_is_rejected() {
+        let mut r = three();
+        assert_eq!(r.try_add("mistral-large", 0.5, 2.0), None);
+        assert_eq!(r.n_slots(), 3, "rejected add must not consume a slot");
+        // a fresh name is accepted and gets the next slot
+        assert_eq!(r.try_add("gemini-2.5-flash", 0.30, 2.50), Some(3));
+        // retiring a name frees it for re-registration in a NEW slot
+        assert!(r.remove(1));
+        assert_eq!(r.try_add("mistral-large", 0.45, 1.80), Some(4));
+        assert_eq!(r.find("mistral-large"), Some(4));
+    }
+
+    #[test]
+    fn name_resolution_tracks_slot_retirement() {
+        let mut r = three();
+        assert_eq!(r.resolve(&ModelRef::Name("mistral-large".into())), Some(1));
+        assert_eq!(r.resolve(&ModelRef::Arm(1)), Some(1));
+        assert!(r.remove(1));
+        // both addressing modes agree the slot is gone
+        assert_eq!(r.resolve(&ModelRef::Name("mistral-large".into())), None);
+        assert_eq!(r.resolve(&ModelRef::Arm(1)), None);
+        assert_eq!(r.resolve(&ModelRef::Arm(99)), None);
+        // other names are untouched
+        assert_eq!(r.resolve(&ModelRef::Name("gemini-2.5-pro".into())), Some(2));
+    }
+
+    #[test]
+    fn reprice_by_name_hits_the_same_slot_as_by_arm() {
+        let mut a = three();
+        let mut b = three();
+        let slot = a.resolve(&ModelRef::Name("gemini-2.5-pro".into())).unwrap();
+        assert!(a.reprice(slot, 0.10, 0.10));
+        assert!(b.reprice(2, 0.10, 0.10));
+        assert_eq!(slot, 2);
+        assert_eq!(a.get(2).unwrap().c_tilde, b.get(2).unwrap().c_tilde);
+        assert_eq!(a.get(2).unwrap().blended_per_1k, b.get(2).unwrap().blended_per_1k);
     }
 
     #[test]

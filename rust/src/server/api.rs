@@ -1,26 +1,36 @@
-//! Wire protocol: newline-delimited JSON requests/responses.
+//! Server-side op handlers over wire protocol v2 (see [`super::proto`]).
 //!
-//! Verbs:
-//!   route        {"op":"route","id":u64,"prompt":str}
-//!   feedback     {"op":"feedback","id":u64,"reward":f,"cost":f}
-//!   add_model    {"op":"add_model","name":str,"price_in":f,"price_out":f[,"n_eff":f,"r0":f]}
-//!   delete_model {"op":"delete_model","arm":u}
-//!   reprice      {"op":"reprice","arm":u,"price_in":f,"price_out":f}
-//!   set_budget   {"op":"set_budget","budget":f}
-//!   metrics      {"op":"metrics"}
-//!   sync         {"op":"sync"}          (sharded engine only: force a merge cycle)
-//!   shutdown     {"op":"shutdown"}
+//! Verbs (newline-delimited JSON; `v` optional — absent/1/2 accepted):
+//!   route          {"op":"route","id":u64,"prompt":str}
+//!   route_batch    {"op":"route_batch","id"?:u64,"items":[{"id","prompt"}...]}
+//!   feedback       {"op":"feedback","id":u64,"reward":f,"cost":f}
+//!   feedback_batch {"op":"feedback_batch","id"?:u64,"items":[{"id","reward","cost"}...]}
+//!   add_model      {"op":"add_model","name":str,"price_in":f,"price_out":f[,"n_eff":f,"r0":f]}
+//!   delete_model   {"op":"delete_model","arm":u | "model":str}
+//!   reprice        {"op":"reprice","arm":u | "model":str,"price_in":f,"price_out":f}
+//!   set_budget     {"op":"set_budget","budget":f}
+//!   metrics        {"op":"metrics"}
+//!   sync           {"op":"sync"}   (engine: force a merge cycle;
+//!                                   single worker: well-defined no-op,
+//!                                   answers synced_shards=1)
+//!   shutdown       {"op":"shutdown"}
 //!
-//! The handler is a pure function over (state, request) so the protocol is
-//! unit-testable without sockets; `serve.rs` adds the TCP plumbing for one
-//! worker and `engine.rs` for N sharded workers.
+//! Every response carries `"v":2`, `"ok"`, and echoes the request `id`
+//! whenever one was parseable — errors included — plus a stable error
+//! `"code"` on failure (table in the README).  Models are addressed by
+//! stable arm id or by name; `add_model` rejects duplicate active names.
+//!
+//! The handler is a pure function over (state, [`Request`]) so the
+//! protocol is unit-testable without sockets; `serve.rs` adds the TCP
+//! plumbing for one worker and `engine.rs` for N sharded workers, both
+//! dispatching the same typed requests so the two paths cannot drift.
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::router::{ContextCache, FeedbackEvent, FeedbackQueue, ParetoRouter, Pending, Prior};
+use crate::router::{ContextCache, FeedbackEvent, FeedbackQueue, ModelRef, ParetoRouter, Pending, Prior};
 use crate::server::metrics::Metrics;
-use crate::util::json::Json;
+use crate::server::proto::{ErrorCode, FeedbackItem, Request, Response, RouteItem};
 
 /// Text -> context featurizer abstraction (production: PJRT embedder;
 /// tests: any closure).
@@ -93,54 +103,65 @@ impl ServerState {
 /// worker or one engine shard), answered over a oneshot-style channel.
 /// Shared so the reference server and the sharded engine cannot drift.
 pub(crate) struct Job {
-    pub(crate) req: Json,
-    pub(crate) resp: std::sync::mpsc::Sender<Json>,
-}
-
-/// Error response in the wire format (shared with the sharded engine).
-pub(crate) fn err(msg: &str) -> Json {
-    Json::obj(vec![
-        ("ok", Json::Bool(false)),
-        ("error", Json::Str(msg.to_string())),
-    ])
-}
-
-fn get_f(req: &Json, key: &str) -> Option<f64> {
-    req.get(key).and_then(Json::as_f64)
+    pub(crate) req: Request,
+    pub(crate) resp: std::sync::mpsc::Sender<Response>,
 }
 
 impl ServerState {
-    /// Handle one request; returns the response (and whether to shut down).
-    pub fn handle(&mut self, req: &Json) -> (Json, bool) {
-        let op = req.get("op").and_then(Json::as_str).unwrap_or("");
-        match op {
-            "route" => (self.op_route(req), false),
-            "feedback" => (self.op_feedback(req), false),
-            "add_model" => (self.op_add_model(req), false),
-            "delete_model" => (self.op_delete_model(req), false),
-            "reprice" => (self.op_reprice(req), false),
-            "set_budget" => (self.op_set_budget(req), false),
-            "metrics" => (self.metrics.snapshot(), false),
-            "shutdown" => (Json::obj(vec![("ok", Json::Bool(true))]), true),
-            _ => (err("unknown op"), false),
+    /// Handle one typed request; returns the response (and whether to
+    /// shut down).
+    pub fn handle(&mut self, req: &Request) -> (Response, bool) {
+        match req {
+            Request::Route(it) => (self.op_route(it), false),
+            Request::RouteBatch { id, items } => {
+                let results = items.iter().map(|it| self.op_route(it)).collect();
+                (Response::Batch { id: *id, results }, false)
+            }
+            Request::Feedback(it) => (self.op_feedback(it), false),
+            Request::FeedbackBatch { id, items } => {
+                let results = items.iter().map(|it| self.op_feedback(it)).collect();
+                (Response::Batch { id: *id, results }, false)
+            }
+            Request::AddModel {
+                id,
+                name,
+                price_in,
+                price_out,
+                prior,
+            } => (self.op_add_model(*id, name, *price_in, *price_out, *prior), false),
+            Request::DeleteModel { id, model } => (self.op_delete_model(*id, model), false),
+            Request::Reprice {
+                id,
+                model,
+                price_in,
+                price_out,
+            } => (self.op_reprice(*id, model, *price_in, *price_out), false),
+            Request::SetBudget { id, budget } => (self.op_set_budget(*id, *budget), false),
+            Request::Metrics { id } => (
+                Response::Metrics {
+                    id: *id,
+                    snapshot: self.metrics.snapshot(),
+                },
+                false,
+            ),
+            Request::Sync { id } => (self.op_sync(*id), false),
+            Request::Shutdown { id } => (Response::Shutdown { id: *id }, true),
         }
     }
 
-    fn op_route(&mut self, req: &Json) -> Json {
+    fn op_route(&mut self, it: &RouteItem) -> Response {
         let t0 = Instant::now();
-        let Some(id) = get_f(req, "id").map(|v| v as u64) else {
-            return err("route: missing id");
-        };
-        let Some(prompt) = req.get("prompt").and_then(Json::as_str) else {
-            return err("route: missing prompt");
-        };
-        let x = match self.featurizer.featurize(prompt) {
+        let x = match self.featurizer.featurize(&it.prompt) {
             Ok(x) => x,
             Err(e) => {
                 self.metrics
                     .errors
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                return err(&format!("featurize: {e}"));
+                return Response::err(
+                    ErrorCode::FeaturizeFailed,
+                    format!("featurize: {e}"),
+                    Some(it.id),
+                );
             }
         };
         let t1 = Instant::now();
@@ -153,35 +174,31 @@ impl ServerState {
             .map(|e| e.name.clone())
             .unwrap_or_default();
         self.cache.insert(Pending {
-            request_id: id,
+            request_id: it.id,
             arm: d.arm,
             context: x,
         });
         let e2e_us = t0.elapsed().as_nanos() as f64 / 1e3;
         self.metrics.record_route(self.shard, d.arm, route_us, e2e_us);
-        Json::obj(vec![
-            ("ok", Json::Bool(true)),
-            ("id", Json::Num(id as f64)),
-            ("arm", Json::Num(d.arm as f64)),
-            ("model", Json::Str(name)),
-            ("lambda", Json::Num(d.lambda)),
-            ("forced", Json::Bool(d.forced)),
-            ("shard", Json::Num(self.shard as f64)),
-            ("route_us", Json::Num(route_us)),
-            ("e2e_us", Json::Num(e2e_us)),
-        ])
+        Response::Route {
+            id: it.id,
+            arm: d.arm,
+            model: name,
+            lambda: d.lambda,
+            forced: d.forced,
+            shard: self.shard,
+            route_us,
+            e2e_us,
+        }
     }
 
-    fn op_feedback(&mut self, req: &Json) -> Json {
-        let (Some(id), Some(reward), Some(cost)) = (
-            get_f(req, "id").map(|v| v as u64),
-            get_f(req, "reward"),
-            get_f(req, "cost"),
-        ) else {
-            return err("feedback: need id, reward, cost");
-        };
-        let Some(p) = self.cache.take(id) else {
-            return err("feedback: unknown or already-claimed id");
+    fn op_feedback(&mut self, it: &FeedbackItem) -> Response {
+        let Some(p) = self.cache.take(it.id) else {
+            return Response::err(
+                ErrorCode::UnknownId,
+                "feedback: unknown or already-claimed id",
+                Some(it.id),
+            );
         };
         match self.queue.as_mut() {
             // sharded mode: queue the reward for the batched merge cycle,
@@ -190,70 +207,103 @@ impl ServerState {
                 q.push(FeedbackEvent {
                     arm: p.arm,
                     context: p.context,
-                    reward,
+                    reward: it.reward,
                 });
-                self.router.observe_cost(cost);
+                self.router.observe_cost(it.cost);
             }
-            None => self.router.feedback(p.arm, &p.context, reward, cost),
+            None => self.router.feedback(p.arm, &p.context, it.reward, it.cost),
         }
-        self.metrics.record_feedback(reward, cost);
-        Json::obj(vec![("ok", Json::Bool(true)), ("arm", Json::Num(p.arm as f64))])
-    }
-
-    fn op_add_model(&mut self, req: &Json) -> Json {
-        let (Some(name), Some(pi), Some(po)) = (
-            req.get("name").and_then(Json::as_str),
-            get_f(req, "price_in"),
-            get_f(req, "price_out"),
-        ) else {
-            return err("add_model: need name, price_in, price_out");
-        };
-        let prior = match (get_f(req, "n_eff"), get_f(req, "r0")) {
-            (Some(n_eff), Some(r0)) => Prior::Heuristic { n_eff, r0 },
-            _ => Prior::Cold,
-        };
-        let arm = self.router.add_model(name, pi, po, prior);
-        Json::obj(vec![("ok", Json::Bool(true)), ("arm", Json::Num(arm as f64))])
-    }
-
-    fn op_delete_model(&mut self, req: &Json) -> Json {
-        match get_f(req, "arm").map(|v| v as usize) {
-            Some(arm) if self.router.delete_model(arm) => {
-                Json::obj(vec![("ok", Json::Bool(true))])
-            }
-            Some(_) => err("delete_model: no such arm"),
-            None => err("delete_model: need arm"),
+        self.metrics.record_feedback(it.reward, it.cost);
+        Response::Feedback {
+            id: it.id,
+            arm: p.arm,
         }
     }
 
-    fn op_reprice(&mut self, req: &Json) -> Json {
-        let (Some(arm), Some(pi), Some(po)) = (
-            get_f(req, "arm").map(|v| v as usize),
-            get_f(req, "price_in"),
-            get_f(req, "price_out"),
-        ) else {
-            return err("reprice: need arm, price_in, price_out");
+    fn op_add_model(
+        &mut self,
+        id: Option<u64>,
+        name: &str,
+        price_in: f64,
+        price_out: f64,
+        prior: Option<(f64, f64)>,
+    ) -> Response {
+        let prior = match prior {
+            Some((n_eff, r0)) => Prior::Heuristic { n_eff, r0 },
+            None => Prior::Cold,
         };
-        if self.router.reprice(arm, pi, po) {
-            Json::obj(vec![("ok", Json::Bool(true))])
-        } else {
-            err("reprice: no such arm")
+        match self.router.try_add_model(name, price_in, price_out, prior) {
+            Some(arm) => Response::AddModel {
+                id,
+                arm,
+                name: name.to_string(),
+            },
+            None => Response::err(
+                ErrorCode::DuplicateModel,
+                format!("add_model: '{name}' is already registered"),
+                id,
+            ),
         }
     }
 
-    fn op_set_budget(&mut self, req: &Json) -> Json {
-        let Some(budget) = get_f(req, "budget") else {
-            return err("set_budget: need budget");
+    fn op_delete_model(&mut self, id: Option<u64>, model: &ModelRef) -> Response {
+        let Some(slot) = self.router.registry().resolve(model) else {
+            return Response::err(
+                ErrorCode::UnknownModel,
+                format!("delete_model: no such {model}"),
+                id,
+            );
         };
-        if !budget.is_finite() || budget <= 0.0 {
-            return err("set_budget: budget must be positive and finite");
-        }
-        // the pacer keeps its λ state across the change — only the ceiling
-        // the dual gradient is normalised against moves
+        // resolve only returns active slots, so delete cannot fail here
+        self.router.delete_model(slot);
+        Response::DeleteModel { id, arm: slot }
+    }
+
+    fn op_reprice(
+        &mut self,
+        id: Option<u64>,
+        model: &ModelRef,
+        price_in: f64,
+        price_out: f64,
+    ) -> Response {
+        let Some(slot) = self.router.registry().resolve(model) else {
+            return Response::err(
+                ErrorCode::UnknownModel,
+                format!("reprice: no such {model}"),
+                id,
+            );
+        };
+        self.router.reprice(slot, price_in, price_out);
+        Response::Reprice { id, arm: slot }
+    }
+
+    fn op_set_budget(&mut self, id: Option<u64>, budget: f64) -> Response {
+        // value validation happened at parse time; pacer presence is state
+        // the parser cannot see.  The pacer keeps its λ across the change —
+        // only the ceiling the dual gradient is normalised against moves.
         if self.router.set_budget(budget) {
-            Json::obj(vec![("ok", Json::Bool(true)), ("budget", Json::Num(budget))])
+            Response::SetBudget { id, budget }
         } else {
-            err("set_budget: router has no pacer (started without --budget)")
+            Response::err(
+                ErrorCode::NoPacer,
+                "set_budget: router has no pacer (started without --budget)",
+                id,
+            )
+        }
+    }
+
+    /// `sync` on a single worker: apply anything queued (a no-op outside
+    /// sharded mode) and answer like a one-shard engine, so scripts that
+    /// drive `sync` work against both deployments.
+    fn op_sync(&mut self, id: Option<u64>) -> Response {
+        self.apply_queued();
+        Response::Sync {
+            id,
+            synced_shards: 1,
+            merges: self
+                .metrics
+                .merges
+                .load(std::sync::atomic::Ordering::Relaxed),
         }
     }
 }
@@ -262,6 +312,7 @@ impl ServerState {
 mod tests {
     use super::*;
     use crate::router::RouterConfig;
+    use crate::util::json::Json;
 
     fn state() -> ServerState {
         let mut router = ParetoRouter::new(RouterConfig::tabula_rasa(4, Some(1e-3), 1));
@@ -275,51 +326,117 @@ mod tests {
         )
     }
 
-    fn parse(s: &str) -> Json {
-        Json::parse(s).unwrap()
+    /// Parse a wire line the way the connection handlers do.
+    fn req(s: &str) -> Request {
+        Request::parse(&Json::parse(s).unwrap()).unwrap()
+    }
+
+    fn code_of(r: &Response) -> Option<ErrorCode> {
+        match r {
+            Response::Error(e) => Some(e.code),
+            _ => None,
+        }
     }
 
     #[test]
     fn route_feedback_roundtrip() {
         let mut st = state();
-        let (resp, down) = st.handle(&parse(r#"{"op":"route","id":7,"prompt":"hello world"}"#));
+        let (resp, down) = st.handle(&req(r#"{"op":"route","id":7,"prompt":"hello world"}"#));
         assert!(!down);
-        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
-        let arm = resp.get("arm").unwrap().as_f64().unwrap() as usize;
+        let j = resp.to_json();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("v").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("id").unwrap().as_f64(), Some(7.0));
+        let arm = j.get("arm").unwrap().as_f64().unwrap() as usize;
         assert!(arm < 2);
-        let (resp, _) =
-            st.handle(&parse(r#"{"op":"feedback","id":7,"reward":0.9,"cost":0.0001}"#));
-        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
-        // double feedback on the same id is rejected
-        let (resp, _) =
-            st.handle(&parse(r#"{"op":"feedback","id":7,"reward":0.9,"cost":0.0001}"#));
-        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        let (resp, _) = st.handle(&req(r#"{"op":"feedback","id":7,"reward":0.9,"cost":0.0001}"#));
+        assert!(resp.is_ok());
+        // double feedback on the same id is rejected with a typed code
+        // that still echoes the id (pipelined-client correlation)
+        let (resp, _) = st.handle(&req(r#"{"op":"feedback","id":7,"reward":0.9,"cost":0.0001}"#));
+        assert_eq!(code_of(&resp), Some(ErrorCode::UnknownId));
+        assert_eq!(resp.to_json().get("id").unwrap().as_f64(), Some(7.0));
     }
 
     #[test]
-    fn hot_swap_via_api() {
+    fn route_batch_and_feedback_batch_preserve_order() {
         let mut st = state();
-        let (resp, _) = st.handle(&parse(
+        let (resp, _) = st.handle(&req(
+            r#"{"op":"route_batch","id":99,"items":[
+                {"id":1,"prompt":"alpha"},{"id":2,"prompt":"beta question"},
+                {"id":3,"prompt":"gamma much longer prompt"}]}"#,
+        ));
+        let Response::Batch { id, results } = &resp else {
+            panic!("expected batch: {resp:?}")
+        };
+        assert_eq!(*id, Some(99));
+        assert_eq!(results.len(), 3);
+        for (k, r) in results.iter().enumerate() {
+            let Response::Route { id, .. } = r else {
+                panic!("item {k} not ok: {r:?}")
+            };
+            assert_eq!(*id, k as u64 + 1, "results must be in request order");
+        }
+        // feedback_batch: two valid, one unknown id — per-item results
+        let (resp, _) = st.handle(&req(
+            r#"{"op":"feedback_batch","items":[
+                {"id":1,"reward":0.8,"cost":0.0001},
+                {"id":77,"reward":0.5,"cost":0.0001},
+                {"id":3,"reward":0.9,"cost":0.0002}]}"#,
+        ));
+        let Response::Batch { results, .. } = &resp else {
+            panic!("expected batch: {resp:?}")
+        };
+        assert!(results[0].is_ok());
+        assert_eq!(code_of(&results[1]), Some(ErrorCode::UnknownId));
+        assert!(results[2].is_ok());
+    }
+
+    #[test]
+    fn hot_swap_via_api_with_name_addressing() {
+        let mut st = state();
+        let (resp, _) = st.handle(&req(
             r#"{"op":"add_model","name":"flash","price_in":0.3,"price_out":2.5,"n_eff":20,"r0":0.5}"#,
         ));
-        let arm = resp.get("arm").unwrap().as_f64().unwrap() as usize;
+        let j = resp.to_json();
+        assert_eq!(j.get("arm").unwrap().as_f64(), Some(2.0));
+        // duplicate name rejected with its own code
+        let (resp, _) = st.handle(&req(
+            r#"{"op":"add_model","name":"flash","price_in":0.3,"price_out":2.5}"#,
+        ));
+        assert_eq!(code_of(&resp), Some(ErrorCode::DuplicateModel));
+        // reprice by name hits the same slot as reprice by arm would
+        let (resp, _) = st.handle(&req(
+            r#"{"op":"reprice","model":"flash","price_in":0.2,"price_out":2.0}"#,
+        ));
+        let Response::Reprice { arm, .. } = resp else {
+            panic!("reprice failed: {resp:?}")
+        };
         assert_eq!(arm, 2);
-        let (resp, _) = st.handle(&parse(r#"{"op":"delete_model","arm":2}"#));
-        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
-        let (resp, _) = st.handle(&parse(r#"{"op":"delete_model","arm":2}"#));
-        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        // delete by name retires the slot; a second delete is unknown
+        let (resp, _) = st.handle(&req(r#"{"op":"delete_model","model":"flash"}"#));
+        let Response::DeleteModel { arm, .. } = resp else {
+            panic!("delete failed: {resp:?}")
+        };
+        assert_eq!(arm, 2);
+        let (resp, _) = st.handle(&req(r#"{"op":"delete_model","arm":2}"#));
+        assert_eq!(code_of(&resp), Some(ErrorCode::UnknownModel));
+        let (resp, _) = st.handle(&req(r#"{"op":"delete_model","model":"flash"}"#));
+        assert_eq!(code_of(&resp), Some(ErrorCode::UnknownModel));
     }
 
     #[test]
     fn metrics_reflect_traffic() {
         let mut st = state();
         for i in 0..5u64 {
-            let req = format!(r#"{{"op":"route","id":{i},"prompt":"q {i}"}}"#);
-            st.handle(&parse(&req));
-            let fb = format!(r#"{{"op":"feedback","id":{i},"reward":0.8,"cost":0.0002}}"#);
-            st.handle(&parse(&fb));
+            st.handle(&req(&format!(r#"{{"op":"route","id":{i},"prompt":"q {i}"}}"#)));
+            st.handle(&req(&format!(
+                r#"{{"op":"feedback","id":{i},"reward":0.8,"cost":0.0002}}"#
+            )));
         }
-        let (m, _) = st.handle(&parse(r#"{"op":"metrics"}"#));
+        let (m, _) = st.handle(&req(r#"{"op":"metrics"}"#));
+        let m = m.to_json();
+        assert_eq!(m.get("ok").unwrap().as_bool(), Some(true));
         assert_eq!(m.get("requests").unwrap().as_f64(), Some(5.0));
         assert_eq!(m.get("feedbacks").unwrap().as_f64(), Some(5.0));
         assert!((m.get("mean_cost").unwrap().as_f64().unwrap() - 2e-4).abs() < 1e-12);
@@ -328,13 +445,19 @@ mod tests {
     #[test]
     fn set_budget_roundtrip() {
         let mut st = state();
-        let (resp, _) = st.handle(&parse(r#"{"op":"set_budget","budget":0.002}"#));
-        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        let (resp, _) = st.handle(&req(r#"{"op":"set_budget","budget":0.002}"#));
+        assert!(resp.is_ok());
         assert_eq!(st.router.pacer().unwrap().budget(), 0.002);
-        let (resp, _) = st.handle(&parse(r#"{"op":"set_budget","budget":-1}"#));
-        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
-        let (resp, _) = st.handle(&parse(r#"{"op":"set_budget"}"#));
-        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        // a pacerless router answers with the no_pacer code
+        let mut free = ServerState::new(
+            ParetoRouter::new(RouterConfig::unconstrained(4, 2)),
+            ContextCache::new(16),
+            Box::new(|_: &str| Ok(vec![0.0; 4])),
+            Arc::new(Metrics::new()),
+        );
+        free.router.add_model("m", 0.1, 0.1, Prior::Cold);
+        let (resp, _) = free.handle(&req(r#"{"op":"set_budget","budget":0.002}"#));
+        assert_eq!(code_of(&resp), Some(ErrorCode::NoPacer));
     }
 
     #[test]
@@ -343,12 +466,16 @@ mod tests {
         st.shard = 2;
         st.queue = Some(crate::router::FeedbackQueue::new());
         for i in 0..6u64 {
-            let req = format!(r#"{{"op":"route","id":{i},"prompt":"question {i}"}}"#);
-            let (resp, _) = st.handle(&parse(&req));
-            assert_eq!(resp.get("shard").unwrap().as_f64(), Some(2.0));
-            let fb = format!(r#"{{"op":"feedback","id":{i},"reward":0.9,"cost":0.002}}"#);
-            let (resp, _) = st.handle(&parse(&fb));
-            assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+            let (resp, _) =
+                st.handle(&req(&format!(r#"{{"op":"route","id":{i},"prompt":"question {i}"}}"#)));
+            let Response::Route { shard, .. } = resp else {
+                panic!("route failed: {resp:?}")
+            };
+            assert_eq!(shard, 2);
+            let (resp, _) = st.handle(&req(&format!(
+                r#"{{"op":"feedback","id":{i},"reward":0.9,"cost":0.002}}"#
+            )));
+            assert!(resp.is_ok());
         }
         // rewards deferred: no arm has absorbed an observation yet...
         let n_before: u64 = (0..2).map(|i| st.router.arm(i).unwrap().n_obs).sum();
@@ -362,27 +489,62 @@ mod tests {
     }
 
     #[test]
-    fn unknown_op_and_shutdown() {
+    fn single_worker_sync_is_a_noop_success() {
         let mut st = state();
-        let (resp, down) = st.handle(&parse(r#"{"op":"nope"}"#));
+        let (resp, down) = st.handle(&req(r#"{"op":"sync","id":5}"#));
         assert!(!down);
-        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
-        let (_, down) = st.handle(&parse(r#"{"op":"shutdown"}"#));
-        assert!(down);
+        let Response::Sync {
+            id, synced_shards, ..
+        } = resp
+        else {
+            panic!("sync failed: {resp:?}")
+        };
+        assert_eq!(id, Some(5));
+        assert_eq!(synced_shards, 1, "single worker answers as a 1-shard engine");
     }
 
     #[test]
-    fn malformed_requests_fail_cleanly() {
+    fn shutdown_sets_down_flag() {
         let mut st = state();
+        let (resp, down) = st.handle(&req(r#"{"op":"shutdown"}"#));
+        assert!(down);
+        assert!(resp.is_ok());
+    }
+
+    #[test]
+    fn malformed_requests_fail_at_parse_with_codes() {
         for bad in [
             r#"{"op":"route"}"#,
             r#"{"op":"feedback","id":1}"#,
             r#"{"op":"add_model","name":"x"}"#,
             r#"{"op":"reprice","arm":0}"#,
+            r#"{"op":"nope"}"#,
         ] {
-            let (resp, down) = st.handle(&parse(bad));
-            assert!(!down);
-            assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{bad}");
+            let e = Request::parse(&Json::parse(bad).unwrap()).unwrap_err();
+            assert_eq!(e.code, ErrorCode::BadRequest, "{bad}");
         }
+        // parse errors echo the id so pipelined clients stay correlated
+        let e = Request::parse(&Json::parse(r#"{"op":"route","id":31}"#).unwrap()).unwrap_err();
+        assert_eq!(e.id, Some(31));
+    }
+
+    #[test]
+    fn featurizer_failure_is_a_typed_error() {
+        let mut router = ParetoRouter::new(RouterConfig::tabula_rasa(4, Some(1e-3), 1));
+        router.add_model("llama", 0.1, 0.1, Prior::Cold);
+        let mut st = ServerState::new(
+            router,
+            ContextCache::new(16),
+            Box::new(|t: &str| {
+                anyhow::ensure!(!t.contains("POISON"), "poisoned prompt");
+                Ok(vec![0.0, 0.0, 0.5, 1.0])
+            }),
+            Arc::new(Metrics::new()),
+        );
+        let (resp, _) = st.handle(&req(r#"{"op":"route","id":1,"prompt":"POISON pill"}"#));
+        assert_eq!(code_of(&resp), Some(ErrorCode::FeaturizeFailed));
+        assert_eq!(resp.to_json().get("id").unwrap().as_f64(), Some(1.0));
+        let (resp, _) = st.handle(&req(r#"{"op":"route","id":2,"prompt":"fine"}"#));
+        assert!(resp.is_ok());
     }
 }

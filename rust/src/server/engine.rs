@@ -7,10 +7,14 @@
 //! executables are not `Send`, so every replica is built on its own
 //! thread):
 //!
-//! * **dispatch** — connection handlers parse requests and round-robin
-//!   `route` ops across shards; `feedback` is routed to the shard that
-//!   owns the pending context (an id→shard owner table, FIFO-bounded like
-//!   the per-shard context caches).
+//! * **dispatch** — connection handlers parse requests (once, into the
+//!   typed [`Request`]) and round-robin `route` ops across shards;
+//!   `feedback` is routed to the shard that owns the pending context (an
+//!   id→shard owner table, FIFO-bounded like the per-shard context
+//!   caches).  The batch verbs (`route_batch` / `feedback_batch`) fan
+//!   their items out as per-shard sub-batches in one step — one socket
+//!   round-trip buys N decisions with the sub-batches featurizing in
+//!   parallel — and reassemble per-item results in request order.
 //! * **global budget** — every replica holds a
 //!   [`crate::pacer::SharedPacer`] handle, so the dollar ceiling binds
 //!   across the whole deployment, not per replica: one shard's overspend
@@ -45,8 +49,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::api::{err, Job, ServerState};
+use super::api::{Job, ServerState};
 use super::metrics::Metrics;
+use super::proto::{ErrorCode, FeedbackItem, Request, Response, RouteItem};
 use crate::bandit::ArmState;
 use crate::router::FeedbackQueue;
 use crate::util::json::Json;
@@ -104,9 +109,10 @@ enum ShardMsg {
 
 enum MergeCmd {
     /// run a merge cycle now; ack with a summary when a sender is given
-    Cycle(Option<mpsc::Sender<Json>>),
+    /// (the `Option<u64>` is the request id to echo)
+    Cycle(Option<(Option<u64>, mpsc::Sender<Response>)>),
     /// apply an admin op to every shard in order; ack with shard 0's reply
-    Admin(Json, mpsc::Sender<Json>),
+    Admin(Request, mpsc::Sender<Response>),
     Stop,
 }
 
@@ -181,81 +187,308 @@ struct Dispatch {
 }
 
 impl Dispatch {
-    fn forward(&self, shard: usize, req: Json) -> Json {
+    fn forward(&self, shard: usize, req: Request) -> Response {
+        let id = req.id();
         let (tx, rx) = mpsc::channel();
         if self.shard_txs[shard].send(ShardMsg::Job(Job { req, resp: tx })).is_err() {
-            return err("shard unavailable");
+            return Response::err(ErrorCode::Unavailable, "shard unavailable", id);
         }
-        rx.recv().unwrap_or_else(|_| err("shard dropped request"))
+        rx.recv()
+            .unwrap_or_else(|_| Response::err(ErrorCode::Unavailable, "shard dropped request", id))
     }
 
-    /// Handle one request; returns (response, initiate shutdown?).
-    fn dispatch(&self, req: Json) -> (Json, bool) {
-        let op = req.get("op").and_then(Json::as_str).unwrap_or("").to_string();
-        match op.as_str() {
-            "route" => {
-                let id = req.get("id").and_then(Json::as_f64).map(|v| v as u64);
+    /// Handle one typed request; returns (response, initiate shutdown?).
+    fn dispatch(&self, req: Request) -> (Response, bool) {
+        match req {
+            Request::Route(it) => {
+                let id = it.id;
                 let shard =
                     self.next.fetch_add(1, Ordering::Relaxed) % self.shard_txs.len();
-                let resp = self.forward(shard, req);
+                let resp = self.forward(shard, Request::Route(it));
                 // claim ownership only once the shard accepted the route —
-                // a failed route (bad prompt, reused id) must not disturb
-                // an earlier still-pending mapping, mirroring op_route,
-                // which only inserts into the cache after validation.
+                // a failed route (featurizer error, reused id) must not
+                // disturb an earlier still-pending mapping, mirroring
+                // op_route, which only inserts into the cache on success.
                 // (A feedback racing its own route on a second connection
                 // can still miss the mapping; the same request pattern is
                 // unserviceable on the single-worker server too.)
-                if let Some(id) = id {
-                    if resp.get("ok").and_then(Json::as_bool) == Some(true) {
-                        self.owners.lock().unwrap().insert(id, shard);
-                    }
+                if resp.is_ok() {
+                    self.owners.lock().unwrap().insert(id, shard);
                 }
                 (resp, false)
             }
-            "feedback" => {
-                let id = req.get("id").and_then(Json::as_f64).map(|v| v as u64);
-                // peek, don't claim: a malformed feedback (missing reward/
-                // cost) must leave the pending id claimable by a corrected
-                // retry, matching the single-worker server's behaviour;
-                // the claim after success is generation-conditional so a
-                // concurrent re-route of the same id is never unclaimed
-                let owner = id.and_then(|id| self.owners.lock().unwrap().get(id));
+            Request::RouteBatch { id, items } => (self.route_batch(id, items), false),
+            Request::Feedback(it) => {
+                // peek, don't claim: a rejected feedback must leave the
+                // pending id claimable by a corrected retry, matching the
+                // single-worker server's behaviour; the claim after
+                // success is generation-conditional so a concurrent
+                // re-route of the same id is never unclaimed
+                let owner = self.owners.lock().unwrap().get(it.id);
                 match owner {
                     Some((shard, gen)) => {
-                        let resp = self.forward(shard, req);
-                        if resp.get("ok").and_then(Json::as_bool) == Some(true) {
-                            if let Some(id) = id {
-                                self.owners.lock().unwrap().remove_if(id, gen);
-                            }
+                        let id = it.id;
+                        let resp = self.forward(shard, Request::Feedback(it));
+                        if resp.is_ok() {
+                            self.owners.lock().unwrap().remove_if(id, gen);
                         }
                         (resp, false)
                     }
-                    None => (err("feedback: unknown or already-claimed id"), false),
+                    None => (
+                        Response::err(
+                            ErrorCode::UnknownId,
+                            "feedback: unknown or already-claimed id",
+                            Some(it.id),
+                        ),
+                        false,
+                    ),
                 }
             }
-            "metrics" => (self.metrics.snapshot(), false),
-            "sync" => {
+            Request::FeedbackBatch { id, items } => (self.feedback_batch(id, items), false),
+            Request::Metrics { id } => (
+                Response::Metrics {
+                    id,
+                    snapshot: self.metrics.snapshot(),
+                },
+                false,
+            ),
+            Request::Sync { id } => {
                 let (tx, rx) = mpsc::channel();
-                if self.merge_tx.send(MergeCmd::Cycle(Some(tx))).is_err() {
-                    return (err("merger unavailable"), false);
+                if self.merge_tx.send(MergeCmd::Cycle(Some((id, tx)))).is_err() {
+                    return (
+                        Response::err(ErrorCode::Unavailable, "merger unavailable", id),
+                        false,
+                    );
                 }
                 (
-                    rx.recv().unwrap_or_else(|_| err("merger dropped request")),
+                    rx.recv().unwrap_or_else(|_| {
+                        Response::err(ErrorCode::Unavailable, "merger dropped request", id)
+                    }),
                     false,
                 )
             }
-            "add_model" | "delete_model" | "reprice" | "set_budget" => {
+            Request::AddModel { .. }
+            | Request::DeleteModel { .. }
+            | Request::Reprice { .. }
+            | Request::SetBudget { .. } => {
+                let id = req.id();
                 let (tx, rx) = mpsc::channel();
                 if self.merge_tx.send(MergeCmd::Admin(req, tx)).is_err() {
-                    return (err("merger unavailable"), false);
+                    return (
+                        Response::err(ErrorCode::Unavailable, "merger unavailable", id),
+                        false,
+                    );
                 }
                 (
-                    rx.recv().unwrap_or_else(|_| err("merger dropped request")),
+                    rx.recv().unwrap_or_else(|_| {
+                        Response::err(ErrorCode::Unavailable, "merger dropped request", id)
+                    }),
                     false,
                 )
             }
-            "shutdown" => (Json::obj(vec![("ok", Json::Bool(true))]), true),
-            _ => (err("unknown op"), false),
+            Request::Shutdown { id } => (Response::Shutdown { id }, true),
+        }
+    }
+
+    /// Fan a route batch out across the shards (continuing the global
+    /// round-robin), then reassemble per-item results in request order.
+    /// One socket round-trip buys `items.len()` routing decisions, with
+    /// the per-shard sub-batches featurizing in parallel.
+    ///
+    /// Unlike the single-verb path (which blocks on its one shard), each
+    /// sub-batch reply is bounded by `SYNC_TIMEOUT` so one wedged shard
+    /// cannot pin this connection handler while the other sub-batches
+    /// already answered; timed-out items report `shard_timeout`.  A
+    /// late-arriving sub-batch still routed on its shard — those pending
+    /// contexts are never claimed and age out of the FIFO caches.
+    fn route_batch(&self, batch_id: Option<u64>, items: Vec<RouteItem>) -> Response {
+        let total = items.len();
+        if total == 0 {
+            return Response::Batch {
+                id: batch_id,
+                results: Vec::new(),
+            };
+        }
+        let n = self.shard_txs.len();
+        let base = self.next.fetch_add(total, Ordering::Relaxed);
+        let mut sub_items: Vec<Vec<RouteItem>> = (0..n).map(|_| Vec::new()).collect();
+        // per shard: (original position, item id) for reassembly + claims
+        let mut sub_meta: Vec<Vec<(usize, u64)>> = (0..n).map(|_| Vec::new()).collect();
+        for (k, item) in items.into_iter().enumerate() {
+            let s = (base + k) % n;
+            sub_meta[s].push((k, item.id));
+            sub_items[s].push(item);
+        }
+        let mut slots: Vec<Option<Response>> = (0..total).map(|_| None).collect();
+        let mut waiting = Vec::new();
+        for (shard, (meta, sub)) in sub_meta.into_iter().zip(sub_items).enumerate() {
+            if sub.is_empty() {
+                continue;
+            }
+            let (tx, rx) = mpsc::channel();
+            let job = Job {
+                req: Request::RouteBatch {
+                    id: None,
+                    items: sub,
+                },
+                resp: tx,
+            };
+            if self.shard_txs[shard].send(ShardMsg::Job(job)).is_ok() {
+                waiting.push((shard, meta, rx));
+            } else {
+                for &(k, item_id) in &meta {
+                    slots[k] = Some(Response::err(
+                        ErrorCode::Unavailable,
+                        format!("shard {shard} unavailable"),
+                        Some(item_id),
+                    ));
+                }
+            }
+        }
+        for (shard, meta, rx) in waiting {
+            match rx.recv_timeout(SYNC_TIMEOUT) {
+                Ok(Response::Batch { results, .. }) if results.len() == meta.len() => {
+                    let mut owners = self.owners.lock().unwrap();
+                    for (&(k, _), r) in meta.iter().zip(results) {
+                        // same claim-on-success rule as single route
+                        if let Response::Route { id, .. } = &r {
+                            owners.insert(*id, shard);
+                        }
+                        slots[k] = Some(r);
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    for &(k, item_id) in &meta {
+                        slots[k] = Some(Response::err(
+                            ErrorCode::ShardTimeout,
+                            format!("shard {shard} timed out"),
+                            Some(item_id),
+                        ));
+                    }
+                }
+                Ok(_) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    for &(k, item_id) in &meta {
+                        slots[k] = Some(Response::err(
+                            ErrorCode::Unavailable,
+                            format!("shard {shard} dropped the batch"),
+                            Some(item_id),
+                        ));
+                    }
+                }
+            }
+        }
+        let results = slots
+            .into_iter()
+            .map(|s| {
+                s.unwrap_or_else(|| Response::err(ErrorCode::Unavailable, "item lost", None))
+            })
+            .collect();
+        Response::Batch {
+            id: batch_id,
+            results,
+        }
+    }
+
+    /// Group feedback items by the shard that owns each pending id, fan
+    /// the sub-batches out, and reassemble per-item results in request
+    /// order.  Items with no owner fail per-item (`unknown_id`) without
+    /// poisoning the rest of the batch.
+    fn feedback_batch(&self, batch_id: Option<u64>, items: Vec<FeedbackItem>) -> Response {
+        let total = items.len();
+        if total == 0 {
+            return Response::Batch {
+                id: batch_id,
+                results: Vec::new(),
+            };
+        }
+        let n = self.shard_txs.len();
+        let mut sub_items: Vec<Vec<FeedbackItem>> = (0..n).map(|_| Vec::new()).collect();
+        // per shard: (original position, item id, owner generation)
+        let mut sub_meta: Vec<Vec<(usize, u64, u64)>> = (0..n).map(|_| Vec::new()).collect();
+        let mut slots: Vec<Option<Response>> = (0..total).map(|_| None).collect();
+        {
+            let owners = self.owners.lock().unwrap();
+            for (k, item) in items.into_iter().enumerate() {
+                match owners.get(item.id) {
+                    Some((shard, gen)) => {
+                        sub_meta[shard].push((k, item.id, gen));
+                        sub_items[shard].push(item);
+                    }
+                    None => {
+                        slots[k] = Some(Response::err(
+                            ErrorCode::UnknownId,
+                            "feedback: unknown or already-claimed id",
+                            Some(item.id),
+                        ));
+                    }
+                }
+            }
+        }
+        let mut waiting = Vec::new();
+        for (shard, (meta, sub)) in sub_meta.into_iter().zip(sub_items).enumerate() {
+            if sub.is_empty() {
+                continue;
+            }
+            let (tx, rx) = mpsc::channel();
+            let job = Job {
+                req: Request::FeedbackBatch {
+                    id: None,
+                    items: sub,
+                },
+                resp: tx,
+            };
+            if self.shard_txs[shard].send(ShardMsg::Job(job)).is_ok() {
+                waiting.push((shard, meta, rx));
+            } else {
+                for &(k, item_id, _) in &meta {
+                    slots[k] = Some(Response::err(
+                        ErrorCode::Unavailable,
+                        format!("shard {shard} unavailable"),
+                        Some(item_id),
+                    ));
+                }
+            }
+        }
+        for (shard, meta, rx) in waiting {
+            match rx.recv_timeout(SYNC_TIMEOUT) {
+                Ok(Response::Batch { results, .. }) if results.len() == meta.len() => {
+                    let mut owners = self.owners.lock().unwrap();
+                    for (&(k, item_id, gen), r) in meta.iter().zip(results) {
+                        if r.is_ok() {
+                            owners.remove_if(item_id, gen);
+                        }
+                        slots[k] = Some(r);
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    for &(k, item_id, _) in &meta {
+                        slots[k] = Some(Response::err(
+                            ErrorCode::ShardTimeout,
+                            format!("shard {shard} timed out"),
+                            Some(item_id),
+                        ));
+                    }
+                }
+                Ok(_) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    for &(k, item_id, _) in &meta {
+                        slots[k] = Some(Response::err(
+                            ErrorCode::Unavailable,
+                            format!("shard {shard} dropped the batch"),
+                            Some(item_id),
+                        ));
+                    }
+                }
+            }
+        }
+        let results = slots
+            .into_iter()
+            .map(|s| {
+                s.unwrap_or_else(|| Response::err(ErrorCode::Unavailable, "item lost", None))
+            })
+            .collect();
+        Response::Batch {
+            id: batch_id,
+            results,
         }
     }
 
@@ -460,20 +693,18 @@ fn merger_loop(
             Ok(MergeCmd::Cycle(ack)) => {
                 let shards = run_cycle(&shard_txs, &metrics, &mut next_epoch);
                 next_fire = Instant::now() + interval;
-                if let Some(ack) = ack {
-                    let _ = ack.send(Json::obj(vec![
-                        ("ok", Json::Bool(true)),
-                        ("synced_shards", Json::Num(shards as f64)),
-                        (
-                            "merges",
-                            Json::Num(metrics.merges.load(Ordering::Relaxed) as f64),
-                        ),
-                    ]));
+                if let Some((id, ack)) = ack {
+                    let _ = ack.send(Response::Sync {
+                        id,
+                        synced_shards: shards,
+                        merges: metrics.merges.load(Ordering::Relaxed),
+                    });
                 }
             }
             Ok(MergeCmd::Admin(req, ack)) => {
                 // same order on every shard keeps slot ids aligned
-                let mut first: Option<Json> = None;
+                let mut first: Option<Response> = None;
+                let mut sent_any = false;
                 for tx in &shard_txs {
                     let (t, r) = mpsc::channel();
                     if tx
@@ -485,11 +716,21 @@ fn merger_loop(
                     {
                         continue;
                     }
+                    sent_any = true;
                     if let Ok(resp) = r.recv_timeout(SYNC_TIMEOUT) {
                         first.get_or_insert(resp);
                     }
                 }
-                let _ = ack.send(first.unwrap_or_else(|| err("no shard answered")));
+                // closed shard channels (engine shutting down) are
+                // `unavailable`; only a shard that accepted the job but
+                // missed the deadline is a `shard_timeout`
+                let _ = ack.send(first.unwrap_or_else(|| {
+                    if sent_any {
+                        Response::err(ErrorCode::ShardTimeout, "no shard answered", req.id())
+                    } else {
+                        Response::err(ErrorCode::Unavailable, "no shard reachable", req.id())
+                    }
+                }));
             }
             Ok(MergeCmd::Stop) | Err(mpsc::RecvTimeoutError::Disconnected) => break,
         }
@@ -579,11 +820,19 @@ fn handle_conn(stream: TcpStream, dispatch: Arc<Dispatch>) {
         if line.trim().is_empty() {
             continue;
         }
+        // parse exactly once (JSON -> typed Request); serialize exactly
+        // once right here
         let (resp, down) = match Json::parse(&line) {
-            Ok(req) => dispatch.dispatch(req),
-            Err(e) => (err(&format!("parse: {e}")), false),
+            Ok(j) => match Request::parse(&j) {
+                Ok(req) => dispatch.dispatch(req),
+                Err(e) => (Response::Error(e), false),
+            },
+            Err(e) => (
+                Response::err(ErrorCode::BadRequest, format!("parse: {e}"), None),
+                false,
+            ),
         };
-        let write_failed = writeln!(writer, "{}", resp.to_string()).is_err();
+        let write_failed = writeln!(writer, "{}", resp.to_json().to_string()).is_err();
         if down {
             dispatch.initiate_stop();
             break;
@@ -597,9 +846,9 @@ fn handle_conn(stream: TcpStream, dispatch: Arc<Dispatch>) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::client::{ClientError, ParetoClient};
     use crate::pacer::{PacerConfig, SharedPacer};
-    use crate::router::{ContextCache, ParetoRouter, Prior, RouterConfig};
-    use crate::server::serve::Client;
+    use crate::router::{ContextCache, ModelRef, ParetoRouter, Prior, RouterConfig};
     use crate::sim::hash_features;
 
     const D: usize = 6;
@@ -623,50 +872,29 @@ mod tests {
             .unwrap()
     }
 
-    fn call(c: &mut Client, req: Json) -> Json {
-        c.call(&req).unwrap()
+    fn api_code(e: &ClientError) -> Option<ErrorCode> {
+        match e {
+            ClientError::Api(e) => Some(e.code),
+            ClientError::Transport(_) => None,
+        }
     }
 
     #[test]
     fn routes_round_robin_and_feedback_finds_its_shard() {
         let engine = spawn_engine(4, 1e-3, Duration::from_secs(60));
-        let mut c = Client::connect(&engine.addr).unwrap();
+        let mut c = ParetoClient::connect(engine.addr).unwrap();
         let mut shards_seen = [false; 4];
         for i in 0..40u64 {
-            let r = call(
-                &mut c,
-                Json::obj(vec![
-                    ("op", Json::Str("route".into())),
-                    ("id", Json::Num(i as f64)),
-                    ("prompt", Json::Str(format!("prompt number {i}"))),
-                ]),
-            );
-            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
-            shards_seen[r.get("shard").unwrap().as_f64().unwrap() as usize] = true;
-            let f = call(
-                &mut c,
-                Json::obj(vec![
-                    ("op", Json::Str("feedback".into())),
-                    ("id", Json::Num(i as f64)),
-                    ("reward", Json::Num(0.8)),
-                    ("cost", Json::Num(1e-4)),
-                ]),
-            );
-            assert_eq!(f.get("ok").unwrap().as_bool(), Some(true), "{f:?}");
+            let r = c.route(i, &format!("prompt number {i}")).unwrap();
+            shards_seen[r.shard] = true;
+            c.feedback(i, 0.8, 1e-4).unwrap();
         }
         assert!(shards_seen.iter().all(|&s| s), "round-robin must hit every shard");
-        // double feedback on a claimed id fails at the dispatcher
-        let f = call(
-            &mut c,
-            Json::obj(vec![
-                ("op", Json::Str("feedback".into())),
-                ("id", Json::Num(3.0)),
-                ("reward", Json::Num(0.8)),
-                ("cost", Json::Num(1e-4)),
-            ]),
-        );
-        assert_eq!(f.get("ok").unwrap().as_bool(), Some(false));
-        let m = call(&mut c, Json::obj(vec![("op", Json::Str("metrics".into()))]));
+        // double feedback on a claimed id fails at the dispatcher with
+        // the typed code
+        let e = c.feedback(3, 0.8, 1e-4).unwrap_err();
+        assert_eq!(api_code(&e), Some(ErrorCode::UnknownId));
+        let m = c.metrics().unwrap();
         assert_eq!(m.get("requests").unwrap().as_f64(), Some(40.0));
         assert_eq!(m.get("feedbacks").unwrap().as_f64(), Some(40.0));
         assert_eq!(m.get("workers").unwrap().as_f64(), Some(4.0));
@@ -679,106 +907,79 @@ mod tests {
     }
 
     #[test]
+    fn route_batch_fans_out_and_keeps_request_order() {
+        let engine = spawn_engine(4, 1e-3, Duration::from_secs(60));
+        let mut c = ParetoClient::connect(engine.addr).unwrap();
+        let items: Vec<(u64, String)> = (0..16).map(|i| (i, format!("batch item {i}"))).collect();
+        let routed = c.route_batch(&items).unwrap();
+        assert_eq!(routed.len(), 16);
+        let mut shards_seen = [false; 4];
+        for (k, r) in routed.iter().enumerate() {
+            let r = r.as_ref().unwrap();
+            assert_eq!(r.id, k as u64, "results must be in request order");
+            shards_seen[r.shard] = true;
+        }
+        assert!(shards_seen.iter().all(|&s| s), "batch must fan out to every shard");
+        // feedback_batch finds each item's owner shard; a bogus id fails
+        // per-item without poisoning the batch
+        let mut fb: Vec<(u64, f64, f64)> = (0..16).map(|i| (i, 0.8, 1e-4)).collect();
+        fb.push((999, 0.8, 1e-4));
+        let acks = c.feedback_batch(&fb).unwrap();
+        assert_eq!(acks.len(), 17);
+        for a in &acks[..16] {
+            a.as_ref().unwrap();
+        }
+        assert_eq!(acks[16].as_ref().unwrap_err().code, ErrorCode::UnknownId);
+        let m = c.metrics().unwrap();
+        assert_eq!(m.get("requests").unwrap().as_f64(), Some(16.0));
+        assert_eq!(m.get("feedbacks").unwrap().as_f64(), Some(16.0));
+        engine.stop();
+    }
+
+    #[test]
     fn sync_op_merges_and_broadcasts() {
         let engine = spawn_engine(2, 1e-3, Duration::from_secs(60));
-        let mut c = Client::connect(&engine.addr).unwrap();
+        let mut c = ParetoClient::connect(engine.addr).unwrap();
         for i in 0..20u64 {
-            call(
-                &mut c,
-                Json::obj(vec![
-                    ("op", Json::Str("route".into())),
-                    ("id", Json::Num(i as f64)),
-                    ("prompt", Json::Str(format!("q {i}"))),
-                ]),
-            );
-            call(
-                &mut c,
-                Json::obj(vec![
-                    ("op", Json::Str("feedback".into())),
-                    ("id", Json::Num(i as f64)),
-                    ("reward", Json::Num(0.7)),
-                    ("cost", Json::Num(1e-4)),
-                ]),
-            );
+            c.route(i, &format!("q {i}")).unwrap();
+            c.feedback(i, 0.7, 1e-4).unwrap();
         }
-        let s = call(&mut c, Json::obj(vec![("op", Json::Str("sync".into()))]));
-        assert_eq!(s.get("ok").unwrap().as_bool(), Some(true), "{s:?}");
-        assert_eq!(s.get("synced_shards").unwrap().as_f64(), Some(2.0));
-        assert!(s.get("merges").unwrap().as_f64().unwrap() >= 1.0);
+        let s = c.sync().unwrap();
+        assert_eq!(s.synced_shards, 2);
+        assert!(s.merges >= 1);
         engine.stop();
     }
 
     #[test]
     fn admin_ops_apply_to_all_shards_consistently() {
         let engine = spawn_engine(3, 1e-3, Duration::from_millis(20));
-        let mut c = Client::connect(&engine.addr).unwrap();
-        let r = call(
-            &mut c,
-            Json::obj(vec![
-                ("op", Json::Str("add_model".into())),
-                ("name", Json::Str("flash".into())),
-                ("price_in", Json::Num(0.3)),
-                ("price_out", Json::Num(2.5)),
-            ]),
-        );
-        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
-        assert_eq!(r.get("arm").unwrap().as_f64(), Some(2.0));
+        let mut c = ParetoClient::connect(engine.addr).unwrap();
+        let arm = c.add_model("flash", 0.3, 2.5, None).unwrap();
+        assert_eq!(arm, 2);
+        // duplicate name rejected identically on every shard
+        let e = c.add_model("flash", 0.3, 2.5, None).unwrap_err();
+        assert_eq!(api_code(&e), Some(ErrorCode::DuplicateModel));
         // traffic reaches the new arm on whatever shard serves it, and the
         // engine keeps serving across the merge cycles in between
         for i in 0..30u64 {
-            let r = call(
-                &mut c,
-                Json::obj(vec![
-                    ("op", Json::Str("route".into())),
-                    ("id", Json::Num(i as f64)),
-                    ("prompt", Json::Str(format!("after hot-swap {i}"))),
-                ]),
-            );
-            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
-            call(
-                &mut c,
-                Json::obj(vec![
-                    ("op", Json::Str("feedback".into())),
-                    ("id", Json::Num(i as f64)),
-                    ("reward", Json::Num(0.8)),
-                    ("cost", Json::Num(2e-4)),
-                ]),
-            );
+            c.route(i, &format!("after hot-swap {i}")).unwrap();
+            c.feedback(i, 0.8, 2e-4).unwrap();
         }
-        let r = call(
-            &mut c,
-            Json::obj(vec![
-                ("op", Json::Str("delete_model".into())),
-                ("arm", Json::Num(2.0)),
-            ]),
-        );
-        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
-        // deleting again fails on every shard the same way
-        let r = call(
-            &mut c,
-            Json::obj(vec![
-                ("op", Json::Str("delete_model".into())),
-                ("arm", Json::Num(2.0)),
-            ]),
-        );
-        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
-        let r = call(
-            &mut c,
-            Json::obj(vec![
-                ("op", Json::Str("set_budget".into())),
-                ("budget", Json::Num(5e-4)),
-            ]),
-        );
-        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        // reprice by name resolves to the same slot on every shard
+        assert_eq!(c.reprice(&ModelRef::Name("flash".into()), 0.2, 2.0).unwrap(), 2);
+        // delete by name, then both addressing modes agree it is gone
+        assert_eq!(c.delete_model(&ModelRef::Name("flash".into())).unwrap(), 2);
+        let e = c.delete_model(&ModelRef::Arm(2)).unwrap_err();
+        assert_eq!(api_code(&e), Some(ErrorCode::UnknownModel));
+        assert_eq!(c.set_budget(5e-4).unwrap(), 5e-4);
         engine.stop();
     }
 
     #[test]
     fn shutdown_op_stops_the_engine() {
         let engine = spawn_engine(2, 1e-3, Duration::from_millis(20));
-        let mut c = Client::connect(&engine.addr).unwrap();
-        let r = call(&mut c, Json::obj(vec![("op", Json::Str("shutdown".into()))]));
-        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        let mut c = ParetoClient::connect(engine.addr).unwrap();
+        c.shutdown().unwrap();
         for _ in 0..100 {
             if engine.is_shutdown() {
                 break;
@@ -796,34 +997,19 @@ mod tests {
         let mut handles = Vec::new();
         for t in 0..4u64 {
             handles.push(std::thread::spawn(move || {
-                let mut c = Client::connect(&addr).unwrap();
+                let mut c = ParetoClient::connect(addr).unwrap();
                 for i in 0..50u64 {
                     let id = t * 1_000 + i;
-                    let r = c
-                        .call(&Json::obj(vec![
-                            ("op", Json::Str("route".into())),
-                            ("id", Json::Num(id as f64)),
-                            ("prompt", Json::Str(format!("client {t} msg {i}"))),
-                        ]))
-                        .unwrap();
-                    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
-                    c.call(&Json::obj(vec![
-                        ("op", Json::Str("feedback".into())),
-                        ("id", Json::Num(id as f64)),
-                        ("reward", Json::Num(0.8)),
-                        ("cost", Json::Num(1e-4)),
-                    ]))
-                    .unwrap();
+                    c.route(id, &format!("client {t} msg {i}")).unwrap();
+                    c.feedback(id, 0.8, 1e-4).unwrap();
                 }
             }));
         }
         for h in handles {
             h.join().unwrap();
         }
-        let mut c = Client::connect(&addr).unwrap();
-        let m = c
-            .call(&Json::obj(vec![("op", Json::Str("metrics".into()))]))
-            .unwrap();
+        let mut c = ParetoClient::connect(addr).unwrap();
+        let m = c.metrics().unwrap();
         assert_eq!(m.get("requests").unwrap().as_f64(), Some(200.0));
         assert_eq!(m.get("feedbacks").unwrap().as_f64(), Some(200.0));
         engine.stop();

@@ -1,12 +1,15 @@
-//! Serving stack: line-JSON TCP protocol, the single-worker reference
-//! server, the sharded production engine and the metrics registry.
+//! Serving stack: the typed v2 line-JSON protocol, the single-worker
+//! reference server, the sharded production engine and the metrics
+//! registry.  The typed client SDK lives in [`crate::client`].
 
 mod api;
 mod engine;
 mod metrics;
+pub mod proto;
 mod serve;
 
 pub use api::{Featurize, ServerState};
 pub use engine::{EngineConfig, ShardedEngine};
 pub use metrics::{LatencyHisto, Metrics};
+pub use proto::{ErrorCode, FeedbackItem, Request, Response, RouteItem, WireError, PROTO_V};
 pub use serve::{Client, Server};

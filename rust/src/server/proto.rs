@@ -1,0 +1,734 @@
+//! Wire protocol v2 — the typed request/response layer.
+//!
+//! Every byte that crosses a socket goes through this module exactly once
+//! in each direction: connection handlers parse a line into a [`Request`],
+//! the serving paths (single-worker server and sharded engine) dispatch on
+//! the typed value, and the resulting [`Response`] is serialized back to a
+//! line at the writer.  Neither serving path touches raw JSON, so the
+//! reference server and the sharded engine cannot drift.
+//!
+//! Envelope (every response):
+//!   * `"v": 2`          — protocol version stamp
+//!   * `"ok": bool`      — success flag
+//!   * `"id": u64`       — echoed from the request whenever it carried a
+//!     parseable numeric id, INCLUDING error responses, so pipelined
+//!     clients can always correlate failures
+//!
+//! Errors carry a stable machine-readable `"code"` (see [`ErrorCode`])
+//! next to the human-readable `"error"` message.  v1 requests (no `"v"`
+//! field) are accepted unchanged; v1 clients that read `"error"` as a
+//! string keep working because the message stays a plain string.
+//!
+//! Batch verbs (`route_batch` / `feedback_batch`) carry per-item requests
+//! in `"items"` and return per-item responses in `"results"`, in request
+//! order.  The batch envelope's `ok` means the batch was *transported and
+//! processed*; individual items carry their own `ok`/`code`.
+
+use crate::router::ModelRef;
+use crate::util::json::Json;
+
+/// Current protocol version, stamped into every response as `"v"`.
+pub const PROTO_V: u64 = 2;
+
+/// Stable machine-readable error codes (the wire contract; see the README
+/// protocol reference for the full table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// malformed JSON, unknown op, missing/invalid fields, bad version
+    BadRequest,
+    /// feedback for an id that was never routed or was already claimed
+    UnknownId,
+    /// name/arm does not resolve to an active model slot
+    UnknownModel,
+    /// `add_model` with a name that is already active
+    DuplicateModel,
+    /// `set_budget` on a router started without a budget
+    NoPacer,
+    /// the featurizer failed on this prompt
+    FeaturizeFailed,
+    /// a worker shard did not answer within the engine deadline
+    ShardTimeout,
+    /// a worker shard or the merger is gone (engine shutting down)
+    Unavailable,
+}
+
+impl ErrorCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnknownId => "unknown_id",
+            ErrorCode::UnknownModel => "unknown_model",
+            ErrorCode::DuplicateModel => "duplicate_model",
+            ErrorCode::NoPacer => "no_pacer",
+            ErrorCode::FeaturizeFailed => "featurize_failed",
+            ErrorCode::ShardTimeout => "shard_timeout",
+            ErrorCode::Unavailable => "unavailable",
+        }
+    }
+
+    /// Inverse of [`ErrorCode::as_str`] (client-side response typing).
+    pub fn from_wire(s: &str) -> Option<ErrorCode> {
+        Some(match s {
+            "bad_request" => ErrorCode::BadRequest,
+            "unknown_id" => ErrorCode::UnknownId,
+            "unknown_model" => ErrorCode::UnknownModel,
+            "duplicate_model" => ErrorCode::DuplicateModel,
+            "no_pacer" => ErrorCode::NoPacer,
+            "featurize_failed" => ErrorCode::FeaturizeFailed,
+            "shard_timeout" => ErrorCode::ShardTimeout,
+            "unavailable" => ErrorCode::Unavailable,
+            _ => return None,
+        })
+    }
+}
+
+/// A structured wire error: code + message + the request id when it was
+/// parseable (so even malformed pipelined requests stay correlatable).
+#[derive(Clone, Debug)]
+pub struct WireError {
+    pub code: ErrorCode,
+    pub msg: String,
+    pub id: Option<u64>,
+}
+
+impl WireError {
+    pub fn new(code: ErrorCode, msg: impl Into<String>, id: Option<u64>) -> WireError {
+        WireError {
+            code,
+            msg: msg.into(),
+            id,
+        }
+    }
+}
+
+/// One prompt inside `route` / `route_batch`.
+#[derive(Clone, Debug)]
+pub struct RouteItem {
+    pub id: u64,
+    pub prompt: String,
+}
+
+/// One observation inside `feedback` / `feedback_batch`.
+#[derive(Clone, Copy, Debug)]
+pub struct FeedbackItem {
+    pub id: u64,
+    pub reward: f64,
+    pub cost: f64,
+}
+
+/// A parsed, validated request.  `Clone` because the engine broadcasts
+/// admin requests to every shard in the same order.
+#[derive(Clone, Debug)]
+pub enum Request {
+    Route(RouteItem),
+    RouteBatch {
+        id: Option<u64>,
+        items: Vec<RouteItem>,
+    },
+    Feedback(FeedbackItem),
+    FeedbackBatch {
+        id: Option<u64>,
+        items: Vec<FeedbackItem>,
+    },
+    AddModel {
+        id: Option<u64>,
+        name: String,
+        price_in: f64,
+        price_out: f64,
+        /// `(n_eff, r0)` heuristic prior; `None` = cold start
+        prior: Option<(f64, f64)>,
+    },
+    DeleteModel {
+        id: Option<u64>,
+        model: ModelRef,
+    },
+    Reprice {
+        id: Option<u64>,
+        model: ModelRef,
+        price_in: f64,
+        price_out: f64,
+    },
+    SetBudget {
+        id: Option<u64>,
+        budget: f64,
+    },
+    Metrics {
+        id: Option<u64>,
+    },
+    Sync {
+        id: Option<u64>,
+    },
+    Shutdown {
+        id: Option<u64>,
+    },
+}
+
+fn get_f(j: &Json, key: &str) -> Option<f64> {
+    j.get(key).and_then(Json::as_f64)
+}
+
+/// A request id must be a non-negative integer: a saturating `as u64`
+/// cast would silently collapse e.g. `-1` onto id 0 and misattribute a
+/// later feedback to whatever request 0 cached.
+fn get_id(j: &Json) -> Option<u64> {
+    match get_f(j, "id") {
+        Some(v) if v >= 0.0 && v.fract() == 0.0 && v <= u64::MAX as f64 => Some(v as u64),
+        _ => None,
+    }
+}
+
+/// Parse `"arm": n` or `"model": "name"` into a [`ModelRef`].
+fn model_ref(j: &Json, id: Option<u64>, op: &str) -> Result<ModelRef, WireError> {
+    if let Some(a) = get_f(j, "arm") {
+        if a < 0.0 || a.fract() != 0.0 {
+            return Err(WireError::new(
+                ErrorCode::BadRequest,
+                format!("{op}: arm must be a non-negative integer"),
+                id,
+            ));
+        }
+        return Ok(ModelRef::Arm(a as usize));
+    }
+    if let Some(name) = j.get("model").and_then(Json::as_str) {
+        return Ok(ModelRef::Name(name.to_string()));
+    }
+    Err(WireError::new(
+        ErrorCode::BadRequest,
+        format!("{op}: need arm (number) or model (name)"),
+        id,
+    ))
+}
+
+fn parse_items<T>(
+    j: &Json,
+    id: Option<u64>,
+    op: &str,
+    f: impl Fn(&Json, usize) -> Result<T, String>,
+) -> Result<Vec<T>, WireError> {
+    let Some(arr) = j.get("items").and_then(Json::as_arr) else {
+        return Err(WireError::new(
+            ErrorCode::BadRequest,
+            format!("{op}: missing items array"),
+            id,
+        ));
+    };
+    arr.iter()
+        .enumerate()
+        .map(|(k, item)| f(item, k).map_err(|m| WireError::new(ErrorCode::BadRequest, m, id)))
+        .collect()
+}
+
+impl Request {
+    /// Parse and validate one request object.  This is the ONLY place
+    /// request JSON is interpreted; both serving paths dispatch on the
+    /// result.  Errors echo the request `id` whenever one was parseable.
+    pub fn parse(j: &Json) -> Result<Request, WireError> {
+        let id = get_id(j);
+        let bad = |msg: String| WireError::new(ErrorCode::BadRequest, msg, id);
+        if !matches!(j, Json::Obj(_)) {
+            return Err(bad("request must be a JSON object".to_string()));
+        }
+        if let Some(v) = j.get("v") {
+            match v.as_f64() {
+                Some(x) if x == 1.0 || x == PROTO_V as f64 => {}
+                _ => {
+                    return Err(bad(format!(
+                        "unsupported protocol version {} (this server speaks v1/v{PROTO_V})",
+                        v.to_string()
+                    )))
+                }
+            }
+        }
+        let Some(op) = j.get("op").and_then(Json::as_str) else {
+            return Err(bad("missing op".to_string()));
+        };
+        match op {
+            "route" => {
+                let Some(rid) = id else {
+                    return Err(bad("route: missing id".to_string()));
+                };
+                let Some(prompt) = j.get("prompt").and_then(Json::as_str) else {
+                    return Err(bad("route: missing prompt".to_string()));
+                };
+                Ok(Request::Route(RouteItem {
+                    id: rid,
+                    prompt: prompt.to_string(),
+                }))
+            }
+            "route_batch" => {
+                let items = parse_items(j, id, op, |item, k| {
+                    let iid = get_id(item).ok_or_else(|| format!("route_batch item {k}: missing id"))?;
+                    let prompt = item
+                        .get("prompt")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| format!("route_batch item {k}: missing prompt"))?;
+                    Ok(RouteItem {
+                        id: iid,
+                        prompt: prompt.to_string(),
+                    })
+                })?;
+                Ok(Request::RouteBatch { id, items })
+            }
+            "feedback" => {
+                let (Some(fid), Some(reward), Some(cost)) =
+                    (id, get_f(j, "reward"), get_f(j, "cost"))
+                else {
+                    return Err(bad("feedback: need id, reward, cost".to_string()));
+                };
+                Ok(Request::Feedback(FeedbackItem {
+                    id: fid,
+                    reward,
+                    cost,
+                }))
+            }
+            "feedback_batch" => {
+                let items = parse_items(j, id, op, |item, k| {
+                    let (Some(iid), Some(reward), Some(cost)) =
+                        (get_id(item), get_f(item, "reward"), get_f(item, "cost"))
+                    else {
+                        return Err(format!("feedback_batch item {k}: need id, reward, cost"));
+                    };
+                    Ok(FeedbackItem {
+                        id: iid,
+                        reward,
+                        cost,
+                    })
+                })?;
+                Ok(Request::FeedbackBatch { id, items })
+            }
+            "add_model" => {
+                let (Some(name), Some(price_in), Some(price_out)) = (
+                    j.get("name").and_then(Json::as_str),
+                    get_f(j, "price_in"),
+                    get_f(j, "price_out"),
+                ) else {
+                    return Err(bad("add_model: need name, price_in, price_out".to_string()));
+                };
+                let prior = match (get_f(j, "n_eff"), get_f(j, "r0")) {
+                    (Some(n_eff), Some(r0)) => Some((n_eff, r0)),
+                    (None, None) => None,
+                    // v1 silently dropped a lone n_eff/r0 and registered
+                    // a COLD model; that surprise is now an explicit error
+                    _ => {
+                        return Err(bad(
+                            "add_model: n_eff and r0 must be given together".to_string(),
+                        ))
+                    }
+                };
+                Ok(Request::AddModel {
+                    id,
+                    name: name.to_string(),
+                    price_in,
+                    price_out,
+                    prior,
+                })
+            }
+            "delete_model" => Ok(Request::DeleteModel {
+                id,
+                model: model_ref(j, id, op)?,
+            }),
+            "reprice" => {
+                let (Some(price_in), Some(price_out)) =
+                    (get_f(j, "price_in"), get_f(j, "price_out"))
+                else {
+                    return Err(bad("reprice: need price_in, price_out".to_string()));
+                };
+                Ok(Request::Reprice {
+                    id,
+                    model: model_ref(j, id, op)?,
+                    price_in,
+                    price_out,
+                })
+            }
+            "set_budget" => {
+                let Some(budget) = get_f(j, "budget") else {
+                    return Err(bad("set_budget: need budget".to_string()));
+                };
+                if !budget.is_finite() || budget <= 0.0 {
+                    return Err(bad(
+                        "set_budget: budget must be positive and finite".to_string(),
+                    ));
+                }
+                Ok(Request::SetBudget { id, budget })
+            }
+            "metrics" => Ok(Request::Metrics { id }),
+            "sync" => Ok(Request::Sync { id }),
+            "shutdown" => Ok(Request::Shutdown { id }),
+            other => Err(bad(format!("unknown op '{other}'"))),
+        }
+    }
+
+    /// The request id, when the verb carries one.
+    pub fn id(&self) -> Option<u64> {
+        match self {
+            Request::Route(it) => Some(it.id),
+            Request::Feedback(it) => Some(it.id),
+            Request::RouteBatch { id, .. }
+            | Request::FeedbackBatch { id, .. }
+            | Request::AddModel { id, .. }
+            | Request::DeleteModel { id, .. }
+            | Request::Reprice { id, .. }
+            | Request::SetBudget { id, .. }
+            | Request::Metrics { id }
+            | Request::Sync { id }
+            | Request::Shutdown { id } => *id,
+        }
+    }
+}
+
+/// A typed response; serialized exactly once per line at the connection
+/// writer via [`Response::to_json`].
+#[derive(Debug)]
+pub enum Response {
+    Error(WireError),
+    Route {
+        id: u64,
+        arm: usize,
+        model: String,
+        lambda: f64,
+        forced: bool,
+        shard: usize,
+        route_us: f64,
+        e2e_us: f64,
+    },
+    Feedback {
+        id: u64,
+        arm: usize,
+    },
+    /// `route_batch` / `feedback_batch` results, in request order.
+    Batch {
+        id: Option<u64>,
+        results: Vec<Response>,
+    },
+    AddModel {
+        id: Option<u64>,
+        arm: usize,
+        name: String,
+    },
+    DeleteModel {
+        id: Option<u64>,
+        arm: usize,
+    },
+    Reprice {
+        id: Option<u64>,
+        arm: usize,
+    },
+    SetBudget {
+        id: Option<u64>,
+        budget: f64,
+    },
+    Metrics {
+        id: Option<u64>,
+        snapshot: Json,
+    },
+    Sync {
+        id: Option<u64>,
+        synced_shards: usize,
+        merges: u64,
+    },
+    Shutdown {
+        id: Option<u64>,
+    },
+}
+
+/// Success envelope: `ok`/`v` plus the echoed id, then verb fields.
+fn envelope(id: Option<u64>, mut fields: Vec<(&str, Json)>) -> Json {
+    let mut all = vec![
+        ("ok", Json::Bool(true)),
+        ("v", Json::Num(PROTO_V as f64)),
+    ];
+    if let Some(id) = id {
+        all.push(("id", Json::Num(id as f64)));
+    }
+    all.append(&mut fields);
+    Json::obj(all)
+}
+
+impl Response {
+    /// Shorthand error constructor.
+    pub fn err(code: ErrorCode, msg: impl Into<String>, id: Option<u64>) -> Response {
+        Response::Error(WireError::new(code, msg, id))
+    }
+
+    pub fn is_ok(&self) -> bool {
+        !matches!(self, Response::Error(_))
+    }
+
+    /// Serialize to the wire object (the single serialization point).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Error(e) => {
+                let mut fields = vec![
+                    ("ok", Json::Bool(false)),
+                    ("v", Json::Num(PROTO_V as f64)),
+                ];
+                if let Some(id) = e.id {
+                    fields.push(("id", Json::Num(id as f64)));
+                }
+                fields.push(("code", Json::Str(e.code.as_str().to_string())));
+                fields.push(("error", Json::Str(e.msg.clone())));
+                Json::obj(fields)
+            }
+            Response::Route {
+                id,
+                arm,
+                model,
+                lambda,
+                forced,
+                shard,
+                route_us,
+                e2e_us,
+            } => envelope(
+                Some(*id),
+                vec![
+                    ("arm", Json::Num(*arm as f64)),
+                    ("model", Json::Str(model.clone())),
+                    ("lambda", Json::Num(*lambda)),
+                    ("forced", Json::Bool(*forced)),
+                    ("shard", Json::Num(*shard as f64)),
+                    ("route_us", Json::Num(*route_us)),
+                    ("e2e_us", Json::Num(*e2e_us)),
+                ],
+            ),
+            Response::Feedback { id, arm } => {
+                envelope(Some(*id), vec![("arm", Json::Num(*arm as f64))])
+            }
+            Response::Batch { id, results } => envelope(
+                *id,
+                vec![(
+                    "results",
+                    Json::Arr(results.iter().map(Response::to_json).collect()),
+                )],
+            ),
+            Response::AddModel { id, arm, name } => envelope(
+                *id,
+                vec![
+                    ("arm", Json::Num(*arm as f64)),
+                    ("model", Json::Str(name.clone())),
+                ],
+            ),
+            Response::DeleteModel { id, arm } | Response::Reprice { id, arm } => {
+                envelope(*id, vec![("arm", Json::Num(*arm as f64))])
+            }
+            Response::SetBudget { id, budget } => {
+                envelope(*id, vec![("budget", Json::Num(*budget))])
+            }
+            Response::Metrics { id, snapshot } => {
+                let mut m = match snapshot {
+                    Json::Obj(m) => m.clone(),
+                    _ => Default::default(),
+                };
+                m.insert("ok".to_string(), Json::Bool(true));
+                m.insert("v".to_string(), Json::Num(PROTO_V as f64));
+                if let Some(id) = id {
+                    m.insert("id".to_string(), Json::Num(*id as f64));
+                }
+                Json::Obj(m)
+            }
+            Response::Sync {
+                id,
+                synced_shards,
+                merges,
+            } => envelope(
+                *id,
+                vec![
+                    ("synced_shards", Json::Num(*synced_shards as f64)),
+                    ("merges", Json::Num(*merges as f64)),
+                ],
+            ),
+            Response::Shutdown { id } => envelope(*id, Vec::new()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_req(s: &str) -> Result<Request, WireError> {
+        Request::parse(&Json::parse(s).unwrap())
+    }
+
+    #[test]
+    fn v1_and_v2_requests_parse_identically() {
+        for s in [
+            r#"{"op":"route","id":7,"prompt":"hello"}"#,
+            r#"{"op":"route","v":1,"id":7,"prompt":"hello"}"#,
+            r#"{"op":"route","v":2,"id":7,"prompt":"hello"}"#,
+        ] {
+            match parse_req(s).unwrap() {
+                Request::Route(it) => {
+                    assert_eq!(it.id, 7);
+                    assert_eq!(it.prompt, "hello");
+                }
+                other => panic!("wrong variant: {other:?}"),
+            }
+        }
+        let e = parse_req(r#"{"op":"route","v":3,"id":7,"prompt":"x"}"#).unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadRequest);
+        assert_eq!(e.id, Some(7), "version errors must still echo the id");
+    }
+
+    #[test]
+    fn invalid_ids_are_rejected_not_truncated() {
+        // -1 as u64 would saturate onto id 0 and steal its pending
+        // context; fractional ids would silently truncate
+        for bad in [
+            r#"{"op":"route","id":-1,"prompt":"x"}"#,
+            r#"{"op":"route","id":1.5,"prompt":"x"}"#,
+            r#"{"op":"feedback","id":-3,"reward":0.5,"cost":1e-4}"#,
+        ] {
+            let e = parse_req(bad).unwrap_err();
+            assert_eq!(e.code, ErrorCode::BadRequest, "{bad}");
+            assert_eq!(e.id, None, "an invalid id must not be echoed: {bad}");
+        }
+    }
+
+    #[test]
+    fn parse_errors_carry_code_and_id() {
+        let e = parse_req(r#"{"op":"route","id":42}"#).unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadRequest);
+        assert_eq!(e.id, Some(42));
+        let e = parse_req(r#"{"op":"nope","id":9}"#).unwrap_err();
+        assert_eq!(e.id, Some(9));
+        assert!(e.msg.contains("unknown op"));
+        let e = parse_req(r#""just a string""#).unwrap_err();
+        assert_eq!(e.id, None);
+        // serialized error keeps the string "error" field (v1 compat)
+        let j = Response::Error(e).to_json();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("code").unwrap().as_str(), Some("bad_request"));
+        assert!(j.get("error").unwrap().as_str().is_some());
+        assert_eq!(j.get("v").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn model_ref_parses_arm_or_name() {
+        match parse_req(r#"{"op":"delete_model","arm":2}"#).unwrap() {
+            Request::DeleteModel { model, .. } => assert_eq!(model, ModelRef::Arm(2)),
+            other => panic!("wrong variant: {other:?}"),
+        }
+        match parse_req(r#"{"op":"delete_model","model":"gemini-2.5-pro"}"#).unwrap() {
+            Request::DeleteModel { model, .. } => {
+                assert_eq!(model, ModelRef::Name("gemini-2.5-pro".into()))
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        assert!(parse_req(r#"{"op":"delete_model"}"#).is_err());
+        assert!(parse_req(r#"{"op":"delete_model","arm":1.5}"#).is_err());
+        assert!(parse_req(r#"{"op":"delete_model","arm":-1}"#).is_err());
+        match parse_req(r#"{"op":"reprice","model":"m","price_in":0.2,"price_out":0.4}"#).unwrap()
+        {
+            Request::Reprice { model, price_in, .. } => {
+                assert_eq!(model, ModelRef::Name("m".into()));
+                assert_eq!(price_in, 0.2);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn batch_items_parse_in_order() {
+        let r = parse_req(
+            r#"{"op":"route_batch","id":5,"items":[
+                {"id":10,"prompt":"a"},{"id":11,"prompt":"b"}]}"#,
+        )
+        .unwrap();
+        match r {
+            Request::RouteBatch { id, items } => {
+                assert_eq!(id, Some(5));
+                assert_eq!(items.len(), 2);
+                assert_eq!(items[0].id, 10);
+                assert_eq!(items[1].prompt, "b");
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        // a malformed item poisons the whole batch at parse time
+        let e = parse_req(r#"{"op":"route_batch","id":5,"items":[{"id":1}]}"#).unwrap_err();
+        assert_eq!(e.id, Some(5));
+        assert!(e.msg.contains("item 0"));
+        let e = parse_req(r#"{"op":"feedback_batch","items":[{"id":1,"reward":0.5}]}"#)
+            .unwrap_err();
+        assert!(e.msg.contains("item 0"));
+    }
+
+    #[test]
+    fn add_model_prior_must_be_complete() {
+        match parse_req(
+            r#"{"op":"add_model","name":"f","price_in":0.3,"price_out":2.5,"n_eff":20,"r0":0.5}"#,
+        )
+        .unwrap()
+        {
+            Request::AddModel { prior, .. } => assert_eq!(prior, Some((20.0, 0.5))),
+            other => panic!("wrong variant: {other:?}"),
+        }
+        assert!(parse_req(
+            r#"{"op":"add_model","name":"f","price_in":0.3,"price_out":2.5,"n_eff":20}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn set_budget_validated_at_parse() {
+        assert!(parse_req(r#"{"op":"set_budget","budget":0.002}"#).is_ok());
+        for bad in [
+            r#"{"op":"set_budget","budget":-1}"#,
+            r#"{"op":"set_budget","budget":0}"#,
+            r#"{"op":"set_budget"}"#,
+        ] {
+            let e = parse_req(bad).unwrap_err();
+            assert_eq!(e.code, ErrorCode::BadRequest, "{bad}");
+        }
+    }
+
+    #[test]
+    fn response_envelope_stamps_v_ok_id() {
+        let j = Response::Feedback { id: 3, arm: 1 }.to_json();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("v").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("id").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("arm").unwrap().as_f64(), Some(1.0));
+        // batch serialization nests per-item envelopes in order
+        let b = Response::Batch {
+            id: Some(9),
+            results: vec![
+                Response::Feedback { id: 1, arm: 0 },
+                Response::err(ErrorCode::UnknownId, "nope", Some(2)),
+            ],
+        }
+        .to_json();
+        assert_eq!(b.get("id").unwrap().as_f64(), Some(9.0));
+        let rs = b.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rs[0].get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(rs[1].get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(rs[1].get("code").unwrap().as_str(), Some("unknown_id"));
+        assert_eq!(rs[1].get("id").unwrap().as_f64(), Some(2.0));
+        // metrics envelope injects into the snapshot object
+        let m = Response::Metrics {
+            id: Some(4),
+            snapshot: Json::obj(vec![("requests", Json::Num(10.0))]),
+        }
+        .to_json();
+        assert_eq!(m.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(m.get("v").unwrap().as_f64(), Some(2.0));
+        assert_eq!(m.get("id").unwrap().as_f64(), Some(4.0));
+        assert_eq!(m.get("requests").unwrap().as_f64(), Some(10.0));
+    }
+
+    #[test]
+    fn error_codes_roundtrip_the_wire() {
+        for code in [
+            ErrorCode::BadRequest,
+            ErrorCode::UnknownId,
+            ErrorCode::UnknownModel,
+            ErrorCode::DuplicateModel,
+            ErrorCode::NoPacer,
+            ErrorCode::FeaturizeFailed,
+            ErrorCode::ShardTimeout,
+            ErrorCode::Unavailable,
+        ] {
+            assert_eq!(ErrorCode::from_wire(code.as_str()), Some(code));
+        }
+        assert_eq!(ErrorCode::from_wire("lol"), None);
+    }
+}

@@ -25,6 +25,7 @@ use std::thread::JoinHandle;
 use anyhow::Result;
 
 use super::api::{Job, ServerState};
+use super::proto::{ErrorCode, Request, Response};
 use crate::util::json::Json;
 
 /// Running server handle.
@@ -109,10 +110,11 @@ impl Server {
     fn do_stop(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
         // sentinel job unblocks the worker even while client connections
-        // (holding sender clones) are still open
+        // (holding sender clones) are still open (the shutdown flag is
+        // already set, so the worker exits before handling it)
         let (rtx, _rrx) = mpsc::channel();
         let _ = self.tx.send(Job {
-            req: Json::Null,
+            req: Request::Shutdown { id: None },
             resp: rtx,
         });
         // dummy connection unblocks accept()
@@ -146,29 +148,35 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Job>, shutdown: Arc<AtomicBoo
         if line.trim().is_empty() {
             continue;
         }
+        // parse exactly once (JSON -> typed Request) on the connection
+        // thread; the worker dispatches on the typed value and the typed
+        // Response is serialized exactly once right here
         let resp = match Json::parse(&line) {
-            Ok(req) => {
-                let (rtx, rrx) = mpsc::channel();
-                if tx.send(Job { req, resp: rtx }).is_err() {
-                    break;
+            Ok(j) => match Request::parse(&j) {
+                Ok(req) => {
+                    let (rtx, rrx) = mpsc::channel();
+                    if tx.send(Job { req, resp: rtx }).is_err() {
+                        break;
+                    }
+                    match rrx.recv() {
+                        Ok(r) => r,
+                        Err(_) => break,
+                    }
                 }
-                match rrx.recv() {
-                    Ok(r) => r,
-                    Err(_) => break,
-                }
-            }
-            Err(e) => Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::Str(format!("parse: {e}"))),
-            ]),
+                Err(e) => Response::Error(e),
+            },
+            Err(e) => Response::err(ErrorCode::BadRequest, format!("parse: {e}"), None),
         };
-        if writeln!(writer, "{}", resp.to_string()).is_err() {
+        if writeln!(writer, "{}", resp.to_json().to_string()).is_err() {
             break;
         }
     }
 }
 
-/// Line-JSON client (tests, examples, load generators).
+/// Raw line-JSON client: sends arbitrary `Json` values and returns the
+/// raw response object.  Useful for protocol-level tests (malformed
+/// input, back-compat shapes); application code should prefer the typed
+/// [`crate::client::ParetoClient`] SDK.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -217,30 +225,36 @@ mod tests {
     #[test]
     fn end_to_end_over_tcp() {
         let server = Server::spawn("127.0.0.1:0", test_state).unwrap();
-        let mut c = Client::connect(&server.addr).unwrap();
+        let mut c = crate::client::ParetoClient::connect(server.addr).unwrap();
         for i in 0..20u64 {
-            let r = c
-                .call(&Json::obj(vec![
-                    ("op", Json::Str("route".into())),
-                    ("id", Json::Num(i as f64)),
-                    ("prompt", Json::Str(format!("question number {i}"))),
-                ]))
-                .unwrap();
-            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
-            let _ = c
-                .call(&Json::obj(vec![
-                    ("op", Json::Str("feedback".into())),
-                    ("id", Json::Num(i as f64)),
-                    ("reward", Json::Num(0.85)),
-                    ("cost", Json::Num(1.2e-4)),
-                ]))
-                .unwrap();
+            let r = c.route(i, &format!("question number {i}")).unwrap();
+            assert_eq!(r.id, i);
+            assert!(r.arm < 2);
+            c.feedback(i, 0.85, 1.2e-4).unwrap();
         }
-        let m = c
-            .call(&Json::obj(vec![("op", Json::Str("metrics".into()))]))
-            .unwrap();
+        let m = c.metrics().unwrap();
         assert_eq!(m.get("requests").unwrap().as_f64(), Some(20.0));
         assert_eq!(m.get("feedbacks").unwrap().as_f64(), Some(20.0));
+        server.stop();
+    }
+
+    #[test]
+    fn batches_work_on_the_single_worker_server() {
+        let server = Server::spawn("127.0.0.1:0", test_state).unwrap();
+        let mut c = crate::client::ParetoClient::connect(server.addr).unwrap();
+        let items: Vec<(u64, String)> = (0..10).map(|i| (i, format!("prompt {i}"))).collect();
+        let routed = c.route_batch(&items).unwrap();
+        assert_eq!(routed.len(), 10);
+        let fb: Vec<(u64, f64, f64)> = routed
+            .iter()
+            .map(|r| (r.as_ref().unwrap().id, 0.8, 1e-4))
+            .collect();
+        for r in c.feedback_batch(&fb).unwrap() {
+            r.unwrap();
+        }
+        let m = c.metrics().unwrap();
+        assert_eq!(m.get("requests").unwrap().as_f64(), Some(10.0));
+        assert_eq!(m.get("feedbacks").unwrap().as_f64(), Some(10.0));
         server.stop();
     }
 
@@ -251,34 +265,19 @@ mod tests {
         let mut handles = Vec::new();
         for t in 0..4u64 {
             handles.push(std::thread::spawn(move || {
-                let mut c = Client::connect(&addr).unwrap();
+                let mut c = crate::client::ParetoClient::connect(addr).unwrap();
                 for i in 0..25u64 {
                     let id = t * 1000 + i;
-                    let r = c
-                        .call(&Json::obj(vec![
-                            ("op", Json::Str("route".into())),
-                            ("id", Json::Num(id as f64)),
-                            ("prompt", Json::Str(format!("client {t} msg {i}"))),
-                        ]))
-                        .unwrap();
-                    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
-                    c.call(&Json::obj(vec![
-                        ("op", Json::Str("feedback".into())),
-                        ("id", Json::Num(id as f64)),
-                        ("reward", Json::Num(0.8)),
-                        ("cost", Json::Num(1e-4)),
-                    ]))
-                    .unwrap();
+                    c.route(id, &format!("client {t} msg {i}")).unwrap();
+                    c.feedback(id, 0.8, 1e-4).unwrap();
                 }
             }));
         }
         for h in handles {
             h.join().unwrap();
         }
-        let mut c = Client::connect(&addr).unwrap();
-        let m = c
-            .call(&Json::obj(vec![("op", Json::Str("metrics".into()))]))
-            .unwrap();
+        let mut c = crate::client::ParetoClient::connect(addr).unwrap();
+        let m = c.metrics().unwrap();
         assert_eq!(m.get("requests").unwrap().as_f64(), Some(100.0));
         server.stop();
     }
@@ -289,11 +288,41 @@ mod tests {
         let mut c = Client::connect(&server.addr).unwrap();
         let r = c.call(&Json::Str("not an object".into())).unwrap();
         assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(r.get("code").unwrap().as_str(), Some("bad_request"));
         // connection still alive
         let m = c
             .call(&Json::obj(vec![("op", Json::Str("metrics".into()))]))
             .unwrap();
         assert!(m.get("requests").is_some());
+        server.stop();
+    }
+
+    #[test]
+    fn v1_requests_without_v_field_still_work() {
+        // the pre-v2 wire shapes (no "v", error as plain string) must
+        // keep working; v2 adds fields, it never removes them
+        let server = Server::spawn("127.0.0.1:0", test_state).unwrap();
+        let mut c = Client::connect(&server.addr).unwrap();
+        let r = c
+            .call(&Json::obj(vec![
+                ("op", Json::Str("route".into())),
+                ("id", Json::Num(1.0)),
+                ("prompt", Json::Str("v1 style".into())),
+            ]))
+            .unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(r.get("v").unwrap().as_f64(), Some(2.0));
+        assert_eq!(r.get("id").unwrap().as_f64(), Some(1.0));
+        // v1 error shape: "error" stays a plain string, id now echoed
+        let r = c
+            .call(&Json::obj(vec![
+                ("op", Json::Str("route".into())),
+                ("id", Json::Num(2.0)),
+            ]))
+            .unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+        assert!(r.get("error").unwrap().as_str().is_some());
+        assert_eq!(r.get("id").unwrap().as_f64(), Some(2.0));
         server.stop();
     }
 }

@@ -1,0 +1,288 @@
+//! Wire protocol v2 acceptance over real TCP:
+//!
+//! * a `route_batch` of 64 prompts against the 4-shard engine completes
+//!   in ONE socket round-trip (one request line, one response line — not
+//!   64), with per-item results in request order and the items fanned out
+//!   across every shard;
+//! * v1 single-verb requests (no `"v"` field, arm-only addressing) are
+//!   still accepted by both serving paths;
+//! * errors carry structured codes and echo the request id;
+//! * name-based model addressing works end-to-end through the engine's
+//!   serialized admin path.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use paretobandit::client::{ClientError, ParetoClient};
+use paretobandit::pacer::{PacerConfig, SharedPacer};
+use paretobandit::router::{ContextCache, ModelRef, ParetoRouter, Prior, RouterConfig};
+use paretobandit::server::{
+    Client, EngineConfig, ErrorCode, Metrics, Server, ServerState, ShardedEngine,
+};
+use paretobandit::sim::hash_features;
+use paretobandit::util::json::Json;
+
+const D: usize = 8;
+const BUDGET: f64 = 1e-3;
+
+/// Engine whose featurizer rejects prompts containing "POISON", so the
+/// `featurize_failed` path is drivable over the wire.
+fn spawn_engine(workers: usize) -> ShardedEngine {
+    let ledger = Arc::new(SharedPacer::new(PacerConfig::new(BUDGET)));
+    let build = move |shard: usize| {
+        let mut router =
+            ParetoRouter::new(RouterConfig::tabula_rasa(D, Some(BUDGET), 70 + shard as u64));
+        router.use_shared_pacer(ledger.clone());
+        router.add_model("llama", 0.10, 0.10, Prior::Cold);
+        router.add_model("mistral", 0.40, 1.60, Prior::Cold);
+        ServerState::new(
+            router,
+            ContextCache::new(4096),
+            Box::new(|t: &str| {
+                anyhow::ensure!(!t.contains("POISON"), "poisoned prompt");
+                Ok(hash_features(t, D))
+            }),
+            Arc::new(Metrics::new()),
+        )
+    };
+    let cfg = EngineConfig::new(workers).merge_every(Duration::from_millis(25));
+    ShardedEngine::spawn("127.0.0.1:0", cfg, build).unwrap()
+}
+
+fn single_server() -> Server {
+    Server::spawn("127.0.0.1:0", || {
+        let mut router = ParetoRouter::new(RouterConfig::tabula_rasa(D, Some(BUDGET), 7));
+        router.add_model("llama", 0.10, 0.10, Prior::Cold);
+        router.add_model("mistral", 0.40, 1.60, Prior::Cold);
+        ServerState::new(
+            router,
+            ContextCache::new(4096),
+            Box::new(|t: &str| Ok(hash_features(t, D))),
+            Arc::new(Metrics::new()),
+        )
+    })
+    .unwrap()
+}
+
+fn api_code(e: &ClientError) -> Option<ErrorCode> {
+    match e {
+        ClientError::Api(e) => Some(e.code),
+        ClientError::Transport(_) => None,
+    }
+}
+
+#[test]
+fn route_batch_of_64_is_one_round_trip_in_request_order() {
+    let engine = spawn_engine(4);
+
+    // ONE raw line in, ONE raw line out: the batch of 64 costs a single
+    // socket round-trip, not 64 (Client::call = one write + one read).
+    let mut raw = Client::connect(&engine.addr).unwrap();
+    let items: Vec<Json> = (0..64u64)
+        .map(|i| {
+            Json::obj(vec![
+                ("id", Json::Num(i as f64)),
+                ("prompt", Json::Str(format!("batch prompt number {i}"))),
+            ])
+        })
+        .collect();
+    let resp = raw
+        .call(&Json::obj(vec![
+            ("op", Json::Str("route_batch".into())),
+            ("v", Json::Num(2.0)),
+            ("id", Json::Num(4242.0)),
+            ("items", Json::Arr(items)),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+    assert_eq!(resp.get("v").unwrap().as_f64(), Some(2.0));
+    assert_eq!(resp.get("id").unwrap().as_f64(), Some(4242.0), "batch id echoed");
+    let results = resp.get("results").unwrap().as_arr().unwrap();
+    assert_eq!(results.len(), 64);
+    let mut shards_seen = [false; 4];
+    for (k, r) in results.iter().enumerate() {
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "item {k}: {r:?}");
+        assert_eq!(
+            r.get("id").unwrap().as_f64(),
+            Some(k as f64),
+            "per-item results must be in request order"
+        );
+        shards_seen[r.get("shard").unwrap().as_f64().unwrap() as usize] = true;
+    }
+    assert!(
+        shards_seen.iter().all(|&s| s),
+        "64 items over 4 shards must fan out to every shard: {shards_seen:?}"
+    );
+
+    // the batched routes are owned shard-correctly: feedback for all 64
+    // (itself one round-trip) finds each item's shard
+    let mut c = ParetoClient::connect(engine.addr).unwrap();
+    let fb: Vec<(u64, f64, f64)> = (0..64).map(|i| (i, 0.8, 2e-4)).collect();
+    for ack in c.feedback_batch(&fb).unwrap() {
+        ack.unwrap();
+    }
+    let m = c.metrics().unwrap();
+    assert_eq!(m.get("requests").unwrap().as_f64(), Some(64.0));
+    assert_eq!(m.get("feedbacks").unwrap().as_f64(), Some(64.0));
+    let per_shard = m.get("per_shard").unwrap().as_arr().unwrap();
+    assert_eq!(per_shard.len(), 4);
+    for s in per_shard {
+        assert_eq!(s.as_f64(), Some(16.0), "exact round-robin split of the batch");
+    }
+    engine.stop();
+}
+
+#[test]
+fn v1_single_verb_requests_still_accepted_by_the_engine() {
+    let engine = spawn_engine(2);
+    let mut raw = Client::connect(&engine.addr).unwrap();
+    // exactly the pre-v2 wire shapes: no "v", arm-only addressing
+    let r = raw
+        .call(&Json::obj(vec![
+            ("op", Json::Str("route".into())),
+            ("id", Json::Num(1.0)),
+            ("prompt", Json::Str("v1 client prompt".into())),
+        ]))
+        .unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+    let f = raw
+        .call(&Json::obj(vec![
+            ("op", Json::Str("feedback".into())),
+            ("id", Json::Num(1.0)),
+            ("reward", Json::Num(0.9)),
+            ("cost", Json::Num(1e-4)),
+        ]))
+        .unwrap();
+    assert_eq!(f.get("ok").unwrap().as_bool(), Some(true), "{f:?}");
+    let a = raw
+        .call(&Json::obj(vec![
+            ("op", Json::Str("add_model".into())),
+            ("name", Json::Str("flash".into())),
+            ("price_in", Json::Num(0.3)),
+            ("price_out", Json::Num(2.5)),
+        ]))
+        .unwrap();
+    assert_eq!(a.get("arm").unwrap().as_f64(), Some(2.0));
+    let d = raw
+        .call(&Json::obj(vec![
+            ("op", Json::Str("delete_model".into())),
+            ("arm", Json::Num(2.0)),
+        ]))
+        .unwrap();
+    assert_eq!(d.get("ok").unwrap().as_bool(), Some(true), "{d:?}");
+    let s = raw
+        .call(&Json::obj(vec![
+            ("op", Json::Str("set_budget".into())),
+            ("budget", Json::Num(2e-3)),
+        ]))
+        .unwrap();
+    assert_eq!(s.get("ok").unwrap().as_bool(), Some(true), "{s:?}");
+    // v1 error contract: "error" is still a plain string; v2 adds the
+    // code and the echoed id next to it
+    let e = raw
+        .call(&Json::obj(vec![
+            ("op", Json::Str("feedback".into())),
+            ("id", Json::Num(1.0)),
+            ("reward", Json::Num(0.9)),
+            ("cost", Json::Num(1e-4)),
+        ]))
+        .unwrap();
+    assert_eq!(e.get("ok").unwrap().as_bool(), Some(false));
+    assert!(e.get("error").unwrap().as_str().is_some());
+    assert_eq!(e.get("code").unwrap().as_str(), Some("unknown_id"));
+    assert_eq!(e.get("id").unwrap().as_f64(), Some(1.0));
+    engine.stop();
+}
+
+#[test]
+fn structured_error_codes_over_the_wire() {
+    let engine = spawn_engine(2);
+    let mut c = ParetoClient::connect(engine.addr).unwrap();
+
+    // featurize_failed, echoing the route id
+    let e = c.route(5, "POISON pill").unwrap_err();
+    assert_eq!(api_code(&e), Some(ErrorCode::FeaturizeFailed));
+    // ...and the poisoned id was never claimed
+    let e = c.feedback(5, 0.5, 1e-4).unwrap_err();
+    assert_eq!(api_code(&e), Some(ErrorCode::UnknownId));
+
+    // duplicate_model through the engine's serialized admin path
+    let e = c.add_model("llama", 0.1, 0.1, None).unwrap_err();
+    assert_eq!(api_code(&e), Some(ErrorCode::DuplicateModel));
+
+    // unknown_model by name and by arm
+    let e = c.delete_model(&ModelRef::Name("no-such-model".into())).unwrap_err();
+    assert_eq!(api_code(&e), Some(ErrorCode::UnknownModel));
+    let e = c.reprice(&ModelRef::Arm(99), 0.1, 0.1).unwrap_err();
+    assert_eq!(api_code(&e), Some(ErrorCode::UnknownModel));
+
+    // bad_request from the raw wire: unknown op + id echo survives the
+    // full engine path
+    let mut raw = Client::connect(&engine.addr).unwrap();
+    let r = raw
+        .call(&Json::obj(vec![
+            ("op", Json::Str("frobnicate".into())),
+            ("id", Json::Num(31.0)),
+        ]))
+        .unwrap();
+    assert_eq!(r.get("code").unwrap().as_str(), Some("bad_request"));
+    assert_eq!(r.get("id").unwrap().as_f64(), Some(31.0));
+    // malformed JSON still gets a structured error, connection survives
+    let r = raw.call(&Json::Str("not an object".into())).unwrap();
+    assert_eq!(r.get("code").unwrap().as_str(), Some("bad_request"));
+    let m = c.metrics().unwrap();
+    assert!(m.get("requests").is_some());
+    engine.stop();
+}
+
+#[test]
+fn name_addressing_end_to_end_on_the_engine() {
+    let engine = spawn_engine(3);
+    let mut c = ParetoClient::connect(engine.addr).unwrap();
+    let arm = c.add_model("gemini-2.5-flash", 0.3, 2.5, Some((20.0, 0.5))).unwrap();
+    assert_eq!(arm, 2);
+    // reprice by name and by arm hit the same slot
+    assert_eq!(c.reprice(&ModelRef::Name("gemini-2.5-flash".into()), 0.2, 2.0).unwrap(), arm);
+    assert_eq!(c.reprice(&ModelRef::Arm(arm), 0.25, 2.1).unwrap(), arm);
+    // serve some traffic across the swap to prove slots stay aligned
+    for i in 0..12u64 {
+        c.route(i, &format!("hot traffic {i}")).unwrap();
+        c.feedback(i, 0.8, 2e-4).unwrap();
+    }
+    // delete by name retires the slot on every shard; re-adding the name
+    // gets a FRESH slot (retired slots are never reused)
+    assert_eq!(c.delete_model(&ModelRef::Name("gemini-2.5-flash".into())).unwrap(), arm);
+    let e = c.delete_model(&ModelRef::Name("gemini-2.5-flash".into())).unwrap_err();
+    assert_eq!(api_code(&e), Some(ErrorCode::UnknownModel));
+    let arm2 = c.add_model("gemini-2.5-flash", 0.3, 2.5, None).unwrap();
+    assert_eq!(arm2, 3, "retired slot must not be reused");
+    assert_eq!(c.delete_model(&ModelRef::Name("gemini-2.5-flash".into())).unwrap(), arm2);
+    engine.stop();
+}
+
+#[test]
+fn sdk_works_against_the_single_worker_server_too() {
+    // the same typed SDK drives the reference server: the two serving
+    // paths share one protocol implementation and cannot drift
+    let server = single_server();
+    let mut c = ParetoClient::connect(server.addr).unwrap();
+    let items: Vec<(u64, String)> = (0..8).map(|i| (i, format!("prompt {i}"))).collect();
+    let routed = c.route_batch(&items).unwrap();
+    for (k, r) in routed.iter().enumerate() {
+        assert_eq!(r.as_ref().unwrap().id, k as u64);
+        assert_eq!(r.as_ref().unwrap().shard, 0);
+    }
+    let fb: Vec<(u64, f64, f64)> = (0..8).map(|i| (i, 0.7, 1e-4)).collect();
+    for ack in c.feedback_batch(&fb).unwrap() {
+        ack.unwrap();
+    }
+    // single-worker sync: well-defined no-op answering as a 1-shard engine
+    let s = c.sync().unwrap();
+    assert_eq!(s.synced_shards, 1);
+    // name addressing parity with the engine
+    let arm = c.add_model("flash", 0.3, 2.5, None).unwrap();
+    assert_eq!(c.delete_model(&ModelRef::Name("flash".into())).unwrap(), arm);
+    let m = c.metrics().unwrap();
+    assert_eq!(m.get("requests").unwrap().as_f64(), Some(8.0));
+    server.stop();
+}

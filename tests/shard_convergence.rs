@@ -12,12 +12,12 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use paretobandit::client::ParetoClient;
 use paretobandit::pacer::{PacerConfig, SharedPacer};
 use paretobandit::router::{ContextCache, ParetoRouter, Prior, RouterConfig};
-use paretobandit::server::{Client, EngineConfig, Metrics, ServerState, ShardedEngine};
+use paretobandit::server::{EngineConfig, Metrics, ServerState, ShardedEngine};
 use paretobandit::sim::hash_features;
 use paretobandit::util::env_or;
-use paretobandit::util::json::Json;
 use paretobandit::util::rng::Rng;
 
 const D: usize = 8;
@@ -65,22 +65,17 @@ struct RunResult {
 /// on the arm (plus noise), costs are fixed per arm.
 fn drive(workers: usize, reqs: u64) -> RunResult {
     let engine = spawn_engine(workers);
-    let mut client = Client::connect(&engine.addr).unwrap();
+    let mut client = ParetoClient::connect(engine.addr).unwrap();
     let mut rng = Rng::new(7);
     let warmup = reqs / 3;
     let mut counts = [0u64; 3];
     let mut post_spend = 0.0;
     let mut post_n = 0u64;
     for i in 0..reqs {
-        let resp = client
-            .call(&Json::obj(vec![
-                ("op", Json::Str("route".into())),
-                ("id", Json::Num(i as f64)),
-                ("prompt", Json::Str(format!("stationary prompt {} tail {}", i % 97, i % 13))),
-            ]))
+        let routed = client
+            .route(i, &format!("stationary prompt {} tail {}", i % 97, i % 13))
             .unwrap();
-        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
-        let arm = resp.get("arm").unwrap().as_f64().unwrap() as usize;
+        let arm = routed.arm;
         assert!(arm < 3);
         counts[arm] += 1;
         let cost = COSTS[arm];
@@ -89,29 +84,15 @@ fn drive(workers: usize, reqs: u64) -> RunResult {
             post_spend += cost;
             post_n += 1;
         }
-        let fb = client
-            .call(&Json::obj(vec![
-                ("op", Json::Str("feedback".into())),
-                ("id", Json::Num(i as f64)),
-                ("reward", Json::Num(reward)),
-                ("cost", Json::Num(cost)),
-            ]))
-            .unwrap();
-        assert_eq!(fb.get("ok").and_then(Json::as_bool), Some(true), "{fb:?}");
+        client.feedback(i, reward, cost).unwrap();
         if (i + 1) % SYNC_EVERY == 0 {
-            let s = client
-                .call(&Json::obj(vec![("op", Json::Str("sync".into()))]))
-                .unwrap();
-            assert_eq!(s.get("ok").and_then(Json::as_bool), Some(true), "{s:?}");
+            let s = client.sync().unwrap();
+            assert_eq!(s.synced_shards, workers);
         }
     }
     // final cycle so every shard ends on the merged global posterior
-    client
-        .call(&Json::obj(vec![("op", Json::Str("sync".into()))]))
-        .unwrap();
-    let m = client
-        .call(&Json::obj(vec![("op", Json::Str("metrics".into()))]))
-        .unwrap();
+    client.sync().unwrap();
+    let m = client.metrics().unwrap();
     assert_eq!(m.get("requests").unwrap().as_f64(), Some(reqs as f64));
     assert_eq!(m.get("workers").unwrap().as_f64(), Some(workers as f64));
     // round-robin dispatch splits routes across shards exactly evenly
