@@ -407,6 +407,46 @@ impl ParetoClient {
         Ok(arm_or_ref(&resp, model))
     }
 
+    /// Inject one scenario event (`set_price` / `add_model` /
+    /// `remove_model` / `set_budget` / `snapshot` / `restart`) — the
+    /// generic admin verb the scenario engine's wire host drives live
+    /// drift with.  Environment-side events are rejected by the server
+    /// with `bad_request`.  Returns the raw response object, whose
+    /// fields are those of the mapped admin op.
+    pub fn inject(&mut self, event: &crate::scenario::Event) -> ClientResult<Json> {
+        Self::expect_ok(self.call_raw(&Self::versioned(vec![
+            ("op", Json::Str("inject".into())),
+            ("event", event.to_json()),
+        ]))?)
+    }
+
+    /// Persist the server's learned router state to a **server-side**
+    /// file (on the sharded engine: the post-merge global posterior).
+    /// Returns `(active arms, router step)`.
+    pub fn snapshot(&mut self, path: &str) -> ClientResult<(usize, u64)> {
+        let resp = Self::expect_ok(self.call_raw(&Self::versioned(vec![
+            ("op", Json::Str("snapshot".into())),
+            ("path", Json::Str(path.to_string())),
+        ]))?)?;
+        Ok((
+            resp.get("arms").and_then(Json::as_f64).unwrap_or(0.0) as usize,
+            resp.get("t").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        ))
+    }
+
+    /// Warm-restart the server (every shard of an engine) from a
+    /// server-side snapshot file.  Returns `(active arms, router step)`.
+    pub fn restore(&mut self, path: &str) -> ClientResult<(usize, u64)> {
+        let resp = Self::expect_ok(self.call_raw(&Self::versioned(vec![
+            ("op", Json::Str("restore".into())),
+            ("path", Json::Str(path.to_string())),
+        ]))?)?;
+        Ok((
+            resp.get("arms").and_then(Json::as_f64).unwrap_or(0.0) as usize,
+            resp.get("t").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        ))
+    }
+
     /// Change the $/request ceiling at runtime; echoes the new budget.
     pub fn set_budget(&mut self, budget: f64) -> ClientResult<f64> {
         let resp = Self::expect_ok(self.call_raw(&Self::versioned(vec![

@@ -6,12 +6,17 @@
 //! within-subject comparison).  Four conditions × three budgets; the key
 //! differentiators are (a) ParetoBandit's compliance in every phase and
 //! (b) its Phase-2 reward lift from exploiting the price drop.
+//!
+//! The drift timeline itself lives in `scenarios/exp2_costdrift.toml`
+//! and runs through the declarative scenario engine
+//! ([`crate::scenario::run_scenario`]); this module is the analysis
+//! harness around it — condition routers, budget sweep, bootstrap CIs.
 
 use super::conditions::{self, fit_offline, tune_static_lambda};
 use super::report::{self, Table};
-use super::{allocation, mean_cost, mean_reward, run_phases, stream_order, Phase, StepLog};
-use crate::router::Policy;
-use crate::sim::{EnvView, Judge, GEMINI_PRO};
+use super::{allocation, mean_cost, mean_reward, StepLog};
+use crate::scenario::{run_scenario, RunOptions, ScenarioSpec};
+use crate::sim::{Judge, GEMINI_PRO};
 use crate::stats::{bootstrap_ci, Ci};
 use crate::util::json::Json;
 
@@ -65,18 +70,14 @@ pub struct Exp2Result {
     pub lift: Vec<(&'static str, Ci)>,
 }
 
-/// Split the test prompts into the three phase streams for one seed.
-fn phase_prompts(env: &super::ExpEnv, seed: u64) -> (Vec<u32>, Vec<u32>, Vec<u32>) {
-    let order = stream_order(&env.corpus.test, 9000 + seed);
-    let p1: Vec<u32> = order[..PHASE_LEN].to_vec();
-    let p2: Vec<u32> = order[PHASE_LEN..2 * PHASE_LEN].to_vec();
-    let mut p3 = p1.clone(); // within-subject: Phase 3 reuses Phase 1
-    crate::util::rng::Rng::new(4242 + seed).shuffle(&mut p3);
-    (p1, p2, p3)
+/// The declarative drift timeline this experiment runs.
+pub fn spec() -> ScenarioSpec {
+    ScenarioSpec::load_named("exp2_costdrift").expect("scenarios/exp2_costdrift.toml")
 }
 
 fn run_condition(
     env: &super::ExpEnv,
+    sp: &ScenarioSpec,
     cond: Condition,
     budget: f64,
     lambda_static: f64,
@@ -84,8 +85,6 @@ fn run_condition(
     seed: u64,
 ) -> [Vec<StepLog>; 3] {
     let k = 3;
-    let normal = EnvView::normal(env.world.k());
-    let dropped = EnvView::normal(env.world.k()).with_price_mult(GEMINI_PRO, gemini_drop_mult());
     let mut router = match cond {
         Condition::Naive | Condition::Recalibrated => {
             conditions::naive_bandit(env, offline, k, lambda_static, seed)
@@ -93,36 +92,23 @@ fn run_condition(
         Condition::Forgetting => conditions::forgetting_bandit(env, offline, k, lambda_static, seed),
         Condition::ParetoBandit => conditions::paretobandit(env, offline, k, Some(budget), seed),
     };
-    let (p1, p2, p3) = phase_prompts(env, seed);
-    let spec = &env.world.models[GEMINI_PRO];
-    let run_one = |router: &mut dyn Policy, prompts: Vec<u32>, view: &EnvView| {
-        let phases = [Phase { prompts, view }];
-        run_phases(router, &env.world, &env.contexts, &env.corpus, &phases, Judge::R1)
-    };
-    let l1 = run_one(&mut router, p1, &normal);
     // List prices are public ("providers revise pricing"): ParetoBandit and
     // the Recalibrated oracle refresh their c̃ snapshot from the price feed
     // (the paper states Phase 2 gives the router c̃ ≈ 0).  Naive and
     // Forgetting have no reprice hook — their penalty stays frozen at
     // deployment-time values, which is exactly what breaks them.
-    let sees_prices = matches!(cond, Condition::Recalibrated | Condition::ParetoBandit);
-    if sees_prices {
-        router.reprice(
-            GEMINI_PRO,
-            spec.price_in_per_m * gemini_drop_mult(),
-            spec.price_out_per_m * gemini_drop_mult(),
-        );
-    }
-    let l2 = run_one(&mut router, p2, &dropped);
-    if sees_prices {
-        router.reprice(GEMINI_PRO, spec.price_in_per_m, spec.price_out_per_m);
-    }
-    let l3 = run_one(&mut router, p3, &normal);
-    [l1, l2, l3]
+    let opts = RunOptions {
+        seed,
+        reprice_router: matches!(cond, Condition::Recalibrated | Condition::ParetoBandit),
+    };
+    let run = run_scenario(sp, env, &env.world, &mut router, &opts)
+        .expect("exp2 scenario run");
+    run.phases.try_into().expect("exp2 spec has three phases")
 }
 
 pub fn run(env: &super::ExpEnv, seeds: u64) -> Exp2Result {
     let k = 3;
+    let sp = spec(); // one parse for the whole sweep
     let offline = fit_offline(env, k, Judge::R1);
     let budgets = [
         ("tight", conditions::B_TIGHT),
@@ -140,7 +126,8 @@ pub fn run(env: &super::ExpEnv, seeds: u64) -> Exp2Result {
             let mut rewards: [Vec<f64>; 3] = Default::default();
             let mut gemini = [0.0f64; 3];
             for s in 0..seeds {
-                let logs = run_condition(env, cond, budget, lambda_static, &offline, 100 + s);
+                let logs =
+                    run_condition(env, &sp, cond, budget, lambda_static, &offline, 100 + s);
                 for ph in 0..3 {
                     ratios[ph].push(mean_cost(&logs[ph]) / budget);
                     rewards[ph].push(mean_reward(&logs[ph]));
@@ -225,7 +212,47 @@ pub fn report(res: &Exp2Result) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::scenario::{Event, Stream};
     use crate::sim::FlashScenario;
+
+    #[test]
+    fn spec_file_matches_the_paper_timeline() {
+        let s = spec();
+        assert_eq!(s.steps as usize, 3 * PHASE_LEN);
+        assert_eq!(s.k, 3);
+        assert_eq!(s.stream_seed, 9000);
+        assert_eq!(s.replay_salt, 4242);
+        // phase boundaries at 608/1216, phase 3 replaying phase 1
+        let mixes: Vec<_> = s
+            .events
+            .iter()
+            .filter_map(|te| match &te.event {
+                Event::TrafficMix { stream } => Some((te.at, stream.clone())),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(
+            mixes,
+            vec![
+                (PHASE_LEN as u64, Stream::Fresh),
+                (2 * PHASE_LEN as u64, Stream::Replay(0))
+            ]
+        );
+        // the price cut is bit-identical to the paper's $0.10/M drop
+        let cuts: Vec<_> = s
+            .events
+            .iter()
+            .filter_map(|te| match &te.event {
+                Event::SetPrice { model, mult, .. } => Some((te.at, model.clone(), *mult)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(cuts.len(), 2);
+        assert_eq!(cuts[0].0, PHASE_LEN as u64);
+        assert_eq!(cuts[0].1, "gemini-2.5-pro");
+        assert_eq!(cuts[0].2, Some(gemini_drop_mult()), "mult must roundtrip exactly");
+        assert_eq!(cuts[1].2, Some(1.0));
+    }
 
     #[test]
     fn paretobandit_complies_and_exploits_price_drop() {

@@ -5,16 +5,26 @@
 //! Only the reward signal reveals the problem.  ParetoBandit must detect,
 //! reroute within budget, and re-discover the recovered model; the
 //! unconstrained baseline keeps quality but overspends.
+//!
+//! The degradation timeline lives in `scenarios/exp3_degradation.toml`
+//! and runs through the declarative scenario engine; this module is the
+//! analysis harness (budget sweep, recovery ratios, bootstrap CIs).
 
 use super::conditions::{self, fit_offline};
 use super::report::{self, Table};
-use super::{allocation, mean_cost, mean_reward, run_phases, stream_order, Phase, StepLog};
-use crate::sim::{EnvView, Judge, GEMINI_PRO, MISTRAL};
+use super::{allocation, mean_cost, mean_reward, StepLog};
+use crate::scenario::{run_scenario, RunOptions, ScenarioSpec};
+use crate::sim::{Judge, GEMINI_PRO, MISTRAL};
 use crate::stats::{bootstrap_ci, Ci};
 use crate::util::json::Json;
 
 pub const PHASE_LEN: usize = 608;
 pub const DEGRADED_REWARD: f64 = 0.75;
+
+/// The declarative degradation timeline this experiment runs.
+pub fn spec() -> ScenarioSpec {
+    ScenarioSpec::load_named("exp3_degradation").expect("scenarios/exp3_degradation.toml")
+}
 
 pub struct Cell {
     pub budget_name: &'static str,
@@ -36,32 +46,27 @@ pub struct Exp3Result {
 
 fn run_seed(
     env: &super::ExpEnv,
+    sp: &ScenarioSpec,
     budget: Option<f64>,
     offline: &[crate::bandit::OfflineStats],
     seed: u64,
 ) -> [Vec<StepLog>; 3] {
     let k = 3;
-    let normal = EnvView::normal(env.world.k());
-    let degraded = EnvView::normal(env.world.k()).with_degraded(MISTRAL, DEGRADED_REWARD);
     let mut router = conditions::paretobandit(env, offline, k, budget, seed);
-    let order = stream_order(&env.corpus.test, 9100 + seed);
-    let p1: Vec<u32> = order[..PHASE_LEN].to_vec();
-    let p2: Vec<u32> = order[PHASE_LEN..2 * PHASE_LEN].to_vec();
-    let mut p3 = p1.clone();
-    crate::util::rng::Rng::new(777 + seed).shuffle(&mut p3);
-    let mut run_one = |prompts: Vec<u32>, view: &EnvView| {
-        let phases = [Phase { prompts, view }];
-        run_phases(&mut router, &env.world, &env.contexts, &env.corpus, &phases, Judge::R1)
+    // no set_price events in this spec, so reprice visibility is moot;
+    // the regression is only observable through rewards
+    let opts = RunOptions {
+        seed,
+        reprice_router: true,
     };
-    [
-        run_one(p1, &normal),
-        run_one(p2, &degraded),
-        run_one(p3, &normal),
-    ]
+    let run = run_scenario(sp, env, &env.world, &mut router, &opts)
+        .expect("exp3 scenario run");
+    run.phases.try_into().expect("exp3 spec has three phases")
 }
 
 pub fn run(env: &super::ExpEnv, seeds: u64) -> Exp3Result {
     let k = 3;
+    let sp = spec(); // one parse for the whole sweep
     let offline = fit_offline(env, k, Judge::R1);
     let mut cells = Vec::new();
     for (bname, budget) in conditions::BUDGETS {
@@ -71,7 +76,7 @@ pub fn run(env: &super::ExpEnv, seeds: u64) -> Exp3Result {
         let mut costs: [Vec<f64>; 3] = Default::default();
         let mut recov = Vec::new();
         for s in 0..seeds {
-            let logs = run_seed(env, budget, &offline, 100 + s);
+            let logs = run_seed(env, &sp, budget, &offline, 100 + s);
             for ph in 0..3 {
                 mfrac[ph] += allocation(&logs[ph], MISTRAL) / seeds as f64;
                 gfrac[ph] += allocation(&logs[ph], GEMINI_PRO) / seeds as f64;
@@ -183,7 +188,33 @@ pub fn report(res: &Exp3Result) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::scenario::Event;
     use crate::sim::FlashScenario;
+
+    #[test]
+    fn spec_file_matches_the_paper_timeline() {
+        let s = spec();
+        assert_eq!(s.steps as usize, 3 * PHASE_LEN);
+        assert_eq!(s.stream_seed, 9100);
+        assert_eq!(s.replay_salt, 777);
+        let degrades: Vec<_> = s
+            .events
+            .iter()
+            .filter_map(|te| match &te.event {
+                Event::DegradeQuality { model, mean_to } => {
+                    Some((te.at, model.clone(), *mean_to))
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(
+            degrades,
+            vec![
+                (PHASE_LEN as u64, "mistral-large".to_string(), Some(DEGRADED_REWARD)),
+                (2 * PHASE_LEN as u64, "mistral-large".to_string(), None),
+            ]
+        );
+    }
 
     #[test]
     fn detects_degradation_and_recovers_within_budget() {

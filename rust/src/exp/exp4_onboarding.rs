@@ -6,12 +6,17 @@
 //! good&expensive, bad&cheap) × four budget levels.  The bandit must
 //! discriminate: adopt good-cheap, budget-gate good-expensive, reject
 //! bad-cheap.
+//!
+//! The onboarding timeline lives in `scenarios/exp4_onboarding.toml`
+//! (one `add_model` event at t=608); the Flash variant is a property of
+//! the *world bank* the spec runs against, which is exactly the sweep
+//! this module performs.
 
 use super::conditions::{self, fit_offline};
 use super::report::{self, Table};
-use super::{allocation, mean_cost, run_phases, stream_order, Phase, StepLog};
-use crate::router::Prior;
-use crate::sim::{EnvView, FlashScenario, Judge, World, FLASH};
+use super::{allocation, mean_cost, StepLog};
+use crate::scenario::{run_scenario, RunOptions, ScenarioSpec};
+use crate::sim::{FlashScenario, Judge, World, FLASH};
 use crate::stats::{bootstrap_ci, Ci};
 use crate::util::json::Json;
 
@@ -45,45 +50,32 @@ pub fn scenario_name(s: FlashScenario) -> &'static str {
     }
 }
 
+/// The declarative onboarding timeline this experiment runs.
+pub fn spec() -> ScenarioSpec {
+    ScenarioSpec::load_named("exp4_onboarding").expect("scenarios/exp4_onboarding.toml")
+}
+
 fn run_seed(
     env: &super::ExpEnv,
+    sp: &ScenarioSpec,
     world: &World,
     budget: Option<f64>,
     offline: &[crate::bandit::OfflineStats],
     seed: u64,
 ) -> (Vec<StepLog>, Vec<StepLog>) {
     let k = 3;
-    let view = EnvView::normal(world.k());
     let mut router = conditions::paretobandit(env, offline, k, budget, seed);
-    let order = stream_order(&env.corpus.test, 9300 + seed);
-    let p1: Vec<u32> = order[..PHASE_LEN].to_vec();
-    let p2: Vec<u32> = order[PHASE_LEN..].to_vec(); // rest of the split
-    let l1 = run_phases(
-        &mut router,
-        world,
-        &env.contexts,
-        &env.corpus,
-        &[Phase {
-            prompts: p1,
-            view: &view,
-        }],
-        Judge::R1,
-    );
-    // hot-swap: register Flash with no warmup priors (cold)
-    let spec = &world.models[FLASH];
-    let id = router.add_model(spec.name, spec.price_in_per_m, spec.price_out_per_m, Prior::Cold);
-    debug_assert_eq!(id, FLASH);
-    let l2 = run_phases(
-        &mut router,
-        world,
-        &env.contexts,
-        &env.corpus,
-        &[Phase {
-            prompts: p2,
-            view: &view,
-        }],
-        Judge::R1,
-    );
+    let opts = RunOptions {
+        seed,
+        reprice_router: true,
+    };
+    // the add_model event hot-swaps Flash in cold at t=608; its
+    // quality/price profile comes from the world bank passed here
+    let run = run_scenario(sp, env, world, &mut router, &opts)
+        .expect("exp4 scenario run");
+    debug_assert_eq!(router.registry().find(world.models[FLASH].name), Some(FLASH));
+    let [l1, l2]: [Vec<StepLog>; 2] =
+        run.phases.try_into().expect("exp4 spec has two phases");
     (l1, l2)
 }
 
@@ -111,6 +103,7 @@ fn adoption_step(log: &[StepLog]) -> Option<usize> {
 
 pub fn run(env: &super::ExpEnv, seeds: u64) -> Exp4Result {
     let k = 3;
+    let sp = spec(); // one parse for the whole sweep
     let offline = fit_offline(env, k, Judge::R1);
     let mut cells = Vec::new();
     for scenario in [
@@ -125,7 +118,7 @@ pub fn run(env: &super::ExpEnv, seeds: u64) -> Exp4Result {
             let mut adopted = 0usize;
             let mut ratios = Vec::new();
             for s in 0..seeds {
-                let (_l1, l2) = run_seed(env, &world, budget, &offline, 200 + s);
+                let (_l1, l2) = run_seed(env, &sp, &world, budget, &offline, 200 + s);
                 let half = l2.len() / 2;
                 let share = allocation(&l2[half..], FLASH);
                 shares.push(share);
@@ -222,6 +215,27 @@ pub fn report(res: &Exp4Result) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::scenario::Event;
+
+    #[test]
+    fn spec_file_matches_the_paper_timeline() {
+        let s = spec();
+        assert_eq!(s.steps, 0, "runs the evaluation split to exhaustion");
+        assert_eq!(s.stream_seed, 9300);
+        let adds: Vec<_> = s
+            .events
+            .iter()
+            .filter_map(|te| match &te.event {
+                Event::AddModel { model, n_eff, .. } => Some((te.at, model.clone(), *n_eff)),
+                _ => None,
+            })
+            .collect();
+        // one cold (no prior) onboarding at the phase boundary
+        assert_eq!(
+            adds,
+            vec![(PHASE_LEN as u64, "gemini-2.5-flash".to_string(), None)]
+        );
+    }
 
     #[test]
     fn bandit_discriminates_across_scenarios() {

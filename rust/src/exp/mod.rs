@@ -24,7 +24,7 @@ use crate::sim::{EnvView, Judge, World};
 use crate::util::rng::Rng;
 
 /// One step of an online run.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct StepLog {
     pub prompt: u32,
     pub arm: usize,

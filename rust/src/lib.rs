@@ -22,11 +22,20 @@
 //! periodic posterior merge/broadcast cycle built on mergeable LinUCB
 //! sufficient statistics (`bandit::ArmState::merge`).  Both paths speak
 //! wire protocol v2 (`server::proto`): typed requests/responses,
-//! structured error codes, name-based model addressing and batch verbs;
-//! `client::ParetoClient` is the matching typed SDK.
+//! structured error codes, name-based model addressing, batch verbs and
+//! the snapshot/warm-restart admin verbs (`inject` / `snapshot` /
+//! `restore`); `client::ParetoClient` is the matching typed SDK.
+//!
+//! Non-stationary episodes — price cuts, silent regressions, runtime
+//! onboarding, restarts — are declarative specs (`scenarios/*.toml`)
+//! executed by the `scenario` engine, in-process or against a live
+//! engine over the wire; the paper's exp2/exp3/exp4 are thin wrappers
+//! over those specs.
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
-//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//! `EXPERIMENTS.md` for paper-vs-measured results, and `docs/` for the
+//! operator handbook (architecture, pacer math, scenario schema,
+//! operations runbook).
 
 // Lint policy (clippy runs with -D warnings in CI): index loops mirror the
 // paper's linear-algebra notation throughout the numeric core, and Json's
@@ -40,6 +49,7 @@ pub mod linalg;
 pub mod pacer;
 pub mod router;
 pub mod runtime;
+pub mod scenario;
 pub mod server;
 pub mod sim;
 pub mod stats;

@@ -1,24 +1,30 @@
-//! ParetoBandit CLI — launcher for the serving stack and every paper
-//! experiment.
+//! ParetoBandit CLI — launcher for the serving stack, the declarative
+//! scenario engine and every paper experiment.
 //!
 //! ```text
-//! paretobandit serve   [--addr 127.0.0.1:7878] [--budget 6.6e-4]
-//!                      [--workers N] [--merge-ms MS]
+//! paretobandit serve    [--addr 127.0.0.1:7878] [--budget 6.6e-4]
+//!                       [--workers N] [--merge-ms MS] [--restore SNAP]
+//! paretobandit scenario <spec.toml> [--seeds N] [--budget B]
+//!                       [--addr HOST:PORT]   (wire mode: drive a live engine)
 //! paretobandit exp1..exp9 | hyperopt | latency | all  [--seeds 20]
 //! ```
 
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
 
+use paretobandit::client::ParetoClient;
 use paretobandit::exp::{
-    exp1_stationary, exp2_costdrift, exp3_degradation, exp4_onboarding, exp5_warmup,
-    exp6_mismatch, exp7_judges, exp8_recovery, exp9_costheuristic, hyperopt, latency, ExpEnv,
+    conditions, exp1_stationary, exp2_costdrift, exp3_degradation, exp4_onboarding, exp5_warmup,
+    exp6_mismatch, exp7_judges, exp8_recovery, exp9_costheuristic, hyperopt, latency, report,
+    ExpEnv,
 };
 use paretobandit::pacer::{PacerConfig, SharedPacer};
-use paretobandit::router::{ContextCache, ParetoRouter, Prior, RouterConfig};
+use paretobandit::router::{ContextCache, ParetoRouter, Prior, RouterConfig, RouterState};
 use paretobandit::runtime::{default_artifacts_dir, ArtifactMeta, Embedder, Runtime};
+use paretobandit::scenario::{self, RunOptions, ScenarioRun, ScenarioSpec};
 use paretobandit::server::{EngineConfig, Featurize, Metrics, ServerState, ShardedEngine};
-use paretobandit::sim::{hash_features, FlashScenario};
+use paretobandit::sim::{hash_features, FlashScenario, Judge};
 
 fn arg_val(args: &[String], key: &str) -> Option<String> {
     args.iter()
@@ -35,6 +41,7 @@ fn main() {
 
     match cmd {
         "serve" => serve(&args),
+        "scenario" => scenario_cmd(&args, seeds),
         "exp1" => with_env(|env| exp1_stationary::report(&exp1_stationary::run(env, seeds))),
         "exp2" => with_env(|env| exp2_costdrift::report(&exp2_costdrift::run(env, seeds))),
         "exp3" => with_env(|env| exp3_degradation::report(&exp3_degradation::run(env, seeds))),
@@ -89,7 +96,8 @@ fn main() {
             println!();
             println!("usage: paretobandit <command> [--seeds N]");
             println!();
-            println!("  serve      start the routing server (--addr, --budget)");
+            println!("  serve      start the routing server (--addr, --budget, --restore)");
+            println!("  scenario   run a declarative drift spec (scenarios/*.toml)");
             println!("  exp1       stationary budget pacing        (Fig. 1)");
             println!("  exp2       cost-drift compliance           (Table 2, Fig. 2)");
             println!("  exp3       silent quality degradation      (Fig. 3)");
@@ -104,6 +112,106 @@ fn main() {
             println!("  latency    routing microbenchmark          (Tables 10-12, Figs. 13-14)");
             println!("  all        everything above");
         }
+    }
+}
+
+/// `paretobandit scenario <spec.toml>` — run a declarative drift spec
+/// through the full ParetoBandit system (warmup priors + pacer), either
+/// in-process or, with `--addr`, against a live engine over protocol v2.
+fn scenario_cmd(args: &[String], seeds: u64) {
+    let Some(path) = args.get(1).filter(|a| !a.starts_with("--")) else {
+        eprintln!("usage: paretobandit scenario <spec.toml> [--seeds N] [--budget B] [--addr HOST:PORT]");
+        std::process::exit(2);
+    };
+    let spec = match ScenarioSpec::load(Path::new(path)) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("scenario: {e}");
+            std::process::exit(2);
+        }
+    };
+    let budget = arg_val(args, "--budget")
+        .and_then(|s| s.parse().ok())
+        .or(spec.budget);
+    let addr = arg_val(args, "--addr");
+    // a live engine is stateful: replaying the spec N times against the
+    // same process is neither independent replicates nor idempotent
+    // (add_model events would collide), so wire mode is one pass
+    let seeds = if addr.is_some() {
+        if seeds > 1 {
+            eprintln!("scenario: wire mode drives a stateful engine; running 1 seed");
+        }
+        1
+    } else {
+        seeds.clamp(1, 64)
+    };
+    println!(
+        "scenario '{}': {} event(s), k={}, budget={:?}, {} seed(s){}",
+        spec.name,
+        spec.events.len(),
+        spec.k,
+        budget,
+        seeds,
+        addr.as_deref()
+            .map(|a| format!(", wire mode via {a}"))
+            .unwrap_or_default()
+    );
+    if !spec.description.is_empty() {
+        println!("  {}", spec.description);
+    }
+    let env = ExpEnv::load(FlashScenario::GoodCheap);
+    // the warmup-prior fit only feeds the in-process router; wire mode
+    // drives whatever portfolio the live engine already serves
+    let offline = if addr.is_none() {
+        conditions::fit_offline(&env, spec.k, Judge::R1)
+    } else {
+        Vec::new()
+    };
+    let mut table = report::Table::new(&[
+        "seed", "phase", "steps", "reward", "cost/req", "cost/B",
+    ]);
+    let mut last_events: Vec<String> = Vec::new();
+    for s in 0..seeds {
+        let opts = RunOptions {
+            seed: 100 + s,
+            reprice_router: true,
+        };
+        let run: ScenarioRun = if let Some(addr) = &addr {
+            let mut client = match ParetoClient::connect(addr.as_str()) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("scenario: connect {addr}: {e}");
+                    std::process::exit(1);
+                }
+            };
+            scenario::run_scenario_wire(&spec, &env, &env.world, &mut client, &opts)
+        } else {
+            let mut router = conditions::paretobandit(&env, &offline, spec.k, budget, opts.seed);
+            scenario::run_scenario(&spec, &env, &env.world, &mut router, &opts)
+        }
+        .unwrap_or_else(|e| {
+            eprintln!("scenario: {e}");
+            std::process::exit(1);
+        });
+        for (ph, log) in run.phases.iter().enumerate() {
+            let mc = paretobandit::exp::mean_cost(log);
+            table.row(vec![
+                (100 + s).to_string(),
+                ph.to_string(),
+                log.len().to_string(),
+                format!("{:.3}", paretobandit::exp::mean_reward(log)),
+                report::sci(mc),
+                budget
+                    .map(|b| report::fx(mc / b))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        last_events = run.event_log;
+    }
+    table.print();
+    println!("\napplied events (last seed):");
+    for line in &last_events {
+        println!("  {line}");
     }
 }
 
@@ -153,10 +261,34 @@ fn serve(args: &[String]) {
     let merge_ms: u64 = arg_val(args, "--merge-ms")
         .and_then(|s| s.parse().ok())
         .unwrap_or(50);
+    // warm restart: load the snapshot once; every shard replays it below
+    let restore: Option<Arc<RouterState>> = arg_val(args, "--restore").map(|p| {
+        match paretobandit::scenario::snapshot::load(Path::new(&p)) {
+            Ok(st) => Arc::new(st),
+            Err(e) => {
+                eprintln!("serve: --restore: {e}");
+                std::process::exit(2);
+            }
+        }
+    });
 
     // one global ledger: the $/request ceiling binds across all shards
     let ledger = Arc::new(SharedPacer::new(PacerConfig::new(budget)));
     let d = serving_d_ctx();
+    if let Some(st) = &restore {
+        if st.d != d {
+            eprintln!("serve: --restore: snapshot d={} but featurizer d={d}", st.d);
+            std::process::exit(2);
+        }
+        println!(
+            "warm restart: {} active arm(s) at step {}{}",
+            st.n_active(),
+            st.t,
+            st.pacer
+                .map(|p| format!(", budget ${} (overrides --budget)", p.budget))
+                .unwrap_or_default()
+        );
+    }
     // probe artifacts once at startup; per-shard builders stay quiet on
     // the expected (surrogate) path instead of warning N times
     let artifacts_present = default_artifacts_dir().join("meta.json").exists();
@@ -181,13 +313,27 @@ fn serve(args: &[String]) {
         let mut router =
             ParetoRouter::new(RouterConfig::paretobandit(d, budget, 42 + shard as u64));
         router.use_shared_pacer(ledger.clone());
-        // Table-1 portfolio with heuristic priors
-        for (name, pi, po) in [
-            ("llama-3.1-8b", 0.10, 0.10),
-            ("mistral-large", 0.40, 1.60),
-            ("gemini-2.5-pro", 1.25, 10.0),
-        ] {
-            router.add_model(name, pi, po, Prior::Heuristic { n_eff: 25.0, r0: 0.7 });
+        match &restore {
+            // warm restart: portfolio + posteriors + pacer duals come
+            // from the snapshot (replayed onto the shared ledger); every
+            // shard past 0 forks the snapshot's RNG stream so replicas
+            // keep distinct exploration noise
+            Some(st) => {
+                router.restore_state(st).expect("restore snapshot");
+                if shard > 0 {
+                    router.fork_rng(shard as u64);
+                }
+            }
+            // cold start: Table-1 portfolio with heuristic priors
+            None => {
+                for (name, pi, po) in [
+                    ("llama-3.1-8b", 0.10, 0.10),
+                    ("mistral-large", 0.40, 1.60),
+                    ("gemini-2.5-pro", 1.25, 10.0),
+                ] {
+                    router.add_model(name, pi, po, Prior::Heuristic { n_eff: 25.0, r0: 0.7 });
+                }
+            }
         }
         ServerState::new(
             router,

@@ -98,6 +98,14 @@ impl BudgetPacer {
         self.cfg.budget = budget;
     }
 
+    /// Warm-restart: overwrite the dual state from a snapshot so a
+    /// restored router resumes budget control where its donor left off
+    /// instead of re-learning λ from zero.
+    pub fn restore(&mut self, lambda: f64, cbar: f64) {
+        self.lambda = lambda.clamp(0.0, self.cfg.lambda_cap);
+        self.cbar = cbar;
+    }
+
     /// Dual update after observing a realised request cost (Eqs. 3–4).
     pub fn observe_cost(&mut self, cost: f64) {
         let a = self.cfg.alpha_ema;

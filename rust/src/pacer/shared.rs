@@ -56,6 +56,18 @@ impl SharedPacer {
         self.inner.lock().unwrap().set_budget(budget);
     }
 
+    /// Warm-restart the dual state from a snapshot (budget + λ + c̄) and
+    /// refresh the lock-free λ mirror.  Idempotent, so every shard of a
+    /// restoring engine may replay the same snapshot against the one
+    /// shared ledger.  The spend ledger / observation counters are NOT
+    /// rewound: they audit this process lifetime, not the router's.
+    pub fn restore(&self, budget: f64, lambda: f64, cbar: f64) {
+        let mut p = self.inner.lock().unwrap();
+        p.set_budget(budget);
+        p.restore(lambda, cbar);
+        self.lambda_bits.store(p.lambda().to_bits(), Ordering::Release);
+    }
+
     /// Dual update on a realised request cost, from any thread.
     pub fn observe_cost(&self, cost: f64) {
         {
@@ -154,6 +166,18 @@ impl PacerHandle {
         match self {
             PacerHandle::Local(p) => p.observe_cost(cost),
             PacerHandle::Shared(s) => s.observe_cost(cost),
+        }
+    }
+
+    /// Warm-restart the dual state from a snapshot (see
+    /// [`BudgetPacer::restore`] / [`SharedPacer::restore`]).
+    pub fn restore(&mut self, budget: f64, lambda: f64, cbar: f64) {
+        match self {
+            PacerHandle::Local(p) => {
+                p.set_budget(budget);
+                p.restore(lambda, cbar);
+            }
+            PacerHandle::Shared(s) => s.restore(budget, lambda, cbar),
         }
     }
 

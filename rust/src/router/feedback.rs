@@ -67,6 +67,14 @@ impl ContextCache {
         self.map.remove(&request_id)
     }
 
+    /// Drop every pending entry (warm-restart: the cached contexts
+    /// describe the pre-restore posterior).  The eviction counter is
+    /// untouched — these are deliberate drops, not capacity pressure.
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.order.clear();
+    }
+
     pub fn len(&self) -> usize {
         self.map.len()
     }

@@ -8,6 +8,7 @@ pub mod floor;
 mod pareto;
 mod policy;
 mod registry;
+mod state;
 
 pub use config::{Exploration, RouterConfig};
 pub use floor::{FloorConfig, QualityFloorRouter};
@@ -15,6 +16,7 @@ pub use feedback::{ContextCache, FeedbackEvent, FeedbackQueue, FileStore, Pendin
 pub use pareto::{ParetoRouter, Prior, RouteDecision};
 pub use policy::Policy;
 pub use registry::{ModelEntry, ModelRef, Registry};
+pub use state::{ArmSnap, PacerSnap, RouterState, SlotSnap};
 
 /// Baseline policies (paper §4.1 conditions + standard comparators).
 pub mod baselines {

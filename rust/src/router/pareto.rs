@@ -7,11 +7,13 @@
 use std::sync::Arc;
 
 use crate::bandit::{heuristic_prior, ArmState, OfflineStats};
+use crate::linalg::Mat;
 use crate::pacer::{BudgetPacer, PacerHandle, SharedPacer};
 use crate::router::config::RouterConfig;
 use crate::router::feedback::FeedbackEvent;
 use crate::router::policy::Policy;
 use crate::router::registry::Registry;
+use crate::router::state::{ArmSnap, PacerSnap, RouterState, SlotSnap};
 use crate::util::rng::Rng;
 
 /// How a new model's posterior is initialised (§3.4, §3.6).
@@ -345,6 +347,109 @@ impl ParetoRouter {
                 *local = adopted;
             }
         }
+    }
+
+    /// Capture the complete learned state (arms, registry, burn-in,
+    /// pacer duals, RNG) for snapshot / warm-restart.
+    ///
+    /// Takes `&mut self` because every arm's cached inverse is first
+    /// refreshed to the exact Cholesky inverse: the donor and any router
+    /// restored from this capture then continue from *identical*
+    /// numerics, instead of the donor carrying Sherman–Morrison cache
+    /// drift the restoree lacks.
+    pub fn export_state(&mut self) -> RouterState {
+        for arm in self.arms.iter_mut().flatten() {
+            arm.refresh();
+        }
+        let slots = (0..self.arms.len())
+            .map(|id| match (self.registry.get(id), self.arms[id].as_ref()) {
+                (Some(e), Some(a)) => Some(SlotSnap {
+                    name: e.name.clone(),
+                    price_in: e.price_in_per_m,
+                    price_out: e.price_out_per_m,
+                    burnin_left: self.burnin_left[id],
+                    arm: ArmSnap {
+                        a: a.a.data().to_vec(),
+                        b: a.b.clone(),
+                        last_upd: a.last_upd,
+                        last_play: a.last_play,
+                        n_obs: a.n_obs,
+                    },
+                }),
+                _ => None,
+            })
+            .collect();
+        RouterState {
+            d: self.cfg.d,
+            t: self.t,
+            slots,
+            pacer: self.pacer.as_ref().map(|p| PacerSnap {
+                budget: p.budget(),
+                lambda: p.lambda(),
+                cbar: p.cbar(),
+            }),
+            rng: self.rng.dump_state(),
+        }
+    }
+
+    /// Replace this router's learned state with a captured one
+    /// (warm-restart).  Configuration (d, α, γ, pacer gains) stays the
+    /// router's own; only learned quantities move.  Merge deltas start
+    /// empty — a restored shard begins a fresh delta epoch.  A snapshot
+    /// taken without a pacer leaves an existing pacer's state untouched,
+    /// and pacer state in the snapshot is dropped when this router has
+    /// none (state restore cannot conjure a budget constraint).
+    pub fn restore_state(&mut self, st: &RouterState) -> Result<(), String> {
+        if st.d != self.cfg.d {
+            return Err(format!(
+                "restore: snapshot d={} but router d={}",
+                st.d, self.cfg.d
+            ));
+        }
+        let mut slots = Vec::with_capacity(st.slots.len());
+        let mut arms = Vec::with_capacity(st.slots.len());
+        let mut burnin = Vec::with_capacity(st.slots.len());
+        for snap in &st.slots {
+            match snap {
+                None => {
+                    slots.push(None);
+                    arms.push(None);
+                    burnin.push(0);
+                }
+                Some(s) => {
+                    let a = Mat::from_rows(st.d, s.arm.a.clone());
+                    let mut arm = ArmState::from_stats(a, s.arm.b.clone(), st.t)
+                        .ok_or_else(|| {
+                            format!("restore: arm '{}' statistics are not SPD", s.name)
+                        })?;
+                    arm.last_upd = s.arm.last_upd;
+                    arm.last_play = s.arm.last_play;
+                    arm.n_obs = s.arm.n_obs;
+                    slots.push(Some((s.name.clone(), s.price_in, s.price_out)));
+                    arms.push(Some(arm));
+                    burnin.push(s.burnin_left);
+                }
+            }
+        }
+        self.registry = Registry::from_slots(slots);
+        self.arms = arms;
+        self.burnin_left = burnin;
+        self.t = st.t;
+        if let (Some(p), Some(ps)) = (self.pacer.as_mut(), st.pacer.as_ref()) {
+            p.restore(ps.budget, ps.lambda, ps.cbar);
+        }
+        self.rng = Rng::from_state(st.rng.0, st.rng.1);
+        Ok(())
+    }
+
+    /// Decorrelate this replica's tiebreak/sampling stream after a
+    /// restore.  A snapshot carries ONE RNG state; replaying it into
+    /// every shard of an engine would give all replicas bit-identical
+    /// exploration noise.  Shard 0 keeps the donor stream (exact-replay
+    /// guarantees); the others fork deterministically from it.
+    pub fn fork_rng(&mut self, salt: u64) {
+        let (s, _) = self.rng.dump_state();
+        self.rng = Rng::new(s[0] ^ crate::util::rng::mix2(salt, s[1]));
     }
 
     fn next_burnin(&self) -> Option<usize> {

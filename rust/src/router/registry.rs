@@ -58,6 +58,18 @@ impl ModelEntry {
 
 /// Slot-addressed registry; slots are never reused so arm ids stay stable
 /// across `delete_model` (matches the bandit's slot-aligned arm storage).
+///
+/// ```
+/// use paretobandit::router::{ModelRef, Registry};
+/// let mut r = Registry::new();
+/// let pro = r.try_add("gemini-2.5-pro", 1.25, 10.0).unwrap();
+/// assert_eq!(r.resolve(&ModelRef::Name("gemini-2.5-pro".into())), Some(pro));
+/// // retiring tombstones the slot id forever but frees the NAME at once:
+/// // the hot-swap churn path (remove -> re-add) lands on a fresh slot
+/// assert!(r.remove(pro));
+/// assert_eq!(r.try_add("gemini-2.5-pro", 0.30, 2.50), Some(pro + 1));
+/// assert!(!r.is_active(pro));
+/// ```
 #[derive(Clone, Debug, Default)]
 pub struct Registry {
     slots: Vec<Option<ModelEntry>>,
@@ -74,6 +86,18 @@ impl Registry {
     pub fn add(&mut self, name: &str, price_in_per_m: f64, price_out_per_m: f64) -> usize {
         self.slots.push(Some(ModelEntry::new(name, price_in_per_m, price_out_per_m)));
         self.slots.len() - 1
+    }
+
+    /// Rebuild a registry from slot entries `(name, price_in, price_out)`
+    /// (snapshot restore).  Retired slots stay `None` so pre-snapshot arm
+    /// ids keep their meaning after a warm restart.
+    pub fn from_slots(slots: Vec<Option<(String, f64, f64)>>) -> Registry {
+        Registry {
+            slots: slots
+                .into_iter()
+                .map(|s| s.map(|(name, pi, po)| ModelEntry::new(&name, pi, po)))
+                .collect(),
+        }
     }
 
     /// Checked registration: rejects a name that is already active, so

@@ -1,0 +1,277 @@
+//! Portable router state for snapshot / warm-restart.
+//!
+//! [`RouterState`] is everything a [`super::ParetoRouter`] has *learned*
+//! — per-arm sufficient statistics (A, b) with their decay clocks,
+//! registry membership (including tombstoned slots, so arm ids keep
+//! their meaning), remaining burn-in pulls, the pacer dual state and the
+//! tiebreak RNG — detached from everything it was *configured with*
+//! (dimensions, α/γ, featurizer), which the restoring process supplies.
+//!
+//! Capture with [`super::ParetoRouter::export_state`], re-apply with
+//! [`super::ParetoRouter::restore_state`]; the versioned on-disk format
+//! lives in `crate::scenario::snapshot`.
+
+use crate::util::json::Json;
+
+/// One arm's learned sufficient statistics (paper Eq. 5 state).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArmSnap {
+    /// design matrix A, row-major d×d (λ₀I initialisation included)
+    pub a: Vec<f64>,
+    /// reward accumulator b
+    pub b: Vec<f64>,
+    /// forgetting clock: step of last statistics update
+    pub last_upd: u64,
+    /// staleness clock: step of last dispatch
+    pub last_play: u64,
+    /// online observations absorbed
+    pub n_obs: u64,
+}
+
+/// One registry slot: the model entry plus its arm and burn-in state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SlotSnap {
+    pub name: String,
+    pub price_in: f64,
+    pub price_out: f64,
+    pub arm: ArmSnap,
+    /// forced-exploration pulls still owed (hot-swap burn-in, §3.6)
+    pub burnin_left: u32,
+}
+
+/// Pacer dual state (Eqs. 3–4).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PacerSnap {
+    pub budget: f64,
+    pub lambda: f64,
+    pub cbar: f64,
+}
+
+/// A complete learned-state capture of one router.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RouterState {
+    /// context dimensionality (restore refuses a mismatch)
+    pub d: usize,
+    /// router step clock at capture time
+    pub t: u64,
+    /// slot-aligned arms; `None` = tombstoned (deleted) slot
+    pub slots: Vec<Option<SlotSnap>>,
+    pub pacer: Option<PacerSnap>,
+    /// tiebreak/Thompson RNG state ([`crate::util::rng::Rng::dump_state`])
+    pub rng: ([u64; 4], Option<f64>),
+}
+
+impl RouterState {
+    /// Active (non-tombstoned) slot count.
+    pub fn n_active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Encode as a JSON value.  `u64` RNG words are hex strings (an f64
+    /// `Json::Num` cannot carry 64 significant bits); every other counter
+    /// is far below 2^53 and stays numeric.
+    pub fn to_json(&self) -> Json {
+        let slots = self
+            .slots
+            .iter()
+            .map(|s| match s {
+                None => Json::Null,
+                Some(s) => Json::obj(vec![
+                    ("name", Json::Str(s.name.clone())),
+                    ("price_in", Json::Num(s.price_in)),
+                    ("price_out", Json::Num(s.price_out)),
+                    ("burnin_left", Json::Num(s.burnin_left as f64)),
+                    ("a", Json::arr_f64(&s.arm.a)),
+                    ("b", Json::arr_f64(&s.arm.b)),
+                    ("last_upd", Json::Num(s.arm.last_upd as f64)),
+                    ("last_play", Json::Num(s.arm.last_play as f64)),
+                    ("n_obs", Json::Num(s.arm.n_obs as f64)),
+                ]),
+            })
+            .collect();
+        let mut fields = vec![
+            ("d", Json::Num(self.d as f64)),
+            ("t", Json::Num(self.t as f64)),
+            ("slots", Json::Arr(slots)),
+            (
+                "rng",
+                Json::Arr(
+                    self.rng
+                        .0
+                        .iter()
+                        .map(|w| Json::Str(format!("{w:016x}")))
+                        .collect(),
+                ),
+            ),
+        ];
+        if let Some(spare) = self.rng.1 {
+            fields.push(("rng_spare", Json::Num(spare)));
+        }
+        if let Some(p) = &self.pacer {
+            fields.push((
+                "pacer",
+                Json::obj(vec![
+                    ("budget", Json::Num(p.budget)),
+                    ("lambda", Json::Num(p.lambda)),
+                    ("cbar", Json::Num(p.cbar)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
+    }
+
+    /// Decode from the [`RouterState::to_json`] shape.
+    pub fn from_json(j: &Json) -> Result<RouterState, String> {
+        let get_u = |o: &Json, k: &str| -> Result<u64, String> {
+            match o.get(k).and_then(Json::as_f64) {
+                Some(x) if x >= 0.0 && x.fract() == 0.0 => Ok(x as u64),
+                _ => Err(format!("state: missing/invalid {k}")),
+            }
+        };
+        let get_f = |o: &Json, k: &str| -> Result<f64, String> {
+            o.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("state: missing/invalid {k}"))
+        };
+        let d = get_u(j, "d")? as usize;
+        let t = get_u(j, "t")?;
+        let mut slots = Vec::new();
+        let arr = j
+            .get("slots")
+            .and_then(Json::as_arr)
+            .ok_or("state: missing slots")?;
+        for s in arr {
+            if matches!(s, Json::Null) {
+                slots.push(None);
+                continue;
+            }
+            let f64s = |k: &str| -> Result<Vec<f64>, String> {
+                let v: Vec<f64> = s
+                    .get(k)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| format!("state: slot missing {k}"))?
+                    .iter()
+                    .filter_map(Json::as_f64)
+                    .collect();
+                Ok(v)
+            };
+            let a = f64s("a")?;
+            let b = f64s("b")?;
+            if a.len() != d * d || b.len() != d {
+                return Err(format!(
+                    "state: slot stats have wrong shape (|A|={}, |b|={}, d={d})",
+                    a.len(),
+                    b.len()
+                ));
+            }
+            slots.push(Some(SlotSnap {
+                name: s
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or("state: slot missing name")?
+                    .to_string(),
+                price_in: get_f(s, "price_in")?,
+                price_out: get_f(s, "price_out")?,
+                burnin_left: get_u(s, "burnin_left")? as u32,
+                arm: ArmSnap {
+                    a,
+                    b,
+                    last_upd: get_u(s, "last_upd")?,
+                    last_play: get_u(s, "last_play")?,
+                    n_obs: get_u(s, "n_obs")?,
+                },
+            }));
+        }
+        let rng_arr = j.get("rng").and_then(Json::as_arr).ok_or("state: missing rng")?;
+        if rng_arr.len() != 4 {
+            return Err("state: rng must have 4 words".to_string());
+        }
+        let mut rng = [0u64; 4];
+        for (i, w) in rng_arr.iter().enumerate() {
+            let hex = w.as_str().ok_or("state: rng word must be a hex string")?;
+            rng[i] = u64::from_str_radix(hex, 16)
+                .map_err(|_| format!("state: bad rng word '{hex}'"))?;
+        }
+        let pacer = match j.get("pacer") {
+            None => None,
+            Some(p) => Some(PacerSnap {
+                budget: get_f(p, "budget")?,
+                lambda: get_f(p, "lambda")?,
+                cbar: get_f(p, "cbar")?,
+            }),
+        };
+        Ok(RouterState {
+            d,
+            t,
+            slots,
+            pacer,
+            rng: (rng, j.get("rng_spare").and_then(Json::as_f64)),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RouterState {
+        RouterState {
+            d: 2,
+            t: 17,
+            slots: vec![
+                Some(SlotSnap {
+                    name: "llama".into(),
+                    price_in: 0.1,
+                    price_out: 0.1,
+                    burnin_left: 3,
+                    arm: ArmSnap {
+                        a: vec![1.5, 0.25, 0.25, 2.0],
+                        b: vec![0.5, -0.125],
+                        last_upd: 16,
+                        last_play: 17,
+                        n_obs: 12,
+                    },
+                }),
+                None,
+            ],
+            pacer: Some(PacerSnap {
+                budget: 6.6e-4,
+                lambda: 0.75,
+                cbar: 8e-4,
+            }),
+            rng: ([u64::MAX, 1, 0xdead_beef_cafe_f00d, 42], Some(-0.5)),
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let st = sample();
+        let back = RouterState::from_json(&st.to_json()).unwrap();
+        assert_eq!(back, st);
+        assert_eq!(back.n_active(), 1);
+    }
+
+    #[test]
+    fn full_u64_rng_words_survive() {
+        // the whole point of hex encoding: f64 JSON numbers would round
+        // u64::MAX; the restored generator must be bit-identical
+        let back = RouterState::from_json(&sample().to_json()).unwrap();
+        assert_eq!(back.rng.0, [u64::MAX, 1, 0xdead_beef_cafe_f00d, 42]);
+        assert_eq!(back.rng.1, Some(-0.5));
+    }
+
+    #[test]
+    fn malformed_state_is_rejected() {
+        let st = sample();
+        let mut j = st.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("slots");
+        }
+        assert!(RouterState::from_json(&j).is_err());
+        let mut j = st.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("rng".into(), Json::Arr(vec![Json::Str("zz".into())]));
+        }
+        assert!(RouterState::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,34 @@
+//! Declarative scenario engine: drift schedules as data, not code.
+//!
+//! The paper's claim is adaptation under shift — price cuts, silent
+//! quality regressions, runtime onboarding — but each shift used to be a
+//! hardcoded `exp/exp*.rs` binary.  This module turns a non-stationary
+//! serving scenario into a ~20-line TOML/JSON spec:
+//!
+//! * [`spec`] — the schema: a `[scenario]` header plus a schedule of
+//!   timed `[[event]]`s (`set_price`, `degrade_quality`, `add_model`,
+//!   `remove_model`, `set_budget`, `traffic_mix`, `snapshot`,
+//!   `restart`), parsed by the in-tree TOML-subset reader ([`toml`]).
+//! * [`run`] — execution: in-process against a
+//!   [`crate::router::ParetoRouter`] ([`run_scenario`]), or over the v2
+//!   wire protocol against a live `serve --workers N` engine
+//!   ([`run_scenario_wire`]) using the `inject` / `snapshot` / `restore`
+//!   admin verbs.
+//! * [`snapshot`] — the versioned on-disk router snapshot behind the
+//!   `snapshot`/`restart` events, the wire verbs and `serve --restore`.
+//!
+//! The shipped specs under `scenarios/` port the paper's exp2 (cost
+//! drift), exp3 (degradation) and exp4 (onboarding); the experiment
+//! modules load them instead of hardcoding their timelines, so the specs
+//! are continuously regression-checked against the paper's headline
+//! numbers.  See `docs/scenarios.md` for the schema reference and
+//! `docs/operations.md` for the snapshot/warm-restart runbook.
+
+pub mod run;
+pub mod snapshot;
+pub mod spec;
+pub mod toml;
+
+pub use run::{run_scenario, run_scenario_wire, RunOptions, ScenarioRun};
+pub use spec::{Event, ScenarioSpec, Stream, TimedEvent};
+pub use toml::parse_toml;

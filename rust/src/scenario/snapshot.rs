@@ -1,0 +1,140 @@
+//! Versioned on-disk router snapshots.
+//!
+//! One JSON document per file: `{"format": "paretobandit-snapshot",
+//! "version": 1, "state": {...}}` wrapping a
+//! [`crate::router::RouterState`].  The loader refuses unknown formats
+//! and future versions instead of misreading them, and the writer goes
+//! through a `.tmp` + rename so a crash mid-write never leaves a
+//! half-snapshot where a restore (or `serve --restore`) would find it.
+//!
+//! Producers: the `snapshot` wire verb (engine: post-merge global
+//! posterior as adopted by shard 0), the in-process scenario executor's
+//! `snapshot` event, and [`save`] directly.  Consumers: the `restore`
+//! wire verb, `serve --restore <path>`, and the scenario `restart`
+//! event.
+
+use std::path::Path;
+
+use crate::router::RouterState;
+use crate::util::json::Json;
+
+/// Current snapshot format version.
+pub const SNAPSHOT_VERSION: u64 = 1;
+/// Format tag guarding against feeding arbitrary JSON to `restore`.
+pub const SNAPSHOT_FORMAT: &str = "paretobandit-snapshot";
+
+/// Encode a state as the versioned snapshot document.
+pub fn to_json(state: &RouterState) -> Json {
+    Json::obj(vec![
+        ("format", Json::Str(SNAPSHOT_FORMAT.to_string())),
+        ("version", Json::Num(SNAPSHOT_VERSION as f64)),
+        ("state", state.to_json()),
+    ])
+}
+
+/// Decode a snapshot document, enforcing format and version.
+pub fn from_json(j: &Json) -> Result<RouterState, String> {
+    match j.get("format").and_then(Json::as_str) {
+        Some(SNAPSHOT_FORMAT) => {}
+        other => {
+            return Err(format!(
+                "not a router snapshot (format tag {:?})",
+                other.unwrap_or("<missing>")
+            ))
+        }
+    }
+    match j.get("version").and_then(Json::as_f64) {
+        Some(v) if v == SNAPSHOT_VERSION as f64 => {}
+        Some(v) => return Err(format!("unsupported snapshot version {v}")),
+        None => return Err("snapshot: missing version".to_string()),
+    }
+    RouterState::from_json(j.get("state").ok_or("snapshot: missing state")?)
+}
+
+/// Write a snapshot file (atomic: tmp file + rename).
+pub fn save(path: &Path, state: &RouterState) -> Result<(), String> {
+    let doc = to_json(state).to_string();
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, doc.as_bytes()).map_err(|e| format!("{}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Read a snapshot file back into a [`RouterState`].
+pub fn load(path: &Path) -> Result<RouterState, String> {
+    let src =
+        std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let j = Json::parse(&src).map_err(|e| format!("{}: {e}", path.display()))?;
+    from_json(&j).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::{ArmSnap, PacerSnap, SlotSnap};
+
+    fn state() -> RouterState {
+        RouterState {
+            d: 2,
+            t: 9,
+            slots: vec![
+                None,
+                Some(SlotSnap {
+                    name: "m".into(),
+                    price_in: 0.4,
+                    price_out: 1.6,
+                    burnin_left: 0,
+                    arm: ArmSnap {
+                        a: vec![2.0, 0.1, 0.1, 3.0],
+                        b: vec![1.0, 0.5],
+                        last_upd: 8,
+                        last_play: 9,
+                        n_obs: 7,
+                    },
+                }),
+            ],
+            pacer: Some(PacerSnap {
+                budget: 1e-3,
+                lambda: 0.2,
+                cbar: 1.1e-3,
+            }),
+            rng: ([1, 2, 3, u64::MAX - 5], None),
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("pb_snap_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.snap.json");
+        let st = state();
+        save(&path, &st).unwrap();
+        assert_eq!(load(&path).unwrap(), st);
+        // the tmp intermediate is gone after the rename
+        assert!(!path.with_extension("tmp").exists());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn version_and_format_are_enforced() {
+        let st = state();
+        let mut j = to_json(&st);
+        if let Json::Obj(m) = &mut j {
+            m.insert("version".into(), Json::Num(99.0));
+        }
+        assert!(from_json(&j).unwrap_err().contains("version 99"));
+        let j = Json::obj(vec![("format", Json::Str("other".into()))]);
+        assert!(from_json(&j).unwrap_err().contains("not a router snapshot"));
+        assert!(from_json(&Json::obj(vec![])).is_err());
+    }
+
+    #[test]
+    fn load_rejects_missing_and_garbage_files() {
+        let dir = std::env::temp_dir().join(format!("pb_snap2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(load(&dir.join("nope.json")).is_err());
+        let garbage = dir.join("garbage.json");
+        std::fs::write(&garbage, b"{not json").unwrap();
+        assert!(load(&garbage).is_err());
+        let _ = std::fs::remove_file(&garbage);
+    }
+}

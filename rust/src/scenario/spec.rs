@@ -1,0 +1,501 @@
+//! Declarative scenario specs: a portfolio + a schedule of timed drift
+//! events, loadable from TOML (`scenarios/*.toml`) or JSON.
+//!
+//! A spec is the serialized form of one non-stationary serving scenario —
+//! what used to be a hardcoded `exp/exp*.rs` phase script becomes a
+//! ~20-line file:
+//!
+//! ```
+//! use paretobandit::scenario::{Event, ScenarioSpec};
+//! let spec = ScenarioSpec::from_toml(r#"
+//!     [scenario]
+//!     name = "price-cut"
+//!     steps = 100
+//!     k = 3
+//!
+//!     [[event]]
+//!     at = 50
+//!     op = "set_price"
+//!     model = "gemini-2.5-pro"
+//!     mult = 0.0178
+//! "#).unwrap();
+//! assert_eq!(spec.events.len(), 1);
+//! assert_eq!(spec.events[0].at, 50);
+//! assert!(matches!(spec.events[0].event, Event::SetPrice { .. }));
+//! ```
+//!
+//! Event verbs (the `op` field): `set_price`, `degrade_quality`,
+//! `add_model`, `remove_model`, `set_budget`, `traffic_mix`, `snapshot`,
+//! `restart`.  See `docs/scenarios.md` for the full schema reference and
+//! the annotated exp2/exp3/exp4 ports.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+use super::toml::parse_toml;
+
+/// Which prompt stream a `traffic_mix` event switches to.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Stream {
+    /// continue consuming the seeded shuffle of the evaluation split
+    Fresh,
+    /// replay an earlier segment's prompts, reshuffled with the spec's
+    /// replay salt (the papers' within-subject phase-3 design)
+    Replay(usize),
+}
+
+/// One scheduled drift/operations event.
+///
+/// `set_price` / `degrade_quality` / `traffic_mix` describe the
+/// *environment*; `add_model` / `remove_model` / `set_budget` /
+/// `snapshot` / `restart` act on the router (in-process) or on a live
+/// engine (over the wire via the `inject` / `snapshot` / `restore`
+/// verbs).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// Drift a model's market price.  `mult` scales the environment's
+    /// realised costs (and, when prices are omitted, the list prices the
+    /// router is repriced with); explicit `price_in`/`price_out` are what
+    /// a wire host injects since the engine cannot see the simulator.
+    SetPrice {
+        model: String,
+        mult: Option<f64>,
+        price_in: Option<f64>,
+        price_out: Option<f64>,
+    },
+    /// Silently shift a model's mean reward to `mean_to` (cost
+    /// unchanged); `None` restores the baseline quality.
+    DegradeQuality { model: String, mean_to: Option<f64> },
+    /// Register a model at runtime (hot-swap onboarding).  Prices default
+    /// to the world bank's list prices; `n_eff`+`r0` select a heuristic
+    /// prior, otherwise the model starts cold.
+    AddModel {
+        model: String,
+        price_in: Option<f64>,
+        price_out: Option<f64>,
+        n_eff: Option<f64>,
+        r0: Option<f64>,
+    },
+    /// Retire a model (its slot id is tombstoned, never reused; the name
+    /// becomes free for a later `add_model`).
+    RemoveModel { model: String },
+    /// Change the $/request ceiling at runtime (λ state is preserved).
+    SetBudget { budget: f64 },
+    /// Switch the prompt stream (phase boundary; see [`Stream`]).
+    TrafficMix { stream: Stream },
+    /// Persist the router state; in-process runs also keep it in memory
+    /// for a later pathless `restart`.
+    Snapshot { path: Option<String> },
+    /// Warm-restart the router from `path` (or the last in-memory
+    /// snapshot when omitted).
+    Restart { path: Option<String> },
+}
+
+impl Event {
+    /// The wire/spec verb name for this event.
+    pub fn op(&self) -> &'static str {
+        match self {
+            Event::SetPrice { .. } => "set_price",
+            Event::DegradeQuality { .. } => "degrade_quality",
+            Event::AddModel { .. } => "add_model",
+            Event::RemoveModel { .. } => "remove_model",
+            Event::SetBudget { .. } => "set_budget",
+            Event::TrafficMix { .. } => "traffic_mix",
+            Event::Snapshot { .. } => "snapshot",
+            Event::Restart { .. } => "restart",
+        }
+    }
+
+    /// True for events that only change the simulated environment — a
+    /// serving engine has nothing to apply for them, so the `inject`
+    /// wire verb rejects them as `bad_request`.
+    pub fn is_env_side(&self) -> bool {
+        matches!(self, Event::DegradeQuality { .. } | Event::TrafficMix { .. })
+    }
+
+    /// Decode one event object (`{"op": "...", ...fields}`) — the single
+    /// schema home shared by spec files and the `inject` wire verb.
+    pub fn from_json(j: &Json) -> Result<Event, String> {
+        let Some(op) = j.get("op").and_then(Json::as_str) else {
+            return Err("event: missing op".to_string());
+        };
+        let f = |k: &str| j.get(k).and_then(Json::as_f64);
+        let s = |k: &str| j.get(k).and_then(Json::as_str).map(str::to_string);
+        let model = |op: &str| s("model").ok_or_else(|| format!("{op}: missing model"));
+        match op {
+            "set_price" => {
+                let (mult, price_in, price_out) = (f("mult"), f("price_in"), f("price_out"));
+                if mult.is_none() && (price_in.is_none() || price_out.is_none()) {
+                    return Err("set_price: need mult or price_in+price_out".to_string());
+                }
+                Ok(Event::SetPrice {
+                    model: model(op)?,
+                    mult,
+                    price_in,
+                    price_out,
+                })
+            }
+            "degrade_quality" => Ok(Event::DegradeQuality {
+                model: model(op)?,
+                mean_to: f("mean_to"),
+            }),
+            "add_model" => {
+                let (n_eff, r0) = (f("n_eff"), f("r0"));
+                if n_eff.is_some() != r0.is_some() {
+                    return Err("add_model: n_eff and r0 must be given together".to_string());
+                }
+                Ok(Event::AddModel {
+                    model: model(op)?,
+                    price_in: f("price_in"),
+                    price_out: f("price_out"),
+                    n_eff,
+                    r0,
+                })
+            }
+            "remove_model" => Ok(Event::RemoveModel { model: model(op)? }),
+            "set_budget" => {
+                let budget = f("budget").ok_or("set_budget: missing budget")?;
+                if !budget.is_finite() || budget <= 0.0 {
+                    return Err("set_budget: budget must be positive and finite".to_string());
+                }
+                Ok(Event::SetBudget { budget })
+            }
+            "traffic_mix" => {
+                let stream = match s("stream").as_deref() {
+                    Some("fresh") | None => Stream::Fresh,
+                    Some("replay") => {
+                        let ph = f("phase").ok_or("traffic_mix: replay needs phase")?;
+                        if ph < 0.0 || ph.fract() != 0.0 {
+                            return Err("traffic_mix: phase must be a non-negative integer"
+                                .to_string());
+                        }
+                        Stream::Replay(ph as usize)
+                    }
+                    Some(other) => {
+                        return Err(format!("traffic_mix: unknown stream '{other}'"))
+                    }
+                };
+                Ok(Event::TrafficMix { stream })
+            }
+            "snapshot" => Ok(Event::Snapshot { path: s("path") }),
+            "restart" => Ok(Event::Restart { path: s("path") }),
+            other => Err(format!("unknown event op '{other}'")),
+        }
+    }
+
+    /// Encode as the wire/spec object shape [`Event::from_json`] reads.
+    pub fn to_json(&self) -> Json {
+        fn opt_f(fields: &mut Vec<(&'static str, Json)>, k: &'static str, v: Option<f64>) {
+            if let Some(x) = v {
+                fields.push((k, Json::Num(x)));
+            }
+        }
+        let mut fields: Vec<(&'static str, Json)> =
+            vec![("op", Json::Str(self.op().to_string()))];
+        match self {
+            Event::SetPrice {
+                model,
+                mult,
+                price_in,
+                price_out,
+            } => {
+                opt_f(&mut fields, "mult", *mult);
+                opt_f(&mut fields, "price_in", *price_in);
+                opt_f(&mut fields, "price_out", *price_out);
+                fields.push(("model", Json::Str(model.clone())));
+            }
+            Event::DegradeQuality { model, mean_to } => {
+                opt_f(&mut fields, "mean_to", *mean_to);
+                fields.push(("model", Json::Str(model.clone())));
+            }
+            Event::AddModel {
+                model,
+                price_in,
+                price_out,
+                n_eff,
+                r0,
+            } => {
+                opt_f(&mut fields, "price_in", *price_in);
+                opt_f(&mut fields, "price_out", *price_out);
+                opt_f(&mut fields, "n_eff", *n_eff);
+                opt_f(&mut fields, "r0", *r0);
+                fields.push(("model", Json::Str(model.clone())));
+            }
+            Event::RemoveModel { model } => fields.push(("model", Json::Str(model.clone()))),
+            Event::SetBudget { budget } => fields.push(("budget", Json::Num(*budget))),
+            Event::TrafficMix { stream } => match stream {
+                Stream::Fresh => fields.push(("stream", Json::Str("fresh".into()))),
+                Stream::Replay(p) => {
+                    fields.push(("stream", Json::Str("replay".into())));
+                    fields.push(("phase", Json::Num(*p as f64)));
+                }
+            },
+            Event::Snapshot { path } | Event::Restart { path } => {
+                if let Some(p) = path {
+                    fields.push(("path", Json::Str(p.clone())));
+                }
+            }
+        }
+        Json::obj(fields)
+    }
+}
+
+impl std::fmt::Display for Event {
+    /// Stable one-line rendering (the scenario event log's line format).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_json().to_string())
+    }
+}
+
+/// An event scheduled at global request step `at` (events fire before
+/// the routing decision of step `at`; step 0 is the first request).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimedEvent {
+    pub at: u64,
+    pub event: Event,
+}
+
+/// A parsed scenario: run parameters plus the event timeline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub description: String,
+    /// total request steps; 0 = run the evaluation split to exhaustion
+    pub steps: u64,
+    /// initial portfolio: the first `k` models of the world bank
+    pub k: usize,
+    /// default $/request ceiling (harnesses may override per run)
+    pub budget: Option<f64>,
+    /// seed offset for the prompt stream shuffle (`stream_seed + run seed`)
+    pub stream_seed: u64,
+    /// seed offset for replayed-segment reshuffles
+    pub replay_salt: u64,
+    /// timeline, stably sorted by `at`
+    pub events: Vec<TimedEvent>,
+}
+
+impl ScenarioSpec {
+    /// Decode a spec from the shared value model (both the TOML and JSON
+    /// loaders land here).
+    pub fn from_json(j: &Json) -> Result<ScenarioSpec, String> {
+        let sc = j
+            .get("scenario")
+            .ok_or("spec: missing [scenario] table")?;
+        let name = sc
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("spec: [scenario] needs a name")?
+            .to_string();
+        let get_u = |key: &str, default: u64| -> Result<u64, String> {
+            match sc.get(key) {
+                None => Ok(default),
+                Some(v) => match v.as_f64() {
+                    Some(x) if x >= 0.0 && x.fract() == 0.0 => Ok(x as u64),
+                    _ => Err(format!("spec: {key} must be a non-negative integer")),
+                },
+            }
+        };
+        let budget = match sc.get("budget") {
+            None => None,
+            Some(v) => match v.as_f64() {
+                Some(b) if b.is_finite() && b > 0.0 => Some(b),
+                _ => return Err("spec: budget must be positive and finite".to_string()),
+            },
+        };
+        let mut events = Vec::new();
+        if let Some(arr) = j.get("event").and_then(Json::as_arr) {
+            for (i, ev) in arr.iter().enumerate() {
+                let at = match ev.get("at").and_then(Json::as_f64) {
+                    Some(x) if x >= 0.0 && x.fract() == 0.0 => x as u64,
+                    _ => return Err(format!("spec: event {i}: missing/invalid at")),
+                };
+                let event =
+                    Event::from_json(ev).map_err(|e| format!("spec: event {i}: {e}"))?;
+                events.push(TimedEvent { at, event });
+            }
+        }
+        events.sort_by_key(|e| e.at); // stable: same-step events keep file order
+        Ok(ScenarioSpec {
+            name,
+            description: sc
+                .get("description")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            steps: get_u("steps", 0)?,
+            k: get_u("k", 3)? as usize,
+            budget,
+            stream_seed: get_u("stream_seed", 9000)?,
+            replay_salt: get_u("replay_salt", 0)?,
+            events,
+        })
+    }
+
+    /// Parse a TOML-subset spec document.
+    pub fn from_toml(src: &str) -> Result<ScenarioSpec, String> {
+        Self::from_json(&parse_toml(src)?)
+    }
+
+    /// Load a spec file; `.json` parses as JSON, anything else as TOML.
+    pub fn load(path: &Path) -> Result<ScenarioSpec, String> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        let parsed = if path.extension().and_then(|e| e.to_str()) == Some("json") {
+            Json::parse(&src)?
+        } else {
+            parse_toml(&src)?
+        };
+        Self::from_json(&parsed).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Load `<scenario dir>/<name>.toml` (see [`ScenarioSpec::dir`]).
+    pub fn load_named(name: &str) -> Result<ScenarioSpec, String> {
+        Self::load(&Self::dir().join(format!("{name}.toml")))
+    }
+
+    /// Where spec files live: `$PB_SCENARIO_DIR`, else `<repo>/scenarios`.
+    pub fn dir() -> PathBuf {
+        match std::env::var("PB_SCENARIO_DIR") {
+            Ok(d) if !d.is_empty() => PathBuf::from(d),
+            _ => Path::new(env!("CARGO_MANIFEST_DIR")).join("scenarios"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+[scenario]
+name = "mini"
+description = "two-phase price cut"
+steps = 40
+k = 3
+budget = 6.6e-4
+stream_seed = 9000
+replay_salt = 4242
+
+[[event]]
+at = 20
+op = "traffic_mix"
+stream = "fresh"
+
+[[event]]
+at = 20
+op = "set_price"
+model = "gemini-2.5-pro"
+mult = 0.5
+
+[[event]]
+at = 30
+op = "traffic_mix"
+stream = "replay"
+phase = 0
+"#;
+
+    #[test]
+    fn toml_spec_roundtrips_through_the_value_model() {
+        let spec = ScenarioSpec::from_toml(DOC).unwrap();
+        assert_eq!(spec.name, "mini");
+        assert_eq!(spec.steps, 40);
+        assert_eq!(spec.k, 3);
+        assert_eq!(spec.budget, Some(6.6e-4));
+        assert_eq!(spec.events.len(), 3);
+        // same-step events keep file order (traffic_mix before set_price)
+        assert_eq!(spec.events[0].at, 20);
+        assert!(matches!(spec.events[0].event, Event::TrafficMix { .. }));
+        assert!(matches!(
+            spec.events[1].event,
+            Event::SetPrice { ref model, mult: Some(m), .. }
+                if model == "gemini-2.5-pro" && m == 0.5
+        ));
+        assert_eq!(
+            spec.events[2].event,
+            Event::TrafficMix {
+                stream: Stream::Replay(0)
+            }
+        );
+    }
+
+    #[test]
+    fn events_roundtrip_json() {
+        let evs = vec![
+            Event::SetPrice {
+                model: "m".into(),
+                mult: Some(0.5),
+                price_in: None,
+                price_out: None,
+            },
+            Event::DegradeQuality {
+                model: "m".into(),
+                mean_to: Some(0.75),
+            },
+            Event::DegradeQuality {
+                model: "m".into(),
+                mean_to: None,
+            },
+            Event::AddModel {
+                model: "flash".into(),
+                price_in: Some(0.3),
+                price_out: Some(2.5),
+                n_eff: Some(20.0),
+                r0: Some(0.7),
+            },
+            Event::RemoveModel { model: "m".into() },
+            Event::SetBudget { budget: 1e-3 },
+            Event::TrafficMix {
+                stream: Stream::Replay(2),
+            },
+            Event::Snapshot {
+                path: Some("/tmp/s.json".into()),
+            },
+            Event::Restart { path: None },
+        ];
+        for ev in evs {
+            let back = Event::from_json(&ev.to_json()).unwrap();
+            assert_eq!(back, ev, "{ev}");
+        }
+    }
+
+    #[test]
+    fn malformed_events_are_rejected() {
+        for bad in [
+            r#"{"op":"set_price","model":"m"}"#,
+            r#"{"op":"set_price","mult":0.5}"#,
+            r#"{"op":"add_model","model":"m","n_eff":20}"#,
+            r#"{"op":"set_budget","budget":-1}"#,
+            r#"{"op":"traffic_mix","stream":"replay"}"#,
+            r#"{"op":"traffic_mix","stream":"nope"}"#,
+            r#"{"op":"warp_reality"}"#,
+            r#"{"no_op":1}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(Event::from_json(&j).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn spec_validation_errors() {
+        assert!(ScenarioSpec::from_toml("[other]\nname = \"x\"\n").is_err());
+        assert!(ScenarioSpec::from_toml("[scenario]\nsteps = 10\n").is_err());
+        let e = ScenarioSpec::from_toml(
+            "[scenario]\nname = \"x\"\n\n[[event]]\nop = \"snapshot\"\n",
+        )
+        .unwrap_err();
+        assert!(e.contains("at"), "{e}");
+        let e = ScenarioSpec::from_toml("[scenario]\nname = \"x\"\nbudget = 0\n").unwrap_err();
+        assert!(e.contains("budget"), "{e}");
+    }
+
+    #[test]
+    fn json_specs_load_too() {
+        let j = r#"{"scenario": {"name": "j", "steps": 10},
+                    "event": [{"at": 5, "op": "set_budget", "budget": 0.001}]}"#;
+        let spec = ScenarioSpec::from_json(&Json::parse(j).unwrap()).unwrap();
+        assert_eq!(spec.name, "j");
+        assert_eq!(spec.events.len(), 1);
+        assert_eq!(spec.events[0].event, Event::SetBudget { budget: 0.001 });
+    }
+}

@@ -1,0 +1,239 @@
+//! Minimal TOML-subset parser for scenario specs.
+//!
+//! The offline build image has no `toml` crate, so scenario files are
+//! parsed by this small hand-rolled reader into the crate's [`Json`]
+//! value model (the same value model the JSON spec path produces, so
+//! [`super::ScenarioSpec`] decodes both formats identically).
+//!
+//! Supported subset — everything `scenarios/*.toml` needs and nothing
+//! more:
+//!
+//! * `# comments` (full-line and trailing, outside strings)
+//! * `[table]` and `[[array-of-tables]]` headers (single-level names)
+//! * `key = value` with basic strings (`"..."` with `\"`, `\\`, `\n`,
+//!   `\t` escapes), integers, floats (including scientific notation) and
+//!   booleans
+//!
+//! Dotted keys, inline tables, arrays, multi-line strings and datetimes
+//! are rejected with a line-numbered error rather than silently
+//! misread.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Parse a TOML-subset document into a [`Json::Obj`].  `[[name]]` tables
+/// accumulate into a `Json::Arr` under `name`, preserving file order.
+pub fn parse_toml(src: &str) -> Result<Json, String> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    // (table name, is array-of-tables) the next key lines write into
+    let mut cur: Option<(String, bool)> = None;
+    for (n, raw) in src.lines().enumerate() {
+        let ln = n + 1;
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix("[[").and_then(|r| r.strip_suffix("]]")) {
+            let name = check_key(name.trim(), ln)?;
+            let entry = root
+                .entry(name.clone())
+                .or_insert_with(|| Json::Arr(Vec::new()));
+            match entry {
+                Json::Arr(v) => v.push(Json::Obj(BTreeMap::new())),
+                _ => return Err(format!("line {ln}: [[{name}]] clashes with a non-array key")),
+            }
+            cur = Some((name, true));
+        } else if let Some(name) = line.strip_prefix('[').and_then(|r| r.strip_suffix(']')) {
+            let name = check_key(name.trim(), ln)?;
+            if root.contains_key(&name) {
+                return Err(format!("line {ln}: duplicate table [{name}]"));
+            }
+            root.insert(name.clone(), Json::Obj(BTreeMap::new()));
+            cur = Some((name, false));
+        } else {
+            let Some((k, v)) = line.split_once('=') else {
+                return Err(format!("line {ln}: expected `key = value` or a [table] header"));
+            };
+            let key = check_key(k.trim(), ln)?;
+            let val = parse_value(v.trim(), ln)?;
+            let target = match &cur {
+                None => &mut root,
+                Some((name, false)) => match root.get_mut(name) {
+                    Some(Json::Obj(m)) => m,
+                    _ => return Err(format!("line {ln}: lost table [{name}]")),
+                },
+                Some((name, true)) => match root.get_mut(name) {
+                    Some(Json::Arr(arr)) => match arr.last_mut() {
+                        Some(Json::Obj(m)) => m,
+                        _ => return Err(format!("line {ln}: lost table [[{name}]]")),
+                    },
+                    _ => return Err(format!("line {ln}: lost table [[{name}]]")),
+                },
+            };
+            if target.insert(key.clone(), val).is_some() {
+                return Err(format!("line {ln}: duplicate key '{key}'"));
+            }
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+/// Drop a trailing `# comment`, ignoring `#` inside basic strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\\' if in_str && !escaped => {
+                escaped = true;
+                continue;
+            }
+            '"' if !escaped => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        escaped = false;
+    }
+    line
+}
+
+/// Bare keys only: ASCII letters, digits, `_`, `-`.
+fn check_key(k: &str, ln: usize) -> Result<String, String> {
+    if !k.is_empty()
+        && k.chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+    {
+        Ok(k.to_string())
+    } else {
+        Err(format!("line {ln}: invalid key '{k}'"))
+    }
+}
+
+fn parse_value(v: &str, ln: usize) -> Result<Json, String> {
+    if let Some(rest) = v.strip_prefix('"') {
+        return parse_string(rest, ln);
+    }
+    match v {
+        "true" => return Ok(Json::Bool(true)),
+        "false" => return Ok(Json::Bool(false)),
+        _ => {}
+    }
+    // TOML allows `1_000` separators; strip them before the float parse
+    let cleaned: String = v.chars().filter(|&c| c != '_').collect();
+    cleaned
+        .parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| format!("line {ln}: unsupported value '{v}' (string/number/bool only)"))
+}
+
+fn parse_string(rest: &str, ln: usize) -> Result<Json, String> {
+    let mut out = String::new();
+    let mut chars = rest.chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => {
+                let tail: String = chars.collect();
+                if tail.trim().is_empty() {
+                    return Ok(Json::Str(out));
+                }
+                return Err(format!("line {ln}: trailing data after string"));
+            }
+            '\\' => match chars.next() {
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                _ => return Err(format!("line {ln}: unsupported string escape")),
+            },
+            c => out.push(c),
+        }
+    }
+    Err(format!("line {ln}: unterminated string"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_arrays_and_scalars() {
+        let doc = r##"
+# scenario header
+[scenario]
+name = "exp2_costdrift"   # trailing comment
+steps = 1824
+budget = 6.6e-4
+paced = true
+
+[[event]]
+at = 608
+op = "set_price"
+mult = 0.017777777777777778
+
+[[event]]
+at = 1216
+op = "traffic_mix"
+stream = "replay"
+phase = 0
+"##;
+        let j = parse_toml(doc).unwrap();
+        let sc = j.get("scenario").unwrap();
+        assert_eq!(sc.get("name").unwrap().as_str(), Some("exp2_costdrift"));
+        assert_eq!(sc.get("steps").unwrap().as_f64(), Some(1824.0));
+        assert_eq!(sc.get("budget").unwrap().as_f64(), Some(6.6e-4));
+        assert_eq!(sc.get("paced").unwrap().as_bool(), Some(true));
+        let evs = j.get("event").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].get("op").unwrap().as_str(), Some("set_price"));
+        assert_eq!(
+            evs[0].get("mult").unwrap().as_f64(),
+            Some(0.017777777777777778)
+        );
+        assert_eq!(evs[1].get("phase").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn root_keys_before_any_table() {
+        let j = parse_toml("version = 1\nname = \"x\"\n").unwrap();
+        assert_eq!(j.get("version").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("name").unwrap().as_str(), Some("x"));
+    }
+
+    #[test]
+    fn string_escapes_and_hash_inside_string() {
+        let j = parse_toml("[t]\nk = \"a # not a comment \\\"q\\\" \\n\"\n").unwrap();
+        assert_eq!(
+            j.get("t").unwrap().get("k").unwrap().as_str(),
+            Some("a # not a comment \"q\" \n")
+        );
+    }
+
+    #[test]
+    fn underscore_separators_parse() {
+        let j = parse_toml("[t]\nn = 1_824\n").unwrap();
+        assert_eq!(j.get("t").unwrap().get("n").unwrap().as_f64(), Some(1824.0));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        for (doc, frag) in [
+            ("[t]\nk v\n", "line 2"),
+            ("[t]\nk = [1, 2]\n", "unsupported value"),
+            ("[t]\nk = \"unterminated\n", "unterminated"),
+            ("[t]\n[t]\n", "duplicate table"),
+            ("[t]\nk = 1\nk = 2\n", "duplicate key"),
+            ("[bad key]\nk = 1\n", "invalid key"),
+            ("[[t]]\nk = 1\n[t]\n", "duplicate table"),
+        ] {
+            let e = parse_toml(doc).unwrap_err();
+            assert!(e.contains(frag), "{doc:?} -> {e}");
+        }
+    }
+
+    #[test]
+    fn array_table_after_scalar_key_rejected() {
+        let e = parse_toml("event = 1\n[[event]]\nk = 2\n").unwrap_err();
+        assert!(e.contains("clashes"), "{e}");
+    }
+}

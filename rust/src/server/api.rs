@@ -9,6 +9,9 @@
 //!   delete_model   {"op":"delete_model","arm":u | "model":str}
 //!   reprice        {"op":"reprice","arm":u | "model":str,"price_in":f,"price_out":f}
 //!   set_budget     {"op":"set_budget","budget":f}
+//!   inject         {"op":"inject","event":{"op":"set_price"|...}}
+//!   snapshot       {"op":"snapshot","path":str}
+//!   restore        {"op":"restore","path":str}
 //!   metrics        {"op":"metrics"}
 //!   sync           {"op":"sync"}   (engine: force a merge cycle;
 //!                                   single worker: well-defined no-op,
@@ -25,10 +28,13 @@
 //! plumbing for one worker and `engine.rs` for N sharded workers, both
 //! dispatching the same typed requests so the two paths cannot drift.
 
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::router::{ContextCache, FeedbackEvent, FeedbackQueue, ModelRef, ParetoRouter, Pending, Prior};
+use crate::scenario::snapshot;
+use crate::scenario::Event;
 use crate::server::metrics::Metrics;
 use crate::server::proto::{ErrorCode, FeedbackItem, Request, Response, RouteItem};
 
@@ -137,6 +143,9 @@ impl ServerState {
                 price_out,
             } => (self.op_reprice(*id, model, *price_in, *price_out), false),
             Request::SetBudget { id, budget } => (self.op_set_budget(*id, *budget), false),
+            Request::Inject { id, event } => (self.op_inject(*id, event), false),
+            Request::Snapshot { id, path } => (self.op_snapshot(*id, path), false),
+            Request::Restore { id, path } => (self.op_restore(*id, path), false),
             Request::Metrics { id } => (
                 Response::Metrics {
                     id: *id,
@@ -289,6 +298,137 @@ impl ServerState {
                 "set_budget: router has no pacer (started without --budget)",
                 id,
             )
+        }
+    }
+
+    /// `inject`: apply one scenario event by mapping it onto the
+    /// matching admin op, so an operator (or the scenario engine's wire
+    /// host) drives live drift with the same event objects a spec file
+    /// holds.  Environment-side events (`degrade_quality`,
+    /// `traffic_mix`) describe the *simulator*, not the engine — they
+    /// are rejected as `bad_request`.
+    fn op_inject(&mut self, id: Option<u64>, event: &Event) -> Response {
+        if event.is_env_side() {
+            return Response::err(
+                ErrorCode::BadRequest,
+                format!(
+                    "inject: '{}' is an environment-side event (apply it in the traffic driver)",
+                    event.op()
+                ),
+                id,
+            );
+        }
+        match event {
+            Event::SetPrice {
+                model,
+                price_in,
+                price_out,
+                ..
+            } => match (price_in, price_out) {
+                (Some(pi), Some(po)) => {
+                    self.op_reprice(id, &ModelRef::Name(model.clone()), *pi, *po)
+                }
+                _ => Response::err(
+                    ErrorCode::BadRequest,
+                    "inject: set_price needs explicit price_in/price_out over the wire",
+                    id,
+                ),
+            },
+            Event::AddModel {
+                model,
+                price_in,
+                price_out,
+                n_eff,
+                r0,
+            } => match (price_in, price_out) {
+                (Some(pi), Some(po)) => {
+                    let prior = n_eff.zip(*r0);
+                    self.op_add_model(id, model, *pi, *po, prior)
+                }
+                _ => Response::err(
+                    ErrorCode::BadRequest,
+                    "inject: add_model needs explicit price_in/price_out over the wire",
+                    id,
+                ),
+            },
+            Event::RemoveModel { model } => {
+                self.op_delete_model(id, &ModelRef::Name(model.clone()))
+            }
+            Event::SetBudget { budget } => self.op_set_budget(id, *budget),
+            Event::Snapshot { path } => match path {
+                Some(p) => self.op_snapshot(id, p),
+                None => Response::err(
+                    ErrorCode::BadRequest,
+                    "inject: snapshot needs a path over the wire",
+                    id,
+                ),
+            },
+            Event::Restart { path } => match path {
+                Some(p) => self.op_restore(id, p),
+                None => Response::err(
+                    ErrorCode::BadRequest,
+                    "inject: restart needs a path over the wire",
+                    id,
+                ),
+            },
+            Event::DegradeQuality { .. } | Event::TrafficMix { .. } => unreachable!(),
+        }
+    }
+
+    /// `snapshot`: fold any queued rewards, then persist the complete
+    /// learned state.  On the sharded engine this handler runs on shard
+    /// 0 right after a forced merge cycle, so the file holds the
+    /// post-merge *global* posterior.
+    fn op_snapshot(&mut self, id: Option<u64>, path: &str) -> Response {
+        self.apply_queued();
+        let st = self.router.export_state();
+        match snapshot::save(Path::new(path), &st) {
+            Ok(()) => Response::Snapshot {
+                id,
+                path: path.to_string(),
+                arms: st.n_active(),
+                t: st.t,
+            },
+            Err(e) => Response::err(ErrorCode::SnapshotIo, format!("snapshot: {e}"), id),
+        }
+    }
+
+    /// `restore`: warm-restart this worker from a snapshot file (the
+    /// single-worker path; the engine loads the file once in its merger
+    /// and broadcasts the parsed state to [`ServerState::apply_restore`]).
+    fn op_restore(&mut self, id: Option<u64>, path: &str) -> Response {
+        match snapshot::load(Path::new(path)) {
+            Ok(st) => self.apply_restore(id, &st),
+            Err(e) => Response::err(ErrorCode::SnapshotIo, format!("restore: {e}"), id),
+        }
+    }
+
+    /// Warm-restart this worker from an already-parsed snapshot state.
+    /// The pending-context cache and any queued rewards are dropped —
+    /// they describe the pre-restore posterior — so late feedback for
+    /// pre-restore ids answers `unknown_id` rather than corrupting the
+    /// restored arms.
+    pub(crate) fn apply_restore(&mut self, id: Option<u64>, st: &crate::router::RouterState) -> Response {
+        match self.router.restore_state(st) {
+            Ok(()) => {
+                // the snapshot carries one RNG stream; replicas beyond
+                // shard 0 fork theirs so a restored fleet keeps distinct
+                // per-shard exploration noise
+                if self.shard != 0 {
+                    self.router.fork_rng(self.shard as u64);
+                }
+                self.cache.clear();
+                if let Some(q) = self.queue.as_mut() {
+                    q.drain();
+                    q.take_dropped();
+                }
+                Response::Restore {
+                    id,
+                    arms: st.n_active(),
+                    t: st.t,
+                }
+            }
+            Err(e) => Response::err(ErrorCode::SnapshotIo, format!("restore: {e}"), id),
         }
     }
 
@@ -501,6 +641,69 @@ mod tests {
         };
         assert_eq!(id, Some(5));
         assert_eq!(synced_shards, 1, "single worker answers as a 1-shard engine");
+    }
+
+    #[test]
+    fn inject_snapshot_restore_roundtrip_on_one_worker() {
+        let mut st = state();
+        // learn something so the restore is observable
+        for i in 0..40u64 {
+            st.handle(&req(&format!(r#"{{"op":"route","id":{i},"prompt":"q {i}"}}"#)));
+            st.handle(&req(&format!(
+                r#"{{"op":"feedback","id":{i},"reward":0.9,"cost":0.0001}}"#
+            )));
+        }
+        // inject maps onto the matching admin op and echoes its fields
+        let (resp, _) = st.handle(&req(
+            r#"{"op":"inject","id":1,"event":{"op":"set_price","model":"mistral","price_in":0.2,"price_out":0.8}}"#,
+        ));
+        let Response::Reprice { id, arm } = resp else {
+            panic!("inject set_price should answer as reprice: {resp:?}")
+        };
+        assert_eq!(id, Some(1));
+        assert_eq!(arm, 1);
+        // environment-side events are rejected
+        let (resp, _) = st.handle(&req(
+            r#"{"op":"inject","event":{"op":"degrade_quality","model":"mistral","mean_to":0.5}}"#,
+        ));
+        assert_eq!(code_of(&resp), Some(ErrorCode::BadRequest));
+        // snapshot to a temp file, mutate, restore -> learned state rewinds
+        let dir = std::env::temp_dir().join(format!("pb_api_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("worker.snap.json");
+        let line = format!(
+            r#"{{"op":"snapshot","id":2,"path":"{}"}}"#,
+            path.display()
+        );
+        let (resp, _) = st.handle(&req(&line));
+        let Response::Snapshot { arms, t, .. } = resp else {
+            panic!("snapshot failed: {resp:?}")
+        };
+        assert_eq!(arms, 2);
+        assert_eq!(t, 40);
+        st.handle(&req(r#"{"op":"delete_model","model":"mistral"}"#));
+        assert_eq!(st.router.registry().n_active(), 1);
+        let line = format!(r#"{{"op":"restore","id":3,"path":"{}"}}"#, path.display());
+        let (resp, _) = st.handle(&req(&line));
+        let Response::Restore { arms, t, .. } = resp else {
+            panic!("restore failed: {resp:?}")
+        };
+        assert_eq!((arms, t), (2, 40));
+        assert_eq!(st.router.registry().n_active(), 2);
+        assert_eq!(st.router.step(), 40);
+        // pending contexts were dropped with the restore
+        st.handle(&req(r#"{"op":"route","id":90,"prompt":"pre-restore"}"#));
+        let snap_line = format!(r#"{{"op":"restore","path":"{}"}}"#, path.display());
+        st.handle(&req(&snap_line));
+        let (resp, _) =
+            st.handle(&req(r#"{"op":"feedback","id":90,"reward":0.5,"cost":0.0001}"#));
+        assert_eq!(code_of(&resp), Some(ErrorCode::UnknownId));
+        // IO failures carry the snapshot_io code
+        let (resp, _) = st.handle(&req(
+            r#"{"op":"restore","path":"/nonexistent/x.snap.json"}"#,
+        ));
+        assert_eq!(code_of(&resp), Some(ErrorCode::SnapshotIo));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -26,9 +26,13 @@
 //!   each other's feedback.  Cycles run on a timer and on demand via the
 //!   `sync` op.
 //! * **admin ops** (`add_model` / `delete_model` / `reprice` /
-//!   `set_budget`) are serialized through the merger thread and applied to
-//!   every shard in the same order, keeping slot ids aligned across
-//!   replicas.
+//!   `set_budget` / `inject` / `restore`) are serialized through the
+//!   merger thread and applied to every shard in the same order, keeping
+//!   slot ids aligned across replicas.  `snapshot` also goes through the
+//!   merger, but as cycle-then-persist: a forced merge folds every
+//!   shard's delta, then shard 0 — whose replica at that instant IS the
+//!   global posterior — writes the versioned state file that `restore`
+//!   and `serve --restore` warm-start from.
 //!
 //! Shard clocks are local: with round-robin dispatch each replica sees
 //! ~1/N of the traffic, so the forgetting horizon measured in *global*
@@ -53,7 +57,7 @@ use super::api::{Job, ServerState};
 use super::metrics::Metrics;
 use super::proto::{ErrorCode, FeedbackItem, Request, Response, RouteItem};
 use crate::bandit::ArmState;
-use crate::router::FeedbackQueue;
+use crate::router::{FeedbackQueue, RouterState};
 use crate::util::json::Json;
 
 /// Owner-table capacity *per shard*: ids routed but not yet claimed by
@@ -104,6 +108,9 @@ enum ShardMsg {
     Sync(mpsc::Sender<SyncReport>),
     /// adopt the broadcast global posterior stamped with its epoch
     Adopt(u64, Arc<Vec<Option<ArmState>>>),
+    /// warm-restart from a snapshot the merger parsed once (the echoed
+    /// request id rides along)
+    Restore(Option<u64>, Arc<RouterState>, mpsc::Sender<Response>),
     Stop,
 }
 
@@ -113,6 +120,9 @@ enum MergeCmd {
     Cycle(Option<(Option<u64>, mpsc::Sender<Response>)>),
     /// apply an admin op to every shard in order; ack with shard 0's reply
     Admin(Request, mpsc::Sender<Response>),
+    /// force a merge cycle, then have shard 0 persist its (now global)
+    /// state — the engine's `snapshot` verb
+    Snapshot(Request, mpsc::Sender<Response>),
     Stop,
 }
 
@@ -199,6 +209,22 @@ impl Dispatch {
 
     /// Handle one typed request; returns (response, initiate shutdown?).
     fn dispatch(&self, req: Request) -> (Response, bool) {
+        // an injected snapshot/restart event must get the dedicated
+        // verbs' engine semantics (merge-then-persist on shard 0 /
+        // broadcast restore) — per-shard application would write N
+        // partial snapshots.  A pathless inject falls through and fails
+        // per-shard with the handler's bad_request.
+        let req = match req {
+            Request::Inject {
+                id,
+                event: crate::scenario::Event::Snapshot { path: Some(path) },
+            } => Request::Snapshot { id, path },
+            Request::Inject {
+                id,
+                event: crate::scenario::Event::Restart { path: Some(path) },
+            } => Request::Restore { id, path },
+            other => other,
+        };
         match req {
             Request::Route(it) => {
                 let id = it.id;
@@ -267,13 +293,35 @@ impl Dispatch {
                     false,
                 )
             }
+            // restore and inject are admin ops too: broadcast to every
+            // shard in the same serialized order (inject maps onto
+            // reprice/add/delete/set_budget on each shard; restore makes
+            // every replica adopt the same snapshot)
             Request::AddModel { .. }
             | Request::DeleteModel { .. }
             | Request::Reprice { .. }
-            | Request::SetBudget { .. } => {
+            | Request::SetBudget { .. }
+            | Request::Inject { .. }
+            | Request::Restore { .. } => {
                 let id = req.id();
                 let (tx, rx) = mpsc::channel();
                 if self.merge_tx.send(MergeCmd::Admin(req, tx)).is_err() {
+                    return (
+                        Response::err(ErrorCode::Unavailable, "merger unavailable", id),
+                        false,
+                    );
+                }
+                (
+                    rx.recv().unwrap_or_else(|_| {
+                        Response::err(ErrorCode::Unavailable, "merger dropped request", id)
+                    }),
+                    false,
+                )
+            }
+            Request::Snapshot { .. } => {
+                let id = req.id();
+                let (tx, rx) = mpsc::channel();
+                if self.merge_tx.send(MergeCmd::Snapshot(req, tx)).is_err() {
                     return (
                         Response::err(ErrorCode::Unavailable, "merger unavailable", id),
                         false,
@@ -662,6 +710,9 @@ fn shard_loop(mut state: ServerState, rx: mpsc::Receiver<ShardMsg>) {
                 state.router.adopt_arms(&global);
                 epoch = e;
             }
+            ShardMsg::Restore(id, st, reply) => {
+                let _ = reply.send(state.apply_restore(id, &st));
+            }
             ShardMsg::Stop => break,
         }
     }
@@ -691,7 +742,7 @@ fn merger_loop(
                 next_fire = Instant::now() + interval;
             }
             Ok(MergeCmd::Cycle(ack)) => {
-                let shards = run_cycle(&shard_txs, &metrics, &mut next_epoch);
+                let shards = run_cycle(&shard_txs, &metrics, &mut next_epoch).len();
                 next_fire = Instant::now() + interval;
                 if let Some((id, ack)) = ack {
                     let _ = ack.send(Response::Sync {
@@ -702,42 +753,123 @@ fn merger_loop(
                 }
             }
             Ok(MergeCmd::Admin(req, ack)) => {
+                // restore: parse the snapshot file ONCE here and
+                // broadcast the parsed state — per-shard file reads
+                // would open a divergence window (the path overwritten
+                // mid-broadcast leaves replicas on different posteriors)
+                // and re-parse the same bytes N times
+                if let Request::Restore { id, path } = &req {
+                    let resp = match crate::scenario::snapshot::load(std::path::Path::new(path))
+                    {
+                        Err(e) => Response::err(
+                            ErrorCode::SnapshotIo,
+                            format!("restore: {e}"),
+                            *id,
+                        ),
+                        Ok(st) => {
+                            let st = Arc::new(st);
+                            broadcast_acks(&shard_txs, req.id(), |tx, t| {
+                                tx.send(ShardMsg::Restore(*id, st.clone(), t)).is_ok()
+                            })
+                        }
+                    };
+                    let _ = ack.send(resp);
+                    continue;
+                }
                 // same order on every shard keeps slot ids aligned
-                let mut first: Option<Response> = None;
-                let mut sent_any = false;
-                for tx in &shard_txs {
+                let resp = broadcast_acks(&shard_txs, req.id(), |tx, t| {
+                    tx.send(ShardMsg::Job(Job {
+                        req: req.clone(),
+                        resp: t,
+                    }))
+                    .is_ok()
+                });
+                let _ = ack.send(resp);
+            }
+            Ok(MergeCmd::Snapshot(req, ack)) => {
+                // fold every shard's delta and broadcast, so shard 0's
+                // replica IS the global posterior when it persists.  A
+                // shard missing the cycle means the fold lacks its
+                // deltas — refuse rather than persist a partial state
+                // labelled "global"; the operator retries once the
+                // fleet is responsive.
+                let reporters = run_cycle(&shard_txs, &metrics, &mut next_epoch);
+                next_fire = Instant::now() + interval;
+                let resp = if reporters.len() < shard_txs.len() {
+                    Response::err(
+                        ErrorCode::ShardTimeout,
+                        format!(
+                            "snapshot: only {}/{} shards joined the merge cycle",
+                            reporters.len(),
+                            shard_txs.len()
+                        ),
+                        req.id(),
+                    )
+                } else {
                     let (t, r) = mpsc::channel();
-                    if tx
+                    if shard_txs[0]
                         .send(ShardMsg::Job(Job {
                             req: req.clone(),
                             resp: t,
                         }))
-                        .is_err()
+                        .is_ok()
                     {
-                        continue;
-                    }
-                    sent_any = true;
-                    if let Ok(resp) = r.recv_timeout(SYNC_TIMEOUT) {
-                        first.get_or_insert(resp);
-                    }
-                }
-                // closed shard channels (engine shutting down) are
-                // `unavailable`; only a shard that accepted the job but
-                // missed the deadline is a `shard_timeout`
-                let _ = ack.send(first.unwrap_or_else(|| {
-                    if sent_any {
-                        Response::err(ErrorCode::ShardTimeout, "no shard answered", req.id())
+                        r.recv_timeout(SYNC_TIMEOUT).unwrap_or_else(|_| {
+                            Response::err(
+                                ErrorCode::ShardTimeout,
+                                "snapshot: shard 0 did not answer",
+                                req.id(),
+                            )
+                        })
                     } else {
                         Response::err(ErrorCode::Unavailable, "no shard reachable", req.id())
                     }
-                }));
+                };
+                let _ = ack.send(resp);
             }
             Ok(MergeCmd::Stop) | Err(mpsc::RecvTimeoutError::Disconnected) => break,
         }
     }
 }
 
-/// One merge/broadcast cycle; returns how many shards reported.
+/// Send one message per shard, collect each ack within the sync
+/// deadline, and reduce: ANY shard's error surfaces (replicas that
+/// disagree must not hide behind an ok ack), else the first success.
+/// Closed shard channels (engine shutting down) are `unavailable`;
+/// only a shard that accepted the message but missed the deadline is a
+/// `shard_timeout`.
+fn broadcast_acks(
+    shard_txs: &[mpsc::Sender<ShardMsg>],
+    id: Option<u64>,
+    mut send: impl FnMut(&mpsc::Sender<ShardMsg>, mpsc::Sender<Response>) -> bool,
+) -> Response {
+    let mut first_ok: Option<Response> = None;
+    let mut first_err: Option<Response> = None;
+    let mut sent_any = false;
+    for tx in shard_txs {
+        let (t, r) = mpsc::channel();
+        if !send(tx, t) {
+            continue;
+        }
+        sent_any = true;
+        if let Ok(resp) = r.recv_timeout(SYNC_TIMEOUT) {
+            if resp.is_ok() {
+                first_ok.get_or_insert(resp);
+            } else {
+                first_err.get_or_insert(resp);
+            }
+        }
+    }
+    first_err.or(first_ok).unwrap_or_else(|| {
+        if sent_any {
+            Response::err(ErrorCode::ShardTimeout, "no shard answered", id)
+        } else {
+            Response::err(ErrorCode::Unavailable, "no shard reachable", id)
+        }
+    })
+}
+
+/// One merge/broadcast cycle; returns which shards reported.
 ///
 /// Stateless all-reduce: the global posterior is rebuilt each cycle as
 /// the *freshest* replica (base + its own delta) plus every other shard's
@@ -763,7 +895,7 @@ fn run_cycle(
     shard_txs: &[mpsc::Sender<ShardMsg>],
     metrics: &Arc<Metrics>,
     next_epoch: &mut u64,
-) -> usize {
+) -> Vec<usize> {
     let mut replies = Vec::with_capacity(shard_txs.len());
     for (shard, tx) in shard_txs.iter().enumerate() {
         let (t, r) = mpsc::channel();
@@ -780,7 +912,7 @@ fn run_cycle(
         }
     }
     if reports.is_empty() {
-        return 0;
+        return reporters;
     }
     let base = (0..reports.len())
         .max_by_key(|&i| reports[i].epoch)
@@ -803,7 +935,7 @@ fn run_cycle(
         let _ = shard_txs[shard].send(ShardMsg::Adopt(epoch, global.clone()));
     }
     metrics.merges.fetch_add(1, Ordering::Relaxed);
-    reports.len()
+    reporters
 }
 
 fn handle_conn(stream: TcpStream, dispatch: Arc<Dispatch>) {

@@ -50,6 +50,8 @@ pub enum ErrorCode {
     ShardTimeout,
     /// a worker shard or the merger is gone (engine shutting down)
     Unavailable,
+    /// `snapshot`/`restore` could not read/write/decode the state file
+    SnapshotIo,
 }
 
 impl ErrorCode {
@@ -63,6 +65,7 @@ impl ErrorCode {
             ErrorCode::FeaturizeFailed => "featurize_failed",
             ErrorCode::ShardTimeout => "shard_timeout",
             ErrorCode::Unavailable => "unavailable",
+            ErrorCode::SnapshotIo => "snapshot_io",
         }
     }
 
@@ -77,6 +80,7 @@ impl ErrorCode {
             "featurize_failed" => ErrorCode::FeaturizeFailed,
             "shard_timeout" => ErrorCode::ShardTimeout,
             "unavailable" => ErrorCode::Unavailable,
+            "snapshot_io" => ErrorCode::SnapshotIo,
             _ => return None,
         })
     }
@@ -151,6 +155,24 @@ pub enum Request {
     SetBudget {
         id: Option<u64>,
         budget: f64,
+    },
+    /// Apply one scenario event (the generic operator verb behind the
+    /// scenario engine's wire host).  Environment-side events are
+    /// rejected at dispatch — the engine has nothing to apply for them.
+    Inject {
+        id: Option<u64>,
+        event: crate::scenario::Event,
+    },
+    /// Persist the learned router state to a server-side file (engine:
+    /// the post-merge global posterior).
+    Snapshot {
+        id: Option<u64>,
+        path: String,
+    },
+    /// Warm-restart every worker from a snapshot file.
+    Restore {
+        id: Option<u64>,
+        path: String,
     },
     Metrics {
         id: Option<u64>,
@@ -351,6 +373,25 @@ impl Request {
                 }
                 Ok(Request::SetBudget { id, budget })
             }
+            "inject" => {
+                let Some(ev) = j.get("event") else {
+                    return Err(bad("inject: missing event object".to_string()));
+                };
+                let event = crate::scenario::Event::from_json(ev)
+                    .map_err(|e| bad(format!("inject: {e}")))?;
+                Ok(Request::Inject { id, event })
+            }
+            "snapshot" | "restore" => {
+                let Some(path) = j.get("path").and_then(Json::as_str) else {
+                    return Err(bad(format!("{op}: missing path")));
+                };
+                let path = path.to_string();
+                Ok(if op == "snapshot" {
+                    Request::Snapshot { id, path }
+                } else {
+                    Request::Restore { id, path }
+                })
+            }
             "metrics" => Ok(Request::Metrics { id }),
             "sync" => Ok(Request::Sync { id }),
             "shutdown" => Ok(Request::Shutdown { id }),
@@ -369,6 +410,9 @@ impl Request {
             | Request::DeleteModel { id, .. }
             | Request::Reprice { id, .. }
             | Request::SetBudget { id, .. }
+            | Request::Inject { id, .. }
+            | Request::Snapshot { id, .. }
+            | Request::Restore { id, .. }
             | Request::Metrics { id }
             | Request::Sync { id }
             | Request::Shutdown { id } => *id,
@@ -416,6 +460,19 @@ pub enum Response {
     SetBudget {
         id: Option<u64>,
         budget: f64,
+    },
+    /// `snapshot` ack: where it landed, active arms and the router step.
+    Snapshot {
+        id: Option<u64>,
+        path: String,
+        arms: usize,
+        t: u64,
+    },
+    /// `restore` ack: active arms and the restored router step.
+    Restore {
+        id: Option<u64>,
+        arms: usize,
+        t: u64,
     },
     Metrics {
         id: Option<u64>,
@@ -513,6 +570,21 @@ impl Response {
             Response::SetBudget { id, budget } => {
                 envelope(*id, vec![("budget", Json::Num(*budget))])
             }
+            Response::Snapshot { id, path, arms, t } => envelope(
+                *id,
+                vec![
+                    ("path", Json::Str(path.clone())),
+                    ("arms", Json::Num(*arms as f64)),
+                    ("t", Json::Num(*t as f64)),
+                ],
+            ),
+            Response::Restore { id, arms, t } => envelope(
+                *id,
+                vec![
+                    ("arms", Json::Num(*arms as f64)),
+                    ("t", Json::Num(*t as f64)),
+                ],
+            ),
             Response::Metrics { id, snapshot } => {
                 let mut m = match snapshot {
                     Json::Obj(m) => m.clone(),
@@ -716,6 +788,64 @@ mod tests {
     }
 
     #[test]
+    fn inject_snapshot_restore_parse() {
+        use crate::scenario::Event;
+        match parse_req(
+            r#"{"op":"inject","id":4,"event":{"op":"set_budget","budget":0.001}}"#,
+        )
+        .unwrap()
+        {
+            Request::Inject { id, event } => {
+                assert_eq!(id, Some(4));
+                assert_eq!(event, Event::SetBudget { budget: 0.001 });
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        // a malformed nested event fails at parse with the request id
+        let e = parse_req(r#"{"op":"inject","id":5,"event":{"op":"set_budget"}}"#).unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadRequest);
+        assert_eq!(e.id, Some(5));
+        let e = parse_req(r#"{"op":"inject","id":6}"#).unwrap_err();
+        assert!(e.msg.contains("missing event"));
+        match parse_req(r#"{"op":"snapshot","path":"/tmp/s.json"}"#).unwrap() {
+            Request::Snapshot { path, .. } => assert_eq!(path, "/tmp/s.json"),
+            other => panic!("wrong variant: {other:?}"),
+        }
+        match parse_req(r#"{"op":"restore","id":9,"path":"/tmp/s.json"}"#).unwrap() {
+            Request::Restore { id, path } => {
+                assert_eq!(id, Some(9));
+                assert_eq!(path, "/tmp/s.json");
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        assert!(parse_req(r#"{"op":"snapshot"}"#).is_err());
+        assert!(parse_req(r#"{"op":"restore"}"#).is_err());
+    }
+
+    #[test]
+    fn snapshot_restore_responses_carry_their_fields() {
+        let j = Response::Snapshot {
+            id: Some(2),
+            path: "/tmp/s.json".into(),
+            arms: 3,
+            t: 500,
+        }
+        .to_json();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("path").unwrap().as_str(), Some("/tmp/s.json"));
+        assert_eq!(j.get("arms").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("t").unwrap().as_f64(), Some(500.0));
+        let j = Response::Restore {
+            id: None,
+            arms: 2,
+            t: 77,
+        }
+        .to_json();
+        assert_eq!(j.get("arms").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("t").unwrap().as_f64(), Some(77.0));
+    }
+
+    #[test]
     fn error_codes_roundtrip_the_wire() {
         for code in [
             ErrorCode::BadRequest,
@@ -726,6 +856,7 @@ mod tests {
             ErrorCode::FeaturizeFailed,
             ErrorCode::ShardTimeout,
             ErrorCode::Unavailable,
+            ErrorCode::SnapshotIo,
         ] {
             assert_eq!(ErrorCode::from_wire(code.as_str()), Some(code));
         }

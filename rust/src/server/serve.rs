@@ -11,9 +11,13 @@
 //! low-traffic / reference deployment.  The production path for the
 //! multi-thousand-req/s regime is [`super::ShardedEngine`]: N replicas of
 //! this worker behind round-robin dispatch, a shared atomic budget ledger
-//! and a periodic posterior merge/broadcast cycle.  The wire protocol
-//! (`api.rs`) is identical in both, and this server behaves like a
-//! degenerate one-shard engine with per-event (unbatched) feedback.
+//! and a periodic posterior merge/broadcast cycle.  Both speak wire
+//! protocol v2 through the same typed layer — requests parse once into
+//! [`super::proto::Request`] on the connection thread, the worker
+//! dispatches on the typed value via [`ServerState::handle`], and the
+//! typed response serializes once at the writer — so this server behaves
+//! like a degenerate one-shard engine with per-event (unbatched)
+//! feedback, and the two paths cannot drift.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};

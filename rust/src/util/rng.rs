@@ -131,6 +131,18 @@ impl Rng {
         idx
     }
 
+    /// Dump the full generator state — the snapshot/warm-restart layer
+    /// persists this so a restored router replays the exact tiebreak and
+    /// posterior-sampling sequence its donor would have produced.
+    pub fn dump_state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.spare)
+    }
+
+    /// Rebuild a generator from a [`Rng::dump_state`] dump.
+    pub fn from_state(s: [u64; 4], spare: Option<f64>) -> Rng {
+        Rng { s, spare }
+    }
+
     /// Pick a uniformly random element index among the maxima of `scores`
     /// within `eps` of the max (the paper's "random tiebreak").
     pub fn argmax_tiebreak(&mut self, scores: &[f64], eps: f64) -> usize {

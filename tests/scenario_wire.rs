@@ -1,0 +1,301 @@
+//! Wire-level scenario operations on the sharded engine: `inject`,
+//! `snapshot`, `restore` driven through a real 4-shard deployment over
+//! TCP, the warm-restart acceptance check (a restored engine's routing
+//! distribution matches the donor where a cold engine's does not), and
+//! the registry hot-swap churn path (remove → re-add of the same name).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use paretobandit::client::{ClientError, ParetoClient};
+use paretobandit::pacer::{PacerConfig, SharedPacer};
+use paretobandit::router::{ContextCache, ModelRef, ParetoRouter, Prior, RouterConfig};
+use paretobandit::scenario::{snapshot, Event};
+use paretobandit::server::{EngineConfig, ErrorCode, Metrics, ServerState, ShardedEngine};
+use paretobandit::sim::hash_features;
+
+const D: usize = 8;
+const BUDGET: f64 = 1e-3;
+
+/// 4-shard engine over a two-model portfolio; `restore_from` warm-starts
+/// every shard from a snapshot file (the `serve --restore` builder path).
+fn spawn_engine(workers: usize, restore_from: Option<std::path::PathBuf>) -> ShardedEngine {
+    let ledger = Arc::new(SharedPacer::new(PacerConfig::new(BUDGET)));
+    let build = move |shard: usize| {
+        let mut router =
+            ParetoRouter::new(RouterConfig::tabula_rasa(D, Some(BUDGET), 500 + shard as u64));
+        router.use_shared_pacer(ledger.clone());
+        match &restore_from {
+            Some(path) => {
+                let st = snapshot::load(path).expect("snapshot file");
+                router.restore_state(&st).expect("restore");
+                // mirror serve --restore: replicas past shard 0 fork the
+                // snapshot's RNG stream
+                if shard > 0 {
+                    router.fork_rng(shard as u64);
+                }
+            }
+            None => {
+                router.add_model("llama", 0.1, 0.1, Prior::Cold);
+                router.add_model("mistral", 0.4, 1.6, Prior::Cold);
+            }
+        }
+        ServerState::new(
+            router,
+            ContextCache::new(4096),
+            Box::new(|t: &str| Ok(hash_features(t, D))),
+            Arc::new(Metrics::new()),
+        )
+    };
+    ShardedEngine::spawn(
+        "127.0.0.1:0",
+        EngineConfig::new(workers).merge_every(Duration::from_millis(20)),
+        build,
+    )
+    .unwrap()
+}
+
+fn api_code(e: &ClientError) -> Option<ErrorCode> {
+    match e {
+        ClientError::Api(e) => Some(e.code),
+        ClientError::Transport(_) => None,
+    }
+}
+
+/// Route 100 eval prompts (no feedback) and count per-arm allocations.
+fn allocation(c: &mut ParetoClient, id_base: u64, arms: usize) -> Vec<usize> {
+    let mut counts = vec![0usize; arms];
+    for i in 0..100u64 {
+        let r = c.route(id_base + i, &format!("eval prompt {i}")).unwrap();
+        counts[r.arm] += 1;
+    }
+    counts
+}
+
+fn temp_path(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("pb_wire_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn inject_snapshot_restore_through_a_4_shard_engine() {
+    let engine = spawn_engine(4, None);
+    let mut c = ParetoClient::connect(engine.addr).unwrap();
+
+    // teach the engine that mistral (arm 1, the pricier model) is good
+    // and llama is bad.  A cold router prefers llama (equal exploration
+    // bonuses, lower cost penalty), so this preference is only
+    // reproducible through warm state — exactly what the restore
+    // assertions below need to discriminate.
+    for i in 0..300u64 {
+        let r = c.route(i, &format!("training prompt {i}")).unwrap();
+        let reward = if r.arm == 1 { 0.9 } else { 0.2 };
+        c.feedback(i, reward, 1e-4).unwrap();
+    }
+
+    // inject: live price drift + a budget change through the one verb
+    c.inject(&Event::SetPrice {
+        model: "mistral".into(),
+        mult: None,
+        price_in: Some(0.2),
+        price_out: Some(0.8),
+    })
+    .unwrap();
+    c.inject(&Event::SetBudget { budget: BUDGET * 2.0 }).unwrap();
+    // environment-side events are rejected with the typed code
+    let e = c
+        .inject(&Event::DegradeQuality {
+            model: "mistral".into(),
+            mean_to: Some(0.5),
+        })
+        .unwrap_err();
+    assert_eq!(api_code(&e), Some(ErrorCode::BadRequest));
+
+    // snapshot: merge cycle + shard-0 persist; the file is a valid
+    // versioned snapshot holding the global posterior
+    let path = temp_path("engine.snap.json");
+    let (arms, t) = c.snapshot(path.to_str().unwrap()).unwrap();
+    assert_eq!(arms, 2);
+    assert!(t > 0, "snapshot step must be past zero, got {t}");
+    let st = snapshot::load(&path).unwrap();
+    assert_eq!(st.n_active(), 2);
+    assert_eq!(
+        st.pacer.expect("pacer state").budget,
+        BUDGET * 2.0,
+        "the injected budget change must be in the snapshot"
+    );
+    let total_obs: u64 = st
+        .slots
+        .iter()
+        .flatten()
+        .map(|s| s.arm.n_obs)
+        .sum();
+    assert_eq!(total_obs, 300, "global posterior must hold every reward");
+
+    // donor's post-snapshot allocation: dominated by the learned arm 1
+    let donor_alloc = allocation(&mut c, 10_000, 2);
+    assert!(donor_alloc[1] >= 95, "donor should exploit arm 1: {donor_alloc:?}");
+
+    // a cold engine prefers the cheap arm instead — the warm start is
+    // what transfers the learned preference
+    let cold = spawn_engine(4, None);
+    let mut cc = ParetoClient::connect(cold.addr).unwrap();
+    let cold_alloc = allocation(&mut cc, 10_000, 2);
+    assert!(
+        cold_alloc[1] < 50,
+        "cold engine must not know arm 1 is better: {cold_alloc:?}"
+    );
+
+    // (a) builder warm start — the serve --restore path
+    let warmed = spawn_engine(4, Some(path.clone()));
+    let mut wc = ParetoClient::connect(warmed.addr).unwrap();
+    let warm_alloc = allocation(&mut wc, 10_000, 2);
+    assert_eq!(
+        warm_alloc, donor_alloc,
+        "restored engine's first-100 routing distribution must match the donor"
+    );
+
+    // (b) wire restore verb — warm-start the cold engine in place
+    let (rarms, rt) = cc.restore(path.to_str().unwrap()).unwrap();
+    assert_eq!(rarms, 2);
+    assert_eq!(rt, t);
+    let revived_alloc = allocation(&mut cc, 20_000, 2);
+    assert_eq!(
+        revived_alloc, donor_alloc,
+        "wire-restored engine must route like the donor"
+    );
+    // pending ids from before the restore were dropped with the caches
+    let e = cc.feedback(10_005, 0.5, 1e-4).unwrap_err();
+    assert_eq!(api_code(&e), Some(ErrorCode::UnknownId));
+
+    // restore failures are typed
+    let e = wc.restore("/nonexistent/nope.snap.json").unwrap_err();
+    assert_eq!(api_code(&e), Some(ErrorCode::SnapshotIo));
+    let e = wc.snapshot("/nonexistent-dir/x/y.snap.json").unwrap_err();
+    assert_eq!(api_code(&e), Some(ErrorCode::SnapshotIo));
+
+    let _ = std::fs::remove_file(&path);
+    warmed.stop();
+    cold.stop();
+    engine.stop();
+}
+
+#[test]
+fn exp2_spec_replays_against_a_live_engine() {
+    use paretobandit::exp::ExpEnv;
+    use paretobandit::scenario::{run_scenario_wire, RunOptions, ScenarioSpec};
+    use paretobandit::sim::FlashScenario;
+
+    // an engine serving the Table-1 portfolio under the simulator's
+    // model names, so the spec's set_price events resolve on both sides
+    let env = ExpEnv::load(FlashScenario::GoodCheap);
+    let d = env.d();
+    let ledger = Arc::new(SharedPacer::new(PacerConfig::new(6.6e-4)));
+    let build = move |shard: usize| {
+        let mut router =
+            ParetoRouter::new(RouterConfig::tabula_rasa(d, Some(6.6e-4), 900 + shard as u64));
+        router.use_shared_pacer(ledger.clone());
+        router.add_model("llama-3.1-8b", 0.10, 0.10, Prior::Cold);
+        router.add_model("mistral-large", 0.40, 1.60, Prior::Cold);
+        router.add_model("gemini-2.5-pro", 1.25, 10.0, Prior::Cold);
+        ServerState::new(
+            router,
+            ContextCache::new(65536),
+            Box::new(move |t: &str| Ok(hash_features(t, d))),
+            Arc::new(Metrics::new()),
+        )
+    };
+    let engine = ShardedEngine::spawn(
+        "127.0.0.1:0",
+        EngineConfig::new(2).merge_every(Duration::from_millis(20)),
+        build,
+    )
+    .unwrap();
+    let mut client = ParetoClient::connect(engine.addr).unwrap();
+    let spec = ScenarioSpec::load_named("exp2_costdrift").unwrap();
+    let run = run_scenario_wire(
+        &spec,
+        &env,
+        &env.world,
+        &mut client,
+        &RunOptions {
+            seed: 1,
+            reprice_router: true,
+        },
+    )
+    .unwrap();
+    // three 608-step phases, all served over the wire
+    assert_eq!(run.phases.len(), 3);
+    for ph in &run.phases {
+        assert_eq!(ph.len(), 608);
+    }
+    // the two price events (cut + restore) travelled as injects, plus
+    // the two traffic_mix phase boundaries applied locally
+    assert_eq!(run.event_log.len(), 4);
+    assert!(run.event_log.iter().any(|l| l.starts_with("t=608") && l.contains("set_price")));
+    assert!(run.event_log.iter().any(|l| l.starts_with("t=1216") && l.contains("set_price")));
+    let m = client.metrics().unwrap();
+    assert_eq!(
+        m.get("requests").and_then(paretobandit::util::json::Json::as_f64),
+        Some(1824.0)
+    );
+    assert_eq!(
+        m.get("feedbacks").and_then(paretobandit::util::json::Json::as_f64),
+        Some(1824.0)
+    );
+    // rewards are real simulator judgments, not garbage
+    let mean: f64 = run.flat().iter().map(|s| s.reward).sum::<f64>() / 1824.0;
+    assert!(mean > 0.5, "mean reward {mean}");
+    engine.stop();
+}
+
+#[test]
+fn hot_swap_churn_readds_a_retired_name_on_a_fresh_slot() {
+    let engine = spawn_engine(4, None);
+    let mut c = ParetoClient::connect(engine.addr).unwrap();
+    // add → remove → re-add of the same name must never answer
+    // duplicate_model off the tombstoned slot; each cycle gets a fresh id
+    let first = c.add_model("flash", 0.3, 2.5, None).unwrap();
+    assert_eq!(first, 2);
+    // while active, a duplicate IS rejected
+    let e = c.add_model("flash", 0.3, 2.5, None).unwrap_err();
+    assert_eq!(api_code(&e), Some(ErrorCode::DuplicateModel));
+    let mut expected = first;
+    for cycle in 0..3 {
+        assert_eq!(
+            c.delete_model(&ModelRef::Name("flash".into())).unwrap(),
+            expected,
+            "cycle {cycle}: delete resolves the live slot"
+        );
+        let readded = c.add_model("flash", 0.3, 2.5, None).unwrap();
+        assert_eq!(
+            readded,
+            expected + 1,
+            "cycle {cycle}: re-add must land on a fresh slot, not the tombstone"
+        );
+        expected = readded;
+        // traffic keeps flowing across the churn on every shard
+        for i in 0..8u64 {
+            let id = 1_000 * (cycle as u64 + 1) + i;
+            c.route(id, &format!("churn {cycle} prompt {i}")).unwrap();
+            c.feedback(id, 0.8, 1e-4).unwrap();
+        }
+    }
+    // the same churn expressed as inject events
+    c.inject(&Event::RemoveModel { model: "flash".into() }).unwrap();
+    let resp = c
+        .inject(&Event::AddModel {
+            model: "flash".into(),
+            price_in: Some(0.3),
+            price_out: Some(2.5),
+            n_eff: None,
+            r0: None,
+        })
+        .unwrap();
+    assert_eq!(
+        resp.get("arm").and_then(paretobandit::util::json::Json::as_f64),
+        Some((expected + 1) as f64)
+    );
+    engine.stop();
+}
