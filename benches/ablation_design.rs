@@ -11,7 +11,7 @@
 //! Run: `cargo bench --bench ablation_design` (PB_SEEDS=N).
 
 use paretobandit::exp::{conditions, mean_cost, mean_reward, stream_order, ExpEnv};
-use paretobandit::router::{ContextCache, Exploration, Pending, Policy, QualityFloorRouter};
+use paretobandit::router::{ContextCache, Exploration, Pending, QualityFloorRouter};
 use paretobandit::router::{FloorConfig, Prior};
 use paretobandit::sim::{EnvView, FlashScenario, Judge};
 use paretobandit::stats::{bootstrap_ci, mean, std_dev_sample};
@@ -31,13 +31,18 @@ fn main() {
         let mut rewards = Vec::new();
         let mut ratios = Vec::new();
         for s in 0..seeds {
-            let mut r =
-                conditions::paretobandit(&env, &offline, 3, Some(conditions::B_MODERATE), 100 + s);
-            // rebuild with the exploration override
-            let mut cfg = *r.config();
+            // the paretobandit condition config with the exploration override
+            let mut cfg = paretobandit::router::RouterConfig::paretobandit(
+                env.d(),
+                conditions::B_MODERATE,
+                100 + s,
+            );
+            cfg.alpha = conditions::ALPHA_WARM;
+            cfg.gamma = conditions::GAMMA;
             cfg.exploration = explo;
             let mut r = paretobandit::router::ParetoRouter::new(cfg);
             conditions::register_models(&mut r, &env.world, 3, Some((&offline, conditions::N_EFF)));
+            let mut r = conditions::hosted(r);
             let order = stream_order(&env.corpus.test, 9000 + s);
             let log = paretobandit::exp::run_phases(
                 &mut r,
@@ -127,6 +132,7 @@ fn main() {
                 let spec = &env.world.models[m];
                 r.add_model(spec.name, spec.price_in_per_m, spec.price_out_per_m, Prior::Cold);
             }
+            let mut r = conditions::hosted(r);
             let order = stream_order(&env.corpus.test, 9200 + s);
             let log = paretobandit::exp::run_phases(
                 &mut r,

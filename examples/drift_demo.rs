@@ -19,7 +19,7 @@ fn main() {
     let order = stream_order(&env.corpus.test, 17);
     let normal = EnvView::normal(4);
 
-    let mut phase = |router: &mut paretobandit::router::ParetoRouter,
+    let mut phase = |router: &mut paretobandit::router::PolicyHost,
                      name: &str,
                      ids: &[u32],
                      view: &EnvView| {

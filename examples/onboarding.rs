@@ -10,7 +10,7 @@
 
 use paretobandit::exp::{allocation, rolling, run_phases, stream_order, Phase};
 use paretobandit::exp::{conditions, ExpEnv};
-use paretobandit::router::Prior;
+use paretobandit::router::ParetoRouter;
 use paretobandit::sim::{EnvView, FlashScenario, Judge, FLASH};
 
 fn main() {
@@ -44,13 +44,17 @@ fn main() {
             paretobandit::exp::mean_cost(&l1)
         );
 
-        // hot-swap: register flash cold
+        // hot-swap: register flash cold (through the host, so the
+        // registry and the policy's arm store stay slot-aligned)
         let spec = &world.models[FLASH];
-        let id = router.add_model(spec.name, spec.price_in_per_m, spec.price_out_per_m, Prior::Cold);
+        let id = router.add_model(spec.name, spec.price_in_per_m, spec.price_out_per_m, None);
         println!(
             "registered {} (arm {id}) -> {} forced pulls queued",
             spec.name,
-            router.burnin_remaining(id)
+            router
+                .policy_as::<ParetoRouter>()
+                .expect("paretobandit condition")
+                .burnin_remaining(id)
         );
 
         // phase 2: live adoption

@@ -1,0 +1,57 @@
+//! Shadow-mode wire smoke driver (CI): drives a live engine started as
+//! `serve --policy epsilon --shadow paretobandit`, then asserts the
+//! `compare` verb reports the served policy and a fully scored shadow,
+//! and shuts the server down.
+//!
+//! ```text
+//! ./target/release/paretobandit serve --addr 127.0.0.1:7980 \
+//!     --policy epsilon --shadow paretobandit &
+//! ./target/release/examples/shadow_smoke 127.0.0.1:7980
+//! ```
+
+use paretobandit::client::ParetoClient;
+
+fn main() {
+    let addr = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "127.0.0.1:7980".to_string());
+    let mut c = ParetoClient::connect(addr.as_str()).expect("connect");
+    for i in 0..64u64 {
+        c.route(i, &format!("shadow smoke prompt number {i}"))
+            .expect("route");
+        c.feedback(i, 0.8, 2e-4).expect("feedback");
+    }
+    let rep = c.compare().expect("compare");
+    let served = rep.get("served").expect("served summary");
+    assert_eq!(
+        served.get("policy").and_then(|p| p.as_str()),
+        Some("EpsilonGreedy"),
+        "served policy must be the --policy selection"
+    );
+    assert_eq!(
+        served.get("requests").and_then(|r| r.as_f64()),
+        Some(64.0)
+    );
+    let shadows = rep.get("shadows").and_then(|s| s.as_arr()).expect("shadows");
+    assert_eq!(shadows.len(), 1, "one --shadow policy expected");
+    assert_eq!(
+        shadows[0].get("policy").and_then(|p| p.as_str()),
+        Some("ParetoBandit")
+    );
+    assert_eq!(
+        shadows[0].get("scored").and_then(|v| v.as_f64()),
+        Some(64.0),
+        "every feedback must score the shadow"
+    );
+    let m = c.metrics().expect("metrics");
+    assert_eq!(m.get("policy").and_then(|p| p.as_str()), Some("EpsilonGreedy"));
+    assert!(m.get("lambda").and_then(|l| l.as_f64()).is_some());
+    assert_eq!(m.get("shadows").and_then(|s| s.as_arr()).map(|s| s.len()), Some(1));
+    println!(
+        "shadow smoke ok: policy {} with {} shadow(s) scored on {} request(s)",
+        served.get("policy").and_then(|p| p.as_str()).unwrap_or("?"),
+        shadows.len(),
+        served.get("requests").and_then(|r| r.as_f64()).unwrap_or(0.0)
+    );
+    c.shutdown().expect("shutdown");
+}

@@ -456,8 +456,11 @@ impl ParetoClient {
         Ok(resp.get("budget").and_then(Json::as_f64).unwrap_or(budget))
     }
 
-    /// Serving-metrics snapshot (counters, latency percentiles, per-shard
-    /// and per-arm splits) as raw JSON.
+    /// Serving-metrics snapshot as raw JSON: counters, latency
+    /// percentiles, per-shard and per-arm splits, plus the active policy
+    /// name (`"policy"`), the pacer dual at the last routed request
+    /// (`"lambda"`) and the per-shadow counterfactual series
+    /// (`"shadows"`, see [`ParetoClient::compare`]).
     pub fn metrics(&mut self) -> ClientResult<Json> {
         let resp = self.call_raw(&Self::versioned(vec![("op", Json::Str("metrics".into()))]))?;
         // pre-v2 servers returned the bare snapshot with neither "ok"
@@ -466,6 +469,17 @@ impl ParetoClient {
             return Ok(resp);
         }
         Self::expect_ok(resp)
+    }
+
+    /// Served-vs-shadow policy comparison (the `compare` verb): the
+    /// active policy's summary (`"served"`) plus every shadow policy's
+    /// counterfactual quality/cost/λ series (`"shadows"`), as raw JSON.
+    /// Requires a v2 server; shadowless servers answer with an empty
+    /// `shadows` array.
+    pub fn compare(&mut self) -> ClientResult<Json> {
+        Self::expect_ok(
+            self.call_raw(&Self::versioned(vec![("op", Json::Str("compare".into()))]))?,
+        )
     }
 
     /// Force a merge/broadcast cycle (engine) or a well-defined no-op

@@ -4,7 +4,8 @@
 
 use super::env::ExpEnv;
 use crate::bandit::OfflineStats;
-use crate::router::{ParetoRouter, Prior, RouterConfig};
+use crate::router::baselines::{FixedPolicy, RandomPolicy};
+use crate::router::{ParetoRouter, PolicyHost, Prior, RouterConfig, RoutingPolicy};
 use crate::sim::{Judge, World};
 
 /// Paper knee-point hyperparameters (Appendix A, Table 3).
@@ -60,6 +61,35 @@ pub fn fit_offline_inverted(env: &ExpEnv, k: usize, a: usize, b: usize) -> Vec<O
     stats
 }
 
+/// Wrap a fully built policy (typically a [`ParetoRouter`] with its
+/// portfolio already registered) in the hosting layer the harness
+/// drives.  Self-hosted policies keep their own pacer; their
+/// pre-registered portfolio is adopted slot-for-slot.
+pub fn hosted(policy: impl RoutingPolicy + 'static) -> PolicyHost {
+    PolicyHost::new(Box::new(policy), None)
+}
+
+/// Host a hosted-side (eligible-set-driven) baseline over the first `k`
+/// world models.
+pub fn baseline(policy: Box<dyn RoutingPolicy>, world: &World, k: usize) -> PolicyHost {
+    let mut host = PolicyHost::new(policy, None);
+    for m in 0..k {
+        let spec = &world.models[m];
+        host.add_model(spec.name, spec.price_in_per_m, spec.price_out_per_m, None);
+    }
+    host
+}
+
+/// Uniform-random routing over the first `k` world models (§4.1).
+pub fn random(world: &World, k: usize, seed: u64) -> PolicyHost {
+    baseline(Box::new(RandomPolicy::new(seed)), world, k)
+}
+
+/// Always route world model `arm` (Fig. 1 anchors).
+pub fn fixed(world: &World, k: usize, arm: usize) -> PolicyHost {
+    baseline(Box::new(FixedPolicy::new(arm, world.models[arm].name)), world, k)
+}
+
 /// Register the first `k` world models on a router with given priors.
 pub fn register_models(
     router: &mut ParetoRouter,
@@ -84,7 +114,7 @@ pub fn paretobandit(
     k: usize,
     budget: Option<f64>,
     seed: u64,
-) -> ParetoRouter {
+) -> PolicyHost {
     let mut cfg = match budget {
         Some(b) => RouterConfig::paretobandit(env.d(), b, seed),
         None => RouterConfig::unconstrained(env.d(), seed),
@@ -93,15 +123,15 @@ pub fn paretobandit(
     cfg.gamma = GAMMA;
     let mut r = ParetoRouter::new(cfg).with_name("ParetoBandit");
     register_models(&mut r, &env.world, k, Some((offline, N_EFF)));
-    r
+    hosted(r)
 }
 
 /// Tabula Rasa: cold start, α=0.05, γ=0.997 (Appendix A knee point).
-pub fn tabula_rasa(env: &ExpEnv, k: usize, budget: Option<f64>, seed: u64) -> ParetoRouter {
+pub fn tabula_rasa(env: &ExpEnv, k: usize, budget: Option<f64>, seed: u64) -> PolicyHost {
     let cfg = RouterConfig::tabula_rasa(env.d(), budget, seed);
     let mut r = ParetoRouter::new(cfg).with_name("TabulaRasa");
     register_models(&mut r, &env.world, k, None);
-    r
+    hosted(r)
 }
 
 /// Naive Bandit: γ=1 (infinite memory), static cost penalty λ_c tuned
@@ -112,13 +142,13 @@ pub fn naive_bandit(
     k: usize,
     lambda_c: f64,
     seed: u64,
-) -> ParetoRouter {
+) -> PolicyHost {
     let mut cfg = RouterConfig::naive(env.d(), seed);
     cfg.alpha = ALPHA_WARM;
     cfg.lambda_c = lambda_c;
     let mut r = ParetoRouter::new(cfg).with_name("NaiveBandit");
     register_models(&mut r, &env.world, k, Some((offline, N_EFF)));
-    r
+    hosted(r)
 }
 
 /// Forgetting Bandit: γ=0.997 but NO pacer (the §4.3 critical ablation).
@@ -128,14 +158,14 @@ pub fn forgetting_bandit(
     k: usize,
     lambda_c: f64,
     seed: u64,
-) -> ParetoRouter {
+) -> PolicyHost {
     let mut cfg = RouterConfig::forgetting_only(env.d(), seed);
     cfg.alpha = ALPHA_WARM;
     cfg.gamma = GAMMA;
     cfg.lambda_c = lambda_c;
     let mut r = ParetoRouter::new(cfg).with_name("ForgettingBandit");
     register_models(&mut r, &env.world, k, Some((offline, N_EFF)));
-    r
+    hosted(r)
 }
 
 /// Offline static-penalty tuning (the procedure the pacer replaces):

@@ -8,7 +8,6 @@
 use super::conditions::{self, fit_offline};
 use super::report::{self, Table};
 use super::{allocation, mean_cost, mean_reward, run_phases, stream_order, Phase};
-use crate::router::baselines::FixedPolicy;
 use crate::sim::{EnvView, Judge};
 use crate::stats::bootstrap_ci;
 use crate::util::json::Json;
@@ -69,7 +68,7 @@ pub fn run(env: &super::ExpEnv, seeds: u64) -> Exp1Result {
     // fixed-model anchors
     let mut fixed = Vec::new();
     for m in 0..3 {
-        let mut pol = FixedPolicy::new(m, env.world.models[m].name);
+        let mut pol = conditions::fixed(&env.world, k, m);
         let phases = [Phase {
             prompts: stream_order(&env.corpus.test, 9000),
             view: &view,

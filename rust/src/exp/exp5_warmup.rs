@@ -8,8 +8,7 @@
 use super::conditions::{self, fit_offline};
 use super::report::{self, Table};
 use super::{cumulative_regret, mean_reward, regret_at, run_phases, stream_order, Phase};
-use crate::router::baselines::RandomPolicy;
-use crate::router::Policy;
+use crate::router::PolicyHost;
 use crate::sim::{EnvView, Judge};
 use crate::stats::{
     bootstrap_ci, fisher_exact_2x2, holm_bonferroni, median, sign_test, std_dev_sample, Ci,
@@ -51,10 +50,10 @@ pub fn run(env: &super::ExpEnv, seeds: u64) -> Exp5Result {
         let mut rewards = vec![0.0; 3];
         for s in 0..seeds {
             let order = stream_order(&env.corpus.test, 9000 + s);
-            let conds: Vec<Box<dyn Policy>> = vec![
-                Box::new(conditions::paretobandit(env, &offline, k, budget, 100 + s)),
-                Box::new(conditions::tabula_rasa(env, k, budget, 100 + s)),
-                Box::new(RandomPolicy::new(k, 100 + s)),
+            let conds: Vec<PolicyHost> = vec![
+                conditions::paretobandit(env, &offline, k, budget, 100 + s),
+                conditions::tabula_rasa(env, k, budget, 100 + s),
+                conditions::random(&env.world, k, 100 + s),
             ];
             for (ci, mut pol) in conds.into_iter().enumerate() {
                 let phases = [Phase {
@@ -62,7 +61,7 @@ pub fn run(env: &super::ExpEnv, seeds: u64) -> Exp5Result {
                     view: &view,
                 }];
                 let log = run_phases(
-                    pol.as_mut(),
+                    &mut pol,
                     &env.world,
                     &env.contexts,
                     &env.corpus,

@@ -121,6 +121,7 @@ pub fn run(env: &super::ExpEnv, seeds: u64) -> Exp6Result {
                 cfg.gamma = conditions::GAMMA;
                 let mut r = ParetoRouter::new(cfg);
                 conditions::register_models(&mut r, &env.world, k, Some((&offline, n_eff)));
+                let mut r = conditions::hosted(r);
                 let phases = [Phase {
                     prompts: stream_order(&env.corpus.test, 9000 + s),
                     view: &view,

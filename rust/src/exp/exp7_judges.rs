@@ -9,7 +9,6 @@
 use super::conditions;
 use super::report::{self, Table};
 use super::{run_phases, stream_order, Phase};
-use crate::router::baselines::RandomPolicy;
 use crate::sim::{EnvView, Judge, JUDGES};
 use crate::stats::{kendall_tau_b, kendall_w, mad_paired, mean, spearman};
 use crate::util::json::Json;
@@ -160,7 +159,7 @@ pub fn run(env: &super::ExpEnv, seeds: u64) -> Exp7Result {
                 })
                 .sum::<f64>()
                 / seeds as f64;
-            let mut rnd = RandomPolicy::new(k, 300 + s);
+            let mut rnd = conditions::random(&env.world, k, 300 + s);
             let log = run_phases(&mut rnd, &env.world, &env.contexts, &env.corpus, &phases, j);
             rnd_sum += log
                 .iter()

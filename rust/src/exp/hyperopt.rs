@@ -48,7 +48,7 @@ fn make_router(
     budget: Option<f64>,
     warm: bool,
     seed: u64,
-) -> ParetoRouter {
+) -> crate::router::PolicyHost {
     let mut cfg = match budget {
         Some(b) => RouterConfig::paretobandit(env.d(), b, seed),
         None => RouterConfig::unconstrained(env.d(), seed),
@@ -57,7 +57,7 @@ fn make_router(
     cfg.gamma = gamma;
     let mut r = ParetoRouter::new(cfg);
     register_models(&mut r, &env.world, 3, if warm { Some((offline, n_eff)) } else { None });
-    r
+    super::conditions::hosted(r)
 }
 
 /// Budget-paced Pareto AUC on the val split: trapezoid over normalised

@@ -19,7 +19,7 @@ pub mod report;
 
 pub use env::{ExpEnv, WORLD_SEED};
 
-use crate::router::Policy;
+use crate::router::PolicyHost;
 use crate::sim::{EnvView, Judge, World};
 use crate::util::rng::Rng;
 
@@ -39,11 +39,12 @@ pub struct Phase<'a> {
     pub view: &'a EnvView,
 }
 
-/// Drive a policy through a sequence of phases against the world; the
-/// policy sees contexts, bandit-feedback rewards (judge `judge`) and
-/// realised costs.  Returns the per-step log.
+/// Drive a hosted policy ([`PolicyHost`], any [`crate::router::RoutingPolicy`])
+/// through a sequence of phases against the world; the policy sees
+/// contexts, bandit-feedback rewards (judge `judge`) and realised costs.
+/// Returns the per-step log.
 pub fn run_phases(
-    policy: &mut dyn Policy,
+    policy: &mut PolicyHost,
     world: &World,
     contexts: &[Vec<f64>],
     corpus: &crate::sim::Corpus,
@@ -55,7 +56,7 @@ pub fn run_phases(
         for &pid in &phase.prompts {
             let p = corpus.prompt(pid);
             let x = &contexts[pid as usize];
-            let arm = policy.select(x);
+            let arm = policy.route(x).arm;
             let r = match judge {
                 Judge::R1 => world.reward_view(p, arm, phase.view),
                 j => {
@@ -65,7 +66,7 @@ pub fn run_phases(
                 }
             };
             let c = world.cost_view(p, arm, phase.view);
-            policy.update(arm, x, r, c);
+            policy.feedback(arm, x, r, c);
             log.push(StepLog {
                 prompt: pid,
                 arm,

@@ -4,8 +4,10 @@
 //! ```text
 //! paretobandit serve    [--addr 127.0.0.1:7878] [--budget 6.6e-4]
 //!                       [--workers N] [--merge-ms MS] [--restore SNAP]
+//!                       [--policy NAME[:ARG]] [--shadow NAME[,NAME...]]
 //! paretobandit scenario <spec.toml> [--seeds N] [--budget B]
 //!                       [--addr HOST:PORT]   (wire mode: drive a live engine)
+//! paretobandit policies              (list the routing-policy registry)
 //! paretobandit exp1..exp9 | hyperopt | latency | all  [--seeds 20]
 //! ```
 
@@ -20,11 +22,14 @@ use paretobandit::exp::{
     ExpEnv,
 };
 use paretobandit::pacer::{PacerConfig, SharedPacer};
-use paretobandit::router::{ContextCache, ParetoRouter, Prior, RouterConfig, RouterState};
+use paretobandit::router::{
+    build_policy, BuildCtx, ContextCache, ModelSpec, PolicyHost, BUILDERS,
+};
 use paretobandit::runtime::{default_artifacts_dir, ArtifactMeta, Embedder, Runtime};
-use paretobandit::scenario::{self, RunOptions, ScenarioRun, ScenarioSpec};
+use paretobandit::scenario::{self, snapshot, RunOptions, ScenarioRun, ScenarioSpec};
 use paretobandit::server::{EngineConfig, Featurize, Metrics, ServerState, ShardedEngine};
 use paretobandit::sim::{hash_features, FlashScenario, Judge};
+use paretobandit::util::json::Json;
 
 fn arg_val(args: &[String], key: &str) -> Option<String> {
     args.iter()
@@ -42,6 +47,17 @@ fn main() {
     match cmd {
         "serve" => serve(&args),
         "scenario" => scenario_cmd(&args, seeds),
+        "policies" => {
+            println!("registered routing policies (--policy / --shadow / spec `policy = ...`):");
+            for b in BUILDERS {
+                let arg = if b.arg_hint.is_empty() {
+                    String::new()
+                } else {
+                    format!("  (arg: {})", b.arg_hint)
+                };
+                println!("  {:<14} {}{arg}", b.name, b.summary);
+            }
+        }
         "exp1" => with_env(|env| exp1_stationary::report(&exp1_stationary::run(env, seeds))),
         "exp2" => with_env(|env| exp2_costdrift::report(&exp2_costdrift::run(env, seeds))),
         "exp3" => with_env(|env| exp3_degradation::report(&exp3_degradation::run(env, seeds))),
@@ -96,8 +112,10 @@ fn main() {
             println!();
             println!("usage: paretobandit <command> [--seeds N]");
             println!();
-            println!("  serve      start the routing server (--addr, --budget, --restore)");
+            println!("  serve      start the routing server (--addr, --budget, --restore,");
+            println!("             --policy NAME[:ARG], --shadow NAME[,NAME...])");
             println!("  scenario   run a declarative drift spec (scenarios/*.toml)");
+            println!("  policies   list the registered routing policies");
             println!("  exp1       stationary budget pacing        (Fig. 1)");
             println!("  exp2       cost-drift compliance           (Table 2, Fig. 2)");
             println!("  exp3       silent quality degradation      (Fig. 3)");
@@ -146,11 +164,12 @@ fn scenario_cmd(args: &[String], seeds: u64) {
         seeds.clamp(1, 64)
     };
     println!(
-        "scenario '{}': {} event(s), k={}, budget={:?}, {} seed(s){}",
+        "scenario '{}': {} event(s), k={}, budget={:?}, policy={}, {} seed(s){}",
         spec.name,
         spec.events.len(),
         spec.k,
         budget,
+        spec.policy.as_deref().unwrap_or("paretobandit (warmup)"),
         seeds,
         addr.as_deref()
             .map(|a| format!(", wire mode via {a}"))
@@ -159,10 +178,29 @@ fn scenario_cmd(args: &[String], seeds: u64) {
     if !spec.description.is_empty() {
         println!("  {}", spec.description);
     }
+    if addr.is_some() && spec.policy.is_some() {
+        eprintln!(
+            "scenario: note: `policy` key ignored in wire mode (the engine's --policy rules)"
+        );
+    }
     let env = ExpEnv::load(FlashScenario::GoodCheap);
-    // the warmup-prior fit only feeds the in-process router; wire mode
-    // drives whatever portfolio the live engine already serves
-    let offline = if addr.is_none() {
+    // validate a spec-selected policy before running anything expensive
+    if let (None, Some(pspec)) = (&addr, &spec.policy) {
+        let probe = BuildCtx {
+            d: env.d(),
+            budget,
+            seed: 0,
+            models: &[],
+        };
+        if let Err(e) = build_policy(pspec, &probe) {
+            eprintln!("scenario: policy: {e}");
+            std::process::exit(2);
+        }
+    }
+    // the warmup-prior fit only feeds the in-process default condition;
+    // wire mode drives whatever the live engine already serves, and a
+    // spec-selected policy starts cold on the world's list prices
+    let offline = if addr.is_none() && spec.policy.is_none() {
         conditions::fit_offline(&env, spec.k, Judge::R1)
     } else {
         Vec::new()
@@ -186,7 +224,30 @@ fn scenario_cmd(args: &[String], seeds: u64) {
             };
             scenario::run_scenario_wire(&spec, &env, &env.world, &mut client, &opts)
         } else {
-            let mut router = conditions::paretobandit(&env, &offline, spec.k, budget, opts.seed);
+            let mut router: PolicyHost = match &spec.policy {
+                None => conditions::paretobandit(&env, &offline, spec.k, budget, opts.seed),
+                Some(pspec) => {
+                    let models: Vec<ModelSpec> = (0..spec.k)
+                        .map(|m| {
+                            let ws = &env.world.models[m];
+                            ModelSpec::new(ws.name, ws.price_in_per_m, ws.price_out_per_m)
+                        })
+                        .collect();
+                    build_policy(
+                        pspec,
+                        &BuildCtx {
+                            d: env.d(),
+                            budget,
+                            seed: opts.seed,
+                            models: &models,
+                        },
+                    )
+                    .unwrap_or_else(|e| {
+                        eprintln!("scenario: policy: {e}");
+                        std::process::exit(2);
+                    })
+                }
+            };
             scenario::run_scenario(&spec, &env, &env.world, &mut router, &opts)
         }
         .unwrap_or_else(|e| {
@@ -261,10 +322,41 @@ fn serve(args: &[String]) {
     let merge_ms: u64 = arg_val(args, "--merge-ms")
         .and_then(|s| s.parse().ok())
         .unwrap_or(50);
-    // warm restart: load the snapshot once; every shard replays it below
-    let restore: Option<Arc<RouterState>> = arg_val(args, "--restore").map(|p| {
-        match paretobandit::scenario::snapshot::load(Path::new(&p)) {
-            Ok(st) => Arc::new(st),
+    let policy_spec = arg_val(args, "--policy").unwrap_or_else(|| "paretobandit".to_string());
+    let shadow_specs: Vec<String> = arg_val(args, "--shadow")
+        .map(|s| {
+            s.split(',')
+                .map(|p| p.trim().to_string())
+                .filter(|p| !p.is_empty())
+                .collect()
+        })
+        .unwrap_or_default();
+    let d = serving_d_ctx();
+    // validate every policy spec before spawning threads: a typo answers
+    // with a readable error and a non-zero exit, not a shard panic
+    {
+        let probe = BuildCtx {
+            d,
+            budget: Some(budget),
+            seed: 0,
+            models: &[],
+        };
+        if let Err(e) = build_policy(&policy_spec, &probe) {
+            eprintln!("serve: --policy: {e}");
+            std::process::exit(2);
+        }
+        for s in &shadow_specs {
+            if let Err(e) = build_policy(s, &probe) {
+                eprintln!("serve: --shadow: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    // warm restart: load + validate the snapshot once; every shard
+    // replays the parsed (tag, state) below
+    let restore: Option<Arc<(Option<String>, Json)>> = arg_val(args, "--restore").map(|p| {
+        match snapshot::load_value(Path::new(&p)) {
+            Ok(t) => Arc::new(t),
             Err(e) => {
                 eprintln!("serve: --restore: {e}");
                 std::process::exit(2);
@@ -274,18 +366,53 @@ fn serve(args: &[String]) {
 
     // one global ledger: the $/request ceiling binds across all shards
     let ledger = Arc::new(SharedPacer::new(PacerConfig::new(budget)));
-    let d = serving_d_ctx();
-    if let Some(st) = &restore {
-        if st.d != d {
-            eprintln!("serve: --restore: snapshot d={} but featurizer d={d}", st.d);
+    if let Some(t) = &restore {
+        let key = policy_spec.split(':').next().unwrap_or(&policy_spec);
+        match &t.0 {
+            Some(tag) if tag != key => {
+                eprintln!(
+                    "serve: --restore: snapshot holds policy '{tag}' but --policy is '{key}'"
+                );
+                std::process::exit(2);
+            }
+            // pre-v2 snapshots carry no tag and are by definition
+            // paretobandit state
+            None if key != "paretobandit" => {
+                eprintln!(
+                    "serve: --restore: untagged (pre-v2) snapshots hold paretobandit state, \
+                     which --policy '{key}' cannot restore"
+                );
+                std::process::exit(2);
+            }
+            _ => {}
+        }
+        if let Some(sd) = t.1.get("d").and_then(Json::as_f64) {
+            if sd as usize != d {
+                eprintln!("serve: --restore: snapshot d={sd} but featurizer d={d}");
+                std::process::exit(2);
+            }
+        }
+        // trial-restore on a probe host: a snapshot the policy cannot
+        // actually apply must be a readable startup error here, not a
+        // panic inside a shard-build thread
+        let probe = BuildCtx {
+            d,
+            budget: Some(budget),
+            seed: 0,
+            models: &[],
+        };
+        let mut probe_host = build_policy(&policy_spec, &probe).expect("spec validated above");
+        if let Err(e) = probe_host.restore_state(&t.1) {
+            eprintln!("serve: --restore: {e}");
             std::process::exit(2);
         }
+        let step = t.1.get("t").and_then(Json::as_f64).unwrap_or(0.0);
         println!(
-            "warm restart: {} active arm(s) at step {}{}",
-            st.n_active(),
-            st.t,
-            st.pacer
-                .map(|p| format!(", budget ${} (overrides --budget)", p.budget))
+            "warm restart: policy {key} at step {step}{}",
+            t.1.get("pacer")
+                .and_then(|p| p.get("budget"))
+                .and_then(Json::as_f64)
+                .map(|b| format!(", budget ${b} (overrides --budget)"))
                 .unwrap_or_default()
         );
     }
@@ -295,58 +422,87 @@ fn serve(args: &[String]) {
     if !artifacts_present {
         eprintln!("featurizer: no AOT artifacts; serving with the hashed surrogate (d={d})");
     }
-    let build = move |shard: usize| {
-        let featurizer: Box<dyn Featurize> = if artifacts_present {
-            match pjrt_featurizer(d) {
-                Ok(f) => f,
-                Err(e) => {
-                    eprintln!(
-                        "featurizer: shard {shard}: PJRT unavailable ({e:#}); \
-                         using hashed surrogate"
-                    );
-                    Box::new(move |t: &str| Ok(hash_features(t, d)))
+    let build = {
+        let policy_spec = policy_spec.clone();
+        let shadow_specs = shadow_specs.clone();
+        move |shard: usize| {
+            let featurizer: Box<dyn Featurize> = if artifacts_present {
+                match pjrt_featurizer(d) {
+                    Ok(f) => f,
+                    Err(e) => {
+                        eprintln!(
+                            "featurizer: shard {shard}: PJRT unavailable ({e:#}); \
+                             using hashed surrogate"
+                        );
+                        Box::new(move |t: &str| Ok(hash_features(t, d)))
+                    }
                 }
-            }
-        } else {
-            Box::new(move |t: &str| Ok(hash_features(t, d)))
-        };
-        let mut router =
-            ParetoRouter::new(RouterConfig::paretobandit(d, budget, 42 + shard as u64));
-        router.use_shared_pacer(ledger.clone());
-        match &restore {
-            // warm restart: portfolio + posteriors + pacer duals come
-            // from the snapshot (replayed onto the shared ledger); every
-            // shard past 0 forks the snapshot's RNG stream so replicas
-            // keep distinct exploration noise
-            Some(st) => {
-                router.restore_state(st).expect("restore snapshot");
-                if shard > 0 {
-                    router.fork_rng(shard as u64);
-                }
-            }
-            // cold start: Table-1 portfolio with heuristic priors
-            None => {
-                for (name, pi, po) in [
+            } else {
+                Box::new(move |t: &str| Ok(hash_features(t, d)))
+            };
+            // cold start: Table-1 portfolio with heuristic priors; on a
+            // warm restart the portfolio comes from the snapshot instead
+            let models: Vec<ModelSpec> = if restore.is_some() {
+                Vec::new()
+            } else {
+                [
                     ("llama-3.1-8b", 0.10, 0.10),
                     ("mistral-large", 0.40, 1.60),
                     ("gemini-2.5-pro", 1.25, 10.0),
-                ] {
-                    router.add_model(name, pi, po, Prior::Heuristic { n_eff: 25.0, r0: 0.7 });
+                ]
+                .iter()
+                .map(|&(name, pi, po)| ModelSpec::new(name, pi, po).with_prior(25.0, 0.7))
+                .collect()
+            };
+            let ctx = BuildCtx {
+                d,
+                budget: Some(budget),
+                seed: 42 + shard as u64,
+                models: &models,
+            };
+            let mut host = build_policy(&policy_spec, &ctx).expect("spec validated at startup");
+            host.use_shared_pacer(ledger.clone());
+            if let Some(t) = &restore {
+                // posteriors + pacer duals from the snapshot (replayed
+                // onto the shared ledger); every shard past 0 forks the
+                // snapshot's RNG stream so replicas keep distinct
+                // exploration noise
+                host.restore_state(&t.1).expect("trial-restored at startup");
+                if shard > 0 {
+                    host.fork_rng(shard as u64);
                 }
             }
+            let mut state = ServerState::with_host(
+                host,
+                ContextCache::new(65536),
+                featurizer,
+                Arc::new(Metrics::new()),
+            );
+            for (i, spec) in shadow_specs.iter().enumerate() {
+                state
+                    .add_shadow(spec, d, Some(budget), 4242 + 1000 * (i as u64 + 1) + shard as u64)
+                    .expect("spec validated at startup");
+            }
+            state
         }
-        ServerState::new(
-            router,
-            ContextCache::new(65536),
-            featurizer,
-            Arc::new(Metrics::new()),
-        )
     };
     let cfg = EngineConfig::new(workers).merge_every(Duration::from_millis(merge_ms.max(1)));
-    let engine = ShardedEngine::spawn(&addr, cfg, build).expect("bind");
+    let engine = match ShardedEngine::spawn(&addr, cfg, build) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("serve: bind {addr}: {e}");
+            std::process::exit(1);
+        }
+    };
+    let shadow_note = if shadow_specs.is_empty() {
+        String::new()
+    } else {
+        format!(", shadows [{}]", shadow_specs.join(", "))
+    };
     println!(
-        "paretobandit serving on {} ({workers} shard(s), merge every {merge_ms} ms, \
-         budget ${budget}/req); line-JSON protocol v2 (v1 accepted); op=shutdown to stop",
+        "paretobandit serving on {} (policy {policy_spec}{shadow_note}, {workers} shard(s), \
+         merge every {merge_ms} ms, budget ${budget}/req); line-JSON protocol v2 (v1 \
+         accepted); op=shutdown to stop",
         engine.addr
     );
     while !engine.is_shutdown() {

@@ -1,0 +1,740 @@
+//! Baseline and comparator policies on the v2 [`RoutingPolicy`] API
+//! (paper §4.1 conditions + standard bandit comparators).
+//!
+//! All four are *hosted* policies: the [`super::PolicyHost`] owns the
+//! registry and (when budgeted) the pacer; these keep only per-slot
+//! statistics sized through the lifecycle hooks, and select strictly from
+//! `ctx.eligible` — so a tombstoned slot (`remove_model`) or a slot
+//! filtered by the hard price ceiling can never be routed, including
+//! through remove → re-add churn.
+
+use crate::bandit::{heuristic_prior, thompson::thompson_score, ArmState};
+use crate::linalg::Mat;
+use crate::router::policy::{FeedbackCtx, PolicyDecision, RouteCtx, RoutingPolicy};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+// ----------------------------------------------------------------------
+// Random
+
+/// Uniform-random routing over the eligible slot set.
+pub struct RandomPolicy {
+    rng: Rng,
+}
+
+impl RandomPolicy {
+    pub fn new(seed: u64) -> RandomPolicy {
+        RandomPolicy { rng: Rng::new(seed) }
+    }
+}
+
+impl RoutingPolicy for RandomPolicy {
+    fn name(&self) -> &str {
+        "Random"
+    }
+
+    fn select(&mut self, ctx: &RouteCtx) -> PolicyDecision {
+        PolicyDecision::pick(ctx.eligible[self.rng.below(ctx.eligible.len())])
+    }
+
+    fn update(&mut self, _fb: &FeedbackCtx) {}
+
+    fn export_state(&mut self) -> Json {
+        let mut fields = Vec::new();
+        self.rng.push_json_fields(&mut fields);
+        Json::obj(fields)
+    }
+
+    fn restore_state(&mut self, st: &Json) -> Result<(), String> {
+        self.rng = Rng::from_json(st)?;
+        Ok(())
+    }
+
+    fn fork_rng(&mut self, salt: u64) {
+        self.rng = self.rng.fork(salt);
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+// ----------------------------------------------------------------------
+// Fixed
+
+enum FixedTarget {
+    /// pin a stable slot id
+    Slot(usize),
+    /// pin by registered name: re-resolves on every `add_model`, so a
+    /// remove → re-add churn cycle re-pins onto the fresh slot
+    Name(String),
+}
+
+/// Always route to one pinned model; falls back to the cheapest-ordered
+/// first eligible slot while the pinned model is retired or filtered.
+pub struct FixedPolicy {
+    target: FixedTarget,
+    pinned: Option<usize>,
+    label: String,
+}
+
+impl FixedPolicy {
+    /// Pin a known slot id (the experiment-harness constructor).
+    pub fn new(arm: usize, name: &str) -> FixedPolicy {
+        FixedPolicy {
+            target: FixedTarget::Slot(arm),
+            pinned: Some(arm),
+            label: format!("Fixed({name})"),
+        }
+    }
+
+    /// Pin by model name, resolved through the registration hooks.
+    pub fn by_name(name: &str) -> FixedPolicy {
+        FixedPolicy {
+            target: FixedTarget::Name(name.to_string()),
+            pinned: None,
+            label: format!("Fixed({name})"),
+        }
+    }
+
+    /// Currently pinned slot, if the target is registered and active.
+    pub fn pinned(&self) -> Option<usize> {
+        self.pinned
+    }
+}
+
+impl RoutingPolicy for FixedPolicy {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn select(&mut self, ctx: &RouteCtx) -> PolicyDecision {
+        match self.pinned {
+            Some(p) if ctx.eligible.contains(&p) => PolicyDecision::pick(p),
+            _ => PolicyDecision::pick(ctx.eligible[0]),
+        }
+    }
+
+    fn update(&mut self, _fb: &FeedbackCtx) {}
+
+    fn on_model_added(
+        &mut self,
+        slot: usize,
+        name: &str,
+        _price_in: f64,
+        _price_out: f64,
+        _prior: Option<(f64, f64)>,
+    ) {
+        match &self.target {
+            FixedTarget::Slot(s) if *s == slot => self.pinned = Some(slot),
+            FixedTarget::Name(n) if n == name => self.pinned = Some(slot),
+            _ => {}
+        }
+    }
+
+    fn on_model_removed(&mut self, slot: usize) {
+        if self.pinned == Some(slot) {
+            self.pinned = None;
+        }
+    }
+
+    fn export_state(&mut self) -> Json {
+        let mut fields = Vec::new();
+        if let Some(p) = self.pinned {
+            fields.push(("pinned", Json::Num(p as f64)));
+        }
+        Json::obj(fields)
+    }
+
+    fn restore_state(&mut self, st: &Json) -> Result<(), String> {
+        self.pinned = match st.get("pinned").and_then(Json::as_f64) {
+            Some(x) if x >= 0.0 && x.fract() == 0.0 => Some(x as usize),
+            Some(_) => return Err("state: invalid pinned slot".to_string()),
+            None => None,
+        };
+        Ok(())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+// ----------------------------------------------------------------------
+// ε-greedy
+
+/// ε-greedy over per-slot empirical mean rewards (context-free): with
+/// probability ε route uniformly over the eligible set, otherwise to the
+/// eligible slot with the highest mean.  Untried slots score an
+/// optimistic 1.0 (the reward ceiling) so every arm is sampled early.
+pub struct EpsilonGreedy {
+    eps: f64,
+    counts: Vec<u64>,
+    means: Vec<f64>,
+    rng: Rng,
+}
+
+/// Optimistic initial estimate for a never-tried slot.
+const OPTIMISM: f64 = 1.0;
+
+impl EpsilonGreedy {
+    pub fn new(eps: f64, seed: u64) -> EpsilonGreedy {
+        EpsilonGreedy {
+            eps,
+            counts: Vec::new(),
+            means: Vec::new(),
+            rng: Rng::new(seed),
+        }
+    }
+
+    fn ensure_len(&mut self, n: usize) {
+        if self.counts.len() < n {
+            self.counts.resize(n, 0);
+            self.means.resize(n, 0.0);
+        }
+    }
+
+    /// Empirical mean estimate for a slot (optimistic when untried).
+    fn estimate(&self, slot: usize) -> f64 {
+        match self.counts.get(slot) {
+            Some(0) | None => OPTIMISM,
+            Some(_) => self.means[slot],
+        }
+    }
+}
+
+impl RoutingPolicy for EpsilonGreedy {
+    fn name(&self) -> &str {
+        "EpsilonGreedy"
+    }
+
+    fn select(&mut self, ctx: &RouteCtx) -> PolicyDecision {
+        if self.rng.bernoulli(self.eps) {
+            return PolicyDecision::pick(ctx.eligible[self.rng.below(ctx.eligible.len())]);
+        }
+        let mut best = ctx.eligible[0];
+        let mut best_est = f64::NEG_INFINITY;
+        let mut n_tied = 0usize;
+        for &id in ctx.eligible {
+            let est = self.estimate(id);
+            if est > best_est + 1e-12 {
+                best_est = est;
+                best = id;
+                n_tied = 1;
+            } else if (est - best_est).abs() <= 1e-12 {
+                n_tied += 1;
+                if self.rng.below(n_tied) == 0 {
+                    best = id;
+                }
+            }
+        }
+        PolicyDecision {
+            arm: best,
+            score: best_est,
+            forced: false,
+            n_eligible: None,
+        }
+    }
+
+    fn update(&mut self, fb: &FeedbackCtx) {
+        self.ensure_len(fb.arm + 1);
+        self.counts[fb.arm] += 1;
+        let n = self.counts[fb.arm] as f64;
+        self.means[fb.arm] += (fb.reward - self.means[fb.arm]) / n;
+    }
+
+    fn on_model_added(
+        &mut self,
+        slot: usize,
+        _name: &str,
+        _price_in: f64,
+        _price_out: f64,
+        _prior: Option<(f64, f64)>,
+    ) {
+        self.ensure_len(slot + 1);
+        self.counts[slot] = 0;
+        self.means[slot] = 0.0;
+    }
+
+    fn on_model_removed(&mut self, slot: usize) {
+        // slot retired: stats dropped (ids are never reused)
+        if slot < self.counts.len() {
+            self.counts[slot] = 0;
+            self.means[slot] = 0.0;
+        }
+    }
+
+    fn export_state(&mut self) -> Json {
+        let mut fields = vec![
+            ("eps", Json::Num(self.eps)),
+            (
+                "counts",
+                Json::Arr(self.counts.iter().map(|&c| Json::Num(c as f64)).collect()),
+            ),
+            ("means", Json::arr_f64(&self.means)),
+        ];
+        self.rng.push_json_fields(&mut fields);
+        Json::obj(fields)
+    }
+
+    fn restore_state(&mut self, st: &Json) -> Result<(), String> {
+        let counts = st
+            .get("counts")
+            .and_then(Json::as_arr)
+            .ok_or("state: missing counts")?;
+        let means = st
+            .get("means")
+            .and_then(Json::as_arr)
+            .ok_or("state: missing means")?;
+        if counts.len() != means.len() {
+            return Err("state: counts/means length mismatch".to_string());
+        }
+        self.counts = counts
+            .iter()
+            .map(|c| match c.as_f64() {
+                Some(x) if x >= 0.0 && x.fract() == 0.0 => Ok(x as u64),
+                _ => Err("state: invalid count".to_string()),
+            })
+            .collect::<Result<_, _>>()?;
+        self.means = means.iter().filter_map(Json::as_f64).collect();
+        if self.means.len() != self.counts.len() {
+            return Err("state: invalid mean".to_string());
+        }
+        if let Some(eps) = st.get("eps").and_then(Json::as_f64) {
+            self.eps = eps;
+        }
+        self.rng = Rng::from_json(st)?;
+        Ok(())
+    }
+
+    fn fork_rng(&mut self, salt: u64) {
+        self.rng = self.rng.fork(salt);
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+// ----------------------------------------------------------------------
+// Thompson
+
+/// Contextual Thompson sampling over per-slot LinUCB posteriors (wraps
+/// [`crate::bandit::thompson`]): score = posterior reward draw − (λ_c +
+/// λ_t)·c̃, with geometric forgetting and staleness inflation as in the
+/// main router but posterior sampling in place of the UCB bonus.
+pub struct ThompsonPolicy {
+    d: usize,
+    alpha: f64,
+    gamma: f64,
+    lambda0: f64,
+    lambda_c: f64,
+    v_max: f64,
+    arms: Vec<Option<ArmState>>,
+    rng: Rng,
+    /// latest host step observed (sizes new arms' decay clocks)
+    t_seen: u64,
+}
+
+impl ThompsonPolicy {
+    /// Paper-default knobs (α=0.05 tabula-rasa, γ=0.997, λ_c=0.3).
+    pub fn new(d: usize, seed: u64) -> ThompsonPolicy {
+        ThompsonPolicy {
+            d,
+            alpha: 0.05,
+            gamma: 0.997,
+            lambda0: 0.05,
+            lambda_c: 0.3,
+            v_max: 200.0,
+            arms: Vec::new(),
+            rng: Rng::new(seed),
+            t_seen: 0,
+        }
+    }
+
+    pub fn with_alpha(mut self, alpha: f64) -> ThompsonPolicy {
+        self.alpha = alpha;
+        self
+    }
+
+    /// Direct read access to an arm (tests/diagnostics).
+    pub fn arm(&self, slot: usize) -> Option<&ArmState> {
+        self.arms.get(slot).and_then(|a| a.as_ref())
+    }
+
+    fn ensure_len(&mut self, n: usize) {
+        while self.arms.len() < n {
+            self.arms.push(None);
+        }
+    }
+}
+
+impl RoutingPolicy for ThompsonPolicy {
+    fn name(&self) -> &str {
+        "Thompson"
+    }
+
+    fn select(&mut self, ctx: &RouteCtx) -> PolicyDecision {
+        self.t_seen = self.t_seen.max(ctx.step);
+        let penalty = self.lambda_c + ctx.lambda;
+        let mut best = ctx.eligible[0];
+        let mut best_score = f64::NEG_INFINITY;
+        for &id in ctx.eligible {
+            let Some(Some(arm)) = self.arms.get(id) else {
+                continue;
+            };
+            let infl = arm.staleness_inflation(self.gamma, self.v_max, ctx.step);
+            let q = thompson_score(arm, ctx.x, self.alpha, infl, &mut self.rng);
+            let s = q - penalty * ctx.c_tilde.get(id).copied().unwrap_or(0.0);
+            if s > best_score {
+                best_score = s;
+                best = id;
+            }
+        }
+        if let Some(Some(arm)) = self.arms.get_mut(best) {
+            arm.last_play = ctx.step + 1;
+        }
+        PolicyDecision {
+            arm: best,
+            score: best_score,
+            forced: false,
+            n_eligible: None,
+        }
+    }
+
+    fn update(&mut self, fb: &FeedbackCtx) {
+        self.t_seen = self.t_seen.max(fb.step);
+        if let Some(Some(a)) = self.arms.get_mut(fb.arm) {
+            a.observe(fb.x, fb.reward, self.gamma, fb.step);
+        }
+    }
+
+    fn on_model_added(
+        &mut self,
+        slot: usize,
+        _name: &str,
+        _price_in: f64,
+        _price_out: f64,
+        prior: Option<(f64, f64)>,
+    ) {
+        self.ensure_len(slot + 1);
+        self.arms[slot] = Some(match prior {
+            Some((n_eff, r0)) => heuristic_prior(self.d, n_eff, r0, self.lambda0, self.t_seen),
+            None => ArmState::cold(self.d, self.lambda0, self.t_seen),
+        });
+    }
+
+    fn on_model_removed(&mut self, slot: usize) {
+        if let Some(a) = self.arms.get_mut(slot) {
+            *a = None;
+        }
+    }
+
+    fn export_state(&mut self) -> Json {
+        // refresh to the exact Cholesky inverse first so donor and
+        // restoree continue from identical numerics
+        for arm in self.arms.iter_mut().flatten() {
+            arm.refresh();
+        }
+        let arms = self
+            .arms
+            .iter()
+            .map(|a| match a {
+                None => Json::Null,
+                Some(a) => Json::obj(vec![
+                    ("a", Json::arr_f64(a.a.data())),
+                    ("b", Json::arr_f64(&a.b)),
+                    ("last_upd", Json::Num(a.last_upd as f64)),
+                    ("last_play", Json::Num(a.last_play as f64)),
+                    ("n_obs", Json::Num(a.n_obs as f64)),
+                ]),
+            })
+            .collect();
+        let mut fields = vec![
+            ("d", Json::Num(self.d as f64)),
+            ("t_seen", Json::Num(self.t_seen as f64)),
+            ("arms", Json::Arr(arms)),
+        ];
+        self.rng.push_json_fields(&mut fields);
+        Json::obj(fields)
+    }
+
+    fn restore_state(&mut self, st: &Json) -> Result<(), String> {
+        let d = match st.get("d").and_then(Json::as_f64) {
+            Some(x) if x == self.d as f64 => self.d,
+            Some(x) => {
+                return Err(format!("state: snapshot d={x} but policy d={}", self.d))
+            }
+            None => return Err("state: missing d".to_string()),
+        };
+        let get_u = |o: &Json, k: &str| -> Result<u64, String> {
+            match o.get(k).and_then(Json::as_f64) {
+                Some(x) if x >= 0.0 && x.fract() == 0.0 => Ok(x as u64),
+                _ => Err(format!("state: missing/invalid {k}")),
+            }
+        };
+        let arr = st
+            .get("arms")
+            .and_then(Json::as_arr)
+            .ok_or("state: missing arms")?;
+        let mut arms = Vec::with_capacity(arr.len());
+        for s in arr {
+            if matches!(s, Json::Null) {
+                arms.push(None);
+                continue;
+            }
+            let nums = |k: &str| -> Result<Vec<f64>, String> {
+                Ok(s.get(k)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| format!("state: arm missing {k}"))?
+                    .iter()
+                    .filter_map(Json::as_f64)
+                    .collect())
+            };
+            let a = nums("a")?;
+            let b = nums("b")?;
+            if a.len() != d * d || b.len() != d {
+                return Err("state: arm stats have the wrong shape".to_string());
+            }
+            let t = get_u(s, "last_upd")?;
+            let mut arm = ArmState::from_stats(Mat::from_rows(d, a), b, t)
+                .ok_or("state: arm statistics are not SPD")?;
+            arm.last_upd = t;
+            arm.last_play = get_u(s, "last_play")?;
+            arm.n_obs = get_u(s, "n_obs")?;
+            arms.push(Some(arm));
+        }
+        self.arms = arms;
+        self.t_seen = get_u(st, "t_seen")?;
+        self.rng = Rng::from_json(st)?;
+        Ok(())
+    }
+
+    fn export_arms(&self) -> Option<Vec<Option<ArmState>>> {
+        Some(self.arms.clone())
+    }
+
+    fn adopt_arms(&mut self, global: &[Option<ArmState>]) {
+        // same clock policy as ParetoRouter::adopt_arms: rebase onto the
+        // local "now" only when the global posterior gained observations
+        let t = self.t_seen;
+        for (slot, incoming) in self.arms.iter_mut().zip(global.iter()) {
+            if let (Some(local), Some(g)) = (slot.as_mut(), incoming.as_ref()) {
+                let mut adopted = g.clone();
+                if adopted.n_obs > local.n_obs {
+                    adopted.rebase(t);
+                } else {
+                    adopted.last_upd = local.last_upd;
+                    adopted.last_play = local.last_play;
+                }
+                adopted.reset_data();
+                *local = adopted;
+            }
+        }
+    }
+
+    fn fork_rng(&mut self, salt: u64) {
+        self.rng = self.rng.fork(salt);
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx<'a>(
+        x: &'a [f64],
+        eligible: &'a [usize],
+        c_tilde: &'a [f64],
+        step: u64,
+    ) -> RouteCtx<'a> {
+        RouteCtx {
+            x,
+            eligible,
+            blended: c_tilde, // magnitude irrelevant for these tests
+            c_tilde,
+            lambda: 0.0,
+            step,
+        }
+    }
+
+    #[test]
+    fn random_covers_all_eligible_arms_only() {
+        let mut p = RandomPolicy::new(1);
+        let eligible = [0usize, 2, 3];
+        let prices = [0.1, 0.2, 0.3, 0.4];
+        let mut seen = [false; 4];
+        for i in 0..200 {
+            let d = p.select(&ctx(&[0.0], &eligible, &prices, i));
+            assert!(eligible.contains(&d.arm));
+            seen[d.arm] = true;
+        }
+        assert!(seen[0] && !seen[1] && seen[2] && seen[3]);
+    }
+
+    #[test]
+    fn fixed_pins_and_falls_back_when_filtered() {
+        let mut p = FixedPolicy::new(2, "gemini");
+        let prices = [0.1, 0.2, 0.3];
+        let d = p.select(&ctx(&[1.0], &[0, 1, 2], &prices, 0));
+        assert_eq!(d.arm, 2);
+        assert_eq!(p.name(), "Fixed(gemini)");
+        // pinned slot filtered out: first eligible wins
+        let d = p.select(&ctx(&[1.0], &[0, 1], &prices, 1));
+        assert_eq!(d.arm, 0);
+        // pinned slot removed entirely
+        p.on_model_removed(2);
+        let d = p.select(&ctx(&[1.0], &[0, 1, 2], &prices, 2));
+        assert_eq!(d.arm, 0);
+    }
+
+    #[test]
+    fn fixed_by_name_repins_after_churn() {
+        let mut p = FixedPolicy::by_name("mistral");
+        p.on_model_added(0, "llama", 0.1, 0.1, None);
+        p.on_model_added(1, "mistral", 0.4, 1.6, None);
+        assert_eq!(p.pinned(), Some(1));
+        p.on_model_removed(1);
+        assert_eq!(p.pinned(), None);
+        // re-add lands on a fresh slot; the name target follows it
+        p.on_model_added(2, "mistral", 0.4, 1.6, None);
+        assert_eq!(p.pinned(), Some(2));
+        let prices = [0.1, 0.0, 0.4];
+        let d = p.select(&ctx(&[1.0], &[0, 2], &prices, 0));
+        assert_eq!(d.arm, 2);
+    }
+
+    #[test]
+    fn epsilon_greedy_exploits_the_best_mean() {
+        let mut p = EpsilonGreedy::new(0.05, 3);
+        for slot in 0..3 {
+            p.on_model_added(slot, "m", 0.1, 0.1, None);
+        }
+        let prices = [0.1, 0.2, 0.3];
+        let eligible = [0usize, 1, 2];
+        // teach it: slot 1 is clearly best
+        for i in 0..40 {
+            for (slot, r) in [(0usize, 0.3), (1, 0.9), (2, 0.5)] {
+                p.update(&FeedbackCtx {
+                    arm: slot,
+                    x: &[1.0],
+                    reward: r,
+                    cost: 1e-4,
+                    step: i,
+                });
+            }
+        }
+        let mut counts = [0usize; 3];
+        for i in 0..400 {
+            let d = p.select(&ctx(&[1.0], &eligible, &prices, i));
+            counts[d.arm] += 1;
+        }
+        assert!(counts[1] > 300, "greedy arm underplayed: {counts:?}");
+        assert!(counts[0] > 0 && counts[2] > 0, "ε must explore: {counts:?}");
+    }
+
+    #[test]
+    fn epsilon_export_restore_is_bit_identical() {
+        let mut a = EpsilonGreedy::new(0.2, 9);
+        let mut b = EpsilonGreedy::new(0.2, 1234); // different stream on purpose
+        for slot in 0..3 {
+            a.on_model_added(slot, "m", 0.1, 0.1, None);
+            b.on_model_added(slot, "m", 0.1, 0.1, None);
+        }
+        let prices = [0.1, 0.2, 0.3];
+        let eligible = [0usize, 1, 2];
+        for i in 0..50 {
+            let d = a.select(&ctx(&[1.0], &eligible, &prices, i));
+            a.update(&FeedbackCtx {
+                arm: d.arm,
+                x: &[1.0],
+                reward: 0.5 + 0.01 * (d.arm as f64),
+                cost: 1e-4,
+                step: i,
+            });
+        }
+        b.restore_state(&a.export_state()).unwrap();
+        for i in 50..120 {
+            let da = a.select(&ctx(&[1.0], &eligible, &prices, i));
+            let db = b.select(&ctx(&[1.0], &eligible, &prices, i));
+            assert_eq!(da.arm, db.arm, "step {i} diverged");
+        }
+    }
+
+    #[test]
+    fn thompson_learns_the_best_arm() {
+        const D: usize = 4;
+        let mut p = ThompsonPolicy::new(D, 5);
+        for slot in 0..3 {
+            p.on_model_added(slot, "m", 0.1, 0.1, None);
+        }
+        let c_tilde = [0.0, 0.0, 0.0];
+        let eligible = [0usize, 1, 2];
+        let means = [0.3, 0.9, 0.5];
+        let mut rng = Rng::new(6);
+        let mut counts = [0usize; 3];
+        for i in 0..1200u64 {
+            let mut x: Vec<f64> = (0..D).map(|_| rng.normal()).collect();
+            x[D - 1] = 1.0;
+            let d = p.select(&ctx(&x, &eligible, &c_tilde, i));
+            counts[d.arm] += 1;
+            let r = (means[d.arm] + 0.03 * rng.normal()).clamp(0.0, 1.0);
+            p.update(&FeedbackCtx {
+                arm: d.arm,
+                x: &x,
+                reward: r,
+                cost: 1e-4,
+                step: i,
+            });
+        }
+        assert!(counts[1] > 700, "best arm underplayed: {counts:?}");
+    }
+
+    #[test]
+    fn thompson_export_restore_is_bit_identical() {
+        const D: usize = 3;
+        let mut a = ThompsonPolicy::new(D, 11);
+        for slot in 0..2 {
+            a.on_model_added(slot, "m", 0.1, 0.1, None);
+        }
+        let c_tilde = [0.0, 0.3];
+        let eligible = [0usize, 1];
+        let mut rng = Rng::new(12);
+        for i in 0..40u64 {
+            let x = vec![rng.normal(), rng.normal(), 1.0];
+            let d = a.select(&ctx(&x, &eligible, &c_tilde, i));
+            a.update(&FeedbackCtx {
+                arm: d.arm,
+                x: &x,
+                reward: 0.7,
+                cost: 1e-4,
+                step: i,
+            });
+        }
+        let snap = a.export_state();
+        let mut b = ThompsonPolicy::new(D, 999);
+        b.restore_state(&snap).unwrap();
+        for i in 40..90u64 {
+            let x = vec![rng.normal(), rng.normal(), 1.0];
+            let da = a.select(&ctx(&x, &eligible, &c_tilde, i));
+            let db = b.select(&ctx(&x, &eligible, &c_tilde, i));
+            assert_eq!(da.arm, db.arm, "step {i} diverged");
+        }
+    }
+}

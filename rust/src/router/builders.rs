@@ -1,0 +1,276 @@
+//! The policy-builder registry: one string → hosted policy, shared by
+//! `serve --policy <name>`, `serve --shadow <a,b>`, the scenario spec's
+//! `policy = "..."` key and the conformance suite.
+//!
+//! A spec string is `name` or `name:arg` (e.g. `epsilon:0.2`,
+//! `fixed:gemini-2.5-pro`, `qualityfloor:0.88`).  [`build_policy`] looks
+//! the name up, builds the policy with the [`BuildCtx`] knobs, wraps it
+//! in a [`PolicyHost`] tagged with the registry key, and registers the
+//! initial portfolio through the lifecycle hooks.
+
+use crate::router::baselines::{EpsilonGreedy, FixedPolicy, RandomPolicy, ThompsonPolicy};
+use crate::router::config::RouterConfig;
+use crate::router::floor::{FloorConfig, QualityFloorRouter};
+use crate::router::host::PolicyHost;
+use crate::router::pareto::ParetoRouter;
+use crate::router::policy::RoutingPolicy;
+
+/// Everything a builder may condition on.
+pub struct BuildCtx<'a> {
+    /// context dimensionality
+    pub d: usize,
+    /// $/request ceiling; `None` = unbudgeted
+    pub budget: Option<f64>,
+    /// RNG seed
+    pub seed: u64,
+    /// initial portfolio, registered through the host after build
+    pub models: &'a [ModelSpec],
+}
+
+/// One initial-portfolio entry.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub price_in: f64,
+    pub price_out: f64,
+    /// optional `(n_eff, r0)` heuristic prior
+    pub prior: Option<(f64, f64)>,
+}
+
+impl ModelSpec {
+    pub fn new(name: &str, price_in: f64, price_out: f64) -> ModelSpec {
+        ModelSpec {
+            name: name.to_string(),
+            price_in,
+            price_out,
+            prior: None,
+        }
+    }
+
+    pub fn with_prior(mut self, n_eff: f64, r0: f64) -> ModelSpec {
+        self.prior = Some((n_eff, r0));
+        self
+    }
+}
+
+type BuildFn = fn(&BuildCtx, Option<&str>) -> Result<Box<dyn RoutingPolicy>, String>;
+
+/// One registered builder.
+pub struct PolicyBuilder {
+    /// registry key (the `--policy` / spec string before `:`)
+    pub name: &'static str,
+    /// one-line description (docs/CLI help)
+    pub summary: &'static str,
+    /// `arg` syntax hint, empty when the builder takes none
+    pub arg_hint: &'static str,
+    build: BuildFn,
+}
+
+/// The built-in builder table.
+pub const BUILDERS: &[PolicyBuilder] = &[
+    PolicyBuilder {
+        name: "paretobandit",
+        summary: "the paper's full system: LinUCB + forgetting + budget pacer (self-hosted)",
+        arg_hint: "",
+        build: build_paretobandit,
+    },
+    PolicyBuilder {
+        name: "qualityfloor",
+        summary: "minimize cost subject to a reward floor tau (self-hosted, inverted pacer)",
+        arg_hint: "tau in (0,1), default 0.9",
+        build: build_qualityfloor,
+    },
+    PolicyBuilder {
+        name: "random",
+        summary: "uniform-random over the eligible set",
+        arg_hint: "",
+        build: build_random,
+    },
+    PolicyBuilder {
+        name: "fixed",
+        summary: "always one model (by name), first eligible while it is retired",
+        arg_hint: "model name, default: first registered model",
+        build: build_fixed,
+    },
+    PolicyBuilder {
+        name: "epsilon",
+        summary: "epsilon-greedy over per-slot mean rewards",
+        arg_hint: "epsilon in [0,1), default 0.1",
+        build: build_epsilon,
+    },
+    PolicyBuilder {
+        name: "thompson",
+        summary: "contextual Thompson sampling over LinUCB posteriors",
+        arg_hint: "alpha override, default 0.05",
+        build: build_thompson,
+    },
+];
+
+/// Registered builder names (CLI help, conformance sweep).
+pub fn policy_names() -> Vec<&'static str> {
+    BUILDERS.iter().map(|b| b.name).collect()
+}
+
+fn no_arg(name: &str, arg: Option<&str>) -> Result<(), String> {
+    match arg {
+        None => Ok(()),
+        Some(a) => Err(format!("policy '{name}' takes no argument (got ':{a}')")),
+    }
+}
+
+fn build_paretobandit(
+    ctx: &BuildCtx,
+    arg: Option<&str>,
+) -> Result<Box<dyn RoutingPolicy>, String> {
+    no_arg("paretobandit", arg)?;
+    let cfg = match ctx.budget {
+        Some(b) => RouterConfig::paretobandit(ctx.d, b, ctx.seed),
+        None => RouterConfig::unconstrained(ctx.d, ctx.seed),
+    };
+    Ok(Box::new(ParetoRouter::new(cfg)))
+}
+
+fn build_qualityfloor(
+    ctx: &BuildCtx,
+    arg: Option<&str>,
+) -> Result<Box<dyn RoutingPolicy>, String> {
+    let tau = match arg {
+        None => 0.9,
+        Some(a) => match a.parse::<f64>() {
+            Ok(t) if t > 0.0 && t < 1.0 => t,
+            _ => return Err(format!("qualityfloor: tau must be in (0,1), got '{a}'")),
+        },
+    };
+    Ok(Box::new(QualityFloorRouter::new(FloorConfig::new(
+        ctx.d, tau, ctx.seed,
+    ))))
+}
+
+fn build_random(ctx: &BuildCtx, arg: Option<&str>) -> Result<Box<dyn RoutingPolicy>, String> {
+    no_arg("random", arg)?;
+    Ok(Box::new(RandomPolicy::new(ctx.seed)))
+}
+
+fn build_fixed(ctx: &BuildCtx, arg: Option<&str>) -> Result<Box<dyn RoutingPolicy>, String> {
+    Ok(match arg {
+        Some(name) => Box::new(FixedPolicy::by_name(name)),
+        None => match ctx.models.first() {
+            Some(m) => Box::new(FixedPolicy::by_name(&m.name)),
+            None => Box::new(FixedPolicy::new(0, "slot0")),
+        },
+    })
+}
+
+fn build_epsilon(ctx: &BuildCtx, arg: Option<&str>) -> Result<Box<dyn RoutingPolicy>, String> {
+    let eps = match arg {
+        None => 0.1,
+        Some(a) => match a.parse::<f64>() {
+            Ok(e) if (0.0..1.0).contains(&e) => e,
+            _ => return Err(format!("epsilon: epsilon must be in [0,1), got '{a}'")),
+        },
+    };
+    Ok(Box::new(EpsilonGreedy::new(eps, ctx.seed)))
+}
+
+fn build_thompson(ctx: &BuildCtx, arg: Option<&str>) -> Result<Box<dyn RoutingPolicy>, String> {
+    let p = ThompsonPolicy::new(ctx.d, ctx.seed);
+    Ok(match arg {
+        None => Box::new(p),
+        Some(a) => match a.parse::<f64>() {
+            Ok(alpha) if alpha > 0.0 => Box::new(p.with_alpha(alpha)),
+            _ => return Err(format!("thompson: alpha must be positive, got '{a}'")),
+        },
+    })
+}
+
+/// Build a hosted policy from a `name[:arg]` spec string: the policy, a
+/// host tagged with the registry key, and the initial portfolio
+/// registered through the lifecycle hooks.
+pub fn build_policy(spec: &str, ctx: &BuildCtx) -> Result<PolicyHost, String> {
+    let (key, arg) = match spec.split_once(':') {
+        Some((k, a)) => (k, Some(a)),
+        None => (spec, None),
+    };
+    let builder = BUILDERS
+        .iter()
+        .find(|b| b.name == key)
+        .ok_or_else(|| {
+            format!(
+                "unknown policy '{key}' (known: {})",
+                policy_names().join(", ")
+            )
+        })?;
+    let policy = (builder.build)(ctx, arg)?;
+    let mut host = PolicyHost::new(policy, ctx.budget).with_kind(builder.name);
+    for m in ctx.models {
+        host.add_model(&m.name, m.price_in, m.price_out, m.prior);
+    }
+    Ok(host)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table1() -> Vec<ModelSpec> {
+        vec![
+            ModelSpec::new("llama-3.1-8b", 0.10, 0.10),
+            ModelSpec::new("mistral-large", 0.40, 1.60),
+            ModelSpec::new("gemini-2.5-pro", 1.25, 10.0),
+        ]
+    }
+
+    fn ctx(models: &[ModelSpec]) -> BuildCtx {
+        BuildCtx {
+            d: 6,
+            budget: Some(6.6e-4),
+            seed: 42,
+            models,
+        }
+    }
+
+    #[test]
+    fn every_builtin_builds_and_routes() {
+        let models = table1();
+        for name in policy_names() {
+            let mut host = build_policy(name, &ctx(&models)).unwrap();
+            assert_eq!(host.kind(), name);
+            assert_eq!(host.registry().n_active(), 3, "{name}");
+            let x = vec![0.1, -0.2, 0.3, 0.0, 0.5, 1.0];
+            for _ in 0..20 {
+                let d = host.route(&x);
+                assert!(host.registry().is_active(d.arm), "{name} picked a retired slot");
+                host.feedback(d.arm, &x, 0.7, 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn args_parse_and_validate() {
+        let models = table1();
+        let c = ctx(&models);
+        assert!(build_policy("epsilon:0.3", &c).is_ok());
+        assert!(build_policy("epsilon:1.5", &c).is_err());
+        assert!(build_policy("qualityfloor:0.88", &c).is_ok());
+        assert!(build_policy("qualityfloor:2", &c).is_err());
+        assert!(build_policy("fixed:mistral-large", &c).is_ok());
+        assert!(build_policy("thompson:0.2", &c).is_ok());
+        assert!(build_policy("thompson:-1", &c).is_err());
+        assert!(build_policy("paretobandit:x", &c).is_err());
+        let e = build_policy("nope", &c).unwrap_err();
+        assert!(e.contains("unknown policy"), "{e}");
+        assert!(e.contains("paretobandit"), "error must list known names: {e}");
+    }
+
+    #[test]
+    fn fixed_by_name_routes_its_model() {
+        let models = table1();
+        let mut host = build_policy("fixed:mistral-large", &ctx(&models)).unwrap();
+        let x = vec![0.0; 6];
+        for _ in 0..10 {
+            let d = host.route(&x);
+            assert_eq!(d.arm, 1);
+            host.feedback(d.arm, &x, 0.8, 1e-4);
+        }
+    }
+}

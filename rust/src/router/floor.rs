@@ -14,7 +14,11 @@
 //! saturated.
 
 use crate::bandit::{ArmState, OfflineStats};
-use crate::router::{Policy, Prior, Registry};
+use crate::linalg::Mat;
+use crate::router::policy::{FeedbackCtx, PolicyDecision, RouteCtx, RoutingPolicy};
+use crate::router::state::{ArmSnap, PacerSnap, RouterState, SlotSnap};
+use crate::router::{Prior, Registry};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// QualityFloorRouter configuration.
@@ -115,6 +119,112 @@ impl QualityFloorRouter {
         self.rbar
     }
 
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Deregister a model (slot retired; stats dropped).
+    pub fn delete_model(&mut self, id: usize) -> bool {
+        if self.registry.remove(id) {
+            self.arms[id] = None;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Operator list-price update.
+    pub fn reprice(&mut self, id: usize, price_in_per_m: f64, price_out_per_m: f64) -> bool {
+        self.registry.reprice(id, price_in_per_m, price_out_per_m)
+    }
+
+    /// Capture the complete learned state.  Reuses the [`RouterState`]
+    /// codec with the dual-controller state mapped onto the pacer slot:
+    /// `budget` holds the floor τ, `lambda` the quality dual μ and `cbar`
+    /// the reward EMA r̄.
+    pub fn export_state(&mut self) -> RouterState {
+        for arm in self.arms.iter_mut().flatten() {
+            arm.refresh();
+        }
+        let slots = (0..self.arms.len())
+            .map(|id| match (self.registry.get(id), self.arms[id].as_ref()) {
+                (Some(e), Some(a)) => Some(SlotSnap {
+                    name: e.name.clone(),
+                    price_in: e.price_in_per_m,
+                    price_out: e.price_out_per_m,
+                    burnin_left: 0,
+                    arm: ArmSnap {
+                        a: a.a.data().to_vec(),
+                        b: a.b.clone(),
+                        last_upd: a.last_upd,
+                        last_play: a.last_play,
+                        n_obs: a.n_obs,
+                    },
+                }),
+                _ => None,
+            })
+            .collect();
+        RouterState {
+            d: self.cfg.d,
+            t: self.t,
+            slots,
+            pacer: Some(PacerSnap {
+                budget: self.cfg.tau,
+                lambda: self.mu,
+                cbar: self.rbar,
+            }),
+            rng: self.rng.dump_state(),
+        }
+    }
+
+    /// Replace learned state with a captured one (see
+    /// [`QualityFloorRouter::export_state`] for the field mapping).
+    pub fn restore_state(&mut self, st: &RouterState) -> Result<(), String> {
+        if st.d != self.cfg.d {
+            return Err(format!(
+                "restore: snapshot d={} but router d={}",
+                st.d, self.cfg.d
+            ));
+        }
+        let mut slots = Vec::with_capacity(st.slots.len());
+        let mut arms = Vec::with_capacity(st.slots.len());
+        for snap in &st.slots {
+            match snap {
+                None => {
+                    slots.push(None);
+                    arms.push(None);
+                }
+                Some(s) => {
+                    let a = Mat::from_rows(st.d, s.arm.a.clone());
+                    let mut arm = ArmState::from_stats(a, s.arm.b.clone(), st.t)
+                        .ok_or_else(|| {
+                            format!("restore: arm '{}' statistics are not SPD", s.name)
+                        })?;
+                    arm.last_upd = s.arm.last_upd;
+                    arm.last_play = s.arm.last_play;
+                    arm.n_obs = s.arm.n_obs;
+                    slots.push(Some((s.name.clone(), s.price_in, s.price_out)));
+                    arms.push(Some(arm));
+                }
+            }
+        }
+        self.registry = Registry::from_slots(slots);
+        self.arms = arms;
+        self.t = st.t;
+        if let Some(ps) = &st.pacer {
+            self.mu = ps.lambda.clamp(0.0, self.cfg.mu_cap);
+            self.rbar = ps.cbar;
+        }
+        self.rng = Rng::from_state(st.rng.0, st.rng.1);
+        Ok(())
+    }
+
+    /// Decorrelate the tiebreak stream after a restore (see
+    /// [`super::ParetoRouter::fork_rng`]).
+    pub fn fork_rng(&mut self, salt: u64) {
+        self.rng = self.rng.fork(salt);
+    }
+
     /// Select: maximize −c̃ + μ·(quality UCB).
     pub fn route(&mut self, x: &[f64]) -> usize {
         let mut best = usize::MAX;
@@ -158,18 +268,81 @@ impl QualityFloorRouter {
     }
 }
 
-impl Policy for QualityFloorRouter {
-    fn select(&mut self, x: &[f64]) -> usize {
-        self.route(x)
-    }
-    fn update(&mut self, arm: usize, x: &[f64], reward: f64, cost: f64) {
-        self.feedback(arm, x, reward, cost);
-    }
+/// Policy API v2 adapter: QualityFloor is *self-hosted* — it keeps its
+/// own registry mirror (fed by the lifecycle hooks) and its own dual
+/// controller, so decisions through the trait are bit-identical to the
+/// standalone [`QualityFloorRouter::route`] path.
+impl RoutingPolicy for QualityFloorRouter {
     fn name(&self) -> &str {
         "QualityFloor"
     }
+
+    fn select(&mut self, ctx: &RouteCtx) -> PolicyDecision {
+        PolicyDecision::pick(self.route(ctx.x))
+    }
+
+    fn update(&mut self, fb: &FeedbackCtx) {
+        self.feedback(fb.arm, fb.x, fb.reward, fb.cost);
+    }
+
     fn lambda(&self) -> f64 {
         self.mu
+    }
+
+    fn self_hosted(&self) -> bool {
+        true
+    }
+
+    fn step_clock(&self) -> Option<u64> {
+        Some(self.t)
+    }
+
+    fn portfolio(&self) -> Vec<Option<(String, f64, f64)>> {
+        self.registry.slot_entries()
+    }
+
+    fn on_model_added(
+        &mut self,
+        slot: usize,
+        name: &str,
+        price_in: f64,
+        price_out: f64,
+        prior: Option<(f64, f64)>,
+    ) {
+        let prior = match prior {
+            Some((n_eff, r0)) => Prior::Heuristic { n_eff, r0 },
+            None => Prior::Cold,
+        };
+        let id = QualityFloorRouter::add_model(self, name, price_in, price_out, prior);
+        debug_assert_eq!(id, slot, "host/policy slot misalignment");
+    }
+
+    fn on_model_removed(&mut self, slot: usize) {
+        self.delete_model(slot);
+    }
+
+    fn on_model_repriced(&mut self, slot: usize, price_in: f64, price_out: f64) {
+        self.reprice(slot, price_in, price_out);
+    }
+
+    fn export_state(&mut self) -> Json {
+        QualityFloorRouter::export_state(self).to_json()
+    }
+
+    fn restore_state(&mut self, st: &Json) -> Result<(), String> {
+        let state = RouterState::from_json(st)?;
+        QualityFloorRouter::restore_state(self, &state)
+    }
+
+    fn fork_rng(&mut self, salt: u64) {
+        QualityFloorRouter::fork_rng(self, salt);
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
     }
 }
 

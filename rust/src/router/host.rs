@@ -1,0 +1,583 @@
+//! [`PolicyHost`] — the one hosting layer every policy runs inside.
+//!
+//! The experiment harness ([`crate::exp::run_phases`]), the scenario
+//! executor ([`crate::scenario::run_scenario`]) and every server shard
+//! ([`crate::server::ServerState`]) all drive routing through this type,
+//! so a policy implemented once against [`super::RoutingPolicy`] runs in
+//! all three without modification.
+//!
+//! The host owns what policies share: the slot-addressed [`Registry`]
+//! (names, declared prices, tombstones), the budget pacer and its hard
+//! price ceiling, the step clock, and snapshot plumbing.  For
+//! *self-hosted* policies (ParetoBandit, QualityFloor) the host mirrors
+//! admin traffic into the policy through the lifecycle hooks and leaves
+//! pacing/filtering to the policy — which keeps their decisions
+//! bit-identical to the standalone pre-v2 API (asserted by the golden
+//! tests in `tests/policy_conformance.rs`).
+
+use std::sync::Arc;
+
+use crate::bandit::ArmState;
+use crate::pacer::{BudgetPacer, PacerConfig, PacerHandle, SharedPacer};
+use crate::router::policy::{FeedbackCtx, RouteCtx, RoutingPolicy};
+use crate::router::{FeedbackEvent, Registry, RouteDecision};
+use crate::util::json::Json;
+
+/// A routing policy plus the registry/pacer/clock it runs against.
+pub struct PolicyHost {
+    policy: Box<dyn RoutingPolicy>,
+    /// builder-registry key this host was built from (snapshot tag)
+    kind: String,
+    registry: Registry,
+    /// host-owned pacer; `None` for self-hosted policies (they pace
+    /// themselves) and for unbudgeted hosts
+    pacer: Option<PacerHandle>,
+    /// step clock: routing decisions taken
+    t: u64,
+    // slot-aligned declared-price mirrors (0.0 on retired slots)
+    blended: Vec<f64>,
+    c_tilde: Vec<f64>,
+    // scratch: eligible slots for the current decision
+    eligible_buf: Vec<usize>,
+}
+
+impl PolicyHost {
+    /// Wrap a policy.  `budget` creates a host-owned pacer for hosted
+    /// policies (self-hosted policies configure their own and the value
+    /// is ignored).  Any portfolio the policy was pre-registered with
+    /// ([`RoutingPolicy::portfolio`]) is adopted slot-for-slot.
+    pub fn new(policy: Box<dyn RoutingPolicy>, budget: Option<f64>) -> PolicyHost {
+        let pacer = match (policy.self_hosted(), budget) {
+            (false, Some(b)) => Some(PacerHandle::Local(BudgetPacer::new(PacerConfig::new(b)))),
+            _ => None,
+        };
+        let kind = slug(policy.name());
+        let registry = Registry::from_slots(policy.portfolio());
+        // adopt a pre-driven self-hosted policy's clock (e.g. a router
+        // restored from a snapshot before being wrapped)
+        let t = policy.step_clock().unwrap_or(0);
+        let mut host = PolicyHost {
+            policy,
+            kind,
+            registry,
+            pacer,
+            t,
+            blended: Vec::new(),
+            c_tilde: Vec::new(),
+            eligible_buf: Vec::new(),
+        };
+        host.refresh_prices();
+        host
+    }
+
+    /// Override the builder-registry key recorded in snapshots.
+    pub fn with_kind(mut self, kind: &str) -> PolicyHost {
+        self.kind = kind.to_string();
+        self
+    }
+
+    /// Rebuild the slot-aligned declared-price mirrors from the registry.
+    fn refresh_prices(&mut self) {
+        let n = self.registry.n_slots();
+        self.blended.clear();
+        self.c_tilde.clear();
+        for id in 0..n {
+            match self.registry.get(id) {
+                Some(e) => {
+                    self.blended.push(e.blended_per_1k);
+                    self.c_tilde.push(e.c_tilde);
+                }
+                None => {
+                    self.blended.push(0.0);
+                    self.c_tilde.push(0.0);
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // introspection
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Routing decisions taken (the host step clock).
+    pub fn step(&self) -> u64 {
+        self.t
+    }
+
+    /// The hosted policy's display name.
+    pub fn name(&self) -> &str {
+        self.policy.name()
+    }
+
+    /// The builder-registry key (snapshot/restore compatibility tag).
+    pub fn kind(&self) -> &str {
+        &self.kind
+    }
+
+    /// Current dual variable (self-hosted policies report their own).
+    pub fn lambda(&self) -> f64 {
+        if self.policy.self_hosted() {
+            self.policy.lambda()
+        } else {
+            self.pacer.as_ref().map_or(0.0, |p| p.lambda())
+        }
+    }
+
+    /// Downcast the hosted policy (tests, restore validation).
+    pub fn policy_as<T: 'static>(&self) -> Option<&T> {
+        self.policy.as_any().downcast_ref::<T>()
+    }
+
+    pub fn policy_as_mut<T: 'static>(&mut self) -> Option<&mut T> {
+        self.policy.as_any_mut().downcast_mut::<T>()
+    }
+
+    // ------------------------------------------------------------------
+    // portfolio admin (host registry + policy hooks, kept slot-aligned)
+
+    /// Register a model (unchecked: duplicate active names allowed, as in
+    /// simulation harnesses).  Returns the stable slot id.
+    pub fn add_model(
+        &mut self,
+        name: &str,
+        price_in: f64,
+        price_out: f64,
+        prior: Option<(f64, f64)>,
+    ) -> usize {
+        let slot = self.registry.add(name, price_in, price_out);
+        self.refresh_prices();
+        self.policy
+            .on_model_added(slot, name, price_in, price_out, prior);
+        slot
+    }
+
+    /// Checked registration for the wire API: rejects an active duplicate
+    /// name so name addressing stays unambiguous.
+    pub fn try_add_model(
+        &mut self,
+        name: &str,
+        price_in: f64,
+        price_out: f64,
+        prior: Option<(f64, f64)>,
+    ) -> Option<usize> {
+        if self.registry.find(name).is_some() {
+            return None;
+        }
+        Some(self.add_model(name, price_in, price_out, prior))
+    }
+
+    /// Retire a model; its slot id is tombstoned, never reused.
+    pub fn delete_model(&mut self, slot: usize) -> bool {
+        if self.registry.remove(slot) {
+            self.refresh_prices();
+            self.policy.on_model_removed(slot);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Push new list prices (refreshes the frozen c̃ snapshot).
+    pub fn reprice(&mut self, slot: usize, price_in: f64, price_out: f64) -> bool {
+        if self.registry.reprice(slot, price_in, price_out) {
+            self.refresh_prices();
+            self.policy.on_model_repriced(slot, price_in, price_out);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Rebuild an EMPTY host's portfolio to match `slots` exactly,
+    /// including tombstoned entries (used to seat shadow replicas on the
+    /// served host's slot layout after a restore).
+    pub fn sync_portfolio(&mut self, slots: &[Option<(String, f64, f64)>]) {
+        debug_assert_eq!(self.registry.n_slots(), 0, "sync_portfolio needs a fresh host");
+        for s in slots {
+            match s {
+                Some((name, pi, po)) => {
+                    self.add_model(name, *pi, *po, None);
+                }
+                None => {
+                    // tombstone placeholder keeps later slot ids aligned
+                    let id = self.add_model("__retired__", 0.0, 0.0, None);
+                    self.delete_model(id);
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // budget control
+
+    /// Runtime budget change; `false` when neither the policy nor the
+    /// host has a pacer to apply it to.
+    pub fn set_budget(&mut self, budget: f64) -> bool {
+        if self.policy.set_budget(budget) {
+            return true;
+        }
+        match self.pacer.as_mut() {
+            Some(p) => {
+                p.set_budget(budget);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Couple budget control to a deployment-wide ledger (sharded
+    /// engine).  Self-hosted policies adopt the handle themselves; when a
+    /// policy has no pacer to couple (e.g. QualityFloor, which tracks a
+    /// reward floor, not dollars) the HOST holds the handle instead, so
+    /// realised costs still feed the global spend ledger even though the
+    /// policy's decisions ignore λ.  Hosted policies always get it as
+    /// the host pacer.
+    pub fn use_shared_pacer(&mut self, ledger: Arc<SharedPacer>) {
+        if self.policy.self_hosted() && self.policy.attach_shared_pacer(ledger.clone()) {
+            return;
+        }
+        self.pacer = Some(PacerHandle::Shared(ledger));
+    }
+
+    /// Pacer dual update alone (sharded mode: rewards queue for the merge
+    /// cycle, budget control is realtime).  A self-hosted policy pays its
+    /// own pacer; the host pacer — when one exists — is fed as well (it
+    /// only coexists with a self-hosted policy as the shared-ledger
+    /// fallback above, never double-counting one controller).
+    pub fn observe_cost(&mut self, cost: f64) {
+        if self.policy.self_hosted() {
+            self.policy.observe_cost(cost);
+        }
+        if let Some(p) = self.pacer.as_mut() {
+            p.observe_cost(cost);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // request path
+
+    /// λ and the eligible slot set for the next decision.  Self-hosted
+    /// policies filter internally, so their eligible set is the full
+    /// active set (advisory).
+    fn prepare(&mut self) -> f64 {
+        let self_hosted = self.policy.self_hosted();
+        let lambda = if self_hosted {
+            self.policy.lambda()
+        } else {
+            self.pacer.as_ref().map_or(0.0, |p| p.lambda())
+        };
+        let ceiling = if self_hosted {
+            f64::INFINITY
+        } else {
+            self.pacer
+                .as_ref()
+                .map_or(f64::INFINITY, |p| p.price_ceiling(self.registry.max_blended()))
+        };
+        self.eligible_buf.clear();
+        for id in 0..self.registry.n_slots() {
+            if let Some(e) = self.registry.get(id) {
+                if e.blended_per_1k <= ceiling {
+                    self.eligible_buf.push(id);
+                }
+            }
+        }
+        if self.eligible_buf.is_empty() {
+            // circuit-breaker fallback: the cheapest model always survives
+            match self.registry.cheapest_active() {
+                Some(id) => self.eligible_buf.push(id),
+                None => panic!("route() called with an empty portfolio"),
+            }
+        }
+        lambda
+    }
+
+    /// One routing decision.
+    pub fn route(&mut self, x: &[f64]) -> RouteDecision {
+        let lambda = self.prepare();
+        let ctx = RouteCtx {
+            x,
+            eligible: &self.eligible_buf,
+            blended: &self.blended,
+            c_tilde: &self.c_tilde,
+            lambda,
+            step: self.t,
+        };
+        let d = self.policy.select(&ctx);
+        self.t += 1;
+        RouteDecision {
+            arm: d.arm,
+            score: d.score,
+            lambda,
+            forced: d.forced,
+            // a self-hosted policy's own filtering (burn-in, its ceiling)
+            // wins over the host's advisory set
+            n_eligible: d.n_eligible.unwrap_or(self.eligible_buf.len()),
+        }
+    }
+
+    /// Vectorized routing: eligibility is computed once for the whole
+    /// batch (λ only moves on feedback, never on selection) and the
+    /// policy sees all contexts together via
+    /// [`RoutingPolicy::select_batch`].
+    pub fn route_batch(&mut self, xs: &[Vec<f64>]) -> Vec<RouteDecision> {
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        let lambda = self.prepare();
+        let t0 = self.t;
+        let ctxs: Vec<RouteCtx> = xs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| RouteCtx {
+                x: x.as_slice(),
+                eligible: &self.eligible_buf,
+                blended: &self.blended,
+                c_tilde: &self.c_tilde,
+                lambda,
+                step: t0 + i as u64,
+            })
+            .collect();
+        let mut picks = Vec::with_capacity(xs.len());
+        self.policy.select_batch(&ctxs, &mut picks);
+        drop(ctxs);
+        debug_assert_eq!(picks.len(), xs.len());
+        self.t += xs.len() as u64;
+        let host_eligible = self.eligible_buf.len();
+        picks
+            .into_iter()
+            .map(|d| RouteDecision {
+                arm: d.arm,
+                score: d.score,
+                lambda,
+                forced: d.forced,
+                n_eligible: d.n_eligible.unwrap_or(host_eligible),
+            })
+            .collect()
+    }
+
+    /// Feedback path: the policy learns, then the host pacer — when one
+    /// exists — pays the realised cost.  Self-hosted policies pay their
+    /// own inside [`RoutingPolicy::update`]; the host pacer coexists
+    /// with one only as the shared-ledger fallback (see
+    /// [`PolicyHost::use_shared_pacer`]), so no controller is fed twice.
+    pub fn feedback(&mut self, arm: usize, x: &[f64], reward: f64, cost: f64) {
+        let fb = FeedbackCtx {
+            arm,
+            x,
+            reward,
+            cost,
+            step: self.t,
+        };
+        self.policy.update(&fb);
+        if let Some(p) = self.pacer.as_mut() {
+            p.observe_cost(cost);
+        }
+    }
+
+    /// Apply a drained feedback queue (costs were paid at arrival time
+    /// via [`PolicyHost::observe_cost`]).
+    pub fn apply_update_batch(&mut self, events: &[FeedbackEvent]) {
+        self.policy.update_batch(events, self.t);
+    }
+
+    // ------------------------------------------------------------------
+    // engine merge / snapshot plumbing
+
+    /// Mergeable posterior replicas; `None` when this policy has nothing
+    /// to merge (the engine's cycles then skip it).
+    pub fn export_arms(&self) -> Option<Vec<Option<ArmState>>> {
+        self.policy.export_arms()
+    }
+
+    pub fn adopt_arms(&mut self, global: &[Option<ArmState>]) {
+        self.policy.adopt_arms(global);
+    }
+
+    pub fn fork_rng(&mut self, salt: u64) {
+        self.policy.fork_rng(salt);
+    }
+
+    /// Capture the complete learned state.  Self-hosted policies own the
+    /// whole document (ParetoBandit keeps its pre-v2 `RouterState` shape,
+    /// so existing snapshot files stay valid); hosted policies get the
+    /// host's registry/clock/pacer wrapped around their own state.
+    pub fn export_state(&mut self) -> Json {
+        if self.policy.self_hosted() {
+            return self.policy.export_state();
+        }
+        let slots = (0..self.registry.n_slots())
+            .map(|id| match self.registry.get(id) {
+                None => Json::Null,
+                Some(e) => Json::obj(vec![
+                    ("name", Json::Str(e.name.clone())),
+                    ("price_in", Json::Num(e.price_in_per_m)),
+                    ("price_out", Json::Num(e.price_out_per_m)),
+                ]),
+            })
+            .collect();
+        let mut fields = vec![
+            ("kind", Json::Str(self.kind.clone())),
+            ("t", Json::Num(self.t as f64)),
+            ("slots", Json::Arr(slots)),
+        ];
+        if let Some(p) = &self.pacer {
+            fields.push((
+                "pacer",
+                Json::obj(vec![
+                    ("budget", Json::Num(p.budget())),
+                    ("lambda", Json::Num(p.lambda())),
+                    ("cbar", Json::Num(p.cbar())),
+                ]),
+            ));
+        }
+        fields.push(("policy", self.policy.export_state()));
+        Json::obj(fields)
+    }
+
+    /// Replace learned state with a captured one.  Configuration (d, α,
+    /// γ, pacer gains) stays the host's own; portfolio, clocks, duals and
+    /// policy statistics move.
+    pub fn restore_state(&mut self, st: &Json) -> Result<(), String> {
+        let get_t = |j: &Json| -> Result<u64, String> {
+            match j.get("t").and_then(Json::as_f64) {
+                Some(x) if x >= 0.0 && x.fract() == 0.0 => Ok(x as u64),
+                _ => Err("restore: missing/invalid t".to_string()),
+            }
+        };
+        if self.policy.self_hosted() {
+            self.policy.restore_state(st)?;
+            self.t = get_t(st)?;
+            self.registry = Registry::from_slots(self.policy.portfolio());
+            self.refresh_prices();
+            return Ok(());
+        }
+        let policy_state = st
+            .get("policy")
+            .ok_or("restore: missing policy state (snapshot from a self-hosted policy?)")?;
+        self.policy.restore_state(policy_state)?;
+        self.t = get_t(st)?;
+        let arr = st
+            .get("slots")
+            .and_then(Json::as_arr)
+            .ok_or("restore: missing slots")?;
+        let mut slots = Vec::with_capacity(arr.len());
+        for s in arr {
+            if matches!(s, Json::Null) {
+                slots.push(None);
+                continue;
+            }
+            let name = s
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("restore: slot missing name")?;
+            let pi = s
+                .get("price_in")
+                .and_then(Json::as_f64)
+                .ok_or("restore: slot missing price_in")?;
+            let po = s
+                .get("price_out")
+                .and_then(Json::as_f64)
+                .ok_or("restore: slot missing price_out")?;
+            slots.push(Some((name.to_string(), pi, po)));
+        }
+        self.registry = Registry::from_slots(slots);
+        self.refresh_prices();
+        if let (Some(p), Some(ps)) = (self.pacer.as_mut(), st.get("pacer")) {
+            let f = |k: &str| {
+                ps.get(k)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("restore: pacer missing {k}"))
+            };
+            p.restore(f("budget")?, f("lambda")?, f("cbar")?);
+        }
+        Ok(())
+    }
+}
+
+/// Lower-cased alphanumeric slug of a display name (default snapshot
+/// kind; builders override with their registry key).
+fn slug(name: &str) -> String {
+    name.chars()
+        .filter(|c| c.is_ascii_alphanumeric())
+        .map(|c| c.to_ascii_lowercase())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::router::baselines::RandomPolicy;
+
+    fn three_model_host(budget: Option<f64>) -> PolicyHost {
+        let mut h = PolicyHost::new(Box::new(RandomPolicy::new(7)), budget);
+        h.add_model("llama", 0.10, 0.10, None);
+        h.add_model("mistral", 0.40, 1.60, None);
+        h.add_model("gemini", 1.25, 10.0, None);
+        h
+    }
+
+    #[test]
+    fn hosted_policy_gets_a_pacer_and_a_ceiling() {
+        let mut h = three_model_host(Some(1e-4));
+        // overspend hard: λ rises and the ceiling filters expensive slots
+        for _ in 0..400 {
+            let d = h.route(&[1.0]);
+            h.feedback(d.arm, &[1.0], 0.5, 1.5e-2);
+        }
+        assert!(h.lambda() > 0.5, "λ={}", h.lambda());
+        let d = h.route(&[1.0]);
+        assert!(d.n_eligible < 3, "ceiling must filter, got {}", d.n_eligible);
+        assert!(d.arm < 3);
+    }
+
+    #[test]
+    fn delete_is_respected_and_fallback_never_panics() {
+        let mut h = three_model_host(None);
+        assert!(h.delete_model(1));
+        assert!(!h.delete_model(1));
+        for _ in 0..100 {
+            let d = h.route(&[0.5]);
+            assert_ne!(d.arm, 1, "tombstoned slot selected");
+            h.feedback(d.arm, &[0.5], 0.5, 1e-4);
+        }
+    }
+
+    #[test]
+    fn hosted_export_restore_is_bit_identical() {
+        let mut a = three_model_host(Some(6.6e-4));
+        for i in 0..60 {
+            let d = a.route(&[i as f64]);
+            a.feedback(d.arm, &[i as f64], 0.5, 2e-3);
+        }
+        let snap = a.export_state();
+        let mut b = PolicyHost::new(Box::new(RandomPolicy::new(7)), Some(6.6e-4));
+        b.restore_state(&snap).unwrap();
+        assert_eq!(b.step(), a.step());
+        assert_eq!(b.registry().n_slots(), 3);
+        assert_eq!(b.lambda(), a.lambda());
+        for i in 0..50 {
+            let (da, db) = (a.route(&[i as f64]), b.route(&[i as f64]));
+            assert_eq!(da.arm, db.arm, "step {i} diverged after restore");
+            a.feedback(da.arm, &[i as f64], 0.5, 1e-4);
+            b.feedback(db.arm, &[i as f64], 0.5, 1e-4);
+        }
+    }
+
+    #[test]
+    fn sync_portfolio_reproduces_tombstoned_layout() {
+        let mut h = PolicyHost::new(Box::new(RandomPolicy::new(3)), None);
+        h.sync_portfolio(&[
+            Some(("a".into(), 0.1, 0.1)),
+            None,
+            Some(("c".into(), 0.4, 1.6)),
+        ]);
+        assert_eq!(h.registry().n_slots(), 3);
+        assert!(h.registry().is_active(0));
+        assert!(!h.registry().is_active(1));
+        assert!(h.registry().is_active(2));
+        assert_eq!(h.registry().find("c"), Some(2));
+    }
+}

@@ -1,99 +1,27 @@
 //! The ParetoBandit routing system (paper §3): Algorithm 1, the budget
-//! pacer's two-layer enforcement, the hot-swap registry and asynchronous
-//! feedback support.
+//! pacer's two-layer enforcement, the hot-swap registry, asynchronous
+//! feedback support — and the Policy API v2 hosting layer
+//! ([`RoutingPolicy`] / [`PolicyHost`] / the [`builders`] registry) that
+//! lets the harness, scenario engine and sharded server run any policy
+//! interchangeably (see `docs/policies.md`).
 
+pub mod baselines;
+mod builders;
 mod config;
 mod feedback;
 pub mod floor;
+mod host;
 mod pareto;
 mod policy;
 mod registry;
 mod state;
 
+pub use builders::{build_policy, policy_names, BuildCtx, ModelSpec, PolicyBuilder, BUILDERS};
 pub use config::{Exploration, RouterConfig};
 pub use floor::{FloorConfig, QualityFloorRouter};
 pub use feedback::{ContextCache, FeedbackEvent, FeedbackQueue, FileStore, Pending};
+pub use host::PolicyHost;
 pub use pareto::{ParetoRouter, Prior, RouteDecision};
-pub use policy::Policy;
+pub use policy::{FeedbackCtx, PolicyDecision, RouteCtx, RoutingPolicy};
 pub use registry::{ModelEntry, ModelRef, Registry};
 pub use state::{ArmSnap, PacerSnap, RouterState, SlotSnap};
-
-/// Baseline policies (paper §4.1 conditions + standard comparators).
-pub mod baselines {
-    use super::Policy;
-    use crate::util::rng::Rng;
-
-    /// Uniform-random routing over K arms.
-    pub struct RandomPolicy {
-        k: usize,
-        rng: Rng,
-    }
-
-    impl RandomPolicy {
-        pub fn new(k: usize, seed: u64) -> RandomPolicy {
-            RandomPolicy {
-                k,
-                rng: Rng::new(seed),
-            }
-        }
-    }
-
-    impl Policy for RandomPolicy {
-        fn select(&mut self, _x: &[f64]) -> usize {
-            self.rng.below(self.k)
-        }
-        fn update(&mut self, _arm: usize, _x: &[f64], _r: f64, _c: f64) {}
-        fn name(&self) -> &str {
-            "Random"
-        }
-    }
-
-    /// Always route to one fixed model.
-    pub struct FixedPolicy {
-        arm: usize,
-        name: String,
-    }
-
-    impl FixedPolicy {
-        pub fn new(arm: usize, name: &str) -> FixedPolicy {
-            FixedPolicy {
-                arm,
-                name: format!("Fixed({name})"),
-            }
-        }
-    }
-
-    impl Policy for FixedPolicy {
-        fn select(&mut self, _x: &[f64]) -> usize {
-            self.arm
-        }
-        fn update(&mut self, _arm: usize, _x: &[f64], _r: f64, _c: f64) {}
-        fn name(&self) -> &str {
-            &self.name
-        }
-    }
-
-    #[cfg(test)]
-    mod tests {
-        use super::*;
-
-        #[test]
-        fn random_covers_all_arms() {
-            let mut p = RandomPolicy::new(4, 1);
-            let mut seen = [false; 4];
-            for _ in 0..200 {
-                seen[p.select(&[0.0])] = true;
-            }
-            assert!(seen.iter().all(|&s| s));
-        }
-
-        #[test]
-        fn fixed_is_fixed() {
-            let mut p = FixedPolicy::new(2, "gemini");
-            for _ in 0..10 {
-                assert_eq!(p.select(&[1.0]), 2);
-            }
-            assert_eq!(p.name(), "Fixed(gemini)");
-        }
-    }
-}

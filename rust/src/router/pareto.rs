@@ -11,7 +11,7 @@ use crate::linalg::Mat;
 use crate::pacer::{BudgetPacer, PacerHandle, SharedPacer};
 use crate::router::config::RouterConfig;
 use crate::router::feedback::FeedbackEvent;
-use crate::router::policy::Policy;
+use crate::router::policy::{FeedbackCtx, PolicyDecision, RouteCtx, RoutingPolicy};
 use crate::router::registry::Registry;
 use crate::router::state::{ArmSnap, PacerSnap, RouterState, SlotSnap};
 use crate::util::rng::Rng;
@@ -448,8 +448,7 @@ impl ParetoRouter {
     /// exploration noise.  Shard 0 keeps the donor stream (exact-replay
     /// guarantees); the others fork deterministically from it.
     pub fn fork_rng(&mut self, salt: u64) {
-        let (s, _) = self.rng.dump_state();
-        self.rng = Rng::new(s[0] ^ crate::util::rng::mix2(salt, s[1]));
+        self.rng = self.rng.fork(salt);
     }
 
     fn next_burnin(&self) -> Option<usize> {
@@ -463,21 +462,116 @@ impl ParetoRouter {
     }
 }
 
-impl Policy for ParetoRouter {
-    fn select(&mut self, x: &[f64]) -> usize {
-        self.route(x).arm
-    }
-
-    fn update(&mut self, arm: usize, x: &[f64], reward: f64, cost: f64) {
-        self.feedback(arm, x, reward, cost);
-    }
-
+/// Policy API v2 adapter: ParetoBandit is a *self-hosted* policy — it
+/// keeps its own registry/pacer mirror (fed by the host's lifecycle
+/// hooks) and applies its own burn-in and hard-ceiling filtering, so
+/// decisions through the trait are bit-identical to the standalone
+/// [`ParetoRouter::route`] / [`ParetoRouter::feedback`] API (asserted by
+/// the golden tests in `tests/policy_conformance.rs`).
+impl RoutingPolicy for ParetoRouter {
     fn name(&self) -> &str {
         &self.name
     }
 
+    fn select(&mut self, ctx: &RouteCtx) -> PolicyDecision {
+        let d = ParetoRouter::route(self, ctx.x);
+        PolicyDecision {
+            arm: d.arm,
+            score: d.score,
+            forced: d.forced,
+            n_eligible: Some(d.n_eligible),
+        }
+    }
+
+    fn update(&mut self, fb: &FeedbackCtx) {
+        ParetoRouter::feedback(self, fb.arm, fb.x, fb.reward, fb.cost);
+    }
+
+    fn update_batch(&mut self, events: &[FeedbackEvent], _step: u64) {
+        // costs were paid through observe_cost at arrival; feedback_batch
+        // applies rewards only, exactly the sharded-mode split
+        ParetoRouter::feedback_batch(self, events);
+    }
+
     fn lambda(&self) -> f64 {
         self.pacer.as_ref().map_or(0.0, |p| p.lambda())
+    }
+
+    fn self_hosted(&self) -> bool {
+        true
+    }
+
+    fn step_clock(&self) -> Option<u64> {
+        Some(self.t)
+    }
+
+    fn portfolio(&self) -> Vec<Option<(String, f64, f64)>> {
+        self.registry.slot_entries()
+    }
+
+    fn on_model_added(
+        &mut self,
+        slot: usize,
+        name: &str,
+        price_in: f64,
+        price_out: f64,
+        prior: Option<(f64, f64)>,
+    ) {
+        let prior = match prior {
+            Some((n_eff, r0)) => Prior::Heuristic { n_eff, r0 },
+            None => Prior::Cold,
+        };
+        let id = ParetoRouter::add_model(self, name, price_in, price_out, prior);
+        debug_assert_eq!(id, slot, "host/policy slot misalignment");
+    }
+
+    fn on_model_removed(&mut self, slot: usize) {
+        ParetoRouter::delete_model(self, slot);
+    }
+
+    fn on_model_repriced(&mut self, slot: usize, price_in: f64, price_out: f64) {
+        ParetoRouter::reprice(self, slot, price_in, price_out);
+    }
+
+    fn set_budget(&mut self, budget: f64) -> bool {
+        ParetoRouter::set_budget(self, budget)
+    }
+
+    fn observe_cost(&mut self, cost: f64) {
+        ParetoRouter::observe_cost(self, cost);
+    }
+
+    fn attach_shared_pacer(&mut self, ledger: Arc<SharedPacer>) -> bool {
+        self.use_shared_pacer(ledger);
+        true
+    }
+
+    fn export_state(&mut self) -> crate::util::json::Json {
+        ParetoRouter::export_state(self).to_json()
+    }
+
+    fn restore_state(&mut self, st: &crate::util::json::Json) -> Result<(), String> {
+        let state = RouterState::from_json(st)?;
+        ParetoRouter::restore_state(self, &state)
+    }
+
+    fn export_arms(&self) -> Option<Vec<Option<ArmState>>> {
+        Some(ParetoRouter::export_arms(self))
+    }
+
+    fn adopt_arms(&mut self, global: &[Option<ArmState>]) {
+        ParetoRouter::adopt_arms(self, global);
+    }
+
+    fn fork_rng(&mut self, salt: u64) {
+        ParetoRouter::fork_rng(self, salt);
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
     }
 }
 

@@ -1,19 +1,290 @@
-//! The policy interface the experiment harness and server drive.
+//! Policy API v2 — the single pluggable routing-policy interface that the
+//! experiment harness, the scenario engine and the sharded serving engine
+//! all drive.
+//!
+//! A *policy* turns a request context into an arm choice and learns from
+//! bandit feedback.  A *host* ([`super::PolicyHost`]) owns everything a
+//! policy should not have to reimplement: the slot-addressed model
+//! registry, the budget pacer with its hard price ceiling, the step
+//! clock, and the snapshot plumbing.  Each decision the host hands the
+//! policy a [`RouteCtx`] carrying the features, the **eligible slot set**
+//! (active models under the ceiling — never empty), the per-slot declared
+//! prices, the pacer dual λ and the step; each observation arrives as a
+//! [`FeedbackCtx`].
+//!
+//! Two hosting modes:
+//!
+//! * **hosted** (`self_hosted() == false`, the default) — the host owns
+//!   the registry and the pacer; the policy keeps only its per-slot
+//!   statistics, sized through the lifecycle hooks
+//!   ([`RoutingPolicy::on_model_added`] / `on_model_removed` /
+//!   `on_model_repriced`).  `Random`, `Fixed`, `EpsilonGreedy` and
+//!   `Thompson` live here.
+//! * **self-hosted** (`self_hosted() == true`) — the policy carries its
+//!   own registry/pacer mirror (driven through the same hooks, so the two
+//!   stay slot-aligned) and applies its own candidate filtering; the
+//!   ctx's eligible set is advisory.  [`super::ParetoRouter`] and
+//!   [`super::QualityFloorRouter`] live here, which keeps their decision
+//!   paths bit-identical to the pre-v2 standalone API.
+//!
+//! The contract the conformance suite (`tests/policy_conformance.rs`)
+//! enforces for every registered builder:
+//!
+//! 1. `select` returns an arm from the active slot set (hosted policies:
+//!    from `ctx.eligible`);
+//! 2. decisions are deterministic under a fixed seed;
+//! 3. `export_state` → `restore_state` → bit-identical decisions.
 
-/// A routing policy under bandit feedback: pick an arm for a context, then
-/// learn from the realised (reward, cost) of the chosen arm only.
-pub trait Policy {
-    /// Select an arm (stable model id) for context `x`.
-    fn select(&mut self, x: &[f64]) -> usize;
+use std::any::Any;
+use std::sync::Arc;
 
-    /// Feed back the outcome of a previous selection.
-    fn update(&mut self, arm: usize, x: &[f64], reward: f64, cost: f64);
+use crate::bandit::ArmState;
+use crate::pacer::SharedPacer;
+use crate::router::FeedbackEvent;
+use crate::util::json::Json;
 
-    /// Display name (tables/plots).
+/// Everything a policy may condition one routing decision on.
+///
+/// Slot-aligned slices (`blended`, `c_tilde`) are indexed by stable arm
+/// id and carry `0.0` on retired slots; `eligible` lists the active slots
+/// that survive the host's hard price ceiling, in ascending order, and is
+/// never empty (the cheapest active model always survives).
+pub struct RouteCtx<'a> {
+    /// request feature vector
+    pub x: &'a [f64],
+    /// active slots under the price ceiling (ascending, non-empty)
+    pub eligible: &'a [usize],
+    /// slot-aligned declared blended $/1k-token list price
+    pub blended: &'a [f64],
+    /// slot-aligned frozen log-normalised unit cost c̃ (Eq. 6)
+    pub c_tilde: &'a [f64],
+    /// pacer dual λ at decision time (0.0 when unpaced)
+    pub lambda: f64,
+    /// host step clock: decisions taken before this one
+    pub step: u64,
+}
+
+/// One observation of the realised (reward, cost) of a prior selection.
+pub struct FeedbackCtx<'a> {
+    /// slot the request was served by
+    pub arm: usize,
+    /// the request's feature vector
+    pub x: &'a [f64],
+    pub reward: f64,
+    /// realised $ cost (already paid to the host pacer for hosted
+    /// policies; self-hosted policies pay their own pacer here)
+    pub cost: f64,
+    /// host step clock at observation time
+    pub step: u64,
+}
+
+/// Outcome of one `select` call.
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyDecision {
+    /// chosen stable slot id
+    pub arm: usize,
+    /// winning score (policy-defined scale; NaN when not score-based)
+    pub score: f64,
+    /// true for a forced-exploration pull (burn-in)
+    pub forced: bool,
+    /// candidate-set size after the policy's OWN filtering; `None` for
+    /// hosted policies (the host reports its eligible-set size instead).
+    /// Self-hosted policies set it so diagnostics reflect their real
+    /// burn-in/ceiling behaviour.
+    pub n_eligible: Option<usize>,
+}
+
+impl PolicyDecision {
+    /// A plain pick with no score attached.
+    pub fn pick(arm: usize) -> PolicyDecision {
+        PolicyDecision {
+            arm,
+            score: f64::NAN,
+            forced: false,
+            n_eligible: None,
+        }
+    }
+}
+
+/// The pluggable routing-policy interface (see module docs).
+pub trait RoutingPolicy {
+    /// Display name (tables, metrics, `compare` reports).
     fn name(&self) -> &str;
 
-    /// Current dual variable, if the policy has a pacer (diagnostics).
+    /// Pick an arm for one request.
+    fn select(&mut self, ctx: &RouteCtx) -> PolicyDecision;
+
+    /// Learn from the realised outcome of a prior selection.
+    fn update(&mut self, fb: &FeedbackCtx);
+
+    /// Vectorized selection for the batch verbs: the host computes
+    /// eligibility once and hands all contexts together.  The default
+    /// simply loops `select`, which is exact for every sequential policy;
+    /// implementations may override to amortize per-decision work.
+    fn select_batch(&mut self, ctxs: &[RouteCtx<'_>], out: &mut Vec<PolicyDecision>) {
+        for ctx in ctxs {
+            let d = self.select(ctx);
+            out.push(d);
+        }
+    }
+
+    /// Apply a drained feedback queue (sharded merge cycle).  Costs were
+    /// already paid via [`RoutingPolicy::observe_cost`] at arrival time,
+    /// so implementations MUST NOT re-pay them here; the default loops
+    /// `update` with `cost = 0.0`, which is correct for policies whose
+    /// `update` ignores cost.
+    fn update_batch(&mut self, events: &[FeedbackEvent], step: u64) {
+        for ev in events {
+            self.update(&FeedbackCtx {
+                arm: ev.arm,
+                x: &ev.context,
+                reward: ev.reward,
+                cost: 0.0,
+                step,
+            });
+        }
+    }
+
+    /// Current dual variable (diagnostics; 0.0 for unpaced policies).
     fn lambda(&self) -> f64 {
         0.0
+    }
+
+    /// True when the policy carries its own registry/pacer mirror and
+    /// candidate filtering (see module docs).
+    fn self_hosted(&self) -> bool {
+        false
+    }
+
+    /// A self-hosted policy's own decision clock, so a host wrapping a
+    /// pre-driven (or pre-restored) policy adopts the right step count.
+    /// Hosted policies keep the default (`None`: the host counts).
+    fn step_clock(&self) -> Option<u64> {
+        None
+    }
+
+    /// The portfolio a self-hosted policy was pre-registered with, as
+    /// slot-aligned `(name, price_in, price_out)` entries (`None` =
+    /// tombstoned slot).  The host adopts this at wrap time and re-reads
+    /// it after a restore.  Hosted policies return the default empty vec.
+    fn portfolio(&self) -> Vec<Option<(String, f64, f64)>> {
+        Vec::new()
+    }
+
+    /// Lifecycle: the host registered a model on `slot` (slots arrive in
+    /// ascending append order).  `prior` is an optional `(n_eff, r0)`
+    /// heuristic warm-start.
+    fn on_model_added(
+        &mut self,
+        _slot: usize,
+        _name: &str,
+        _price_in: f64,
+        _price_out: f64,
+        _prior: Option<(f64, f64)>,
+    ) {
+    }
+
+    /// Lifecycle: `slot` was retired (tombstoned, never reused).
+    fn on_model_removed(&mut self, _slot: usize) {}
+
+    /// Lifecycle: `slot` got new list prices.
+    fn on_model_repriced(&mut self, _slot: usize, _price_in: f64, _price_out: f64) {}
+
+    /// Runtime budget change for self-hosted policies; hosted policies
+    /// keep the default (`false` — the host owns the pacer).
+    fn set_budget(&mut self, _budget: f64) -> bool {
+        false
+    }
+
+    /// Realtime cost payment for self-hosted policies in sharded mode
+    /// (rewards queue for the merge cycle, budget control cannot wait).
+    fn observe_cost(&mut self, _cost: f64) {}
+
+    /// Couple a self-hosted policy's budget control to the deployment-wide
+    /// ledger; returns `false` when the policy has no pacer to couple (the
+    /// host then holds the shared handle itself).
+    fn attach_shared_pacer(&mut self, _ledger: Arc<SharedPacer>) -> bool {
+        false
+    }
+
+    /// Capture every learned quantity as a JSON value such that
+    /// `restore_state` on an identically configured policy yields
+    /// bit-identical subsequent decisions.  `&mut self` so cached
+    /// numerics can be refreshed to their exact form first.
+    fn export_state(&mut self) -> Json;
+
+    /// Replace learned state with a captured one (see `export_state`).
+    fn restore_state(&mut self, st: &Json) -> Result<(), String>;
+
+    /// Slot-aligned mergeable posterior replicas for the engine's
+    /// merge/broadcast cycle; `None` (default) = nothing to merge, the
+    /// engine's cycles become no-ops for this policy.
+    fn export_arms(&self) -> Option<Vec<Option<ArmState>>> {
+        None
+    }
+
+    /// Adopt a broadcast global posterior (pair of `export_arms`).
+    fn adopt_arms(&mut self, _global: &[Option<ArmState>]) {}
+
+    /// Decorrelate this replica's sampling stream after a restore (a
+    /// snapshot carries ONE RNG state; shard 0 keeps it, the rest fork).
+    fn fork_rng(&mut self, _salt: u64) {}
+
+    /// Concrete-type escape hatch (tests, `serve --restore` validation).
+    fn as_any(&self) -> &dyn Any;
+    fn as_any_mut(&mut self) -> &mut dyn Any;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A minimal hosted policy exercising the trait defaults.
+    struct First;
+
+    impl RoutingPolicy for First {
+        fn name(&self) -> &str {
+            "First"
+        }
+        fn select(&mut self, ctx: &RouteCtx) -> PolicyDecision {
+            PolicyDecision::pick(ctx.eligible[0])
+        }
+        fn update(&mut self, _fb: &FeedbackCtx) {}
+        fn export_state(&mut self) -> Json {
+            Json::obj(vec![])
+        }
+        fn restore_state(&mut self, _st: &Json) -> Result<(), String> {
+            Ok(())
+        }
+        fn as_any(&self) -> &dyn Any {
+            self
+        }
+        fn as_any_mut(&mut self) -> &mut dyn Any {
+            self
+        }
+    }
+
+    #[test]
+    fn trait_defaults_are_inert() {
+        let mut p = First;
+        assert_eq!(p.lambda(), 0.0);
+        assert!(!p.self_hosted());
+        assert!(p.portfolio().is_empty());
+        assert!(!p.set_budget(1.0));
+        assert!(p.export_arms().is_none());
+        let ctx = RouteCtx {
+            x: &[1.0],
+            eligible: &[2, 3],
+            blended: &[0.0, 0.0, 0.1, 0.2],
+            c_tilde: &[0.0, 0.0, 0.3, 0.5],
+            lambda: 0.0,
+            step: 0,
+        };
+        assert_eq!(p.select(&ctx).arm, 2);
+        let mut out = Vec::new();
+        let ctxs = [ctx];
+        p.select_batch(&ctxs, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].arm, 2);
     }
 }

@@ -100,6 +100,19 @@ impl Registry {
         }
     }
 
+    /// Slot-aligned `(name, price_in, price_out)` entries, `None` for
+    /// retired slots — exactly the shape [`Registry::from_slots`]
+    /// rebuilds from (snapshot capture, host portfolio adoption).
+    pub fn slot_entries(&self) -> Vec<Option<(String, f64, f64)>> {
+        self.slots
+            .iter()
+            .map(|s| {
+                s.as_ref()
+                    .map(|e| (e.name.clone(), e.price_in_per_m, e.price_out_per_m))
+            })
+            .collect()
+    }
+
     /// Checked registration: rejects a name that is already active, so
     /// name addressing stays unambiguous.  A retired name (its slot was
     /// removed) may be re-registered and gets a fresh slot.

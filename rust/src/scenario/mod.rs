@@ -9,8 +9,8 @@
 //!   timed `[[event]]`s (`set_price`, `degrade_quality`, `add_model`,
 //!   `remove_model`, `set_budget`, `traffic_mix`, `snapshot`,
 //!   `restart`), parsed by the in-tree TOML-subset reader ([`toml`]).
-//! * [`run`] — execution: in-process against a
-//!   [`crate::router::ParetoRouter`] ([`run_scenario`]), or over the v2
+//! * [`run`] — execution: in-process against any hosted policy
+//!   ([`crate::router::PolicyHost`], [`run_scenario`]), or over the v2
 //!   wire protocol against a live `serve --workers N` engine
 //!   ([`run_scenario_wire`]) using the `inject` / `snapshot` / `restore`
 //!   admin verbs.

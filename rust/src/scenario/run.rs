@@ -22,8 +22,9 @@ use std::path::Path;
 
 use crate::client::ParetoClient;
 use crate::exp::{stream_order, ExpEnv, StepLog};
-use crate::router::{ParetoRouter, Prior, RouterState};
+use crate::router::PolicyHost;
 use crate::sim::{EnvView, World};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use super::snapshot;
@@ -178,13 +179,14 @@ fn price_mult(world: &World, wi: usize, mult: Option<f64>, pi: Option<f64>, po: 
     }
 }
 
-/// Apply one engine-side event to an in-process router (+ the env view).
+/// Apply one engine-side event to an in-process hosted policy (+ the env
+/// view).
 fn apply_in_process(
     ev: &Event,
     world: &World,
     view: &mut EnvView,
-    router: &mut ParetoRouter,
-    last_snapshot: &mut Option<RouterState>,
+    router: &mut PolicyHost,
+    last_snapshot: &mut Option<Json>,
     opts: &RunOptions,
 ) -> Result<(), String> {
     match ev {
@@ -223,16 +225,12 @@ fn apply_in_process(
         } => {
             let wi = world_index(world, model)?;
             let ws = &world.models[wi];
-            let prior = match (n_eff, r0) {
-                (Some(n), Some(r)) => Prior::Heuristic { n_eff: *n, r0: *r },
-                _ => Prior::Cold,
-            };
             router
                 .try_add_model(
                     model,
                     price_in.unwrap_or(ws.price_in_per_m),
                     price_out.unwrap_or(ws.price_out_per_m),
-                    prior,
+                    n_eff.zip(*r0),
                 )
                 .map(|_| ())
                 .ok_or_else(|| format!("add_model: '{model}' is already active"))
@@ -255,14 +253,25 @@ fn apply_in_process(
         Event::Snapshot { path } => {
             let st = router.export_state();
             if let Some(p) = path {
-                snapshot::save(Path::new(p), &st)?;
+                snapshot::save_value(Path::new(p), Some(router.kind()), &st)?;
             }
             *last_snapshot = Some(st);
             Ok(())
         }
         Event::Restart { path } => {
             let st = match path {
-                Some(p) => snapshot::load(Path::new(p))?,
+                Some(p) => {
+                    let (tag, st) = snapshot::load_value(Path::new(p))?;
+                    if let Some(tag) = tag {
+                        if tag != router.kind() {
+                            return Err(format!(
+                                "restart: snapshot holds policy '{tag}' but the run uses '{}'",
+                                router.kind()
+                            ));
+                        }
+                    }
+                    st
+                }
                 None => last_snapshot
                     .clone()
                     .ok_or("restart: no snapshot taken yet")?,
@@ -346,9 +355,9 @@ fn apply_wire(
     }
 }
 
-/// Execute a scenario in-process against `router`.
+/// Execute a scenario in-process against a hosted policy.
 ///
-/// The router is driven exactly like the paper harness drives a policy:
+/// The policy is driven exactly like the paper harness drives one:
 /// route → realised (reward, cost) from the drifted world view → feedback
 /// — with scheduled events applied *before* the routing decision of
 /// their step.
@@ -356,12 +365,12 @@ pub fn run_scenario(
     spec: &ScenarioSpec,
     env: &ExpEnv,
     world: &World,
-    router: &mut ParetoRouter,
+    router: &mut PolicyHost,
     opts: &RunOptions,
 ) -> Result<ScenarioRun, String> {
     let segments = plan_segments(spec, env, opts.seed)?;
     let mut view = EnvView::normal(world.k());
-    let mut last_snapshot: Option<RouterState> = None;
+    let mut last_snapshot: Option<Json> = None;
     let mut event_log = Vec::new();
     let mut phases = Vec::with_capacity(segments.len());
     let mut pending: &[TimedEvent] = &spec.events;
@@ -395,7 +404,7 @@ pub fn run_scenario(
                 arm: d.arm,
                 reward,
                 cost,
-                lambda: router.pacer().map_or(0.0, |pc| pc.lambda()),
+                lambda: router.lambda(),
             });
             t += 1;
         }
@@ -498,14 +507,24 @@ mod tests {
     use crate::sim::FlashScenario;
 
     /// Small paced router over the first k world models (cold start).
-    fn router(env: &ExpEnv, k: usize, budget: f64, seed: u64) -> ParetoRouter {
+    fn router(env: &ExpEnv, k: usize, budget: f64, seed: u64) -> PolicyHost {
+        use crate::router::{ParetoRouter, Prior};
         let cfg = crate::router::RouterConfig::tabula_rasa(env.d(), Some(budget), seed);
         let mut r = ParetoRouter::new(cfg);
         for m in 0..k {
             let ws = &env.world.models[m];
             r.add_model(ws.name, ws.price_in_per_m, ws.price_out_per_m, Prior::Cold);
         }
-        r
+        PolicyHost::new(Box::new(r), None)
+    }
+
+    /// Per-arm observation count on the hosted ParetoRouter.
+    fn n_obs(host: &PolicyHost, arm: usize) -> u64 {
+        host.policy_as::<crate::router::ParetoRouter>()
+            .expect("pareto policy")
+            .arm(arm)
+            .unwrap()
+            .n_obs
     }
 
     fn mini_spec(extra_events: &str) -> ScenarioSpec {
@@ -625,8 +644,7 @@ op = "restart"
         // the restart rewound the router clock to the snapshot step (60)
         // and then served the remaining 20 requests
         assert_eq!(r.step(), 80);
-        assert_eq!(r.arm(0).unwrap().n_obs + r.arm(1).unwrap().n_obs
-            + r.arm(2).unwrap().n_obs, 80);
+        assert_eq!(n_obs(&r, 0) + n_obs(&r, 1) + n_obs(&r, 2), 80);
     }
 
     #[test]

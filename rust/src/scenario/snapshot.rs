@@ -1,17 +1,20 @@
 //! Versioned on-disk router snapshots.
 //!
 //! One JSON document per file: `{"format": "paretobandit-snapshot",
-//! "version": 1, "state": {...}}` wrapping a
-//! [`crate::router::RouterState`].  The loader refuses unknown formats
-//! and future versions instead of misreading them, and the writer goes
-//! through a `.tmp` + rename so a crash mid-write never leaves a
-//! half-snapshot where a restore (or `serve --restore`) would find it.
+//! "version": 1, "policy": "<builder key>", "state": {...}}` wrapping a
+//! policy's learned state (for ParetoBandit: the pre-v2
+//! [`crate::router::RouterState`] shape, so snapshot files written
+//! before Policy API v2 — which carry no `policy` tag — keep loading).
+//! The loader refuses unknown formats and future versions instead of
+//! misreading them, and the writer goes through a `.tmp` + rename so a
+//! crash mid-write never leaves a half-snapshot where a restore (or
+//! `serve --restore`) would find it.
 //!
 //! Producers: the `snapshot` wire verb (engine: post-merge global
 //! posterior as adopted by shard 0), the in-process scenario executor's
-//! `snapshot` event, and [`save`] directly.  Consumers: the `restore`
-//! wire verb, `serve --restore <path>`, and the scenario `restart`
-//! event.
+//! `snapshot` event, and [`save`] / [`save_value`] directly.  Consumers:
+//! the `restore` wire verb, `serve --restore <path>`, and the scenario
+//! `restart` event.
 
 use std::path::Path;
 
@@ -23,17 +26,24 @@ pub const SNAPSHOT_VERSION: u64 = 1;
 /// Format tag guarding against feeding arbitrary JSON to `restore`.
 pub const SNAPSHOT_FORMAT: &str = "paretobandit-snapshot";
 
-/// Encode a state as the versioned snapshot document.
-pub fn to_json(state: &RouterState) -> Json {
-    Json::obj(vec![
+/// Encode an arbitrary policy state as the versioned snapshot document.
+/// `policy` is the builder-registry key ([`crate::router::PolicyHost::kind`]);
+/// `None` omits the tag (pre-v2 documents).
+pub fn value_to_json(policy: Option<&str>, state: &Json) -> Json {
+    let mut fields = vec![
         ("format", Json::Str(SNAPSHOT_FORMAT.to_string())),
         ("version", Json::Num(SNAPSHOT_VERSION as f64)),
-        ("state", state.to_json()),
-    ])
+    ];
+    if let Some(p) = policy {
+        fields.push(("policy", Json::Str(p.to_string())));
+    }
+    fields.push(("state", state.clone()));
+    Json::obj(fields)
 }
 
-/// Decode a snapshot document, enforcing format and version.
-pub fn from_json(j: &Json) -> Result<RouterState, String> {
+/// Decode a snapshot document into `(policy tag, state)`, enforcing
+/// format and version.  Pre-v2 documents have no tag.
+pub fn value_from_json(j: &Json) -> Result<(Option<String>, Json), String> {
     match j.get("format").and_then(Json::as_str) {
         Some(SNAPSHOT_FORMAT) => {}
         other => {
@@ -48,15 +58,45 @@ pub fn from_json(j: &Json) -> Result<RouterState, String> {
         Some(v) => return Err(format!("unsupported snapshot version {v}")),
         None => return Err("snapshot: missing version".to_string()),
     }
-    RouterState::from_json(j.get("state").ok_or("snapshot: missing state")?)
+    let policy = j.get("policy").and_then(Json::as_str).map(str::to_string);
+    Ok((policy, j.get("state").ok_or("snapshot: missing state")?.clone()))
 }
 
-/// Write a snapshot file (atomic: tmp file + rename).
-pub fn save(path: &Path, state: &RouterState) -> Result<(), String> {
-    let doc = to_json(state).to_string();
+/// Encode a ParetoBandit state as the versioned snapshot document.
+pub fn to_json(state: &RouterState) -> Json {
+    value_to_json(Some("paretobandit"), &state.to_json())
+}
+
+/// Decode a snapshot document as a ParetoBandit [`RouterState`].
+pub fn from_json(j: &Json) -> Result<RouterState, String> {
+    let (policy, state) = value_from_json(j)?;
+    if let Some(p) = policy {
+        if p != "paretobandit" {
+            return Err(format!("snapshot holds policy '{p}', not paretobandit"));
+        }
+    }
+    RouterState::from_json(&state)
+}
+
+/// Write an arbitrary policy snapshot file (atomic: tmp file + rename).
+pub fn save_value(path: &Path, policy: Option<&str>, state: &Json) -> Result<(), String> {
+    let doc = value_to_json(policy, state).to_string();
     let tmp = path.with_extension("tmp");
     std::fs::write(&tmp, doc.as_bytes()).map_err(|e| format!("{}: {e}", tmp.display()))?;
     std::fs::rename(&tmp, path).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Read a snapshot file back into `(policy tag, state)`.
+pub fn load_value(path: &Path) -> Result<(Option<String>, Json), String> {
+    let src =
+        std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let j = Json::parse(&src).map_err(|e| format!("{}: {e}", path.display()))?;
+    value_from_json(&j).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Write a ParetoBandit snapshot file (atomic: tmp file + rename).
+pub fn save(path: &Path, state: &RouterState) -> Result<(), String> {
+    save_value(path, Some("paretobandit"), &state.to_json())
 }
 
 /// Read a snapshot file back into a [`RouterState`].
@@ -125,6 +165,30 @@ mod tests {
         let j = Json::obj(vec![("format", Json::Str("other".into()))]);
         assert!(from_json(&j).unwrap_err().contains("not a router snapshot"));
         assert!(from_json(&Json::obj(vec![])).is_err());
+    }
+
+    #[test]
+    fn policy_tag_roundtrips_and_guards_cross_policy_restores() {
+        let st = Json::obj(vec![("t", Json::Num(7.0))]);
+        let dir = std::env::temp_dir().join(format!("pb_snap3_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("eps.snap.json");
+        save_value(&path, Some("epsilon"), &st).unwrap();
+        let (tag, back) = load_value(&path).unwrap();
+        assert_eq!(tag.as_deref(), Some("epsilon"));
+        assert_eq!(back.get("t").unwrap().as_f64(), Some(7.0));
+        // a non-paretobandit document must not decode as a RouterState
+        let e = load(&path).unwrap_err();
+        assert!(e.contains("holds policy 'epsilon'"), "{e}");
+        // pre-v2 documents (no tag) still decode
+        let (tag, _) = value_from_json(&Json::obj(vec![
+            ("format", Json::Str(SNAPSHOT_FORMAT.into())),
+            ("version", Json::Num(1.0)),
+            ("state", Json::obj(vec![])),
+        ]))
+        .unwrap();
+        assert_eq!(tag, None);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

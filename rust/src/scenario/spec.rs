@@ -267,6 +267,10 @@ pub struct ScenarioSpec {
     pub k: usize,
     /// default $/request ceiling (harnesses may override per run)
     pub budget: Option<f64>,
+    /// routing policy to drive (`name[:arg]`, a builder-registry key —
+    /// see `docs/policies.md`); `None` = the harness default
+    /// (ParetoBandit with warmup priors)
+    pub policy: Option<String>,
     /// seed offset for the prompt stream shuffle (`stream_seed + run seed`)
     pub stream_seed: u64,
     /// seed offset for replayed-segment reshuffles
@@ -303,6 +307,13 @@ impl ScenarioSpec {
                 _ => return Err("spec: budget must be positive and finite".to_string()),
             },
         };
+        let policy = match sc.get("policy") {
+            None => None,
+            Some(v) => match v.as_str() {
+                Some(p) if !p.is_empty() => Some(p.to_string()),
+                _ => return Err("spec: policy must be a non-empty string".to_string()),
+            },
+        };
         let mut events = Vec::new();
         if let Some(arr) = j.get("event").and_then(Json::as_arr) {
             for (i, ev) in arr.iter().enumerate() {
@@ -326,6 +337,7 @@ impl ScenarioSpec {
             steps: get_u("steps", 0)?,
             k: get_u("k", 3)? as usize,
             budget,
+            policy,
             stream_seed: get_u("stream_seed", 9000)?,
             replay_salt: get_u("replay_salt", 0)?,
             events,
@@ -487,6 +499,19 @@ phase = 0
         assert!(e.contains("at"), "{e}");
         let e = ScenarioSpec::from_toml("[scenario]\nname = \"x\"\nbudget = 0\n").unwrap_err();
         assert!(e.contains("budget"), "{e}");
+    }
+
+    #[test]
+    fn policy_key_parses_and_validates() {
+        let spec = ScenarioSpec::from_toml(
+            "[scenario]\nname = \"p\"\nsteps = 10\npolicy = \"epsilon:0.2\"\n",
+        )
+        .unwrap();
+        assert_eq!(spec.policy.as_deref(), Some("epsilon:0.2"));
+        let spec = ScenarioSpec::from_toml("[scenario]\nname = \"p\"\n").unwrap();
+        assert_eq!(spec.policy, None);
+        let e = ScenarioSpec::from_toml("[scenario]\nname = \"p\"\npolicy = 3\n").unwrap_err();
+        assert!(e.contains("policy"), "{e}");
     }
 
     #[test]

@@ -13,6 +13,8 @@
 //!   snapshot       {"op":"snapshot","path":str}
 //!   restore        {"op":"restore","path":str}
 //!   metrics        {"op":"metrics"}
+//!   compare        {"op":"compare"}  (served policy vs shadow policies,
+//!                                     counterfactual series)
 //!   sync           {"op":"sync"}   (engine: force a merge cycle;
 //!                                   single worker: well-defined no-op,
 //!                                   answers synced_shards=1)
@@ -23,20 +25,34 @@
 //! `"code"` on failure (table in the README).  Models are addressed by
 //! stable arm id or by name; `add_model` rejects duplicate active names.
 //!
+//! Routing runs through the Policy API v2 hosting layer
+//! ([`crate::router::PolicyHost`]): `serve --policy <name>` picks any
+//! registered [`crate::router::RoutingPolicy`], and `--shadow <a,b>`
+//! attaches **shadow policies** that see the same request stream and are
+//! scored counterfactually — their decisions are logged (never served),
+//! matched decisions absorb the realised feedback, and per-policy
+//! quality/cost/λ series surface in `metrics` and `compare` (see
+//! `docs/policies.md`).
+//!
 //! The handler is a pure function over (state, [`Request`]) so the
 //! protocol is unit-testable without sockets; `serve.rs` adds the TCP
 //! plumbing for one worker and `engine.rs` for N sharded workers, both
 //! dispatching the same typed requests so the two paths cannot drift.
 
+use std::collections::{HashMap, VecDeque};
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::router::{ContextCache, FeedbackEvent, FeedbackQueue, ModelRef, ParetoRouter, Pending, Prior};
+use crate::router::{
+    build_policy, BuildCtx, ContextCache, FeedbackEvent, FeedbackQueue, ModelRef, ParetoRouter,
+    Pending, PolicyHost,
+};
 use crate::scenario::snapshot;
 use crate::scenario::Event;
 use crate::server::metrics::Metrics;
 use crate::server::proto::{ErrorCode, FeedbackItem, Request, Response, RouteItem};
+use crate::util::json::Json;
 
 /// Text -> context featurizer abstraction (production: PJRT embedder;
 /// tests: any closure).
@@ -50,10 +66,76 @@ impl<F: Fn(&str) -> anyhow::Result<Vec<f64>>> Featurize for F {
     }
 }
 
+/// Pending shadow decisions: request id → the arm each shadow picked.
+///
+/// FIFO-bounded like the context cache; an id reused before its feedback
+/// arrives may, in rare interleavings, shed one scoring record early —
+/// shadow statistics are estimates, so approximate eviction is fine.
+struct ShadowPending {
+    map: HashMap<u64, Vec<usize>>,
+    order: VecDeque<u64>,
+    cap: usize,
+}
+
+impl ShadowPending {
+    fn new(cap: usize) -> ShadowPending {
+        ShadowPending {
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    fn insert(&mut self, id: u64, arms: Vec<usize>) {
+        if self.map.insert(id, arms).is_none() {
+            self.order.push_back(id);
+        }
+        // bound BOTH sides: `take` removes map entries but leaves their
+        // queue slots behind, so the queue is drained on live overflow
+        // (map over cap) AND on stale buildup (queue over 2x cap) — the
+        // latter pops mostly already-claimed ids
+        while self.map.len() > self.cap || self.order.len() > 2 * self.cap {
+            match self.order.pop_front() {
+                Some(old) => {
+                    self.map.remove(&old);
+                }
+                None => break,
+            }
+        }
+    }
+
+    fn take(&mut self, id: u64) -> Option<Vec<usize>> {
+        self.map.remove(&id)
+    }
+
+    fn clear(&mut self) {
+        self.map.clear();
+        self.order.clear();
+    }
+}
+
+/// One shadow policy riding the live stream (never served).
+pub struct Shadow {
+    /// builder spec string (`name[:arg]`) — kept to reseat the shadow
+    /// cold after a `restore` replaces the served portfolio
+    spec: String,
+    d: usize,
+    budget: Option<f64>,
+    seed: u64,
+    host: PolicyHost,
+}
+
+impl Shadow {
+    /// The shadow policy's display name.
+    pub fn name(&self) -> &str {
+        self.host.name()
+    }
+}
+
 /// Server-side state owned by one worker (the single server's only worker,
 /// or one shard of the sharded engine).
 pub struct ServerState {
-    pub router: ParetoRouter,
+    pub host: PolicyHost,
     pub cache: ContextCache,
     pub featurizer: Box<dyn Featurize>,
     pub metrics: Arc<Metrics>,
@@ -62,23 +144,91 @@ pub struct ServerState {
     /// `Some` switches feedback to sharded mode: rewards are queued for
     /// the batched merge cycle while costs still hit the pacer per event
     pub queue: Option<FeedbackQueue>,
+    /// shadow policies scored counterfactually on this shard's stream
+    pub shadows: Vec<Shadow>,
+    shadow_pending: ShadowPending,
 }
 
+/// Pending-shadow capacity (matches the serve default context cache).
+const SHADOW_PENDING_CAP: usize = 1 << 16;
+
 impl ServerState {
-    /// Single-worker state (shard 0, per-event feedback).
+    /// Single-worker state over the flagship router (shard 0, per-event
+    /// feedback).  The router becomes the hosted `paretobandit` policy.
     pub fn new(
         router: ParetoRouter,
         cache: ContextCache,
         featurizer: Box<dyn Featurize>,
         metrics: Arc<Metrics>,
     ) -> ServerState {
+        let host = PolicyHost::new(Box::new(router), None).with_kind("paretobandit");
+        ServerState::with_host(host, cache, featurizer, metrics)
+    }
+
+    /// Single-worker state over any hosted policy.
+    pub fn with_host(
+        host: PolicyHost,
+        cache: ContextCache,
+        featurizer: Box<dyn Featurize>,
+        metrics: Arc<Metrics>,
+    ) -> ServerState {
+        metrics.set_policy(host.name());
         ServerState {
-            router,
+            host,
             cache,
             featurizer,
             metrics,
             shard: 0,
             queue: None,
+            shadows: Vec::new(),
+            shadow_pending: ShadowPending::new(SHADOW_PENDING_CAP),
+        }
+    }
+
+    /// Attach a shadow policy built from a `name[:arg]` builder spec.
+    /// The shadow starts cold on the served host's current slot layout
+    /// (tombstones included, so slot ids stay comparable).
+    pub fn add_shadow(
+        &mut self,
+        spec: &str,
+        d: usize,
+        budget: Option<f64>,
+        seed: u64,
+    ) -> Result<(), String> {
+        let ctx = BuildCtx {
+            d,
+            budget,
+            seed,
+            models: &[],
+        };
+        let mut host = build_policy(spec, &ctx)?;
+        host.sync_portfolio(&self.host.registry().slot_entries());
+        self.shadows.push(Shadow {
+            spec: spec.to_string(),
+            d,
+            budget,
+            seed,
+            host,
+        });
+        Ok(())
+    }
+
+    /// Rebuild every shadow cold on the served host's slot layout (after
+    /// a restore replaced the portfolio).  Shadow statistics in the
+    /// metrics registry are kept — they describe the stream so far.
+    fn reseat_shadows(&mut self) {
+        let slots = self.host.registry().slot_entries();
+        for sh in &mut self.shadows {
+            let ctx = BuildCtx {
+                d: sh.d,
+                budget: sh.budget,
+                seed: sh.seed,
+                models: &[],
+            };
+            if let Ok(mut host) = build_policy(&sh.spec, &ctx) {
+                host.sync_portfolio(&slots);
+                sh.host = host;
+            }
         }
     }
 
@@ -100,7 +250,7 @@ impl ServerState {
             return 0;
         }
         let events = q.drain();
-        self.router.feedback_batch(&events);
+        self.host.apply_update_batch(&events);
         events.len()
     }
 }
@@ -119,10 +269,7 @@ impl ServerState {
     pub fn handle(&mut self, req: &Request) -> (Response, bool) {
         match req {
             Request::Route(it) => (self.op_route(it), false),
-            Request::RouteBatch { id, items } => {
-                let results = items.iter().map(|it| self.op_route(it)).collect();
-                (Response::Batch { id: *id, results }, false)
-            }
+            Request::RouteBatch { id, items } => (self.op_route_batch(*id, items), false),
             Request::Feedback(it) => (self.op_feedback(it), false),
             Request::FeedbackBatch { id, items } => {
                 let results = items.iter().map(|it| self.op_feedback(it)).collect();
@@ -153,8 +300,74 @@ impl ServerState {
                 },
                 false,
             ),
+            Request::Compare { id } => (
+                Response::Compare {
+                    id: *id,
+                    report: self.metrics.compare_report(),
+                },
+                false,
+            ),
             Request::Sync { id } => (self.op_sync(*id), false),
             Request::Shutdown { id } => (Response::Shutdown { id: *id }, true),
+        }
+    }
+
+    /// Shadow routing for one served request: every shadow sees the same
+    /// context; decisions are logged for counterfactual scoring at
+    /// feedback time, never served.
+    fn route_shadows(&mut self, request_id: u64, x: &[f64]) {
+        if self.shadows.is_empty() {
+            return;
+        }
+        let mut arms = Vec::with_capacity(self.shadows.len());
+        for (i, sh) in self.shadows.iter_mut().enumerate() {
+            let sd = sh.host.route(x);
+            self.metrics.shadow_route(i, sh.host.name());
+            arms.push(sd.arm);
+        }
+        self.shadow_pending.insert(request_id, arms);
+    }
+
+    /// Counterfactual scoring at feedback time: a shadow that picked the
+    /// served arm absorbs the realised (reward, cost); one that diverged
+    /// is charged the realised cost rescaled by the declared-price ratio
+    /// of its arm to the served arm (same request size, the shadow's
+    /// list price — falling back to the raw blended $/1k rate when the
+    /// served price is degenerate).  The reward stays unknown on a
+    /// divergence — bandit feedback exists only for the served arm.
+    fn score_shadows(&mut self, it: &FeedbackItem, served: &Pending) {
+        let Some(arms) = self.shadow_pending.take(it.id) else {
+            return;
+        };
+        let served_blended = self
+            .host
+            .registry()
+            .get(served.arm)
+            .map_or(0.0, |e| e.blended_per_1k);
+        for (i, (sh, &sa)) in self.shadows.iter_mut().zip(arms.iter()).enumerate() {
+            let matched = sa == served.arm;
+            let shadow_blended =
+                sh.host.registry().get(sa).map_or(0.0, |e| e.blended_per_1k);
+            let est_cost = if matched {
+                it.cost
+            } else if served_blended > 0.0 && it.cost > 0.0 {
+                it.cost * shadow_blended / served_blended
+            } else {
+                shadow_blended
+            };
+            if matched {
+                sh.host.feedback(sa, &served.context, it.reward, est_cost);
+            } else {
+                // the shadow's own pacer still tracks its estimated spend
+                sh.host.observe_cost(est_cost);
+            }
+            self.metrics.shadow_feedback(
+                i,
+                matched,
+                matched.then_some(it.reward),
+                est_cost,
+                sh.host.lambda(),
+            );
         }
     }
 
@@ -174,21 +387,23 @@ impl ServerState {
             }
         };
         let t1 = Instant::now();
-        let d = self.router.route(&x);
+        let d = self.host.route(&x);
         let route_us = t1.elapsed().as_nanos() as f64 / 1e3;
         let name = self
-            .router
+            .host
             .registry()
             .get(d.arm)
             .map(|e| e.name.clone())
             .unwrap_or_default();
+        self.route_shadows(it.id, &x);
         self.cache.insert(Pending {
             request_id: it.id,
             arm: d.arm,
             context: x,
         });
         let e2e_us = t0.elapsed().as_nanos() as f64 / 1e3;
-        self.metrics.record_route(self.shard, d.arm, route_us, e2e_us);
+        self.metrics
+            .record_route(self.shard, d.arm, route_us, e2e_us, d.lambda);
         Response::Route {
             id: it.id,
             arm: d.arm,
@@ -201,6 +416,82 @@ impl ServerState {
         }
     }
 
+    /// Vectorized batch routing: featurize per item (fallible items fail
+    /// alone), route the successes through ONE
+    /// [`PolicyHost::route_batch`] call — eligibility computed once for
+    /// the whole sub-batch — and reassemble per-item responses in
+    /// request order.  Latencies are attributed as the per-item mean of
+    /// the batch.
+    fn op_route_batch(&mut self, batch_id: Option<u64>, items: &[RouteItem]) -> Response {
+        let total = items.len();
+        let mut slots: Vec<Option<Response>> = (0..total).map(|_| None).collect();
+        let t0 = Instant::now();
+        let mut ok_idx = Vec::with_capacity(total);
+        let mut xs = Vec::with_capacity(total);
+        for (k, it) in items.iter().enumerate() {
+            match self.featurizer.featurize(&it.prompt) {
+                Ok(x) => {
+                    ok_idx.push(k);
+                    xs.push(x);
+                }
+                Err(e) => {
+                    self.metrics
+                        .errors
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    slots[k] = Some(Response::err(
+                        ErrorCode::FeaturizeFailed,
+                        format!("featurize: {e}"),
+                        Some(it.id),
+                    ));
+                }
+            }
+        }
+        let t1 = Instant::now();
+        let decisions = self.host.route_batch(&xs);
+        let n = xs.len().max(1) as f64;
+        let route_us = t1.elapsed().as_nanos() as f64 / 1e3 / n;
+        let e2e_us = t0.elapsed().as_nanos() as f64 / 1e3 / n;
+        for ((k, x), d) in ok_idx.into_iter().zip(xs).zip(decisions) {
+            let it = &items[k];
+            let name = self
+                .host
+                .registry()
+                .get(d.arm)
+                .map(|e| e.name.clone())
+                .unwrap_or_default();
+            self.route_shadows(it.id, &x);
+            self.cache.insert(Pending {
+                request_id: it.id,
+                arm: d.arm,
+                context: x,
+            });
+            self.metrics
+                .record_route(self.shard, d.arm, route_us, e2e_us, d.lambda);
+            slots[k] = Some(Response::Route {
+                id: it.id,
+                arm: d.arm,
+                model: name,
+                lambda: d.lambda,
+                forced: d.forced,
+                shard: self.shard,
+                route_us,
+                e2e_us,
+            });
+        }
+        let results = slots
+            .into_iter()
+            .map(|s| {
+                s.unwrap_or_else(|| {
+                    Response::err(ErrorCode::Unavailable, "batch item lost", None)
+                })
+            })
+            .collect();
+        Response::Batch {
+            id: batch_id,
+            results,
+        }
+    }
+
     fn op_feedback(&mut self, it: &FeedbackItem) -> Response {
         let Some(p) = self.cache.take(it.id) else {
             return Response::err(
@@ -209,6 +500,7 @@ impl ServerState {
                 Some(it.id),
             );
         };
+        self.score_shadows(it, &p);
         match self.queue.as_mut() {
             // sharded mode: queue the reward for the batched merge cycle,
             // but pay the cost to the (shared) pacer right now
@@ -218,9 +510,9 @@ impl ServerState {
                     context: p.context,
                     reward: it.reward,
                 });
-                self.router.observe_cost(it.cost);
+                self.host.observe_cost(it.cost);
             }
-            None => self.router.feedback(p.arm, &p.context, it.reward, it.cost),
+            None => self.host.feedback(p.arm, &p.context, it.reward, it.cost),
         }
         self.metrics.record_feedback(it.reward, it.cost);
         Response::Feedback {
@@ -237,16 +529,18 @@ impl ServerState {
         price_out: f64,
         prior: Option<(f64, f64)>,
     ) -> Response {
-        let prior = match prior {
-            Some((n_eff, r0)) => Prior::Heuristic { n_eff, r0 },
-            None => Prior::Cold,
-        };
-        match self.router.try_add_model(name, price_in, price_out, prior) {
-            Some(arm) => Response::AddModel {
-                id,
-                arm,
-                name: name.to_string(),
-            },
+        match self.host.try_add_model(name, price_in, price_out, prior) {
+            Some(arm) => {
+                // shadows mirror the portfolio so slot ids stay comparable
+                for sh in &mut self.shadows {
+                    sh.host.add_model(name, price_in, price_out, prior);
+                }
+                Response::AddModel {
+                    id,
+                    arm,
+                    name: name.to_string(),
+                }
+            }
             None => Response::err(
                 ErrorCode::DuplicateModel,
                 format!("add_model: '{name}' is already registered"),
@@ -256,7 +550,7 @@ impl ServerState {
     }
 
     fn op_delete_model(&mut self, id: Option<u64>, model: &ModelRef) -> Response {
-        let Some(slot) = self.router.registry().resolve(model) else {
+        let Some(slot) = self.host.registry().resolve(model) else {
             return Response::err(
                 ErrorCode::UnknownModel,
                 format!("delete_model: no such {model}"),
@@ -264,7 +558,10 @@ impl ServerState {
             );
         };
         // resolve only returns active slots, so delete cannot fail here
-        self.router.delete_model(slot);
+        self.host.delete_model(slot);
+        for sh in &mut self.shadows {
+            sh.host.delete_model(slot);
+        }
         Response::DeleteModel { id, arm: slot }
     }
 
@@ -275,14 +572,17 @@ impl ServerState {
         price_in: f64,
         price_out: f64,
     ) -> Response {
-        let Some(slot) = self.router.registry().resolve(model) else {
+        let Some(slot) = self.host.registry().resolve(model) else {
             return Response::err(
                 ErrorCode::UnknownModel,
                 format!("reprice: no such {model}"),
                 id,
             );
         };
-        self.router.reprice(slot, price_in, price_out);
+        self.host.reprice(slot, price_in, price_out);
+        for sh in &mut self.shadows {
+            sh.host.reprice(slot, price_in, price_out);
+        }
         Response::Reprice { id, arm: slot }
     }
 
@@ -290,7 +590,10 @@ impl ServerState {
         // value validation happened at parse time; pacer presence is state
         // the parser cannot see.  The pacer keeps its λ across the change —
         // only the ceiling the dual gradient is normalised against moves.
-        if self.router.set_budget(budget) {
+        if self.host.set_budget(budget) {
+            for sh in &mut self.shadows {
+                sh.host.set_budget(budget);
+            }
             Response::SetBudget { id, budget }
         } else {
             Response::err(
@@ -376,18 +679,18 @@ impl ServerState {
     }
 
     /// `snapshot`: fold any queued rewards, then persist the complete
-    /// learned state.  On the sharded engine this handler runs on shard
-    /// 0 right after a forced merge cycle, so the file holds the
-    /// post-merge *global* posterior.
+    /// learned state tagged with the policy kind.  On the sharded engine
+    /// this handler runs on shard 0 right after a forced merge cycle, so
+    /// the file holds the post-merge *global* posterior.
     fn op_snapshot(&mut self, id: Option<u64>, path: &str) -> Response {
         self.apply_queued();
-        let st = self.router.export_state();
-        match snapshot::save(Path::new(path), &st) {
+        let st = self.host.export_state();
+        match snapshot::save_value(Path::new(path), Some(self.host.kind()), &st) {
             Ok(()) => Response::Snapshot {
                 id,
                 path: path.to_string(),
-                arms: st.n_active(),
-                t: st.t,
+                arms: self.host.registry().n_active(),
+                t: self.host.step(),
             },
             Err(e) => Response::err(ErrorCode::SnapshotIo, format!("snapshot: {e}"), id),
         }
@@ -397,35 +700,55 @@ impl ServerState {
     /// single-worker path; the engine loads the file once in its merger
     /// and broadcasts the parsed state to [`ServerState::apply_restore`]).
     fn op_restore(&mut self, id: Option<u64>, path: &str) -> Response {
-        match snapshot::load(Path::new(path)) {
-            Ok(st) => self.apply_restore(id, &st),
+        match snapshot::load_value(Path::new(path)) {
+            Ok((tag, st)) => self.apply_restore(id, tag.as_deref(), &st),
             Err(e) => Response::err(ErrorCode::SnapshotIo, format!("restore: {e}"), id),
         }
     }
 
     /// Warm-restart this worker from an already-parsed snapshot state.
-    /// The pending-context cache and any queued rewards are dropped —
-    /// they describe the pre-restore posterior — so late feedback for
-    /// pre-restore ids answers `unknown_id` rather than corrupting the
-    /// restored arms.
-    pub(crate) fn apply_restore(&mut self, id: Option<u64>, st: &crate::router::RouterState) -> Response {
-        match self.router.restore_state(st) {
+    /// The pending-context cache, pending shadow decisions and any queued
+    /// rewards are dropped — they describe the pre-restore posterior — so
+    /// late feedback for pre-restore ids answers `unknown_id` rather than
+    /// corrupting the restored arms.  Shadows are reseated cold on the
+    /// restored slot layout.
+    pub(crate) fn apply_restore(
+        &mut self,
+        id: Option<u64>,
+        tag: Option<&str>,
+        st: &Json,
+    ) -> Response {
+        if let Some(tag) = tag {
+            if tag != self.host.kind() {
+                return Response::err(
+                    ErrorCode::SnapshotIo,
+                    format!(
+                        "restore: snapshot holds policy '{tag}' but this server runs '{}'",
+                        self.host.kind()
+                    ),
+                    id,
+                );
+            }
+        }
+        match self.host.restore_state(st) {
             Ok(()) => {
                 // the snapshot carries one RNG stream; replicas beyond
                 // shard 0 fork theirs so a restored fleet keeps distinct
                 // per-shard exploration noise
                 if self.shard != 0 {
-                    self.router.fork_rng(self.shard as u64);
+                    self.host.fork_rng(self.shard as u64);
                 }
                 self.cache.clear();
+                self.shadow_pending.clear();
                 if let Some(q) = self.queue.as_mut() {
                     q.drain();
                     q.take_dropped();
                 }
+                self.reseat_shadows();
                 Response::Restore {
                     id,
-                    arms: st.n_active(),
-                    t: st.t,
+                    arms: self.host.registry().n_active(),
+                    t: self.host.step(),
                 }
             }
             Err(e) => Response::err(ErrorCode::SnapshotIo, format!("restore: {e}"), id),
@@ -456,14 +779,18 @@ mod tests {
 
     fn state() -> ServerState {
         let mut router = ParetoRouter::new(RouterConfig::tabula_rasa(4, Some(1e-3), 1));
-        router.add_model("llama", 0.1, 0.1, Prior::Cold);
-        router.add_model("mistral", 0.4, 1.6, Prior::Cold);
+        router.add_model("llama", 0.1, 0.1, crate::router::Prior::Cold);
+        router.add_model("mistral", 0.4, 1.6, crate::router::Prior::Cold);
         ServerState::new(
             router,
             ContextCache::new(1000),
             Box::new(|t: &str| Ok(vec![t.len() as f64 % 3.0, 0.0, 0.5, 1.0])),
             Arc::new(Metrics::new()),
         )
+    }
+
+    fn pareto(st: &ServerState) -> &ParetoRouter {
+        st.host.policy_as::<ParetoRouter>().expect("pareto policy")
     }
 
     /// Parse a wire line the way the connection handlers do.
@@ -533,6 +860,36 @@ mod tests {
     }
 
     #[test]
+    fn batch_featurizer_failure_fails_alone() {
+        let mut router = ParetoRouter::new(RouterConfig::tabula_rasa(4, Some(1e-3), 1));
+        router.add_model("llama", 0.1, 0.1, crate::router::Prior::Cold);
+        let mut st = ServerState::new(
+            router,
+            ContextCache::new(16),
+            Box::new(|t: &str| {
+                anyhow::ensure!(!t.contains("POISON"), "poisoned prompt");
+                Ok(vec![0.0, 0.0, 0.5, 1.0])
+            }),
+            Arc::new(Metrics::new()),
+        );
+        let (resp, _) = st.handle(&req(
+            r#"{"op":"route_batch","items":[
+                {"id":1,"prompt":"fine"},
+                {"id":2,"prompt":"POISON pill"},
+                {"id":3,"prompt":"also fine"}]}"#,
+        ));
+        let Response::Batch { results, .. } = &resp else {
+            panic!("expected batch: {resp:?}")
+        };
+        assert!(results[0].is_ok());
+        assert_eq!(code_of(&results[1]), Some(ErrorCode::FeaturizeFailed));
+        assert!(results[2].is_ok());
+        // the healthy items are routed and pending
+        let (resp, _) = st.handle(&req(r#"{"op":"feedback","id":3,"reward":0.5,"cost":1e-4}"#));
+        assert!(resp.is_ok());
+    }
+
+    #[test]
     fn hot_swap_via_api_with_name_addressing() {
         let mut st = state();
         let (resp, _) = st.handle(&req(
@@ -580,6 +937,69 @@ mod tests {
         assert_eq!(m.get("requests").unwrap().as_f64(), Some(5.0));
         assert_eq!(m.get("feedbacks").unwrap().as_f64(), Some(5.0));
         assert!((m.get("mean_cost").unwrap().as_f64().unwrap() - 2e-4).abs() < 1e-12);
+        // the active policy and its dual are part of the snapshot
+        assert_eq!(m.get("policy").unwrap().as_str(), Some("ParetoBandit"));
+        assert!(m.get("lambda").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn shadows_score_counterfactually_without_touching_served_state() {
+        let mut with = state();
+        with.add_shadow("fixed:mistral", 4, Some(1e-3), 777).unwrap();
+        with.add_shadow("random", 4, Some(1e-3), 778).unwrap();
+        let mut without = state();
+        let mut served_with = Vec::new();
+        let mut served_without = Vec::new();
+        for i in 0..40u64 {
+            let line = format!(r#"{{"op":"route","id":{i},"prompt":"question {i}"}}"#);
+            let (a, _) = with.handle(&req(&line));
+            let (b, _) = without.handle(&req(&line));
+            let Response::Route { arm: aa, .. } = a else { panic!("{a:?}") };
+            let Response::Route { arm: ba, .. } = b else { panic!("{b:?}") };
+            served_with.push(aa);
+            served_without.push(ba);
+            let fb = format!(r#"{{"op":"feedback","id":{i},"reward":0.8,"cost":0.0001}}"#);
+            with.handle(&req(&fb));
+            without.handle(&req(&fb));
+        }
+        // shadow evaluation must not perturb served decisions
+        assert_eq!(served_with, served_without);
+        let (resp, _) = with.handle(&req(r#"{"op":"compare","id":5}"#));
+        let j = resp.to_json();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("id").unwrap().as_f64(), Some(5.0));
+        let shadows = j.get("shadows").unwrap().as_arr().unwrap();
+        assert_eq!(shadows.len(), 2);
+        assert_eq!(shadows[0].get("policy").unwrap().as_str(), Some("Fixed(mistral)"));
+        assert_eq!(shadows[0].get("decisions").unwrap().as_f64(), Some(40.0));
+        assert_eq!(shadows[0].get("scored").unwrap().as_f64(), Some(40.0));
+        // the fixed shadow always picks mistral: diverging decisions are
+        // charged the realised cost rescaled by mistral's price ratio
+        let est = shadows[0].get("est_mean_cost").unwrap().as_f64().unwrap();
+        assert!(est > 0.0);
+        // served summary names the active policy
+        assert_eq!(
+            j.get("served").unwrap().get("policy").unwrap().as_str(),
+            Some("ParetoBandit")
+        );
+    }
+
+    #[test]
+    fn admin_ops_keep_shadows_slot_aligned() {
+        let mut st = state();
+        st.add_shadow("epsilon:0.2", 4, Some(1e-3), 9).unwrap();
+        st.handle(&req(
+            r#"{"op":"add_model","name":"flash","price_in":0.3,"price_out":2.5}"#,
+        ));
+        assert_eq!(st.shadows[0].host.registry().find("flash"), Some(2));
+        st.handle(&req(r#"{"op":"delete_model","model":"flash"}"#));
+        assert!(!st.shadows[0].host.registry().is_active(2));
+        st.handle(&req(
+            r#"{"op":"reprice","model":"mistral","price_in":0.2,"price_out":0.8}"#,
+        ));
+        let served = st.host.registry().get(1).unwrap().blended_per_1k;
+        let shadow = st.shadows[0].host.registry().get(1).unwrap().blended_per_1k;
+        assert_eq!(served, shadow);
     }
 
     #[test]
@@ -587,7 +1007,7 @@ mod tests {
         let mut st = state();
         let (resp, _) = st.handle(&req(r#"{"op":"set_budget","budget":0.002}"#));
         assert!(resp.is_ok());
-        assert_eq!(st.router.pacer().unwrap().budget(), 0.002);
+        assert_eq!(pareto(&st).pacer().unwrap().budget(), 0.002);
         // a pacerless router answers with the no_pacer code
         let mut free = ServerState::new(
             ParetoRouter::new(RouterConfig::unconstrained(4, 2)),
@@ -595,7 +1015,7 @@ mod tests {
             Box::new(|_: &str| Ok(vec![0.0; 4])),
             Arc::new(Metrics::new()),
         );
-        free.router.add_model("m", 0.1, 0.1, Prior::Cold);
+        free.host.add_model("m", 0.1, 0.1, None);
         let (resp, _) = free.handle(&req(r#"{"op":"set_budget","budget":0.002}"#));
         assert_eq!(code_of(&resp), Some(ErrorCode::NoPacer));
     }
@@ -618,12 +1038,12 @@ mod tests {
             assert!(resp.is_ok());
         }
         // rewards deferred: no arm has absorbed an observation yet...
-        let n_before: u64 = (0..2).map(|i| st.router.arm(i).unwrap().n_obs).sum();
+        let n_before: u64 = (0..2).map(|i| pareto(&st).arm(i).unwrap().n_obs).sum();
         assert_eq!(n_before, 0);
         // ...but costs were paid to the pacer in realtime (2x over budget)
-        assert!(st.router.pacer().unwrap().cbar() > 1e-3);
+        assert!(pareto(&st).pacer().unwrap().cbar() > 1e-3);
         assert_eq!(st.apply_queued(), 6);
-        let n_after: u64 = (0..2).map(|i| st.router.arm(i).unwrap().n_obs).sum();
+        let n_after: u64 = (0..2).map(|i| pareto(&st).arm(i).unwrap().n_obs).sum();
         assert_eq!(n_after, 6);
         assert_eq!(st.apply_queued(), 0, "queue must be empty after apply");
     }
@@ -682,15 +1102,15 @@ mod tests {
         assert_eq!(arms, 2);
         assert_eq!(t, 40);
         st.handle(&req(r#"{"op":"delete_model","model":"mistral"}"#));
-        assert_eq!(st.router.registry().n_active(), 1);
+        assert_eq!(st.host.registry().n_active(), 1);
         let line = format!(r#"{{"op":"restore","id":3,"path":"{}"}}"#, path.display());
         let (resp, _) = st.handle(&req(&line));
         let Response::Restore { arms, t, .. } = resp else {
             panic!("restore failed: {resp:?}")
         };
         assert_eq!((arms, t), (2, 40));
-        assert_eq!(st.router.registry().n_active(), 2);
-        assert_eq!(st.router.step(), 40);
+        assert_eq!(st.host.registry().n_active(), 2);
+        assert_eq!(st.host.step(), 40);
         // pending contexts were dropped with the restore
         st.handle(&req(r#"{"op":"route","id":90,"prompt":"pre-restore"}"#));
         let snap_line = format!(r#"{{"op":"restore","path":"{}"}}"#, path.display());
@@ -703,6 +1123,22 @@ mod tests {
             r#"{"op":"restore","path":"/nonexistent/x.snap.json"}"#,
         ));
         assert_eq!(code_of(&resp), Some(ErrorCode::SnapshotIo));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn restore_rejects_a_foreign_policy_snapshot() {
+        let dir = std::env::temp_dir().join(format!("pb_api_tag_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("eps.snap.json");
+        snapshot::save_value(&path, Some("epsilon"), &Json::obj(vec![("t", Json::Num(0.0))]))
+            .unwrap();
+        let mut st = state();
+        let line = format!(r#"{{"op":"restore","path":"{}"}}"#, path.display());
+        let (resp, _) = st.handle(&req(&line));
+        assert_eq!(code_of(&resp), Some(ErrorCode::SnapshotIo));
+        let Response::Error(e) = &resp else { unreachable!() };
+        assert!(e.msg.contains("holds policy 'epsilon'"), "{}", e.msg);
         let _ = std::fs::remove_file(&path);
     }
 
@@ -734,7 +1170,7 @@ mod tests {
     #[test]
     fn featurizer_failure_is_a_typed_error() {
         let mut router = ParetoRouter::new(RouterConfig::tabula_rasa(4, Some(1e-3), 1));
-        router.add_model("llama", 0.1, 0.1, Prior::Cold);
+        router.add_model("llama", 0.1, 0.1, crate::router::Prior::Cold);
         let mut st = ServerState::new(
             router,
             ContextCache::new(16),

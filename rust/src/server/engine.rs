@@ -57,7 +57,7 @@ use super::api::{Job, ServerState};
 use super::metrics::Metrics;
 use super::proto::{ErrorCode, FeedbackItem, Request, Response, RouteItem};
 use crate::bandit::ArmState;
-use crate::router::{FeedbackQueue, RouterState};
+use crate::router::FeedbackQueue;
 use crate::util::json::Json;
 
 /// Owner-table capacity *per shard*: ids routed but not yet claimed by
@@ -108,9 +108,9 @@ enum ShardMsg {
     Sync(mpsc::Sender<SyncReport>),
     /// adopt the broadcast global posterior stamped with its epoch
     Adopt(u64, Arc<Vec<Option<ArmState>>>),
-    /// warm-restart from a snapshot the merger parsed once (the echoed
-    /// request id rides along)
-    Restore(Option<u64>, Arc<RouterState>, mpsc::Sender<Response>),
+    /// warm-restart from a snapshot the merger parsed once — `(policy
+    /// tag, state)` — with the echoed request id riding along
+    Restore(Option<u64>, Arc<(Option<String>, Json)>, mpsc::Sender<Response>),
     Stop,
 }
 
@@ -275,6 +275,15 @@ impl Dispatch {
                 Response::Metrics {
                     id,
                     snapshot: self.metrics.snapshot(),
+                },
+                false,
+            ),
+            // shadow scoring aggregates into the shared metrics registry,
+            // so compare answers at the dispatcher like metrics does
+            Request::Compare { id } => (
+                Response::Compare {
+                    id,
+                    report: self.metrics.compare_report(),
                 },
                 false,
             ),
@@ -595,6 +604,7 @@ impl ShardedEngine {
                         let mut state = (*build)(shard);
                         state.shard = shard;
                         state.metrics = metrics;
+                        state.metrics.set_policy(state.host.name());
                         if state.queue.is_none() {
                             state.queue = Some(FeedbackQueue::new());
                         }
@@ -703,15 +713,18 @@ fn shard_loop(mut state: ServerState, rx: mpsc::Receiver<ShardMsg>) {
                 state.apply_queued();
                 let _ = reply.send(SyncReport {
                     epoch,
-                    arms: state.router.export_arms(),
+                    // policies with nothing mergeable report an empty
+                    // replica; the fold and broadcast become no-ops
+                    arms: state.host.export_arms().unwrap_or_default(),
                 });
             }
             ShardMsg::Adopt(e, global) => {
-                state.router.adopt_arms(&global);
+                state.host.adopt_arms(&global);
                 epoch = e;
             }
             ShardMsg::Restore(id, st, reply) => {
-                let _ = reply.send(state.apply_restore(id, &st));
+                let (tag, state_json) = (&st.0, &st.1);
+                let _ = reply.send(state.apply_restore(id, tag.as_deref(), state_json));
             }
             ShardMsg::Stop => break,
         }
@@ -759,15 +772,16 @@ fn merger_loop(
                 // mid-broadcast leaves replicas on different posteriors)
                 // and re-parse the same bytes N times
                 if let Request::Restore { id, path } = &req {
-                    let resp = match crate::scenario::snapshot::load(std::path::Path::new(path))
-                    {
+                    let resp = match crate::scenario::snapshot::load_value(
+                        std::path::Path::new(path),
+                    ) {
                         Err(e) => Response::err(
                             ErrorCode::SnapshotIo,
                             format!("restore: {e}"),
                             *id,
                         ),
-                        Ok(st) => {
-                            let st = Arc::new(st);
+                        Ok(tagged) => {
+                            let st = Arc::new(tagged);
                             broadcast_acks(&shard_txs, req.id(), |tx, t| {
                                 tx.send(ShardMsg::Restore(*id, st.clone(), t)).is_ok()
                             })

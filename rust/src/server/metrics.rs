@@ -83,6 +83,66 @@ impl Default for LatencyHisto {
     }
 }
 
+/// Counterfactual scoring record for one shadow policy (see
+/// `docs/policies.md`): decisions are logged, never served; a matched
+/// decision (shadow picked the served arm) is scored with the realised
+/// reward/cost, an unmatched one with the realised cost rescaled by the
+/// declared-price ratio of the arm the shadow *would* have served (same
+/// request, the shadow's list price).
+#[derive(Clone, Default)]
+pub struct ShadowStat {
+    pub name: String,
+    /// shadow routing decisions taken
+    pub decisions: u64,
+    /// decisions that received feedback (matched + unmatched)
+    pub scored: u64,
+    /// scored decisions that agreed with the served arm
+    pub matched: u64,
+    /// realised-reward sum over matched decisions
+    pub reward_matched: f64,
+    /// estimated $ spend (realised when matched, declared otherwise)
+    pub est_spend: f64,
+    /// the shadow's own pacer dual λ, as of the last scored decision
+    pub lambda: f64,
+}
+
+impl ShadowStat {
+    /// Wire/report object shape (shared by `metrics` and `compare`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("policy", Json::Str(self.name.clone())),
+            ("decisions", Json::Num(self.decisions as f64)),
+            ("scored", Json::Num(self.scored as f64)),
+            ("matched", Json::Num(self.matched as f64)),
+            (
+                "match_rate",
+                Json::Num(if self.scored > 0 {
+                    self.matched as f64 / self.scored as f64
+                } else {
+                    0.0
+                }),
+            ),
+            (
+                "mean_reward_matched",
+                Json::Num(if self.matched > 0 {
+                    self.reward_matched / self.matched as f64
+                } else {
+                    0.0
+                }),
+            ),
+            (
+                "est_mean_cost",
+                Json::Num(if self.scored > 0 {
+                    self.est_spend / self.scored as f64
+                } else {
+                    0.0
+                }),
+            ),
+            ("lambda", Json::Num(self.lambda)),
+        ])
+    }
+}
+
 /// Global serving metrics, shared by every worker shard of an engine.
 #[derive(Default)]
 pub struct Metrics {
@@ -103,6 +163,12 @@ pub struct Metrics {
     pub per_arm: Mutex<Vec<u64>>,
     /// routed-request counts per worker shard
     pub per_shard: Mutex<Vec<u64>>,
+    /// active routing-policy display name (set by the serving state)
+    pub policy: Mutex<String>,
+    /// f64 bits of the pacer dual λ at the last routed request
+    lambda_bits: AtomicU64,
+    /// per-shadow counterfactual scoring (index-aligned across shards)
+    pub shadow_stats: Mutex<Vec<ShadowStat>>,
 }
 
 impl Metrics {
@@ -110,8 +176,23 @@ impl Metrics {
         Metrics::default()
     }
 
-    pub fn record_route(&self, shard: usize, arm: usize, route_us: f64, e2e_us: f64) {
+    /// Record the active policy's display name (idempotent; every shard
+    /// of an engine reports the same configuration).
+    pub fn set_policy(&self, name: &str) {
+        let mut p = self.policy.lock().unwrap();
+        if p.as_str() != name {
+            *p = name.to_string();
+        }
+    }
+
+    /// Pacer dual λ at the last routed request.
+    pub fn lambda(&self) -> f64 {
+        f64::from_bits(self.lambda_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn record_route(&self, shard: usize, arm: usize, route_us: f64, e2e_us: f64, lambda: f64) {
         self.requests.fetch_add(1, Ordering::Relaxed);
+        self.lambda_bits.store(lambda.to_bits(), Ordering::Relaxed);
         self.route_latency.observe_us(route_us);
         self.e2e_latency.observe_us(e2e_us);
         let mut pa = self.per_arm.lock().unwrap();
@@ -131,6 +212,72 @@ impl Metrics {
         self.feedbacks.fetch_add(1, Ordering::Relaxed);
         *self.spend.lock().unwrap() += cost;
         *self.reward_sum.lock().unwrap() += reward;
+    }
+
+    /// One shadow routing decision for the shadow at `idx`.
+    pub fn shadow_route(&self, idx: usize, name: &str) {
+        let mut v = self.shadow_stats.lock().unwrap();
+        if v.len() <= idx {
+            v.resize_with(idx + 1, Default::default);
+        }
+        let s = &mut v[idx];
+        if s.name.is_empty() {
+            s.name = name.to_string();
+        }
+        s.decisions += 1;
+    }
+
+    /// Counterfactual score for the shadow at `idx`: `reward` is `Some`
+    /// only when the shadow's decision matched the served arm.
+    pub fn shadow_feedback(
+        &self,
+        idx: usize,
+        matched: bool,
+        reward: Option<f64>,
+        est_cost: f64,
+        lambda: f64,
+    ) {
+        let mut v = self.shadow_stats.lock().unwrap();
+        if v.len() <= idx {
+            v.resize_with(idx + 1, Default::default);
+        }
+        let s = &mut v[idx];
+        s.scored += 1;
+        if matched {
+            s.matched += 1;
+            s.reward_matched += reward.unwrap_or(0.0);
+        }
+        s.est_spend += est_cost;
+        s.lambda = lambda;
+    }
+
+    /// The `compare` report: served policy vs every shadow's
+    /// counterfactual series.
+    pub fn compare_report(&self) -> Json {
+        let nf = self.feedbacks.load(Ordering::Relaxed);
+        let spend = *self.spend.lock().unwrap();
+        let rsum = *self.reward_sum.lock().unwrap();
+        let served = Json::obj(vec![
+            ("policy", Json::Str(self.policy.lock().unwrap().clone())),
+            ("lambda", Json::Num(self.lambda())),
+            ("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
+            (
+                "mean_reward",
+                Json::Num(if nf > 0 { rsum / nf as f64 } else { 0.0 }),
+            ),
+            (
+                "mean_cost",
+                Json::Num(if nf > 0 { spend / nf as f64 } else { 0.0 }),
+            ),
+        ]);
+        let shadows = self
+            .shadow_stats
+            .lock()
+            .unwrap()
+            .iter()
+            .map(ShadowStat::to_json)
+            .collect();
+        Json::obj(vec![("served", served), ("shadows", Json::Arr(shadows))])
     }
 
     pub fn snapshot(&self) -> Json {
@@ -185,6 +332,19 @@ impl Metrics {
                         .collect(),
                 ),
             ),
+            ("policy", Json::Str(self.policy.lock().unwrap().clone())),
+            ("lambda", Json::Num(self.lambda())),
+            (
+                "shadows",
+                Json::Arr(
+                    self.shadow_stats
+                        .lock()
+                        .unwrap()
+                        .iter()
+                        .map(ShadowStat::to_json)
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -209,12 +369,15 @@ mod tests {
     #[test]
     fn metrics_snapshot_consistent() {
         let m = Metrics::new();
-        m.record_route(0, 1, 20.0, 900.0);
-        m.record_route(1, 1, 25.0, 950.0);
-        m.record_route(1, 0, 22.0, 800.0);
+        m.set_policy("ParetoBandit");
+        m.record_route(0, 1, 20.0, 900.0, 0.25);
+        m.record_route(1, 1, 25.0, 950.0, 0.5);
+        m.record_route(1, 0, 22.0, 800.0, 0.75);
         m.record_feedback(0.9, 1e-4);
         m.record_feedback(0.8, 2e-4);
         let s = m.snapshot();
+        assert_eq!(s.get("policy").unwrap().as_str(), Some("ParetoBandit"));
+        assert_eq!(s.get("lambda").unwrap().as_f64(), Some(0.75));
         assert_eq!(s.get("requests").unwrap().as_f64(), Some(3.0));
         assert!((s.get("mean_cost").unwrap().as_f64().unwrap() - 1.5e-4).abs() < 1e-9);
         assert_eq!(
@@ -232,5 +395,33 @@ mod tests {
         );
         // single-worker default is reported as one shard
         assert_eq!(s.get("workers").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn shadow_stats_score_counterfactually() {
+        let m = Metrics::new();
+        m.set_policy("EpsilonGreedy");
+        for _ in 0..4 {
+            m.shadow_route(0, "Random");
+        }
+        m.shadow_feedback(0, true, Some(0.9), 1e-4, 0.0);
+        m.shadow_feedback(0, false, None, 5.6e-3, 0.1);
+        let report = m.compare_report();
+        assert_eq!(
+            report.get("served").unwrap().get("policy").unwrap().as_str(),
+            Some("EpsilonGreedy")
+        );
+        let shadows = report.get("shadows").unwrap().as_arr().unwrap();
+        assert_eq!(shadows.len(), 1);
+        let s = &shadows[0];
+        assert_eq!(s.get("policy").unwrap().as_str(), Some("Random"));
+        assert_eq!(s.get("decisions").unwrap().as_f64(), Some(4.0));
+        assert_eq!(s.get("scored").unwrap().as_f64(), Some(2.0));
+        assert_eq!(s.get("match_rate").unwrap().as_f64(), Some(0.5));
+        assert_eq!(s.get("mean_reward_matched").unwrap().as_f64(), Some(0.9));
+        assert!((s.get("est_mean_cost").unwrap().as_f64().unwrap() - 2.85e-3).abs() < 1e-9);
+        // the snapshot carries the same shadow series
+        let snap = m.snapshot();
+        assert_eq!(snap.get("shadows").unwrap().as_arr().unwrap().len(), 1);
     }
 }

@@ -8,8 +8,8 @@ mod metrics;
 pub mod proto;
 mod serve;
 
-pub use api::{Featurize, ServerState};
+pub use api::{Featurize, ServerState, Shadow};
 pub use engine::{EngineConfig, ShardedEngine};
-pub use metrics::{LatencyHisto, Metrics};
+pub use metrics::{LatencyHisto, Metrics, ShadowStat};
 pub use proto::{ErrorCode, FeedbackItem, Request, Response, RouteItem, WireError, PROTO_V};
 pub use serve::{Client, Server};

@@ -177,6 +177,10 @@ pub enum Request {
     Metrics {
         id: Option<u64>,
     },
+    /// Served-vs-shadow policy comparison report (counterfactual series).
+    Compare {
+        id: Option<u64>,
+    },
     Sync {
         id: Option<u64>,
     },
@@ -393,6 +397,7 @@ impl Request {
                 })
             }
             "metrics" => Ok(Request::Metrics { id }),
+            "compare" => Ok(Request::Compare { id }),
             "sync" => Ok(Request::Sync { id }),
             "shutdown" => Ok(Request::Shutdown { id }),
             other => Err(bad(format!("unknown op '{other}'"))),
@@ -414,6 +419,7 @@ impl Request {
             | Request::Snapshot { id, .. }
             | Request::Restore { id, .. }
             | Request::Metrics { id }
+            | Request::Compare { id }
             | Request::Sync { id }
             | Request::Shutdown { id } => *id,
         }
@@ -477,6 +483,11 @@ pub enum Response {
     Metrics {
         id: Option<u64>,
         snapshot: Json,
+    },
+    /// `compare` report: `{"served": {...}, "shadows": [...]}`.
+    Compare {
+        id: Option<u64>,
+        report: Json,
     },
     Sync {
         id: Option<u64>,
@@ -587,6 +598,18 @@ impl Response {
             ),
             Response::Metrics { id, snapshot } => {
                 let mut m = match snapshot {
+                    Json::Obj(m) => m.clone(),
+                    _ => Default::default(),
+                };
+                m.insert("ok".to_string(), Json::Bool(true));
+                m.insert("v".to_string(), Json::Num(PROTO_V as f64));
+                if let Some(id) = id {
+                    m.insert("id".to_string(), Json::Num(*id as f64));
+                }
+                Json::Obj(m)
+            }
+            Response::Compare { id, report } => {
+                let mut m = match report {
                     Json::Obj(m) => m.clone(),
                     _ => Default::default(),
                 };

@@ -143,6 +143,49 @@ impl Rng {
         Rng { s, spare }
     }
 
+    /// Deterministically fork a decorrelated stream from this generator's
+    /// state.  The single home of the shard/replica fork recipe: a
+    /// snapshot carries ONE RNG state, so every replica beyond the donor
+    /// forks with its own salt to keep exploration noise distinct.
+    pub fn fork(&self, salt: u64) -> Rng {
+        Rng::new(self.s[0] ^ mix2(salt, self.s[1]))
+    }
+
+    /// Append the generator state to JSON object fields (`"rng"` as four
+    /// hex-string words — an f64 JSON number cannot carry 64 significant
+    /// bits — plus `"rng_spare"` when a Box–Muller spare is cached).  The
+    /// single home of the wire/snapshot codec; inverse: [`Rng::from_json`].
+    pub fn push_json_fields(&self, fields: &mut Vec<(&'static str, crate::util::json::Json)>) {
+        use crate::util::json::Json;
+        fields.push((
+            "rng",
+            Json::Arr(self.s.iter().map(|w| Json::Str(format!("{w:016x}"))).collect()),
+        ));
+        if let Some(spare) = self.spare {
+            fields.push(("rng_spare", Json::Num(spare)));
+        }
+    }
+
+    /// Rebuild a generator from the [`Rng::push_json_fields`] shape read
+    /// off an enclosing JSON object.
+    pub fn from_json(j: &crate::util::json::Json) -> Result<Rng, String> {
+        use crate::util::json::Json;
+        let arr = j
+            .get("rng")
+            .and_then(Json::as_arr)
+            .ok_or("state: missing rng")?;
+        if arr.len() != 4 {
+            return Err("state: rng must have 4 words".to_string());
+        }
+        let mut s = [0u64; 4];
+        for (i, w) in arr.iter().enumerate() {
+            let hex = w.as_str().ok_or("state: rng word must be a hex string")?;
+            s[i] = u64::from_str_radix(hex, 16)
+                .map_err(|_| format!("state: bad rng word '{hex}'"))?;
+        }
+        Ok(Rng::from_state(s, j.get("rng_spare").and_then(Json::as_f64)))
+    }
+
     /// Pick a uniformly random element index among the maxima of `scores`
     /// within `eps` of the max (the paper's "random tiebreak").
     pub fn argmax_tiebreak(&mut self, scores: &[f64], eps: f64) -> usize {

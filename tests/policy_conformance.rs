@@ -1,0 +1,333 @@
+//! Policy API v2 conformance + golden suite.
+//!
+//! Part 1 — properties every builder in the policy registry must hold
+//! (the trait contract from `docs/policies.md`):
+//!   1. decisions always land on ACTIVE slots, through remove → re-add
+//!      churn (the eligible-set rule);
+//!   2. decisions are deterministic under a fixed seed;
+//!   3. `export_state` → `restore_state` → bit-identical decisions.
+//!
+//! Part 2 — golden bit-identity: `ParetoRouter` driven through the
+//! hosted v2 trait must reproduce the standalone pre-refactor
+//! `route()`/`feedback()` path EXACTLY — on a synthetic stream with
+//! admin churn, on an exp1-style stationary stream, and on the exp2
+//! cost-drift scenario timeline.
+
+use paretobandit::exp::{conditions, run_phases, stream_order, ExpEnv, Phase};
+use paretobandit::router::{
+    build_policy, policy_names, BuildCtx, ModelSpec, ParetoRouter, PolicyHost, Prior,
+    RouterConfig,
+};
+use paretobandit::scenario::{run_scenario, RunOptions, ScenarioSpec};
+use paretobandit::sim::{EnvView, FlashScenario, Judge, GEMINI_PRO};
+use paretobandit::util::rng::Rng;
+
+const D: usize = 6;
+const BUDGET: f64 = 6.6e-4;
+
+fn table1() -> Vec<ModelSpec> {
+    vec![
+        ModelSpec::new("llama-3.1-8b", 0.10, 0.10),
+        ModelSpec::new("mistral-large", 0.40, 1.60),
+        ModelSpec::new("gemini-2.5-pro", 1.25, 10.0),
+    ]
+}
+
+fn build(spec: &str, seed: u64) -> PolicyHost {
+    let models = table1();
+    build_policy(
+        spec,
+        &BuildCtx {
+            d: D,
+            budget: Some(BUDGET),
+            seed,
+            models: &models,
+        },
+    )
+    .unwrap_or_else(|e| panic!("build '{spec}': {e}"))
+}
+
+/// Whitened context + bias, the shape the real featurizer produces.
+fn ctx(rng: &mut Rng) -> Vec<f64> {
+    let mut x: Vec<f64> = (0..D).map(|_| rng.normal()).collect();
+    x[D - 1] = 1.0;
+    x
+}
+
+/// Drive `steps` requests with a seeded environment; returns the arm
+/// sequence.  Per-arm reward means make the stream informative so
+/// learning policies actually move.
+fn drive(host: &mut PolicyHost, steps: usize, env_seed: u64) -> Vec<usize> {
+    let mut rng = Rng::new(env_seed);
+    let means = [0.55, 0.9, 0.7, 0.8];
+    let costs = [2.9e-5, 5.3e-4, 1.5e-2, 2.0e-4];
+    let mut arms = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let x = ctx(&mut rng);
+        let d = host.route(&x);
+        arms.push(d.arm);
+        let m = means.get(d.arm).copied().unwrap_or(0.5);
+        let c = costs.get(d.arm).copied().unwrap_or(1e-4);
+        let r = (m + 0.03 * rng.normal()).clamp(0.0, 1.0);
+        host.feedback(d.arm, &x, r, c);
+    }
+    arms
+}
+
+#[test]
+fn every_policy_routes_only_active_slots_through_churn() {
+    for name in policy_names() {
+        let mut h = build(name, 7);
+        let mut rng = Rng::new(99);
+        for i in 0..300usize {
+            if i == 100 {
+                let slot = h.registry().find("mistral-large").expect("mistral active");
+                assert!(h.delete_model(slot));
+            }
+            if i == 180 {
+                let fresh = h.add_model("mistral-large", 0.40, 1.60, None);
+                assert_eq!(fresh, 3, "{name}: re-add must land on a fresh slot");
+            }
+            let x = ctx(&mut rng);
+            let d = h.route(&x);
+            assert!(
+                h.registry().is_active(d.arm),
+                "{name}: step {i} picked retired slot {}",
+                d.arm
+            );
+            if (100..180).contains(&i) {
+                assert_ne!(d.arm, 1, "{name}: step {i} picked the tombstone");
+            }
+            h.feedback(d.arm, &x, 0.6, 1e-4);
+        }
+    }
+}
+
+#[test]
+fn fixed_and_random_survive_remove_readd_churn() {
+    // the pre-v2 baselines indexed raw slot ids and could keep selecting
+    // a tombstoned slot after remove_model; eligible-set awareness (plus
+    // name re-pinning for Fixed) is the regression under test
+    for spec in ["fixed:mistral-large", "random"] {
+        let mut h = build(spec, 3);
+        let mut rng = Rng::new(4);
+        for _ in 0..30 {
+            let x = ctx(&mut rng);
+            let d = h.route(&x);
+            h.feedback(d.arm, &x, 0.7, 1e-4);
+        }
+        assert!(h.delete_model(1));
+        for i in 0..40 {
+            let x = ctx(&mut rng);
+            let d = h.route(&x);
+            assert_ne!(d.arm, 1, "{spec}: picked the tombstone at {i}");
+            h.feedback(d.arm, &x, 0.7, 1e-4);
+        }
+        let fresh = h.add_model("mistral-large", 0.40, 1.60, None);
+        assert_eq!(fresh, 3);
+        if spec.starts_with("fixed") {
+            // the name target re-pins onto the fresh slot
+            for _ in 0..20 {
+                let x = ctx(&mut rng);
+                let d = h.route(&x);
+                assert_eq!(d.arm, 3, "{spec}: must follow its model to the new slot");
+                h.feedback(d.arm, &x, 0.7, 1e-4);
+            }
+        } else {
+            let mut seen3 = false;
+            for _ in 0..60 {
+                let x = ctx(&mut rng);
+                let d = h.route(&x);
+                assert_ne!(d.arm, 1);
+                seen3 |= d.arm == 3;
+                h.feedback(d.arm, &x, 0.7, 1e-4);
+            }
+            assert!(seen3, "{spec}: the re-added slot must be eligible again");
+        }
+    }
+}
+
+#[test]
+fn every_policy_is_deterministic_under_a_fixed_seed() {
+    for name in policy_names() {
+        let a = drive(&mut build(name, 5), 250, 11);
+        let b = drive(&mut build(name, 5), 250, 11);
+        assert_eq!(a, b, "{name}: decisions must replay bit-identically");
+    }
+}
+
+#[test]
+fn every_policy_restores_to_bit_identical_decisions() {
+    for name in policy_names() {
+        let mut donor = build(name, 5);
+        drive(&mut donor, 120, 21);
+        let snap = donor.export_state();
+        // deliberately different build seed: every learned quantity,
+        // RNG stream included, must come from the snapshot
+        let mut twin = build(name, 987_654);
+        twin.restore_state(&snap)
+            .unwrap_or_else(|e| panic!("{name}: restore: {e}"));
+        assert_eq!(twin.step(), donor.step(), "{name}: clock must restore");
+        let a = drive(&mut donor, 100, 22);
+        let b = drive(&mut twin, 100, 22);
+        assert_eq!(a, b, "{name}: decisions diverged after restore");
+    }
+}
+
+// ----------------------------------------------------------------------
+// golden bit-identity: hosted trait vs standalone ParetoRouter
+
+/// Raw pre-refactor-style driver: direct `route`/`feedback` calls.
+fn raw_pareto(seed: u64) -> ParetoRouter {
+    let mut r = ParetoRouter::new(RouterConfig::paretobandit(D, BUDGET, seed));
+    for m in table1() {
+        r.add_model(&m.name, m.price_in, m.price_out, Prior::Cold);
+    }
+    r
+}
+
+#[test]
+fn golden_hosted_pareto_matches_direct_calls_with_admin_churn() {
+    let seed = 42;
+    let mut hosted = build("paretobandit", seed);
+    let mut raw = raw_pareto(seed);
+    let mut rng = Rng::new(77);
+    let means = [0.55, 0.9, 0.7, 0.8];
+    let costs = [2.9e-5, 5.3e-4, 1.5e-2, 2.0e-4];
+    for i in 0..800usize {
+        match i {
+            200 => {
+                assert!(hosted.reprice(2, 0.10, 0.10));
+                assert!(raw.reprice(2, 0.10, 0.10));
+            }
+            400 => {
+                assert!(hosted.delete_model(1));
+                assert!(raw.delete_model(1));
+            }
+            500 => {
+                let h = hosted.add_model("mistral-large", 0.40, 1.60, Some((25.0, 0.7)));
+                let r = raw.add_model(
+                    "mistral-large",
+                    0.40,
+                    1.60,
+                    Prior::Heuristic { n_eff: 25.0, r0: 0.7 },
+                );
+                assert_eq!(h, r);
+            }
+            600 => {
+                assert!(hosted.set_budget(3.0e-4));
+                assert!(raw.set_budget(3.0e-4));
+            }
+            _ => {}
+        }
+        let x = ctx(&mut rng);
+        let dh = hosted.route(&x);
+        let dr = raw.route(&x);
+        assert_eq!(dh.arm, dr.arm, "step {i}: arm diverged");
+        assert_eq!(dh.forced, dr.forced, "step {i}: forced flag diverged");
+        assert_eq!(
+            dh.lambda.to_bits(),
+            dr.lambda.to_bits(),
+            "step {i}: λ diverged"
+        );
+        assert_eq!(dh.n_eligible, dr.n_eligible, "step {i}: eligibility diverged");
+        let m = means.get(dh.arm).copied().unwrap_or(0.5);
+        let c = costs.get(dh.arm).copied().unwrap_or(1e-4);
+        let r = (m + 0.03 * rng.normal()).clamp(0.0, 1.0);
+        hosted.feedback(dh.arm, &x, r, c);
+        raw.feedback(dr.arm, &x, r, c);
+    }
+}
+
+#[test]
+fn golden_exp1_stationary_stream_is_bit_identical() {
+    let env = ExpEnv::load(FlashScenario::GoodCheap);
+    let seed = 100;
+    let view = EnvView::normal(env.world.k());
+    let order = stream_order(&env.corpus.test, 9000 + seed);
+
+    // hosted path: the exp harness as it runs post-refactor
+    let mut host = conditions::tabula_rasa(&env, 3, Some(BUDGET), seed);
+    let log = run_phases(
+        &mut host,
+        &env.world,
+        &env.contexts,
+        &env.corpus,
+        &[Phase {
+            prompts: order.clone(),
+            view: &view,
+        }],
+        Judge::R1,
+    );
+
+    // raw path: the pre-refactor loop, direct route/feedback
+    let mut raw = ParetoRouter::new(RouterConfig::tabula_rasa(env.d(), Some(BUDGET), seed));
+    conditions::register_models(&mut raw, &env.world, 3, None);
+    for (t, &pid) in order.iter().enumerate() {
+        let p = env.corpus.prompt(pid);
+        let x = &env.contexts[pid as usize];
+        let d = raw.route(x);
+        assert_eq!(d.arm, log[t].arm, "step {t}: arm diverged");
+        let r = env.world.reward_view(p, d.arm, &view);
+        let c = env.world.cost_view(p, d.arm, &view);
+        assert_eq!(r.to_bits(), log[t].reward.to_bits(), "step {t}: reward");
+        assert_eq!(c.to_bits(), log[t].cost.to_bits(), "step {t}: cost");
+        raw.feedback(d.arm, x, r, c);
+        assert_eq!(
+            raw.pacer().unwrap().lambda().to_bits(),
+            log[t].lambda.to_bits(),
+            "step {t}: λ"
+        );
+    }
+}
+
+#[test]
+fn golden_exp2_costdrift_timeline_is_bit_identical() {
+    let env = ExpEnv::load(FlashScenario::GoodCheap);
+    let spec = ScenarioSpec::load_named("exp2_costdrift").expect("exp2 spec");
+    let budget = spec.budget.expect("exp2 sets a budget");
+    let seed = 123;
+
+    // hosted path: the scenario executor over the v2 hosting layer
+    let mut host = conditions::tabula_rasa(&env, 3, Some(budget), seed);
+    let opts = RunOptions {
+        seed,
+        reprice_router: true,
+    };
+    let run = run_scenario(&spec, &env, &env.world, &mut host, &opts).expect("exp2 run");
+    let flat = run.flat();
+    assert_eq!(flat.len(), 1824);
+
+    // raw path: replay the identical prompt stream through direct
+    // route/feedback with the spec's events applied by hand (the
+    // pre-refactor executor semantics)
+    const CUT: f64 = 0.017777777777777778;
+    let mut raw = ParetoRouter::new(RouterConfig::tabula_rasa(env.d(), Some(budget), seed));
+    conditions::register_models(&mut raw, &env.world, 3, None);
+    let mut view = EnvView::normal(env.world.k());
+    let ws = &env.world.models[GEMINI_PRO];
+    for (t, step) in flat.iter().enumerate() {
+        if t == 608 {
+            view.price_mult[GEMINI_PRO] = CUT;
+            raw.reprice(GEMINI_PRO, ws.price_in_per_m * CUT, ws.price_out_per_m * CUT);
+        }
+        if t == 1216 {
+            view.price_mult[GEMINI_PRO] = 1.0;
+            raw.reprice(GEMINI_PRO, ws.price_in_per_m, ws.price_out_per_m);
+        }
+        let p = env.corpus.prompt(step.prompt);
+        let x = &env.contexts[step.prompt as usize];
+        let d = raw.route(x);
+        assert_eq!(d.arm, step.arm, "step {t}: arm diverged");
+        let r = env.world.reward_view(p, d.arm, &view);
+        let c = env.world.cost_view(p, d.arm, &view);
+        assert_eq!(r.to_bits(), step.reward.to_bits(), "step {t}: reward");
+        assert_eq!(c.to_bits(), step.cost.to_bits(), "step {t}: cost");
+        raw.feedback(d.arm, x, r, c);
+        assert_eq!(
+            raw.pacer().unwrap().lambda().to_bits(),
+            step.lambda.to_bits(),
+            "step {t}: λ"
+        );
+    }
+}

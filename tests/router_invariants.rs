@@ -2,7 +2,7 @@
 //! randomized property sweeps over routing, budget state, hot-swap and
 //! feedback-path behaviour.
 
-use paretobandit::router::{ContextCache, ParetoRouter, Pending, Policy, Prior, RouterConfig};
+use paretobandit::router::{ContextCache, ParetoRouter, Pending, Prior, RouterConfig};
 use paretobandit::util::prop;
 use paretobandit::util::rng::Rng;
 

@@ -1,0 +1,151 @@
+//! Live shadow evaluation on the sharded engine (acceptance test for
+//! `serve --policy paretobandit --shadow random,epsilon`):
+//!
+//! * served traffic must be bit-identical to a shadowless engine with
+//!   the same per-shard seeds — shadows observe, they never steer;
+//! * every shadow's counterfactual quality/cost/λ series must show up in
+//!   `metrics` and `compare`, scored on the full stream, and diverge
+//!   from the served decisions.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use paretobandit::client::ParetoClient;
+use paretobandit::pacer::{PacerConfig, SharedPacer};
+use paretobandit::router::{build_policy, BuildCtx, ContextCache, ModelSpec};
+use paretobandit::server::{EngineConfig, Metrics, ServerState, ShardedEngine};
+use paretobandit::sim::hash_features;
+
+const D: usize = 6;
+const BUDGET: f64 = 6.6e-4;
+
+fn table1() -> Vec<ModelSpec> {
+    vec![
+        ModelSpec::new("llama-3.1-8b", 0.10, 0.10),
+        ModelSpec::new("mistral-large", 0.40, 1.60),
+        ModelSpec::new("gemini-2.5-pro", 1.25, 10.0),
+    ]
+}
+
+/// 4-shard engine; a 60 s merge interval keeps timer-driven merges out of
+/// the test window so both engines stay bit-comparable.
+fn spawn(workers: usize, shadows: &'static [&'static str]) -> ShardedEngine {
+    let ledger = Arc::new(SharedPacer::new(PacerConfig::new(BUDGET)));
+    let build = move |shard: usize| {
+        let models = table1();
+        let ctx = BuildCtx {
+            d: D,
+            budget: Some(BUDGET),
+            seed: 42 + shard as u64,
+            models: &models,
+        };
+        let mut host = build_policy("paretobandit", &ctx).unwrap();
+        host.use_shared_pacer(ledger.clone());
+        let mut st = ServerState::with_host(
+            host,
+            ContextCache::new(4096),
+            Box::new(|t: &str| Ok(hash_features(t, D))),
+            Arc::new(Metrics::new()),
+        );
+        for (i, spec) in shadows.iter().enumerate() {
+            st.add_shadow(spec, D, Some(BUDGET), 9000 + 100 * (i as u64 + 1) + shard as u64)
+                .unwrap();
+        }
+        st
+    };
+    ShardedEngine::spawn(
+        "127.0.0.1:0",
+        EngineConfig::new(workers).merge_every(Duration::from_secs(60)),
+        build,
+    )
+    .unwrap()
+}
+
+#[test]
+fn four_shard_shadows_diverge_while_served_traffic_matches_baseline() {
+    let shadowed = spawn(4, &["random", "epsilon"]);
+    let baseline = spawn(4, &[]);
+    let mut ca = ParetoClient::connect(shadowed.addr).unwrap();
+    let mut cb = ParetoClient::connect(baseline.addr).unwrap();
+    let mut served_a = Vec::new();
+    let mut served_b = Vec::new();
+    for i in 0..120u64 {
+        let prompt = format!("shadow eval prompt number {i}");
+        let ra = ca.route(i, &prompt).unwrap();
+        let rb = cb.route(i, &prompt).unwrap();
+        served_a.push((ra.shard, ra.arm));
+        served_b.push((rb.shard, rb.arm));
+        // overspend so λ visibly moves on the served pacer
+        ca.feedback(i, 0.8, 2e-3).unwrap();
+        cb.feedback(i, 0.8, 2e-3).unwrap();
+    }
+    assert_eq!(
+        served_a, served_b,
+        "shadow evaluation must not perturb served traffic"
+    );
+
+    let rep = ca.compare().unwrap();
+    let served = rep.get("served").unwrap();
+    assert_eq!(served.get("policy").unwrap().as_str(), Some("ParetoBandit"));
+    assert_eq!(served.get("requests").unwrap().as_f64(), Some(120.0));
+    assert!(served.get("mean_cost").unwrap().as_f64().unwrap() > 0.0);
+    let shadows = rep.get("shadows").unwrap().as_arr().unwrap();
+    assert_eq!(shadows.len(), 2);
+    assert_eq!(shadows[0].get("policy").unwrap().as_str(), Some("Random"));
+    assert_eq!(
+        shadows[1].get("policy").unwrap().as_str(),
+        Some("EpsilonGreedy")
+    );
+    for s in shadows {
+        assert_eq!(s.get("decisions").unwrap().as_f64(), Some(120.0));
+        assert_eq!(s.get("scored").unwrap().as_f64(), Some(120.0));
+        assert!(s.get("est_mean_cost").unwrap().as_f64().unwrap() > 0.0);
+        assert!(s.get("lambda").unwrap().as_f64().is_some());
+    }
+    // a uniform-random shadow agreeing with the served policy on all 120
+    // decisions has probability ~3^-120: its series must diverge
+    let random_rate = shadows[0].get("match_rate").unwrap().as_f64().unwrap();
+    assert!(random_rate < 1.0, "random shadow cannot match served traffic: {random_rate}");
+
+    // the same per-policy series ride the metrics snapshot
+    let m = ca.metrics().unwrap();
+    assert_eq!(m.get("policy").unwrap().as_str(), Some("ParetoBandit"));
+    assert!(m.get("lambda").unwrap().as_f64().is_some());
+    assert_eq!(m.get("shadows").unwrap().as_arr().unwrap().len(), 2);
+    let mb = cb.metrics().unwrap();
+    assert_eq!(mb.get("shadows").unwrap().as_arr().unwrap().len(), 0);
+
+    shadowed.stop();
+    baseline.stop();
+}
+
+#[test]
+fn shadows_follow_hot_swap_and_survive_batch_verbs() {
+    let engine = spawn(2, &["fixed:mistral-large"]);
+    let mut c = ParetoClient::connect(engine.addr).unwrap();
+    // batch verbs keep shadow scoring intact
+    let items: Vec<(u64, String)> = (0..16).map(|i| (i, format!("batch item {i}"))).collect();
+    let routed = c.route_batch(&items).unwrap();
+    assert_eq!(routed.len(), 16);
+    let fb: Vec<(u64, f64, f64)> = (0..16).map(|i| (i, 0.8, 1e-4)).collect();
+    for ack in c.feedback_batch(&fb).unwrap() {
+        ack.unwrap();
+    }
+    // hot-swap flows into the shadows (slot ids stay comparable)
+    let arm = c.add_model("gemini-2.5-flash", 0.30, 2.50, None).unwrap();
+    assert_eq!(arm, 3);
+    for i in 16..32u64 {
+        c.route(i, &format!("post swap {i}")).unwrap();
+        c.feedback(i, 0.8, 1e-4).unwrap();
+    }
+    let rep = c.compare().unwrap();
+    let shadows = rep.get("shadows").unwrap().as_arr().unwrap();
+    assert_eq!(shadows.len(), 1);
+    assert_eq!(
+        shadows[0].get("policy").unwrap().as_str(),
+        Some("Fixed(mistral-large)")
+    );
+    assert_eq!(shadows[0].get("decisions").unwrap().as_f64(), Some(32.0));
+    assert_eq!(shadows[0].get("scored").unwrap().as_f64(), Some(32.0));
+    engine.stop();
+}
