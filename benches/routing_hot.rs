@@ -1,0 +1,218 @@
+//! Hot-path routing microbenchmarks with a tracked trajectory.
+//!
+//! Times the paper's latency-critical operations (Table 10's envelope:
+//! ~22.5 µs per decision, ~9.8 ms per merge/broadcast cycle) and emits the
+//! percentile summaries into the committed `BENCH_routing.json` at the repo
+//! root, which doubles as the regression baseline: the fresh `route_single`
+//! p50 is gated against the committed one and the run fails when decision
+//! latency regresses past the allowed ratio (see `docs/performance.md`).
+//!
+//! Benches:
+//!   route_single     one `ParetoRouter::route` decision, 3-model portfolio
+//!   route_batch_1    `PolicyHost::route_batch_into`, batch of 1 (per-call)
+//!   route_batch_64   same, batch of 64 (per-call)
+//!   route_batch_512  same, batch of 512 (per-call)
+//!   ucb_sweep_1024   one decision over a 1024-arm portfolio (scoring sweep)
+//!   merge_cycle      4-shard feedback_batch + export/merge/adopt cycle
+//!
+//! Run: `cargo bench --bench routing_hot`.  Env overrides:
+//!   PB_BENCH_SAMPLES   measured samples per bench        (default 400)
+//!   PB_BENCH_OUT       trajectory file to merge into     (default BENCH_routing.json)
+//!   PB_BENCH_BASELINE  baseline file for the p50 gate    (default BENCH_routing.json)
+//!   PB_BENCH_GATE      max p50 ratio vs baseline; <= 0
+//!                      disables the gate                 (default 1.25)
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use paretobandit::router::{
+    FeedbackEvent, ParetoRouter, PolicyHost, Prior, RouteDecision, RouterConfig,
+};
+use paretobandit::util::bench::{bench_batched, bench_each, black_box, BenchStats};
+use paretobandit::util::benchio::{self, BenchEntry};
+use paretobandit::util::env_or;
+use paretobandit::util::rng::Rng;
+
+const D: usize = 26;
+const BUDGET: f64 = 6.6e-4;
+
+/// Whitened context: unit-variance dims + bias, the shape the real
+/// featurizer produces.
+fn ctx(rng: &mut Rng) -> Vec<f64> {
+    let mut x: Vec<f64> = (0..D).map(|_| rng.normal()).collect();
+    x[D - 1] = 1.0;
+    x
+}
+
+fn contexts(n: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| ctx(&mut rng)).collect()
+}
+
+/// Three-tier portfolio matching Table 1's blended rates.
+fn three_model_router(seed: u64) -> ParetoRouter {
+    let mut r = ParetoRouter::new(RouterConfig::paretobandit(D, BUDGET, seed));
+    r.add_model("llama", 0.10, 0.10, Prior::Cold);
+    r.add_model("mistral", 0.40, 1.60, Prior::Cold);
+    r.add_model("gemini", 1.25, 10.0, Prior::Cold);
+    r
+}
+
+/// Route+feedback warmup so every bench measures the steady state (arm
+/// posteriors populated, scratch buffers sized, refresh cadence crossed).
+fn warm_router(r: &mut ParetoRouter, steps: usize, seed: u64) {
+    let mut rng = Rng::new(seed);
+    for _ in 0..steps {
+        let x = ctx(&mut rng);
+        let d = r.route(&x);
+        let reward = 0.5 + 0.4 * rng.f64();
+        r.feedback(d.arm, &x, reward, 2.0e-4);
+    }
+}
+
+fn bench_route_single(samples: usize) -> BenchStats {
+    let mut r = three_model_router(9);
+    warm_router(&mut r, 2_000, 10);
+    let xs = contexts(512, 11);
+    let mut i = 0usize;
+    bench_batched(200, samples, 64, || {
+        let d = r.route(&xs[i % xs.len()]);
+        black_box(d.arm);
+        i += 1;
+    })
+}
+
+fn bench_route_batch(batch: usize, samples: usize) -> BenchStats {
+    let mut host = PolicyHost::new(Box::new(three_model_router(12)), None);
+    let mut rng = Rng::new(13);
+    for _ in 0..1_500 {
+        let x = ctx(&mut rng);
+        let d = host.route(&x);
+        host.feedback(d.arm, &x, 0.5 + 0.4 * rng.f64(), 2.0e-4);
+    }
+    let xs = contexts(batch, 14);
+    let mut out: Vec<RouteDecision> = Vec::with_capacity(batch);
+    // two priming calls size the host's internal buffers before timing
+    host.route_batch_into(&xs, &mut out);
+    host.route_batch_into(&xs, &mut out);
+    // per-CALL latency (one call routes `batch` requests); big batches get
+    // fewer individually-timed samples to keep the run short
+    let samples = if batch >= 64 { samples.min(200) } else { samples };
+    bench_each(20, samples, || {
+        host.route_batch_into(&xs, &mut out);
+        black_box(out.len());
+    })
+}
+
+fn bench_ucb_sweep_1024(samples: usize) -> BenchStats {
+    // unconstrained: no ceiling filtering, so every decision scores the
+    // full 1024-arm portfolio — a pure UCB sweep
+    let mut r = ParetoRouter::new(RouterConfig::unconstrained(D, 15));
+    let mut rng = Rng::new(16);
+    for i in 0..1024 {
+        let spread = 0.05 + 0.01 * (i % 200) as f64;
+        r.add_model(&format!("m{i}"), spread, spread * 4.0, Prior::Cold);
+    }
+    // a couple of observations per arm so predict/variance hit the
+    // populated-posterior path
+    for i in 0..2_048usize {
+        let x = ctx(&mut rng);
+        r.feedback(i % 1024, &x, 0.5 + 0.4 * rng.f64(), 2.0e-4);
+    }
+    let xs = contexts(256, 17);
+    let mut i = 0usize;
+    bench_each(20, samples.min(200), || {
+        let d = r.route(&xs[i % xs.len()]);
+        black_box(d.arm);
+        i += 1;
+    })
+}
+
+fn bench_merge_cycle(samples: usize) -> BenchStats {
+    const SHARDS: usize = 4;
+    const EVENTS_PER_SHARD: usize = 256;
+    let mut shards: Vec<ParetoRouter> = (0..SHARDS)
+        .map(|s| {
+            let mut r = three_model_router(20 + s as u64);
+            warm_router(&mut r, 500, 30 + s as u64);
+            r
+        })
+        .collect();
+    let queues: Vec<Vec<FeedbackEvent>> = (0..SHARDS)
+        .map(|s| {
+            let mut rng = Rng::new(40 + s as u64);
+            (0..EVENTS_PER_SHARD)
+                .map(|i| FeedbackEvent {
+                    arm: i % 3,
+                    context: ctx(&mut rng),
+                    reward: 0.5 + 0.4 * rng.f64(),
+                })
+                .collect()
+        })
+        .collect();
+    let mut ns = Vec::with_capacity(samples);
+    for it in 0..(samples.min(200) + 10) {
+        let t0 = Instant::now();
+        // drain queues (rank-1 sweeps per touched arm) ...
+        for (r, q) in shards.iter_mut().zip(queues.iter()) {
+            r.feedback_batch(q);
+        }
+        // ... coordinator fold: global = shard0 replica + others' deltas ...
+        let mut global = shards[0].export_arms();
+        for other in shards.iter().skip(1) {
+            for (g, o) in global.iter_mut().zip(other.export_arms().iter()) {
+                if let (Some(g), Some(o)) = (g.as_mut(), o.as_ref()) {
+                    g.merge(o, 1.0);
+                }
+            }
+        }
+        // ... broadcast
+        for r in shards.iter_mut() {
+            r.adopt_arms(&global);
+        }
+        black_box(global.len());
+        if it >= 10 {
+            ns.push(t0.elapsed().as_nanos() as f64);
+        }
+    }
+    BenchStats::from_samples(ns)
+}
+
+fn main() {
+    let samples: usize = env_or("PB_BENCH_SAMPLES", 400);
+    let out_path: String = env_or("PB_BENCH_OUT", "BENCH_routing.json".to_string());
+    let base_path: String = env_or("PB_BENCH_BASELINE", "BENCH_routing.json".to_string());
+    let gate_ratio: f64 = env_or("PB_BENCH_GATE", 1.25);
+    let sha = benchio::git_sha();
+    println!("[routing_hot] {samples} samples/bench, sha {sha}, out {out_path}");
+
+    let mut fresh: BTreeMap<String, BenchEntry> = BTreeMap::new();
+    let mut run = |name: &str, stats: BenchStats| {
+        paretobandit::util::bench::report(name, &stats);
+        fresh.insert(name.to_string(), BenchEntry::from_stats(&stats, &sha));
+    };
+    run("route_single", bench_route_single(samples));
+    run("route_batch_1", bench_route_batch(1, samples));
+    run("route_batch_64", bench_route_batch(64, samples));
+    run("route_batch_512", bench_route_batch(512, samples));
+    run("ucb_sweep_1024", bench_ucb_sweep_1024(samples));
+    run("merge_cycle", bench_merge_cycle(samples));
+
+    // load the committed baseline BEFORE merge_write clobbers it (the
+    // default trajectory file and baseline are the same path)
+    let baseline = benchio::load(&base_path).unwrap_or_default();
+    benchio::merge_write(&out_path, &fresh).expect("write trajectory");
+    println!("[routing_hot] wrote {} entries to {out_path}", fresh.len());
+
+    if gate_ratio > 0.0 {
+        match benchio::gate_p50(&baseline, &fresh, "route_single", gate_ratio) {
+            Ok(note) => println!("[routing_hot] {note}"),
+            Err(e) => {
+                eprintln!("[routing_hot] REGRESSION: {e}");
+                std::process::exit(1);
+            }
+        }
+    } else {
+        println!("[routing_hot] gate disabled (PB_BENCH_GATE <= 0)");
+    }
+}

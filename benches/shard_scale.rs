@@ -7,6 +7,13 @@
 //! buys: parallel featurization across worker threads under one shared
 //! budget ledger.
 //!
+//! Besides throughput, each configuration reports per-request route
+//! latency percentiles (p50/p99 over individually timed round-trips; in
+//! batch mode the per-call time is amortised uniformly over the chunk),
+//! and the largest configuration's percentiles are appended to the
+//! tracked trajectory file as the `shard_scale` entry (see
+//! `docs/performance.md`).
+//!
 //! Run: `cargo bench --bench shard_scale`.  Env overrides:
 //!   PB_SHARD_REQS       requests per configuration   (default 4000)
 //!   PB_SHARD_CLIENTS    concurrent client threads    (default 8)
@@ -14,7 +21,10 @@
 //!   PB_SHARD_MAX        largest shard count          (default 8)
 //!   PB_SHARD_BATCH      route_batch/feedback_batch chunk size
 //!                       (default 0 = per-request round-trips)
+//!   PB_BENCH_OUT        trajectory file to merge into
+//!                       (default BENCH_routing.json)
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -23,6 +33,8 @@ use paretobandit::pacer::{PacerConfig, SharedPacer};
 use paretobandit::router::{ContextCache, ParetoRouter, Prior, RouterConfig};
 use paretobandit::server::{EngineConfig, Metrics, ServerState, ShardedEngine};
 use paretobandit::sim::hash_features;
+use paretobandit::util::bench::BenchStats;
+use paretobandit::util::benchio::{self, BenchEntry};
 use paretobandit::util::env_or;
 
 const D: usize = 26;
@@ -69,10 +81,13 @@ fn spawn_engine(workers: usize, work_iters: u64) -> ShardedEngine {
 }
 
 /// Drive `reqs` route+feedback pairs through `clients` parallel typed-SDK
-/// connections; returns wall-clock seconds.  `batch > 1` switches each
-/// client to route_batch/feedback_batch chunks of that size, amortizing
-/// socket round-trips across the engine's cross-shard fan-out.
-fn drive(engine: &ShardedEngine, reqs: u64, clients: u64, batch: u64) -> f64 {
+/// connections; returns wall-clock seconds plus per-request route latency
+/// samples (ns).  `batch > 1` switches each client to
+/// route_batch/feedback_batch chunks of that size, amortizing socket
+/// round-trips across the engine's cross-shard fan-out; there each chunk's
+/// wall time is spread uniformly over its requests, so percentiles remain
+/// comparable across modes.
+fn drive(engine: &ShardedEngine, reqs: u64, clients: u64, batch: u64) -> (f64, Vec<f64>) {
     let addr = engine.addr;
     let per = reqs / clients;
     let t0 = Instant::now();
@@ -80,12 +95,15 @@ fn drive(engine: &ShardedEngine, reqs: u64, clients: u64, batch: u64) -> f64 {
     for c in 0..clients {
         handles.push(std::thread::spawn(move || {
             let mut client = ParetoClient::connect(addr).expect("connect");
+            let mut lat_ns: Vec<f64> = Vec::with_capacity(per as usize);
             if batch <= 1 {
                 for i in 0..per {
                     let id = c * 10_000_000 + i;
+                    let tr = Instant::now();
                     client
                         .route(id, &format!("client {c} request {i} payload"))
                         .expect("route");
+                    lat_ns.push(tr.elapsed().as_nanos() as f64);
                     client.feedback(id, 0.8, 2e-4).expect("feedback");
                 }
             } else {
@@ -95,7 +113,12 @@ fn drive(engine: &ShardedEngine, reqs: u64, clients: u64, batch: u64) -> f64 {
                     let items: Vec<(u64, String)> = (i..i + n)
                         .map(|k| (c * 10_000_000 + k, format!("client {c} request {k} payload")))
                         .collect();
+                    let tr = Instant::now();
                     let routed = client.route_batch(&items).expect("route_batch");
+                    let per_req_ns = tr.elapsed().as_nanos() as f64 / n as f64;
+                    for _ in 0..n {
+                        lat_ns.push(per_req_ns);
+                    }
                     let fb: Vec<(u64, f64, f64)> = routed
                         .iter()
                         .map(|r| (r.as_ref().expect("route item").id, 0.8, 2e-4))
@@ -106,12 +129,14 @@ fn drive(engine: &ShardedEngine, reqs: u64, clients: u64, batch: u64) -> f64 {
                     i += n;
                 }
             }
+            lat_ns
         }));
     }
+    let mut lat_ns = Vec::new();
     for h in handles {
-        h.join().unwrap();
+        lat_ns.extend(h.join().unwrap());
     }
-    t0.elapsed().as_secs_f64()
+    (t0.elapsed().as_secs_f64(), lat_ns)
 }
 
 fn main() {
@@ -132,21 +157,29 @@ fn main() {
     }
 
     let mut baseline = 0.0f64;
-    println!("shards |    wall s |     req/s | speedup vs 1 shard");
-    println!("-------+-----------+-----------+-------------------");
+    let mut last_stats: Option<BenchStats> = None;
+    println!("shards |    wall s |     req/s |  p50 ms |  p99 ms | speedup vs 1 shard");
+    println!("-------+-----------+-----------+---------+---------+-------------------");
     for &workers in &shard_counts {
         let engine = spawn_engine(workers, work_iters);
         // warmup: fill caches, spin up connection handlers
         drive(&engine, (reqs / 10).max(clients), clients, batch);
-        let wall = drive(&engine, reqs, clients, batch);
+        let (wall, lat_ns) = drive(&engine, reqs, clients, batch);
         let rps = reqs as f64 / wall;
         if workers == 1 {
             baseline = rps;
         }
+        let stats = (!lat_ns.is_empty()).then(|| BenchStats::from_samples(lat_ns));
+        let (p50_ms, p99_ms) = stats
+            .as_ref()
+            .map_or((f64::NAN, f64::NAN), |s| (s.p50_ns / 1e6, s.p99_ns / 1e6));
         println!(
-            "{workers:>6} | {wall:>9.2} | {rps:>9.0} | {:>6.2}x",
+            "{workers:>6} | {wall:>9.2} | {rps:>9.0} | {p50_ms:>7.2} | {p99_ms:>7.2} | {:>6.2}x",
             rps / baseline
         );
+        if workers == *shard_counts.last().unwrap() {
+            last_stats = stats;
+        }
         engine.stop();
     }
     println!(
@@ -154,4 +187,20 @@ fn main() {
          ledger keeps one global budget (metrics op reports per-shard counters).",
         shard_counts.last().unwrap()
     );
+
+    // append the largest configuration's round-trip percentiles to the
+    // tracked trajectory (recording only — the regression gate lives in
+    // routing_hot, which measures the in-process decision path)
+    if let Some(s) = last_stats {
+        let out_path: String = env_or("PB_BENCH_OUT", "BENCH_routing.json".to_string());
+        let mut fresh = BTreeMap::new();
+        fresh.insert(
+            "shard_scale".to_string(),
+            BenchEntry::from_stats(&s, &benchio::git_sha()),
+        );
+        match benchio::merge_write(&out_path, &fresh) {
+            Ok(()) => println!("[shard_scale] appended shard_scale entry to {out_path}"),
+            Err(e) => eprintln!("[shard_scale] trajectory write failed: {e}"),
+        }
+    }
 }

@@ -6,21 +6,41 @@
 //! * batched geometric forgetting `A ← γ^dt A`, `b ← γ^dt b` (Eqs. 7–8)
 //! * cached `A⁻¹` maintained by O(d²) Sherman–Morrison rank-1 corrections,
 //!   with a scalar division for the decay step (`A⁻¹ ← A⁻¹ / γ^dt`)
-//! * periodic exact refresh (Cholesky) to bound floating-point drift
+//! * a maintained Cholesky factor `A = L Lᵀ` advanced by O(d²) rank-1
+//!   up/downdates ([`crate::linalg::Cholesky::rank1_update`] /
+//!   [`crate::linalg::Cholesky::rank1_downdate`]) and rescaled under decay
+//!   (`L ← √(γ^dt) L`), so θ̂ comes from two triangular solves instead of a
+//!   full O(d³) refactorization — batched feedback is O(k·d²), not O(d³)
+//! * periodic exact refresh every [`REFRESH_EVERY`] rank-1 updates: one
+//!   from-scratch factorization re-syncs the factor, the cached inverse
+//!   and θ̂, bounding the accumulated floating-point drift (the rank-1
+//!   property tests hold the pre-refresh factor drift under 1e-9)
 //! * mergeable deltas for the sharded engine: each arm tracks the (ΔA, Δb)
 //!   it accumulated since the last broadcast cycle (decayed in lockstep
 //!   with A and b), so replicas can fold each other's observations with
 //!   [`ArmState::merge`] and apply queued batches with
-//!   [`ArmState::observe_batch`] in one exact refresh.
+//!   [`ArmState::observe_batch`] without a per-event refresh.
+//!
+//! Numerical contract: the hot path never allocates after construction
+//! (`observe`, `observe_batch`, `retract`, `refresh` all run in
+//! caller-owned scratch), and every drift source has an exact-refresh
+//! backstop — rank-1 drift via the refresh cadence, decay underflow via
+//! [`MIN_DECAY`], and near-singular decayed statistics via the
+//! [`NUMERIC_RIDGE`] reconditioning described on [`ArmState::observe`].
 
 use crate::linalg::{dot, Cholesky, Mat};
 
-/// Refresh the cached inverse exactly every this many rank-1 updates.
+/// Refresh the cached inverse + factor exactly every this many rank-1
+/// updates.  At the default cadence the maintained factor stays within
+/// ~1e-12 of the from-scratch factorization (property-tested bound:
+/// 1e-9), so routing scores are unaffected between refreshes.
 const REFRESH_EVERY: u32 = 512;
 /// Clamp on the total decay factor applied in one batched step; prevents
 /// `A⁻¹ / γ^dt` from overflowing after very long idle gaps.
 const MIN_DECAY: f64 = 1e-8;
-/// Tiny ridge re-added on refresh so a heavily-decayed A stays invertible.
+/// Tiny ridge re-added when a heavy decay step (factor ≤ 1e-3) leaves A
+/// near-singular: the ridge restores a safe smallest eigenvalue before
+/// the exact refresh reconditions the cached inverse and factor.
 const NUMERIC_RIDGE: f64 = 1e-10;
 
 /// LinUCB arm state.
@@ -42,7 +62,11 @@ pub struct ArmState {
     /// online observations absorbed
     pub n_obs: u64,
     updates_since_refresh: u32,
+    /// maintained Cholesky factor of `a` (rank-1 up/downdated in lockstep
+    /// with the statistics; exactly re-synced on every refresh)
+    chol: Cholesky,
     scratch: Vec<f64>,
+    scratch2: Vec<f64>,
     /// ΔA accumulated since the last [`ArmState::reset_data`] (the shard's
     /// unsynced delta in a merge/broadcast cycle); decayed in lockstep with
     /// `a` so `a = decayed base + data_a` always holds
@@ -67,7 +91,9 @@ impl ArmState {
             last_play: t,
             n_obs: 0,
             updates_since_refresh: 0,
+            chol: Cholesky::scaled_identity(d, lambda0),
             scratch: vec![0.0; d],
+            scratch2: vec![0.0; d],
             data_a: Mat::zeros(d),
             data_b: vec![0.0; d],
             data_n: 0,
@@ -91,7 +117,9 @@ impl ArmState {
             last_play: t,
             n_obs: 0,
             updates_since_refresh: 0,
+            chol: ch,
             scratch: vec![0.0; d],
+            scratch2: vec![0.0; d],
             data_a: Mat::zeros(d),
             data_b: vec![0.0; d],
             data_n: 0,
@@ -116,44 +144,76 @@ impl ArmState {
         dot(&self.theta, x)
     }
 
+    /// The maintained Cholesky factor of `a` (exact as of the last
+    /// refresh, rank-1 advanced since).  Read-only: the factor must stay
+    /// in lockstep with the statistics.
+    #[inline]
+    pub fn cached_factor(&self) -> &Cholesky {
+        &self.chol
+    }
+
     /// Absorb one observation at global step `t`:
     /// decay by γ^(t - last_upd), then rank-1 update (Algorithm 1 l.18–23).
+    ///
+    /// Allocation-free: the factor and inverse advance by O(d²) rank-1
+    /// sweeps in pre-sized scratch, and θ̂ comes from two triangular
+    /// solves against the maintained factor.
     pub fn observe(&mut self, x: &[f64], r: f64, gamma: f64, t: u64) {
         debug_assert_eq!(x.len(), self.d);
+        self.decay_to(gamma, t);
+        self.absorb(x, r);
+        self.chol
+            .solve_into(&self.b, &mut self.theta, &mut self.scratch);
+        self.last_upd = t;
+        self.n_obs += 1;
+        self.data_n += 1;
+        self.bump_refresh_counter(1);
+    }
+
+    /// Decay every statistic to step `t` and recondition the caches.
+    /// For moderate factors the inverse decays by a scalar division and
+    /// the factor by `√factor`; a heavy decay (factor ≤ 1e-3) would
+    /// amplify round-off through `/factor` on a near-singular A, so it is
+    /// re-ridged ([`NUMERIC_RIDGE`]) and refreshed exactly instead.
+    fn decay_to(&mut self, gamma: f64, t: u64) {
         let dt = t.saturating_sub(self.last_upd);
         if gamma < 1.0 && dt > 0 {
             let factor = gamma.powi(dt.min(i32::MAX as u64) as i32).max(MIN_DECAY);
             self.decay_stats(factor);
             if factor <= 1e-3 {
-                // inverse would amplify round-off through /factor; the
-                // decayed A is near-singular, so refresh exactly instead.
                 self.a.add_diag(NUMERIC_RIDGE);
                 self.refresh();
             } else {
                 self.a_inv.scale(1.0 / factor);
             }
         }
-        // rank-1 absorb
+    }
+
+    /// Rank-1 absorb of (x, r) into every statistic and both caches.
+    fn absorb(&mut self, x: &[f64], r: f64) {
         self.a.add_outer(1.0, x);
         self.data_a.add_outer(1.0, x);
         for i in 0..self.d {
             self.b[i] += r * x[i];
             self.data_b[i] += r * x[i];
         }
+        self.chol.rank1_update(x, &mut self.scratch2);
         self.a_inv.sherman_morrison_update(x, &mut self.scratch);
-        // θ̂ = A⁻¹ b  (O(d²))
-        self.a_inv.matvec(&self.b, &mut self.theta);
-        self.last_upd = t;
-        self.n_obs += 1;
-        self.data_n += 1;
-        self.updates_since_refresh += 1;
+    }
+
+    /// Count `n` rank-1 updates toward the periodic exact refresh.
+    fn bump_refresh_counter(&mut self, n: usize) {
+        self.updates_since_refresh = self
+            .updates_since_refresh
+            .saturating_add(n.min(u32::MAX as usize) as u32);
         if self.updates_since_refresh >= REFRESH_EVERY {
             self.refresh();
         }
     }
 
     /// Apply a decay factor to every sufficient statistic (A, b and the
-    /// merge delta, which must shrink in lockstep).
+    /// merge delta, which must shrink in lockstep) and rescale the
+    /// maintained factor (`chol(f·A) = √f·chol(A)`).
     fn decay_stats(&mut self, factor: f64) {
         self.a.scale(factor);
         self.data_a.scale(factor);
@@ -163,48 +223,86 @@ impl ArmState {
         for v in &mut self.data_b {
             *v *= factor;
         }
+        self.chol.scale(factor);
     }
 
     /// Absorb a batch of observations in one step: a single decay to `t`,
-    /// the summed rank-1 updates, and ONE exact Cholesky refresh — instead
-    /// of per-event Sherman–Morrison corrections plus θ̂ recomputation.
-    /// Within-batch arrival-time differences are collapsed onto `t` (the
-    /// batched-forgetting approximation of Eqs. 7–8; the error is
-    /// O(1 - γ^P) for a merge-cycle length of P steps).
+    /// then k rank-1 sweeps over the factor and inverse and ONE pair of
+    /// triangular solves for θ̂ — O(k·d²) total, no O(d³) refactorization
+    /// (the periodic refresh cadence still applies, counting the whole
+    /// batch).  Within-batch arrival-time differences are collapsed onto
+    /// `t` (the batched-forgetting approximation of Eqs. 7–8; the error
+    /// is O(1 - γ^P) for a merge-cycle length of P steps).
     pub fn observe_batch(&mut self, obs: &[(&[f64], f64)], gamma: f64, t: u64) {
         if obs.is_empty() {
             return;
         }
-        let dt = t.saturating_sub(self.last_upd);
-        if gamma < 1.0 && dt > 0 {
-            let factor = gamma.powi(dt.min(i32::MAX as u64) as i32).max(MIN_DECAY);
-            self.decay_stats(factor);
-            if factor <= 1e-3 {
-                self.a.add_diag(NUMERIC_RIDGE);
-            }
-        }
+        self.decay_to(gamma, t);
         for &(x, r) in obs {
             debug_assert_eq!(x.len(), self.d);
-            self.a.add_outer(1.0, x);
-            self.data_a.add_outer(1.0, x);
-            for i in 0..self.d {
-                self.b[i] += r * x[i];
-                self.data_b[i] += r * x[i];
-            }
+            self.absorb(x, r);
         }
+        self.chol
+            .solve_into(&self.b, &mut self.theta, &mut self.scratch);
         self.n_obs += obs.len() as u64;
         self.data_n += obs.len() as u64;
         self.last_upd = t;
-        self.refresh();
+        self.bump_refresh_counter(obs.len());
+    }
+
+    /// Remove one previously-absorbed observation — the inverse of
+    /// [`ArmState::observe`], used by decision-log replay and feedback
+    /// revocation.  O(d²): a hyperbolic rank-1 downdate of the factor, a
+    /// Sherman–Morrison removal on the cached inverse, two triangular
+    /// solves for θ̂.
+    ///
+    /// Returns `false` — with the statistics UNCHANGED and the caches
+    /// refreshed — when removing `x` would destroy positive definiteness,
+    /// i.e. `x` was never absorbed, or its contribution has since been
+    /// decayed below the requested subtraction.  Under geometric
+    /// forgetting, retract in the same decay epoch as the observation
+    /// (before any intervening decay rescales the statistics); the
+    /// failure return makes a late retract safe, not silent.
+    pub fn retract(&mut self, x: &[f64], r: f64) -> bool {
+        debug_assert_eq!(x.len(), self.d);
+        if !self.chol.rank1_downdate(x, &mut self.scratch2) {
+            // the downdate left the factor partially modified; rebuild it
+            // (and the other caches) from the untouched statistics
+            self.refresh();
+            return false;
+        }
+        self.a.add_outer(-1.0, x);
+        self.data_a.add_outer(-1.0, x);
+        for i in 0..self.d {
+            self.b[i] -= r * x[i];
+            self.data_b[i] -= r * x[i];
+        }
+        if self
+            .a_inv
+            .sherman_morrison_downdate(x, &mut self.scratch)
+            .is_none()
+        {
+            // the inverse cache can't represent the removal; rebuild it
+            // from the already-downdated factor
+            self.chol
+                .inverse_into(&mut self.a_inv, &mut self.scratch, &mut self.scratch2);
+        }
+        self.chol
+            .solve_into(&self.b, &mut self.theta, &mut self.scratch);
+        self.n_obs = self.n_obs.saturating_sub(1);
+        self.data_n = self.data_n.saturating_sub(1);
+        self.bump_refresh_counter(1);
+        true
     }
 
     /// Fold another replica's since-last-reset observation delta into this
     /// posterior (the mergeable-statistics half of the sharded engine):
-    /// `A += decay·ΔA_other`, `b += decay·Δb_other`, then an exact refresh.
-    /// `decay` down-weights a stale replica (pass γ^Δt, or 1.0 when merge
-    /// cycles are short).  The caller must eventually `reset_data` on
-    /// `other` (the engine does so on adopt) so a delta is never folded
-    /// twice.
+    /// `A += decay·ΔA_other`, `b += decay·Δb_other`, then an exact refresh
+    /// — a delta is arbitrary-rank, so there is no O(d²) shortcut and the
+    /// refresh doubles as the drift backstop for the merge path.  `decay`
+    /// down-weights a stale replica (pass γ^Δt, or 1.0 when merge cycles
+    /// are short).  The caller must eventually `reset_data` on `other`
+    /// (the engine does so on adopt) so a delta is never folded twice.
     pub fn merge(&mut self, other: &ArmState, decay: f64) {
         assert_eq!(self.d, other.d, "merge: dimension mismatch");
         debug_assert!(decay >= 0.0, "merge: negative decay");
@@ -248,20 +346,28 @@ impl ArmState {
         self.last_play = t;
     }
 
-    /// Exact inverse + θ̂ recomputation from A, b.
+    /// Exact re-sync of every cache from (A, b): one from-scratch
+    /// factorization, then A⁻¹ and θ̂ from the fresh factor.  This is the
+    /// drift backstop for both rank-1 maintenance paths (factor and
+    /// Sherman–Morrison inverse); it runs every [`REFRESH_EVERY`] rank-1
+    /// updates, after heavy decay, and on every merge.  Allocation-free
+    /// at fixed dimension.
+    ///
+    /// Defensive path: a non-SPD A (possible only after extreme decay
+    /// plus cancellation) is re-ridged by 1e-6 and refactored once more;
+    /// if that also fails the previous caches are kept as-is.
     pub fn refresh(&mut self) {
-        if let Some(ch) = Cholesky::factor(&self.a) {
-            self.a_inv = ch.inverse();
-            self.theta = ch.solve(&self.b);
-        } else {
-            // defensive: re-ridge and retry (can only happen after extreme
-            // decay combined with numeric cancellation)
+        if !self.chol.refactor(&self.a) {
             self.a.add_diag(1e-6);
-            if let Some(ch) = Cholesky::factor(&self.a) {
-                self.a_inv = ch.inverse();
-                self.theta = ch.solve(&self.b);
+            if !self.chol.refactor(&self.a) {
+                self.updates_since_refresh = 0;
+                return;
             }
         }
+        self.chol
+            .inverse_into(&mut self.a_inv, &mut self.scratch, &mut self.scratch2);
+        self.chol
+            .solve_into(&self.b, &mut self.theta, &mut self.scratch);
         self.updates_since_refresh = 0;
     }
 
@@ -400,6 +506,34 @@ mod tests {
     }
 
     #[test]
+    fn rank1_factor_tracks_exact_under_decay_then_refresh_is_exact() {
+        // the ISSUE-6 drift bound: N rank-1 updates interleaved with heavy
+        // geometric decay (near-singular A by the end) stay within 1e-9 of
+        // the from-scratch factorization, and one exact refresh re-syncs
+        // the maintained factor bit-identically
+        prop::for_cases(10, 51, |rng, _| {
+            let d = 2 + rng.below(8);
+            let gamma = 0.90 + rng.f64() * 0.05;
+            let mut arm = ArmState::cold(d, 0.05, 0);
+            let mut t = 0u64;
+            for _ in 0..200 {
+                t += 1 + rng.below(5) as u64;
+                let x = ctx(rng, d);
+                arm.observe(&x, rng.f64(), gamma, t);
+            }
+            let exact = Cholesky::factor(&arm.a).unwrap();
+            let drift = arm.chol.max_abs_diff(&exact);
+            assert!(drift < 1e-9, "factor drift {drift}");
+            arm.refresh();
+            assert_eq!(
+                arm.chol.max_abs_diff(&exact),
+                0.0,
+                "refresh must re-sync the factor exactly"
+            );
+        });
+    }
+
+    #[test]
     fn staleness_inflation_caps_at_vmax() {
         let mut arm = ArmState::cold(3, 1.0, 0);
         arm.last_upd = 0;
@@ -443,7 +577,7 @@ mod tests {
         }
         shard_a.merge(&shard_b, 1.0);
         // merge refreshes exactly; put the reference on the same footing
-        // (its a_inv/θ̂ otherwise carry Sherman–Morrison cache drift)
+        // (its a_inv/θ̂ otherwise carry rank-1 cache drift)
         single.refresh();
         assert_eq!(shard_a.n_obs, 200);
         for i in 0..d {
@@ -523,9 +657,10 @@ mod tests {
         }
         let refs: Vec<(&[f64], f64)> = obs.iter().map(|(x, r)| (x.as_slice(), *r)).collect();
         bat.observe_batch(&refs, gamma, 50);
-        // observe_batch ends on an exact refresh; do the same on the
-        // sequential arm so the comparison has no SM cache drift in it
+        // both paths now run rank-1 maintenance; refresh both so the
+        // comparison is between exact caches of the same statistics
         seq.refresh();
+        bat.refresh();
         assert_eq!(seq.n_obs, bat.n_obs);
         assert_eq!(seq.last_upd, bat.last_upd);
         for i in 0..d {
@@ -536,6 +671,56 @@ mod tests {
                 bat.theta[i]
             );
         }
+    }
+
+    #[test]
+    fn retract_undoes_observe() {
+        prop::for_cases(20, 52, |rng, _| {
+            let d = 2 + rng.below(8);
+            let mut arm = ArmState::cold(d, 1.0, 0);
+            for t in 1..=30u64 {
+                let x = ctx(rng, d);
+                arm.observe(&x, rng.f64(), 1.0, t);
+            }
+            let before = arm.clone();
+            let probe = ctx(rng, d);
+            let x = ctx(rng, d);
+            arm.observe(&x, 0.8, 1.0, 31);
+            assert!(arm.retract(&x, 0.8), "retract of the last observe");
+            assert_eq!(arm.n_obs, before.n_obs);
+            assert_eq!(arm.delta_obs(), before.delta_obs());
+            assert!(
+                (arm.predict(&probe) - before.predict(&probe)).abs() < 1e-9,
+                "predict drift {}",
+                (arm.predict(&probe) - before.predict(&probe)).abs()
+            );
+            assert!(
+                (arm.variance(&probe) - before.variance(&probe)).abs() < 1e-9,
+                "variance drift {}",
+                (arm.variance(&probe) - before.variance(&probe)).abs()
+            );
+            assert!(arm.a.max_abs_diff(&before.a) < 1e-9);
+        });
+    }
+
+    #[test]
+    fn retract_rejects_unabsorbed_observation_and_stays_consistent() {
+        let d = 4;
+        let mut rng = Rng::new(53);
+        let mut arm = ArmState::cold(d, 0.05, 0);
+        let x = ctx(&mut rng, d);
+        arm.observe(&x, 0.5, 1.0, 1);
+        let before_a = arm.a.clone();
+        // a vector far larger than anything absorbed cannot be removed
+        let huge: Vec<f64> = x.iter().map(|v| v * 50.0).collect();
+        assert!(!arm.retract(&huge, 0.5));
+        // statistics untouched, caches consistent (refresh ran)
+        assert_eq!(arm.a.max_abs_diff(&before_a), 0.0);
+        let exact = Cholesky::factor(&arm.a).unwrap();
+        assert_eq!(arm.chol.max_abs_diff(&exact), 0.0);
+        // and the arm still works
+        arm.observe(&x, 0.5, 1.0, 2);
+        assert!(arm.theta.iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -1,12 +1,23 @@
-//! Cholesky factorization for SPD systems.
+//! Cholesky factorization for SPD systems, with O(d²) rank-1 maintenance.
 //!
 //! Backs (a) prior fitting (ridge solves over offline sufficient
-//! statistics), (b) the periodic exact inverse refresh that bounds
-//! Sherman–Morrison floating-point drift on long-running arms.
+//! statistics), (b) the *maintained* factor of each arm's design matrix
+//! `A = L Lᵀ`: every observation applies [`Cholesky::rank1_update`]
+//! (O(d²)) instead of refactoring from scratch (O(d³)), geometric
+//! forgetting rescales the factor via [`Cholesky::scale`], and a periodic
+//! [`Cholesky::refactor`] bounds the accumulated floating-point drift
+//! (see `bandit::arm` for the refresh cadence and the measured drift
+//! bound).
+//!
+//! All hot-path entry points (`rank1_update`, `rank1_downdate`,
+//! `solve_into`, `inverse_into`, `refactor` at unchanged dimension) are
+//! allocation-free; the allocating `solve` / `inverse` wrappers remain
+//! for cold paths like prior fitting.
 
 use super::mat::Mat;
 
 /// Lower-triangular Cholesky factor L with A = L Lᵀ.
+#[derive(Clone, Debug)]
 pub struct Cholesky {
     d: usize,
     l: Vec<f64>, // row-major lower triangle (full square storage)
@@ -15,33 +26,164 @@ pub struct Cholesky {
 impl Cholesky {
     /// Factor an SPD matrix. Returns None if not positive definite.
     pub fn factor(a: &Mat) -> Option<Cholesky> {
-        let d = a.dim();
+        let mut ch = Cholesky {
+            d: a.dim(),
+            l: vec![0.0; a.dim() * a.dim()],
+        };
+        if ch.refactor(a) {
+            Some(ch)
+        } else {
+            None
+        }
+    }
+
+    /// The factor of `lambda * I`: L = sqrt(lambda) * I.  The exact cold
+    /// start of every arm's maintained factor (`A = λ₀I`).
+    pub fn scaled_identity(d: usize, lambda: f64) -> Cholesky {
+        debug_assert!(lambda > 0.0);
         let mut l = vec![0.0; d * d];
+        let s = lambda.sqrt();
+        for i in 0..d {
+            l[i * d + i] = s;
+        }
+        Cholesky { d, l }
+    }
+
+    /// Refactor in place from `a`, reusing the existing storage (the
+    /// periodic exact refresh — no allocation when the dimension is
+    /// unchanged).  Returns `false` if `a` is not positive definite, in
+    /// which case the factor is left PARTIALLY OVERWRITTEN and must not
+    /// be used until a later `refactor` succeeds.
+    pub fn refactor(&mut self, a: &Mat) -> bool {
+        let d = a.dim();
+        if self.d != d {
+            self.d = d;
+            self.l.resize(d * d, 0.0);
+        }
+        self.l.fill(0.0);
         for i in 0..d {
             for j in 0..=i {
                 let mut s = a.at(i, j);
                 for k in 0..j {
-                    s -= l[i * d + k] * l[j * d + k];
+                    s -= self.l[i * d + k] * self.l[j * d + k];
                 }
                 if i == j {
                     if s <= 0.0 {
-                        return None;
+                        return false;
                     }
-                    l[i * d + i] = s.sqrt();
+                    self.l[i * d + i] = s.sqrt();
                 } else {
-                    l[i * d + j] = s / l[j * d + j];
+                    self.l[i * d + j] = s / self.l[j * d + j];
                 }
             }
         }
-        Some(Cholesky { d, l })
+        true
     }
 
-    /// Solve A x = b.
-    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// L_ij (zero above the diagonal).
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.l[i * self.d + j]
+    }
+
+    /// Max |L_self − L_other| entry — the drift metric the rank-1
+    /// property tests assert against a from-scratch factorization.
+    pub fn max_abs_diff(&self, other: &Cholesky) -> f64 {
+        debug_assert_eq!(self.d, other.d);
+        self.l
+            .iter()
+            .zip(other.l.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Rank-1 UPDATE: given self = chol(A), rewrite to chol(A + x xᵀ) in
+    /// O(d²) (LINPACK `dchud`-style column sweep of Givens-like
+    /// rotations).  `work` is caller-provided scratch of length d; `x` is
+    /// not modified.  Always succeeds: adding an outer product keeps A
+    /// positive definite.
+    ///
+    /// Contract: each sweep is backward-stable, but drift relative to the
+    /// from-scratch factor accumulates over many sweeps; callers that
+    /// update in a loop must periodically [`Cholesky::refactor`] (the arm
+    /// layer does so every `REFRESH_EVERY` observations, which the
+    /// property tests bound at ≤1e-9 total drift).
+    pub fn rank1_update(&mut self, x: &[f64], work: &mut [f64]) {
+        let d = self.d;
+        debug_assert_eq!(x.len(), d);
+        debug_assert_eq!(work.len(), d);
+        work.copy_from_slice(x);
+        for k in 0..d {
+            let lkk = self.l[k * d + k];
+            let wk = work[k];
+            let r = (lkk * lkk + wk * wk).sqrt();
+            let c = r / lkk;
+            let s = wk / lkk;
+            self.l[k * d + k] = r;
+            for i in (k + 1)..d {
+                let lik = (self.l[i * d + k] + s * work[i]) / c;
+                work[i] = c * work[i] - s * lik;
+                self.l[i * d + k] = lik;
+            }
+        }
+    }
+
+    /// Rank-1 DOWNDATE: given self = chol(A), rewrite to chol(A − x xᵀ)
+    /// in O(d²) (hyperbolic rotations).  Returns `false` — leaving the
+    /// factor PARTIALLY MODIFIED — when A − x xᵀ is not numerically
+    /// positive definite, i.e. x was never absorbed into A (or drift ate
+    /// the margin); the caller must then [`Cholesky::refactor`] from its
+    /// exact statistics before using the factor again.  `bandit::arm`'s
+    /// `retract` is the canonical caller and does exactly that.
+    pub fn rank1_downdate(&mut self, x: &[f64], work: &mut [f64]) -> bool {
+        let d = self.d;
+        debug_assert_eq!(x.len(), d);
+        debug_assert_eq!(work.len(), d);
+        work.copy_from_slice(x);
+        for k in 0..d {
+            let lkk = self.l[k * d + k];
+            let wk = work[k];
+            let r2 = lkk * lkk - wk * wk;
+            if r2 <= 0.0 {
+                return false;
+            }
+            let r = r2.sqrt();
+            let c = r / lkk;
+            let s = wk / lkk;
+            self.l[k * d + k] = r;
+            for i in (k + 1)..d {
+                let lik = (self.l[i * d + k] - s * work[i]) / c;
+                work[i] = c * work[i] - s * lik;
+                self.l[i * d + k] = lik;
+            }
+        }
+        true
+    }
+
+    /// Rescale the factored matrix: chol(A) → chol(f·A), i.e. L *= √f.
+    /// This is how geometric forgetting (`A ← γ^Δt A`) propagates to the
+    /// maintained factor in O(d²) without refactoring.  `f` must be > 0.
+    pub fn scale(&mut self, f: f64) {
+        debug_assert!(f > 0.0);
+        let s = f.sqrt();
+        for v in &mut self.l {
+            *v *= s;
+        }
+    }
+
+    /// Solve A x = b without allocating: `y` is caller scratch of length
+    /// d, `x` receives the solution.  `b` may NOT alias `x` or `y`.
+    pub fn solve_into(&self, b: &[f64], x: &mut [f64], y: &mut [f64]) {
         let d = self.d;
         debug_assert_eq!(b.len(), d);
+        debug_assert_eq!(x.len(), d);
+        debug_assert_eq!(y.len(), d);
         // forward: L y = b
-        let mut y = vec![0.0; d];
         for i in 0..d {
             let mut s = b[i];
             for k in 0..i {
@@ -50,7 +192,6 @@ impl Cholesky {
             y[i] = s / self.l[i * d + i];
         }
         // backward: Lᵀ x = y
-        let mut x = vec![0.0; d];
         for i in (0..d).rev() {
             let mut s = y[i];
             for k in (i + 1)..d {
@@ -58,30 +199,70 @@ impl Cholesky {
             }
             x[i] = s / self.l[i * d + i];
         }
+    }
+
+    /// Solve A x = b (allocating convenience wrapper over
+    /// [`Cholesky::solve_into`]).
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let d = self.d;
+        let mut x = vec![0.0; d];
+        let mut y = vec![0.0; d];
+        self.solve_into(b, &mut x, &mut y);
         x
     }
 
-    /// A⁻¹ via d solves against unit vectors.
-    pub fn inverse(&self) -> Mat {
+    /// A⁻¹ into caller storage, allocation-free: d triangular solves
+    /// against unit vectors, then symmetrization.  `y` and `x` are
+    /// scratch of length d.  For b = e_j the forward solve yields
+    /// y_i = 0 exactly for i < j, so the sweep starts at row j —
+    /// bit-identical to the full solve at half the work.
+    pub fn inverse_into(&self, out: &mut Mat, y: &mut [f64], x: &mut [f64]) {
         let d = self.d;
-        let mut inv = Mat::zeros(d);
-        let mut e = vec![0.0; d];
+        debug_assert_eq!(out.dim(), d);
+        debug_assert_eq!(y.len(), d);
+        debug_assert_eq!(x.len(), d);
         for j in 0..d {
-            e[j] = 1.0;
-            let col = self.solve(&e);
-            e[j] = 0.0;
+            // forward: L y = e_j (rows below j only; above are exact 0)
+            for v in y[..j].iter_mut() {
+                *v = 0.0;
+            }
+            for i in j..d {
+                let mut s = if i == j { 1.0 } else { 0.0 };
+                for k in j..i {
+                    s -= self.l[i * d + k] * y[k];
+                }
+                y[i] = s / self.l[i * d + i];
+            }
+            // backward: Lᵀ x = y
+            for i in (0..d).rev() {
+                let mut s = y[i];
+                for k in (i + 1)..d {
+                    s -= self.l[k * d + i] * x[k];
+                }
+                x[i] = s / self.l[i * d + i];
+            }
             for i in 0..d {
-                *inv.at_mut(i, j) = col[i];
+                *out.at_mut(i, j) = x[i];
             }
         }
         // symmetrize to kill round-off asymmetry
         for i in 0..d {
             for j in 0..i {
-                let m = 0.5 * (inv.at(i, j) + inv.at(j, i));
-                *inv.at_mut(i, j) = m;
-                *inv.at_mut(j, i) = m;
+                let m = 0.5 * (out.at(i, j) + out.at(j, i));
+                *out.at_mut(i, j) = m;
+                *out.at_mut(j, i) = m;
             }
         }
+    }
+
+    /// A⁻¹ (allocating convenience wrapper over
+    /// [`Cholesky::inverse_into`]).
+    pub fn inverse(&self) -> Mat {
+        let d = self.d;
+        let mut inv = Mat::zeros(d);
+        let mut y = vec![0.0; d];
+        let mut x = vec![0.0; d];
+        self.inverse_into(&mut inv, &mut y, &mut x);
         inv
     }
 
@@ -153,5 +334,123 @@ mod tests {
     fn logdet_identity_zero() {
         let m = Mat::scaled_identity(4, 1.0);
         assert!(Cholesky::factor(&m).unwrap().logdet().abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaled_identity_matches_factor() {
+        for d in [1usize, 3, 7] {
+            for lam in [0.05, 1.0, 42.0] {
+                let direct = Cholesky::scaled_identity(d, lam);
+                let via = Cholesky::factor(&Mat::scaled_identity(d, lam)).unwrap();
+                assert_eq!(direct.max_abs_diff(&via), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn refactor_reuses_storage_across_matrices() {
+        prop::for_cases(10, 13, |rng, _| {
+            let d = 2 + rng.below(8);
+            let a = Mat::from_rows(d, prop::spd(rng, d, 1.0));
+            let b = Mat::from_rows(d, prop::spd(rng, d, 0.5));
+            let mut ch = Cholesky::factor(&a).unwrap();
+            assert!(ch.refactor(&b));
+            let fresh = Cholesky::factor(&b).unwrap();
+            assert_eq!(ch.max_abs_diff(&fresh), 0.0, "refactor must be bit-identical");
+        });
+    }
+
+    #[test]
+    fn rank1_update_matches_refactor() {
+        prop::for_cases(30, 14, |rng, _| {
+            let d = 2 + rng.below(12);
+            let mut a = Mat::from_rows(d, prop::spd(rng, d, 0.5));
+            let mut ch = Cholesky::factor(&a).unwrap();
+            let mut work = vec![0.0; d];
+            for _ in 0..5 {
+                let x = prop::vec_f64(rng, d, 1.5);
+                a.add_outer(1.0, &x);
+                ch.rank1_update(&x, &mut work);
+            }
+            let exact = Cholesky::factor(&a).unwrap();
+            assert!(
+                ch.max_abs_diff(&exact) < 1e-9,
+                "update drift {}",
+                ch.max_abs_diff(&exact)
+            );
+        });
+    }
+
+    #[test]
+    fn rank1_downdate_inverts_update() {
+        prop::for_cases(30, 15, |rng, _| {
+            let d = 2 + rng.below(12);
+            let a = Mat::from_rows(d, prop::spd(rng, d, 1.0));
+            let exact = Cholesky::factor(&a).unwrap();
+            let mut ch = exact.clone();
+            let mut work = vec![0.0; d];
+            let x = prop::vec_f64(rng, d, 1.5);
+            ch.rank1_update(&x, &mut work);
+            assert!(ch.rank1_downdate(&x, &mut work), "must stay SPD");
+            assert!(
+                ch.max_abs_diff(&exact) < 1e-9,
+                "roundtrip drift {}",
+                ch.max_abs_diff(&exact)
+            );
+        });
+    }
+
+    #[test]
+    fn downdate_rejects_unabsorbed_vector() {
+        // removing a vector that was never added destroys positive
+        // definiteness and must be reported, not silently corrupted
+        let a = Mat::scaled_identity(4, 0.01);
+        let mut ch = Cholesky::factor(&a).unwrap();
+        let mut work = vec![0.0; 4];
+        assert!(!ch.rank1_downdate(&[1.0, 0.0, 0.0, 0.0], &mut work));
+    }
+
+    #[test]
+    fn scale_matches_scaled_refactor() {
+        prop::for_cases(20, 16, |rng, _| {
+            let d = 2 + rng.below(10);
+            let mut a = Mat::from_rows(d, prop::spd(rng, d, 1.0));
+            let mut ch = Cholesky::factor(&a).unwrap();
+            let f = 0.05 + rng.f64() * 2.0;
+            ch.scale(f);
+            a.scale(f);
+            let exact = Cholesky::factor(&a).unwrap();
+            assert!(ch.max_abs_diff(&exact) < 1e-12 * (1.0 + f));
+        });
+    }
+
+    #[test]
+    fn solve_into_matches_solve() {
+        prop::for_cases(20, 17, |rng, _| {
+            let d = 2 + rng.below(10);
+            let a = Mat::from_rows(d, prop::spd(rng, d, 1.0));
+            let b = prop::vec_f64(rng, d, 2.0);
+            let ch = Cholesky::factor(&a).unwrap();
+            let x1 = ch.solve(&b);
+            let mut x2 = vec![0.0; d];
+            let mut y = vec![0.0; d];
+            ch.solve_into(&b, &mut x2, &mut y);
+            assert_eq!(x1, x2, "wrapper must be bit-identical");
+        });
+    }
+
+    #[test]
+    fn inverse_into_matches_inverse() {
+        prop::for_cases(15, 18, |rng, _| {
+            let d = 2 + rng.below(10);
+            let a = Mat::from_rows(d, prop::spd(rng, d, 1.0));
+            let ch = Cholesky::factor(&a).unwrap();
+            let i1 = ch.inverse();
+            let mut i2 = Mat::zeros(d);
+            let mut y = vec![0.0; d];
+            let mut x = vec![0.0; d];
+            ch.inverse_into(&mut i2, &mut y, &mut x);
+            assert_eq!(i1.max_abs_diff(&i2), 0.0, "wrapper must be bit-identical");
+        });
     }
 }

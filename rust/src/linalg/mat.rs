@@ -99,15 +99,24 @@ impl Mat {
         }
     }
 
-    /// xᵀ A x  (A assumed symmetric).
+    /// xᵀ A x  (A assumed symmetric).  Reads only the diagonal + upper
+    /// triangle — each off-diagonal pair contributes `2·x_i·a_ij·x_j` —
+    /// which halves the memory traffic of the dense row sweep; the same
+    /// shape the Pallas `ucb_score` kernel uses for the exploration
+    /// bonus.  The tiny asymmetry Sherman–Morrison round-off leaves in
+    /// the cached inverse (~1 ulp) is averaged out by the periodic exact
+    /// refresh, far below the routing tolerances.
     #[inline]
     pub fn quad_form(&self, x: &[f64]) -> f64 {
         let d = self.d;
-        let mut total = 0.0;
+        let mut diag = 0.0;
+        let mut off = 0.0;
         for i in 0..d {
-            total += x[i] * dot(&self.data[i * d..(i + 1) * d], x);
+            let row = &self.data[i * d..(i + 1) * d];
+            diag += x[i] * x[i] * row[i];
+            off += x[i] * dot(&row[i + 1..], &x[i + 1..]);
         }
-        total
+        diag + 2.0 * off
     }
 
     /// Sherman–Morrison: given self = A⁻¹, update in place to (A + x xᵀ)⁻¹.
@@ -129,6 +138,34 @@ impl Mat {
             }
         }
         quad
+    }
+
+    /// Sherman–Morrison removal: given self = A⁻¹, update in place to
+    /// (A − x xᵀ)⁻¹.  Returns `None` — with self UNCHANGED — when
+    /// `1 − xᵀA⁻¹x` is not safely positive, i.e. removing x would
+    /// (numerically) destroy positive definiteness; otherwise returns
+    /// xᵀ A⁻¹ x.  O(d²).  The inverse-cache counterpart of
+    /// [`crate::linalg::Cholesky::rank1_downdate`].
+    pub fn sherman_morrison_downdate(&mut self, x: &[f64], scratch: &mut [f64]) -> Option<f64> {
+        let d = self.d;
+        debug_assert_eq!(x.len(), d);
+        debug_assert_eq!(scratch.len(), d);
+        // u = A⁻¹ x  (A⁻¹ symmetric)
+        self.matvec(x, scratch);
+        let quad = dot(x, scratch);
+        let denom = 1.0 - quad;
+        if denom <= 1e-12 {
+            return None;
+        }
+        let c = 1.0 / denom;
+        for i in 0..d {
+            let ci = c * scratch[i];
+            let row = &mut self.data[i * d..(i + 1) * d];
+            for j in 0..d {
+                row[j] += ci * scratch[j];
+            }
+        }
+        Some(quad)
     }
 
     /// Full Gauss–Jordan inversion with partial pivoting.  O(d³).
@@ -249,6 +286,38 @@ mod tests {
     fn singular_returns_none() {
         let m = Mat::zeros(3);
         assert!(m.inverse_gauss_jordan().is_none());
+    }
+
+    #[test]
+    fn sherman_morrison_downdate_inverts_update() {
+        prop::for_cases(30, 8, |rng, _| {
+            let d = 2 + rng.below(10);
+            let a = Mat::from_rows(d, prop::spd(rng, d, 1.0));
+            let exact = a.inverse_gauss_jordan().unwrap();
+            let mut inv = exact.clone();
+            let x = prop::vec_f64(rng, d, 1.5);
+            let mut scratch = vec![0.0; d];
+            inv.sherman_morrison_update(&x, &mut scratch);
+            let quad = inv.sherman_morrison_downdate(&x, &mut scratch);
+            assert!(quad.is_some(), "removing what was added must succeed");
+            assert!(
+                inv.max_abs_diff(&exact) < 1e-7,
+                "SM roundtrip drifted: {}",
+                inv.max_abs_diff(&exact)
+            );
+        });
+    }
+
+    #[test]
+    fn sherman_morrison_downdate_rejects_unabsorbed_vector() {
+        // A = 0.01 I  ⇒  A⁻¹ = 100 I;  removing e₀ gives denom 1-100 < 0
+        let mut inv = Mat::scaled_identity(3, 100.0);
+        let before = inv.clone();
+        let mut scratch = vec![0.0; 3];
+        assert!(inv
+            .sherman_morrison_downdate(&[1.0, 0.0, 0.0], &mut scratch)
+            .is_none());
+        assert_eq!(inv.max_abs_diff(&before), 0.0, "must leave self unchanged");
     }
 
     #[test]

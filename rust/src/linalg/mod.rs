@@ -2,9 +2,19 @@
 //!
 //! Everything the router needs is `O(d^2)` per request at `d = 26`: cached
 //! inverses, Sherman–Morrison rank-1 corrections, quadratic forms and
-//! mat-vec products.  A Cholesky solver backs prior fitting and the
-//! periodic inverse refresh that bounds Sherman–Morrison drift; a plain
-//! Gauss–Jordan inversion exists solely as the paper's Table-10 baseline.
+//! mat-vec products.  Each arm additionally maintains a running Cholesky
+//! factor of its design matrix through O(d²) rank-1 up/downdates
+//! ([`Cholesky::rank1_update`] / [`Cholesky::rank1_downdate`]), with a
+//! periodic exact refactorization bounding the drift of both the factor
+//! and the Sherman–Morrison inverse cache; a plain Gauss–Jordan inversion
+//! exists solely as the paper's Table-10 baseline.
+//!
+//! The kernels here are written so the scalar compiler auto-vectorizes
+//! them (`BENCH_routing.json` tracks the effect): [`dot`] splits into four
+//! independent accumulators and [`Mat::quad_form`] reads only the upper
+//! triangle of its symmetric argument — the same shapes the Pallas
+//! `ucb_score` kernel (`python/compile/kernels/ucb_score.py`) uses on the
+//! accelerator side.
 
 mod chol;
 mod mat;
@@ -12,13 +22,26 @@ mod mat;
 pub use chol::Cholesky;
 pub use mat::Mat;
 
-/// Dot product.
+/// Dot product, unrolled into four independent accumulators so the
+/// compiler can keep multiple FMAs in flight (a single running sum
+/// serializes on the add latency).  Summation order is fixed —
+/// `(s0+s1)+(s2+s3)` over the lanes, then the tail — so results stay
+/// bit-reproducible across runs on the same target.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let mut s = 0.0;
-    for i in 0..a.len() {
-        s += a[i] * b[i];
+    let mut acc = [0.0f64; 4];
+    let mut chunks_a = a.chunks_exact(4);
+    let mut chunks_b = b.chunks_exact(4);
+    for (ca, cb) in chunks_a.by_ref().zip(chunks_b.by_ref()) {
+        acc[0] += ca[0] * cb[0];
+        acc[1] += ca[1] * cb[1];
+        acc[2] += ca[2] * cb[2];
+        acc[3] += ca[3] * cb[3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for (x, y) in chunks_a.remainder().iter().zip(chunks_b.remainder()) {
+        s += x * y;
     }
     s
 }
@@ -50,5 +73,16 @@ mod tests {
         axpy(2.0, &a, &mut y);
         assert_eq!(y, [3.0, 5.0, 7.0]);
         assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dot_unrolled_covers_all_remainders() {
+        // exercise every lane/tail split: lengths 0..=9
+        for n in 0..=9usize {
+            let a: Vec<f64> = (0..n).map(|i| (i + 1) as f64).collect();
+            let b: Vec<f64> = (0..n).map(|i| (i as f64) * 0.5 - 1.0).collect();
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-12, "n={n}");
+        }
     }
 }

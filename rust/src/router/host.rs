@@ -19,7 +19,7 @@ use std::sync::Arc;
 
 use crate::bandit::ArmState;
 use crate::pacer::{BudgetPacer, PacerConfig, PacerHandle, SharedPacer};
-use crate::router::policy::{FeedbackCtx, RouteCtx, RoutingPolicy};
+use crate::router::policy::{BatchCtx, FeedbackCtx, PolicyDecision, RouteCtx, RoutingPolicy};
 use crate::router::{FeedbackEvent, Registry, RouteDecision};
 use crate::util::json::Json;
 
@@ -39,6 +39,9 @@ pub struct PolicyHost {
     c_tilde: Vec<f64>,
     // scratch: eligible slots for the current decision
     eligible_buf: Vec<usize>,
+    // scratch: policy decisions for the current batch (reused so the
+    // steady-state batch path allocates nothing)
+    pick_buf: Vec<PolicyDecision>,
 }
 
 impl PolicyHost {
@@ -65,6 +68,7 @@ impl PolicyHost {
             blended: Vec::new(),
             c_tilde: Vec::new(),
             eligible_buf: Vec::new(),
+            pick_buf: Vec::new(),
         };
         host.refresh_prices();
         host
@@ -318,44 +322,50 @@ impl PolicyHost {
         }
     }
 
-    /// Vectorized routing: eligibility is computed once for the whole
-    /// batch (λ only moves on feedback, never on selection) and the
-    /// policy sees all contexts together via
-    /// [`RoutingPolicy::select_batch`].
-    pub fn route_batch(&mut self, xs: &[Vec<f64>]) -> Vec<RouteDecision> {
+    /// Vectorized routing into a caller-owned buffer: eligibility is
+    /// computed once for the whole batch (λ only moves on feedback, never
+    /// on selection) and the policy sees one shared [`BatchCtx`] via
+    /// [`RoutingPolicy::select_batch`].  Steady-state this path performs
+    /// zero heap allocations — the shared slot slices borrow host
+    /// buffers, picks land in a reused scratch vec, and `out` is cleared
+    /// and refilled in place (asserted by `tests/alloc_probe.rs`).
+    pub fn route_batch_into(&mut self, xs: &[Vec<f64>], out: &mut Vec<RouteDecision>) {
+        out.clear();
         if xs.is_empty() {
-            return Vec::new();
+            return;
         }
         let lambda = self.prepare();
-        let t0 = self.t;
-        let ctxs: Vec<RouteCtx> = xs
-            .iter()
-            .enumerate()
-            .map(|(i, x)| RouteCtx {
-                x: x.as_slice(),
-                eligible: &self.eligible_buf,
-                blended: &self.blended,
-                c_tilde: &self.c_tilde,
-                lambda,
-                step: t0 + i as u64,
-            })
-            .collect();
-        let mut picks = Vec::with_capacity(xs.len());
-        self.policy.select_batch(&ctxs, &mut picks);
-        drop(ctxs);
-        debug_assert_eq!(picks.len(), xs.len());
+        let batch = BatchCtx {
+            xs,
+            eligible: &self.eligible_buf,
+            blended: &self.blended,
+            c_tilde: &self.c_tilde,
+            lambda,
+            step0: self.t,
+        };
+        self.pick_buf.clear();
+        self.policy.select_batch(&batch, &mut self.pick_buf);
+        debug_assert_eq!(self.pick_buf.len(), xs.len());
         self.t += xs.len() as u64;
         let host_eligible = self.eligible_buf.len();
-        picks
-            .into_iter()
-            .map(|d| RouteDecision {
+        out.reserve(self.pick_buf.len());
+        for d in &self.pick_buf {
+            out.push(RouteDecision {
                 arm: d.arm,
                 score: d.score,
                 lambda,
                 forced: d.forced,
                 n_eligible: d.n_eligible.unwrap_or(host_eligible),
-            })
-            .collect()
+            });
+        }
+    }
+
+    /// Vectorized routing (allocating convenience wrapper over
+    /// [`PolicyHost::route_batch_into`]).
+    pub fn route_batch(&mut self, xs: &[Vec<f64>]) -> Vec<RouteDecision> {
+        let mut out = Vec::with_capacity(xs.len());
+        self.route_batch_into(xs, &mut out);
+        out
     }
 
     /// Feedback path: the policy learns, then the host pacer — when one
@@ -564,6 +574,30 @@ mod tests {
             a.feedback(da.arm, &[i as f64], 0.5, 1e-4);
             b.feedback(db.arm, &[i as f64], 0.5, 1e-4);
         }
+    }
+
+    #[test]
+    fn route_batch_into_matches_sequential_routes() {
+        let mut seq = three_model_host(Some(6.6e-4));
+        let mut bat = three_model_host(Some(6.6e-4));
+        let xs: Vec<Vec<f64>> = (0..64).map(|i| vec![(i % 7) as f64 * 0.1, 1.0]).collect();
+        let mut out = Vec::new();
+        bat.route_batch_into(&xs, &mut out);
+        assert_eq!(out.len(), 64);
+        for (i, x) in xs.iter().enumerate() {
+            let d = seq.route(x);
+            assert_eq!(d.arm, out[i].arm, "item {i} diverged");
+            assert_eq!(d.n_eligible, out[i].n_eligible);
+        }
+        assert_eq!(seq.step(), bat.step());
+        // buffer reuse: a second batch refills in place
+        bat.route_batch_into(&xs[..8], &mut out);
+        assert_eq!(out.len(), 8);
+        // empty batch clears the buffer and routes nothing
+        let t = bat.step();
+        bat.route_batch_into(&[], &mut out);
+        assert!(out.is_empty());
+        assert_eq!(bat.step(), t);
     }
 
     #[test]

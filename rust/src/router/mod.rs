@@ -22,6 +22,6 @@ pub use floor::{FloorConfig, QualityFloorRouter};
 pub use feedback::{ContextCache, FeedbackEvent, FeedbackQueue, FileStore, Pending};
 pub use host::PolicyHost;
 pub use pareto::{ParetoRouter, Prior, RouteDecision};
-pub use policy::{FeedbackCtx, PolicyDecision, RouteCtx, RoutingPolicy};
+pub use policy::{BatchCtx, FeedbackCtx, PolicyDecision, RouteCtx, RoutingPolicy};
 pub use registry::{ModelEntry, ModelRef, Registry};
 pub use state::{ArmSnap, PacerSnap, RouterState, SlotSnap};

@@ -11,7 +11,7 @@ use crate::linalg::Mat;
 use crate::pacer::{BudgetPacer, PacerHandle, SharedPacer};
 use crate::router::config::RouterConfig;
 use crate::router::feedback::FeedbackEvent;
-use crate::router::policy::{FeedbackCtx, PolicyDecision, RouteCtx, RoutingPolicy};
+use crate::router::policy::{BatchCtx, FeedbackCtx, PolicyDecision, RouteCtx, RoutingPolicy};
 use crate::router::registry::Registry;
 use crate::router::state::{ArmSnap, PacerSnap, RouterState, SlotSnap};
 use crate::util::rng::Rng;
@@ -187,24 +187,36 @@ impl ParetoRouter {
     pub fn route(&mut self, x: &[f64]) -> RouteDecision {
         debug_assert_eq!(x.len(), self.cfg.d);
         let lambda_t = self.pacer.as_ref().map_or(0.0, |p| p.lambda());
-
-        // --- forced-exploration burn-in (§3.6/§4.5) -----------------------
-        if let Some(id) = self.next_burnin() {
-            self.burnin_left[id] -= 1;
-            self.t += 1;
-            if let Some(arm) = self.arms[id].as_mut() {
-                arm.last_play = self.t;
-            }
-            return RouteDecision {
-                arm: id,
-                score: f64::NAN,
-                lambda: lambda_t,
-                forced: true,
-                n_eligible: 1,
-            };
+        if let Some(d) = self.try_burnin(lambda_t) {
+            return d;
         }
+        self.build_eligible();
+        self.score_and_pick(x, lambda_t)
+    }
 
-        // --- hard ceiling: candidate set A_t (lines 4–8) ------------------
+    /// Forced-exploration burn-in (§3.6/§4.5): when an active slot still
+    /// owes scheduled pulls, consume one and return the forced decision.
+    fn try_burnin(&mut self, lambda_t: f64) -> Option<RouteDecision> {
+        let id = self.next_burnin()?;
+        self.burnin_left[id] -= 1;
+        self.t += 1;
+        if let Some(arm) = self.arms[id].as_mut() {
+            arm.last_play = self.t;
+        }
+        Some(RouteDecision {
+            arm: id,
+            score: f64::NAN,
+            lambda: lambda_t,
+            forced: true,
+            n_eligible: 1,
+        })
+    }
+
+    /// Hard ceiling: rebuild the candidate set A_t in `id_buf`
+    /// (Algorithm 1, lines 4–8).  Depends only on pacer/registry state —
+    /// not on the step clock or context — so one scan can serve a whole
+    /// selection batch.
+    fn build_eligible(&mut self) {
         let ceiling = self
             .pacer
             .as_ref()
@@ -225,8 +237,12 @@ impl ParetoRouter {
                 panic!("route() called with an empty portfolio");
             }
         }
+    }
 
-        // --- score eligible arms (lines 9–13, Eq. 2) ----------------------
+    /// Score the current candidate set and pick the winner (Algorithm 1,
+    /// lines 9–14, Eq. 2), advancing the step clock.  Assumes
+    /// [`Self::build_eligible`] ran after the last pacer/registry change.
+    fn score_and_pick(&mut self, x: &[f64], lambda_t: f64) -> RouteDecision {
         let penalty_weight = self.cfg.lambda_c + lambda_t;
         self.score_buf.clear();
         let t_now = self.t;
@@ -248,7 +264,7 @@ impl ParetoRouter {
             self.score_buf.push(quality - penalty_weight * e.c_tilde);
         }
 
-        // --- argmax with random tiebreak (line 14) -------------------------
+        // argmax with random tiebreak (line 14)
         let pick = self.rng.argmax_tiebreak(&self.score_buf, self.cfg.tie_eps);
         let arm_id = self.id_buf[pick];
         let score = self.score_buf[pick];
@@ -284,10 +300,11 @@ impl ParetoRouter {
     }
 
     /// Apply a drained feedback queue in one pass: observations are grouped
-    /// per arm and each touched arm does a single decay + summed rank-1
-    /// updates + ONE exact Cholesky refresh ([`ArmState::observe_batch`]),
-    /// instead of per-event Sherman–Morrison corrections.  Costs are NOT
-    /// handled here — they were paid to the pacer at arrival time.
+    /// per arm and each touched arm does a single decay + a rank-1
+    /// update sweep + ONE triangular solve for θ̂
+    /// ([`ArmState::observe_batch`]), with the periodic exact refresh
+    /// bounding factor drift.  Costs are NOT handled here — they were
+    /// paid to the pacer at arrival time.
     pub fn feedback_batch(&mut self, events: &[FeedbackEvent]) {
         if events.is_empty() {
             return;
@@ -352,11 +369,11 @@ impl ParetoRouter {
     /// Capture the complete learned state (arms, registry, burn-in,
     /// pacer duals, RNG) for snapshot / warm-restart.
     ///
-    /// Takes `&mut self` because every arm's cached inverse is first
-    /// refreshed to the exact Cholesky inverse: the donor and any router
-    /// restored from this capture then continue from *identical*
-    /// numerics, instead of the donor carrying Sherman–Morrison cache
-    /// drift the restoree lacks.
+    /// Takes `&mut self` because every arm's cached factor and inverse
+    /// are first refreshed to the exact from-scratch Cholesky of A: the
+    /// donor and any router restored from this capture then continue
+    /// from *identical* numerics, instead of the donor carrying rank-1
+    /// / Sherman–Morrison cache drift the restoree lacks.
     pub fn export_state(&mut self) -> RouterState {
         for arm in self.arms.iter_mut().flatten() {
             arm.refresh();
@@ -480,6 +497,41 @@ impl RoutingPolicy for ParetoRouter {
             score: d.score,
             forced: d.forced,
             n_eligible: Some(d.n_eligible),
+        }
+    }
+
+    /// Batched selection that amortises the per-decision fixed costs: the
+    /// dual variable is read once and the hard-ceiling eligibility scan
+    /// runs at most once per batch (λ and the registry are constant
+    /// within a selection batch — cost observations land through
+    /// feedback, never between the decisions of one batch), so this is
+    /// bit-identical to the sequential [`RoutingPolicy::select`] loop,
+    /// including the burn-in interleave, per-item step clock, and the
+    /// tiebreak/Thompson RNG stream.  With a [`SharedPacer`] a
+    /// concurrent replica may move λ mid-batch; this snapshot semantics
+    /// is the documented behaviour (the sequential loop would race the
+    /// same way, just at a finer grain).
+    fn select_batch(&mut self, batch: &BatchCtx<'_>, out: &mut Vec<PolicyDecision>) {
+        let lambda_t = self.pacer.as_ref().map_or(0.0, |p| p.lambda());
+        let mut eligible_built = false;
+        for x in batch.xs {
+            debug_assert_eq!(x.len(), self.cfg.d);
+            let d = match self.try_burnin(lambda_t) {
+                Some(d) => d,
+                None => {
+                    if !eligible_built {
+                        self.build_eligible();
+                        eligible_built = true;
+                    }
+                    self.score_and_pick(x, lambda_t)
+                }
+            };
+            out.push(PolicyDecision {
+                arm: d.arm,
+                score: d.score,
+                forced: d.forced,
+                n_eligible: Some(d.n_eligible),
+            });
         }
     }
 
@@ -969,6 +1021,72 @@ mod tests {
         let mut free = ParetoRouter::new(RouterConfig::unconstrained(D, 39));
         free.add_model("m", 0.1, 0.1, Prior::Cold);
         assert!(!free.set_budget(1e-3), "no pacer -> set_budget must fail");
+    }
+
+    #[test]
+    fn select_batch_is_bit_identical_to_sequential_select() {
+        // twin routers, same seed: one answers through the per-item trait
+        // path, the other through the batched override.  A model added
+        // mid-stream makes burn-in pulls interleave into the batch, so the
+        // amortised eligibility scan must still reproduce the sequential
+        // decisions (arms, scores, step clock, RNG stream) exactly.
+        let mut seq = portfolio(RouterConfig::paretobandit(D, 6.6e-4, 50));
+        let mut bat = portfolio(RouterConfig::paretobandit(D, 6.6e-4, 50));
+        let mut rng = Rng::new(51);
+        for _ in 0..200 {
+            let x = ctx(&mut rng);
+            let a = seq.route(&x);
+            let b = bat.route(&x);
+            assert_eq!(a.arm, b.arm);
+            let r = 0.4 + 0.5 * rng.f64();
+            seq.feedback(a.arm, &x, r, 2.0e-4);
+            bat.feedback(b.arm, &x, r, 2.0e-4);
+        }
+        seq.add_model("flash", 0.30, 2.50, Prior::Cold);
+        bat.add_model("flash", 0.30, 2.50, Prior::Cold);
+        let xs: Vec<Vec<f64>> = (0..40).map(|_| ctx(&mut rng)).collect();
+        // self-hosted policies ignore the host-side eligibility mirror, so
+        // empty slices are fine here
+        let mut want = Vec::new();
+        for (i, x) in xs.iter().enumerate() {
+            let rc = RouteCtx {
+                x,
+                eligible: &[],
+                blended: &[],
+                c_tilde: &[],
+                lambda: 0.0,
+                step: i as u64,
+            };
+            want.push(seq.select(&rc));
+        }
+        let batch = BatchCtx {
+            xs: &xs,
+            eligible: &[],
+            blended: &[],
+            c_tilde: &[],
+            lambda: 0.0,
+            step0: 0,
+        };
+        let mut got = Vec::new();
+        bat.select_batch(&batch, &mut got);
+        assert_eq!(got.len(), want.len());
+        let mut saw_forced = false;
+        let mut saw_scored = false;
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert_eq!(g.arm, w.arm);
+            assert_eq!(g.forced, w.forced);
+            assert_eq!(g.n_eligible, w.n_eligible);
+            assert!(
+                g.score == w.score || (g.score.is_nan() && w.score.is_nan()),
+                "score mismatch: {} vs {}",
+                g.score,
+                w.score
+            );
+            saw_forced |= g.forced;
+            saw_scored |= !g.forced;
+        }
+        assert!(saw_forced && saw_scored, "batch must span both regimes");
+        assert_eq!(seq.step(), bat.step(), "step clocks must agree");
     }
 
     #[test]

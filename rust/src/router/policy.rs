@@ -64,6 +64,42 @@ pub struct RouteCtx<'a> {
     pub step: u64,
 }
 
+/// One batched `select_batch` call: everything in [`RouteCtx`] that is
+/// constant across the batch, factored out once, plus the per-request
+/// feature vectors.  The host freezes λ and the eligible set for the
+/// whole batch (both only move on feedback, which cannot interleave with
+/// a selection batch), so the i-th request sees exactly the [`RouteCtx`]
+/// it would have seen sequentially, with implied step `step0 + i`.
+pub struct BatchCtx<'a> {
+    /// per-request feature vectors
+    pub xs: &'a [Vec<f64>],
+    /// active slots under the price ceiling (ascending, non-empty)
+    pub eligible: &'a [usize],
+    /// slot-aligned declared blended $/1k-token list price
+    pub blended: &'a [f64],
+    /// slot-aligned frozen log-normalised unit cost c̃ (Eq. 6)
+    pub c_tilde: &'a [f64],
+    /// pacer dual λ, frozen for the whole batch
+    pub lambda: f64,
+    /// host step clock at the batch's first request
+    pub step0: u64,
+}
+
+impl BatchCtx<'_> {
+    /// The sequential-equivalent [`RouteCtx`] of the i-th request.
+    #[inline]
+    pub fn route_ctx(&self, i: usize) -> RouteCtx<'_> {
+        RouteCtx {
+            x: &self.xs[i],
+            eligible: self.eligible,
+            blended: self.blended,
+            c_tilde: self.c_tilde,
+            lambda: self.lambda,
+            step: self.step0 + i as u64,
+        }
+    }
+}
+
 /// One observation of the realised (reward, cost) of a prior selection.
 pub struct FeedbackCtx<'a> {
     /// slot the request was served by
@@ -118,12 +154,16 @@ pub trait RoutingPolicy {
     fn update(&mut self, fb: &FeedbackCtx);
 
     /// Vectorized selection for the batch verbs: the host computes
-    /// eligibility once and hands all contexts together.  The default
-    /// simply loops `select`, which is exact for every sequential policy;
-    /// implementations may override to amortize per-decision work.
-    fn select_batch(&mut self, ctxs: &[RouteCtx<'_>], out: &mut Vec<PolicyDecision>) {
-        for ctx in ctxs {
-            let d = self.select(ctx);
+    /// eligibility once and hands the whole batch as one [`BatchCtx`]
+    /// (shared slot slices + per-request features), so nothing per
+    /// request is allocated on either side.  The default loops `select`
+    /// over [`BatchCtx::route_ctx`], which is exact for every sequential
+    /// policy; implementations may override to amortize per-decision work
+    /// — and must then produce decisions bit-identical to the sequential
+    /// loop (the conformance suite replays both paths).
+    fn select_batch(&mut self, batch: &BatchCtx<'_>, out: &mut Vec<PolicyDecision>) {
+        for i in 0..batch.xs.len() {
+            let d = self.select(&batch.route_ctx(i));
             out.push(d);
         }
     }
@@ -282,9 +322,19 @@ mod tests {
         };
         assert_eq!(p.select(&ctx).arm, 2);
         let mut out = Vec::new();
-        let ctxs = [ctx];
-        p.select_batch(&ctxs, &mut out);
-        assert_eq!(out.len(), 1);
+        let xs = vec![vec![1.0], vec![2.0]];
+        let batch = BatchCtx {
+            xs: &xs,
+            eligible: &[2, 3],
+            blended: &[0.0, 0.0, 0.1, 0.2],
+            c_tilde: &[0.0, 0.0, 0.3, 0.5],
+            lambda: 0.0,
+            step0: 0,
+        };
+        assert_eq!(batch.route_ctx(1).step, 1);
+        p.select_batch(&batch, &mut out);
+        assert_eq!(out.len(), 2);
         assert_eq!(out[0].arm, 2);
+        assert_eq!(out[1].arm, 2);
     }
 }

@@ -1,0 +1,274 @@
+//! Tracked micro-benchmark trajectory: the `BENCH_routing.json` format.
+//!
+//! The hot-path benches (`benches/routing_hot.rs`, `benches/shard_scale.rs`)
+//! emit their percentile summaries into one committed JSON file at the repo
+//! root, keyed by bench name:
+//!
+//! ```json
+//! {
+//!   "route_single": {"git_sha": "abc123def456", "iters": 400,
+//!                    "mean_ns": 9182.4, "p50_ns": 8911.0, "p99_ns": 15102.7}
+//! }
+//! ```
+//!
+//! The file doubles as the regression baseline: a bench run loads the
+//! committed copy BEFORE overwriting it, compares the fresh p50 against the
+//! committed one ([`gate_p50`]) and fails the run when decision latency
+//! regresses past the allowed ratio.  Entries the current run does not
+//! produce are preserved on write ([`merge_write`]), so the single file can
+//! accumulate numbers from several bench binaries.
+
+use std::collections::BTreeMap;
+
+use crate::util::bench::BenchStats;
+use crate::util::json::Json;
+
+/// One bench's committed summary: the percentile envelope plus provenance
+/// (how many measured iterations, at which commit).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchEntry {
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub mean_ns: f64,
+    /// measured iterations behind the percentiles; 0 marks a seeded
+    /// (paper-envelope) placeholder rather than a machine measurement
+    pub iters: u64,
+    /// commit the numbers were measured at ("paper-envelope-seed" for the
+    /// bootstrap baseline, "unknown" when git is unavailable)
+    pub git_sha: String,
+}
+
+impl BenchEntry {
+    pub fn from_stats(s: &BenchStats, git_sha: &str) -> BenchEntry {
+        BenchEntry {
+            p50_ns: s.p50_ns,
+            p99_ns: s.p99_ns,
+            mean_ns: s.mean_ns,
+            iters: s.n as u64,
+            git_sha: git_sha.to_string(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        // one decimal is plenty for wall-clock ns and keeps diffs readable
+        let r1 = |x: f64| (x * 10.0).round() / 10.0;
+        Json::obj(vec![
+            ("git_sha", Json::Str(self.git_sha.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_ns", Json::Num(r1(self.mean_ns))),
+            ("p50_ns", Json::Num(r1(self.p50_ns))),
+            ("p99_ns", Json::Num(r1(self.p99_ns))),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<BenchEntry, String> {
+        let num = |k: &str| -> Result<f64, String> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("bench entry missing numeric '{k}'"))
+        };
+        Ok(BenchEntry {
+            p50_ns: num("p50_ns")?,
+            p99_ns: num("p99_ns")?,
+            mean_ns: num("mean_ns")?,
+            iters: num("iters")? as u64,
+            git_sha: j
+                .get("git_sha")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+        })
+    }
+}
+
+/// Commit identifier for provenance stamping: `GITHUB_SHA` in CI, `git
+/// rev-parse` locally, `"unknown"` when neither is available.
+pub fn git_sha() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha.chars().take(12).collect();
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Load a trajectory file.  A missing file is an error — callers that
+/// tolerate bootstrap use `load(..).unwrap_or_default()`.
+pub fn load(path: &str) -> Result<BTreeMap<String, BenchEntry>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    let j = Json::parse(&text).map_err(|e| format!("parse {path}: {e}"))?;
+    let obj = match &j {
+        Json::Obj(m) => m,
+        _ => return Err(format!("{path}: top level must be an object")),
+    };
+    let mut out = BTreeMap::new();
+    for (k, v) in obj {
+        out.insert(k.clone(), BenchEntry::from_json(v).map_err(|e| format!("{path}: {k}: {e}"))?);
+    }
+    Ok(out)
+}
+
+/// Overlay `fresh` onto whatever the file already holds and rewrite it,
+/// one bench per line, keys sorted — so `git diff` on the trajectory file
+/// shows exactly which benches moved.
+pub fn merge_write(path: &str, fresh: &BTreeMap<String, BenchEntry>) -> Result<(), String> {
+    let mut all = load(path).unwrap_or_default();
+    for (k, v) in fresh {
+        all.insert(k.clone(), v.clone());
+    }
+    let mut out = String::from("{\n");
+    let n = all.len();
+    for (i, (k, v)) in all.iter().enumerate() {
+        out.push_str("  ");
+        out.push_str(&Json::Str(k.clone()).to_string());
+        out.push_str(": ");
+        out.push_str(&v.to_json().to_string());
+        out.push_str(if i + 1 < n { ",\n" } else { "\n" });
+    }
+    out.push_str("}\n");
+    std::fs::write(path, out).map_err(|e| format!("write {path}: {e}"))
+}
+
+/// Regression gate on p50 latency: `Err` when `current[key]` is more than
+/// `max_ratio` times the committed baseline, `Ok(note)` otherwise.  Either
+/// side missing the key downgrades to recording-only (first run of a new
+/// bench, or a freshly seeded baseline) instead of failing the build.
+pub fn gate_p50(
+    baseline: &BTreeMap<String, BenchEntry>,
+    current: &BTreeMap<String, BenchEntry>,
+    key: &str,
+    max_ratio: f64,
+) -> Result<String, String> {
+    let (b, c) = match (baseline.get(key), current.get(key)) {
+        (Some(b), Some(c)) => (b, c),
+        _ => {
+            return Ok(format!(
+                "gate[{key}]: no committed baseline or no fresh measurement — recording only"
+            ))
+        }
+    };
+    if b.p50_ns <= 0.0 {
+        return Ok(format!("gate[{key}]: degenerate baseline p50 — recording only"));
+    }
+    let ratio = c.p50_ns / b.p50_ns;
+    if ratio > max_ratio {
+        Err(format!(
+            "gate[{key}]: p50 {:.1} ns vs baseline {:.1} ns ({}x) exceeds {}x ceiling",
+            c.p50_ns,
+            b.p50_ns,
+            (ratio * 100.0).round() / 100.0,
+            max_ratio
+        ))
+    } else {
+        Ok(format!(
+            "gate[{key}]: p50 {:.1} ns vs baseline {:.1} ns ({}x) within {}x ceiling",
+            c.p50_ns,
+            b.p50_ns,
+            (ratio * 100.0).round() / 100.0,
+            max_ratio
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(p50: f64, sha: &str) -> BenchEntry {
+        BenchEntry {
+            p50_ns: p50,
+            p99_ns: p50 * 2.0,
+            mean_ns: p50 * 1.2,
+            iters: 100,
+            git_sha: sha.to_string(),
+        }
+    }
+
+    fn tmp(name: &str) -> String {
+        let mut p = std::env::temp_dir();
+        p.push(format!("pb_benchio_{}_{name}.json", std::process::id()));
+        p.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn roundtrip_and_overlay_preserve_unrelated_entries() {
+        let path = tmp("roundtrip");
+        let _ = std::fs::remove_file(&path);
+
+        let mut first = BTreeMap::new();
+        first.insert("alpha".to_string(), entry(100.0, "aaa"));
+        first.insert("beta".to_string(), entry(200.0, "aaa"));
+        merge_write(&path, &first).unwrap();
+        assert_eq!(load(&path).unwrap(), first);
+
+        // second writer updates beta and adds gamma; alpha must survive
+        let mut second = BTreeMap::new();
+        second.insert("beta".to_string(), entry(150.0, "bbb"));
+        second.insert("gamma".to_string(), entry(300.0, "bbb"));
+        merge_write(&path, &second).unwrap();
+        let all = load(&path).unwrap();
+        assert_eq!(all.len(), 3);
+        assert_eq!(all["alpha"], first["alpha"]);
+        assert_eq!(all["beta"].p50_ns, 150.0);
+        assert_eq!(all["beta"].git_sha, "bbb");
+        assert_eq!(all["gamma"].p50_ns, 300.0);
+
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn written_file_is_valid_json_one_entry_per_line() {
+        let path = tmp("format");
+        let _ = std::fs::remove_file(&path);
+        let mut m = BTreeMap::new();
+        m.insert("a".to_string(), entry(1.0, "s"));
+        m.insert("b".to_string(), entry(2.0, "s"));
+        merge_write(&path, &m).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok(), "must stay parseable: {text}");
+        assert_eq!(text.lines().count(), 4, "{{ + 2 entries + }}: {text}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn gate_passes_within_ceiling_and_fails_beyond() {
+        let mut base = BTreeMap::new();
+        base.insert("k".to_string(), entry(100.0, "old"));
+        let mut cur = BTreeMap::new();
+        cur.insert("k".to_string(), entry(120.0, "new"));
+        assert!(gate_p50(&base, &cur, "k", 1.25).is_ok());
+        cur.insert("k".to_string(), entry(130.0, "new"));
+        assert!(gate_p50(&base, &cur, "k", 1.25).is_err());
+        // faster is always fine
+        cur.insert("k".to_string(), entry(10.0, "new"));
+        assert!(gate_p50(&base, &cur, "k", 1.25).is_ok());
+    }
+
+    #[test]
+    fn gate_is_recording_only_when_either_side_is_missing() {
+        let mut base = BTreeMap::new();
+        base.insert("k".to_string(), entry(100.0, "old"));
+        let empty = BTreeMap::new();
+        assert!(gate_p50(&base, &empty, "k", 1.25).is_ok());
+        assert!(gate_p50(&empty, &base, "k", 1.25).is_ok());
+        assert!(gate_p50(&empty, &empty, "k", 1.25).is_ok());
+    }
+
+    #[test]
+    fn from_stats_copies_percentiles_and_count() {
+        let s = BenchStats::from_samples((1..=100).map(|i| i as f64).collect());
+        let e = BenchEntry::from_stats(&s, "deadbeef");
+        assert_eq!(e.iters, 100);
+        assert_eq!(e.p50_ns, s.p50_ns);
+        assert_eq!(e.p99_ns, s.p99_ns);
+        assert_eq!(e.git_sha, "deadbeef");
+    }
+}

@@ -1,6 +1,7 @@
 //! Dependency-free utilities: RNG, JSON, micro-bench + property harnesses.
 
 pub mod bench;
+pub mod benchio;
 pub mod json;
 pub mod prop;
 pub mod rng;

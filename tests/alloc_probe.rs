@@ -1,0 +1,128 @@
+//! Zero-allocation guarantee for the routing hot path.
+//!
+//! A counting global allocator wraps `System`; after warmup (buffers sized,
+//! posteriors populated) the steady-state paths must not touch the heap:
+//!
+//!   * `ParetoRouter::route`            — scoring reuses score_buf/id_buf
+//!   * `ParetoRouter::feedback`         — rank-1 factor/inverse maintenance
+//!     plus the periodic exact refresh (REFRESH_EVERY falls inside the
+//!     measured window, so the refresh itself is asserted alloc-free too)
+//!   * `PolicyHost::route_batch_into`   — batched decisions into a reused
+//!     output buffer
+//!
+//! This file is its own integration binary (one test) because the
+//! `#[global_allocator]` is process-wide: concurrent tests in a shared
+//! binary would pollute the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use paretobandit::router::{ParetoRouter, PolicyHost, Prior, RouteDecision, RouterConfig};
+use paretobandit::util::rng::Rng;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+const D: usize = 26;
+
+fn ctx(rng: &mut Rng) -> Vec<f64> {
+    let mut x: Vec<f64> = (0..D).map(|_| rng.normal()).collect();
+    x[D - 1] = 1.0;
+    x
+}
+
+fn three_model_router(seed: u64) -> ParetoRouter {
+    let mut r = ParetoRouter::new(RouterConfig::paretobandit(D, 6.6e-4, seed));
+    r.add_model("llama", 0.10, 0.10, Prior::Cold);
+    r.add_model("mistral", 0.40, 1.60, Prior::Cold);
+    r.add_model("gemini", 1.25, 10.0, Prior::Cold);
+    r
+}
+
+#[test]
+fn hot_path_does_not_allocate_after_warmup() {
+    let mut rng = Rng::new(2);
+    let xs: Vec<Vec<f64>> = (0..512).map(|_| ctx(&mut rng)).collect();
+    let rewards: Vec<f64> = (0..512).map(|_| 0.5 + 0.4 * rng.f64()).collect();
+
+    // --- standalone router ------------------------------------------------
+    let mut r = three_model_router(1);
+    // warm well past REFRESH_EVERY so the periodic exact refresh (the
+    // alloc-free refactor/inverse_into path) fires inside the measured
+    // windows below rather than only during warmup
+    for i in 0..2_000 {
+        let x = &xs[i % xs.len()];
+        let d = r.route(x);
+        r.feedback(d.arm, x, rewards[i % rewards.len()], 2.0e-4);
+    }
+
+    let before = allocs();
+    for (i, x) in xs.iter().cycle().take(1_000).enumerate() {
+        let d = r.route(x);
+        std::hint::black_box((i, d.arm));
+    }
+    assert_eq!(allocs() - before, 0, "route() allocated in steady state");
+
+    let before = allocs();
+    for i in 0..1_000 {
+        let x = &xs[i % xs.len()];
+        let d = r.route(x);
+        r.feedback(d.arm, x, rewards[i % rewards.len()], 2.0e-4);
+    }
+    assert_eq!(
+        allocs() - before,
+        0,
+        "route()+feedback() allocated in steady state (refresh cadence included)"
+    );
+
+    // --- hosted batched path ----------------------------------------------
+    let mut host = PolicyHost::new(Box::new(three_model_router(3)), None);
+    for i in 0..1_500 {
+        let x = &xs[i % xs.len()];
+        let d = host.route(x);
+        host.feedback(d.arm, x, rewards[i % rewards.len()], 2.0e-4);
+    }
+    let batch: Vec<Vec<f64>> = xs[..64].to_vec();
+    let mut out: Vec<RouteDecision> = Vec::with_capacity(batch.len());
+    // two priming calls size every internal buffer (pick_buf, eligibility
+    // mirror) before the measured window
+    host.route_batch_into(&batch, &mut out);
+    host.route_batch_into(&batch, &mut out);
+
+    let before = allocs();
+    for _ in 0..200 {
+        host.route_batch_into(&batch, &mut out);
+        std::hint::black_box(out.len());
+    }
+    assert_eq!(
+        allocs() - before,
+        0,
+        "route_batch_into() allocated in steady state"
+    );
+}

@@ -1,10 +1,15 @@
+//! Ignored A/B probe comparing `Mat::quad_form` (now the symmetric
+//! upper-triangle sweep, vectorised via `linalg::dot`) against a scalar
+//! reference of the same algorithm — run with `--ignored` to see what
+//! the unrolled-dot vectorisation buys on this machine.
+
 use paretobandit::linalg::Mat;
 use paretobandit::util::bench::{bench_batched, black_box};
 use paretobandit::util::prop;
 use paretobandit::util::rng::Rng;
 
-fn quad_sym(m: &Mat, x: &[f64]) -> f64 {
-    // exploit symmetry: sum_i x_i^2 a_ii + 2 sum_{i<j} x_i x_j a_ij
+fn quad_sym_scalar(m: &Mat, x: &[f64]) -> f64 {
+    // same symmetric sweep as Mat::quad_form, scalar inner loop
     let d = m.dim();
     let mut diag = 0.0;
     let mut off = 0.0;
@@ -34,14 +39,14 @@ fn quad_form_variants() {
         });
         let mut j = 0;
         let half = bench_batched(100, 200, 64, || {
-            black_box(quad_sym(&m, &xs[j & 63]));
+            black_box(quad_sym_scalar(&m, &xs[j & 63]));
             j += 1;
         });
         // correctness
         for x in &xs[..8] {
-            assert!((m.quad_form(x) - quad_sym(&m, x)).abs() < 1e-9 * d as f64);
+            assert!((m.quad_form(x) - quad_sym_scalar(&m, x)).abs() < 1e-9 * d as f64);
         }
-        println!("d={d}: full {:.0} ns | symmetric-half {:.0} ns ({:+.0}%)",
+        println!("d={d}: quad_form(vectorised) {:.0} ns | scalar reference {:.0} ns ({:+.0}%)",
             full.mean_ns, half.mean_ns, (half.mean_ns/full.mean_ns - 1.0)*100.0);
     }
 }
