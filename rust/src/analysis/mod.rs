@@ -1,0 +1,134 @@
+//! `pallas-lint`: the in-repo static analysis pass.
+//!
+//! A hand-rolled scanner + rule driver (no syn, no clippy plugins — the
+//! build image is offline) that walks `rust/src/`, enforces the
+//! repo-specific rules in [`rules`], and reports findings as text or
+//! machine-readable JSON against the committed `LINT_baseline.json`
+//! ratchet.  Run it as `paretobandit lint`; CI runs `lint --deny`.
+//! The operator handbook is `docs/analysis.md`.
+
+pub mod report;
+pub mod rules;
+pub mod scan;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+pub use report::{load_baseline, write_baseline, LintReport};
+pub use rules::Finding;
+
+/// Default baseline filename at the repo root.
+pub const BASELINE_FILE: &str = "LINT_baseline.json";
+
+/// Recursively collect `.rs` files under `dir`, sorted for determinism.
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = std::fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    let mut entries: Vec<PathBuf> = rd
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            rs_files(&p, out)?;
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the tree rooted at `root` (the repo checkout: sources are read
+/// from `<root>/rust/src`, the protocol table from `<root>/README.md`).
+pub fn run_lint(root: &Path) -> Result<LintReport, String> {
+    let src = root.join("rust").join("src");
+    let mut files = Vec::new();
+    rs_files(&src, &mut files)?;
+    let readme = std::fs::read_to_string(root.join("README.md")).unwrap_or_default();
+    let mut scans = Vec::with_capacity(files.len());
+    for p in &files {
+        let text =
+            std::fs::read_to_string(p).map_err(|e| format!("read {}: {e}", p.display()))?;
+        // report under repo-relative forward-slash paths
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        scans.push(scan::scan_source(&rel, &text));
+    }
+    let mut findings = Vec::new();
+    for s in &scans {
+        findings.extend(rules::check_file(s));
+    }
+    findings.extend(rules::check_protocol(&scans, &readme));
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(LintReport {
+        findings,
+        files_scanned: scans.len(),
+    })
+}
+
+/// CLI options for `paretobandit lint`.
+pub struct LintOpts {
+    pub root: String,
+    pub json: bool,
+    pub deny: bool,
+    pub baseline: Option<String>,
+    pub write_baseline: bool,
+}
+
+/// Drive a lint run for the CLI; returns the process exit code.
+/// Output goes to stdout; errors to stderr.
+pub fn lint_main(opts: &LintOpts) -> i32 {
+    let root = Path::new(&opts.root);
+    let baseline_path = opts
+        .baseline
+        .clone()
+        .unwrap_or_else(|| root.join(BASELINE_FILE).to_string_lossy().into_owned());
+    let report = match run_lint(root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("pallas-lint: {e}");
+            return 2;
+        }
+    };
+    let baseline: BTreeMap<String, usize> = match load_baseline(&baseline_path) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("pallas-lint: {e}");
+            return 2;
+        }
+    };
+    if opts.write_baseline {
+        if let Err(e) = write_baseline(&baseline_path, &report.counts()) {
+            eprintln!("pallas-lint: {e}");
+            return 2;
+        }
+        println!(
+            "pallas-lint: wrote {} bucket(s) to {}",
+            report.counts().len(),
+            baseline_path
+        );
+        return 0;
+    }
+    if opts.json {
+        println!("{}", report.to_json().to_string());
+    } else {
+        print!("{}", report.render_text(&baseline));
+    }
+    if opts.deny && !report.violations(&baseline).is_empty() {
+        if opts.json {
+            // the human summary already printed the buckets in text mode
+            for v in report.violations(&baseline) {
+                eprintln!(
+                    "pallas-lint: baseline EXCEEDED: {} has {} finding(s), allowance {}",
+                    v.key, v.current, v.baseline
+                );
+            }
+        }
+        return 1;
+    }
+    0
+}

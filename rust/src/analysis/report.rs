@@ -1,0 +1,229 @@
+//! Finding aggregation, text/JSON rendering and the baseline ratchet.
+//!
+//! The baseline (`LINT_baseline.json`, committed at the repo root) maps
+//! `"<file>::<rule>"` to an allowed finding count, mirroring the
+//! `util::benchio` committed-JSON idiom: sorted keys, one entry per line,
+//! so diffs review cleanly.  `--deny` fails when any key's current count
+//! exceeds its baseline — existing debt can only ratchet down.
+
+use std::collections::BTreeMap;
+
+use super::rules::{Finding, RULES};
+use crate::util::json::Json;
+
+/// The outcome of a lint pass over the tree.
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    /// files scanned (for the JSON report header)
+    pub files_scanned: usize,
+}
+
+/// One baseline violation: a `<file>::<rule>` bucket over its allowance.
+pub struct Violation {
+    pub key: String,
+    pub baseline: usize,
+    pub current: usize,
+}
+
+impl LintReport {
+    /// Finding counts keyed `"<file>::<rule>"` (the baseline schema).
+    pub fn counts(&self) -> BTreeMap<String, usize> {
+        let mut m = BTreeMap::new();
+        for f in &self.findings {
+            *m.entry(format!("{}::{}", f.file, f.rule)).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// Buckets whose current count exceeds the baseline allowance.
+    pub fn violations(&self, baseline: &BTreeMap<String, usize>) -> Vec<Violation> {
+        self.counts()
+            .into_iter()
+            .filter_map(|(key, current)| {
+                let allowed = baseline.get(&key).copied().unwrap_or(0);
+                (current > allowed).then_some(Violation {
+                    key,
+                    baseline: allowed,
+                    current,
+                })
+            })
+            .collect()
+    }
+
+    /// Machine-readable report (benchio-style: schema marker + entries).
+    pub fn to_json(&self) -> Json {
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                Json::obj(vec![
+                    ("file", Json::Str(f.file.clone())),
+                    ("line", Json::Num(f.line as f64)),
+                    ("rule", Json::Str(f.rule.to_string())),
+                    ("msg", Json::Str(f.msg.clone())),
+                ])
+            })
+            .collect();
+        let counts = Json::Obj(
+            self.counts()
+                .into_iter()
+                .map(|(k, v)| (k, Json::Num(v as f64)))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("schema", Json::Str("pallas-lint/v1".into())),
+            ("files_scanned", Json::Num(self.files_scanned as f64)),
+            ("total", Json::Num(self.findings.len() as f64)),
+            ("findings", Json::Arr(findings)),
+            ("counts", counts),
+        ])
+    }
+
+    /// Human-readable report.  With a baseline, per-bucket lines show
+    /// current vs allowed and the summary separates new debt from known.
+    pub fn render_text(&self, baseline: &BTreeMap<String, usize>) -> String {
+        let mut out = String::new();
+        let mut by_rule: BTreeMap<&str, usize> = BTreeMap::new();
+        for f in &self.findings {
+            *by_rule.entry(f.rule).or_insert(0) += 1;
+        }
+        for f in &self.findings {
+            out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.msg));
+        }
+        if !self.findings.is_empty() {
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "pallas-lint: {} finding(s) across {} file(s)",
+            self.findings.len(),
+            self.files_scanned
+        ));
+        let per_rule: Vec<String> = RULES
+            .iter()
+            .filter_map(|r| by_rule.get(r).map(|n| format!("{r}={n}")))
+            .collect();
+        if !per_rule.is_empty() {
+            out.push_str(&format!(" ({})", per_rule.join(", ")));
+        }
+        out.push('\n');
+        let viols = self.violations(baseline);
+        if viols.is_empty() {
+            out.push_str("baseline: clean (no bucket exceeds its allowance)\n");
+        } else {
+            for v in &viols {
+                out.push_str(&format!(
+                    "baseline EXCEEDED: {} has {} finding(s), allowance {}\n",
+                    v.key, v.current, v.baseline
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// Load a baseline file.  A missing file is an empty baseline (zero
+/// allowance everywhere), not an error.
+pub fn load_baseline(path: &str) -> Result<BTreeMap<String, usize>, String> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(BTreeMap::new()),
+        Err(e) => return Err(format!("read {path}: {e}")),
+    };
+    let j = Json::parse(&text).map_err(|e| format!("parse {path}: {e}"))?;
+    let Json::Obj(m) = j else {
+        return Err(format!("{path}: expected a JSON object"));
+    };
+    let mut out = BTreeMap::new();
+    for (k, v) in m {
+        let n = v
+            .as_f64()
+            .ok_or_else(|| format!("{path}: value for {k} is not a number"))?;
+        out.insert(k, n as usize);
+    }
+    Ok(out)
+}
+
+/// Write a baseline: sorted keys, one entry per line (stable diffs).
+pub fn write_baseline(path: &str, counts: &BTreeMap<String, usize>) -> Result<(), String> {
+    let mut out = String::from("{\n");
+    for (i, (k, v)) in counts.iter().enumerate() {
+        out.push_str(&format!(
+            "  {}: {}{}\n",
+            Json::Str(k.clone()).to_string(),
+            v,
+            if i + 1 < counts.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("}\n");
+    std::fs::write(path, out).map_err(|e| format!("write {path}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(findings: Vec<(&str, &'static str)>) -> LintReport {
+        LintReport {
+            findings: findings
+                .into_iter()
+                .map(|(file, rule)| Finding {
+                    file: file.to_string(),
+                    line: 1,
+                    rule,
+                    msg: "m".into(),
+                })
+                .collect(),
+            files_scanned: 2,
+        }
+    }
+
+    #[test]
+    fn ratchet_blocks_new_debt_only() {
+        let r = report(vec![("a.rs", "panic"), ("a.rs", "panic"), ("b.rs", "index")]);
+        let mut base = BTreeMap::new();
+        base.insert("a.rs::panic".to_string(), 2usize);
+        base.insert("b.rs::index".to_string(), 1usize);
+        assert!(r.violations(&base).is_empty(), "at allowance == clean");
+
+        base.insert("a.rs::panic".to_string(), 1usize);
+        let v = r.violations(&base);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].key, "a.rs::panic");
+        assert_eq!(v[0].current, 2);
+        assert_eq!(v[0].baseline, 1);
+    }
+
+    #[test]
+    fn baseline_roundtrip() {
+        let mut counts = BTreeMap::new();
+        counts.insert("rust/src/x.rs::panic".to_string(), 3usize);
+        counts.insert("rust/src/y.rs::index".to_string(), 1usize);
+        let dir = std::env::temp_dir().join("pallas_lint_baseline_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("LINT_baseline.json");
+        let path = path.to_str().unwrap();
+        write_baseline(path, &counts).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.lines().count() >= 4, "one entry per line: {text}");
+        let loaded = load_baseline(path).unwrap();
+        assert_eq!(loaded, counts);
+    }
+
+    #[test]
+    fn missing_baseline_is_empty() {
+        let m = load_baseline("/nonexistent/LINT_baseline.json").unwrap();
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let r = report(vec![("a.rs", "panic")]);
+        let j = r.to_json();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("pallas-lint/v1"));
+        assert_eq!(j.get("total").unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            j.get("findings").unwrap().idx(0).unwrap().get("rule").unwrap().as_str(),
+            Some("panic")
+        );
+    }
+}

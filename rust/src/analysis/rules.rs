@@ -1,0 +1,433 @@
+//! The rule catalog for `pallas-lint`.
+//!
+//! Four repo-specific rule families (see `docs/analysis.md` for the
+//! operator-facing catalog):
+//!
+//! * `panic` / `index` — panic-freedom in the request-serving call graph
+//!   (`server/`, `router/`, `pacer/`, `client.rs`): no `.unwrap()` /
+//!   `.expect(` / `panic!` / `unreachable!` / `todo!` / `unimplemented!`,
+//!   and no slice indexing without `get` (reported under the separate
+//!   `index` id so suppressions stay narrow).  Errors must flow through
+//!   the `proto.rs` error codes instead.
+//! * `atomics` — every `Ordering::*` site in the designated lock-free
+//!   files (`pacer/shared.rs`, `server/metrics.rs`, `server/engine.rs`)
+//!   must carry a one-line `invariant:` comment; any `Relaxed`/`SeqCst`
+//!   outside those files is flagged.
+//! * `no_alloc` — functions marked `// lint: no_alloc` may not contain
+//!   allocating calls; this statically complements the runtime
+//!   counting-allocator probe in `tests/alloc_probe.rs`.
+//! * `proto` — wire-protocol exhaustiveness: every verb parsed in
+//!   `server/proto.rs` needs an `api.rs` dispatch arm, a `ParetoClient`
+//!   method, and a README protocol-table row; every error code must be
+//!   constructed outside `proto.rs` and documented in the README.
+//!
+//! Plus `suppression` hygiene: an allow marker without a `reason="..."`
+//! clause is itself a finding (and suppresses nothing).
+
+use super::scan::{allow_markers, allow_rules, FileScan};
+
+/// One lint finding.  `line` is 1-based for human output.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+/// Rule ids, in the order findings are grouped for display.
+pub const RULES: &[&str] = &["panic", "index", "atomics", "no_alloc", "proto", "suppression"];
+
+const PANIC_TOKENS: &[(&str, &str)] = &[
+    (".unwrap()", "unwrap() on the serving path"),
+    (".expect(", "expect() on the serving path"),
+    ("panic!", "panic! on the serving path"),
+    ("unreachable!", "unreachable! on the serving path"),
+    ("todo!", "todo! on the serving path"),
+    ("unimplemented!", "unimplemented! on the serving path"),
+];
+
+const ALLOC_TOKENS: &[&str] = &[
+    "Vec::new",
+    "vec!",
+    ".to_vec(",
+    ".clone(",
+    "format!",
+    "Box::new",
+    "String::from",
+    "String::new",
+    ".to_string(",
+    ".to_owned(",
+    "with_capacity(",
+    ".collect(",
+];
+
+/// Files whose atomics must each carry an `invariant:` comment.
+const ATOMIC_FILES: &[&str] = &[
+    "rust/src/pacer/shared.rs",
+    "rust/src/server/metrics.rs",
+    "rust/src/server/engine.rs",
+];
+
+/// Is this path in the request-serving call graph (panic-freedom scope)?
+fn serving_scope(path: &str) -> bool {
+    path.starts_with("rust/src/server/")
+        || path.starts_with("rust/src/router/")
+        || path.starts_with("rust/src/pacer/")
+        || path == "rust/src/client.rs"
+}
+
+/// Run the per-file rules (`panic`, `index`, `atomics`, `no_alloc`,
+/// `suppression`) over one scanned file.
+pub fn check_file(scan: &FileScan) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let in_serving = serving_scope(&scan.path);
+    let atomic_file = ATOMIC_FILES.contains(&scan.path.as_str());
+    for (i, line) in scan.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = line.code.as_str();
+
+        // suppression hygiene first: reason-less allows never suppress
+        let markers = allow_markers(&line.comment);
+        if markers > allow_rules(&line.comment, true).len() {
+            out.push(Finding {
+                file: scan.path.clone(),
+                line: i + 1,
+                rule: "suppression",
+                msg: "lint: allow(...) is missing its reason=\"...\" clause".into(),
+            });
+        }
+
+        if in_serving {
+            for (tok, what) in PANIC_TOKENS {
+                if find_token(code, tok) && !scan.allowed("panic", i) {
+                    out.push(Finding {
+                        file: scan.path.clone(),
+                        line: i + 1,
+                        rule: "panic",
+                        msg: format!("{what} — return a proto.rs error code instead"),
+                    });
+                }
+            }
+            if has_direct_index(code) && !scan.allowed("index", i) {
+                out.push(Finding {
+                    file: scan.path.clone(),
+                    line: i + 1,
+                    rule: "index",
+                    msg: "slice indexing without get() can panic on the serving path".into(),
+                });
+            }
+        }
+
+        if atomic_file {
+            if code.contains("Ordering::") && !scan.has_invariant(i) && !scan.allowed("atomics", i)
+            {
+                out.push(Finding {
+                    file: scan.path.clone(),
+                    line: i + 1,
+                    rule: "atomics",
+                    msg: "atomic-ordering site lacks an invariant: comment".into(),
+                });
+            }
+        } else if (code.contains("Ordering::Relaxed") || code.contains("Ordering::SeqCst"))
+            && !scan.allowed("atomics", i)
+        {
+            out.push(Finding {
+                file: scan.path.clone(),
+                line: i + 1,
+                rule: "atomics",
+                msg: "Relaxed/SeqCst outside the annotated atomic files".into(),
+            });
+        }
+
+        if let Some(f) = scan.no_alloc_span(i) {
+            if i >= f.start {
+                for tok in ALLOC_TOKENS {
+                    if find_token(code, tok) && !scan.allowed("no_alloc", i) {
+                        out.push(Finding {
+                            file: scan.path.clone(),
+                            line: i + 1,
+                            rule: "no_alloc",
+                            msg: format!("`{tok}` allocates inside no_alloc fn `{}`", f.name),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `tok` occurs in `code`.  Tokens that start with an identifier char
+/// (`panic!`, `vec!`, `Vec::new`) additionally require a non-identifier
+/// char before the match, so `catch_panic!` does not match `panic!`;
+/// method tokens (`.unwrap()`, `.to_vec(`) are naturally preceded by the
+/// receiver and skip that check.
+fn find_token(code: &str, tok: &str) -> bool {
+    let ident_start = tok
+        .chars()
+        .next()
+        .map(|c| c.is_ascii_alphanumeric() || c == '_')
+        .unwrap_or(false);
+    let mut from = 0;
+    while let Some(b) = code[from..].find(tok) {
+        let at = from + b;
+        let before_ok = !ident_start
+            || at == 0
+            || code[..at]
+                .chars()
+                .last()
+                .map(|c| !(c.is_ascii_alphanumeric() || c == '_'))
+                .unwrap_or(true);
+        if before_ok {
+            return true;
+        }
+        from = at + tok.len();
+    }
+    false
+}
+
+/// Does the line index a slice/array directly (`xs[i]`)?  The heuristic:
+/// `[` immediately preceded by an identifier character or a closing
+/// bracket.  Type positions (`: [f64; 4]`), attributes (`#[...]`) and
+/// macro brackets (`vec![`) are preceded by non-identifier chars and do
+/// not match.
+fn has_direct_index(code: &str) -> bool {
+    let mut prev = ' ';
+    for c in code.chars() {
+        if c == '['
+            && (prev.is_ascii_alphanumeric() || prev == '_' || prev == ')' || prev == ']')
+        {
+            return true;
+        }
+        prev = c;
+    }
+    false
+}
+
+// ----------------------------------------------------------------------
+// wire-protocol exhaustiveness
+
+/// `route_batch` -> `RouteBatch`
+fn camel(verb: &str) -> String {
+    verb.split('_')
+        .map(|w| {
+            let mut cs = w.chars();
+            match cs.next() {
+                Some(f) => f.to_ascii_uppercase().to_string() + cs.as_str(),
+                None => String::new(),
+            }
+        })
+        .collect()
+}
+
+/// Quoted string literals in `raw` (char-aligned with `code`), taken from
+/// the span before the `=>` of a match arm.
+fn arm_head_strings(raw: &str, code: &str) -> Vec<String> {
+    let Some(arrow) = code.find("=>") else {
+        return Vec::new();
+    };
+    // raw and code are char-aligned, so convert the byte offset in code
+    // to a char count and slice raw by chars
+    let nchars = code[..arrow].chars().count();
+    let head: String = raw.chars().take(nchars).collect();
+    let mut out = Vec::new();
+    let mut rest = head.as_str();
+    while let Some(q) = rest.find('"') {
+        let tail = &rest[q + 1..];
+        let Some(e) = tail.find('"') else { break };
+        out.push(tail[..e].to_string());
+        rest = &tail[e + 1..];
+    }
+    out
+}
+
+/// The protocol surface extracted from `server/proto.rs`.
+pub struct ProtoSurface {
+    /// verb -> 1-based line of its parse arm
+    pub verbs: Vec<(String, usize)>,
+    /// (variant, wire string, 1-based line)
+    pub codes: Vec<(String, String, usize)>,
+}
+
+/// Extract verbs and error codes from the scanned `proto.rs`.
+pub fn proto_surface(proto: &FileScan) -> ProtoSurface {
+    let mut codes = Vec::new();
+    for (i, line) in proto.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        // `ErrorCode::Variant => "wire_string"` (the as_str table)
+        if let Some(p) = line.code.find("ErrorCode::") {
+            let after = &line.code[p + "ErrorCode::".len()..];
+            let variant: String = after
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect();
+            if !variant.is_empty() && after[variant.len()..].trim_start().starts_with("=>") {
+                // the wire string is blanked in `code`; read it from raw
+                let raw_tail: String = {
+                    let nchars = line.code[..p].chars().count();
+                    line.raw.chars().skip(nchars).collect()
+                };
+                if let Some(q) = raw_tail.find('"') {
+                    let t = &raw_tail[q + 1..];
+                    if let Some(e) = t.find('"') {
+                        codes.push((variant, t[..e].to_string(), i + 1));
+                    }
+                }
+            }
+        }
+    }
+    let code_strings: Vec<&str> = codes.iter().map(|(_, s, _)| s.as_str()).collect();
+    let mut verbs: Vec<(String, usize)> = Vec::new();
+    for (i, line) in proto.lines.iter().enumerate() {
+        if line.in_test || !line.code.trim_start().starts_with('"') {
+            continue;
+        }
+        for s in arm_head_strings(&line.raw, &line.code) {
+            if !code_strings.contains(&s.as_str()) && !verbs.iter().any(|(v, _)| *v == s) {
+                verbs.push((s, i + 1));
+            }
+        }
+    }
+    ProtoSurface { verbs, codes }
+}
+
+/// Cross-file protocol exhaustiveness.  `scans` holds every scanned file
+/// (including `proto.rs` itself); `readme` is the README text.
+pub fn check_protocol(scans: &[FileScan], readme: &str) -> Vec<Finding> {
+    let Some(proto) = scans.iter().find(|s| s.path.ends_with("server/proto.rs")) else {
+        return Vec::new();
+    };
+    let api = scans.iter().find(|s| s.path.ends_with("server/api.rs"));
+    let client = scans.iter().find(|s| s.path.ends_with("src/client.rs"));
+    let surface = proto_surface(proto);
+    let mut out = Vec::new();
+    let non_test_contains = |s: &FileScan, needle: &str| {
+        s.lines
+            .iter()
+            .any(|l| !l.in_test && l.code.contains(needle))
+    };
+    for (verb, line) in &surface.verbs {
+        let variant = camel(verb);
+        if let Some(api) = api {
+            if !non_test_contains(api, &format!("Request::{variant}")) {
+                out.push(Finding {
+                    file: proto.path.clone(),
+                    line: *line,
+                    rule: "proto",
+                    msg: format!("verb `{verb}` has no Request::{variant} dispatch arm in api.rs"),
+                });
+            }
+        }
+        if let Some(client) = client {
+            if !non_test_contains(client, &format!("pub fn {verb}("))
+                && !non_test_contains(client, &format!("pub fn {verb}<"))
+            {
+                out.push(Finding {
+                    file: proto.path.clone(),
+                    line: *line,
+                    rule: "proto",
+                    msg: format!("verb `{verb}` has no ParetoClient method `pub fn {verb}(...)`"),
+                });
+            }
+        }
+        if !readme.contains(&format!("| `{verb}`")) {
+            out.push(Finding {
+                file: proto.path.clone(),
+                line: *line,
+                rule: "proto",
+                msg: format!("verb `{verb}` has no row in the README protocol table"),
+            });
+        }
+    }
+    for (variant, wire, line) in &surface.codes {
+        let constructed = scans.iter().any(|s| {
+            !s.path.ends_with("server/proto.rs")
+                && non_test_contains(s, &format!("ErrorCode::{variant}"))
+        });
+        if !constructed {
+            out.push(Finding {
+                file: proto.path.clone(),
+                line: *line,
+                rule: "proto",
+                msg: format!("error code `{wire}` (ErrorCode::{variant}) is never constructed"),
+            });
+        }
+        if !readme.contains(&format!("`{wire}`")) {
+            out.push(Finding {
+                file: proto.path.clone(),
+                line: *line,
+                rule: "proto",
+                msg: format!("error code `{wire}` is not documented in the README"),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scan::scan_source;
+
+    #[test]
+    fn panic_tokens_respect_boundaries() {
+        assert!(find_token("x.unwrap();", ".unwrap()"));
+        assert!(!find_token("x.unwrap_or(0);", ".unwrap()"));
+        assert!(find_token("panic!(\"\")", "panic!"));
+        assert!(!find_token("catch_panic!(x)", "panic!"));
+    }
+
+    #[test]
+    fn direct_index_heuristic() {
+        assert!(has_direct_index("let y = xs[i];"));
+        assert!(has_direct_index("m.counts[idx].fetch_add(1, o);"));
+        assert!(!has_direct_index("let a: [f64; 4] = b;"));
+        assert!(!has_direct_index("#[derive(Clone)]"));
+        assert!(!has_direct_index("let v = vec![0.0; n];"));
+    }
+
+    #[test]
+    fn camel_maps_verbs() {
+        assert_eq!(camel("route"), "Route");
+        assert_eq!(camel("route_batch"), "RouteBatch");
+        assert_eq!(camel("set_budget"), "SetBudget");
+    }
+
+    #[test]
+    fn serving_scope_paths() {
+        assert!(serving_scope("rust/src/server/api.rs"));
+        assert!(serving_scope("rust/src/client.rs"));
+        assert!(!serving_scope("rust/src/linalg/chol.rs"));
+        assert!(!serving_scope("rust/src/analysis/rules.rs"));
+    }
+
+    #[test]
+    fn atomics_rule_in_and_out_of_designated_files() {
+        let designated = scan_source(
+            "rust/src/pacer/shared.rs",
+            "fn f(a: &AtomicU64) {\n    a.load(Ordering::Acquire);\n}\n",
+        );
+        let f = check_file(&designated);
+        assert_eq!(f.len(), 1, "unannotated site flagged: {f:?}");
+        assert_eq!(f[0].rule, "atomics");
+
+        let annotated = scan_source(
+            "rust/src/pacer/shared.rs",
+            "fn f(a: &AtomicU64) {\n    // invariant: monotone counter, readers tolerate lag\n    a.load(Ordering::Relaxed);\n}\n",
+        );
+        assert!(check_file(&annotated).is_empty());
+
+        let outside = scan_source(
+            "rust/src/exp/run.rs",
+            "fn f(a: &AtomicU64) {\n    a.load(Ordering::SeqCst);\n}\n",
+        );
+        let f = check_file(&outside);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].msg.contains("outside"));
+    }
+}

@@ -1,0 +1,571 @@
+//! Source scanner for the in-repo lint pass (`pallas-lint`).
+//!
+//! A hand-rolled Rust tokenizer good enough for line-level rules: it
+//! strips comments, blanks string/char-literal contents (so rule patterns
+//! never fire inside literals or doc examples), tracks `#[cfg(test)]`
+//! regions (test code is exempt from serving-path rules), and records
+//! function spans together with their `// lint:` markers.
+//!
+//! The scanner is deliberately NOT a parser — no `syn`, no rustc plumbing
+//! (the build image has no registry access) — so rules key off blanked
+//! token text plus brace/paren counting.  That trade-off is documented in
+//! `docs/analysis.md`; the conservative failure mode is a false positive,
+//! which the `// lint: allow(<rule>) reason="..."` grammar handles.
+
+/// One source line, three views.
+pub struct ScanLine {
+    /// the untouched source text (cross-file rules read literals here)
+    pub raw: String,
+    /// comments removed, string/char contents blanked with spaces
+    pub code: String,
+    /// comment text carried by this line (line + block comments)
+    pub comment: String,
+    /// inside a `#[cfg(test)]` item
+    pub in_test: bool,
+}
+
+/// A function body span (0-based line indices, inclusive).
+pub struct FnSpan {
+    pub name: String,
+    /// line holding the `fn` keyword
+    pub sig_line: usize,
+    /// first line of the body (the opening brace)
+    pub start: usize,
+    /// line of the matching closing brace
+    pub end: usize,
+    /// `// lint: no_alloc` marker in the doc/attribute block above
+    pub no_alloc: bool,
+    /// function-level `// lint: allow(<rule>) reason="..."` markers
+    pub allows: Vec<String>,
+}
+
+impl FnSpan {
+    pub fn contains(&self, line: usize) -> bool {
+        line >= self.sig_line && line <= self.end
+    }
+}
+
+/// A scanned file: lines plus the recognized function spans.
+pub struct FileScan {
+    /// repo-relative path with forward slashes (e.g. `rust/src/server/api.rs`)
+    pub path: String,
+    pub lines: Vec<ScanLine>,
+    pub fns: Vec<FnSpan>,
+}
+
+impl FileScan {
+    /// Is the finding at `line` (0-based) suppressed for `rule`?  A
+    /// suppression is a well-formed `lint: allow(<rule>) reason="..."`
+    /// comment on the same line, on the line directly above, or in the
+    /// marker block of the enclosing function.
+    pub fn allowed(&self, rule: &str, line: usize) -> bool {
+        let hit = |i: usize| allow_rules(&self.lines[i].comment, true).iter().any(|r| r == rule);
+        if hit(line) || (line > 0 && hit(line - 1)) {
+            return true;
+        }
+        self.fns
+            .iter()
+            .any(|f| f.contains(line) && f.allows.iter().any(|r| r == rule))
+    }
+
+    /// Does the atomic site at `line` carry an invariant comment?  The
+    /// comment must contain `invariant:` on the same line or within the
+    /// five lines above (a multi-line comment or a cluster of adjacent
+    /// sites may share one).
+    pub fn has_invariant(&self, line: usize) -> bool {
+        let lo = line.saturating_sub(5);
+        (lo..=line).any(|i| self.lines[i].comment.contains("invariant:"))
+    }
+
+    /// The innermost no-alloc-marked span containing `line`, if any.
+    pub fn no_alloc_span(&self, line: usize) -> Option<&FnSpan> {
+        self.fns
+            .iter()
+            .filter(|f| f.no_alloc && f.contains(line))
+            .min_by_key(|f| f.end - f.sig_line)
+    }
+}
+
+/// Extract the rule names of allow markers in a comment.  With
+/// `require_reason`, markers missing `reason="..."` are dropped (the
+/// suppression-hygiene rule reports them separately).
+pub fn allow_rules(comment: &str, require_reason: bool) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = comment;
+    while let Some(i) = rest.find("lint: allow(") {
+        let tail = &rest[i + "lint: allow(".len()..];
+        if let Some(j) = tail.find(')') {
+            let rule = tail[..j].trim().to_string();
+            if !rule.is_empty() && (!require_reason || tail[j..].contains("reason=\"")) {
+                out.push(rule);
+            }
+            rest = &tail[j..];
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+/// Count allow markers (well-formed or not) in a comment — the
+/// suppression-hygiene rule uses this to flag reason-less allows.
+pub fn allow_markers(comment: &str) -> usize {
+    comment.matches("lint: allow(").count()
+}
+
+// ----------------------------------------------------------------------
+// pass 1: comment/string separation
+
+enum St {
+    Normal,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+    Char,
+}
+
+/// Scan source text into a [`FileScan`].  `path` is the repo-relative
+/// label findings are reported under (virtual paths are fine in tests).
+pub fn scan_source(path: &str, src: &str) -> FileScan {
+    let bytes: Vec<char> = src.chars().collect();
+    let mut code = String::with_capacity(src.len());
+    let mut comment = String::with_capacity(64);
+    let mut st = St::Normal;
+    let mut i = 0;
+    while i < bytes.len() {
+        let c = bytes[i];
+        let next = bytes.get(i + 1).copied().unwrap_or('\0');
+        match st {
+            St::Normal => {
+                if c == '/' && next == '/' {
+                    st = St::LineComment;
+                    code.push(' ');
+                    code.push(' ');
+                    comment.push('/');
+                    comment.push('/');
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && next == '*' {
+                    st = St::BlockComment(1);
+                    code.push(' ');
+                    code.push(' ');
+                    comment.push('/');
+                    comment.push('*');
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    st = St::Str;
+                    code.push('"');
+                    comment.push(' ');
+                    i += 1;
+                    continue;
+                }
+                // raw strings: r"..." / r#"..."# / br#"..."#
+                if (c == 'r' || (c == 'b' && next == 'r')) && !prev_is_ident(&code) {
+                    let mut j = i + if c == 'b' { 2 } else { 1 };
+                    let mut hashes = 0u32;
+                    while bytes.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if bytes.get(j) == Some(&'"') {
+                        for _ in i..=j {
+                            code.push(' ');
+                            comment.push(' ');
+                        }
+                        st = St::RawStr(hashes);
+                        i = j + 1;
+                        continue;
+                    }
+                }
+                if c == '\'' {
+                    // char literal vs lifetime: a literal closes within a
+                    // few chars ('x', '\n', '\u{..}'); a lifetime doesn't
+                    if next == '\\' || matches!(bytes.get(i + 2), Some('\'')) {
+                        st = St::Char;
+                        code.push('\'');
+                        comment.push(' ');
+                        i += 1;
+                        continue;
+                    }
+                }
+                code.push(c);
+                comment.push(if c == '\n' { '\n' } else { ' ' });
+                i += 1;
+            }
+            St::LineComment => {
+                if c == '\n' {
+                    st = St::Normal;
+                    code.push('\n');
+                    comment.push('\n');
+                } else {
+                    code.push(' ');
+                    comment.push(c);
+                }
+                i += 1;
+            }
+            St::BlockComment(depth) => {
+                if c == '*' && next == '/' {
+                    let d = depth - 1;
+                    st = if d == 0 { St::Normal } else { St::BlockComment(d) };
+                    code.push(' ');
+                    code.push(' ');
+                    comment.push('*');
+                    comment.push('/');
+                    i += 2;
+                } else if c == '/' && next == '*' {
+                    st = St::BlockComment(depth + 1);
+                    code.push(' ');
+                    code.push(' ');
+                    comment.push('/');
+                    comment.push('*');
+                    i += 2;
+                } else {
+                    code.push(if c == '\n' { '\n' } else { ' ' });
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    code.push(' ');
+                    code.push(' ');
+                    comment.push(' ');
+                    comment.push(' ');
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Normal;
+                    code.push('"');
+                    comment.push(' ');
+                    i += 1;
+                } else {
+                    code.push(if c == '\n' { '\n' } else { ' ' });
+                    comment.push(if c == '\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == '"' {
+                    let mut ok = true;
+                    for h in 0..hashes {
+                        if bytes.get(i + 1 + h as usize) != Some(&'#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        for _ in 0..=(hashes as usize) {
+                            code.push(' ');
+                            comment.push(' ');
+                        }
+                        st = St::Normal;
+                        i += 1 + hashes as usize;
+                        continue;
+                    }
+                }
+                code.push(if c == '\n' { '\n' } else { ' ' });
+                comment.push(if c == '\n' { '\n' } else { ' ' });
+                i += 1;
+            }
+            St::Char => {
+                if c == '\\' {
+                    code.push(' ');
+                    code.push(' ');
+                    comment.push(' ');
+                    comment.push(' ');
+                    i += 2;
+                } else if c == '\'' {
+                    st = St::Normal;
+                    code.push('\'');
+                    comment.push(' ');
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    comment.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    let raws: Vec<&str> = src.split('\n').collect();
+    let codes: Vec<&str> = code.split('\n').collect();
+    let comments: Vec<&str> = comment.split('\n').collect();
+    let n = raws.len();
+    let mut lines: Vec<ScanLine> = (0..n)
+        .map(|k| ScanLine {
+            raw: raws[k].to_string(),
+            code: codes.get(k).copied().unwrap_or("").to_string(),
+            comment: comments.get(k).copied().unwrap_or("").to_string(),
+            in_test: false,
+        })
+        .collect();
+
+    mark_test_regions(&mut lines);
+    let fns = find_fns(&lines);
+    FileScan {
+        path: path.to_string(),
+        lines,
+        fns,
+    }
+}
+
+fn prev_is_ident(code: &str) -> bool {
+    code.chars()
+        .last()
+        .map(|c| c.is_ascii_alphanumeric() || c == '_')
+        .unwrap_or(false)
+}
+
+// ----------------------------------------------------------------------
+// pass 2: #[cfg(test)] regions
+
+fn mark_test_regions(lines: &mut [ScanLine]) {
+    let mut k = 0;
+    while k < lines.len() {
+        if lines[k].code.contains("#[cfg(test)]") && !lines[k].in_test {
+            // skip the attributed item: everything until its braces
+            // balance (or, for brace-less items like `use`, to the `;`)
+            let mut depth = 0i32;
+            let mut seen_brace = false;
+            let mut j = k;
+            while j < lines.len() {
+                lines[j].in_test = true;
+                for c in lines[j].code.chars() {
+                    match c {
+                        '{' => {
+                            depth += 1;
+                            seen_brace = true;
+                        }
+                        '}' => depth -= 1,
+                        ';' if !seen_brace => {
+                            depth = -1; // statement item: done
+                        }
+                        _ => {}
+                    }
+                    if seen_brace && depth == 0 {
+                        break;
+                    }
+                    if depth < 0 {
+                        break;
+                    }
+                }
+                if (seen_brace && depth == 0) || depth < 0 {
+                    break;
+                }
+                j += 1;
+            }
+            k = j + 1;
+        } else {
+            k += 1;
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// pass 3: function spans + markers
+
+fn find_fns(lines: &[ScanLine]) -> Vec<FnSpan> {
+    let mut out = Vec::new();
+    for (k, line) in lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let Some(name) = fn_name_on(&line.code) else {
+            continue;
+        };
+        // find the body's opening brace at paren depth 0; a `;` first
+        // means a trait/extern declaration without a body
+        let mut paren = 0i32;
+        let mut open: Option<(usize, usize)> = None; // (line, col)
+        'outer: for (j, l) in lines.iter().enumerate().skip(k) {
+            let cs: Vec<char> = l.code.chars().collect();
+            let from = if j == k {
+                l.code.find("fn ").map(|b| l.code[..b].chars().count()).unwrap_or(0)
+            } else {
+                0
+            };
+            for (col, &c) in cs.iter().enumerate().skip(from) {
+                match c {
+                    '(' => paren += 1,
+                    ')' => paren -= 1,
+                    ';' if paren == 0 => break 'outer,
+                    '{' if paren == 0 => {
+                        open = Some((j, col));
+                        break 'outer;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        let Some((start, col)) = open else { continue };
+        // brace-count to the end of the body
+        let mut depth = 0i32;
+        let mut end = start;
+        'count: for (j, l) in lines.iter().enumerate().skip(start) {
+            for (c2, c) in l.code.chars().enumerate() {
+                if j == start && c2 < col {
+                    continue;
+                }
+                match c {
+                    '{' => depth += 1,
+                    '}' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            end = j;
+                            break 'count;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        // marker block: contiguous comment/attribute/empty lines above
+        let mut no_alloc = false;
+        let mut allows = Vec::new();
+        let mut j = k;
+        while j > 0 {
+            j -= 1;
+            let l = &lines[j];
+            let code_t = l.code.trim();
+            let is_meta = code_t.is_empty() || code_t.starts_with('#') || code_t.ends_with(']');
+            if !is_meta && l.comment.trim().is_empty() {
+                break;
+            }
+            if !is_meta {
+                break;
+            }
+            if l.comment.contains("lint: no_alloc") {
+                no_alloc = true;
+            }
+            allows.extend(allow_rules(&l.comment, true));
+        }
+        // a marker on the `fn` line itself also counts
+        if lines[k].comment.contains("lint: no_alloc") {
+            no_alloc = true;
+        }
+        allows.extend(allow_rules(&lines[k].comment, true));
+        out.push(FnSpan {
+            name,
+            sig_line: k,
+            start,
+            end,
+            no_alloc,
+            allows,
+        });
+    }
+    out
+}
+
+/// The function name if this code line declares one (`fn name(`),
+/// ignoring `fn` inside identifiers and type positions like `Fn(`.
+fn fn_name_on(code: &str) -> Option<String> {
+    let mut from = 0;
+    while let Some(b) = code[from..].find("fn ") {
+        let at = from + b;
+        let before_ok = at == 0
+            || code[..at]
+                .chars()
+                .last()
+                .map(|c| !(c.is_ascii_alphanumeric() || c == '_'))
+                .unwrap_or(true);
+        if before_ok {
+            let rest = code[at + 3..].trim_start();
+            let name: String = rest
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect();
+            if !name.is_empty() {
+                return Some(name);
+            }
+        }
+        from = at + 3;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let s = scan_source(
+            "x.rs",
+            "let a = \"panic!(x.unwrap())\"; // trailing .unwrap()\nlet b = 1;\n",
+        );
+        assert!(!s.lines[0].code.contains("panic!"));
+        assert!(!s.lines[0].code.contains(".unwrap()"));
+        assert!(s.lines[0].comment.contains(".unwrap()"));
+        assert!(s.lines[1].code.contains("let b"));
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals() {
+        let s = scan_source(
+            "x.rs",
+            "let r = r#\"panic!()\"#;\nlet c = '\\n';\nlet lt: &'static str = \"\";\n",
+        );
+        assert!(!s.lines[0].code.contains("panic!"));
+        assert!(s.lines[2].code.contains("static"), "lifetime untouched");
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn helper() { x.unwrap(); }\n}\nfn live2() {}\n";
+        let s = scan_source("x.rs", src);
+        assert!(!s.lines[0].in_test);
+        assert!(s.lines[3].in_test);
+        assert!(!s.lines[5].in_test);
+    }
+
+    #[test]
+    fn fn_spans_and_markers() {
+        let src = "\
+/// docs
+// lint: no_alloc
+// lint: allow(index) reason=\"bounded by caller\"
+pub fn hot(&mut self, x: &[f64]) -> f64 {
+    let y = x[0];
+    y
+}
+
+pub fn cold() {
+}
+";
+        let s = scan_source("x.rs", src);
+        assert_eq!(s.fns.len(), 2);
+        let hot = &s.fns[0];
+        assert_eq!(hot.name, "hot");
+        assert!(hot.no_alloc);
+        assert_eq!(hot.allows, vec!["index".to_string()]);
+        assert!(hot.contains(4));
+        assert!(!hot.contains(8));
+        assert!(s.allowed("index", 4));
+        assert!(!s.allowed("panic", 4));
+        assert!(!s.fns[1].no_alloc);
+    }
+
+    #[test]
+    fn allow_requires_a_reason() {
+        let s = scan_source(
+            "x.rs",
+            "x.unwrap(); // lint: allow(panic)\ny.unwrap(); // lint: allow(panic) reason=\"checked above\"\n",
+        );
+        assert!(!s.allowed("panic", 0), "reason-less allow must not suppress");
+        assert!(s.allowed("panic", 1));
+        assert_eq!(allow_markers(&s.lines[0].comment), 1);
+    }
+
+    #[test]
+    fn invariant_comment_window() {
+        let src = "// invariant: monotonic counter\nlet a = 1;\nlet b = 2;\nlet c = 3;\nlet d = 4;\nlet e = 5;\nlet f = 6;\n";
+        let s = scan_source("x.rs", src);
+        assert!(s.has_invariant(1));
+        assert!(s.has_invariant(5));
+        assert!(!s.has_invariant(6), "window is five lines");
+    }
+}

@@ -42,6 +42,7 @@
 // `to_string` is the wire format writer, not a Display shortcut.
 #![allow(clippy::needless_range_loop, clippy::inherent_to_string)]
 
+pub mod analysis;
 pub mod bandit;
 pub mod client;
 pub mod exp;

@@ -113,6 +113,7 @@ impl Cholesky {
     /// update in a loop must periodically [`Cholesky::refactor`] (the arm
     /// layer does so every `REFRESH_EVERY` observations, which the
     /// property tests bound at ≤1e-9 total drift).
+    // lint: no_alloc
     pub fn rank1_update(&mut self, x: &[f64], work: &mut [f64]) {
         let d = self.d;
         debug_assert_eq!(x.len(), d);
@@ -140,6 +141,7 @@ impl Cholesky {
     /// the margin); the caller must then [`Cholesky::refactor`] from its
     /// exact statistics before using the factor again.  `bandit::arm`'s
     /// `retract` is the canonical caller and does exactly that.
+    // lint: no_alloc
     pub fn rank1_downdate(&mut self, x: &[f64], work: &mut [f64]) -> bool {
         let d = self.d;
         debug_assert_eq!(x.len(), d);
@@ -178,6 +180,7 @@ impl Cholesky {
 
     /// Solve A x = b without allocating: `y` is caller scratch of length
     /// d, `x` receives the solution.  `b` may NOT alias `x` or `y`.
+    // lint: no_alloc
     pub fn solve_into(&self, b: &[f64], x: &mut [f64], y: &mut [f64]) {
         let d = self.d;
         debug_assert_eq!(b.len(), d);
@@ -216,6 +219,7 @@ impl Cholesky {
     /// scratch of length d.  For b = e_j the forward solve yields
     /// y_i = 0 exactly for i < j, so the sweep starts at row j —
     /// bit-identical to the full solve at half the work.
+    // lint: no_alloc
     pub fn inverse_into(&self, out: &mut Mat, y: &mut [f64], x: &mut [f64]) {
         let d = self.d;
         debug_assert_eq!(out.dim(), d);

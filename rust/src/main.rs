@@ -15,6 +15,7 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
 
+use paretobandit::analysis::{lint_main, LintOpts};
 use paretobandit::client::ParetoClient;
 use paretobandit::exp::{
     conditions, exp1_stationary, exp2_costdrift, exp3_degradation, exp4_onboarding, exp5_warmup,
@@ -47,6 +48,16 @@ fn main() {
     match cmd {
         "serve" => serve(&args),
         "scenario" => scenario_cmd(&args, seeds),
+        "lint" => {
+            let opts = LintOpts {
+                root: arg_val(&args, "--root").unwrap_or_else(|| ".".to_string()),
+                json: args.iter().any(|a| a == "--json"),
+                deny: args.iter().any(|a| a == "--deny"),
+                baseline: arg_val(&args, "--baseline"),
+                write_baseline: args.iter().any(|a| a == "--write-baseline"),
+            };
+            std::process::exit(lint_main(&opts));
+        }
         "policies" => {
             println!("registered routing policies (--policy / --shadow / spec `policy = ...`):");
             for b in BUILDERS {
@@ -116,6 +127,8 @@ fn main() {
             println!("             --policy NAME[:ARG], --shadow NAME[,NAME...])");
             println!("  scenario   run a declarative drift spec (scenarios/*.toml)");
             println!("  policies   list the registered routing policies");
+            println!("  lint       in-repo static analysis (--deny, --json, --root DIR,");
+            println!("             --baseline PATH, --write-baseline); see docs/analysis.md");
             println!("  exp1       stationary budget pacing        (Fig. 1)");
             println!("  exp2       cost-drift compliance           (Table 2, Fig. 2)");
             println!("  exp3       silent quality degradation      (Fig. 3)");

@@ -37,23 +37,37 @@ impl SharedPacer {
         }
     }
 
+    /// Poison-tolerant lock on the sequential pacer.  A worker that
+    /// panicked while holding the lock left the pacer in a consistent
+    /// state (its update is a pair of f64 writes with no invariant
+    /// between them), so the deployment-wide ledger keeps serving rather
+    /// than propagating the poison to every shard.
+    fn locked(&self) -> std::sync::MutexGuard<'_, BudgetPacer> {
+        self.inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     /// Current dual variable λ_t (lock-free).
     #[inline]
     pub fn lambda(&self) -> f64 {
+        // invariant: Acquire pairs with the Release store in
+        // observe_cost/restore, so a reader that sees λ also sees the
+        // pacer update that produced it
         f64::from_bits(self.lambda_bits.load(Ordering::Acquire))
     }
 
     pub fn budget(&self) -> f64 {
-        self.inner.lock().unwrap().budget()
+        self.locked().budget()
     }
 
     pub fn cbar(&self) -> f64 {
-        self.inner.lock().unwrap().cbar()
+        self.locked().cbar()
     }
 
     /// Operator changes the ceiling at runtime (λ state is preserved).
     pub fn set_budget(&self, budget: f64) {
-        self.inner.lock().unwrap().set_budget(budget);
+        self.locked().set_budget(budget);
     }
 
     /// Warm-restart the dual state from a snapshot (budget + λ + c̄) and
@@ -62,23 +76,32 @@ impl SharedPacer {
     /// shared ledger.  The spend ledger / observation counters are NOT
     /// rewound: they audit this process lifetime, not the router's.
     pub fn restore(&self, budget: f64, lambda: f64, cbar: f64) {
-        let mut p = self.inner.lock().unwrap();
+        let mut p = self.locked();
         p.set_budget(budget);
         p.restore(lambda, cbar);
+        // invariant: Release publishes the restored pacer state before
+        // the new λ becomes visible to lock-free readers
         self.lambda_bits.store(p.lambda().to_bits(), Ordering::Release);
     }
 
     /// Dual update on a realised request cost, from any thread.
     pub fn observe_cost(&self, cost: f64) {
         {
-            let mut p = self.inner.lock().unwrap();
+            let mut p = self.locked();
             p.observe_cost(cost);
+            // invariant: Release store under the pacer lock — λ readers
+            // (route hot path) synchronize with exactly this write
             self.lambda_bits.store(p.lambda().to_bits(), Ordering::Release);
         }
         // ledger accumulation stays outside the pacer lock
+        // invariant: Relaxed initial read is safe — the CAS below
+        // revalidates the value and carries the ordering
         let mut cur = self.spend_bits.load(Ordering::Relaxed);
         loop {
             let next = (f64::from_bits(cur) + cost).to_bits();
+            // invariant: AcqRel on success makes each add visible to the
+            // next CAS and to Acquire loads in total_spend; Relaxed on
+            // failure only retries with the freshly observed value
             match self
                 .spend_bits
                 .compare_exchange_weak(cur, next, Ordering::AcqRel, Ordering::Relaxed)
@@ -87,16 +110,23 @@ impl SharedPacer {
                 Err(seen) => cur = seen,
             }
         }
+        // invariant: counted after the spend CAS lands, so observations()
+        // never reports a request whose cost is not yet in the ledger
         self.n.fetch_add(1, Ordering::AcqRel);
     }
 
     /// Total realised spend across all shards.
     pub fn total_spend(&self) -> f64 {
+        // invariant: Acquire pairs with the AcqRel spend CAS — the sum
+        // read here includes every add that happened-before this load
         f64::from_bits(self.spend_bits.load(Ordering::Acquire))
     }
 
     /// Number of cost observations absorbed.
     pub fn observations(&self) -> u64 {
+        // invariant: Acquire pairs with the AcqRel fetch_add; with the
+        // counter ordered after its spend CAS, mean_cost() never divides
+        // by an n ahead of the ledger
         self.n.load(Ordering::Acquire)
     }
 

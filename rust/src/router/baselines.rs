@@ -34,7 +34,8 @@ impl RoutingPolicy for RandomPolicy {
     }
 
     fn select(&mut self, ctx: &RouteCtx) -> PolicyDecision {
-        PolicyDecision::pick(ctx.eligible[self.rng.below(ctx.eligible.len())])
+        let k = self.rng.below(ctx.eligible.len().max(1));
+        PolicyDecision::pick(ctx.eligible.get(k).copied().unwrap_or(0))
     }
 
     fn update(&mut self, _fb: &FeedbackCtx) {}
@@ -114,7 +115,7 @@ impl RoutingPolicy for FixedPolicy {
     fn select(&mut self, ctx: &RouteCtx) -> PolicyDecision {
         match self.pinned {
             Some(p) if ctx.eligible.contains(&p) => PolicyDecision::pick(p),
-            _ => PolicyDecision::pick(ctx.eligible[0]),
+            _ => PolicyDecision::pick(ctx.eligible.first().copied().unwrap_or(0)),
         }
     }
 
@@ -204,7 +205,7 @@ impl EpsilonGreedy {
     fn estimate(&self, slot: usize) -> f64 {
         match self.counts.get(slot) {
             Some(0) | None => OPTIMISM,
-            Some(_) => self.means[slot],
+            Some(_) => self.means.get(slot).copied().unwrap_or(OPTIMISM),
         }
     }
 }
@@ -216,9 +217,10 @@ impl RoutingPolicy for EpsilonGreedy {
 
     fn select(&mut self, ctx: &RouteCtx) -> PolicyDecision {
         if self.rng.bernoulli(self.eps) {
-            return PolicyDecision::pick(ctx.eligible[self.rng.below(ctx.eligible.len())]);
+            let k = self.rng.below(ctx.eligible.len().max(1));
+            return PolicyDecision::pick(ctx.eligible.get(k).copied().unwrap_or(0));
         }
-        let mut best = ctx.eligible[0];
+        let mut best = ctx.eligible.first().copied().unwrap_or(0);
         let mut best_est = f64::NEG_INFINITY;
         let mut n_tied = 0usize;
         for &id in ctx.eligible {
@@ -244,9 +246,11 @@ impl RoutingPolicy for EpsilonGreedy {
 
     fn update(&mut self, fb: &FeedbackCtx) {
         self.ensure_len(fb.arm + 1);
-        self.counts[fb.arm] += 1;
-        let n = self.counts[fb.arm] as f64;
-        self.means[fb.arm] += (fb.reward - self.means[fb.arm]) / n;
+        let (Some(c), Some(m)) = (self.counts.get_mut(fb.arm), self.means.get_mut(fb.arm)) else {
+            return;
+        };
+        *c += 1;
+        *m += (fb.reward - *m) / (*c as f64);
     }
 
     fn on_model_added(
@@ -258,15 +262,21 @@ impl RoutingPolicy for EpsilonGreedy {
         _prior: Option<(f64, f64)>,
     ) {
         self.ensure_len(slot + 1);
-        self.counts[slot] = 0;
-        self.means[slot] = 0.0;
+        if let Some(c) = self.counts.get_mut(slot) {
+            *c = 0;
+        }
+        if let Some(m) = self.means.get_mut(slot) {
+            *m = 0.0;
+        }
     }
 
     fn on_model_removed(&mut self, slot: usize) {
         // slot retired: stats dropped (ids are never reused)
-        if slot < self.counts.len() {
-            self.counts[slot] = 0;
-            self.means[slot] = 0.0;
+        if let Some(c) = self.counts.get_mut(slot) {
+            *c = 0;
+        }
+        if let Some(m) = self.means.get_mut(slot) {
+            *m = 0.0;
         }
     }
 
@@ -386,7 +396,7 @@ impl RoutingPolicy for ThompsonPolicy {
     fn select(&mut self, ctx: &RouteCtx) -> PolicyDecision {
         self.t_seen = self.t_seen.max(ctx.step);
         let penalty = self.lambda_c + ctx.lambda;
-        let mut best = ctx.eligible[0];
+        let mut best = ctx.eligible.first().copied().unwrap_or(0);
         let mut best_score = f64::NEG_INFINITY;
         for &id in ctx.eligible {
             let Some(Some(arm)) = self.arms.get(id) else {
@@ -427,10 +437,13 @@ impl RoutingPolicy for ThompsonPolicy {
         prior: Option<(f64, f64)>,
     ) {
         self.ensure_len(slot + 1);
-        self.arms[slot] = Some(match prior {
+        let arm = match prior {
             Some((n_eff, r0)) => heuristic_prior(self.d, n_eff, r0, self.lambda0, self.t_seen),
             None => ArmState::cold(self.d, self.lambda0, self.t_seen),
-        });
+        };
+        if let Some(a) = self.arms.get_mut(slot) {
+            *a = Some(arm);
+        }
     }
 
     fn on_model_removed(&mut self, slot: usize) {

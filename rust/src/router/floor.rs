@@ -106,8 +106,8 @@ impl QualityFloorRouter {
 
     /// Fit warm priors helper (parallel to the main router's usage).
     pub fn add_models_warm(&mut self, specs: &[(&str, f64, f64)], offline: &[OfflineStats], n_eff: f64) {
-        for (i, (name, pi, po)) in specs.iter().enumerate() {
-            self.add_model(name, *pi, *po, Prior::Warm(&offline[i], n_eff));
+        for ((name, pi, po), off) in specs.iter().zip(offline) {
+            self.add_model(name, *pi, *po, Prior::Warm(off, n_eff));
         }
     }
 
@@ -126,7 +126,9 @@ impl QualityFloorRouter {
     /// Deregister a model (slot retired; stats dropped).
     pub fn delete_model(&mut self, id: usize) -> bool {
         if self.registry.remove(id) {
-            self.arms[id] = None;
+            if let Some(slot) = self.arms.get_mut(id) {
+                *slot = None;
+            }
             true
         } else {
             false
@@ -147,7 +149,7 @@ impl QualityFloorRouter {
             arm.refresh();
         }
         let slots = (0..self.arms.len())
-            .map(|id| match (self.registry.get(id), self.arms[id].as_ref()) {
+            .map(|id| match (self.registry.get(id), self.arms.get(id).and_then(|a| a.as_ref())) {
                 (Some(e), Some(a)) => Some(SlotSnap {
                     name: e.name.clone(),
                     price_in: e.price_in_per_m,
@@ -231,8 +233,12 @@ impl QualityFloorRouter {
         let mut best_score = f64::NEG_INFINITY;
         let mut n_tied = 0usize;
         for id in self.registry.active_ids() {
-            let arm = self.arms[id].as_ref().unwrap();
-            let e = self.registry.get(id).unwrap();
+            let (Some(arm), Some(e)) = (
+                self.arms.get(id).and_then(|a| a.as_ref()),
+                self.registry.get(id),
+            ) else {
+                continue;
+            };
             let infl = arm.staleness_inflation(self.cfg.gamma, self.cfg.v_max, self.t);
             let q = arm.predict(x) + self.cfg.alpha * (arm.variance(x) * infl).sqrt();
             let s = -e.c_tilde + self.mu * q;
@@ -249,7 +255,7 @@ impl QualityFloorRouter {
         }
         assert!(best != usize::MAX, "empty portfolio");
         self.t += 1;
-        if let Some(arm) = self.arms[best].as_mut() {
+        if let Some(arm) = self.arms.get_mut(best).and_then(|a| a.as_mut()) {
             arm.last_play = self.t;
         }
         best

@@ -292,6 +292,7 @@ impl PolicyHost {
             // circuit-breaker fallback: the cheapest model always survives
             match self.registry.cheapest_active() {
                 Some(id) => self.eligible_buf.push(id),
+                // lint: allow(panic) reason="programming-error invariant: the API layer rejects routing before any model is registered"
                 None => panic!("route() called with an empty portfolio"),
             }
         }
@@ -299,6 +300,7 @@ impl PolicyHost {
     }
 
     /// One routing decision.
+    // lint: no_alloc
     pub fn route(&mut self, x: &[f64]) -> RouteDecision {
         let lambda = self.prepare();
         let ctx = RouteCtx {
@@ -329,6 +331,7 @@ impl PolicyHost {
     /// zero heap allocations — the shared slot slices borrow host
     /// buffers, picks land in a reused scratch vec, and `out` is cleared
     /// and refilled in place (asserted by `tests/alloc_probe.rs`).
+    // lint: no_alloc
     pub fn route_batch_into(&mut self, xs: &[Vec<f64>], out: &mut Vec<RouteDecision>) {
         out.clear();
         if xs.is_empty() {
@@ -373,6 +376,7 @@ impl PolicyHost {
     /// own inside [`RoutingPolicy::update`]; the host pacer coexists
     /// with one only as the shared-ledger fallback (see
     /// [`PolicyHost::use_shared_pacer`]), so no controller is fed twice.
+    // lint: no_alloc
     pub fn feedback(&mut self, arm: usize, x: &[f64], reward: f64, cost: f64) {
         let fb = FeedbackCtx {
             arm,

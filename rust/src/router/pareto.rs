@@ -164,8 +164,12 @@ impl ParetoRouter {
     /// dropped.
     pub fn delete_model(&mut self, id: usize) -> bool {
         if self.registry.remove(id) {
-            self.arms[id] = None;
-            self.burnin_left[id] = 0;
+            if let Some(slot) = self.arms.get_mut(id) {
+                *slot = None;
+            }
+            if let Some(b) = self.burnin_left.get_mut(id) {
+                *b = 0;
+            }
             true
         } else {
             false
@@ -184,6 +188,7 @@ impl ParetoRouter {
     }
 
     /// One routing decision (Algorithm 1, lines 3–15).
+    // lint: no_alloc
     pub fn route(&mut self, x: &[f64]) -> RouteDecision {
         debug_assert_eq!(x.len(), self.cfg.d);
         let lambda_t = self.pacer.as_ref().map_or(0.0, |p| p.lambda());
@@ -198,9 +203,11 @@ impl ParetoRouter {
     /// owes scheduled pulls, consume one and return the forced decision.
     fn try_burnin(&mut self, lambda_t: f64) -> Option<RouteDecision> {
         let id = self.next_burnin()?;
-        self.burnin_left[id] -= 1;
+        if let Some(b) = self.burnin_left.get_mut(id) {
+            *b -= 1;
+        }
         self.t += 1;
-        if let Some(arm) = self.arms[id].as_mut() {
+        if let Some(arm) = self.arms.get_mut(id).and_then(|a| a.as_mut()) {
             arm.last_play = self.t;
         }
         Some(RouteDecision {
@@ -234,6 +241,7 @@ impl ParetoRouter {
             if let Some(id) = self.registry.cheapest_active() {
                 self.id_buf.push(id);
             } else {
+                // lint: allow(panic) reason="programming-error invariant: the API layer rejects routing before any model is registered"
                 panic!("route() called with an empty portfolio");
             }
         }
@@ -242,13 +250,18 @@ impl ParetoRouter {
     /// Score the current candidate set and pick the winner (Algorithm 1,
     /// lines 9–14, Eq. 2), advancing the step clock.  Assumes
     /// [`Self::build_eligible`] ran after the last pacer/registry change.
+    // lint: allow(index) reason="score_buf is built 1:1 with id_buf and pick is argmax_tiebreak's index into it"
     fn score_and_pick(&mut self, x: &[f64], lambda_t: f64) -> RouteDecision {
         let penalty_weight = self.cfg.lambda_c + lambda_t;
         self.score_buf.clear();
         let t_now = self.t;
         for &id in &self.id_buf {
-            let arm = self.arms[id].as_ref().expect("active arm");
-            let e = self.registry.get(id).expect("active entry");
+            // a slot retired between build_eligible and here must not
+            // desync score_buf from id_buf: score it out of contention
+            let (Some(arm), Some(e)) = (self.arms[id].as_ref(), self.registry.get(id)) else {
+                self.score_buf.push(f64::NEG_INFINITY);
+                continue;
+            };
             let infl = arm.staleness_inflation(self.cfg.gamma, self.cfg.v_max, t_now);
             let quality = match self.cfg.exploration {
                 crate::router::Exploration::Ucb => {
@@ -283,6 +296,7 @@ impl ParetoRouter {
 
     /// Feedback path (Algorithm 1, lines 16–26): reward update with
     /// geometric forgetting, then the pacer dual update on realised cost.
+    // lint: no_alloc
     pub fn feedback(&mut self, arm: usize, x: &[f64], reward: f64, cost: f64) {
         if let Some(Some(a)) = self.arms.get_mut(arm) {
             a.observe(x, reward, self.cfg.gamma, self.t);
@@ -312,8 +326,11 @@ impl ParetoRouter {
         let n = self.arms.len();
         let mut per_arm: Vec<Vec<(&[f64], f64)>> = vec![Vec::new(); n];
         for ev in events {
-            if ev.arm < n && ev.context.len() == self.cfg.d {
-                per_arm[ev.arm].push((ev.context.as_slice(), ev.reward));
+            if ev.context.len() != self.cfg.d {
+                continue;
+            }
+            if let Some(bucket) = per_arm.get_mut(ev.arm) {
+                bucket.push((ev.context.as_slice(), ev.reward));
             }
         }
         let gamma = self.cfg.gamma;
@@ -379,12 +396,12 @@ impl ParetoRouter {
             arm.refresh();
         }
         let slots = (0..self.arms.len())
-            .map(|id| match (self.registry.get(id), self.arms[id].as_ref()) {
+            .map(|id| match (self.registry.get(id), self.arms.get(id).and_then(|a| a.as_ref())) {
                 (Some(e), Some(a)) => Some(SlotSnap {
                     name: e.name.clone(),
                     price_in: e.price_in_per_m,
                     price_out: e.price_out_per_m,
-                    burnin_left: self.burnin_left[id],
+                    burnin_left: self.burnin_remaining(id),
                     arm: ArmSnap {
                         a: a.a.data().to_vec(),
                         b: a.b.clone(),
@@ -469,8 +486,11 @@ impl ParetoRouter {
     }
 
     fn next_burnin(&self) -> Option<usize> {
-        (0..self.burnin_left.len())
-            .find(|&i| self.burnin_left[i] > 0 && self.registry.is_active(i))
+        self.burnin_left
+            .iter()
+            .enumerate()
+            .find(|&(i, &b)| b > 0 && self.registry.is_active(i))
+            .map(|(i, _)| i)
     }
 
     /// Remaining forced pulls for a slot (tests/diagnostics).
@@ -511,6 +531,7 @@ impl RoutingPolicy for ParetoRouter {
     /// concurrent replica may move λ mid-batch; this snapshot semantics
     /// is the documented behaviour (the sequential loop would race the
     /// same way, just at a finer grain).
+    // lint: no_alloc
     fn select_batch(&mut self, batch: &BatchCtx<'_>, out: &mut Vec<PolicyDecision>) {
         let lambda_t = self.pacer.as_ref().map_or(0.0, |p| p.lambda());
         let mut eligible_built = false;

@@ -90,6 +90,7 @@ impl BatchCtx<'_> {
     #[inline]
     pub fn route_ctx(&self, i: usize) -> RouteCtx<'_> {
         RouteCtx {
+            // lint: allow(index) reason="i ranges over 0..xs.len() at every fan-out call site"
             x: &self.xs[i],
             eligible: self.eligible,
             blended: self.blended,

@@ -205,7 +205,7 @@ impl Registry {
             .iter()
             .enumerate()
             .filter_map(|(i, s)| s.as_ref().map(|e| (i, e.blended_per_1k)))
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(&b.1))
             .map(|(i, _)| i)
     }
 }

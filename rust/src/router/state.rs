@@ -187,9 +187,9 @@ impl RouterState {
             return Err("state: rng must have 4 words".to_string());
         }
         let mut rng = [0u64; 4];
-        for (i, w) in rng_arr.iter().enumerate() {
+        for (dst, w) in rng.iter_mut().zip(rng_arr) {
             let hex = w.as_str().ok_or("state: rng word must be a hex string")?;
-            rng[i] = u64::from_str_radix(hex, 16)
+            *dst = u64::from_str_radix(hex, 16)
                 .map_err(|_| format!("state: bad rng word '{hex}'"))?;
         }
         let pacer = match j.get("pacer") {

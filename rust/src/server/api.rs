@@ -244,6 +244,7 @@ impl ServerState {
         if shed > 0 {
             self.metrics
                 .dropped_rewards
+                // lint: allow(atomics) reason="monotonic monitoring counter, no ordering"
                 .fetch_add(shed, std::sync::atomic::Ordering::Relaxed);
         }
         if q.is_empty() {
@@ -378,6 +379,7 @@ impl ServerState {
             Err(e) => {
                 self.metrics
                     .errors
+                    // lint: allow(atomics) reason="monotonic monitoring counter, no ordering"
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 return Response::err(
                     ErrorCode::FeaturizeFailed,
@@ -422,6 +424,7 @@ impl ServerState {
     /// the whole sub-batch — and reassemble per-item responses in
     /// request order.  Latencies are attributed as the per-item mean of
     /// the batch.
+    // lint: allow(index) reason="slots has items.len() entries and every k comes from enumerate()"
     fn op_route_batch(&mut self, batch_id: Option<u64>, items: &[RouteItem]) -> Response {
         let total = items.len();
         let mut slots: Vec<Option<Response>> = (0..total).map(|_| None).collect();
@@ -437,6 +440,7 @@ impl ServerState {
                 Err(e) => {
                     self.metrics
                         .errors
+                        // lint: allow(atomics) reason="monotonic monitoring counter, no ordering"
                         .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                     slots[k] = Some(Response::err(
                         ErrorCode::FeaturizeFailed,
@@ -674,7 +678,13 @@ impl ServerState {
                     id,
                 ),
             },
-            Event::DegradeQuality { .. } | Event::TrafficMix { .. } => unreachable!(),
+            // guarded by the is_env_side() early-return above; a typed
+            // error keeps a future guard regression from killing the shard
+            Event::DegradeQuality { .. } | Event::TrafficMix { .. } => Response::err(
+                ErrorCode::BadRequest,
+                "inject: environment-side event has no server handler",
+                id,
+            ),
         }
     }
 
@@ -766,6 +776,7 @@ impl ServerState {
             merges: self
                 .metrics
                 .merges
+                // lint: allow(atomics) reason="monitoring read of a monotonic counter"
                 .load(std::sync::atomic::Ordering::Relaxed),
         }
     }

@@ -197,6 +197,17 @@ struct Dispatch {
 }
 
 impl Dispatch {
+    /// Poison-tolerant lock on the ownership table.  Every OwnerTable
+    /// mutation is a single complete map operation, so a handler thread
+    /// that panicked while holding the lock left a consistent table;
+    /// recovering it keeps the other connection handlers serving.
+    fn owners_locked(&self) -> std::sync::MutexGuard<'_, OwnerTable> {
+        self.owners
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    // lint: allow(index) reason="every caller derives shard from `% shard_txs.len()` or enumerate()"
     fn forward(&self, shard: usize, req: Request) -> Response {
         let id = req.id();
         let (tx, rx) = mpsc::channel();
@@ -228,6 +239,8 @@ impl Dispatch {
         match req {
             Request::Route(it) => {
                 let id = it.id;
+                // invariant: round-robin ticket — only uniqueness mod n
+                // matters, so Relaxed is sufficient
                 let shard =
                     self.next.fetch_add(1, Ordering::Relaxed) % self.shard_txs.len();
                 let resp = self.forward(shard, Request::Route(it));
@@ -239,7 +252,7 @@ impl Dispatch {
                 // can still miss the mapping; the same request pattern is
                 // unserviceable on the single-worker server too.)
                 if resp.is_ok() {
-                    self.owners.lock().unwrap().insert(id, shard);
+                    self.owners_locked().insert(id, shard);
                 }
                 (resp, false)
             }
@@ -250,13 +263,13 @@ impl Dispatch {
                 // single-worker server's behaviour; the claim after
                 // success is generation-conditional so a concurrent
                 // re-route of the same id is never unclaimed
-                let owner = self.owners.lock().unwrap().get(it.id);
+                let owner = self.owners_locked().get(it.id);
                 match owner {
                     Some((shard, gen)) => {
                         let id = it.id;
                         let resp = self.forward(shard, Request::Feedback(it));
                         if resp.is_ok() {
-                            self.owners.lock().unwrap().remove_if(id, gen);
+                            self.owners_locked().remove_if(id, gen);
                         }
                         (resp, false)
                     }
@@ -358,6 +371,7 @@ impl Dispatch {
     /// already answered; timed-out items report `shard_timeout`.  A
     /// late-arriving sub-batch still routed on its shard — those pending
     /// contexts are never claimed and age out of the FIFO caches.
+    // lint: allow(index) reason="sub-vectors indexed by `x % n` and slots by enumerate() positions < total"
     fn route_batch(&self, batch_id: Option<u64>, items: Vec<RouteItem>) -> Response {
         let total = items.len();
         if total == 0 {
@@ -367,6 +381,8 @@ impl Dispatch {
             };
         }
         let n = self.shard_txs.len();
+        // invariant: round-robin ticket block — only uniqueness mod n
+        // matters, so Relaxed is sufficient
         let base = self.next.fetch_add(total, Ordering::Relaxed);
         let mut sub_items: Vec<Vec<RouteItem>> = (0..n).map(|_| Vec::new()).collect();
         // per shard: (original position, item id) for reassembly + claims
@@ -405,7 +421,7 @@ impl Dispatch {
         for (shard, meta, rx) in waiting {
             match rx.recv_timeout(SYNC_TIMEOUT) {
                 Ok(Response::Batch { results, .. }) if results.len() == meta.len() => {
-                    let mut owners = self.owners.lock().unwrap();
+                    let mut owners = self.owners_locked();
                     for (&(k, _), r) in meta.iter().zip(results) {
                         // same claim-on-success rule as single route
                         if let Response::Route { id, .. } = &r {
@@ -450,6 +466,7 @@ impl Dispatch {
     /// the sub-batches out, and reassemble per-item results in request
     /// order.  Items with no owner fail per-item (`unknown_id`) without
     /// poisoning the rest of the batch.
+    // lint: allow(index) reason="sub-vectors indexed by owner shard < n and slots by enumerate() positions"
     fn feedback_batch(&self, batch_id: Option<u64>, items: Vec<FeedbackItem>) -> Response {
         let total = items.len();
         if total == 0 {
@@ -464,7 +481,7 @@ impl Dispatch {
         let mut sub_meta: Vec<Vec<(usize, u64, u64)>> = (0..n).map(|_| Vec::new()).collect();
         let mut slots: Vec<Option<Response>> = (0..total).map(|_| None).collect();
         {
-            let owners = self.owners.lock().unwrap();
+            let owners = self.owners_locked();
             for (k, item) in items.into_iter().enumerate() {
                 match owners.get(item.id) {
                     Some((shard, gen)) => {
@@ -509,7 +526,7 @@ impl Dispatch {
         for (shard, meta, rx) in waiting {
             match rx.recv_timeout(SYNC_TIMEOUT) {
                 Ok(Response::Batch { results, .. }) if results.len() == meta.len() => {
-                    let mut owners = self.owners.lock().unwrap();
+                    let mut owners = self.owners_locked();
                     for (&(k, item_id, gen), r) in meta.iter().zip(results) {
                         if r.is_ok() {
                             owners.remove_if(item_id, gen);
@@ -551,7 +568,9 @@ impl Dispatch {
 
     /// Signal every thread to stop (idempotent).
     fn initiate_stop(&self) {
-        self.shutdown.store(true, Ordering::SeqCst);
+        // invariant: plain latch, Release store / Acquire loads; no data
+        // is published through the flag itself
+        self.shutdown.store(true, Ordering::Release);
         let _ = self.merge_tx.send(MergeCmd::Stop);
         for tx in &self.shard_txs {
             let _ = tx.send(ShardMsg::Stop);
@@ -587,6 +606,8 @@ impl ShardedEngine {
         let local = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(Metrics::new());
+        // invariant: configuration constant written once before any
+        // reader thread starts; Relaxed is sufficient
         metrics.workers.store(workers as u64, Ordering::Relaxed);
 
         let build = Arc::new(build);
@@ -642,7 +663,9 @@ impl ShardedEngine {
                 .name("pb-accept".into())
                 .spawn(move || {
                     for conn in listener.incoming() {
-                        if shutdown.load(Ordering::SeqCst) {
+                        // invariant: Acquire pairs with the Release
+                        // latch store in initiate_stop
+                        if shutdown.load(Ordering::Acquire) {
                             break;
                         }
                         let Ok(stream) = conn else { continue };
@@ -673,7 +696,9 @@ impl ShardedEngine {
 
     /// True once a client issued `shutdown` or `stop` was called.
     pub fn is_shutdown(&self) -> bool {
-        self.shutdown.load(Ordering::SeqCst)
+        // invariant: Acquire pairs with the Release latch store in
+        // initiate_stop
+        self.shutdown.load(Ordering::Acquire)
     }
 
     /// Request shutdown and join all threads.
@@ -761,6 +786,7 @@ fn merger_loop(
                     let _ = ack.send(Response::Sync {
                         id,
                         synced_shards: shards,
+                        // invariant: monotone monitoring counter, Relaxed
                         merges: metrics.merges.load(Ordering::Relaxed),
                     });
                 }
@@ -821,6 +847,7 @@ fn merger_loop(
                     )
                 } else {
                     let (t, r) = mpsc::channel();
+                    // lint: allow(index) reason="workers >= 1, shard 0 always exists"
                     if shard_txs[0]
                         .send(ShardMsg::Job(Job {
                             req: req.clone(),
@@ -905,6 +932,7 @@ fn broadcast_acks(
 /// approximation under sustained overload; budget enforcement is
 /// unaffected (costs flow through the realtime shared ledger, never
 /// through merge cycles).
+// lint: allow(index) reason="base is max_by_key over 0..reports.len(); reporter ids come from enumerate()"
 fn run_cycle(
     shard_txs: &[mpsc::Sender<ShardMsg>],
     metrics: &Arc<Metrics>,
@@ -948,6 +976,7 @@ fn run_cycle(
     for &shard in &reporters {
         let _ = shard_txs[shard].send(ShardMsg::Adopt(epoch, global.clone()));
     }
+    // invariant: monotone monitoring counter, Relaxed by design
     metrics.merges.fetch_add(1, Ordering::Relaxed);
     reporters
 }
@@ -959,7 +988,9 @@ fn handle_conn(stream: TcpStream, dispatch: Arc<Dispatch>) {
     };
     let reader = BufReader::new(stream);
     for line in reader.lines() {
-        if dispatch.shutdown.load(Ordering::SeqCst) {
+        // invariant: Acquire pairs with the Release latch store in
+        // initiate_stop
+        if dispatch.shutdown.load(Ordering::Acquire) {
             break;
         }
         let Ok(line) = line else { break };

@@ -1,9 +1,23 @@
 //! Serving metrics: counters, spend accounting and latency histograms.
+//!
+//! Concurrency notes (checked by `paretobandit lint`, rule `atomics`):
+//! every counter here is monitoring-grade — independently monotone, read
+//! for reports that tolerate small cross-counter skew — so loads and
+//! stores are `Relaxed` except where a comment states a stronger pairing.
+//! Mutex-guarded accumulators use poison-tolerant locking: a panicking
+//! holder cannot leave them mid-update (plain `+=` on plain values), and
+//! monitoring must keep serving even if one reporter died.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 
 use crate::util::json::Json;
+
+/// Poison-tolerant lock (see module docs): recover the guard rather than
+/// propagating a panic from another monitoring thread.
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Fixed-boundary log-scale latency histogram (microseconds).
 pub struct LatencyHisto {
@@ -32,19 +46,28 @@ impl LatencyHisto {
         }
     }
 
+    // lint: allow(index) reason="idx <= bounds.len() by construction and counts has bounds.len()+1 slots"
     pub fn observe_us(&self, us: f64) {
         let idx = self
             .bounds
             .iter()
             .position(|&b| us <= b)
             .unwrap_or(self.bounds.len());
+        // invariant: bucket add is Relaxed but ordered before the n add
+        // by the Release below — see count()
         self.counts[idx].fetch_add(1, Ordering::Relaxed);
-        self.n.fetch_add(1, Ordering::Relaxed);
-        *self.sum_us.lock().unwrap() += us;
+        // invariant: Release publishes the bucket increment before n;
+        // paired with the Acquire in count() so a percentile reader never
+        // observes n ahead of the bucket sums it will scan
+        self.n.fetch_add(1, Ordering::Release);
+        *relock(&self.sum_us) += us;
     }
 
     pub fn count(&self) -> u64 {
-        self.n.load(Ordering::Relaxed)
+        // invariant: Acquire pairs with the Release fetch_add in
+        // observe_us — every increment counted here has its bucket add
+        // visible, so percentile targets stay reachable
+        self.n.load(Ordering::Acquire)
     }
 
     pub fn mean_us(&self) -> f64 {
@@ -52,10 +75,11 @@ impl LatencyHisto {
         if n == 0 {
             return 0.0;
         }
-        *self.sum_us.lock().unwrap() / n as f64
+        *relock(&self.sum_us) / n as f64
     }
 
     /// Approximate percentile from the histogram (upper bound of bucket).
+    // lint: allow(index) reason="i < bounds.len() checked on the line above the access"
     pub fn percentile_us(&self, p: f64) -> f64 {
         let n = self.count();
         if n == 0 {
@@ -64,6 +88,9 @@ impl LatencyHisto {
         let target = (p / 100.0 * n as f64).ceil() as u64;
         let mut acc = 0u64;
         for (i, c) in self.counts.iter().enumerate() {
+            // invariant: Relaxed bucket reads are safe — count()'s
+            // Acquire already guarantees the adds behind target are
+            // visible; later concurrent adds only raise acc
             acc += c.load(Ordering::Relaxed);
             if acc >= target {
                 return if i < self.bounds.len() {
@@ -179,7 +206,7 @@ impl Metrics {
     /// Record the active policy's display name (idempotent; every shard
     /// of an engine reports the same configuration).
     pub fn set_policy(&self, name: &str) {
-        let mut p = self.policy.lock().unwrap();
+        let mut p = relock(&self.policy);
         if p.as_str() != name {
             *p = name.to_string();
         }
@@ -187,21 +214,26 @@ impl Metrics {
 
     /// Pacer dual λ at the last routed request.
     pub fn lambda(&self) -> f64 {
+        // invariant: λ is a single self-contained word (f64 bits); the
+        // report tolerates reading one routed request behind
         f64::from_bits(self.lambda_bits.load(Ordering::Relaxed))
     }
 
+    // lint: allow(index) reason="per-arm/per-shard vectors are resized to fit directly above each access"
     pub fn record_route(&self, shard: usize, arm: usize, route_us: f64, e2e_us: f64, lambda: f64) {
+        // invariant: independent monotone monitoring counters, Relaxed
+        // by design (module docs); no reader infers cross-counter order
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.lambda_bits.store(lambda.to_bits(), Ordering::Relaxed);
         self.route_latency.observe_us(route_us);
         self.e2e_latency.observe_us(e2e_us);
-        let mut pa = self.per_arm.lock().unwrap();
+        let mut pa = relock(&self.per_arm);
         if pa.len() <= arm {
             pa.resize(arm + 1, 0);
         }
         pa[arm] += 1;
         drop(pa);
-        let mut ps = self.per_shard.lock().unwrap();
+        let mut ps = relock(&self.per_shard);
         if ps.len() <= shard {
             ps.resize(shard + 1, 0);
         }
@@ -209,14 +241,16 @@ impl Metrics {
     }
 
     pub fn record_feedback(&self, reward: f64, cost: f64) {
+        // invariant: monotone monitoring counter, Relaxed by design
         self.feedbacks.fetch_add(1, Ordering::Relaxed);
-        *self.spend.lock().unwrap() += cost;
-        *self.reward_sum.lock().unwrap() += reward;
+        *relock(&self.spend) += cost;
+        *relock(&self.reward_sum) += reward;
     }
 
     /// One shadow routing decision for the shadow at `idx`.
+    // lint: allow(index) reason="v is resized to idx+1 entries directly above the access"
     pub fn shadow_route(&self, idx: usize, name: &str) {
-        let mut v = self.shadow_stats.lock().unwrap();
+        let mut v = relock(&self.shadow_stats);
         if v.len() <= idx {
             v.resize_with(idx + 1, Default::default);
         }
@@ -229,6 +263,7 @@ impl Metrics {
 
     /// Counterfactual score for the shadow at `idx`: `reward` is `Some`
     /// only when the shadow's decision matched the served arm.
+    // lint: allow(index) reason="v is resized to idx+1 entries directly above the access"
     pub fn shadow_feedback(
         &self,
         idx: usize,
@@ -237,7 +272,7 @@ impl Metrics {
         est_cost: f64,
         lambda: f64,
     ) {
-        let mut v = self.shadow_stats.lock().unwrap();
+        let mut v = relock(&self.shadow_stats);
         if v.len() <= idx {
             v.resize_with(idx + 1, Default::default);
         }
@@ -254,13 +289,16 @@ impl Metrics {
     /// The `compare` report: served policy vs every shadow's
     /// counterfactual series.
     pub fn compare_report(&self) -> Json {
+        // invariant: Relaxed monitoring reads (module docs) — the report
+        // tolerates small skew between independently updated counters
         let nf = self.feedbacks.load(Ordering::Relaxed);
-        let spend = *self.spend.lock().unwrap();
-        let rsum = *self.reward_sum.lock().unwrap();
+        let requests = self.requests.load(Ordering::Relaxed);
+        let spend = *relock(&self.spend);
+        let rsum = *relock(&self.reward_sum);
         let served = Json::obj(vec![
-            ("policy", Json::Str(self.policy.lock().unwrap().clone())),
+            ("policy", Json::Str(relock(&self.policy).clone())),
             ("lambda", Json::Num(self.lambda())),
-            ("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
+            ("requests", Json::Num(requests as f64)),
             (
                 "mean_reward",
                 Json::Num(if nf > 0 { rsum / nf as f64 } else { 0.0 }),
@@ -270,10 +308,7 @@ impl Metrics {
                 Json::Num(if nf > 0 { spend / nf as f64 } else { 0.0 }),
             ),
         ]);
-        let shadows = self
-            .shadow_stats
-            .lock()
-            .unwrap()
+        let shadows = relock(&self.shadow_stats)
             .iter()
             .map(ShadowStat::to_json)
             .collect();
@@ -281,13 +316,21 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> Json {
+        // invariant: Relaxed monitoring reads (module docs) — counters
+        // are independently monotone; the snapshot tolerates skew
         let nf = self.feedbacks.load(Ordering::Relaxed);
-        let spend = *self.spend.lock().unwrap();
-        let rsum = *self.reward_sum.lock().unwrap();
+        let requests = self.requests.load(Ordering::Relaxed);
+        let errors = self.errors.load(Ordering::Relaxed);
+        // invariant: same Relaxed monitoring reads as above
+        let workers = self.workers.load(Ordering::Relaxed).max(1);
+        let merges = self.merges.load(Ordering::Relaxed);
+        let dropped = self.dropped_rewards.load(Ordering::Relaxed);
+        let spend = *relock(&self.spend);
+        let rsum = *relock(&self.reward_sum);
         Json::obj(vec![
-            ("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
+            ("requests", Json::Num(requests as f64)),
             ("feedbacks", Json::Num(nf as f64)),
-            ("errors", Json::Num(self.errors.load(Ordering::Relaxed) as f64)),
+            ("errors", Json::Num(errors as f64)),
             ("route_p50_us", Json::Num(self.route_latency.percentile_us(50.0))),
             ("route_p95_us", Json::Num(self.route_latency.percentile_us(95.0))),
             ("e2e_p50_us", Json::Num(self.e2e_latency.percentile_us(50.0))),
@@ -304,42 +347,30 @@ impl Metrics {
             (
                 "per_arm",
                 Json::Arr(
-                    self.per_arm
-                        .lock()
-                        .unwrap()
+                    relock(&self.per_arm)
                         .iter()
                         .map(|&c| Json::Num(c as f64))
                         .collect(),
                 ),
             ),
-            (
-                "workers",
-                Json::Num(self.workers.load(Ordering::Relaxed).max(1) as f64),
-            ),
-            ("merges", Json::Num(self.merges.load(Ordering::Relaxed) as f64)),
-            (
-                "dropped_rewards",
-                Json::Num(self.dropped_rewards.load(Ordering::Relaxed) as f64),
-            ),
+            ("workers", Json::Num(workers as f64)),
+            ("merges", Json::Num(merges as f64)),
+            ("dropped_rewards", Json::Num(dropped as f64)),
             (
                 "per_shard",
                 Json::Arr(
-                    self.per_shard
-                        .lock()
-                        .unwrap()
+                    relock(&self.per_shard)
                         .iter()
                         .map(|&c| Json::Num(c as f64))
                         .collect(),
                 ),
             ),
-            ("policy", Json::Str(self.policy.lock().unwrap().clone())),
+            ("policy", Json::Str(relock(&self.policy).clone())),
             ("lambda", Json::Num(self.lambda())),
             (
                 "shadows",
                 Json::Arr(
-                    self.shadow_stats
-                        .lock()
-                        .unwrap()
+                    relock(&self.shadow_stats)
                         .iter()
                         .map(ShadowStat::to_json)
                         .collect(),

@@ -55,6 +55,8 @@ impl Server {
     {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
+        // Release stores / Acquire loads: the flag is a plain latch (no
+        // data published through it); SeqCst would buy nothing here
         let shutdown = Arc::new(AtomicBool::new(false));
         let (tx, rx) = mpsc::channel::<Job>();
 
@@ -65,13 +67,13 @@ impl Server {
             .spawn(move || {
                 let mut state = build_state();
                 while let Ok(job) = rx.recv() {
-                    if wshutdown.load(Ordering::SeqCst) {
+                    if wshutdown.load(Ordering::Acquire) {
                         break;
                     }
                     let (resp, down) = state.handle(&job.req);
                     let _ = job.resp.send(resp);
                     if down {
-                        wshutdown.store(true, Ordering::SeqCst);
+                        wshutdown.store(true, Ordering::Release);
                         break;
                     }
                 }
@@ -84,7 +86,7 @@ impl Server {
             .name("pb-accept".into())
             .spawn(move || {
                 for conn in listener.incoming() {
-                    if ashutdown.load(Ordering::SeqCst) {
+                    if ashutdown.load(Ordering::Acquire) {
                         break;
                     }
                     let Ok(stream) = conn else { continue };
@@ -112,7 +114,7 @@ impl Server {
     }
 
     fn do_stop(&mut self) {
-        self.shutdown.store(true, Ordering::SeqCst);
+        self.shutdown.store(true, Ordering::Release);
         // sentinel job unblocks the worker even while client connections
         // (holding sender clones) are still open (the shutdown flag is
         // already set, so the worker exits before handling it)
@@ -145,7 +147,7 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Job>, shutdown: Arc<AtomicBoo
     };
     let reader = BufReader::new(stream);
     for line in reader.lines() {
-        if shutdown.load(Ordering::SeqCst) {
+        if shutdown.load(Ordering::Acquire) {
             break;
         }
         let Ok(line) = line else { break };

@@ -1,0 +1,202 @@
+//! Per-rule fixtures for `pallas-lint` plus the repo self-check.
+//!
+//! Each rule is exercised three ways where it makes sense: a positive hit
+//! on a minimal fixture, the same fixture silenced by a well-formed
+//! `lint: allow(...)` suppression, and (for atomics) the annotated form
+//! that passes outright.  The final test runs the real linter over this
+//! checkout and asserts it is clean against the committed
+//! `LINT_baseline.json` — the same gate CI applies with `lint --deny`.
+
+use paretobandit::analysis::rules::{check_file, check_protocol};
+use paretobandit::analysis::scan::scan_source;
+use paretobandit::analysis::{load_baseline, run_lint, Finding, BASELINE_FILE};
+
+/// A path inside the serving scope (panic + index rules apply).
+const SERVING: &str = "rust/src/server/fixture.rs";
+/// A path outside the serving scope and the designated atomic files.
+const UTIL: &str = "rust/src/util/fixture.rs";
+
+fn findings(path: &str, src: &str) -> Vec<Finding> {
+    check_file(&scan_source(path, src))
+}
+
+// ----------------------------------------------------------------------
+// panic-freedom
+
+#[test]
+fn panic_rule_fires_in_serving_scope_only() {
+    let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+    let f = findings(SERVING, src);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].rule, "panic");
+    assert_eq!(f[0].line, 2);
+    assert!(findings(UTIL, src).is_empty(), "panic rule leaked out of scope");
+}
+
+#[test]
+fn panic_rule_suppressed_by_allow_with_reason() {
+    let src = "fn f(x: Option<u32>) -> u32 {\n    // lint: allow(panic) reason=\"fixture\"\n    x.unwrap()\n}\n";
+    assert!(findings(SERVING, src).is_empty());
+}
+
+#[test]
+fn unwrap_or_else_does_not_match_the_unwrap_token() {
+    let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap_or_else(|| 0)\n}\n";
+    assert!(findings(SERVING, src).is_empty());
+}
+
+#[test]
+fn reasonless_allow_is_flagged_and_suppresses_nothing() {
+    let src = "fn f(x: Option<u32>) -> u32 {\n    // lint: allow(panic)\n    x.unwrap()\n}\n";
+    let f = findings(SERVING, src);
+    assert!(f.iter().any(|x| x.rule == "suppression"), "{f:?}");
+    assert!(f.iter().any(|x| x.rule == "panic"), "{f:?}");
+}
+
+#[test]
+fn cfg_test_regions_are_exempt() {
+    let src = "#[cfg(test)]\nmod tests {\n    fn f(x: Option<u32>) -> u32 {\n        x.unwrap()\n    }\n}\n";
+    assert!(findings(SERVING, src).is_empty());
+}
+
+// ----------------------------------------------------------------------
+// indexing
+
+#[test]
+fn index_rule_fires_and_get_is_clean() {
+    let f = findings(SERVING, "fn f(xs: &[u32]) -> u32 {\n    xs[0]\n}\n");
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].rule, "index");
+    let ok = "fn f(xs: &[u32]) -> u32 {\n    xs.get(0).copied().unwrap_or(0)\n}\n";
+    assert!(findings(SERVING, ok).is_empty());
+}
+
+#[test]
+fn index_rule_suppressed_by_fn_level_allow() {
+    let src = "// lint: allow(index) reason=\"fixture: i is always in bounds\"\nfn f(xs: &[u32], i: usize) -> u32 {\n    xs[i]\n}\n";
+    assert!(findings(SERVING, src).is_empty());
+}
+
+// ----------------------------------------------------------------------
+// atomic-ordering discipline
+
+#[test]
+fn atomic_sites_in_designated_files_need_invariant_comments() {
+    let bare = "fn f(n: &std::sync::atomic::AtomicU64) -> u64 {\n    n.load(std::sync::atomic::Ordering::Acquire)\n}\n";
+    let f = findings("rust/src/pacer/shared.rs", bare);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].rule, "atomics");
+    let annotated = "fn f(n: &std::sync::atomic::AtomicU64) -> u64 {\n    // invariant: fixture pairing note\n    n.load(std::sync::atomic::Ordering::Acquire)\n}\n";
+    assert!(findings("rust/src/pacer/shared.rs", annotated).is_empty());
+}
+
+#[test]
+fn relaxed_and_seqcst_flagged_outside_designated_files() {
+    let relaxed = "fn f(n: &std::sync::atomic::AtomicU64) -> u64 {\n    n.load(std::sync::atomic::Ordering::Relaxed)\n}\n";
+    let f = findings(UTIL, relaxed);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].rule, "atomics");
+    // acquire/release orderings are fine anywhere
+    let acquire = relaxed.replace("Relaxed", "Acquire");
+    assert!(findings(UTIL, &acquire).is_empty());
+    // and an allow with a reason silences a deliberate Relaxed
+    let allowed = "fn f(n: &std::sync::atomic::AtomicU64) -> u64 {\n    // lint: allow(atomics) reason=\"fixture: monotone counter\"\n    n.load(std::sync::atomic::Ordering::Relaxed)\n}\n";
+    assert!(findings(UTIL, allowed).is_empty());
+}
+
+// ----------------------------------------------------------------------
+// hot-path allocation ban
+
+#[test]
+fn no_alloc_marker_bans_allocation_inside_the_fn() {
+    let marked = "// lint: no_alloc\nfn hot(xs: &[f64]) -> Vec<f64> {\n    xs.to_vec()\n}\n";
+    let f = findings("rust/src/linalg/fixture.rs", marked);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].rule, "no_alloc");
+    // the very same body without the marker is none of the linter's business
+    let unmarked = "fn cold(xs: &[f64]) -> Vec<f64> {\n    xs.to_vec()\n}\n";
+    assert!(findings("rust/src/linalg/fixture.rs", unmarked).is_empty());
+}
+
+#[test]
+fn no_alloc_span_ends_with_the_fn() {
+    let src = "// lint: no_alloc\nfn hot(xs: &mut [f64]) {\n    xs.sort_unstable_by(f64::total_cmp);\n}\n\nfn after(xs: &[f64]) -> Vec<f64> {\n    xs.to_vec()\n}\n";
+    assert!(findings("rust/src/linalg/fixture.rs", src).is_empty());
+}
+
+// ----------------------------------------------------------------------
+// wire-protocol exhaustiveness
+
+const PROTO_SRC: &str =
+    "fn parse(op: &str) -> u32 {\n    match op {\n        \"route\" => 1,\n        _ => 0,\n    }\n}\n";
+
+fn proto_findings(client_src: &str, readme: &str) -> Vec<Finding> {
+    let scans = vec![
+        scan_source("rust/src/server/proto.rs", PROTO_SRC),
+        scan_source(
+            "rust/src/server/api.rs",
+            "fn d(r: Request) {\n    let _ = matches!(r, Request::Route);\n}\n",
+        ),
+        scan_source("rust/src/client.rs", client_src),
+    ];
+    check_protocol(&scans, readme)
+}
+
+#[test]
+fn proto_rule_checks_client_methods_and_readme_rows() {
+    let client = "pub fn route(x: u32) -> u32 {\n    x\n}\n";
+    let row = "| `route` | one routing decision |";
+    assert!(proto_findings(client, row).is_empty());
+
+    let f = proto_findings("fn unrelated() {}\n", row);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].rule, "proto");
+    assert!(f[0].msg.contains("ParetoClient"), "{}", f[0].msg);
+
+    let f = proto_findings(client, "no protocol table here");
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert!(f[0].msg.contains("README"), "{}", f[0].msg);
+}
+
+#[test]
+fn proto_rule_accepts_generic_client_methods() {
+    let client = "pub fn route<S: AsRef<str>>(x: S) -> u32 {\n    1\n}\n";
+    assert!(proto_findings(client, "| `route` | one routing decision |").is_empty());
+}
+
+// ----------------------------------------------------------------------
+// repo self-check: the gate CI applies
+
+#[test]
+fn repository_is_clean_against_the_committed_baseline() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = run_lint(root).expect("lint run over the checkout");
+    let baseline_path = root.join(BASELINE_FILE);
+    let baseline = load_baseline(baseline_path.to_str().expect("utf-8 path"))
+        .expect("parse committed baseline");
+    let viols: Vec<String> = report
+        .violations(&baseline)
+        .iter()
+        .map(|v| format!("{}: {} > allowance {}", v.key, v.current, v.baseline))
+        .collect();
+    assert!(viols.is_empty(), "baseline exceeded:\n{}", viols.join("\n"));
+
+    // acceptance areas hold a hard zero, not a baselined allowance
+    for f in &report.findings {
+        assert!(
+            !f.file.ends_with("server/api.rs")
+                && !f.file.ends_with("server/serve.rs")
+                && !f.file.ends_with("pacer/shared.rs"),
+            "acceptance-critical file regressed: {}:{} [{}] {}",
+            f.file,
+            f.line,
+            f.rule,
+            f.msg
+        );
+        assert_ne!(
+            f.rule, "no_alloc",
+            "hot-path fn allocates: {}:{} {}",
+            f.file, f.line, f.msg
+        );
+    }
+}
