@@ -13,6 +13,7 @@
 //!   route_batch_64   same, batch of 64 (per-call)
 //!   route_batch_512  same, batch of 512 (per-call)
 //!   ucb_sweep_1024   one decision over a 1024-arm portfolio (scoring sweep)
+//!   log_append       one decision-log `append_decision` frame (capture tax)
 //!   merge_cycle      4-shard feedback_batch + export/merge/adopt cycle
 //!
 //! Run: `cargo bench --bench routing_hot`.  Env overrides:
@@ -25,6 +26,7 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+use paretobandit::log::{CaptureMeta, LogWriter, DEFAULT_SEGMENT_BYTES};
 use paretobandit::router::{
     FeedbackEvent, ParetoRouter, PolicyHost, Prior, RouteDecision, RouterConfig,
 };
@@ -128,6 +130,39 @@ fn bench_ucb_sweep_1024(samples: usize) -> BenchStats {
     })
 }
 
+fn bench_log_append(samples: usize) -> BenchStats {
+    // the capture tax a `serve --log-dir` deployment pays per decision:
+    // stage one frame in the reused scratch buffer, crc it, push it
+    // through the BufWriter (no fsync on the hot path)
+    let dir = std::env::temp_dir().join(format!("pb_bench_log_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let meta = CaptureMeta {
+        shard: 0,
+        d: D as u32,
+        seed: 18,
+        budget: Some(BUDGET),
+        policy: "paretobandit".to_string(),
+        warm: false,
+        models: Vec::new(),
+    };
+    let mut w = LogWriter::create(&dir, meta, DEFAULT_SEGMENT_BYTES).expect("bench log writer");
+    let xs = contexts(256, 19);
+    let eligible = [0usize, 1, 2];
+    let blended = [0.1, 0.9, 5.6];
+    let c_tilde = [0.09, 0.85, 5.0];
+    let mut i = 0u64;
+    let stats = bench_batched(200, samples, 64, || {
+        let x = &xs[i as usize % xs.len()];
+        w.append_decision(i, i, 0.4, 1, false, 3, x, &eligible, &blended, &c_tilde)
+            .expect("append");
+        black_box(i);
+        i += 1;
+    });
+    drop(w);
+    let _ = std::fs::remove_dir_all(&dir);
+    stats
+}
+
 fn bench_merge_cycle(samples: usize) -> BenchStats {
     const SHARDS: usize = 4;
     const EVENTS_PER_SHARD: usize = 256;
@@ -196,6 +231,7 @@ fn main() {
     run("route_batch_64", bench_route_batch(64, samples));
     run("route_batch_512", bench_route_batch(512, samples));
     run("ucb_sweep_1024", bench_ucb_sweep_1024(samples));
+    run("log_append", bench_log_append(samples));
     run("merge_cycle", bench_merge_cycle(samples));
 
     // load the committed baseline BEFORE merge_write clobbers it (the

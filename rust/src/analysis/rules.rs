@@ -74,6 +74,7 @@ fn serving_scope(path: &str) -> bool {
     path.starts_with("rust/src/server/")
         || path.starts_with("rust/src/router/")
         || path.starts_with("rust/src/pacer/")
+        || path.starts_with("rust/src/log/")
         || path == "rust/src/client.rs"
 }
 
@@ -402,6 +403,7 @@ mod tests {
     fn serving_scope_paths() {
         assert!(serving_scope("rust/src/server/api.rs"));
         assert!(serving_scope("rust/src/client.rs"));
+        assert!(serving_scope("rust/src/log/segment.rs"));
         assert!(!serving_scope("rust/src/linalg/chol.rs"));
         assert!(!serving_scope("rust/src/analysis/rules.rs"));
     }

@@ -47,6 +47,7 @@ pub mod bandit;
 pub mod client;
 pub mod exp;
 pub mod linalg;
+pub mod log;
 pub mod pacer;
 pub mod router;
 pub mod runtime;

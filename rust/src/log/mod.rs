@@ -1,0 +1,32 @@
+//! Per-shard append-only decision logs + deterministic offline replay.
+//!
+//! Capture (`serve --log-dir DIR`): every worker shard appends its
+//! routing decisions, realised feedback and admin events to its own
+//! segment files as compact crc-guarded binary frames, stamped from one
+//! process-wide sequence clock so the cross-shard arrival order that
+//! drove the shared budget ledger is recoverable.  The append path is
+//! allocation-free after warmup (asserted by `tests/alloc_probe.rs`) and
+//! never panics or perturbs serving — a failed append only bumps the
+//! `log_errors` metric.
+//!
+//! Replay (`paretobandit replay --log-dir DIR`): [`replay_policy`] drives
+//! any registered [`crate::router::PolicyBuilder`] policy through a
+//! captured log counterfactually under the same scoring rules as
+//! `serve --shadow` — matched decisions absorb the realised feedback,
+//! diverging ones are charged declared prices — and [`export_priors`]
+//! folds the fitted per-shard posteriors into one snapshot loadable via
+//! `serve --restore`.  Record schema, rotation and the replay workflow
+//! are documented in `docs/replay.md`.
+
+mod record;
+mod replay;
+mod segment;
+
+pub use record::{
+    AdminOp, AdminRec, CaptureMeta, DecisionRec, EligibleSlot, FeedbackRec, ModelMeta, Record,
+};
+pub use replay::{export_priors, replay_policy, Divergence, PolicyReplay};
+pub use segment::{
+    read_log_dir, read_segment, CapturedLog, LogWriter, SegmentRead, ShardStream,
+    DEFAULT_SEGMENT_BYTES,
+};

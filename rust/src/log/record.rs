@@ -1,0 +1,719 @@
+//! Log record payloads — the bytes inside one crc-guarded frame.
+//!
+//! Layout is little-endian throughout: a one-byte record tag, then the
+//! fields in declaration order.  Strings are u32-length-prefixed UTF-8,
+//! vectors u32-count-prefixed, `Option` fields a one-byte presence flag,
+//! f64 as raw IEEE bits (bit-exact round-trip — replay compares λ at the
+//! bit level).  [`Record::encode`] / [`Record::decode`] round-trip
+//! exactly (property-tested in `tests/decision_log.rs`);
+//! [`encode_decision_into`] / [`encode_feedback_into`] emit the same
+//! bytes straight from borrowed slices for the writer's allocation-free
+//! append path (byte equivalence asserted below).
+
+const TAG_HEADER: u8 = 0;
+const TAG_DECISION: u8 = 1;
+const TAG_FEEDBACK: u8 = 2;
+const TAG_ADMIN: u8 = 3;
+
+const OP_ADD_MODEL: u8 = 0;
+const OP_DELETE_MODEL: u8 = 1;
+const OP_REPRICE: u8 = 2;
+const OP_SET_BUDGET: u8 = 3;
+const OP_RESTORE: u8 = 4;
+const OP_SYNC_BARRIER: u8 = 5;
+
+/// One initial-portfolio entry in a segment header (`None` in the
+/// slot-aligned list marks a tombstoned slot of a warm capture).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelMeta {
+    pub name: String,
+    pub price_in: f64,
+    pub price_out: f64,
+    /// optional `(n_eff, r0)` heuristic prior
+    pub prior: Option<(f64, f64)>,
+}
+
+/// Segment header: everything replay needs to rebuild this shard's host
+/// exactly as `serve` built it (policy spec, dimensionality, seed,
+/// budget, slot-aligned starting portfolio).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CaptureMeta {
+    pub shard: u32,
+    /// context dimensionality
+    pub d: u32,
+    /// the shard host's RNG seed
+    pub seed: u64,
+    /// $/request budget (`None` = unbudgeted)
+    pub budget: Option<f64>,
+    /// builder spec string (`name[:arg]`) the capture served
+    pub policy: String,
+    /// capture started from `serve --restore`: the slot layout below is
+    /// the restored portfolio (prior-less) and an exact cold rebuild —
+    /// hence bit-identical replay — is not possible
+    pub warm: bool,
+    /// slot-aligned starting portfolio; `None` = tombstoned slot
+    pub models: Vec<Option<ModelMeta>>,
+}
+
+/// One slot of the eligible set at decision time, with the declared
+/// prices the host advertised for it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EligibleSlot {
+    pub slot: u32,
+    /// declared blended $/1k-token price
+    pub blended: f64,
+    /// frozen c̃ cost snapshot
+    pub c_tilde: f64,
+}
+
+/// One routing decision.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DecisionRec {
+    /// global capture sequence number (process-wide append clock)
+    pub seq: u64,
+    /// host step clock observed after the decision (informational —
+    /// replay derives its own clock)
+    pub t: u64,
+    pub request_id: u64,
+    /// pacer dual λ the decision was taken under
+    pub lambda: f64,
+    /// served slot id
+    pub arm: u32,
+    /// decision was forced (burn-in / circuit breaker)
+    pub forced: bool,
+    /// eligible-set size the policy reported
+    pub n_eligible: u32,
+    /// request features
+    pub x: Vec<f64>,
+    /// host-advisory eligible set with declared prices
+    pub eligible: Vec<EligibleSlot>,
+}
+
+/// Realised feedback for one served decision.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FeedbackRec {
+    pub seq: u64,
+    pub request_id: u64,
+    /// slot id the feedback settled on (the served arm)
+    pub arm: u32,
+    pub reward: f64,
+    pub cost: f64,
+    /// the serving shard queued the reward for its merge cycle (sharded
+    /// mode) instead of applying it immediately
+    pub queued: bool,
+}
+
+/// One admin-plane event, logged by every shard it was applied to.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AdminOp {
+    AddModel {
+        name: String,
+        price_in: f64,
+        price_out: f64,
+        prior: Option<(f64, f64)>,
+    },
+    DeleteModel {
+        slot: u32,
+    },
+    Reprice {
+        slot: u32,
+        price_in: f64,
+        price_out: f64,
+    },
+    SetBudget {
+        budget: f64,
+    },
+    /// a snapshot restore replaced this shard's learned state; replay
+    /// cannot follow it and stops here
+    Restore,
+    /// queued rewards folded into the posterior (merge cycle / sync);
+    /// replay mirrors the fold at the same point in the stream
+    SyncBarrier,
+}
+
+/// [`AdminOp`] plus its place on the capture clock.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdminRec {
+    pub seq: u64,
+    pub op: AdminOp,
+}
+
+/// One log record (a decoded frame payload).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Record {
+    Header(CaptureMeta),
+    Decision(DecisionRec),
+    Feedback(FeedbackRec),
+    Admin(AdminRec),
+}
+
+impl Record {
+    /// Global capture sequence (0 for headers, which sit outside the
+    /// record stream).
+    pub fn seq(&self) -> u64 {
+        match self {
+            Record::Header(_) => 0,
+            Record::Decision(d) => d.seq,
+            Record::Feedback(f) => f.seq,
+            Record::Admin(a) => a.seq,
+        }
+    }
+
+    /// Append this record's payload bytes to `buf`.
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            Record::Header(m) => encode_header(buf, m),
+            Record::Decision(d) => {
+                buf.push(TAG_DECISION);
+                put_u64(buf, d.seq);
+                put_u64(buf, d.t);
+                put_u64(buf, d.request_id);
+                put_f64(buf, d.lambda);
+                put_u32(buf, d.arm);
+                put_bool(buf, d.forced);
+                put_u32(buf, d.n_eligible);
+                put_u32(buf, d.x.len() as u32);
+                for &v in &d.x {
+                    put_f64(buf, v);
+                }
+                put_u32(buf, d.eligible.len() as u32);
+                for e in &d.eligible {
+                    put_u32(buf, e.slot);
+                    put_f64(buf, e.blended);
+                    put_f64(buf, e.c_tilde);
+                }
+            }
+            Record::Feedback(f) => {
+                encode_feedback_into(buf, f.seq, f.request_id, f.arm, f.reward, f.cost, f.queued)
+            }
+            Record::Admin(a) => {
+                buf.push(TAG_ADMIN);
+                put_u64(buf, a.seq);
+                match &a.op {
+                    AdminOp::AddModel {
+                        name,
+                        price_in,
+                        price_out,
+                        prior,
+                    } => {
+                        buf.push(OP_ADD_MODEL);
+                        put_str(buf, name);
+                        put_f64(buf, *price_in);
+                        put_f64(buf, *price_out);
+                        put_opt_pair(buf, *prior);
+                    }
+                    AdminOp::DeleteModel { slot } => {
+                        buf.push(OP_DELETE_MODEL);
+                        put_u32(buf, *slot);
+                    }
+                    AdminOp::Reprice {
+                        slot,
+                        price_in,
+                        price_out,
+                    } => {
+                        buf.push(OP_REPRICE);
+                        put_u32(buf, *slot);
+                        put_f64(buf, *price_in);
+                        put_f64(buf, *price_out);
+                    }
+                    AdminOp::SetBudget { budget } => {
+                        buf.push(OP_SET_BUDGET);
+                        put_f64(buf, *budget);
+                    }
+                    AdminOp::Restore => buf.push(OP_RESTORE),
+                    AdminOp::SyncBarrier => buf.push(OP_SYNC_BARRIER),
+                }
+            }
+        }
+    }
+
+    /// Decode one frame payload.  The whole payload must be consumed —
+    /// trailing bytes mean a layout mismatch and are rejected.
+    pub fn decode(payload: &[u8]) -> Result<Record, String> {
+        let mut c = Cursor::new(payload);
+        let rec = match c.u8()? {
+            TAG_HEADER => Record::Header(decode_header(&mut c)?),
+            TAG_DECISION => {
+                let seq = c.u64()?;
+                let t = c.u64()?;
+                let request_id = c.u64()?;
+                let lambda = c.f64()?;
+                let arm = c.u32()?;
+                let forced = c.boolean()?;
+                let n_eligible = c.u32()?;
+                let nx = c.u32()? as usize;
+                let mut x = Vec::new();
+                for _ in 0..nx {
+                    x.push(c.f64()?);
+                }
+                let ne = c.u32()? as usize;
+                let mut eligible = Vec::new();
+                for _ in 0..ne {
+                    eligible.push(EligibleSlot {
+                        slot: c.u32()?,
+                        blended: c.f64()?,
+                        c_tilde: c.f64()?,
+                    });
+                }
+                Record::Decision(DecisionRec {
+                    seq,
+                    t,
+                    request_id,
+                    lambda,
+                    arm,
+                    forced,
+                    n_eligible,
+                    x,
+                    eligible,
+                })
+            }
+            TAG_FEEDBACK => Record::Feedback(FeedbackRec {
+                seq: c.u64()?,
+                request_id: c.u64()?,
+                arm: c.u32()?,
+                reward: c.f64()?,
+                cost: c.f64()?,
+                queued: c.boolean()?,
+            }),
+            TAG_ADMIN => {
+                let seq = c.u64()?;
+                let op = match c.u8()? {
+                    OP_ADD_MODEL => AdminOp::AddModel {
+                        name: c.string()?,
+                        price_in: c.f64()?,
+                        price_out: c.f64()?,
+                        prior: c.opt_pair()?,
+                    },
+                    OP_DELETE_MODEL => AdminOp::DeleteModel { slot: c.u32()? },
+                    OP_REPRICE => AdminOp::Reprice {
+                        slot: c.u32()?,
+                        price_in: c.f64()?,
+                        price_out: c.f64()?,
+                    },
+                    OP_SET_BUDGET => AdminOp::SetBudget { budget: c.f64()? },
+                    OP_RESTORE => AdminOp::Restore,
+                    OP_SYNC_BARRIER => AdminOp::SyncBarrier,
+                    other => return Err(format!("record: unknown admin op tag {other}")),
+                };
+                Record::Admin(AdminRec { seq, op })
+            }
+            other => return Err(format!("record: unknown record tag {other}")),
+        };
+        c.finish()?;
+        Ok(rec)
+    }
+}
+
+fn encode_header(buf: &mut Vec<u8>, m: &CaptureMeta) {
+    buf.push(TAG_HEADER);
+    put_u32(buf, m.shard);
+    put_u32(buf, m.d);
+    put_u64(buf, m.seed);
+    match m.budget {
+        Some(b) => {
+            put_bool(buf, true);
+            put_f64(buf, b);
+        }
+        None => put_bool(buf, false),
+    }
+    put_str(buf, &m.policy);
+    put_bool(buf, m.warm);
+    put_u32(buf, m.models.len() as u32);
+    for slot in &m.models {
+        match slot {
+            Some(mm) => {
+                put_bool(buf, true);
+                put_str(buf, &mm.name);
+                put_f64(buf, mm.price_in);
+                put_f64(buf, mm.price_out);
+                put_opt_pair(buf, mm.prior);
+            }
+            None => put_bool(buf, false),
+        }
+    }
+}
+
+fn decode_header(c: &mut Cursor) -> Result<CaptureMeta, String> {
+    let shard = c.u32()?;
+    let d = c.u32()?;
+    let seed = c.u64()?;
+    let budget = if c.boolean()? { Some(c.f64()?) } else { None };
+    let policy = c.string()?;
+    let warm = c.boolean()?;
+    let n = c.u32()? as usize;
+    let mut models = Vec::new();
+    for _ in 0..n {
+        if !c.boolean()? {
+            models.push(None);
+            continue;
+        }
+        let name = c.string()?;
+        let price_in = c.f64()?;
+        let price_out = c.f64()?;
+        let prior = c.opt_pair()?;
+        models.push(Some(ModelMeta {
+            name,
+            price_in,
+            price_out,
+            prior,
+        }));
+    }
+    Ok(CaptureMeta {
+        shard,
+        d,
+        seed,
+        budget,
+        policy,
+        warm,
+        models,
+    })
+}
+
+/// Encode a decision payload straight from borrowed slices — the
+/// writer's hot path.  Byte-identical to encoding the equivalent
+/// [`Record::Decision`] (asserted below): the eligible table pairs each
+/// slot id with the slot-aligned declared prices, 0.0 past either
+/// price slice's end (retired slots carry 0.0 there anyway).
+// lint: no_alloc
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn encode_decision_into(
+    buf: &mut Vec<u8>,
+    seq: u64,
+    t: u64,
+    request_id: u64,
+    lambda: f64,
+    arm: u32,
+    forced: bool,
+    n_eligible: u32,
+    x: &[f64],
+    eligible: &[usize],
+    blended: &[f64],
+    c_tilde: &[f64],
+) {
+    buf.push(TAG_DECISION);
+    put_u64(buf, seq);
+    put_u64(buf, t);
+    put_u64(buf, request_id);
+    put_f64(buf, lambda);
+    put_u32(buf, arm);
+    put_bool(buf, forced);
+    put_u32(buf, n_eligible);
+    put_u32(buf, x.len() as u32);
+    for &v in x {
+        put_f64(buf, v);
+    }
+    put_u32(buf, eligible.len() as u32);
+    for &slot in eligible {
+        put_u32(buf, slot as u32);
+        put_f64(buf, blended.get(slot).copied().unwrap_or(0.0));
+        put_f64(buf, c_tilde.get(slot).copied().unwrap_or(0.0));
+    }
+}
+
+/// Encode a feedback payload (hot path; byte-identical to the
+/// equivalent [`Record::Feedback`]).
+// lint: no_alloc
+pub(crate) fn encode_feedback_into(
+    buf: &mut Vec<u8>,
+    seq: u64,
+    request_id: u64,
+    arm: u32,
+    reward: f64,
+    cost: f64,
+    queued: bool,
+) {
+    buf.push(TAG_FEEDBACK);
+    put_u64(buf, seq);
+    put_u64(buf, request_id);
+    put_u32(buf, arm);
+    put_f64(buf, reward);
+    put_f64(buf, cost);
+    put_bool(buf, queued);
+}
+
+// ----------------------------------------------------------------------
+// primitive writers (push/extend only — safe inside no_alloc spans once
+// the target buffer's capacity has warmed up)
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    put_u64(buf, v.to_bits());
+}
+
+fn put_bool(buf: &mut Vec<u8>, v: bool) {
+    buf.push(v as u8);
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_opt_pair(buf: &mut Vec<u8>, v: Option<(f64, f64)>) {
+    match v {
+        Some((a, b)) => {
+            put_bool(buf, true);
+            put_f64(buf, a);
+            put_f64(buf, b);
+        }
+        None => put_bool(buf, false),
+    }
+}
+
+// ----------------------------------------------------------------------
+// primitive reader
+
+/// Bounds-checked little-endian reader over one frame payload.
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(b: &'a [u8]) -> Cursor<'a> {
+        Cursor { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        match self.b.get(self.pos..self.pos.saturating_add(n)) {
+            Some(s) => {
+                self.pos += n;
+                Ok(s)
+            }
+            None => Err(format!(
+                "record: payload short — wanted {n} bytes at offset {} of {}",
+                self.pos,
+                self.b.len()
+            )),
+        }
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        self.take(1)?
+            .first()
+            .copied()
+            .ok_or_else(|| "record: empty payload".to_string())
+    }
+
+    fn boolean(&mut self) -> Result<bool, String> {
+        Ok(self.u8()? != 0)
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        let a: [u8; 4] = self
+            .take(4)?
+            .try_into()
+            .map_err(|_| "record: bad u32".to_string())?;
+        Ok(u32::from_le_bytes(a))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        let a: [u8; 8] = self
+            .take(8)?
+            .try_into()
+            .map_err(|_| "record: bad u64".to_string())?;
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        let n = self.u32()? as usize;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec()).map_err(|_| "record: invalid utf-8".to_string())
+    }
+
+    fn opt_pair(&mut self) -> Result<Option<(f64, f64)>, String> {
+        if self.boolean()? {
+            Ok(Some((self.f64()?, self.f64()?)))
+        } else {
+            Ok(None)
+        }
+    }
+
+    fn finish(&self) -> Result<(), String> {
+        if self.pos == self.b.len() {
+            Ok(())
+        } else {
+            Err(format!(
+                "record: {} trailing bytes after a complete record",
+                self.b.len() - self.pos
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_meta() -> CaptureMeta {
+        CaptureMeta {
+            shard: 3,
+            d: 6,
+            seed: 45,
+            budget: Some(6.6e-4),
+            policy: "epsilon:0.2".into(),
+            warm: false,
+            models: vec![
+                Some(ModelMeta {
+                    name: "llama-3.1-8b".into(),
+                    price_in: 0.10,
+                    price_out: 0.10,
+                    prior: Some((25.0, 0.7)),
+                }),
+                None,
+                Some(ModelMeta {
+                    name: "gemini-2.5-pro".into(),
+                    price_in: 1.25,
+                    price_out: 10.0,
+                    prior: None,
+                }),
+            ],
+        }
+    }
+
+    #[test]
+    fn every_record_kind_roundtrips() {
+        let records = vec![
+            Record::Header(sample_meta()),
+            Record::Decision(DecisionRec {
+                seq: 17,
+                t: 4,
+                request_id: 99,
+                lambda: 0.125,
+                arm: 2,
+                forced: true,
+                n_eligible: 3,
+                x: vec![0.5, -1.0, f64::MIN_POSITIVE],
+                eligible: vec![
+                    EligibleSlot {
+                        slot: 0,
+                        blended: 0.1,
+                        c_tilde: 2.9e-5,
+                    },
+                    EligibleSlot {
+                        slot: 2,
+                        blended: 5.625,
+                        c_tilde: 1.5e-2,
+                    },
+                ],
+            }),
+            Record::Feedback(FeedbackRec {
+                seq: 18,
+                request_id: 99,
+                arm: 2,
+                reward: 0.875,
+                cost: 1.5e-2,
+                queued: true,
+            }),
+            Record::Admin(AdminRec {
+                seq: 19,
+                op: AdminOp::AddModel {
+                    name: "flash".into(),
+                    price_in: 0.3,
+                    price_out: 2.5,
+                    prior: Some((20.0, 0.5)),
+                },
+            }),
+            Record::Admin(AdminRec {
+                seq: 20,
+                op: AdminOp::Reprice {
+                    slot: 1,
+                    price_in: 0.2,
+                    price_out: 0.8,
+                },
+            }),
+            Record::Admin(AdminRec {
+                seq: 21,
+                op: AdminOp::DeleteModel { slot: 3 },
+            }),
+            Record::Admin(AdminRec {
+                seq: 22,
+                op: AdminOp::SetBudget { budget: 1e-3 },
+            }),
+            Record::Admin(AdminRec {
+                seq: 23,
+                op: AdminOp::Restore,
+            }),
+            Record::Admin(AdminRec {
+                seq: 24,
+                op: AdminOp::SyncBarrier,
+            }),
+        ];
+        for r in records {
+            let mut buf = Vec::new();
+            r.encode(&mut buf);
+            assert_eq!(Record::decode(&buf).unwrap(), r, "roundtrip of {r:?}");
+        }
+    }
+
+    #[test]
+    fn slice_encoders_match_struct_encoding() {
+        let blended = [0.1, 0.0, 5.625];
+        let c_tilde = [2.9e-5, 0.0, 1.5e-2];
+        let eligible = [0usize, 2usize];
+        let x = [0.25, -0.5, 3.0];
+        let mut fast = Vec::new();
+        encode_decision_into(&mut fast, 7, 3, 42, 0.5, 2, false, 2, &x, &eligible, &blended, &c_tilde);
+        let rec = Record::Decision(DecisionRec {
+            seq: 7,
+            t: 3,
+            request_id: 42,
+            lambda: 0.5,
+            arm: 2,
+            forced: false,
+            n_eligible: 2,
+            x: x.to_vec(),
+            eligible: eligible
+                .iter()
+                .map(|&s| EligibleSlot {
+                    slot: s as u32,
+                    blended: blended[s],
+                    c_tilde: c_tilde[s],
+                })
+                .collect(),
+        });
+        let mut slow = Vec::new();
+        rec.encode(&mut slow);
+        assert_eq!(fast, slow, "decision slice encoder drifted from Record::encode");
+
+        let mut fast = Vec::new();
+        encode_feedback_into(&mut fast, 8, 42, 2, 0.9, 1e-4, true);
+        let rec = Record::Feedback(FeedbackRec {
+            seq: 8,
+            request_id: 42,
+            arm: 2,
+            reward: 0.9,
+            cost: 1e-4,
+            queued: true,
+        });
+        let mut slow = Vec::new();
+        rec.encode(&mut slow);
+        assert_eq!(fast, slow, "feedback slice encoder drifted from Record::encode");
+    }
+
+    #[test]
+    fn decode_rejects_malformed_payloads() {
+        // unknown tag
+        assert!(Record::decode(&[9]).is_err());
+        // truncated payload
+        let mut buf = Vec::new();
+        Record::Header(sample_meta()).encode(&mut buf);
+        assert!(Record::decode(&buf[..buf.len() - 1]).is_err());
+        // trailing garbage
+        buf.push(0);
+        assert!(Record::decode(&buf).unwrap_err().contains("trailing"));
+        // empty
+        assert!(Record::decode(&[]).is_err());
+    }
+}

@@ -1,0 +1,357 @@
+//! Counterfactual replay: drive any registered builder policy through a
+//! captured decision log under the `serve --shadow` scoring rules.
+//!
+//! Each shard's host is rebuilt exactly as `serve` built it (policy
+//! spec, d, seed, starting portfolio with priors — all in the segment
+//! header), coupled to one shared budget ledger, and the merged record
+//! stream is applied in global capture order.  Matched decisions absorb
+//! the realised feedback; diverging ones are charged declared prices
+//! (see [`crate::server::ServerState`]'s shadow scoring).  Replaying the
+//! captured policy over a cold capture reproduces its decision sequence
+//! bit-identically as long as no merge cycle folded queued rewards
+//! *between* logged sync barriers — `tests/replay_conformance.rs`
+//! asserts this end to end; `docs/replay.md` spells out the caveats.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+use crate::pacer::{PacerConfig, SharedPacer};
+use crate::router::{build_policy, BuildCtx, FeedbackEvent, ModelSpec, PolicyHost};
+use crate::util::json::Json;
+
+use super::record::{AdminOp, CaptureMeta, Record};
+use super::segment::CapturedLog;
+
+/// One replayed decision that differed from the served one.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Divergence {
+    pub shard: u32,
+    pub seq: u64,
+    /// slot the capture served
+    pub served: u32,
+    /// slot the replayed policy picked
+    pub replayed: u32,
+}
+
+/// How many divergences are kept verbatim in the report.
+const MAX_DIVERGENCE_SAMPLES: usize = 8;
+
+/// Replay result for one policy spec.
+pub struct PolicyReplay {
+    /// the `name[:arg]` spec that was replayed
+    pub spec: String,
+    /// decisions replayed
+    pub decisions: u64,
+    /// feedback records scored against a replayed decision
+    pub scored: u64,
+    /// scored records where the replayed arm matched the served arm
+    pub matched: u64,
+    /// realised reward absorbed on matched decisions
+    pub reward_matched: f64,
+    /// estimated spend: realised cost on matches, declared prices on
+    /// divergences (the shadow-scoring rule)
+    pub est_spend: f64,
+    /// final dual λ after the replay
+    pub lambda: f64,
+    /// replayed decisions that diverged from the served arm
+    pub diverged: u64,
+    /// first few divergences, for diagnostics
+    pub divergences: Vec<Divergence>,
+    /// decisions whose recorded λ differed (at the bit level) from the
+    /// replayed λ — 0 means the pacer trajectory was reproduced exactly
+    pub lambda_drift: u64,
+    /// the capture hit a snapshot restore; replay stopped there
+    pub hit_restore: bool,
+    /// the fitted per-shard hosts (prior export, further inspection)
+    hosts: Vec<(u32, PolicyHost)>,
+}
+
+impl PolicyReplay {
+    /// Stable summary document (the conformance goldens compare these).
+    pub fn to_json(&self) -> Json {
+        let match_rate = if self.scored > 0 {
+            self.matched as f64 / self.scored as f64
+        } else {
+            0.0
+        };
+        let mean_reward = if self.matched > 0 {
+            self.reward_matched / self.matched as f64
+        } else {
+            0.0
+        };
+        let est_mean_cost = if self.scored > 0 {
+            self.est_spend / self.scored as f64
+        } else {
+            0.0
+        };
+        Json::obj(vec![
+            ("policy", Json::Str(self.spec.clone())),
+            ("decisions", Json::Num(self.decisions as f64)),
+            ("scored", Json::Num(self.scored as f64)),
+            ("matched", Json::Num(self.matched as f64)),
+            ("match_rate", Json::Num(match_rate)),
+            ("mean_reward_matched", Json::Num(mean_reward)),
+            ("est_spend", Json::Num(self.est_spend)),
+            ("est_mean_cost", Json::Num(est_mean_cost)),
+            ("lambda", Json::Num(self.lambda)),
+            ("diverged", Json::Num(self.diverged as f64)),
+            ("lambda_drift", Json::Num(self.lambda_drift as f64)),
+            ("hit_restore", Json::Bool(self.hit_restore)),
+        ])
+    }
+}
+
+/// A routed-but-not-yet-scored request during replay.
+struct PendingReplay {
+    /// slot the capture served
+    served: u32,
+    /// slot the replayed policy picked
+    replayed: usize,
+    /// declared blended price of the served slot at decision time (from
+    /// the decision record's eligible table)
+    served_blended: f64,
+    x: Vec<f64>,
+}
+
+/// Rebuild one shard's host the way `serve` built it.  Cold captures
+/// (fresh portfolio in the header, priors included) rebuild
+/// bit-identically; warm captures (`serve --restore`) only recover the
+/// slot layout via [`PolicyHost::sync_portfolio`] — their learned state
+/// is gone, so decision-level identity is not expected.
+fn build_host(spec: &str, meta: &CaptureMeta, budget: Option<f64>) -> Result<PolicyHost, String> {
+    let cold = !meta.warm && meta.models.iter().all(|m| m.is_some());
+    if cold {
+        let models: Vec<ModelSpec> = meta
+            .models
+            .iter()
+            .flatten()
+            .map(|m| {
+                let spec = ModelSpec::new(&m.name, m.price_in, m.price_out);
+                match m.prior {
+                    Some((n_eff, r0)) => spec.with_prior(n_eff, r0),
+                    None => spec,
+                }
+            })
+            .collect();
+        return build_policy(
+            spec,
+            &BuildCtx {
+                d: meta.d as usize,
+                budget,
+                seed: meta.seed,
+                models: &models,
+            },
+        );
+    }
+    let mut host = build_policy(
+        spec,
+        &BuildCtx {
+            d: meta.d as usize,
+            budget,
+            seed: meta.seed,
+            models: &[],
+        },
+    )?;
+    let slots: Vec<Option<(String, f64, f64)>> = meta
+        .models
+        .iter()
+        .map(|m| {
+            m.as_ref()
+                .map(|mm| (mm.name.clone(), mm.price_in, mm.price_out))
+        })
+        .collect();
+    host.sync_portfolio(&slots);
+    Ok(host)
+}
+
+/// Drive `spec` through the captured log counterfactually.
+pub fn replay_policy(log: &CapturedLog, spec: &str) -> Result<PolicyReplay, String> {
+    let first_meta = log
+        .shards
+        .values()
+        .next()
+        .map(|s| &s.meta)
+        .ok_or("replay: empty capture")?;
+    let budget = first_meta.budget;
+    // one deployment-wide ledger, exactly as `serve` couples its shards
+    let ledger = budget.map(|b| Arc::new(SharedPacer::new(PacerConfig::new(b))));
+    let mut hosts: BTreeMap<u32, PolicyHost> = BTreeMap::new();
+    for (shard, stream) in &log.shards {
+        let mut host = build_host(spec, &stream.meta, budget)?;
+        if let Some(l) = &ledger {
+            host.use_shared_pacer(l.clone());
+        }
+        hosts.insert(*shard, host);
+    }
+
+    let mut rep = PolicyReplay {
+        spec: spec.to_string(),
+        decisions: 0,
+        scored: 0,
+        matched: 0,
+        reward_matched: 0.0,
+        est_spend: 0.0,
+        lambda: 0.0,
+        diverged: 0,
+        divergences: Vec::new(),
+        lambda_drift: 0,
+        hit_restore: false,
+        hosts: Vec::new(),
+    };
+    let mut pending: HashMap<(u32, u64), PendingReplay> = HashMap::new();
+    let mut queued: BTreeMap<u32, Vec<FeedbackEvent>> = BTreeMap::new();
+
+    'stream: for (shard, rec) in log.global_order() {
+        let Some(host) = hosts.get_mut(&shard) else {
+            continue;
+        };
+        match rec {
+            Record::Header(_) => {}
+            Record::Decision(d) => {
+                let rd = host.route(&d.x);
+                rep.decisions += 1;
+                if rd.lambda.to_bits() != d.lambda.to_bits() {
+                    rep.lambda_drift += 1;
+                }
+                if rd.arm as u64 != d.arm as u64 {
+                    rep.diverged += 1;
+                    if rep.divergences.len() < MAX_DIVERGENCE_SAMPLES {
+                        rep.divergences.push(Divergence {
+                            shard,
+                            seq: d.seq,
+                            served: d.arm,
+                            replayed: rd.arm as u32,
+                        });
+                    }
+                }
+                let served_blended = d
+                    .eligible
+                    .iter()
+                    .find(|e| e.slot == d.arm)
+                    .map(|e| e.blended)
+                    .unwrap_or(0.0);
+                pending.insert(
+                    (shard, d.request_id),
+                    PendingReplay {
+                        served: d.arm,
+                        replayed: rd.arm,
+                        served_blended,
+                        x: d.x.clone(),
+                    },
+                );
+            }
+            Record::Feedback(f) => {
+                let Some(p) = pending.remove(&(shard, f.request_id)) else {
+                    continue;
+                };
+                rep.scored += 1;
+                if p.replayed as u64 == p.served as u64 {
+                    // matched: absorb the realised feedback, exactly as
+                    // the serving path did (queued rewards fold at the
+                    // logged sync barrier)
+                    rep.matched += 1;
+                    rep.reward_matched += f.reward;
+                    rep.est_spend += f.cost;
+                    if f.queued {
+                        host.observe_cost(f.cost);
+                        queued.entry(shard).or_default().push(FeedbackEvent {
+                            arm: p.replayed,
+                            context: p.x,
+                            reward: f.reward,
+                        });
+                    } else {
+                        host.feedback(p.replayed, &p.x, f.reward, f.cost);
+                    }
+                } else {
+                    // diverged: charge declared prices — realised cost
+                    // scaled by the price ratio when both sides are
+                    // known, raw blended price otherwise
+                    let replayed_blended = host
+                        .registry()
+                        .get(p.replayed)
+                        .map_or(0.0, |e| e.blended_per_1k);
+                    let est = if p.served_blended > 0.0 && f.cost > 0.0 {
+                        f.cost * replayed_blended / p.served_blended
+                    } else {
+                        replayed_blended
+                    };
+                    rep.est_spend += est;
+                    host.observe_cost(est);
+                }
+            }
+            Record::Admin(a) => match &a.op {
+                AdminOp::AddModel {
+                    name,
+                    price_in,
+                    price_out,
+                    prior,
+                } => {
+                    if host.try_add_model(name, *price_in, *price_out, *prior).is_none() {
+                        host.add_model(name, *price_in, *price_out, *prior);
+                    }
+                }
+                AdminOp::DeleteModel { slot } => {
+                    host.delete_model(*slot as usize);
+                }
+                AdminOp::Reprice {
+                    slot,
+                    price_in,
+                    price_out,
+                } => {
+                    host.reprice(*slot as usize, *price_in, *price_out);
+                }
+                AdminOp::SetBudget { budget } => {
+                    host.set_budget(*budget);
+                }
+                AdminOp::SyncBarrier => {
+                    if let Some(events) = queued.get_mut(&shard) {
+                        host.apply_update_batch(events);
+                        events.clear();
+                    }
+                }
+                AdminOp::Restore => {
+                    // the capture's learned state was replaced wholesale;
+                    // a counterfactual replay cannot follow it
+                    rep.hit_restore = true;
+                    break 'stream;
+                }
+            },
+        }
+    }
+    // rewards still queued when the capture ended (no trailing barrier)
+    for (shard, events) in &queued {
+        if events.is_empty() {
+            continue;
+        }
+        if let Some(host) = hosts.get_mut(shard) {
+            host.apply_update_batch(events);
+        }
+    }
+    rep.lambda = hosts.values().next().map_or(0.0, |h| h.lambda());
+    rep.hosts = hosts.into_iter().collect();
+    Ok(rep)
+}
+
+/// Fold the fitted per-shard posteriors into one snapshot — the same
+/// merge the engine's cycle performs (first shard's replica absorbs
+/// every other shard's delta, then adopts the global) — and export it as
+/// a `(policy kind, state)` pair ready for
+/// [`crate::scenario::snapshot::save_value`] and `serve --restore`.
+pub fn export_priors(rep: &mut PolicyReplay) -> Result<(String, Json), String> {
+    let mut it = rep.hosts.iter_mut();
+    let Some((_, first)) = it.next() else {
+        return Err("export-priors: replay produced no hosts".to_string());
+    };
+    if let Some(mut global) = first.export_arms() {
+        for (_, h) in it {
+            let Some(arms) = h.export_arms() else { continue };
+            for (g, o) in global.iter_mut().zip(arms.iter()) {
+                if let (Some(g), Some(o)) = (g.as_mut(), o.as_ref()) {
+                    g.merge(o, 1.0);
+                }
+            }
+        }
+        first.adopt_arms(&global);
+    }
+    Ok((first.kind().to_string(), first.export_state()))
+}

@@ -1,0 +1,412 @@
+//! Segment files: crc-guarded frames, rotation, truncated-tail-tolerant
+//! reads and the (shard, seq) merge across a capture directory.
+//!
+//! A segment is `[u32 payload len][u32 crc32][payload]` frames back to
+//! back, first frame always a [`Record::Header`] (rotation re-stamps it,
+//! so every segment is self-describing).  Filenames are
+//! `shardNNN-segNNNNN.pblog`, chosen so a lexicographic directory sort
+//! is the (shard, segment) order.  On read, a tail cut mid-frame (crash)
+//! ends the segment cleanly with `truncated` set; a crc mismatch stops
+//! it with `corrupt` set — frames before the damage are always kept.
+
+use std::collections::BTreeMap;
+use std::fs::{self, File, OpenOptions};
+use std::io::{self, BufWriter, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::record::{self, AdminOp, AdminRec, CaptureMeta, Record};
+
+/// Default rotation threshold (bytes per segment).
+pub const DEFAULT_SEGMENT_BYTES: u64 = 64 * 1024 * 1024;
+
+/// Frame overhead: u32 payload length + u32 crc32.
+const FRAME_OVERHEAD: u64 = 8;
+
+// lint: allow(index) reason="const-eval table build; i < 256 by the loop bound"
+const fn build_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xedb8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const CRC_TABLE: [u32; 256] = build_crc_table();
+
+/// CRC-32 (IEEE, the zlib polynomial) over `bytes`.
+pub(crate) fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = u32::MAX;
+    for &b in bytes {
+        let idx = ((crc ^ b as u32) & 0xff) as usize;
+        // the mask keeps idx < 256, so the lookup always hits
+        crc = CRC_TABLE.get(idx).copied().unwrap_or(0) ^ (crc >> 8);
+    }
+    !crc
+}
+
+fn segment_path(dir: &Path, shard: u32, seg: u32) -> PathBuf {
+    dir.join(format!("shard{shard:03}-seg{seg:05}.pblog"))
+}
+
+/// Append-only writer for one shard's segment stream.
+///
+/// Sequence numbers come from a process-wide clock shared by every
+/// shard's writer, so the cross-shard order costs hit the shared budget
+/// ledger in is recoverable from the merged log (exact under
+/// synchronous clients; see `docs/replay.md` for the concurrency
+/// caveat).  The writer never panics: every fallible call returns
+/// `io::Result` and the serving layer routes failures to a metric.
+pub struct LogWriter {
+    dir: PathBuf,
+    meta: CaptureMeta,
+    out: BufWriter<File>,
+    seg_index: u32,
+    seg_bytes: u64,
+    max_seg_bytes: u64,
+    clock: Arc<AtomicU64>,
+    /// reused frame-staging buffer (capacity settles after warmup, so
+    /// the append path allocates nothing)
+    scratch: Vec<u8>,
+}
+
+impl LogWriter {
+    /// Create a writer with its own private sequence clock (single-shard
+    /// captures, tests).
+    pub fn create(dir: &Path, meta: CaptureMeta, max_seg_bytes: u64) -> Result<LogWriter, String> {
+        LogWriter::with_clock(dir, meta, max_seg_bytes, Arc::new(AtomicU64::new(0)))
+    }
+
+    /// Create a writer stamping sequence numbers from a shared clock
+    /// (one clock per capture, cloned into every shard's writer).
+    /// Refuses to overwrite an existing segment — use a fresh directory
+    /// per capture.
+    pub fn with_clock(
+        dir: &Path,
+        meta: CaptureMeta,
+        max_seg_bytes: u64,
+        clock: Arc<AtomicU64>,
+    ) -> Result<LogWriter, String> {
+        fs::create_dir_all(dir).map_err(|e| format!("log: create {}: {e}", dir.display()))?;
+        let path = segment_path(dir, meta.shard, 0);
+        let file = OpenOptions::new()
+            .write(true)
+            .create_new(true)
+            .open(&path)
+            .map_err(|e| format!("log: create {}: {e}", path.display()))?;
+        let mut w = LogWriter {
+            dir: dir.to_path_buf(),
+            meta,
+            out: BufWriter::new(file),
+            seg_index: 0,
+            seg_bytes: 0,
+            max_seg_bytes: max_seg_bytes.max(4096),
+            clock,
+            scratch: Vec::with_capacity(1024),
+        };
+        w.append_header()
+            .map_err(|e| format!("log: {}: header: {e}", path.display()))?;
+        Ok(w)
+    }
+
+    /// The shard this writer captures.
+    pub fn shard(&self) -> u32 {
+        self.meta.shard
+    }
+
+    fn next_seq(&self) -> u64 {
+        // AcqRel: the ticket order must agree with the real order of the
+        // surrounding ledger operations on every shard thread
+        self.clock.fetch_add(1, Ordering::AcqRel)
+    }
+
+    fn append_header(&mut self) -> io::Result<()> {
+        self.scratch.clear();
+        Record::Header(self.meta.clone()).encode(&mut self.scratch);
+        self.write_frame()
+    }
+
+    /// Stage `scratch` as one `[len][crc][payload]` frame.
+    fn write_frame(&mut self) -> io::Result<()> {
+        let len = self.scratch.len() as u32;
+        let crc = crc32(&self.scratch);
+        self.out.write_all(&len.to_le_bytes())?;
+        self.out.write_all(&crc.to_le_bytes())?;
+        self.out.write_all(&self.scratch)?;
+        self.seg_bytes += FRAME_OVERHEAD + self.scratch.len() as u64;
+        Ok(())
+    }
+
+    /// Rotate to a fresh segment once the current one crosses the
+    /// threshold (cold path: opens a file and re-stamps the header).
+    fn maybe_rotate(&mut self) -> io::Result<()> {
+        if self.seg_bytes < self.max_seg_bytes {
+            return Ok(());
+        }
+        self.rotate()
+    }
+
+    fn rotate(&mut self) -> io::Result<()> {
+        self.out.flush()?;
+        self.seg_index += 1;
+        let path = segment_path(&self.dir, self.meta.shard, self.seg_index);
+        let file = OpenOptions::new().write(true).create_new(true).open(path)?;
+        self.out = BufWriter::new(file);
+        self.seg_bytes = 0;
+        self.append_header()
+    }
+
+    /// Append one routing decision; returns its global sequence number.
+    /// Steady-state this allocates nothing: the frame is staged in the
+    /// reused scratch buffer and written through the fixed-size
+    /// `BufWriter` (asserted by `tests/alloc_probe.rs`); rotation — the
+    /// only allocating step — runs in [`LogWriter::rotate`] once per
+    /// `max_seg_bytes`.
+    // lint: no_alloc
+    #[allow(clippy::too_many_arguments)]
+    pub fn append_decision(
+        &mut self,
+        t: u64,
+        request_id: u64,
+        lambda: f64,
+        arm: u32,
+        forced: bool,
+        n_eligible: u32,
+        x: &[f64],
+        eligible: &[usize],
+        blended: &[f64],
+        c_tilde: &[f64],
+    ) -> io::Result<u64> {
+        let seq = self.next_seq();
+        self.scratch.clear();
+        record::encode_decision_into(
+            &mut self.scratch,
+            seq,
+            t,
+            request_id,
+            lambda,
+            arm,
+            forced,
+            n_eligible,
+            x,
+            eligible,
+            blended,
+            c_tilde,
+        );
+        self.write_frame()?;
+        self.maybe_rotate()?;
+        Ok(seq)
+    }
+
+    /// Append one realised-feedback record (allocation-free like
+    /// [`LogWriter::append_decision`]).
+    // lint: no_alloc
+    pub fn append_feedback(
+        &mut self,
+        request_id: u64,
+        arm: u32,
+        reward: f64,
+        cost: f64,
+        queued: bool,
+    ) -> io::Result<u64> {
+        let seq = self.next_seq();
+        self.scratch.clear();
+        record::encode_feedback_into(&mut self.scratch, seq, request_id, arm, reward, cost, queued);
+        self.write_frame()?;
+        self.maybe_rotate()?;
+        Ok(seq)
+    }
+
+    /// Append one admin-plane event (cold path).
+    pub fn append_admin(&mut self, op: &AdminOp) -> io::Result<u64> {
+        let seq = self.next_seq();
+        self.scratch.clear();
+        Record::Admin(AdminRec {
+            seq,
+            op: op.clone(),
+        })
+        .encode(&mut self.scratch);
+        self.write_frame()?;
+        self.maybe_rotate()?;
+        Ok(seq)
+    }
+
+    /// Flush buffered frames to the OS (merge cycles, shutdown).
+    pub fn flush(&mut self) -> io::Result<()> {
+        self.out.flush()
+    }
+}
+
+impl Drop for LogWriter {
+    fn drop(&mut self) {
+        let _ = self.out.flush();
+    }
+}
+
+// ----------------------------------------------------------------------
+// reading
+
+/// One segment file, decoded.
+pub struct SegmentRead {
+    /// the header frame (`None` only when the file lost its very first
+    /// frame — such a segment carries no records either)
+    pub meta: Option<CaptureMeta>,
+    /// decoded records (headers excluded), in file order
+    pub records: Vec<Record>,
+    /// the file ended mid-frame (crash truncation); records above are
+    /// the intact prefix
+    pub truncated: bool,
+    /// a crc-mismatched or undecodable frame stopped the read; records
+    /// above are the intact prefix
+    pub corrupt: bool,
+}
+
+fn le_u32(b: &[u8]) -> Option<u32> {
+    let a: [u8; 4] = b.get(..4)?.try_into().ok()?;
+    Some(u32::from_le_bytes(a))
+}
+
+/// Decode one segment file, tolerating a truncated tail.
+pub fn read_segment(path: &Path) -> Result<SegmentRead, String> {
+    let bytes = fs::read(path).map_err(|e| format!("log: read {}: {e}", path.display()))?;
+    let mut out = SegmentRead {
+        meta: None,
+        records: Vec::new(),
+        truncated: false,
+        corrupt: false,
+    };
+    let mut pos = 0usize;
+    loop {
+        let Some(head) = bytes.get(pos..pos + 8) else {
+            // clean end exactly at a frame boundary; anything shorter is
+            // a partial frame header left by a crash
+            out.truncated = pos < bytes.len();
+            break;
+        };
+        let (len, crc) = match (le_u32(head), le_u32(head.get(4..).unwrap_or(&[]))) {
+            (Some(l), Some(c)) => (l as usize, c),
+            _ => {
+                out.truncated = true;
+                break;
+            }
+        };
+        let Some(payload) = bytes.get(pos + 8..pos + 8 + len) else {
+            out.truncated = true;
+            break;
+        };
+        if crc32(payload) != crc {
+            out.corrupt = true;
+            break;
+        }
+        match Record::decode(payload) {
+            Ok(Record::Header(m)) => {
+                if out.meta.is_none() {
+                    out.meta = Some(m);
+                }
+            }
+            Ok(r) => out.records.push(r),
+            Err(_) => {
+                out.corrupt = true;
+                break;
+            }
+        }
+        pos += 8 + len;
+    }
+    Ok(out)
+}
+
+/// One shard's record stream, merged across its segments.
+pub struct ShardStream {
+    pub meta: CaptureMeta,
+    /// records ordered by sequence number
+    pub records: Vec<Record>,
+    pub truncated: bool,
+    pub corrupt: bool,
+}
+
+/// A capture directory, decoded and merged.
+pub struct CapturedLog {
+    /// shard id → its stream (BTreeMap: deterministic shard order)
+    pub shards: BTreeMap<u32, ShardStream>,
+}
+
+impl CapturedLog {
+    /// All records merged on (shard, seq) — the canonical listing order.
+    pub fn merged(&self) -> Vec<(u32, &Record)> {
+        let mut out = Vec::new();
+        for (shard, stream) in &self.shards {
+            for r in &stream.records {
+                out.push((*shard, r));
+            }
+        }
+        out
+    }
+
+    /// All records in global capture order: the shared append clock's
+    /// ticket order, ties (impossible under one clock) broken by shard.
+    pub fn global_order(&self) -> Vec<(u32, &Record)> {
+        let mut out = self.merged();
+        out.sort_by_key(|(shard, r)| (r.seq(), *shard));
+        out
+    }
+
+    /// Total record count (headers excluded).
+    pub fn n_records(&self) -> usize {
+        self.shards.values().map(|s| s.records.len()).sum()
+    }
+
+    /// Any shard stream flagged truncated or corrupt.
+    pub fn damaged(&self) -> bool {
+        self.shards.values().any(|s| s.truncated || s.corrupt)
+    }
+}
+
+/// Read every `*.pblog` segment under `dir` and merge per shard.
+/// Headerless segments (a crash before the first frame landed) carry no
+/// records and are skipped.
+pub fn read_log_dir(dir: &Path) -> Result<CapturedLog, String> {
+    let entries =
+        fs::read_dir(dir).map_err(|e| format!("log: read dir {}: {e}", dir.display()))?;
+    let mut paths: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("pblog"))
+        .collect();
+    // shardNNN-segNNNNN names: lexicographic == (shard, segment) order
+    paths.sort();
+    if paths.is_empty() {
+        return Err(format!("log: no .pblog segments in {}", dir.display()));
+    }
+    let mut shards: BTreeMap<u32, ShardStream> = BTreeMap::new();
+    for p in &paths {
+        let seg = read_segment(p)?;
+        let Some(meta) = seg.meta else { continue };
+        let entry = shards.entry(meta.shard).or_insert_with(|| ShardStream {
+            meta: meta.clone(),
+            records: Vec::new(),
+            truncated: false,
+            corrupt: false,
+        });
+        entry.records.extend(seg.records);
+        entry.truncated |= seg.truncated;
+        entry.corrupt |= seg.corrupt;
+    }
+    if shards.is_empty() {
+        return Err(format!(
+            "log: {} has segments but none with a readable header",
+            dir.display()
+        ));
+    }
+    for s in shards.values_mut() {
+        s.records.sort_by_key(|r| r.seq());
+    }
+    Ok(CapturedLog { shards })
+}

@@ -5,6 +5,9 @@
 //! paretobandit serve    [--addr 127.0.0.1:7878] [--budget 6.6e-4]
 //!                       [--workers N] [--merge-ms MS] [--restore SNAP]
 //!                       [--policy NAME[:ARG]] [--shadow NAME[,NAME...]]
+//!                       [--log-dir DIR]      (capture a decision log)
+//! paretobandit replay   --log-dir DIR [--policy NAME[,NAME...]]
+//!                       [--check] [--export-priors SNAP]
 //! paretobandit scenario <spec.toml> [--seeds N] [--budget B]
 //!                       [--addr HOST:PORT]   (wire mode: drive a live engine)
 //! paretobandit policies              (list the routing-policy registry)
@@ -12,6 +15,7 @@
 //! ```
 
 use std::path::Path;
+use std::sync::atomic::AtomicU64;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -21,6 +25,10 @@ use paretobandit::exp::{
     conditions, exp1_stationary, exp2_costdrift, exp3_degradation, exp4_onboarding, exp5_warmup,
     exp6_mismatch, exp7_judges, exp8_recovery, exp9_costheuristic, hyperopt, latency, report,
     ExpEnv,
+};
+use paretobandit::log::{
+    export_priors, read_log_dir, replay_policy, CaptureMeta, LogWriter, ModelMeta, PolicyReplay,
+    DEFAULT_SEGMENT_BYTES,
 };
 use paretobandit::pacer::{PacerConfig, SharedPacer};
 use paretobandit::router::{
@@ -47,6 +55,7 @@ fn main() {
 
     match cmd {
         "serve" => serve(&args),
+        "replay" => replay_cmd(&args),
         "scenario" => scenario_cmd(&args, seeds),
         "lint" => {
             let opts = LintOpts {
@@ -124,7 +133,11 @@ fn main() {
             println!("usage: paretobandit <command> [--seeds N]");
             println!();
             println!("  serve      start the routing server (--addr, --budget, --restore,");
-            println!("             --policy NAME[:ARG], --shadow NAME[,NAME...])");
+            println!("             --policy NAME[:ARG], --shadow NAME[,NAME...],");
+            println!("             --log-dir DIR to capture a decision log)");
+            println!("  replay     re-drive policies through a captured decision log");
+            println!("             (--log-dir DIR, --policy A[,B...], --check,");
+            println!("             --export-priors SNAP); see docs/replay.md");
             println!("  scenario   run a declarative drift spec (scenarios/*.toml)");
             println!("  policies   list the registered routing policies");
             println!("  lint       in-repo static analysis (--deny, --json, --root DIR,");
@@ -344,6 +357,10 @@ fn serve(args: &[String]) {
                 .collect()
         })
         .unwrap_or_default();
+    let log_dir = arg_val(args, "--log-dir");
+    // one capture-wide step clock: every shard writer stamps frames from
+    // the same sequence so `replay` can reconstruct the interleaving
+    let log_clock = Arc::new(AtomicU64::new(0));
     let d = serving_d_ctx();
     // validate every policy spec before spawning threads: a typo answers
     // with a readable error and a non-zero exit, not a shard panic
@@ -438,6 +455,8 @@ fn serve(args: &[String]) {
     let build = {
         let policy_spec = policy_spec.clone();
         let shadow_specs = shadow_specs.clone();
+        let log_dir = log_dir.clone();
+        let log_clock = log_clock.clone();
         move |shard: usize| {
             let featurizer: Box<dyn Featurize> = if artifacts_present {
                 match pjrt_featurizer(d) {
@@ -496,6 +515,57 @@ fn serve(args: &[String]) {
                     .add_shadow(spec, d, Some(budget), 4242 + 1000 * (i as u64 + 1) + shard as u64)
                     .expect("spec validated at startup");
             }
+            if let Some(dir) = &log_dir {
+                // a cold capture records the full build recipe (models +
+                // priors) so `replay` can rebuild a bit-identical host;
+                // a warm restart records the live portfolio without
+                // priors and is marked `warm` (replay syncs, not rebuilds)
+                let meta = CaptureMeta {
+                    shard: shard as u32,
+                    d: d as u32,
+                    seed: 42 + shard as u64,
+                    budget: Some(budget),
+                    policy: policy_spec.clone(),
+                    warm: restore.is_some(),
+                    models: if restore.is_some() {
+                        state
+                            .host
+                            .registry()
+                            .slot_entries()
+                            .into_iter()
+                            .map(|s| {
+                                s.map(|(name, price_in, price_out)| ModelMeta {
+                                    name,
+                                    price_in,
+                                    price_out,
+                                    prior: None,
+                                })
+                            })
+                            .collect()
+                    } else {
+                        models
+                            .iter()
+                            .map(|m| {
+                                Some(ModelMeta {
+                                    name: m.name.clone(),
+                                    price_in: m.price_in,
+                                    price_out: m.price_out,
+                                    prior: m.prior,
+                                })
+                            })
+                            .collect()
+                    },
+                };
+                match LogWriter::with_clock(
+                    Path::new(dir),
+                    meta,
+                    DEFAULT_SEGMENT_BYTES,
+                    log_clock.clone(),
+                ) {
+                    Ok(w) => state.attach_log(w),
+                    Err(e) => eprintln!("serve: --log-dir: shard {shard}: {e}; not capturing"),
+                }
+            }
             state
         }
     };
@@ -522,4 +592,122 @@ fn serve(args: &[String]) {
         std::thread::sleep(Duration::from_millis(200));
     }
     engine.stop();
+}
+
+/// `paretobandit replay` — re-drive routing policies through a decision
+/// log captured by `serve --log-dir`, counterfactually scored under the
+/// shadow-evaluation rules (matched decisions absorb realised feedback,
+/// diverging ones are charged declared prices).  `--check` gates on the
+/// captured policy reproducing its own decisions bit-identically;
+/// `--export-priors` writes the fitted posteriors as a snapshot loadable
+/// via `serve --restore`.
+fn replay_cmd(args: &[String]) {
+    let Some(dir) = arg_val(args, "--log-dir") else {
+        eprintln!(
+            "usage: paretobandit replay --log-dir DIR [--policy NAME[,NAME...]] \
+             [--check] [--export-priors SNAP]"
+        );
+        std::process::exit(2);
+    };
+    let log = match read_log_dir(Path::new(&dir)) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("replay: {e}");
+            std::process::exit(2);
+        }
+    };
+    let captured_spec = log
+        .shards
+        .values()
+        .next()
+        .map(|s| s.meta.policy.clone())
+        .unwrap_or_default();
+    println!(
+        "capture: {} shard(s), {} record(s), captured policy {captured_spec}",
+        log.shards.len(),
+        log.n_records()
+    );
+    if log.damaged() {
+        eprintln!(
+            "replay: note: capture has a truncated or corrupt tail; \
+             replaying the intact prefix"
+        );
+    }
+    let check = args.iter().any(|a| a == "--check");
+    let mut specs: Vec<String> = arg_val(args, "--policy")
+        .map(|s| {
+            s.split(',')
+                .map(|p| p.trim().to_string())
+                .filter(|p| !p.is_empty())
+                .collect()
+        })
+        .unwrap_or_else(|| vec![captured_spec.clone()]);
+    // --check judges the captured policy against its own trace; make
+    // sure that replay actually runs even under an explicit --policy list
+    if check && !specs.iter().any(|s| s == &captured_spec) {
+        specs.insert(0, captured_spec.clone());
+    }
+    let mut check_failed = check && log.damaged();
+    // the first requested policy owns --export-priors (one snapshot out)
+    let mut first_rep: Option<PolicyReplay> = None;
+    for spec in &specs {
+        let rep = match replay_policy(&log, spec) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("replay: {spec}: {e}");
+                std::process::exit(2);
+            }
+        };
+        println!("{}", rep.to_json().to_string());
+        if rep.hit_restore {
+            eprintln!("replay: note: capture contains a restore marker; replayed up to it");
+        }
+        if check && spec == &captured_spec && (rep.diverged > 0 || rep.lambda_drift > 0) {
+            check_failed = true;
+            for dv in &rep.divergences {
+                eprintln!(
+                    "replay: divergence at shard {} seq {}: served arm {}, replayed arm {}",
+                    dv.shard, dv.seq, dv.served, dv.replayed
+                );
+            }
+            if rep.lambda_drift > 0 {
+                eprintln!(
+                    "replay: λ drift on {} decision(s) (pacer trajectory not reproduced)",
+                    rep.lambda_drift
+                );
+            }
+        }
+        if first_rep.is_none() {
+            first_rep = Some(rep);
+        }
+    }
+    if let Some(path) = arg_val(args, "--export-priors") {
+        // merge per-shard posteriors the same way the engine's merge
+        // cycle does, then snapshot — the output feeds serve --restore
+        let Some(rep) = first_rep.as_mut() else {
+            eprintln!("replay: --export-priors: no policy replayed");
+            std::process::exit(2);
+        };
+        match export_priors(rep) {
+            Ok((kind, st)) => match snapshot::save_value(Path::new(&path), Some(&kind), &st) {
+                Ok(()) => println!(
+                    "priors exported to {path} (policy {kind}); load via serve --restore"
+                ),
+                Err(e) => {
+                    eprintln!("replay: --export-priors: {e}");
+                    std::process::exit(2);
+                }
+            },
+            Err(e) => {
+                eprintln!("replay: --export-priors: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    if check_failed {
+        eprintln!("replay: --check FAILED: capture not reproduced bit-identically");
+        std::process::exit(1);
+    } else if check {
+        println!("replay: --check ok — decision sequence and λ trajectory reproduced");
+    }
 }

@@ -139,6 +139,22 @@ impl PolicyHost {
         self.policy.as_any_mut().downcast_mut::<T>()
     }
 
+    /// Host-advisory eligible slot set of the most recent decision
+    /// (decision logging reads it right after [`PolicyHost::route`]).
+    pub fn last_eligible(&self) -> &[usize] {
+        &self.eligible_buf
+    }
+
+    /// Slot-aligned declared blended $/1k prices (0.0 on retired slots).
+    pub fn blended_prices(&self) -> &[f64] {
+        &self.blended
+    }
+
+    /// Slot-aligned frozen c̃ cost snapshots (0.0 on retired slots).
+    pub fn c_tilde_prices(&self) -> &[f64] {
+        &self.c_tilde
+    }
+
     // ------------------------------------------------------------------
     // portfolio admin (host registry + policy hooks, kept slot-aligned)
 

@@ -12,9 +12,11 @@
 //!
 //! Producers: the `snapshot` wire verb (engine: post-merge global
 //! posterior as adopted by shard 0), the in-process scenario executor's
-//! `snapshot` event, and [`save`] / [`save_value`] directly.  Consumers:
-//! the `restore` wire verb, `serve --restore <path>`, and the scenario
-//! `restart` event.
+//! `snapshot` event, `replay --export-priors` (posteriors fitted
+//! counterfactually from a captured decision log — see
+//! [`crate::log::export_priors`]), and [`save`] / [`save_value`]
+//! directly.  Consumers: the `restore` wire verb, `serve --restore
+//! <path>`, and the scenario `restart` event.
 
 use std::path::Path;
 

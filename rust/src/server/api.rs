@@ -44,9 +44,10 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::log::{AdminOp, LogWriter};
 use crate::router::{
     build_policy, BuildCtx, ContextCache, FeedbackEvent, FeedbackQueue, ModelRef, ParetoRouter,
-    Pending, PolicyHost,
+    Pending, PolicyHost, RouteDecision,
 };
 use crate::scenario::snapshot;
 use crate::scenario::Event;
@@ -146,6 +147,8 @@ pub struct ServerState {
     pub queue: Option<FeedbackQueue>,
     /// shadow policies scored counterfactually on this shard's stream
     pub shadows: Vec<Shadow>,
+    /// append-only decision log (`serve --log-dir`); `None` = no capture
+    pub log: Option<LogWriter>,
     shadow_pending: ShadowPending,
 }
 
@@ -181,7 +184,61 @@ impl ServerState {
             shard: 0,
             queue: None,
             shadows: Vec::new(),
+            log: None,
             shadow_pending: ShadowPending::new(SHADOW_PENDING_CAP),
+        }
+    }
+
+    /// Attach a decision-log writer (`serve --log-dir`).
+    pub fn attach_log(&mut self, w: LogWriter) {
+        self.log = Some(w);
+    }
+
+    /// Flush buffered log frames to the OS (merge cycles, shutdown).
+    pub fn flush_log(&mut self) {
+        if let Some(w) = self.log.as_mut() {
+            if w.flush().is_err() {
+                self.metrics.log_error();
+            }
+        }
+    }
+
+    /// Append the decision just taken by `self.host` (its eligible-set
+    /// scratch and declared-price mirrors still describe it).  Logging
+    /// never perturbs serving: an append failure only bumps a metric.
+    fn log_decision(&mut self, request_id: u64, x: &[f64], d: &RouteDecision) {
+        let Some(w) = self.log.as_mut() else { return };
+        let appended = w.append_decision(
+            self.host.step(),
+            request_id,
+            d.lambda,
+            d.arm as u32,
+            d.forced,
+            d.n_eligible as u32,
+            x,
+            self.host.last_eligible(),
+            self.host.blended_prices(),
+            self.host.c_tilde_prices(),
+        );
+        match appended {
+            Ok(_) => self.metrics.log_record(),
+            Err(_) => self.metrics.log_error(),
+        }
+    }
+
+    fn log_feedback(&mut self, it: &FeedbackItem, arm: usize, queued: bool) {
+        let Some(w) = self.log.as_mut() else { return };
+        match w.append_feedback(it.id, arm as u32, it.reward, it.cost, queued) {
+            Ok(_) => self.metrics.log_record(),
+            Err(_) => self.metrics.log_error(),
+        }
+    }
+
+    fn log_admin(&mut self, op: &AdminOp) {
+        let Some(w) = self.log.as_mut() else { return };
+        match w.append_admin(op) {
+            Ok(_) => self.metrics.log_record(),
+            Err(_) => self.metrics.log_error(),
         }
     }
 
@@ -251,6 +308,9 @@ impl ServerState {
             return 0;
         }
         let events = q.drain();
+        // the barrier marks where queued rewards fold into the posterior,
+        // so replay folds its queued feedback at the same stream position
+        self.log_admin(&AdminOp::SyncBarrier);
         self.host.apply_update_batch(&events);
         events.len()
     }
@@ -398,6 +458,7 @@ impl ServerState {
             .map(|e| e.name.clone())
             .unwrap_or_default();
         self.route_shadows(it.id, &x);
+        self.log_decision(it.id, &x, &d);
         self.cache.insert(Pending {
             request_id: it.id,
             arm: d.arm,
@@ -464,6 +525,7 @@ impl ServerState {
                 .map(|e| e.name.clone())
                 .unwrap_or_default();
             self.route_shadows(it.id, &x);
+            self.log_decision(it.id, &x, &d);
             self.cache.insert(Pending {
                 request_id: it.id,
                 arm: d.arm,
@@ -505,6 +567,8 @@ impl ServerState {
             );
         };
         self.score_shadows(it, &p);
+        let queued = self.queue.is_some();
+        self.log_feedback(it, p.arm, queued);
         match self.queue.as_mut() {
             // sharded mode: queue the reward for the batched merge cycle,
             // but pay the cost to the (shared) pacer right now
@@ -539,6 +603,12 @@ impl ServerState {
                 for sh in &mut self.shadows {
                     sh.host.add_model(name, price_in, price_out, prior);
                 }
+                self.log_admin(&AdminOp::AddModel {
+                    name: name.to_string(),
+                    price_in,
+                    price_out,
+                    prior,
+                });
                 Response::AddModel {
                     id,
                     arm,
@@ -566,6 +636,7 @@ impl ServerState {
         for sh in &mut self.shadows {
             sh.host.delete_model(slot);
         }
+        self.log_admin(&AdminOp::DeleteModel { slot: slot as u32 });
         Response::DeleteModel { id, arm: slot }
     }
 
@@ -587,6 +658,11 @@ impl ServerState {
         for sh in &mut self.shadows {
             sh.host.reprice(slot, price_in, price_out);
         }
+        self.log_admin(&AdminOp::Reprice {
+            slot: slot as u32,
+            price_in,
+            price_out,
+        });
         Response::Reprice { id, arm: slot }
     }
 
@@ -598,6 +674,7 @@ impl ServerState {
             for sh in &mut self.shadows {
                 sh.host.set_budget(budget);
             }
+            self.log_admin(&AdminOp::SetBudget { budget });
             Response::SetBudget { id, budget }
         } else {
             Response::err(
@@ -755,6 +832,9 @@ impl ServerState {
                     q.take_dropped();
                 }
                 self.reseat_shadows();
+                // a restore replaces the learned state wholesale; mark it
+                // so replay knows it cannot follow past this point
+                self.log_admin(&AdminOp::Restore);
                 Response::Restore {
                     id,
                     arms: self.host.registry().n_active(),

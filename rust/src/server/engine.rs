@@ -736,6 +736,9 @@ fn shard_loop(mut state: ServerState, rx: mpsc::Receiver<ShardMsg>) {
             }
             ShardMsg::Sync(reply) => {
                 state.apply_queued();
+                // merge cycles double as the decision log's durability
+                // points: frames buffered since the last cycle hit the OS
+                state.flush_log();
                 let _ = reply.send(SyncReport {
                     epoch,
                     // policies with nothing mergeable report an empty

@@ -183,6 +183,11 @@ pub struct Metrics {
     pub dropped_rewards: AtomicU64,
     /// worker shard count (0 until an engine sets it; reported as ≥1)
     pub workers: AtomicU64,
+    /// decision-log frames appended (`serve --log-dir`)
+    pub log_records: AtomicU64,
+    /// decision-log append/flush failures (capture gaps — never fatal to
+    /// serving, but a nonzero count means the log is not replay-complete)
+    pub log_errors: AtomicU64,
     pub route_latency: LatencyHisto,
     pub e2e_latency: LatencyHisto,
     pub spend: Mutex<f64>,
@@ -238,6 +243,18 @@ impl Metrics {
             ps.resize(shard + 1, 0);
         }
         ps[shard] += 1;
+    }
+
+    /// One decision-log frame appended.
+    pub fn log_record(&self) {
+        // invariant: monotone monitoring counter, Relaxed by design
+        self.log_records.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One decision-log append/flush failure.
+    pub fn log_error(&self) {
+        // invariant: monotone monitoring counter, Relaxed by design
+        self.log_errors.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_feedback(&self, reward: f64, cost: f64) {
@@ -325,6 +342,9 @@ impl Metrics {
         let workers = self.workers.load(Ordering::Relaxed).max(1);
         let merges = self.merges.load(Ordering::Relaxed);
         let dropped = self.dropped_rewards.load(Ordering::Relaxed);
+        // invariant: same Relaxed monitoring reads as above
+        let log_records = self.log_records.load(Ordering::Relaxed);
+        let log_errors = self.log_errors.load(Ordering::Relaxed);
         let spend = *relock(&self.spend);
         let rsum = *relock(&self.reward_sum);
         Json::obj(vec![
@@ -356,6 +376,8 @@ impl Metrics {
             ("workers", Json::Num(workers as f64)),
             ("merges", Json::Num(merges as f64)),
             ("dropped_rewards", Json::Num(dropped as f64)),
+            ("log_records", Json::Num(log_records as f64)),
+            ("log_errors", Json::Num(log_errors as f64)),
             (
                 "per_shard",
                 Json::Arr(

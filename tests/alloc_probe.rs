@@ -9,6 +9,10 @@
 //!     measured window, so the refresh itself is asserted alloc-free too)
 //!   * `PolicyHost::route_batch_into`   — batched decisions into a reused
 //!     output buffer
+//!   * `LogWriter::append_decision` / `append_feedback` — decision-log
+//!     capture frames staged in the reused scratch buffer and written
+//!     through the fixed-size `BufWriter` (rotation is the only
+//!     allocating step and stays outside the measured window)
 //!
 //! This file is its own integration binary (one test) because the
 //! `#[global_allocator]` is process-wide: concurrent tests in a shared
@@ -17,6 +21,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use paretobandit::log::{CaptureMeta, LogWriter, DEFAULT_SEGMENT_BYTES};
 use paretobandit::router::{ParetoRouter, PolicyHost, Prior, RouteDecision, RouterConfig};
 use paretobandit::util::rng::Rng;
 
@@ -125,4 +130,41 @@ fn hot_path_does_not_allocate_after_warmup() {
         0,
         "route_batch_into() allocated in steady state"
     );
+
+    // --- decision-log append path -----------------------------------------
+    let dir = std::env::temp_dir().join(format!("pb_alloc_log_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let meta = CaptureMeta {
+        shard: 0,
+        d: D as u32,
+        seed: 1,
+        budget: Some(6.6e-4),
+        policy: "paretobandit".to_string(),
+        warm: false,
+        models: Vec::new(),
+    };
+    let mut w = LogWriter::create(&dir, meta, DEFAULT_SEGMENT_BYTES).expect("log writer");
+    let x = &xs[0];
+    let eligible = [0usize, 1, 2];
+    let blended = [0.1, 0.9, 5.6];
+    let c_tilde = [0.09, 0.85, 5.0];
+    // warm the scratch buffer past the largest frame this stream stages
+    for i in 0..64u64 {
+        w.append_decision(i, i, 0.4, 1, false, 3, x, &eligible, &blended, &c_tilde)
+            .unwrap();
+        w.append_feedback(i, 1, 0.7, 2.0e-4, true).unwrap();
+    }
+    let before = allocs();
+    for i in 0..1_000u64 {
+        w.append_decision(i, i, 0.4, 1, false, 3, x, &eligible, &blended, &c_tilde)
+            .unwrap();
+        w.append_feedback(i, 1, 0.7, 2.0e-4, true).unwrap();
+    }
+    assert_eq!(
+        allocs() - before,
+        0,
+        "log append allocated in steady state"
+    );
+    drop(w);
+    let _ = std::fs::remove_dir_all(&dir);
 }

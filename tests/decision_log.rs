@@ -1,0 +1,470 @@
+//! Decision-log format suite: property round-trips over randomized
+//! records, crc rejection of corrupted frames, clean recovery from a
+//! truncated tail (mid-frame crash), segment rotation, and the shared
+//! capture clock interleaving shard streams.
+
+use std::path::PathBuf;
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
+
+use paretobandit::log::{
+    read_log_dir, read_segment, AdminOp, AdminRec, CaptureMeta, DecisionRec, EligibleSlot,
+    FeedbackRec, LogWriter, ModelMeta, Record,
+};
+use paretobandit::util::prop::for_cases;
+use paretobandit::util::rng::Rng;
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pb_declog_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn sample_meta(shard: u32) -> CaptureMeta {
+    CaptureMeta {
+        shard,
+        d: 6,
+        seed: 42 + shard as u64,
+        budget: Some(6.6e-4),
+        policy: "paretobandit".into(),
+        warm: false,
+        models: vec![
+            Some(ModelMeta {
+                name: "llama-3.1-8b".into(),
+                price_in: 0.10,
+                price_out: 0.10,
+                prior: Some((25.0, 0.7)),
+            }),
+            Some(ModelMeta {
+                name: "gemini-2.5-pro".into(),
+                price_in: 1.25,
+                price_out: 10.0,
+                prior: None,
+            }),
+        ],
+    }
+}
+
+fn rand_meta(rng: &mut Rng) -> CaptureMeta {
+    let n_models = rng.below(5);
+    CaptureMeta {
+        shard: rng.below(8) as u32,
+        d: 1 + rng.below(32) as u32,
+        seed: rng.next_u64(),
+        budget: if rng.bernoulli(0.7) {
+            Some(rng.f64() * 1e-3)
+        } else {
+            None
+        },
+        policy: format!("policy-{}", rng.below(100)),
+        warm: rng.bernoulli(0.3),
+        models: (0..n_models)
+            .map(|i| {
+                if rng.bernoulli(0.2) {
+                    None
+                } else {
+                    Some(ModelMeta {
+                        name: format!("model-{i}-\u{03bb}"),
+                        price_in: rng.f64() * 5.0,
+                        price_out: rng.f64() * 20.0,
+                        prior: if rng.bernoulli(0.5) {
+                            Some((rng.f64() * 50.0, rng.f64()))
+                        } else {
+                            None
+                        },
+                    })
+                }
+            })
+            .collect(),
+    }
+}
+
+fn rand_admin_op(rng: &mut Rng) -> AdminOp {
+    match rng.below(6) {
+        0 => AdminOp::AddModel {
+            name: format!("m{}", rng.below(1000)),
+            price_in: rng.f64() * 5.0,
+            price_out: rng.f64() * 20.0,
+            prior: if rng.bernoulli(0.5) {
+                Some((rng.f64() * 40.0, rng.f64()))
+            } else {
+                None
+            },
+        },
+        1 => AdminOp::DeleteModel {
+            slot: rng.below(16) as u32,
+        },
+        2 => AdminOp::Reprice {
+            slot: rng.below(16) as u32,
+            price_in: rng.f64() * 5.0,
+            price_out: rng.f64() * 20.0,
+        },
+        3 => AdminOp::SetBudget {
+            budget: rng.f64() * 1e-2,
+        },
+        4 => AdminOp::Restore,
+        _ => AdminOp::SyncBarrier,
+    }
+}
+
+fn rand_record(rng: &mut Rng, seq: u64) -> Record {
+    // a sprinkling of awkward but PartialEq-stable floats
+    let odd = [0.0, -0.0, f64::INFINITY, f64::MIN_POSITIVE, 1e308];
+    let f = |rng: &mut Rng| {
+        if rng.bernoulli(0.1) {
+            odd[rng.below(odd.len())]
+        } else {
+            rng.normal() * 10.0
+        }
+    };
+    match rng.below(4) {
+        0 => Record::Header(rand_meta(rng)),
+        1 => Record::Decision(DecisionRec {
+            seq,
+            t: rng.next_u64() >> 20,
+            request_id: rng.next_u64() >> 10,
+            lambda: f(rng),
+            arm: rng.below(16) as u32,
+            forced: rng.bernoulli(0.2),
+            n_eligible: rng.below(16) as u32,
+            x: (0..rng.below(12)).map(|_| f(rng)).collect(),
+            eligible: (0..rng.below(6))
+                .map(|i| EligibleSlot {
+                    slot: i as u32,
+                    blended: f(rng),
+                    c_tilde: f(rng),
+                })
+                .collect(),
+        }),
+        2 => Record::Feedback(FeedbackRec {
+            seq,
+            request_id: rng.next_u64() >> 10,
+            arm: rng.below(16) as u32,
+            reward: f(rng),
+            cost: f(rng),
+            queued: rng.bernoulli(0.5),
+        }),
+        _ => Record::Admin(AdminRec {
+            seq,
+            op: rand_admin_op(rng),
+        }),
+    }
+}
+
+#[test]
+fn property_randomized_records_roundtrip_exactly() {
+    for_cases(300, 0xD06, |rng, case| {
+        let rec = rand_record(rng, case as u64);
+        let mut buf = Vec::new();
+        rec.encode(&mut buf);
+        let back = Record::decode(&buf).unwrap_or_else(|e| panic!("decode {rec:?}: {e}"));
+        assert_eq!(back, rec, "roundtrip drift");
+        // truncating any prefix of the payload must be rejected, never
+        // misdecoded (full-consumption rule)
+        if buf.len() > 1 {
+            let cut = 1 + rng.below(buf.len() - 1);
+            assert!(
+                Record::decode(&buf[..cut]).is_err(),
+                "decode accepted a {cut}-byte prefix of a {}-byte payload",
+                buf.len()
+            );
+        }
+    });
+}
+
+/// Append a deterministic little traffic mix; returns the records the
+/// reader should hand back, in order.
+fn append_mix(w: &mut LogWriter, n: usize) -> Vec<Record> {
+    let mut expect = Vec::new();
+    for i in 0..n {
+        let x = [0.25 * i as f64, -1.0, 1.0];
+        let eligible = [0usize, 1usize];
+        let blended = [1e-4, 5.6e-3];
+        let c_tilde = [0.2, 0.9];
+        let seq = w
+            .append_decision(
+                i as u64,
+                1000 + i as u64,
+                0.125 * i as f64,
+                (i % 2) as u32,
+                false,
+                2,
+                &x,
+                &eligible,
+                &blended,
+                &c_tilde,
+            )
+            .expect("append_decision");
+        expect.push(Record::Decision(DecisionRec {
+            seq,
+            t: i as u64,
+            request_id: 1000 + i as u64,
+            lambda: 0.125 * i as f64,
+            arm: (i % 2) as u32,
+            forced: false,
+            n_eligible: 2,
+            x: x.to_vec(),
+            eligible: eligible
+                .iter()
+                .map(|&s| EligibleSlot {
+                    slot: s as u32,
+                    blended: blended[s],
+                    c_tilde: c_tilde[s],
+                })
+                .collect(),
+        }));
+        let seq = w
+            .append_feedback(1000 + i as u64, (i % 2) as u32, 0.75, 2.9e-5, true)
+            .expect("append_feedback");
+        expect.push(Record::Feedback(FeedbackRec {
+            seq,
+            request_id: 1000 + i as u64,
+            arm: (i % 2) as u32,
+            reward: 0.75,
+            cost: 2.9e-5,
+            queued: true,
+        }));
+        if i % 5 == 4 {
+            let op = AdminOp::SyncBarrier;
+            let seq = w.append_admin(&op).expect("append_admin");
+            expect.push(Record::Admin(AdminRec { seq, op }));
+        }
+    }
+    expect
+}
+
+#[test]
+fn writer_reader_roundtrip_with_contiguous_seqs() {
+    let dir = temp_dir("roundtrip");
+    let mut w = LogWriter::create(&dir, sample_meta(0), u64::MAX).unwrap();
+    let expect = append_mix(&mut w, 10);
+    drop(w); // Drop flushes
+
+    let log = read_log_dir(&dir).unwrap();
+    assert!(!log.damaged());
+    assert_eq!(log.shards.len(), 1);
+    let stream = log.shards.get(&0).unwrap();
+    assert_eq!(stream.meta, sample_meta(0));
+    assert_eq!(stream.records, expect);
+    // the private clock hands out 0..n contiguously
+    let seqs: Vec<u64> = stream.records.iter().map(Record::seq).collect();
+    assert_eq!(seqs, (0..expect.len() as u64).collect::<Vec<_>>());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Parse `[len][crc][payload]` frame spans: (start offset, total bytes).
+fn frame_spans(bytes: &[u8]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut pos = 0usize;
+    while pos + 8 <= bytes.len() {
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        if pos + 8 + len > bytes.len() {
+            break;
+        }
+        spans.push((pos, 8 + len));
+        pos += 8 + len;
+    }
+    spans
+}
+
+fn single_segment_path(dir: &std::path::Path) -> PathBuf {
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .collect();
+    assert_eq!(paths.len(), 1, "expected one segment: {paths:?}");
+    paths.pop().unwrap()
+}
+
+#[test]
+fn crc_mismatch_rejects_the_frame_and_keeps_the_prefix() {
+    let dir = temp_dir("crc");
+    let mut w = LogWriter::create(&dir, sample_meta(0), u64::MAX).unwrap();
+    let expect = append_mix(&mut w, 6);
+    drop(w);
+
+    let path = single_segment_path(&dir);
+    let clean = std::fs::read(&path).unwrap();
+    let spans = frame_spans(&clean);
+    assert_eq!(spans.len(), expect.len() + 1, "header + records");
+
+    // flip one payload byte in each record frame in turn (frame 0 is the
+    // header): everything before the damage survives, nothing after
+    for k in 1..spans.len() {
+        let mut bytes = clean.clone();
+        let (start, _) = spans[k];
+        bytes[start + 8] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let seg = read_segment(&path).unwrap();
+        assert!(seg.corrupt, "frame {k}: damage must be flagged");
+        assert!(!seg.truncated);
+        assert_eq!(seg.records, expect[..k - 1], "frame {k}: intact prefix");
+        // the dir-level reader agrees and surfaces the damage
+        let log = read_log_dir(&dir).unwrap();
+        assert!(log.damaged());
+        assert_eq!(log.n_records(), k - 1);
+    }
+
+    // a corrupted header orphans the whole segment
+    let mut bytes = clean.clone();
+    bytes[spans[0].0 + 8] ^= 0xff;
+    std::fs::write(&path, &bytes).unwrap();
+    let seg = read_segment(&path).unwrap();
+    assert!(seg.corrupt && seg.meta.is_none() && seg.records.is_empty());
+    assert!(read_log_dir(&dir).is_err(), "no readable header left");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_tail_recovers_the_intact_prefix() {
+    let dir = temp_dir("trunc");
+    let mut w = LogWriter::create(&dir, sample_meta(0), u64::MAX).unwrap();
+    let expect = append_mix(&mut w, 6);
+    drop(w);
+
+    let path = single_segment_path(&dir);
+    let clean = std::fs::read(&path).unwrap();
+    let spans = frame_spans(&clean);
+
+    // cut at every byte inside the last record frame (mid-frame crash):
+    // the prefix reads back clean, the tail is flagged, never misread
+    let (last_start, last_len) = *spans.last().unwrap();
+    for cut in last_start..last_start + last_len - 1 {
+        std::fs::write(&path, &clean[..cut + 1]).unwrap();
+        let seg = read_segment(&path).unwrap();
+        assert!(seg.truncated, "cut at {cut}: must flag truncation");
+        assert!(!seg.corrupt);
+        assert_eq!(seg.records, expect[..expect.len() - 1]);
+    }
+
+    // a cut exactly on a frame boundary is a clean file
+    std::fs::write(&path, &clean[..last_start]).unwrap();
+    let seg = read_segment(&path).unwrap();
+    assert!(!seg.truncated && !seg.corrupt);
+    assert_eq!(seg.records, expect[..expect.len() - 1]);
+
+    // dir-level: the truncated flag propagates
+    std::fs::write(&path, &clean[..clean.len() - 3]).unwrap();
+    let log = read_log_dir(&dir).unwrap();
+    assert!(log.damaged());
+    assert_eq!(log.n_records(), expect.len() - 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn property_random_cuts_never_misread() {
+    // one clean capture, arbitrary crash points: the reader must always
+    // return a strict prefix of the written records
+    let dir = temp_dir("propcut");
+    let mut w = LogWriter::create(&dir, sample_meta(0), u64::MAX).unwrap();
+    let expect = append_mix(&mut w, 12);
+    drop(w);
+    let path = single_segment_path(&dir);
+    let clean = std::fs::read(&path).unwrap();
+    let mut boundaries = vec![0usize];
+    for (start, len) in frame_spans(&clean) {
+        boundaries.push(start + len);
+    }
+    for_cases(60, 0xC07, |rng, _| {
+        let cut = rng.below(clean.len());
+        std::fs::write(&path, &clean[..cut]).unwrap();
+        let seg = read_segment(&path).unwrap();
+        let n = seg.records.len();
+        assert!(n <= expect.len());
+        assert_eq!(seg.records, expect[..n], "cut at {cut}: not a prefix");
+        assert!(!seg.corrupt, "cut at {cut}: truncation misread as damage");
+        // a cut on a frame boundary is a clean (shorter) file; anywhere
+        // else must be flagged, never silently swallowed
+        assert_eq!(
+            seg.truncated,
+            !boundaries.contains(&cut),
+            "cut at {cut}: wrong truncation flag"
+        );
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn rotation_splits_segments_and_the_reader_merges_them() {
+    let dir = temp_dir("rotate");
+    // 4096 is the clamp floor; a record frame is ~100 bytes, so 40
+    // records split across several segments
+    let mut w = LogWriter::create(&dir, sample_meta(0), 1).unwrap();
+    let expect = append_mix(&mut w, 40);
+    drop(w);
+
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .collect();
+    paths.sort();
+    assert!(paths.len() >= 2, "rotation never fired: {paths:?}");
+    for p in &paths {
+        let seg = read_segment(p).unwrap();
+        assert!(!seg.truncated && !seg.corrupt);
+        // every segment is self-describing
+        assert_eq!(seg.meta, Some(sample_meta(0)), "{}", p.display());
+    }
+    let log = read_log_dir(&dir).unwrap();
+    assert!(!log.damaged());
+    let stream = log.shards.get(&0).unwrap();
+    assert_eq!(stream.records, expect, "merge must restore append order");
+    // losing the tail segment only loses the tail records
+    let last = paths.pop().unwrap();
+    let kept_before = read_segment(&last).unwrap().records.len();
+    std::fs::remove_file(&last).unwrap();
+    let log = read_log_dir(&dir).unwrap();
+    assert_eq!(log.n_records(), expect.len() - kept_before);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn shared_clock_orders_records_across_shard_writers() {
+    let dir = temp_dir("shared");
+    let clock = Arc::new(AtomicU64::new(0));
+    let mut w0 = LogWriter::with_clock(&dir, sample_meta(0), u64::MAX, clock.clone()).unwrap();
+    let mut w1 = LogWriter::with_clock(&dir, sample_meta(1), u64::MAX, clock.clone()).unwrap();
+    // interleave appends: the ticket order is the append order
+    let mut order = Vec::new();
+    for i in 0..20u64 {
+        let (w, shard) = if i % 3 == 0 { (&mut w1, 1u32) } else { (&mut w0, 0u32) };
+        let seq = w.append_feedback(i, 0, 0.5, 1e-4, false).unwrap();
+        order.push((seq, shard, i));
+    }
+    drop(w0);
+    drop(w1);
+
+    let log = read_log_dir(&dir).unwrap();
+    assert_eq!(log.shards.len(), 2);
+    assert_eq!(log.n_records(), 20);
+    // global_order() must reproduce the append interleaving exactly
+    let merged = log.global_order();
+    assert_eq!(merged.len(), 20);
+    for (k, (shard, rec)) in merged.iter().enumerate() {
+        let (seq, want_shard, want_id) = order[k];
+        assert_eq!(rec.seq(), seq, "position {k}");
+        assert_eq!(*shard, want_shard, "position {k}");
+        match rec {
+            Record::Feedback(f) => assert_eq!(f.request_id, want_id, "position {k}"),
+            other => panic!("position {k}: unexpected {other:?}"),
+        }
+    }
+    // seqs are one strictly increasing sequence across both writers
+    assert!(merged.windows(2).all(|w| w[0].1.seq() < w[1].1.seq()));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn writer_refuses_to_clobber_and_empty_dirs_error() {
+    let dir = temp_dir("clobber");
+    let w = LogWriter::create(&dir, sample_meta(0), u64::MAX).unwrap();
+    // same shard, same dir: segment 0 already exists
+    assert!(LogWriter::create(&dir, sample_meta(0), u64::MAX).is_err());
+    drop(w);
+    let empty = temp_dir("empty");
+    std::fs::create_dir_all(&empty).unwrap();
+    assert!(read_log_dir(&empty).is_err());
+    assert!(read_log_dir(&temp_dir("missing")).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&empty);
+}

@@ -12,8 +12,17 @@
 //! `route()`/`feedback()` path EXACTLY — on a synthetic stream with
 //! admin churn, on an exp1-style stationary stream, and on the exp2
 //! cost-drift scenario timeline.
+//!
+//! Part 3 — replay-based goldens: every builder policy replayed over a
+//! deterministic fixture capture (the decision-log format from
+//! `rust/src/log/`) produces a stable quality/spend summary, and the
+//! captured policy reproduces the fixture's realised totals exactly.
 
 use paretobandit::exp::{conditions, run_phases, stream_order, ExpEnv, Phase};
+use paretobandit::log::{
+    read_log_dir, replay_policy, AdminOp, CaptureMeta, LogWriter, ModelMeta,
+    DEFAULT_SEGMENT_BYTES,
+};
 use paretobandit::router::{
     build_policy, policy_names, BuildCtx, ModelSpec, ParetoRouter, PolicyHost, Prior,
     RouterConfig,
@@ -330,4 +339,201 @@ fn golden_exp2_costdrift_timeline_is_bit_identical() {
             "step {t}: λ"
         );
     }
+}
+
+// ----------------------------------------------------------------------
+// replay-based goldens over a deterministic fixture capture
+
+const CAP_SEED: u64 = 42;
+const CAP_POLICY: &str = "paretobandit";
+const CAP_STEPS: u64 = 240;
+
+/// Realised totals of the fixture capture, for golden comparison.
+struct CaptureTotals {
+    decisions: u64,
+    reward_sum: f64,
+    cost_sum: f64,
+    /// final dual λ of the capturing host (bits)
+    lambda_bits: u64,
+}
+
+/// Write the fixture capture: a single-shard cold capture of the
+/// `paretobandit` policy over the Part-1 reward schedule, with admin
+/// churn (runtime onboarding, a reprice, a budget change) logged
+/// mid-stream — each record appended exactly the way the serving path
+/// logs it (decision after route, feedback after apply, admin after
+/// success, `queued=false` on the single-worker path).
+fn capture_fixture(dir: &std::path::Path) -> CaptureTotals {
+    let models = table1();
+    let mut host = build(CAP_POLICY, CAP_SEED);
+    let meta = CaptureMeta {
+        shard: 0,
+        d: D as u32,
+        seed: CAP_SEED,
+        budget: Some(BUDGET),
+        policy: CAP_POLICY.to_string(),
+        warm: false,
+        models: models
+            .iter()
+            .map(|m| {
+                Some(ModelMeta {
+                    name: m.name.clone(),
+                    price_in: m.price_in,
+                    price_out: m.price_out,
+                    prior: m.prior,
+                })
+            })
+            .collect(),
+    };
+    let mut w = LogWriter::create(dir, meta, DEFAULT_SEGMENT_BYTES).expect("fixture writer");
+    let mut rng = Rng::new(314);
+    let means = [0.55, 0.9, 0.7, 0.8];
+    let costs = [2.9e-5, 5.3e-4, 1.5e-2, 2.0e-4];
+    let mut totals = CaptureTotals {
+        decisions: 0,
+        reward_sum: 0.0,
+        cost_sum: 0.0,
+        lambda_bits: 0,
+    };
+    for i in 0..CAP_STEPS {
+        if i == 80 {
+            let slot = host.add_model("flash", 0.3, 2.5, Some((20.0, 0.5)));
+            assert_eq!(slot, 3, "fixture: onboarded model lands on slot 3");
+            w.append_admin(&AdminOp::AddModel {
+                name: "flash".to_string(),
+                price_in: 0.3,
+                price_out: 2.5,
+                prior: Some((20.0, 0.5)),
+            })
+            .unwrap();
+        }
+        if i == 160 {
+            assert!(host.reprice(2, 0.6, 5.0));
+            w.append_admin(&AdminOp::Reprice {
+                slot: 2,
+                price_in: 0.6,
+                price_out: 5.0,
+            })
+            .unwrap();
+            assert!(host.set_budget(BUDGET * 1.5));
+            w.append_admin(&AdminOp::SetBudget {
+                budget: BUDGET * 1.5,
+            })
+            .unwrap();
+        }
+        let x = ctx(&mut rng);
+        let d = host.route(&x);
+        w.append_decision(
+            host.step(),
+            i,
+            d.lambda,
+            d.arm as u32,
+            d.forced,
+            d.n_eligible as u32,
+            &x,
+            host.last_eligible(),
+            host.blended_prices(),
+            host.c_tilde_prices(),
+        )
+        .unwrap();
+        let m = means.get(d.arm).copied().unwrap_or(0.5);
+        let c = costs.get(d.arm).copied().unwrap_or(1e-4);
+        let r = (m + 0.03 * rng.normal()).clamp(0.0, 1.0);
+        host.feedback(d.arm, &x, r, c);
+        w.append_feedback(i, d.arm as u32, r, c, false).unwrap();
+        totals.decisions += 1;
+        totals.reward_sum += r;
+        totals.cost_sum += c;
+    }
+    w.flush().unwrap();
+    totals.lambda_bits = host.lambda().to_bits();
+    totals
+}
+
+fn fixture_dir(name: &str) -> std::path::PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("pb_conf_replay_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn replay_golden_captured_policy_reproduces_the_fixture_exactly() {
+    let dir = fixture_dir("golden");
+    let totals = capture_fixture(&dir);
+    let log = read_log_dir(&dir).unwrap();
+    assert!(!log.damaged());
+
+    let rep = replay_policy(&log, CAP_POLICY).unwrap();
+    assert_eq!(rep.decisions, totals.decisions);
+    assert_eq!(rep.scored, totals.decisions);
+    assert_eq!(
+        rep.diverged, 0,
+        "captured policy must replay bit-identically: {:?}",
+        rep.divergences
+    );
+    assert_eq!(rep.matched, rep.scored);
+    assert_eq!(rep.lambda_drift, 0, "λ trajectory must reproduce exactly");
+    assert!(!rep.hit_restore);
+    // single shard, same stream order, raw-bit storage: the realised
+    // totals reproduce to the last bit, not approximately
+    assert_eq!(rep.reward_matched.to_bits(), totals.reward_sum.to_bits());
+    assert_eq!(rep.est_spend.to_bits(), totals.cost_sum.to_bits());
+    assert_eq!(rep.lambda.to_bits(), totals.lambda_bits);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn replay_golden_every_policy_summary_is_stable() {
+    let dir = fixture_dir("all");
+    let totals = capture_fixture(&dir);
+    let log = read_log_dir(&dir).unwrap();
+
+    for name in policy_names() {
+        let a = replay_policy(&log, name).unwrap_or_else(|e| panic!("{name}: replay: {e}"));
+        let b = replay_policy(&log, name).unwrap_or_else(|e| panic!("{name}: replay: {e}"));
+        // the summary document is the golden artifact: two independent
+        // replays must serialize byte-identically
+        assert_eq!(
+            a.to_json().to_string(),
+            b.to_json().to_string(),
+            "{name}: replay summary is not stable"
+        );
+        assert_eq!(a.decisions, totals.decisions, "{name}: decision count");
+        assert_eq!(a.scored, totals.decisions, "{name}: scored count");
+        assert!(a.matched <= a.scored, "{name}: matched bound");
+        assert!(
+            a.est_spend.is_finite() && a.est_spend >= 0.0,
+            "{name}: est_spend must be a finite non-negative total"
+        );
+        assert!(
+            a.reward_matched.is_finite(),
+            "{name}: reward total must be finite"
+        );
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Regenerates `tests/fixtures/replay/` (the on-disk capture plus the
+/// per-policy summary lines) after a deliberate codec or policy change:
+/// `cargo test -q --test policy_conformance -- --ignored`.
+#[test]
+#[ignore = "writes tests/fixtures/replay; run explicitly after a format change"]
+fn regen_replay_fixture() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/replay");
+    let cap = root.join("capture");
+    let _ = std::fs::remove_dir_all(&cap);
+    capture_fixture(&cap);
+    let log = read_log_dir(&cap).unwrap();
+    let mut lines = Vec::new();
+    for name in policy_names() {
+        let rep = replay_policy(&log, name).unwrap();
+        lines.push(rep.to_json().to_string());
+    }
+    std::fs::create_dir_all(&root).unwrap();
+    let mut doc = lines.join("\n");
+    doc.push('\n');
+    std::fs::write(root.join("summaries.jsonl"), doc).unwrap();
 }

@@ -1,0 +1,258 @@
+//! End-to-end replay conformance: capture a stationary exp1-style run
+//! through a 4-shard engine with per-shard decision logs (the `serve
+//! --log-dir` wiring, shared capture clock and all), replay the capture
+//! with the same policy, and assert the decision sequence and λ
+//! trajectory reproduce bit-identically.  Also: the capture's decision
+//! records agree with what the client was told, counterfactual replay of
+//! a different policy runs over the same capture, and `replay
+//! --export-priors` output loads through the `serve --restore` path.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
+use std::time::Duration;
+
+use paretobandit::client::ParetoClient;
+use paretobandit::log::{
+    export_priors, read_log_dir, replay_policy, CaptureMeta, LogWriter, ModelMeta, Record,
+    DEFAULT_SEGMENT_BYTES,
+};
+use paretobandit::pacer::{PacerConfig, SharedPacer};
+use paretobandit::router::{build_policy, BuildCtx, ContextCache, ModelRef, ModelSpec};
+use paretobandit::scenario::snapshot;
+use paretobandit::server::{EngineConfig, Metrics, ServerState, ShardedEngine};
+use paretobandit::sim::hash_features;
+use paretobandit::util::rng::Rng;
+
+const D: usize = 6;
+const BUDGET: f64 = 6.6e-4;
+const POLICY: &str = "paretobandit";
+
+fn table1() -> Vec<ModelSpec> {
+    vec![
+        ModelSpec::new("llama-3.1-8b", 0.10, 0.10).with_prior(25.0, 0.7),
+        ModelSpec::new("mistral-large", 0.40, 1.60).with_prior(25.0, 0.7),
+        ModelSpec::new("gemini-2.5-pro", 1.25, 10.0).with_prior(25.0, 0.7),
+    ]
+}
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pb_replay_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Spawn a 4-shard engine exactly the way `serve --log-dir` builds one:
+/// cold Table-1 portfolio with priors, seed `42 + shard`, one shared
+/// budget ledger, one shared capture clock, a `LogWriter` per shard with
+/// a cold-rebuild header.  Merge cycles are pushed out to an hour so
+/// none fires mid-capture (an unlogged cross-shard posterior adoption
+/// would break bit-identity; see docs/replay.md).
+fn spawn_logged_engine(log_dir: &std::path::Path) -> ShardedEngine {
+    let ledger = Arc::new(SharedPacer::new(PacerConfig::new(BUDGET)));
+    let clock = Arc::new(AtomicU64::new(0));
+    let dir = log_dir.to_path_buf();
+    let build = move |shard: usize| {
+        let models = table1();
+        let mut host = build_policy(
+            POLICY,
+            &BuildCtx {
+                d: D,
+                budget: Some(BUDGET),
+                seed: 42 + shard as u64,
+                models: &models,
+            },
+        )
+        .expect("build policy");
+        host.use_shared_pacer(ledger.clone());
+        let mut state = ServerState::with_host(
+            host,
+            ContextCache::new(65536),
+            Box::new(|t: &str| Ok(hash_features(t, D))),
+            Arc::new(Metrics::new()),
+        );
+        let meta = CaptureMeta {
+            shard: shard as u32,
+            d: D as u32,
+            seed: 42 + shard as u64,
+            budget: Some(BUDGET),
+            policy: POLICY.to_string(),
+            warm: false,
+            models: models
+                .iter()
+                .map(|m| {
+                    Some(ModelMeta {
+                        name: m.name.clone(),
+                        price_in: m.price_in,
+                        price_out: m.price_out,
+                        prior: m.prior,
+                    })
+                })
+                .collect(),
+        };
+        let w = LogWriter::with_clock(&dir, meta, DEFAULT_SEGMENT_BYTES, clock.clone())
+            .expect("log writer");
+        state.attach_log(w);
+        state
+    };
+    ShardedEngine::spawn(
+        "127.0.0.1:0",
+        EngineConfig::new(4).merge_every(Duration::from_secs(3600)),
+        build,
+    )
+    .unwrap()
+}
+
+/// Deterministic per-arm reward/cost schedule (the exp1-style stationary
+/// world: distinct means make the stream informative).
+fn judge(rng: &mut Rng, arm: usize) -> (f64, f64) {
+    let means = [0.55, 0.9, 0.7, 0.8];
+    let costs = [2.9e-5, 5.3e-4, 1.5e-2, 2.0e-4];
+    let m = means.get(arm).copied().unwrap_or(0.5);
+    let c = costs.get(arm).copied().unwrap_or(1e-4);
+    ((m + 0.03 * rng.normal()).clamp(0.0, 1.0), c)
+}
+
+#[test]
+fn captured_run_replays_bit_identically_and_exports_loadable_priors() {
+    let dir = temp_dir("e2e");
+    let engine = spawn_logged_engine(&dir);
+    let mut c = ParetoClient::connect(engine.addr).unwrap();
+    let mut rng = Rng::new(2024);
+    // id → (served arm, λ bits) as the client observed them
+    let mut served: HashMap<u64, (usize, u64)> = HashMap::new();
+
+    // phase A: stationary singles
+    for i in 0..60u64 {
+        let r = c.route(i, &format!("stationary prompt {i}")).unwrap();
+        let (reward, cost) = judge(&mut rng, r.arm);
+        c.feedback(i, reward, cost).unwrap();
+        served.insert(i, (r.arm, r.lambda.to_bits()));
+    }
+    // runtime onboarding, then more traffic across 4 arms
+    let flash = c.add_model("flash", 0.3, 2.5, Some((20.0, 0.5))).unwrap();
+    assert_eq!(flash, 3);
+    for i in 100..140u64 {
+        let r = c.route(i, &format!("onboarded prompt {i}")).unwrap();
+        let (reward, cost) = judge(&mut rng, r.arm);
+        c.feedback(i, reward, cost).unwrap();
+        served.insert(i, (r.arm, r.lambda.to_bits()));
+    }
+    // price drift + budget change mid-capture
+    c.reprice(&ModelRef::Name("gemini-2.5-pro".into()), 0.6, 5.0).unwrap();
+    c.set_budget(BUDGET * 1.5).unwrap();
+    // a vectorized batch (one shard, one eligibility pass)
+    let items: Vec<(u64, String)> = (200..208u64).map(|i| (i, format!("batch {i}"))).collect();
+    for r in c.route_batch(&items).unwrap() {
+        let r = r.unwrap();
+        let (reward, cost) = judge(&mut rng, r.arm);
+        c.feedback(r.id, reward, cost).unwrap();
+        served.insert(r.id, (r.arm, r.lambda.to_bits()));
+    }
+    // merge cycle at the very end: logs the sync barriers + flushes
+    c.sync().unwrap();
+    engine.stop();
+
+    // --- capture fidelity: the log records what the client was told
+    let log = read_log_dir(&dir).unwrap();
+    assert!(!log.damaged(), "clean shutdown must leave clean segments");
+    assert_eq!(log.shards.len(), 4);
+    let mut n_dec = 0usize;
+    let mut n_fb = 0usize;
+    let mut n_barrier = 0usize;
+    for (_, rec) in log.merged() {
+        match rec {
+            Record::Decision(d) => {
+                n_dec += 1;
+                let (arm, lambda_bits) = served[&d.request_id];
+                assert_eq!(d.arm as usize, arm, "id {}: logged arm drifted", d.request_id);
+                assert_eq!(
+                    d.lambda.to_bits(),
+                    lambda_bits,
+                    "id {}: logged λ drifted",
+                    d.request_id
+                );
+                assert_eq!(d.x.len(), D);
+                assert!(!d.eligible.is_empty(), "id {}: empty eligible set", d.request_id);
+                assert!(
+                    d.eligible.iter().any(|e| e.slot == d.arm),
+                    "id {}: served arm missing from the eligible table",
+                    d.request_id
+                );
+            }
+            Record::Feedback(f) => {
+                n_fb += 1;
+                assert!(f.queued, "sharded feedback is queued for the merge cycle");
+                assert_eq!(f.arm as usize, served[&f.request_id].0);
+            }
+            Record::Admin(a) => {
+                if matches!(a.op, paretobandit::log::AdminOp::SyncBarrier) {
+                    n_barrier += 1;
+                }
+            }
+            Record::Header(_) => unreachable!("headers are not records"),
+        }
+    }
+    assert_eq!(n_dec, served.len());
+    assert_eq!(n_fb, served.len());
+    assert_eq!(n_barrier, 4, "one sync barrier per shard");
+
+    // --- bit-identical replay of the captured policy
+    let rep = replay_policy(&log, POLICY).unwrap();
+    assert_eq!(rep.decisions, served.len() as u64);
+    assert_eq!(rep.scored, served.len() as u64);
+    assert_eq!(
+        rep.diverged, 0,
+        "decision sequence must reproduce bit-identically: {:?}",
+        rep.divergences
+    );
+    assert_eq!(rep.matched, rep.scored);
+    assert_eq!(rep.lambda_drift, 0, "λ trajectory must reproduce bit-identically");
+    assert!(!rep.hit_restore);
+    assert!(rep.est_spend > 0.0 && rep.est_spend.is_finite());
+
+    // --- counterfactual replay of a different policy over the same log
+    let cheap = replay_policy(&log, "fixed:llama-3.1-8b").unwrap();
+    assert_eq!(cheap.decisions, rep.decisions);
+    assert_eq!(cheap.scored, rep.scored);
+    // the capture explored past llama, so the fixed policy must diverge
+    // somewhere and be charged declared prices there
+    assert!(cheap.diverged > 0);
+    assert!(cheap.matched < cheap.scored);
+    assert!(cheap.est_spend > 0.0 && cheap.est_spend.is_finite());
+
+    // --- exported priors load through the serve --restore path
+    let snap_path = dir.join("fitted.snap.json");
+    let mut rep = rep;
+    let (kind, st) = export_priors(&mut rep).unwrap();
+    assert_eq!(kind, POLICY);
+    snapshot::save_value(&snap_path, Some(&kind), &st).unwrap();
+    let (tag, loaded) = snapshot::load_value(&snap_path).unwrap();
+    assert_eq!(tag.as_deref(), Some(POLICY));
+    // mirror serve --restore: trial-restore on a probe host built with an
+    // empty portfolio (the snapshot carries the portfolio)
+    let mut probe = build_policy(
+        POLICY,
+        &BuildCtx {
+            d: D,
+            budget: Some(BUDGET),
+            seed: 0,
+            models: &[],
+        },
+    )
+    .unwrap();
+    probe.restore_state(&loaded).expect("snapshot must restore");
+    assert_eq!(
+        probe.registry().n_active(),
+        4,
+        "restored portfolio carries the onboarded model too"
+    );
+    assert!(probe.step() > 0, "restored host carries the fitted clock");
+    // the restored host routes without panicking on a fresh context
+    let x: Vec<f64> = (0..D).map(|i| if i == D - 1 { 1.0 } else { 0.1 }).collect();
+    let d = probe.route(&x);
+    assert!(probe.registry().is_active(d.arm));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
