@@ -1,0 +1,456 @@
+//! Open-loop serving load harness: event-loop reactor vs threaded oracle.
+//!
+//! Two measurement modes, both driven by one single-threaded poll-based
+//! load generator (`LoadGen`, built on the same `server::sys::Poller` the
+//! reactor uses) so client-side scheduling never hides server-side
+//! queueing:
+//!
+//! * **capacity** — closed-loop windowed pipelining: C connections each
+//!   keep K `route` requests in flight; sustained req/s = completions /
+//!   wall-clock.  Run for the headline comparison (256 conns, 4 shards,
+//!   event vs threaded — the event loop must sustain >= 4x), a shard
+//!   sweep (1/2/4 shards) and an in-flight-depth sweep (K = 1/4/16/64).
+//! * **latency** — open-loop Poisson arrivals at a fixed rate: every
+//!   request's latency is measured from its *scheduled* arrival time, not
+//!   from the instant the socket write happened, so a stalled generator
+//!   cannot commit coordinated omission.  Latencies land in the
+//!   log-bucketed `util::hist::Hist`; p50/p99/p999 are reported and the
+//!   full histograms are written to `serve_load_hist.json` (the CI
+//!   artifact).
+//!
+//! Emits `serve_load` (event) and `serve_load_threaded` entries into the
+//! committed `BENCH_routing.json` trajectory: `mean_ns` is the sustained
+//! per-request service time at capacity (1e9 / req/s — so the >= 4x
+//! req/s claim reads as `serve_load_threaded.mean_ns >= 4 *
+//! serve_load.mean_ns`), `p50_ns`/`p99_ns` are the open-loop latency
+//! percentiles.  See `docs/serving.md` for the field semantics.
+//!
+//! Run: `cargo bench --bench serve_load`.  Env overrides:
+//!   PB_LOAD_CONNS    connections for the headline runs   (default 256)
+//!   PB_LOAD_WINDOW   in-flight window per connection     (default 8)
+//!   PB_LOAD_SECS     seconds per capacity cell           (default 2)
+//!   PB_LOAD_LAT_SECS seconds for each latency phase      (default 3)
+//!   PB_LOAD_RATE     open-loop arrivals/s; <= 0 derives
+//!                    0.6x the threaded capacity          (default 0)
+//!   PB_LOAD_SWEEPS   run shard + window sweeps (0 = off) (default 1)
+//!   PB_LOAD_OUT      trajectory file                     (default BENCH_routing.json)
+//!   PB_LOAD_HIST     histogram artifact file             (default serve_load_hist.json)
+//!   PB_LOAD_MIN_RATIO fail unless event req/s >= ratio x
+//!                    threaded req/s; <= 0 disables       (default 0)
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use paretobandit::pacer::{PacerConfig, SharedPacer};
+use paretobandit::router::{ContextCache, ParetoRouter, Prior, RouterConfig};
+use paretobandit::server::sys::{Event, Poller};
+use paretobandit::server::{EngineConfig, EventEngine, Metrics, ServerState, ShardedEngine};
+use paretobandit::sim::hash_features;
+use paretobandit::util::benchio::{self, BenchEntry};
+use paretobandit::util::env_or;
+use paretobandit::util::hist::Hist;
+use paretobandit::util::json::Json;
+use paretobandit::util::rng::Rng;
+
+const D: usize = 8;
+const BUDGET: f64 = 6.6e-4;
+
+fn builder() -> impl Fn(usize) -> ServerState + Send + Sync + 'static {
+    let ledger = Arc::new(SharedPacer::new(PacerConfig::new(BUDGET)));
+    move |shard: usize| {
+        let mut router =
+            ParetoRouter::new(RouterConfig::tabula_rasa(D, Some(BUDGET), 500 + shard as u64));
+        router.use_shared_pacer(ledger.clone());
+        router.add_model("llama", 0.10, 0.10, Prior::Cold);
+        router.add_model("mistral", 0.40, 1.60, Prior::Cold);
+        router.add_model("gemini", 1.25, 10.0, Prior::Cold);
+        ServerState::new(
+            router,
+            ContextCache::new(65536),
+            Box::new(|t: &str| Ok(hash_features(t, D))),
+            Arc::new(Metrics::new()),
+        )
+    }
+}
+
+enum AnyEngine {
+    Event(EventEngine),
+    Threaded(ShardedEngine),
+}
+
+impl AnyEngine {
+    fn spawn(event: bool, workers: usize) -> AnyEngine {
+        // timer merges are not the point here; push them out so every
+        // cell measures pure dispatch + routing work
+        let cfg = EngineConfig::new(workers).merge_every(Duration::from_secs(3600));
+        if event {
+            AnyEngine::Event(EventEngine::spawn("127.0.0.1:0", cfg, builder()).expect("spawn"))
+        } else {
+            AnyEngine::Threaded(
+                ShardedEngine::spawn("127.0.0.1:0", cfg, builder()).expect("spawn"),
+            )
+        }
+    }
+
+    fn addr(&self) -> SocketAddr {
+        match self {
+            AnyEngine::Event(e) => e.addr,
+            AnyEngine::Threaded(e) => e.addr,
+        }
+    }
+
+    fn stop(self) {
+        match self {
+            AnyEngine::Event(e) => e.stop(),
+            AnyEngine::Threaded(e) => e.stop(),
+        }
+    }
+}
+
+struct LoadConn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    want_write: bool,
+}
+
+/// Single-threaded poll-based load generator over C nonblocking conns.
+struct LoadGen {
+    poller: Poller,
+    conns: Vec<LoadConn>,
+    next_id: u64,
+    scratch: Vec<u8>,
+}
+
+impl LoadGen {
+    fn connect(addr: SocketAddr, n: usize) -> LoadGen {
+        let mut poller = Poller::new().expect("poller");
+        let mut conns = Vec::with_capacity(n);
+        for i in 0..n {
+            let stream = TcpStream::connect(addr).expect("connect");
+            stream.set_nodelay(true).expect("nodelay");
+            stream.set_nonblocking(true).expect("nonblocking");
+            poller
+                .register(stream.as_raw_fd(), i, true, false)
+                .expect("register");
+            conns.push(LoadConn {
+                stream,
+                rbuf: Vec::new(),
+                wbuf: Vec::new(),
+                wpos: 0,
+                want_write: false,
+            });
+        }
+        LoadGen {
+            poller,
+            conns,
+            next_id: 0,
+            scratch: vec![0u8; 64 * 1024],
+        }
+    }
+
+    /// Queue one route request on connection `c`; returns the request id.
+    fn push_route(&mut self, c: usize, salt: usize) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        let conn = &mut self.conns[c];
+        conn.wbuf.extend_from_slice(
+            format!(r#"{{"v":2,"op":"route","id":{id},"prompt":"load prompt {salt}"}}"#)
+                .as_bytes(),
+        );
+        conn.wbuf.push(b'\n');
+        id
+    }
+
+    fn flush(&mut self, c: usize) {
+        let conn = &mut self.conns[c];
+        while conn.wpos < conn.wbuf.len() {
+            match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+                Ok(0) => break,
+                Ok(n) => conn.wpos += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+        if conn.wpos >= conn.wbuf.len() {
+            conn.wbuf.clear();
+            conn.wpos = 0;
+        } else if conn.wpos > 0 {
+            conn.wbuf.drain(..conn.wpos);
+            conn.wpos = 0;
+        }
+        let want = !conn.wbuf.is_empty();
+        if want != conn.want_write {
+            conn.want_write = want;
+            let _ = self
+                .poller
+                .modify(conn.stream.as_raw_fd(), c, true, want);
+        }
+    }
+
+    /// Read whatever is available on connection `c` and return complete
+    /// response lines.
+    fn read_lines(&mut self, c: usize) -> Vec<String> {
+        let conn = &mut self.conns[c];
+        loop {
+            match conn.stream.read(&mut self.scratch) {
+                Ok(0) => break,
+                Ok(n) => conn.rbuf.extend_from_slice(&self.scratch[..n]),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+        let mut out = Vec::new();
+        let mut start = 0usize;
+        while let Some(pos) = conn.rbuf[start..].iter().position(|&b| b == b'\n') {
+            let end = start + pos;
+            out.push(String::from_utf8_lossy(&conn.rbuf[start..end]).into_owned());
+            start = end + 1;
+        }
+        if start > 0 {
+            conn.rbuf.drain(..start);
+        }
+        out
+    }
+
+    /// Returns an owned event list so callers can mutate the generator
+    /// (flush/read) while iterating it.
+    fn wait(&mut self, timeout: Duration) -> Vec<Event> {
+        let mut events = Vec::new();
+        let _ = self.poller.wait(&mut events, Some(timeout));
+        events
+    }
+}
+
+/// Closed-loop windowed capacity: C conns x K in flight, `secs` seconds.
+fn capacity_rps(addr: SocketAddr, conns: usize, window: usize, secs: f64) -> f64 {
+    let mut gen = LoadGen::connect(addr, conns);
+    for c in 0..conns {
+        for s in 0..window {
+            gen.push_route(c, c * 131 + s);
+        }
+        gen.flush(c);
+    }
+    let t0 = Instant::now();
+    let deadline = t0 + Duration::from_secs_f64(secs);
+    let mut completed = 0u64;
+    while Instant::now() < deadline {
+        let events = gen.wait(Duration::from_millis(20));
+        for ev in events {
+            let c = ev.token;
+            if c >= gen.conns.len() {
+                continue;
+            }
+            if ev.writable {
+                gen.flush(c);
+            }
+            if ev.readable || ev.hangup {
+                let lines = gen.read_lines(c);
+                let k = lines.len();
+                if k > 0 {
+                    completed += k as u64;
+                    for s in 0..k {
+                        gen.push_route(c, completed as usize + s);
+                    }
+                    gen.flush(c);
+                }
+            }
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    completed as f64 / elapsed
+}
+
+/// Open-loop Poisson latency phase; returns the latency histogram in µs.
+fn open_loop_hist(addr: SocketAddr, conns: usize, rate: f64, secs: f64, seed: u64) -> Hist {
+    let mut gen = LoadGen::connect(addr, conns);
+    let mut rng = Rng::new(seed);
+    let mut hist = Hist::new();
+    let mut sched: HashMap<u64, Instant> = HashMap::new();
+    let t0 = Instant::now();
+    let run_end = t0 + Duration::from_secs_f64(secs);
+    // drain window after the last arrival so tail latencies are counted
+    let drain_end = run_end + Duration::from_secs(5);
+    let mut next_arrival = t0;
+    let mut next_conn = 0usize;
+    loop {
+        let now = Instant::now();
+        if now >= drain_end || (now >= run_end && sched.is_empty()) {
+            break;
+        }
+        // launch every arrival that is due, on schedule, regardless of
+        // how the previous ones are doing (open loop)
+        let mut touched: Vec<usize> = Vec::new();
+        while now >= next_arrival && next_arrival < run_end {
+            let c = next_conn % gen.conns.len();
+            next_conn += 1;
+            let id = gen.push_route(c, sched.len());
+            sched.insert(id, next_arrival);
+            touched.push(c);
+            let dt = -(1.0 - rng.f64()).ln() / rate;
+            next_arrival += Duration::from_secs_f64(dt);
+        }
+        touched.sort_unstable();
+        touched.dedup();
+        for c in touched {
+            gen.flush(c);
+        }
+        let until_arrival = if next_arrival < run_end {
+            next_arrival.saturating_duration_since(Instant::now())
+        } else {
+            Duration::from_millis(20)
+        };
+        let events = gen.wait(until_arrival.min(Duration::from_millis(20)));
+        for ev in events {
+            let c = ev.token;
+            if c >= gen.conns.len() {
+                continue;
+            }
+            if ev.writable {
+                gen.flush(c);
+            }
+            if ev.readable || ev.hangup {
+                for line in gen.read_lines(c) {
+                    let Ok(resp) = Json::parse(&line) else { continue };
+                    let Some(id) = resp.get("id").and_then(Json::as_f64) else { continue };
+                    if let Some(at) = sched.remove(&(id as u64)) {
+                        // latency from the *scheduled* arrival: queueing
+                        // delay inside the generator counts against the
+                        // server, never silently dropped
+                        hist.record(Instant::now().duration_since(at).as_micros() as u64);
+                    }
+                }
+            }
+        }
+    }
+    hist
+}
+
+fn engine_label(event: bool) -> &'static str {
+    if event {
+        "event"
+    } else {
+        "threaded"
+    }
+}
+
+fn measure_capacity(event: bool, workers: usize, conns: usize, window: usize, secs: f64) -> f64 {
+    let engine = AnyEngine::spawn(event, workers);
+    let rps = capacity_rps(engine.addr(), conns, window, secs);
+    engine.stop();
+    println!(
+        "[serve_load] capacity {:>8} engine, {workers} shard(s), {conns} conns, window {window}: {rps:>10.0} req/s",
+        engine_label(event)
+    );
+    rps
+}
+
+fn measure_latency(event: bool, workers: usize, conns: usize, rate: f64, secs: f64) -> Hist {
+    let engine = AnyEngine::spawn(event, workers);
+    let hist = open_loop_hist(engine.addr(), conns, rate, secs, 77);
+    engine.stop();
+    println!(
+        "[serve_load] open-loop {:>8} engine at {rate:.0}/s: n={} p50={}us p99={}us p999={}us max={}us",
+        engine_label(event),
+        hist.count(),
+        hist.p50(),
+        hist.p99(),
+        hist.p999(),
+        hist.max()
+    );
+    hist
+}
+
+fn main() {
+    let conns: usize = env_or("PB_LOAD_CONNS", 256);
+    let window: usize = env_or("PB_LOAD_WINDOW", 8);
+    let secs: f64 = env_or("PB_LOAD_SECS", 2.0);
+    let lat_secs: f64 = env_or("PB_LOAD_LAT_SECS", 3.0);
+    let rate_override: f64 = env_or("PB_LOAD_RATE", 0.0);
+    let sweeps: usize = env_or("PB_LOAD_SWEEPS", 1);
+    let out_path: String = env_or("PB_LOAD_OUT", "BENCH_routing.json".to_string());
+    let hist_path: String = env_or("PB_LOAD_HIST", "serve_load_hist.json".to_string());
+    let min_ratio: f64 = env_or("PB_LOAD_MIN_RATIO", 0.0);
+    let workers = 4usize;
+    let sha = benchio::git_sha();
+    println!(
+        "[serve_load] {conns} conns, window {window}, {secs}s/cell, sha {sha}, out {out_path}"
+    );
+
+    // headline: sustained req/s at 256 conns on 4 shards, both engines
+    let event_rps = measure_capacity(true, workers, conns, window, secs);
+    let threaded_rps = measure_capacity(false, workers, conns, window, secs);
+    let ratio = event_rps / threaded_rps.max(1.0);
+    println!(
+        "[serve_load] headline: event {event_rps:.0} req/s vs threaded {threaded_rps:.0} req/s ({ratio:.2}x)"
+    );
+
+    if sweeps > 0 {
+        // req/s vs shard count (event engine)
+        for w in [1usize, 2, 4] {
+            measure_capacity(true, w, conns, window, secs);
+        }
+        // req/s vs in-flight depth (event engine, 4 shards)
+        for k in [1usize, 4, 16, 64] {
+            measure_capacity(true, workers, conns, k, secs);
+        }
+    }
+
+    // open-loop latency at a shared sub-saturation rate so the two
+    // engines' histograms are comparable
+    let rate = if rate_override > 0.0 {
+        rate_override
+    } else {
+        (0.6 * threaded_rps).clamp(500.0, 20_000.0)
+    };
+    let ev_hist = measure_latency(true, workers, conns, rate, lat_secs);
+    let th_hist = measure_latency(false, workers, conns, rate, lat_secs);
+
+    let hist_doc = Json::obj(vec![
+        ("rate_rps", Json::Num(rate)),
+        ("conns", Json::Num(conns as f64)),
+        ("shards", Json::Num(workers as f64)),
+        ("event_capacity_rps", Json::Num(event_rps)),
+        ("threaded_capacity_rps", Json::Num(threaded_rps)),
+        ("event", ev_hist.to_json()),
+        ("threaded", th_hist.to_json()),
+    ]);
+    std::fs::write(&hist_path, format!("{}\n", hist_doc.to_string())).expect("write hist");
+    println!("[serve_load] histograms written to {hist_path}");
+
+    // trajectory entries: mean_ns = sustained per-request service time at
+    // capacity (1e9 / req/s); p50/p99 from the open-loop latency phase
+    let entry = |rps: f64, h: &Hist| BenchEntry {
+        p50_ns: h.p50() as f64 * 1e3,
+        p99_ns: h.p99() as f64 * 1e3,
+        mean_ns: 1e9 / rps.max(1.0),
+        iters: h.count(),
+        git_sha: sha.clone(),
+    };
+    let mut fresh = std::collections::BTreeMap::new();
+    fresh.insert("serve_load".to_string(), entry(event_rps, &ev_hist));
+    fresh.insert(
+        "serve_load_threaded".to_string(),
+        entry(threaded_rps, &th_hist),
+    );
+    benchio::merge_write(&out_path, &fresh).expect("write trajectory");
+    println!(
+        "[serve_load] wrote serve_load (p999 {}us) + serve_load_threaded (p999 {}us) to {out_path}",
+        ev_hist.p999(),
+        th_hist.p999()
+    );
+
+    if min_ratio > 0.0 && ratio < min_ratio {
+        eprintln!(
+            "[serve_load] FAIL: event/threaded capacity ratio {ratio:.2}x below required {min_ratio}x"
+        );
+        std::process::exit(1);
+    }
+}

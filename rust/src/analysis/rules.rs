@@ -67,6 +67,7 @@ const ATOMIC_FILES: &[&str] = &[
     "rust/src/pacer/shared.rs",
     "rust/src/server/metrics.rs",
     "rust/src/server/engine.rs",
+    "rust/src/server/reactor.rs",
 ];
 
 /// Is this path in the request-serving call graph (panic-freedom scope)?

@@ -6,6 +6,7 @@
 //!                       [--workers N] [--merge-ms MS] [--restore SNAP]
 //!                       [--policy NAME[:ARG]] [--shadow NAME[,NAME...]]
 //!                       [--log-dir DIR]      (capture a decision log)
+//!                       [--threaded]         (deprecated conformance oracle)
 //! paretobandit replay   --log-dir DIR [--policy NAME[,NAME...]]
 //!                       [--check] [--export-priors SNAP]
 //! paretobandit scenario <spec.toml> [--seeds N] [--budget B]
@@ -36,7 +37,9 @@ use paretobandit::router::{
 };
 use paretobandit::runtime::{default_artifacts_dir, ArtifactMeta, Embedder, Runtime};
 use paretobandit::scenario::{self, snapshot, RunOptions, ScenarioRun, ScenarioSpec};
-use paretobandit::server::{EngineConfig, Featurize, Metrics, ServerState, ShardedEngine};
+use paretobandit::server::{
+    EngineConfig, EventEngine, Featurize, Metrics, ServerState, ShardedEngine,
+};
 use paretobandit::sim::{hash_features, FlashScenario, Judge};
 use paretobandit::util::json::Json;
 
@@ -134,7 +137,8 @@ fn main() {
             println!();
             println!("  serve      start the routing server (--addr, --budget, --restore,");
             println!("             --policy NAME[:ARG], --shadow NAME[,NAME...],");
-            println!("             --log-dir DIR to capture a decision log)");
+            println!("             --log-dir DIR to capture a decision log,");
+            println!("             --threaded for the deprecated oracle engine)");
             println!("  replay     re-drive policies through a captured decision log");
             println!("             (--log-dir DIR, --policy A[,B...], --check,");
             println!("             --export-priors SNAP); see docs/replay.md");
@@ -569,8 +573,20 @@ fn serve(args: &[String]) {
             state
         }
     };
+    let threaded = args.iter().any(|a| a == "--threaded");
+    if threaded {
+        eprintln!(
+            "serve: --threaded is deprecated; the thread-per-connection engine is kept \
+             only as the conformance oracle for the event loop (see docs/serving.md)"
+        );
+    }
     let cfg = EngineConfig::new(workers).merge_every(Duration::from_millis(merge_ms.max(1)));
-    let engine = match ShardedEngine::spawn(&addr, cfg, build) {
+    let spawned = if threaded {
+        ShardedEngine::spawn(&addr, cfg, build).map(AnyEngine::Threaded)
+    } else {
+        EventEngine::spawn(&addr, cfg, build).map(AnyEngine::Event)
+    };
+    let engine = match spawned {
         Ok(e) => e,
         Err(e) => {
             eprintln!("serve: bind {addr}: {e}");
@@ -582,16 +598,49 @@ fn serve(args: &[String]) {
     } else {
         format!(", shadows [{}]", shadow_specs.join(", "))
     };
+    let mode = if threaded { "threaded oracle" } else { "event loop" };
     println!(
-        "paretobandit serving on {} (policy {policy_spec}{shadow_note}, {workers} shard(s), \
-         merge every {merge_ms} ms, budget ${budget}/req); line-JSON protocol v2 (v1 \
-         accepted); op=shutdown to stop",
-        engine.addr
+        "paretobandit serving on {} ({mode}, policy {policy_spec}{shadow_note}, {workers} \
+         shard(s), merge every {merge_ms} ms, budget ${budget}/req); line-JSON protocol v2 \
+         (v1 accepted); op=shutdown to stop",
+        engine.addr()
     );
     while !engine.is_shutdown() {
         std::thread::sleep(Duration::from_millis(200));
     }
     engine.stop();
+}
+
+/// The two sharded serving paths behind `serve`: the event-loop reactor
+/// (default) and the thread-per-connection oracle (`--threaded`,
+/// deprecated — kept because the conformance suite proves the reactor
+/// against it).  Same wire protocol, same shard workers, same decisions.
+enum AnyEngine {
+    Event(EventEngine),
+    Threaded(ShardedEngine),
+}
+
+impl AnyEngine {
+    fn addr(&self) -> std::net::SocketAddr {
+        match self {
+            AnyEngine::Event(e) => e.addr,
+            AnyEngine::Threaded(e) => e.addr,
+        }
+    }
+
+    fn is_shutdown(&self) -> bool {
+        match self {
+            AnyEngine::Event(e) => e.is_shutdown(),
+            AnyEngine::Threaded(e) => e.is_shutdown(),
+        }
+    }
+
+    fn stop(self) {
+        match self {
+            AnyEngine::Event(e) => e.stop(),
+            AnyEngine::Threaded(e) => e.stop(),
+        }
+    }
 }
 
 /// `paretobandit replay` — re-drive routing policies through a decision

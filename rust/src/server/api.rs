@@ -316,12 +316,43 @@ impl ServerState {
     }
 }
 
+/// Where a worker sends the response for one in-flight request: either a
+/// oneshot-style channel a dispatcher thread blocks on (threaded path), or
+/// the event loop's tagged completion queue plus a waker nudge (reactor
+/// path).  Workers call [`Reply::send`] without knowing which; the request
+/// handling itself ([`ServerState::handle`]) is identical on both paths,
+/// which is what makes the conformance bit-identity guarantee cheap.
+pub(crate) enum Reply {
+    Chan(std::sync::mpsc::Sender<Response>),
+    Loop {
+        tag: u64,
+        done: std::sync::mpsc::Sender<(u64, Response)>,
+        waker: super::reactor::Waker,
+    },
+}
+
+impl Reply {
+    /// Deliver the response.  Send failures mean the other side gave up
+    /// (dispatcher timed out, reactor shut down) — never an error here.
+    pub(crate) fn send(self, resp: Response) {
+        match self {
+            Reply::Chan(tx) => {
+                let _ = tx.send(resp);
+            }
+            Reply::Loop { tag, done, waker } => {
+                let _ = done.send((tag, resp));
+                waker.wake();
+            }
+        }
+    }
+}
+
 /// One in-flight request handed to a worker thread (the single server's
-/// worker or one engine shard), answered over a oneshot-style channel.
-/// Shared so the reference server and the sharded engine cannot drift.
+/// worker or one engine shard), answered via [`Reply`].  Shared so the
+/// reference server and the sharded engine cannot drift.
 pub(crate) struct Job {
     pub(crate) req: Request,
-    pub(crate) resp: std::sync::mpsc::Sender<Response>,
+    pub(crate) resp: Reply,
 }
 
 impl ServerState {

@@ -53,7 +53,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::api::{Job, ServerState};
+use super::api::{Job, Reply, ServerState};
 use super::metrics::Metrics;
 use super::proto::{ErrorCode, FeedbackItem, Request, Response, RouteItem};
 use crate::bandit::ArmState;
@@ -65,17 +65,34 @@ use crate::util::json::Json;
 /// track at least as many pending ids as the shard context caches hold in
 /// aggregate (65,536 each at the `serve` default) — otherwise the table
 /// would evict owner entries whose contexts are still live in a cache.
-const OWNER_CAP_PER_SHARD: usize = 1 << 16;
+pub(crate) const OWNER_CAP_PER_SHARD: usize = 1 << 16;
 /// How long the merger waits for a shard's sync report before skipping it.
-const SYNC_TIMEOUT: Duration = Duration::from_secs(5);
+pub(crate) const SYNC_TIMEOUT: Duration = Duration::from_secs(5);
 
-/// Engine configuration.
+/// Engine configuration (shared by the threaded engine and the event-loop
+/// reactor; the connection-level limits only bind on the reactor, whose
+/// single thread must shed load instead of blocking).
 #[derive(Clone, Copy, Debug)]
 pub struct EngineConfig {
     /// worker shard count (≥1)
     pub workers: usize,
     /// timer-driven merge/broadcast period
     pub merge_interval: Duration,
+    /// how long a dispatched request may wait on its shard before the
+    /// client gets a typed `shard_timeout` instead of a hang
+    pub shard_timeout: Duration,
+    /// reactor: max in-flight *items* per shard before new dispatches are
+    /// shed with `unavailable` (bounds queueing delay under overload)
+    pub shard_queue_cap: usize,
+    /// reactor: connection limit; accepts beyond it get a best-effort
+    /// `unavailable` line and an immediate close
+    pub max_conns: usize,
+    /// reactor: per-frame byte cap; an oversized frame is a `bad_request`
+    /// and the connection is closed (the stream position is unrecoverable)
+    pub max_frame: usize,
+    /// reactor: max pipelined in-flight requests per connection; beyond
+    /// it the connection's reads pause until responses drain (pushback)
+    pub max_pipeline: usize,
 }
 
 impl EngineConfig {
@@ -83,6 +100,11 @@ impl EngineConfig {
         EngineConfig {
             workers: workers.max(1),
             merge_interval: Duration::from_millis(50),
+            shard_timeout: SYNC_TIMEOUT,
+            shard_queue_cap: 4096,
+            max_conns: 1024,
+            max_frame: 1 << 20,
+            max_pipeline: 128,
         }
     }
 
@@ -93,16 +115,41 @@ impl EngineConfig {
         self.merge_interval = interval.max(Duration::from_millis(1));
         self
     }
+
+    pub fn shard_timeout(mut self, timeout: Duration) -> EngineConfig {
+        self.shard_timeout = timeout.max(Duration::from_millis(1));
+        self
+    }
+
+    pub fn shard_queue_cap(mut self, cap: usize) -> EngineConfig {
+        self.shard_queue_cap = cap.max(1);
+        self
+    }
+
+    pub fn max_conns(mut self, cap: usize) -> EngineConfig {
+        self.max_conns = cap.max(1);
+        self
+    }
+
+    pub fn max_frame(mut self, bytes: usize) -> EngineConfig {
+        self.max_frame = bytes.max(64);
+        self
+    }
+
+    pub fn max_pipeline(mut self, cap: usize) -> EngineConfig {
+        self.max_pipeline = cap.max(1);
+        self
+    }
 }
 
 /// A shard's sync reply: which broadcast it last adopted + its replica.
-struct SyncReport {
+pub(crate) struct SyncReport {
     /// epoch of the last adopted broadcast (0 = never adopted)
     epoch: u64,
     arms: Vec<Option<ArmState>>,
 }
 
-enum ShardMsg {
+pub(crate) enum ShardMsg {
     Job(Job),
     /// apply queued feedback, then report the arm replica snapshot
     Sync(mpsc::Sender<SyncReport>),
@@ -114,15 +161,15 @@ enum ShardMsg {
     Stop,
 }
 
-enum MergeCmd {
+pub(crate) enum MergeCmd {
     /// run a merge cycle now; ack with a summary when a sender is given
     /// (the `Option<u64>` is the request id to echo)
-    Cycle(Option<(Option<u64>, mpsc::Sender<Response>)>),
+    Cycle(Option<(Option<u64>, Reply)>),
     /// apply an admin op to every shard in order; ack with shard 0's reply
-    Admin(Request, mpsc::Sender<Response>),
+    Admin(Request, Reply),
     /// force a merge cycle, then have shard 0 persist its (now global)
     /// state — the engine's `snapshot` verb
-    Snapshot(Request, mpsc::Sender<Response>),
+    Snapshot(Request, Reply),
     Stop,
 }
 
@@ -132,7 +179,7 @@ enum MergeCmd {
 /// may be reused by clients, so each entry carries a generation: cleanup
 /// only evicts a map entry when the popped queue entry is its *current*
 /// generation — a stale entry can never evict a live reinsertion.
-struct OwnerTable {
+pub(crate) struct OwnerTable {
     map: HashMap<u64, (usize, u64)>,
     order: VecDeque<(u64, u64)>,
     cap: usize,
@@ -140,7 +187,7 @@ struct OwnerTable {
 }
 
 impl OwnerTable {
-    fn new(cap: usize) -> OwnerTable {
+    pub(crate) fn new(cap: usize) -> OwnerTable {
         OwnerTable {
             map: HashMap::new(),
             order: VecDeque::new(),
@@ -149,7 +196,7 @@ impl OwnerTable {
         }
     }
 
-    fn insert(&mut self, id: u64, shard: usize) {
+    pub(crate) fn insert(&mut self, id: u64, shard: usize) {
         self.gen += 1;
         self.map.insert(id, (shard, self.gen));
         self.order.push_back((id, self.gen));
@@ -168,14 +215,14 @@ impl OwnerTable {
     }
 
     /// Current (shard, generation) for a pending id.
-    fn get(&self, id: u64) -> Option<(usize, u64)> {
+    pub(crate) fn get(&self, id: u64) -> Option<(usize, u64)> {
         self.map.get(&id).copied()
     }
 
     /// Remove the entry only if it is still the generation the caller
     /// observed — a concurrent re-route of the same id (new generation)
     /// must not be unclaimed by an older request's completion.
-    fn remove_if(&mut self, id: u64, gen: u64) -> bool {
+    pub(crate) fn remove_if(&mut self, id: u64, gen: u64) -> bool {
         if self.map.get(&id).map(|&(_, g)| g) == Some(gen) {
             self.map.remove(&id);
             true
@@ -194,6 +241,8 @@ struct Dispatch {
     metrics: Arc<Metrics>,
     shutdown: Arc<AtomicBool>,
     addr: std::net::SocketAddr,
+    /// per-request shard deadline (EngineConfig::shard_timeout)
+    timeout: Duration,
 }
 
 impl Dispatch {
@@ -211,11 +260,26 @@ impl Dispatch {
     fn forward(&self, shard: usize, req: Request) -> Response {
         let id = req.id();
         let (tx, rx) = mpsc::channel();
-        if self.shard_txs[shard].send(ShardMsg::Job(Job { req, resp: tx })).is_err() {
+        if self.shard_txs[shard]
+            .send(ShardMsg::Job(Job { req, resp: Reply::Chan(tx) }))
+            .is_err()
+        {
             return Response::err(ErrorCode::Unavailable, "shard unavailable", id);
         }
-        rx.recv()
-            .unwrap_or_else(|_| Response::err(ErrorCode::Unavailable, "shard dropped request", id))
+        // bounded wait: a wedged shard (featurizer stall, queue backlog)
+        // must surface as a typed shard_timeout, not pin this connection
+        // handler forever — the same deadline the batch verbs already had
+        match rx.recv_timeout(self.timeout) {
+            Ok(resp) => resp,
+            Err(mpsc::RecvTimeoutError::Timeout) => Response::err(
+                ErrorCode::ShardTimeout,
+                format!("shard {shard} timed out"),
+                id,
+            ),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Response::err(ErrorCode::Unavailable, "shard dropped request", id)
+            }
+        }
     }
 
     /// Handle one typed request; returns (response, initiate shutdown?).
@@ -302,7 +366,7 @@ impl Dispatch {
             ),
             Request::Sync { id } => {
                 let (tx, rx) = mpsc::channel();
-                if self.merge_tx.send(MergeCmd::Cycle(Some((id, tx)))).is_err() {
+                if self.merge_tx.send(MergeCmd::Cycle(Some((id, Reply::Chan(tx))))).is_err() {
                     return (
                         Response::err(ErrorCode::Unavailable, "merger unavailable", id),
                         false,
@@ -327,7 +391,7 @@ impl Dispatch {
             | Request::Restore { .. } => {
                 let id = req.id();
                 let (tx, rx) = mpsc::channel();
-                if self.merge_tx.send(MergeCmd::Admin(req, tx)).is_err() {
+                if self.merge_tx.send(MergeCmd::Admin(req, Reply::Chan(tx))).is_err() {
                     return (
                         Response::err(ErrorCode::Unavailable, "merger unavailable", id),
                         false,
@@ -343,7 +407,7 @@ impl Dispatch {
             Request::Snapshot { .. } => {
                 let id = req.id();
                 let (tx, rx) = mpsc::channel();
-                if self.merge_tx.send(MergeCmd::Snapshot(req, tx)).is_err() {
+                if self.merge_tx.send(MergeCmd::Snapshot(req, Reply::Chan(tx))).is_err() {
                     return (
                         Response::err(ErrorCode::Unavailable, "merger unavailable", id),
                         false,
@@ -365,10 +429,10 @@ impl Dispatch {
     /// One socket round-trip buys `items.len()` routing decisions, with
     /// the per-shard sub-batches featurizing in parallel.
     ///
-    /// Unlike the single-verb path (which blocks on its one shard), each
-    /// sub-batch reply is bounded by `SYNC_TIMEOUT` so one wedged shard
-    /// cannot pin this connection handler while the other sub-batches
-    /// already answered; timed-out items report `shard_timeout`.  A
+    /// Each sub-batch reply is bounded by the configured shard timeout so
+    /// one wedged shard cannot pin this connection handler while the
+    /// other sub-batches already answered; timed-out items report
+    /// `shard_timeout` (the single-verb path has the same deadline).  A
     /// late-arriving sub-batch still routed on its shard — those pending
     /// contexts are never claimed and age out of the FIFO caches.
     // lint: allow(index) reason="sub-vectors indexed by `x % n` and slots by enumerate() positions < total"
@@ -404,7 +468,7 @@ impl Dispatch {
                     id: None,
                     items: sub,
                 },
-                resp: tx,
+                resp: Reply::Chan(tx),
             };
             if self.shard_txs[shard].send(ShardMsg::Job(job)).is_ok() {
                 waiting.push((shard, meta, rx));
@@ -419,7 +483,7 @@ impl Dispatch {
             }
         }
         for (shard, meta, rx) in waiting {
-            match rx.recv_timeout(SYNC_TIMEOUT) {
+            match rx.recv_timeout(self.timeout) {
                 Ok(Response::Batch { results, .. }) if results.len() == meta.len() => {
                     let mut owners = self.owners_locked();
                     for (&(k, _), r) in meta.iter().zip(results) {
@@ -509,7 +573,7 @@ impl Dispatch {
                     id: None,
                     items: sub,
                 },
-                resp: tx,
+                resp: Reply::Chan(tx),
             };
             if self.shard_txs[shard].send(ShardMsg::Job(job)).is_ok() {
                 waiting.push((shard, meta, rx));
@@ -524,7 +588,7 @@ impl Dispatch {
             }
         }
         for (shard, meta, rx) in waiting {
-            match rx.recv_timeout(SYNC_TIMEOUT) {
+            match rx.recv_timeout(self.timeout) {
                 Ok(Response::Batch { results, .. }) if results.len() == meta.len() => {
                     let mut owners = self.owners_locked();
                     for (&(k, item_id, gen), r) in meta.iter().zip(results) {
@@ -610,41 +674,9 @@ impl ShardedEngine {
         // reader thread starts; Relaxed is sufficient
         metrics.workers.store(workers as u64, Ordering::Relaxed);
 
-        let build = Arc::new(build);
-        let mut shard_txs = Vec::with_capacity(workers);
-        let mut shards = Vec::with_capacity(workers);
-        for shard in 0..workers {
-            let (tx, rx) = mpsc::channel::<ShardMsg>();
-            shard_txs.push(tx);
-            let build = build.clone();
-            let metrics = metrics.clone();
-            shards.push(
-                std::thread::Builder::new()
-                    .name(format!("pb-shard-{shard}"))
-                    .spawn(move || {
-                        let mut state = (*build)(shard);
-                        state.shard = shard;
-                        state.metrics = metrics;
-                        state.metrics.set_policy(state.host.name());
-                        if state.queue.is_none() {
-                            state.queue = Some(FeedbackQueue::new());
-                        }
-                        shard_loop(state, rx);
-                    })?,
-            );
-        }
-
+        let (shard_txs, shards) = spawn_shards(workers, &metrics, Arc::new(build))?;
         let (merge_tx, merge_rx) = mpsc::channel::<MergeCmd>();
-        let merger = {
-            let txs = shard_txs.clone();
-            let metrics = metrics.clone();
-            // re-floor in case the config was built by hand rather than
-            // through merge_every (same liveness concern)
-            let interval = cfg.merge_interval.max(Duration::from_millis(1));
-            std::thread::Builder::new()
-                .name("pb-merger".into())
-                .spawn(move || merger_loop(merge_rx, txs, metrics, interval))?
-        };
+        let merger = spawn_merger(merge_rx, shard_txs.clone(), metrics.clone(), cfg.merge_interval)?;
 
         let dispatch = Arc::new(Dispatch {
             shard_txs,
@@ -654,6 +686,7 @@ impl ShardedEngine {
             metrics: metrics.clone(),
             shutdown: shutdown.clone(),
             addr: local,
+            timeout: cfg.shard_timeout.max(Duration::from_millis(1)),
         });
 
         let acceptor = {
@@ -726,13 +759,65 @@ impl Drop for ShardedEngine {
     }
 }
 
+/// Spawn the worker shards shared by both serving paths: each shard thread
+/// builds its own state (PJRT featurizers must be born on the thread that
+/// uses them), reports into the shared metrics registry, and then drains
+/// its message queue until `Stop`.
+pub(crate) fn spawn_shards<F>(
+    workers: usize,
+    metrics: &Arc<Metrics>,
+    build: Arc<F>,
+) -> Result<(Vec<mpsc::Sender<ShardMsg>>, Vec<JoinHandle<()>>)>
+where
+    F: Fn(usize) -> ServerState + Send + Sync + 'static,
+{
+    let mut shard_txs = Vec::with_capacity(workers);
+    let mut shards = Vec::with_capacity(workers);
+    for shard in 0..workers {
+        let (tx, rx) = mpsc::channel::<ShardMsg>();
+        shard_txs.push(tx);
+        let build = build.clone();
+        let metrics = metrics.clone();
+        shards.push(
+            std::thread::Builder::new()
+                .name(format!("pb-shard-{shard}"))
+                .spawn(move || {
+                    let mut state = (*build)(shard);
+                    state.shard = shard;
+                    state.metrics = metrics;
+                    state.metrics.set_policy(state.host.name());
+                    if state.queue.is_none() {
+                        state.queue = Some(FeedbackQueue::new());
+                    }
+                    shard_loop(state, rx);
+                })?,
+        );
+    }
+    Ok((shard_txs, shards))
+}
+
+/// Spawn the merge/broadcast coordinator shared by both serving paths.
+pub(crate) fn spawn_merger(
+    merge_rx: mpsc::Receiver<MergeCmd>,
+    shard_txs: Vec<mpsc::Sender<ShardMsg>>,
+    metrics: Arc<Metrics>,
+    interval: Duration,
+) -> Result<JoinHandle<()>> {
+    // re-floor in case the config was built by hand rather than through
+    // merge_every (same liveness concern)
+    let interval = interval.max(Duration::from_millis(1));
+    Ok(std::thread::Builder::new()
+        .name("pb-merger".into())
+        .spawn(move || merger_loop(merge_rx, shard_txs, metrics, interval))?)
+}
+
 fn shard_loop(mut state: ServerState, rx: mpsc::Receiver<ShardMsg>) {
     let mut epoch = 0u64;
     while let Ok(msg) = rx.recv() {
         match msg {
             ShardMsg::Job(job) => {
                 let (resp, _down) = state.handle(&job.req);
-                let _ = job.resp.send(resp);
+                job.resp.send(resp);
             }
             ShardMsg::Sync(reply) => {
                 state.apply_queued();
@@ -786,7 +871,7 @@ fn merger_loop(
                 let shards = run_cycle(&shard_txs, &metrics, &mut next_epoch).len();
                 next_fire = Instant::now() + interval;
                 if let Some((id, ack)) = ack {
-                    let _ = ack.send(Response::Sync {
+                    ack.send(Response::Sync {
                         id,
                         synced_shards: shards,
                         // invariant: monotone monitoring counter, Relaxed
@@ -816,18 +901,18 @@ fn merger_loop(
                             })
                         }
                     };
-                    let _ = ack.send(resp);
+                    ack.send(resp);
                     continue;
                 }
                 // same order on every shard keeps slot ids aligned
                 let resp = broadcast_acks(&shard_txs, req.id(), |tx, t| {
                     tx.send(ShardMsg::Job(Job {
                         req: req.clone(),
-                        resp: t,
+                        resp: Reply::Chan(t),
                     }))
                     .is_ok()
                 });
-                let _ = ack.send(resp);
+                ack.send(resp);
             }
             Ok(MergeCmd::Snapshot(req, ack)) => {
                 // fold every shard's delta and broadcast, so shard 0's
@@ -854,7 +939,7 @@ fn merger_loop(
                     if shard_txs[0]
                         .send(ShardMsg::Job(Job {
                             req: req.clone(),
-                            resp: t,
+                            resp: Reply::Chan(t),
                         }))
                         .is_ok()
                     {

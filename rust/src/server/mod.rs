@@ -1,15 +1,19 @@
 //! Serving stack: the typed v2 line-JSON protocol, the single-worker
-//! reference server, the sharded production engine and the metrics
-//! registry.  The typed client SDK lives in [`crate::client`].
+//! reference server, the sharded engines (event-loop reactor and the
+//! threaded oracle) and the metrics registry.  The typed client SDK
+//! lives in [`crate::client`].
 
 mod api;
 mod engine;
 mod metrics;
 pub mod proto;
+mod reactor;
 mod serve;
+pub mod sys;
 
 pub use api::{Featurize, ServerState, Shadow};
 pub use engine::{EngineConfig, ShardedEngine};
+pub use reactor::EventEngine;
 pub use metrics::{LatencyHisto, Metrics, ShadowStat};
 pub use proto::{ErrorCode, FeedbackItem, Request, Response, RouteItem, WireError, PROTO_V};
 pub use serve::{Client, Server};

@@ -1,0 +1,1563 @@
+//! Event-loop serving path: one reactor thread multiplexes every client
+//! connection; the shard workers and the merge/broadcast coordinator are
+//! the exact threads the threaded engine spawns ([`super::engine`]'s
+//! `spawn_shards` / `spawn_merger`), so routing decisions, λ trajectories
+//! and metrics counters are bit-identical between the two paths — the
+//! conformance suite (`tests/serve_loop_conformance.rs`) holds the proof.
+//!
+//! Layout:
+//!
+//! * **reactor thread** — nonblocking accept + per-connection read/write
+//!   buffers over the level-triggered [`super::sys::Poller`] (epoll on
+//!   Linux, poll(2) elsewhere).  Frames are decoded incrementally (a
+//!   request may arrive a byte at a time), requests pipeline freely (the
+//!   v2 envelope echoes the request id, so clients match responses out of
+//!   order), and writes batch per tick.
+//! * **dispatch** — the reactor mirrors the threaded `Dispatch` logic
+//!   (round-robin tickets, owner-table claim/peek rules, the inject
+//!   rewrite, per-shard sub-batch fan-out) but never blocks: each
+//!   dispatched request becomes a `Pending` entry answered through a
+//!   tagged completion queue.  Workers deliver via [`Reply::Loop`], which
+//!   pokes the self-pipe [`Waker`] so a parked reactor wakes.
+//! * **backpressure** — reads pause per connection once `max_pipeline`
+//!   requests are in flight or the write buffer crosses its high-water
+//!   mark (resuming below the low-water mark); accepts beyond `max_conns`
+//!   are rejected with a best-effort `unavailable` line; a shard whose
+//!   in-flight item count reaches `shard_queue_cap` sheds new work with a
+//!   typed `unavailable` instead of queueing without bound.
+//! * **deadlines** — every dispatched request carries a deadline
+//!   (`shard_timeout`; merger ops get `shard_timeout × (workers + 2)` to
+//!   cover a full broadcast round).  Expiry answers the client with a
+//!   typed `shard_timeout` and leaves a zombie entry that keeps the
+//!   shard's in-flight budget charged until the late completion actually
+//!   arrives — a wedged shard therefore degrades to typed shedding, never
+//!   to an unbounded queue.
+//!
+//! The threaded path stays available behind `serve --threaded` as the
+//! conformance oracle (see `docs/serving.md`).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{fence, AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::api::{Job, Reply, ServerState};
+use super::engine::{
+    spawn_merger, spawn_shards, EngineConfig, MergeCmd, OwnerTable, ShardMsg,
+    OWNER_CAP_PER_SHARD,
+};
+use super::metrics::Metrics;
+use super::proto::{ErrorCode, FeedbackItem, Request, Response, RouteItem};
+use super::sys::{Event, Poller, WakePipe};
+
+const TOKEN_LISTENER: usize = 0;
+const TOKEN_WAKE: usize = 1;
+const TOKEN_BASE: usize = 2;
+/// Per-read chunk size.
+const CHUNK: usize = 64 * 1024;
+/// Max bytes pulled off one connection per tick (fairness under floods).
+const READ_BUDGET: usize = 256 * 1024;
+/// Write-buffer high-water mark: reads pause above it...
+const WBUF_HIWAT: usize = 256 * 1024;
+/// ...and resume only below the low-water mark (hysteresis).
+const WBUF_LOWAT: usize = 64 * 1024;
+/// Bound on same-tick reprocess rounds (enqueue → frames → enqueue ...).
+const MAX_TOUCH_ROUNDS: usize = 64;
+
+/// Cross-thread wakeup for the reactor: an armed flag plus the self-pipe.
+/// `wake` is the fast path workers take per completion — when the reactor
+/// is awake (flag down) it costs two atomic ops and no syscall.
+#[derive(Clone)]
+pub(crate) struct Waker {
+    pipe: Arc<WakePipe>,
+    armed: Arc<AtomicBool>,
+}
+
+impl Waker {
+    /// Called by workers right after pushing onto the completion queue.
+    pub(crate) fn wake(&self) {
+        // invariant: the queue push is ordered before the armed check —
+        // this SeqCst fence pairs with the reactor's arm → fence →
+        // final-drain sequence, so either this swap observes armed=true
+        // (and pokes the pipe) or the final drain observes the pushed
+        // completion; the wakeup is never lost
+        fence(Ordering::SeqCst);
+        // invariant: swap-to-false claims the single pending wakeup so
+        // only one of N concurrent completers pays the pipe write
+        if self.armed.swap(false, Ordering::SeqCst) {
+            self.pipe.notify();
+        }
+    }
+
+    /// Unconditional pipe poke — the engine's stop path, which must wake
+    /// the reactor regardless of the armed flag's state.
+    pub(crate) fn force(&self) {
+        self.pipe.notify();
+    }
+}
+
+/// Running event-loop engine handle.  Public surface mirrors
+/// [`super::ShardedEngine`] so `serve` can swap between the two paths.
+pub struct EventEngine {
+    pub addr: SocketAddr,
+    metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+    waker: Waker,
+    shard_txs: Vec<mpsc::Sender<ShardMsg>>,
+    merge_tx: mpsc::Sender<MergeCmd>,
+    reactor: Option<JoinHandle<()>>,
+    merger: Option<JoinHandle<()>>,
+    shards: Vec<JoinHandle<()>>,
+}
+
+impl EventEngine {
+    /// Bind `addr` and serve with `cfg.workers` shards behind one reactor
+    /// thread.  `build(shard)` runs on each shard's own thread exactly as
+    /// in [`super::ShardedEngine::spawn`].
+    pub fn spawn<F>(addr: &str, cfg: EngineConfig, build: F) -> Result<EventEngine>
+    where
+        F: Fn(usize) -> ServerState + Send + Sync + 'static,
+    {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(Metrics::new());
+        let workers = cfg.workers.max(1);
+        // invariant: configuration constant written once before any
+        // reader thread starts; Relaxed is sufficient
+        metrics.workers.store(workers as u64, Ordering::Relaxed);
+
+        let (shard_txs, shards) = spawn_shards(workers, &metrics, Arc::new(build))?;
+        let (merge_tx, merge_rx) = mpsc::channel::<MergeCmd>();
+        let merger =
+            spawn_merger(merge_rx, shard_txs.clone(), metrics.clone(), cfg.merge_interval)?;
+
+        let mut poller = Poller::new()?;
+        let pipe = Arc::new(WakePipe::new()?);
+        poller.register(listener.as_raw_fd(), TOKEN_LISTENER, true, false)?;
+        poller.register(pipe.read_fd(), TOKEN_WAKE, true, false)?;
+        let waker = Waker {
+            pipe,
+            armed: Arc::new(AtomicBool::new(false)),
+        };
+        let (done_tx, done_rx) = mpsc::channel::<(u64, Response)>();
+
+        let reactor = {
+            let n = shard_txs.len();
+            let r = Reactor {
+                cfg,
+                listener,
+                poller,
+                waker: waker.clone(),
+                done_tx,
+                done_rx,
+                shard_txs: shard_txs.clone(),
+                merge_tx: merge_tx.clone(),
+                metrics: metrics.clone(),
+                shutdown: shutdown.clone(),
+                conns: Vec::new(),
+                free: Vec::new(),
+                n_conns: 0,
+                owners: OwnerTable::new(workers.saturating_mul(OWNER_CAP_PER_SHARD)),
+                rr: 0,
+                next_gen: 0,
+                next_tag: 0,
+                next_batch: 0,
+                pending: HashMap::new(),
+                batches: HashMap::new(),
+                deadlines: BinaryHeap::new(),
+                shard_load: vec![0; n],
+                touched: Vec::new(),
+                events: Vec::new(),
+                scratch: vec![0u8; CHUNK],
+                stop_now: false,
+            };
+            std::thread::Builder::new()
+                .name("pb-reactor".into())
+                .spawn(move || r.run())?
+        };
+
+        Ok(EventEngine {
+            addr: local,
+            metrics,
+            shutdown,
+            waker,
+            shard_txs,
+            merge_tx,
+            reactor: Some(reactor),
+            merger: Some(merger),
+            shards,
+        })
+    }
+
+    /// Shared metrics registry (all shards report here).
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    /// True once a client issued `shutdown` or `stop` was called.
+    pub fn is_shutdown(&self) -> bool {
+        // invariant: Acquire pairs with the Release latch stores in
+        // do_stop and the reactor's shutdown-verb handler
+        self.shutdown.load(Ordering::Acquire)
+    }
+
+    /// Request shutdown and join all threads.
+    pub fn stop(mut self) {
+        self.do_stop();
+    }
+
+    fn do_stop(&mut self) {
+        // invariant: plain latch, Release store / Acquire loads; no data
+        // is published through the flag itself
+        self.shutdown.store(true, Ordering::Release);
+        // unconditional poke: the reactor may be parked in poller.wait
+        // with the armed flag in either state
+        self.waker.force();
+        if let Some(r) = self.reactor.take() {
+            let _ = r.join();
+        }
+        let _ = self.merge_tx.send(MergeCmd::Stop);
+        for tx in &self.shard_txs {
+            let _ = tx.send(ShardMsg::Stop);
+        }
+        if let Some(m) = self.merger.take() {
+            let _ = m.join();
+        }
+        for s in self.shards.drain(..) {
+            let _ = s.join();
+        }
+    }
+}
+
+impl Drop for EventEngine {
+    fn drop(&mut self) {
+        self.do_stop();
+    }
+}
+
+/// One client connection's reactor-side state.
+struct Conn {
+    stream: TcpStream,
+    /// generation guard: slot reuse must not deliver a stale completion
+    gen: u64,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    /// flushed prefix of `wbuf`
+    wpos: usize,
+    /// dispatched-but-unanswered requests (pipelining depth)
+    in_flight: usize,
+    /// current poller read interest
+    reading: bool,
+    /// current poller write interest
+    writing: bool,
+    /// close once in-flight work answers and the write buffer drains
+    closing: bool,
+    /// peer half-closed its write side (read returned 0)
+    eof: bool,
+}
+
+/// One dispatched request awaiting its completion, keyed by tag.
+enum Pending {
+    Route {
+        slot: usize,
+        gen: u64,
+        shard: usize,
+        item_id: u64,
+    },
+    Feedback {
+        slot: usize,
+        gen: u64,
+        shard: usize,
+        item_id: u64,
+        owner_gen: u64,
+    },
+    /// one per-shard sub-batch of a route_batch
+    RouteSub {
+        batch: u64,
+        shard: usize,
+        /// (original position, item id) per sub-item
+        meta: Vec<(usize, u64)>,
+    },
+    /// one per-shard sub-batch of a feedback_batch
+    FeedbackSub {
+        batch: u64,
+        shard: usize,
+        /// (original position, item id, owner generation) per sub-item
+        meta: Vec<(usize, u64, u64)>,
+    },
+    /// merger-serialized op (sync / admin / snapshot); holds no shard
+    /// in-flight budget
+    Admin { slot: usize, gen: u64 },
+    /// already answered `shard_timeout`; kept so the late completion
+    /// returns the shard's in-flight budget instead of leaking it
+    TimedOut { shard: usize, items: usize },
+}
+
+/// Reassembly state for one client-visible batch response.
+struct BatchAsm {
+    slot: usize,
+    gen: u64,
+    req_id: Option<u64>,
+    slots: Vec<Option<Response>>,
+    /// outstanding sub-batches
+    remaining: usize,
+}
+
+fn finalize_batch(asm: BatchAsm) -> Response {
+    let results = asm
+        .slots
+        .into_iter()
+        .map(|s| s.unwrap_or_else(|| Response::err(ErrorCode::Unavailable, "item lost", None)))
+        .collect();
+    Response::Batch {
+        id: asm.req_id,
+        results,
+    }
+}
+
+struct Reactor {
+    cfg: EngineConfig,
+    listener: TcpListener,
+    poller: Poller,
+    waker: Waker,
+    done_tx: mpsc::Sender<(u64, Response)>,
+    done_rx: mpsc::Receiver<(u64, Response)>,
+    shard_txs: Vec<mpsc::Sender<ShardMsg>>,
+    merge_tx: mpsc::Sender<MergeCmd>,
+    metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    n_conns: usize,
+    owners: OwnerTable,
+    /// round-robin ticket counter — plain usize mirrors the threaded
+    /// engine's AtomicUsize (which also wraps), so the shard sequence is
+    /// identical for identical request streams
+    rr: usize,
+    next_gen: u64,
+    next_tag: u64,
+    next_batch: u64,
+    pending: HashMap<u64, Pending>,
+    batches: HashMap<u64, BatchAsm>,
+    /// (deadline, tag) min-heap with lazy deletion
+    deadlines: BinaryHeap<Reverse<(Instant, u64)>>,
+    /// in-flight *items* per shard (the `shard_queue_cap` ledger)
+    shard_load: Vec<usize>,
+    /// connections with new output or freed pipeline slots this tick
+    touched: Vec<usize>,
+    events: Vec<Event>,
+    scratch: Vec<u8>,
+    stop_now: bool,
+}
+
+impl Reactor {
+    fn run(mut self) {
+        loop {
+            // invariant: Acquire pairs with the Release latch stores in
+            // EventEngine::do_stop and the shutdown-verb handler
+            if self.stop_now || self.shutdown.load(Ordering::Acquire) {
+                break;
+            }
+            self.drain_completions();
+            self.fire_deadlines();
+            self.process_touched();
+            if self.stop_now {
+                break;
+            }
+            let timeout = self
+                .deadlines
+                .peek()
+                .map(|&Reverse((when, _))| when.saturating_duration_since(Instant::now()));
+            // sleep protocol: arm, fence, re-check, final drain, wait.
+            // invariant: the arm store is ordered before the final drain
+            // by the SeqCst fence below, pairing with Waker::wake's push
+            // → fence → swap — a completion racing this park either lands
+            // in the final drain or finds armed=true and pokes the pipe
+            self.waker.armed.store(true, Ordering::SeqCst);
+            fence(Ordering::SeqCst);
+            // invariant: Acquire pairs with the Release latch stores; the
+            // stop path force-pokes the pipe after its store, so a miss
+            // here still wakes out of poller.wait immediately
+            if self.shutdown.load(Ordering::Acquire) {
+                break;
+            }
+            if self.drain_completions() > 0 {
+                // invariant: disarm before continuing awake — wakes for
+                // work the final drain already claimed are redundant
+                self.waker.armed.store(false, Ordering::SeqCst);
+                continue;
+            }
+            self.events.clear();
+            let waited = self.poller.wait(&mut self.events, timeout);
+            // invariant: disarm on wake; completions pushed from here on
+            // are claimed by the top-of-loop drain, not the pipe
+            self.waker.armed.store(false, Ordering::SeqCst);
+            if waited.is_err() {
+                // a broken poller cannot serve; fail shut rather than spin
+                break;
+            }
+            let mut events = std::mem::take(&mut self.events);
+            for ev in events.drain(..) {
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKE => self.waker.pipe.drain(),
+                    t => self.conn_event(t - TOKEN_BASE, ev),
+                }
+            }
+            self.events = events;
+        }
+    }
+
+    // ------------------------------------------------------------ accept --
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => self.admit(stream),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn admit(&mut self, stream: TcpStream) {
+        if self.n_conns >= self.cfg.max_conns {
+            // best-effort rejection: a fresh socket's send buffer always
+            // has room for one line, so this cannot block meaningfully
+            let mut s = stream;
+            let resp = Response::err(ErrorCode::Unavailable, "connection limit reached", None);
+            let _ = writeln!(s, "{}", resp.to_json().to_string());
+            return; // drop closes
+        }
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        let _ = stream.set_nodelay(true); // line-RPC: kill Nagle
+        let fd = stream.as_raw_fd();
+        let slot = self.free.pop().unwrap_or(self.conns.len());
+        if self.poller.register(fd, TOKEN_BASE + slot, true, false).is_err() {
+            if slot < self.conns.len() {
+                self.free.push(slot);
+            }
+            return;
+        }
+        self.next_gen += 1;
+        let conn = Conn {
+            stream,
+            gen: self.next_gen,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            in_flight: 0,
+            reading: true,
+            writing: false,
+            closing: false,
+            eof: false,
+        };
+        if slot == self.conns.len() {
+            self.conns.push(Some(conn));
+        } else if let Some(entry) = self.conns.get_mut(slot) {
+            *entry = Some(conn);
+        }
+        self.n_conns += 1;
+    }
+
+    // ------------------------------------------------------- conn events --
+
+    fn conn_mut(&mut self, slot: usize) -> Option<&mut Conn> {
+        self.conns.get_mut(slot).and_then(|c| c.as_mut())
+    }
+
+    fn conn_event(&mut self, slot: usize, ev: Event) {
+        if ev.readable || ev.hangup {
+            self.read_conn(slot);
+        }
+        if ev.writable {
+            self.flush_conn(slot);
+        }
+        self.update_interest(slot);
+    }
+
+    fn read_conn(&mut self, slot: usize) {
+        let max_pipeline = self.cfg.max_pipeline;
+        let mut budget = READ_BUDGET;
+        let mut scratch = std::mem::take(&mut self.scratch);
+        if scratch.len() < CHUNK {
+            scratch.resize(CHUNK, 0);
+        }
+        let mut dead = false;
+        let mut got_eof = false;
+        loop {
+            let Some(conn) = self.conns.get_mut(slot).and_then(|c| c.as_mut()) else {
+                break;
+            };
+            if conn.closing || conn.eof || conn.in_flight >= max_pipeline {
+                break;
+            }
+            match conn.stream.read(&mut scratch) {
+                Ok(0) => {
+                    got_eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    if let Some(chunk) = scratch.get(..n) {
+                        conn.rbuf.extend_from_slice(chunk);
+                    }
+                    budget = budget.saturating_sub(n);
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    dead = true;
+                    break;
+                }
+            }
+        }
+        self.scratch = scratch;
+        if dead {
+            self.close_conn(slot);
+            return;
+        }
+        if got_eof {
+            if let Some(conn) = self.conn_mut(slot) {
+                conn.eof = true;
+            }
+        }
+        self.process_frames(slot);
+        self.flush_conn(slot);
+    }
+
+    /// Decode and dispatch every complete frame buffered on `slot`,
+    /// stopping at the pipelining cap.  Partial frames stay buffered.
+    fn process_frames(&mut self, slot: usize) {
+        let max_pipeline = self.cfg.max_pipeline;
+        let max_frame = self.cfg.max_frame;
+        let (gen, rbuf) = match self.conn_mut(slot) {
+            Some(c) => (c.gen, std::mem::take(&mut c.rbuf)),
+            None => return,
+        };
+        let mut pos = 0usize;
+        loop {
+            if self.stop_now {
+                break;
+            }
+            let keep_going = match self.conn_mut(slot) {
+                Some(c) => c.gen == gen && !c.closing && c.in_flight < max_pipeline,
+                None => false,
+            };
+            if !keep_going {
+                break;
+            }
+            let Some(rest) = rbuf.get(pos..) else { break };
+            let Some(rel) = rest.iter().position(|&b| b == b'\n') else {
+                if rest.len() > max_frame {
+                    // unterminated oversized frame: the stream position is
+                    // unrecoverable, so answer and close
+                    self.enqueue_resp(
+                        slot,
+                        gen,
+                        Response::err(
+                            ErrorCode::BadRequest,
+                            format!("frame exceeds {max_frame} bytes"),
+                            None,
+                        ),
+                    );
+                    if let Some(c) = self.conn_mut(slot) {
+                        c.closing = true;
+                    }
+                    pos = rbuf.len();
+                }
+                break;
+            };
+            let end = pos + rel;
+            let line = rbuf.get(pos..end).unwrap_or(&[]);
+            pos = end + 1;
+            if line.len() > max_frame {
+                // terminated over-long frame: framing is intact, so the
+                // connection survives with a typed error
+                self.enqueue_resp(
+                    slot,
+                    gen,
+                    Response::err(
+                        ErrorCode::BadRequest,
+                        format!("frame exceeds {max_frame} bytes"),
+                        None,
+                    ),
+                );
+                continue;
+            }
+            match std::str::from_utf8(line) {
+                Err(_) => self.enqueue_resp(
+                    slot,
+                    gen,
+                    Response::err(ErrorCode::BadRequest, "frame is not valid UTF-8", None),
+                ),
+                Ok(text) => {
+                    if text.trim().is_empty() {
+                        continue;
+                    }
+                    // parse exactly once (JSON -> typed Request); the
+                    // typed response serializes exactly once at enqueue
+                    match crate::util::json::Json::parse(text) {
+                        Err(e) => self.enqueue_resp(
+                            slot,
+                            gen,
+                            Response::err(ErrorCode::BadRequest, format!("parse: {e}"), None),
+                        ),
+                        Ok(j) => match Request::parse(&j) {
+                            Err(e) => self.enqueue_resp(slot, gen, Response::Error(e)),
+                            Ok(req) => self.dispatch_req(slot, gen, req),
+                        },
+                    }
+                }
+            }
+        }
+        if let Some(conn) = self.conn_mut(slot) {
+            if conn.gen == gen {
+                let mut rbuf = rbuf;
+                if pos > 0 {
+                    rbuf.drain(..pos);
+                }
+                // single-threaded: nothing can have appended while taken
+                conn.rbuf = rbuf;
+            }
+        }
+    }
+
+    // ---------------------------------------------------------- dispatch --
+
+    /// Mirror of the threaded `Dispatch::dispatch`, with every blocking
+    /// wait replaced by a `Pending` entry + deadline.
+    fn dispatch_req(&mut self, slot: usize, gen: u64, req: Request) {
+        // same rewrite as the threaded dispatcher: injected snapshot /
+        // restart events get the dedicated verbs' engine semantics
+        let req = match req {
+            Request::Inject {
+                id,
+                event: crate::scenario::Event::Snapshot { path: Some(path) },
+            } => Request::Snapshot { id, path },
+            Request::Inject {
+                id,
+                event: crate::scenario::Event::Restart { path: Some(path) },
+            } => Request::Restore { id, path },
+            other => other,
+        };
+        match req {
+            Request::Route(it) => {
+                let n = self.shard_txs.len().max(1);
+                // identical ticket sequence to the threaded engine's
+                // fetch_add(1) % n (both wrap)
+                let shard = self.rr % n;
+                self.rr = self.rr.wrapping_add(1);
+                let item_id = it.id;
+                if self.overloaded(shard, 1) {
+                    self.enqueue_resp(
+                        slot,
+                        gen,
+                        Response::err(
+                            ErrorCode::Unavailable,
+                            format!("shard {shard} overloaded"),
+                            Some(item_id),
+                        ),
+                    );
+                    return;
+                }
+                let tag = self.alloc_tag();
+                let job = Job {
+                    req: Request::Route(it),
+                    resp: self.loop_reply(tag),
+                };
+                if !self.shard_send(shard, ShardMsg::Job(job)) {
+                    self.enqueue_resp(
+                        slot,
+                        gen,
+                        Response::err(ErrorCode::Unavailable, "shard unavailable", Some(item_id)),
+                    );
+                    return;
+                }
+                self.track(
+                    tag,
+                    Pending::Route {
+                        slot,
+                        gen,
+                        shard,
+                        item_id,
+                    },
+                    shard,
+                    1,
+                );
+                self.bump_in_flight(slot);
+            }
+            Request::Feedback(it) => {
+                // peek, don't claim — identical to the threaded path: a
+                // rejected feedback leaves the id claimable by a retry,
+                // and the eventual claim is generation-conditional
+                match self.owners.get(it.id) {
+                    None => self.enqueue_resp(
+                        slot,
+                        gen,
+                        Response::err(
+                            ErrorCode::UnknownId,
+                            "feedback: unknown or already-claimed id",
+                            Some(it.id),
+                        ),
+                    ),
+                    Some((shard, owner_gen)) => {
+                        let item_id = it.id;
+                        if self.overloaded(shard, 1) {
+                            self.enqueue_resp(
+                                slot,
+                                gen,
+                                Response::err(
+                                    ErrorCode::Unavailable,
+                                    format!("shard {shard} overloaded"),
+                                    Some(item_id),
+                                ),
+                            );
+                            return;
+                        }
+                        let tag = self.alloc_tag();
+                        let job = Job {
+                            req: Request::Feedback(it),
+                            resp: self.loop_reply(tag),
+                        };
+                        if !self.shard_send(shard, ShardMsg::Job(job)) {
+                            self.enqueue_resp(
+                                slot,
+                                gen,
+                                Response::err(
+                                    ErrorCode::Unavailable,
+                                    "shard unavailable",
+                                    Some(item_id),
+                                ),
+                            );
+                            return;
+                        }
+                        self.track(
+                            tag,
+                            Pending::Feedback {
+                                slot,
+                                gen,
+                                shard,
+                                item_id,
+                                owner_gen,
+                            },
+                            shard,
+                            1,
+                        );
+                        self.bump_in_flight(slot);
+                    }
+                }
+            }
+            Request::RouteBatch { id, items } => self.dispatch_route_batch(slot, gen, id, items),
+            Request::FeedbackBatch { id, items } => {
+                self.dispatch_feedback_batch(slot, gen, id, items)
+            }
+            Request::Metrics { id } => self.enqueue_resp(
+                slot,
+                gen,
+                Response::Metrics {
+                    id,
+                    snapshot: self.metrics.snapshot(),
+                },
+            ),
+            Request::Compare { id } => self.enqueue_resp(
+                slot,
+                gen,
+                Response::Compare {
+                    id,
+                    report: self.metrics.compare_report(),
+                },
+            ),
+            Request::Sync { id } => {
+                let tag = self.alloc_tag();
+                let reply = self.loop_reply(tag);
+                if self.merge_tx.send(MergeCmd::Cycle(Some((id, reply)))).is_err() {
+                    self.enqueue_resp(
+                        slot,
+                        gen,
+                        Response::err(ErrorCode::Unavailable, "merger unavailable", id),
+                    );
+                    return;
+                }
+                self.track_admin(tag, slot, gen);
+                self.bump_in_flight(slot);
+            }
+            Request::AddModel { .. }
+            | Request::DeleteModel { .. }
+            | Request::Reprice { .. }
+            | Request::SetBudget { .. }
+            | Request::Inject { .. }
+            | Request::Restore { .. } => {
+                let id = req.id();
+                let tag = self.alloc_tag();
+                let reply = self.loop_reply(tag);
+                if self.merge_tx.send(MergeCmd::Admin(req, reply)).is_err() {
+                    self.enqueue_resp(
+                        slot,
+                        gen,
+                        Response::err(ErrorCode::Unavailable, "merger unavailable", id),
+                    );
+                    return;
+                }
+                self.track_admin(tag, slot, gen);
+                self.bump_in_flight(slot);
+            }
+            Request::Snapshot { .. } => {
+                let id = req.id();
+                let tag = self.alloc_tag();
+                let reply = self.loop_reply(tag);
+                if self.merge_tx.send(MergeCmd::Snapshot(req, reply)).is_err() {
+                    self.enqueue_resp(
+                        slot,
+                        gen,
+                        Response::err(ErrorCode::Unavailable, "merger unavailable", id),
+                    );
+                    return;
+                }
+                self.track_admin(tag, slot, gen);
+                self.bump_in_flight(slot);
+            }
+            Request::Shutdown { id } => {
+                self.enqueue_resp(slot, gen, Response::Shutdown { id });
+                // answer the requester before stopping; other in-flight
+                // work is abandoned exactly as on the threaded path
+                self.flush_conn(slot);
+                // invariant: plain latch, Release store / Acquire loads
+                self.shutdown.store(true, Ordering::Release);
+                self.stop_now = true;
+            }
+        }
+    }
+
+    fn dispatch_route_batch(
+        &mut self,
+        slot: usize,
+        gen: u64,
+        id: Option<u64>,
+        items: Vec<RouteItem>,
+    ) {
+        let total = items.len();
+        if total == 0 {
+            self.enqueue_resp(
+                slot,
+                gen,
+                Response::Batch {
+                    id,
+                    results: Vec::new(),
+                },
+            );
+            return;
+        }
+        let n = self.shard_txs.len().max(1);
+        // identical ticket block to the threaded fetch_add(total)
+        let base = self.rr;
+        self.rr = self.rr.wrapping_add(total);
+        let mut sub_items: Vec<Vec<RouteItem>> = (0..n).map(|_| Vec::new()).collect();
+        let mut sub_meta: Vec<Vec<(usize, u64)>> = (0..n).map(|_| Vec::new()).collect();
+        for (k, item) in items.into_iter().enumerate() {
+            let s = base.wrapping_add(k) % n;
+            if let (Some(m), Some(v)) = (sub_meta.get_mut(s), sub_items.get_mut(s)) {
+                m.push((k, item.id));
+                v.push(item);
+            }
+        }
+        let batch = self.alloc_batch();
+        let mut asm = BatchAsm {
+            slot,
+            gen,
+            req_id: id,
+            slots: (0..total).map(|_| None).collect(),
+            remaining: 0,
+        };
+        for (shard, (meta, sub)) in sub_meta.into_iter().zip(sub_items).enumerate() {
+            if sub.is_empty() {
+                continue;
+            }
+            if self.overloaded(shard, sub.len()) {
+                for &(k, item_id) in &meta {
+                    if let Some(s) = asm.slots.get_mut(k) {
+                        *s = Some(Response::err(
+                            ErrorCode::Unavailable,
+                            format!("shard {shard} overloaded"),
+                            Some(item_id),
+                        ));
+                    }
+                }
+                continue;
+            }
+            let tag = self.alloc_tag();
+            let job = Job {
+                req: Request::RouteBatch {
+                    id: None,
+                    items: sub,
+                },
+                resp: self.loop_reply(tag),
+            };
+            if self.shard_send(shard, ShardMsg::Job(job)) {
+                let items_n = meta.len();
+                self.track(tag, Pending::RouteSub { batch, shard, meta }, shard, items_n);
+                asm.remaining += 1;
+            } else {
+                for &(k, item_id) in &meta {
+                    if let Some(s) = asm.slots.get_mut(k) {
+                        *s = Some(Response::err(
+                            ErrorCode::Unavailable,
+                            format!("shard {shard} unavailable"),
+                            Some(item_id),
+                        ));
+                    }
+                }
+            }
+        }
+        if asm.remaining == 0 {
+            let resp = finalize_batch(asm);
+            self.enqueue_resp(slot, gen, resp);
+        } else {
+            self.batches.insert(batch, asm);
+            self.bump_in_flight(slot);
+        }
+    }
+
+    fn dispatch_feedback_batch(
+        &mut self,
+        slot: usize,
+        gen: u64,
+        id: Option<u64>,
+        items: Vec<FeedbackItem>,
+    ) {
+        let total = items.len();
+        if total == 0 {
+            self.enqueue_resp(
+                slot,
+                gen,
+                Response::Batch {
+                    id,
+                    results: Vec::new(),
+                },
+            );
+            return;
+        }
+        let n = self.shard_txs.len().max(1);
+        let mut sub_items: Vec<Vec<FeedbackItem>> = (0..n).map(|_| Vec::new()).collect();
+        let mut sub_meta: Vec<Vec<(usize, u64, u64)>> = (0..n).map(|_| Vec::new()).collect();
+        let mut slots: Vec<Option<Response>> = (0..total).map(|_| None).collect();
+        for (k, item) in items.into_iter().enumerate() {
+            match self.owners.get(item.id) {
+                Some((shard, owner_gen)) => {
+                    if let (Some(m), Some(v)) = (sub_meta.get_mut(shard), sub_items.get_mut(shard))
+                    {
+                        m.push((k, item.id, owner_gen));
+                        v.push(item);
+                    }
+                }
+                None => {
+                    if let Some(s) = slots.get_mut(k) {
+                        *s = Some(Response::err(
+                            ErrorCode::UnknownId,
+                            "feedback: unknown or already-claimed id",
+                            Some(item.id),
+                        ));
+                    }
+                }
+            }
+        }
+        let batch = self.alloc_batch();
+        let mut asm = BatchAsm {
+            slot,
+            gen,
+            req_id: id,
+            slots,
+            remaining: 0,
+        };
+        for (shard, (meta, sub)) in sub_meta.into_iter().zip(sub_items).enumerate() {
+            if sub.is_empty() {
+                continue;
+            }
+            if self.overloaded(shard, sub.len()) {
+                for &(k, item_id, _) in &meta {
+                    if let Some(s) = asm.slots.get_mut(k) {
+                        *s = Some(Response::err(
+                            ErrorCode::Unavailable,
+                            format!("shard {shard} overloaded"),
+                            Some(item_id),
+                        ));
+                    }
+                }
+                continue;
+            }
+            let tag = self.alloc_tag();
+            let job = Job {
+                req: Request::FeedbackBatch {
+                    id: None,
+                    items: sub,
+                },
+                resp: self.loop_reply(tag),
+            };
+            if self.shard_send(shard, ShardMsg::Job(job)) {
+                let items_n = meta.len();
+                self.track(
+                    tag,
+                    Pending::FeedbackSub { batch, shard, meta },
+                    shard,
+                    items_n,
+                );
+                asm.remaining += 1;
+            } else {
+                for &(k, item_id, _) in &meta {
+                    if let Some(s) = asm.slots.get_mut(k) {
+                        *s = Some(Response::err(
+                            ErrorCode::Unavailable,
+                            format!("shard {shard} unavailable"),
+                            Some(item_id),
+                        ));
+                    }
+                }
+            }
+        }
+        if asm.remaining == 0 {
+            let resp = finalize_batch(asm);
+            self.enqueue_resp(slot, gen, resp);
+        } else {
+            self.batches.insert(batch, asm);
+            self.bump_in_flight(slot);
+        }
+    }
+
+    // ----------------------------------------------------------- helpers --
+
+    fn loop_reply(&self, tag: u64) -> Reply {
+        Reply::Loop {
+            tag,
+            done: self.done_tx.clone(),
+            waker: self.waker.clone(),
+        }
+    }
+
+    fn alloc_tag(&mut self) -> u64 {
+        self.next_tag += 1;
+        self.next_tag
+    }
+
+    fn alloc_batch(&mut self) -> u64 {
+        self.next_batch += 1;
+        self.next_batch
+    }
+
+    /// Would dispatching `items` more items breach the shard's queue cap?
+    fn overloaded(&self, shard: usize, items: usize) -> bool {
+        self.shard_load
+            .get(shard)
+            .map_or(true, |&l| l.saturating_add(items) > self.cfg.shard_queue_cap)
+    }
+
+    fn shard_send(&self, shard: usize, msg: ShardMsg) -> bool {
+        self.shard_txs
+            .get(shard)
+            .map_or(false, |tx| tx.send(msg).is_ok())
+    }
+
+    fn track(&mut self, tag: u64, p: Pending, shard: usize, items: usize) {
+        if let Some(l) = self.shard_load.get_mut(shard) {
+            *l += items;
+        }
+        self.pending.insert(tag, p);
+        self.deadlines
+            .push(Reverse((Instant::now() + self.cfg.shard_timeout, tag)));
+    }
+
+    fn track_admin(&mut self, tag: u64, slot: usize, gen: u64) {
+        self.pending.insert(tag, Pending::Admin { slot, gen });
+        // merger ops cover a full broadcast round (one ack per shard plus
+        // the cycle itself), so scale the deadline accordingly
+        let timeout = self.cfg.shard_timeout * (self.cfg.workers as u32 + 2);
+        self.deadlines.push(Reverse((Instant::now() + timeout, tag)));
+    }
+
+    fn bump_in_flight(&mut self, slot: usize) {
+        if let Some(c) = self.conn_mut(slot) {
+            c.in_flight += 1;
+        }
+    }
+
+    fn unload(&mut self, shard: usize, items: usize) {
+        if let Some(l) = self.shard_load.get_mut(shard) {
+            *l = l.saturating_sub(items);
+        }
+    }
+
+    // ------------------------------------------------------- completions --
+
+    fn drain_completions(&mut self) -> usize {
+        let mut n = 0usize;
+        while let Ok((tag, resp)) = self.done_rx.try_recv() {
+            self.on_completion(tag, resp);
+            n += 1;
+        }
+        n
+    }
+
+    fn on_completion(&mut self, tag: u64, resp: Response) {
+        let Some(p) = self.pending.remove(&tag) else {
+            return;
+        };
+        match p {
+            Pending::Route {
+                slot,
+                gen,
+                shard,
+                item_id,
+            } => {
+                self.unload(shard, 1);
+                // claim ownership only once the shard accepted the route —
+                // identical rule and ordering to the threaded dispatcher
+                if resp.is_ok() {
+                    self.owners.insert(item_id, shard);
+                }
+                self.finish_one(slot, gen, resp);
+            }
+            Pending::Feedback {
+                slot,
+                gen,
+                shard,
+                item_id,
+                owner_gen,
+            } => {
+                self.unload(shard, 1);
+                if resp.is_ok() {
+                    self.owners.remove_if(item_id, owner_gen);
+                }
+                self.finish_one(slot, gen, resp);
+            }
+            Pending::RouteSub { batch, shard, meta } => {
+                self.unload(shard, meta.len());
+                let mut filled = Vec::with_capacity(meta.len());
+                match resp {
+                    Response::Batch { results, .. } if results.len() == meta.len() => {
+                        for (&(k, _), r) in meta.iter().zip(results) {
+                            // same claim-on-success rule as single route
+                            if let Response::Route { id, .. } = &r {
+                                self.owners.insert(*id, shard);
+                            }
+                            filled.push((k, r));
+                        }
+                    }
+                    _ => {
+                        for &(k, item_id) in &meta {
+                            filled.push((
+                                k,
+                                Response::err(
+                                    ErrorCode::Unavailable,
+                                    format!("shard {shard} dropped the batch"),
+                                    Some(item_id),
+                                ),
+                            ));
+                        }
+                    }
+                }
+                self.sub_done(batch, filled);
+            }
+            Pending::FeedbackSub { batch, shard, meta } => {
+                self.unload(shard, meta.len());
+                let mut filled = Vec::with_capacity(meta.len());
+                match resp {
+                    Response::Batch { results, .. } if results.len() == meta.len() => {
+                        for (&(k, item_id, owner_gen), r) in meta.iter().zip(results) {
+                            if r.is_ok() {
+                                self.owners.remove_if(item_id, owner_gen);
+                            }
+                            filled.push((k, r));
+                        }
+                    }
+                    _ => {
+                        for &(k, item_id, _) in &meta {
+                            filled.push((
+                                k,
+                                Response::err(
+                                    ErrorCode::Unavailable,
+                                    format!("shard {shard} dropped the batch"),
+                                    Some(item_id),
+                                ),
+                            ));
+                        }
+                    }
+                }
+                self.sub_done(batch, filled);
+            }
+            Pending::Admin { slot, gen } => self.finish_one(slot, gen, resp),
+            Pending::TimedOut { shard, items } => self.unload(shard, items),
+        }
+    }
+
+    fn sub_done(&mut self, batch: u64, filled: Vec<(usize, Response)>) {
+        let finished = match self.batches.get_mut(&batch) {
+            Some(asm) => {
+                for (k, r) in filled {
+                    if let Some(s) = asm.slots.get_mut(k) {
+                        *s = Some(r);
+                    }
+                }
+                asm.remaining = asm.remaining.saturating_sub(1);
+                asm.remaining == 0
+            }
+            None => false,
+        };
+        if finished {
+            if let Some(asm) = self.batches.remove(&batch) {
+                let (slot, gen) = (asm.slot, asm.gen);
+                let resp = finalize_batch(asm);
+                self.finish_one(slot, gen, resp);
+            }
+        }
+    }
+
+    fn finish_one(&mut self, slot: usize, gen: u64, resp: Response) {
+        let Some(conn) = self.conn_mut(slot) else { return };
+        if conn.gen != gen {
+            return;
+        }
+        conn.in_flight = conn.in_flight.saturating_sub(1);
+        self.enqueue_resp(slot, gen, resp);
+    }
+
+    // --------------------------------------------------------- deadlines --
+
+    fn fire_deadlines(&mut self) {
+        let now = Instant::now();
+        while let Some(&Reverse((when, tag))) = self.deadlines.peek() {
+            if when > now {
+                break;
+            }
+            self.deadlines.pop();
+            self.expire(tag);
+        }
+    }
+
+    fn expire(&mut self, tag: u64) {
+        let Some(p) = self.pending.remove(&tag) else {
+            return;
+        };
+        match p {
+            Pending::Route {
+                slot,
+                gen,
+                shard,
+                item_id,
+            }
+            | Pending::Feedback {
+                slot,
+                gen,
+                shard,
+                item_id,
+                ..
+            } => {
+                self.pending.insert(tag, Pending::TimedOut { shard, items: 1 });
+                self.finish_one(
+                    slot,
+                    gen,
+                    Response::err(
+                        ErrorCode::ShardTimeout,
+                        format!("shard {shard} timed out"),
+                        Some(item_id),
+                    ),
+                );
+            }
+            Pending::RouteSub { batch, shard, meta } => {
+                let filled = meta
+                    .iter()
+                    .map(|&(k, item_id)| {
+                        (
+                            k,
+                            Response::err(
+                                ErrorCode::ShardTimeout,
+                                format!("shard {shard} timed out"),
+                                Some(item_id),
+                            ),
+                        )
+                    })
+                    .collect();
+                self.pending
+                    .insert(tag, Pending::TimedOut { shard, items: meta.len() });
+                self.sub_done(batch, filled);
+            }
+            Pending::FeedbackSub { batch, shard, meta } => {
+                let filled = meta
+                    .iter()
+                    .map(|&(k, item_id, _)| {
+                        (
+                            k,
+                            Response::err(
+                                ErrorCode::ShardTimeout,
+                                format!("shard {shard} timed out"),
+                                Some(item_id),
+                            ),
+                        )
+                    })
+                    .collect();
+                self.pending
+                    .insert(tag, Pending::TimedOut { shard, items: meta.len() });
+                self.sub_done(batch, filled);
+            }
+            Pending::Admin { slot, gen } => {
+                // merger ops hold no shard budget; a late reply is
+                // dropped by its (now absent) tag
+                self.finish_one(
+                    slot,
+                    gen,
+                    Response::err(ErrorCode::ShardTimeout, "merger timed out", None),
+                );
+            }
+            // a zombie's deadline was already consumed; keep the ledger
+            zombie @ Pending::TimedOut { .. } => {
+                self.pending.insert(tag, zombie);
+            }
+        }
+    }
+
+    // ------------------------------------------------------------ output --
+
+    /// Serialize exactly once into the connection's write buffer.
+    fn enqueue_resp(&mut self, slot: usize, gen: u64, resp: Response) {
+        let Some(conn) = self.conn_mut(slot) else { return };
+        if conn.gen != gen {
+            return;
+        }
+        let line = resp.to_json().to_string();
+        conn.wbuf.extend_from_slice(line.as_bytes());
+        conn.wbuf.push(b'\n');
+        self.touched.push(slot);
+    }
+
+    /// Re-drive connections whose state changed mid-tick: new responses
+    /// to flush, pipeline slots freed for buffered frames.  Bounded
+    /// rounds — each round only reprocesses slots the previous round
+    /// touched, and frames deplete, so this converges fast.
+    fn process_touched(&mut self) {
+        let mut rounds = 0;
+        while !self.touched.is_empty() && rounds < MAX_TOUCH_ROUNDS {
+            rounds += 1;
+            let mut slots = std::mem::take(&mut self.touched);
+            slots.sort_unstable();
+            slots.dedup();
+            for slot in slots {
+                self.process_frames(slot);
+                self.flush_conn(slot);
+                self.update_interest(slot);
+            }
+        }
+        self.touched.clear();
+    }
+
+    fn flush_conn(&mut self, slot: usize) {
+        let mut dead = false;
+        loop {
+            let Some(conn) = self.conns.get_mut(slot).and_then(|c| c.as_mut()) else {
+                return;
+            };
+            if conn.wpos >= conn.wbuf.len() {
+                conn.wbuf.clear();
+                conn.wpos = 0;
+                break;
+            }
+            let Some(chunk) = conn.wbuf.get(conn.wpos..) else { break };
+            match conn.stream.write(chunk) {
+                Ok(0) => {
+                    dead = true;
+                    break;
+                }
+                Ok(n) => conn.wpos += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    // compact the flushed prefix so a slow reader's buffer
+                    // tracks only the unsent tail
+                    if conn.wpos > 0 {
+                        conn.wbuf.drain(..conn.wpos);
+                        conn.wpos = 0;
+                    }
+                    break;
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    dead = true;
+                    break;
+                }
+            }
+        }
+        if dead {
+            self.close_conn(slot);
+            return;
+        }
+        self.reap(slot);
+    }
+
+    /// Close a connection that has nothing left to do: marked closing, or
+    /// at EOF with no in-flight work, no unflushed output, and no
+    /// complete frame left to decode.
+    fn reap(&mut self, slot: usize) {
+        let close = match self.conn_mut(slot) {
+            Some(c) => {
+                let drained = c.wpos >= c.wbuf.len();
+                let idle = c.in_flight == 0 && drained;
+                (c.closing && idle) || (c.eof && idle && !c.rbuf.contains(&b'\n'))
+            }
+            None => false,
+        };
+        if close {
+            self.close_conn(slot);
+        }
+    }
+
+    /// Recompute poller interest from the connection's state, with
+    /// hysteresis on the write-buffer watermark.
+    fn update_interest(&mut self, slot: usize) {
+        let max_pipeline = self.cfg.max_pipeline;
+        let change = match self.conn_mut(slot) {
+            Some(conn) => {
+                let buffered = conn.wbuf.len().saturating_sub(conn.wpos);
+                let watermark = if conn.reading { WBUF_HIWAT } else { WBUF_LOWAT };
+                let want_read = !conn.closing
+                    && !conn.eof
+                    && conn.in_flight < max_pipeline
+                    && buffered < watermark;
+                let want_write = buffered > 0;
+                if want_read == conn.reading && want_write == conn.writing {
+                    None
+                } else {
+                    conn.reading = want_read;
+                    conn.writing = want_write;
+                    Some((conn.stream.as_raw_fd(), want_read, want_write))
+                }
+            }
+            None => None,
+        };
+        if let Some((fd, r, w)) = change {
+            let _ = self.poller.modify(fd, TOKEN_BASE + slot, r, w);
+        }
+    }
+
+    fn close_conn(&mut self, slot: usize) {
+        let Some(entry) = self.conns.get_mut(slot) else { return };
+        let Some(conn) = entry.take() else { return };
+        let _ = self.poller.deregister(conn.stream.as_raw_fd());
+        self.free.push(slot);
+        self.n_conns = self.n_conns.saturating_sub(1);
+        // conn drops here; the TcpStream close is the client's signal
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::ParetoClient;
+    use crate::pacer::{PacerConfig, SharedPacer};
+    use crate::router::{ContextCache, ParetoRouter, Prior, RouterConfig};
+    use crate::sim::hash_features;
+
+    const D: usize = 6;
+
+    fn spawn_event(workers: usize) -> EventEngine {
+        let ledger = Arc::new(SharedPacer::new(PacerConfig::new(1e-3)));
+        let build = move |shard: usize| {
+            let mut router =
+                ParetoRouter::new(RouterConfig::tabula_rasa(D, Some(1e-3), 100 + shard as u64));
+            router.use_shared_pacer(ledger.clone());
+            router.add_model("llama", 0.1, 0.1, Prior::Cold);
+            router.add_model("mistral", 0.4, 1.6, Prior::Cold);
+            ServerState::new(
+                router,
+                ContextCache::new(4096),
+                Box::new(|t: &str| Ok(hash_features(t, D))),
+                Arc::new(Metrics::new()),
+            )
+        };
+        EventEngine::spawn(
+            "127.0.0.1:0",
+            EngineConfig::new(workers).merge_every(Duration::from_secs(60)),
+            build,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn routes_round_robin_with_feedback_over_the_event_loop() {
+        let engine = spawn_event(4);
+        let mut c = ParetoClient::connect(engine.addr).unwrap();
+        let mut shards_seen = [false; 4];
+        for i in 0..40u64 {
+            let r = c.route(i, &format!("prompt number {i}")).unwrap();
+            shards_seen[r.shard] = true;
+            c.feedback(i, 0.8, 1e-4).unwrap();
+        }
+        assert!(shards_seen.iter().all(|&s| s), "round-robin must hit every shard");
+        let m = c.metrics().unwrap();
+        assert_eq!(m.get("requests").unwrap().as_f64(), Some(40.0));
+        assert_eq!(m.get("feedbacks").unwrap().as_f64(), Some(40.0));
+        let per_shard = m.get("per_shard").unwrap().as_arr().unwrap();
+        for s in per_shard {
+            assert_eq!(s.as_f64(), Some(10.0), "exact round-robin split");
+        }
+        engine.stop();
+    }
+
+    #[test]
+    fn batches_and_admin_verbs_work_on_the_event_loop() {
+        let engine = spawn_event(4);
+        let mut c = ParetoClient::connect(engine.addr).unwrap();
+        let items: Vec<(u64, String)> = (0..16).map(|i| (i, format!("batch item {i}"))).collect();
+        let routed = c.route_batch(&items).unwrap();
+        assert_eq!(routed.len(), 16);
+        for (k, r) in routed.iter().enumerate() {
+            assert_eq!(r.as_ref().unwrap().id, k as u64, "request order");
+        }
+        let fb: Vec<(u64, f64, f64)> = (0..16).map(|i| (i, 0.8, 1e-4)).collect();
+        for a in c.feedback_batch(&fb).unwrap() {
+            a.unwrap();
+        }
+        let arm = c.add_model("flash", 0.3, 2.5, None).unwrap();
+        assert_eq!(arm, 2);
+        let s = c.sync().unwrap();
+        assert_eq!(s.synced_shards, 4);
+        engine.stop();
+    }
+
+    #[test]
+    fn shutdown_verb_stops_the_event_engine() {
+        let engine = spawn_event(2);
+        let mut c = ParetoClient::connect(engine.addr).unwrap();
+        c.shutdown().unwrap();
+        for _ in 0..200 {
+            if engine.is_shutdown() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(engine.is_shutdown());
+        engine.stop();
+    }
+
+    #[test]
+    fn double_feedback_is_rejected_at_the_reactor() {
+        let engine = spawn_event(2);
+        let mut c = ParetoClient::connect(engine.addr).unwrap();
+        c.route(5, "a prompt").unwrap();
+        c.feedback(5, 0.9, 1e-4).unwrap();
+        let e = c.feedback(5, 0.9, 1e-4).unwrap_err();
+        match e {
+            crate::client::ClientError::Api(e) => assert_eq!(e.code, ErrorCode::UnknownId),
+            other => panic!("expected api error, got {other:?}"),
+        }
+        engine.stop();
+    }
+}

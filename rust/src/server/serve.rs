@@ -71,7 +71,7 @@ impl Server {
                         break;
                     }
                     let (resp, down) = state.handle(&job.req);
-                    let _ = job.resp.send(resp);
+                    job.resp.send(resp);
                     if down {
                         wshutdown.store(true, Ordering::Release);
                         break;
@@ -121,7 +121,7 @@ impl Server {
         let (rtx, _rrx) = mpsc::channel();
         let _ = self.tx.send(Job {
             req: Request::Shutdown { id: None },
-            resp: rtx,
+            resp: super::api::Reply::Chan(rtx),
         });
         // dummy connection unblocks accept()
         let _ = TcpStream::connect(self.addr);
@@ -161,7 +161,7 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Job>, shutdown: Arc<AtomicBoo
             Ok(j) => match Request::parse(&j) {
                 Ok(req) => {
                     let (rtx, rrx) = mpsc::channel();
-                    if tx.send(Job { req, resp: rtx }).is_err() {
+                    if tx.send(Job { req, resp: super::api::Reply::Chan(rtx) }).is_err() {
                         break;
                     }
                     match rrx.recv() {

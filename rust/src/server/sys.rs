@@ -1,0 +1,434 @@
+//! Thin syscall shim for the event-loop serving path.
+//!
+//! The offline build has no `libc` crate, so this module declares the
+//! handful of C symbols the reactor needs directly (std already links
+//! libc on every unix target): `epoll` on Linux, `poll(2)` on other unix
+//! systems, plus a nonblocking self-pipe used as a cross-thread waker.
+//! Everything is level-triggered — the reactor re-arms interest
+//! explicitly, which keeps the backpressure logic (`pause reads while the
+//! write buffer is over the high-water mark`) a pure interest-set edit.
+//!
+//! The [`Poller`] API is the minimal mio-shaped surface:
+//! register/modify/deregister a raw fd under a caller-chosen token, then
+//! `wait` for readiness events.  No allocation happens per event on the
+//! epoll path; the poll(2) fallback rebuilds its pollfd array per call
+//! (that path exists for portability, not performance).
+
+use std::io;
+use std::os::unix::io::RawFd;
+use std::time::Duration;
+
+/// One readiness notification from [`Poller::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Caller-chosen token from `register`.
+    pub token: usize,
+    pub readable: bool,
+    pub writable: bool,
+    /// Peer hung up or the fd errored; the owner should read to EOF / close.
+    pub hangup: bool,
+}
+
+/// Clamp an optional timeout to poll/epoll's `int` milliseconds, rounding
+/// up so a sub-millisecond deadline does not busy-loop at timeout 0.
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1,
+        Some(d) => {
+            let mut ms = d.as_millis();
+            if d.subsec_nanos() % 1_000_000 != 0 {
+                ms += 1;
+            }
+            ms.min(i32::MAX as u128) as i32
+        }
+    }
+}
+
+// ---------------------------------------------------------------- epoll --
+
+#[cfg(target_os = "linux")]
+mod imp {
+    use super::{timeout_ms, Event};
+    use std::ffi::c_int;
+    use std::io;
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    // x86_64 glibc declares struct epoll_event __EPOLL_PACKED; other
+    // arches use natural alignment.  Getting this wrong corrupts the
+    // event array, so mirror the ABI exactly.
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    const EPOLL_CLOEXEC: c_int = 0o2000000;
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLL_CTL_MOD: c_int = 3;
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+
+    /// Level-triggered epoll instance.
+    pub struct Poller {
+        epfd: RawFd,
+        buf: Vec<EpollEvent>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            // SAFETY: plain syscall, no pointers involved.
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller { epfd, buf: vec![EpollEvent { events: 0, data: 0 }; 256] })
+        }
+
+        fn ctl(&mut self, op: c_int, fd: RawFd, token: usize, read: bool, write: bool) -> io::Result<()> {
+            let mut events = EPOLLRDHUP;
+            if read {
+                events |= EPOLLIN;
+            }
+            if write {
+                events |= EPOLLOUT;
+            }
+            let mut ev = EpollEvent { events, data: token as u64 };
+            let evp = if op == EPOLL_CTL_DEL { std::ptr::null_mut() } else { &mut ev };
+            // SAFETY: `evp` is either null (DEL, where the kernel ignores
+            // it) or points at a live stack value for the call's duration.
+            let rc = unsafe { epoll_ctl(self.epfd, op, fd, evp) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn register(&mut self, fd: RawFd, token: usize, read: bool, write: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, read, write)
+        }
+
+        pub fn modify(&mut self, fd: RawFd, token: usize, read: bool, write: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, read, write)
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, false, false)
+        }
+
+        /// Block up to `timeout` for readiness; append events to `out`.
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<usize> {
+            let max = self.buf.len() as c_int;
+            // SAFETY: `buf` holds `max` initialized elements and outlives
+            // the call; the kernel writes at most `max` entries.
+            let n = unsafe {
+                epoll_wait(self.epfd, self.buf.as_mut_ptr(), max, timeout_ms(timeout))
+            };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(0);
+                }
+                return Err(e);
+            }
+            for ev in self.buf.iter().take(n as usize) {
+                // copy out of the (possibly packed) struct before use
+                let bits = ev.events;
+                let token = ev.data as usize;
+                out.push(Event {
+                    token,
+                    readable: bits & EPOLLIN != 0,
+                    writable: bits & EPOLLOUT != 0,
+                    hangup: bits & (EPOLLERR | EPOLLHUP | EPOLLRDHUP) != 0,
+                });
+            }
+            Ok(n as usize)
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            // SAFETY: epfd came from epoll_create1 and is closed once.
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+// -------------------------------------------------- poll(2) fallback --
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod imp {
+    use super::{timeout_ms, Event};
+    use std::collections::HashMap;
+    use std::ffi::{c_int, c_ulong};
+    use std::io;
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct PollFd {
+        fd: c_int,
+        events: i16,
+        revents: i16,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+    }
+
+    const POLLIN: i16 = 0x001;
+    const POLLOUT: i16 = 0x004;
+    const POLLERR: i16 = 0x008;
+    const POLLHUP: i16 = 0x010;
+
+    /// poll(2)-backed fallback: interest lives in a map and the pollfd
+    /// array is rebuilt per wait call.
+    pub struct Poller {
+        interest: HashMap<RawFd, (usize, bool, bool)>,
+        fds: Vec<PollFd>,
+        order: Vec<RawFd>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller { interest: HashMap::new(), fds: Vec::new(), order: Vec::new() })
+        }
+
+        pub fn register(&mut self, fd: RawFd, token: usize, read: bool, write: bool) -> io::Result<()> {
+            self.interest.insert(fd, (token, read, write));
+            Ok(())
+        }
+
+        pub fn modify(&mut self, fd: RawFd, token: usize, read: bool, write: bool) -> io::Result<()> {
+            self.interest.insert(fd, (token, read, write));
+            Ok(())
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            self.interest.remove(&fd);
+            Ok(())
+        }
+
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<usize> {
+            self.fds.clear();
+            self.order.clear();
+            for (fd, (_, read, write)) in self.interest.iter() {
+                let mut events = 0i16;
+                if *read {
+                    events |= POLLIN;
+                }
+                if *write {
+                    events |= POLLOUT;
+                }
+                self.fds.push(PollFd { fd: *fd, events, revents: 0 });
+                self.order.push(*fd);
+            }
+            // SAFETY: `fds` holds exactly `len` initialized pollfd entries.
+            let rc = unsafe {
+                poll(self.fds.as_mut_ptr(), self.fds.len() as c_ulong, timeout_ms(timeout))
+            };
+            if rc < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(0);
+                }
+                return Err(e);
+            }
+            let mut n = 0usize;
+            for (pfd, fd) in self.fds.iter().zip(self.order.iter()) {
+                let bits = pfd.revents;
+                if bits == 0 {
+                    continue;
+                }
+                let Some((token, _, _)) = self.interest.get(fd) else { continue };
+                out.push(Event {
+                    token: *token,
+                    readable: bits & POLLIN != 0,
+                    writable: bits & POLLOUT != 0,
+                    hangup: bits & (POLLERR | POLLHUP) != 0,
+                });
+                n += 1;
+            }
+            Ok(n)
+        }
+    }
+}
+
+pub use imp::Poller;
+
+// ------------------------------------------------------------ self-pipe --
+
+mod pipe_ffi {
+    use std::ffi::c_int;
+
+    extern "C" {
+        pub fn pipe(fds: *mut c_int) -> c_int;
+        pub fn fcntl(fd: c_int, cmd: c_int, arg: c_int) -> c_int;
+        pub fn close(fd: c_int) -> c_int;
+        pub fn read(fd: c_int, buf: *mut u8, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const u8, count: usize) -> isize;
+    }
+
+    pub const F_SETFL: c_int = 4;
+    pub const F_SETFD: c_int = 2;
+    pub const FD_CLOEXEC: c_int = 1;
+    #[cfg(target_os = "linux")]
+    pub const O_NONBLOCK: c_int = 0o4000;
+    #[cfg(not(target_os = "linux"))]
+    pub const O_NONBLOCK: c_int = 0x0004;
+}
+
+/// Nonblocking self-pipe: the reactor polls the read end; shard workers
+/// poke the write end to interrupt a blocked `wait`.  Both ends are
+/// nonblocking, so `notify` under a full pipe degrades to a no-op — which
+/// is exactly right: a full pipe already guarantees a pending wakeup.
+pub struct WakePipe {
+    r: RawFd,
+    w: RawFd,
+}
+
+impl WakePipe {
+    pub fn new() -> io::Result<WakePipe> {
+        let mut fds = [0 as std::ffi::c_int; 2];
+        // SAFETY: `fds` is a live 2-element array for the call's duration.
+        let rc = unsafe { pipe_ffi::pipe(fds.as_mut_ptr()) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        let (r, w) = match fds {
+            [a, b] => (a, b),
+        };
+        for fd in [r, w] {
+            // SAFETY: plain fcntl on fds we just created.
+            unsafe {
+                pipe_ffi::fcntl(fd, pipe_ffi::F_SETFL, pipe_ffi::O_NONBLOCK);
+                pipe_ffi::fcntl(fd, pipe_ffi::F_SETFD, pipe_ffi::FD_CLOEXEC);
+            }
+        }
+        Ok(WakePipe { r, w })
+    }
+
+    /// The fd the reactor registers with its [`Poller`].
+    pub fn read_fd(&self) -> RawFd {
+        self.r
+    }
+
+    /// Make the read end readable.  Errors (pipe already full, shutdown
+    /// race) are intentionally ignored — see the type docs.
+    pub fn notify(&self) {
+        let byte = [1u8];
+        // SAFETY: one-byte write from a live buffer; nonblocking fd.
+        unsafe {
+            pipe_ffi::write(self.w, byte.as_ptr(), 1);
+        }
+    }
+
+    /// Swallow all pending wakeup bytes (called once per reactor wakeup).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 256];
+        loop {
+            // SAFETY: reads into a live 256-byte buffer; nonblocking fd.
+            let n = unsafe { pipe_ffi::read(self.r, buf.as_mut_ptr(), buf.len()) };
+            if n <= 0 || (n as usize) < buf.len() {
+                return;
+            }
+        }
+    }
+}
+
+impl Drop for WakePipe {
+    fn drop(&mut self) {
+        // SAFETY: both fds came from pipe() and are closed exactly once.
+        unsafe {
+            pipe_ffi::close(self.r);
+            pipe_ffi::close(self.w);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    #[test]
+    fn wake_pipe_roundtrip() {
+        let wp = WakePipe::new().expect("pipe");
+        let mut poller = Poller::new().expect("poller");
+        poller.register(wp.read_fd(), 7, true, false).expect("register");
+        let mut evs = Vec::new();
+        // nothing pending: times out with no events
+        let n = poller.wait(&mut evs, Some(std::time::Duration::from_millis(10))).expect("wait");
+        assert_eq!(n, 0);
+        wp.notify();
+        wp.notify();
+        let n = poller.wait(&mut evs, Some(std::time::Duration::from_millis(1000))).expect("wait");
+        assert!(n >= 1);
+        assert!(evs.iter().any(|e| e.token == 7 && e.readable));
+        wp.drain();
+        evs.clear();
+        let n = poller.wait(&mut evs, Some(std::time::Duration::from_millis(10))).expect("wait");
+        assert_eq!(n, 0, "drained pipe must not stay readable");
+    }
+
+    #[test]
+    fn poller_sees_tcp_readability_and_writability() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr");
+        let mut client = TcpStream::connect(addr).expect("connect");
+        let (mut server, _) = listener.accept().expect("accept");
+        server.set_nonblocking(true).expect("nonblocking");
+
+        let mut poller = Poller::new().expect("poller");
+        poller.register(server.as_raw_fd(), 3, true, true).expect("register");
+        let mut evs = Vec::new();
+        // fresh socket: writable, not yet readable
+        poller.wait(&mut evs, Some(std::time::Duration::from_millis(500))).expect("wait");
+        assert!(evs.iter().any(|e| e.token == 3 && e.writable && !e.readable));
+
+        client.write_all(b"ping").expect("write");
+        evs.clear();
+        poller.wait(&mut evs, Some(std::time::Duration::from_millis(2000))).expect("wait");
+        assert!(evs.iter().any(|e| e.token == 3 && e.readable));
+        let mut buf = [0u8; 8];
+        let n = server.read(&mut buf).expect("read");
+        assert_eq!(&buf[..n], b"ping");
+
+        // drop interest in write, keep read: no more writable storms
+        poller.modify(server.as_raw_fd(), 3, true, false).expect("modify");
+        evs.clear();
+        poller.wait(&mut evs, Some(std::time::Duration::from_millis(50))).expect("wait");
+        assert!(evs.iter().all(|e| !e.writable));
+
+        // peer hangup surfaces as readable-or-hangup
+        drop(client);
+        evs.clear();
+        poller.wait(&mut evs, Some(std::time::Duration::from_millis(2000))).expect("wait");
+        assert!(evs.iter().any(|e| e.readable || e.hangup));
+
+        poller.deregister(server.as_raw_fd()).expect("deregister");
+    }
+}

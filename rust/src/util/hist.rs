@@ -1,0 +1,390 @@
+//! Log-bucketed latency histogram (hdr-style) for the serving load harness.
+//!
+//! Linear-log bucketing with `GROUP_BITS = 5`: values below `2^(g+1)` get
+//! exact unit-width buckets; above that, each power-of-two range is split
+//! into `2^g = 32` equal sub-buckets, so the relative quantile error is
+//! bounded by `2^-g` (≈3.1%) at any magnitude.  This is the same layout
+//! HdrHistogram uses for its sub-bucket arrays, shrunk to the one
+//! resolution the load harness needs; with 64-bit values the index space
+//! tops out below 1,952 buckets, so a flat `Vec<u64>` is the whole data
+//! structure and merging two histograms is element-wise addition —
+//! associative and commutative by construction (property-tested below).
+//!
+//! Units are whatever the caller records (the serving harness records
+//! nanoseconds); the histogram itself is unit-agnostic.
+
+use crate::util::json::Json;
+
+/// Sub-bucket resolution: each power-of-two range splits into `2^GROUP_BITS`
+/// buckets, bounding relative error by `2^-GROUP_BITS`.
+pub const GROUP_BITS: u32 = 5;
+
+/// Below this value every bucket has width 1 (exact counts).
+const LINEAR_MAX: u64 = 1 << (GROUP_BITS + 1);
+
+/// Flat bucket index of `v`.  Continuous at the linear/log boundary:
+/// `bucket(LINEAR_MAX - 1) + 1 == bucket(LINEAR_MAX)`.
+fn bucket(v: u64) -> usize {
+    if v < LINEAR_MAX {
+        v as usize
+    } else {
+        // m = position of the highest set bit, >= GROUP_BITS + 1 here
+        let m = 63 - v.leading_zeros();
+        let shift = m - GROUP_BITS;
+        (((shift as u64) << GROUP_BITS) + (v >> shift)) as usize
+    }
+}
+
+/// Inclusive lower bound of bucket `i` (inverse of [`bucket`]).
+fn bucket_lo(i: usize) -> u64 {
+    let i = i as u64;
+    if i < LINEAR_MAX {
+        i
+    } else {
+        let shift = (i >> GROUP_BITS) - 1;
+        let sub = i - (shift << GROUP_BITS);
+        sub << shift
+    }
+}
+
+/// Exclusive upper bound of bucket `i`.
+fn bucket_hi(i: usize) -> u64 {
+    let i = i as u64;
+    if i < LINEAR_MAX {
+        i + 1
+    } else {
+        let shift = (i >> GROUP_BITS) - 1;
+        let sub = i - (shift << GROUP_BITS);
+        (sub + 1) << shift
+    }
+}
+
+/// Representative value reported for bucket `i`: the bucket midpoint, which
+/// keeps the worst-case quantile error at half the bucket width.
+fn bucket_mid(i: usize) -> u64 {
+    let lo = bucket_lo(i);
+    let hi = bucket_hi(i);
+    lo + (hi - lo) / 2
+}
+
+/// Log-bucketed histogram of `u64` samples.
+///
+/// `record` is O(1); `quantile` walks the (bounded) bucket array.  `merge`
+/// is element-wise and lossless: merging per-connection histograms yields
+/// bit-identical quantiles to recording every sample into one histogram.
+#[derive(Clone, Debug, Default)]
+pub struct Hist {
+    counts: Vec<u64>,
+    n: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist { counts: Vec::new(), n: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.record_n(v, 1);
+    }
+
+    /// Record `weight` occurrences of `v`.
+    pub fn record_n(&mut self, v: u64, weight: u64) {
+        if weight == 0 {
+            return;
+        }
+        let i = bucket(v);
+        if self.counts.len() <= i {
+            self.counts.resize(i + 1, 0);
+        }
+        if let Some(c) = self.counts.get_mut(i) {
+            *c += weight;
+        }
+        self.n += weight;
+        self.sum += (v as u128) * (weight as u128);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Fold `other` into `self` (element-wise; associative + commutative).
+    pub fn merge(&mut self, other: &Hist) {
+        if other.n == 0 {
+            return;
+        }
+        if self.counts.len() < other.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (c, o) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *c += *o;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.n == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.n as f64
+        }
+    }
+
+    /// Value at quantile `q` in `[0, 1]`: the midpoint of the bucket holding
+    /// the `ceil(q·n)`-th smallest sample (exact `min`/`max` at the ends).
+    /// Worst-case relative error vs. the exact sorted sample is `2^-GROUP_BITS`.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.n == 0 {
+            return 0;
+        }
+        if q <= 0.0 {
+            return self.min();
+        }
+        if q >= 1.0 {
+            return self.max;
+        }
+        let rank = ((q * self.n as f64).ceil() as u64).clamp(1, self.n);
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                // clamp the representative to the observed range so p50 of
+                // a single-value histogram returns that value exactly
+                return bucket_mid(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    pub fn p999(&self) -> u64 {
+        self.quantile(0.999)
+    }
+
+    /// JSON dump for CI artifacts: summary quantiles plus the non-empty
+    /// buckets as `[lo, hi, count]` triples.
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| **c > 0)
+            .map(|(i, c)| {
+                Json::Arr(vec![
+                    Json::Num(bucket_lo(i) as f64),
+                    Json::Num(bucket_hi(i) as f64),
+                    Json::Num(*c as f64),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("min", Json::Num(self.min() as f64)),
+            ("max", Json::Num(self.max as f64)),
+            ("mean", Json::Num(self.mean())),
+            ("p50", Json::Num(self.p50() as f64)),
+            ("p90", Json::Num(self.quantile(0.90) as f64)),
+            ("p99", Json::Num(self.p99() as f64)),
+            ("p999", Json::Num(self.p999() as f64)),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+}
+
+impl PartialEq for Hist {
+    /// Structural equality up to trailing empty buckets, so merge order
+    /// (which only affects how far `counts` grew) never breaks equality.
+    fn eq(&self, other: &Hist) -> bool {
+        let trim = |c: &[u64]| {
+            let end = c.iter().rposition(|x| *x > 0).map_or(0, |p| p + 1);
+            c.get(..end).map(|s| s.to_vec()).unwrap_or_default()
+        };
+        self.n == other.n
+            && self.sum == other.sum
+            && self.min() == other.min()
+            && self.max == other.max
+            && trim(&self.counts) == trim(&other.counts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::for_cases;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bucket_index_is_monotone_and_continuous() {
+        // exhaustive near the linear/log boundary, sampled above it
+        let mut prev = bucket(0);
+        for v in 1..4096u64 {
+            let b = bucket(v);
+            assert!(b == prev || b == prev + 1, "gap at v={v}");
+            prev = b;
+        }
+        for shift in 7..63u32 {
+            let v = 1u64 << shift;
+            assert_eq!(bucket(v - 1) + 1, bucket(v), "boundary at 2^{shift}");
+        }
+    }
+
+    #[test]
+    fn bucket_bounds_invert_the_index() {
+        let mut rng = Rng::new(7);
+        for _ in 0..20_000 {
+            let v = rng.next_u64() >> (rng.below(60) as u32);
+            let i = bucket(v);
+            assert!(bucket_lo(i) <= v && v < bucket_hi(i), "v={v} i={i}");
+        }
+    }
+
+    #[test]
+    fn linear_region_is_exact() {
+        let mut h = Hist::new();
+        for v in 0..LINEAR_MAX {
+            h.record(v);
+        }
+        // rank ceil(0.5 * 64) = 32 => the 32nd smallest of 0..64 is 31
+        assert_eq!(h.quantile(0.5), LINEAR_MAX / 2 - 1);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), LINEAR_MAX - 1);
+    }
+
+    #[test]
+    fn empty_hist_is_all_zeros() {
+        let h = Hist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    /// Exact quantile by sort, matching the histogram's rank convention.
+    fn exact_quantile(sorted: &[u64], q: f64) -> u64 {
+        let n = sorted.len() as u64;
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        sorted[(rank - 1) as usize]
+    }
+
+    #[test]
+    fn quantiles_within_bucket_error_of_exact_sort() {
+        for_cases(40, 0x9157_0001, |rng, case| {
+            let n = 1 + rng.below(2000) as usize;
+            // heavy-tailed sample spanning the linear and log regions,
+            // roughly "nanosecond latencies from 0 to seconds"
+            let samples: Vec<u64> = (0..n)
+                .map(|_| {
+                    let mag = rng.below(30);
+                    rng.next_u64() % (1u64 << (mag + 4))
+                })
+                .collect();
+            let mut h = Hist::new();
+            for s in &samples {
+                h.record(*s);
+            }
+            let mut sorted = samples.clone();
+            sorted.sort_unstable();
+            for q in [0.0, 0.1, 0.5, 0.9, 0.99, 0.999, 1.0] {
+                let exact = exact_quantile(&sorted, q);
+                let got = h.quantile(q);
+                // same bucket => |got - exact| < bucket width <= exact * 2^-g
+                let tol = (exact >> GROUP_BITS).max(0);
+                assert!(
+                    got.abs_diff(exact) <= tol,
+                    "case {case}: q={q} exact={exact} got={got} tol={tol}"
+                );
+            }
+            assert_eq!(h.quantile(0.0), sorted[0]);
+            assert_eq!(h.quantile(1.0), sorted[n - 1]);
+        });
+    }
+
+    #[test]
+    fn merge_is_associative_commutative_and_lossless() {
+        for_cases(40, 0x9157_0002, |rng, case| {
+            let mut parts: Vec<Hist> = Vec::new();
+            let mut bulk = Hist::new();
+            for _ in 0..3 {
+                let mut h = Hist::new();
+                for _ in 0..rng.below(400) {
+                    let v = rng.next_u64() % (1u64 << (4 + rng.below(40)));
+                    h.record(v);
+                    bulk.record(v);
+                }
+                parts.push(h);
+            }
+            let (a, b, c) = (&parts[0], &parts[1], &parts[2]);
+            // (a + b) + c
+            let mut left = a.clone();
+            left.merge(b);
+            left.merge(c);
+            // a + (b + c)
+            let mut bc = b.clone();
+            bc.merge(c);
+            let mut right = a.clone();
+            right.merge(&bc);
+            assert!(left == right, "case {case}: associativity");
+            // b + a == a + b
+            let mut ab = a.clone();
+            ab.merge(b);
+            let mut ba = b.clone();
+            ba.merge(a);
+            assert!(ab == ba, "case {case}: commutativity");
+            // merged parts == recording everything into one histogram
+            assert!(left == bulk, "case {case}: merge vs bulk");
+            for q in [0.5, 0.99, 0.999] {
+                assert_eq!(left.quantile(q), bulk.quantile(q), "case {case}: q={q}");
+            }
+        });
+    }
+
+    #[test]
+    fn record_n_weights_counts() {
+        let mut h = Hist::new();
+        h.record_n(100, 5);
+        h.record_n(1000, 1);
+        assert_eq!(h.count(), 6);
+        assert!(h.quantile(0.5).abs_diff(100) <= 100 >> GROUP_BITS);
+        assert_eq!(h.max(), 1000);
+        h.record_n(7, 0); // zero weight is a no-op
+        assert_eq!(h.count(), 6);
+    }
+
+    #[test]
+    fn json_dump_has_summary_and_buckets() {
+        let mut h = Hist::new();
+        for v in [10u64, 20, 20, 4000] {
+            h.record(v);
+        }
+        let j = h.to_json().to_string();
+        assert!(j.contains("\"n\":4"), "{j}");
+        assert!(j.contains("\"buckets\""), "{j}");
+    }
+}

@@ -2,6 +2,7 @@
 
 pub mod bench;
 pub mod benchio;
+pub mod hist;
 pub mod json;
 pub mod prop;
 pub mod rng;

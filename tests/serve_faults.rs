@@ -1,0 +1,369 @@
+//! Fault injection against the event-loop serving path: slow writers,
+//! half-open and mid-frame-disconnected connections, oversized and
+//! garbage frames, connection floods, deep pipelining and saturated
+//! shards.  The invariant under every fault is the same — *other
+//! connections keep progressing, the victim gets a typed error, nothing
+//! stalls and nothing panics*.  The saturation scenario also runs against
+//! the threaded oracle, which proves the `Dispatch::forward` timeout path
+//! (a wedged shard must answer `shard_timeout`, not hang the connection
+//! thread forever).
+//!
+//! The stall lever: prompts shaped `STALL:<ms> ...` make the test
+//! featurizer sleep inside the shard worker, which is exactly where a
+//! slow embedding model would wedge a real deployment.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use paretobandit::client::{ClientError, ParetoClient};
+use paretobandit::pacer::{PacerConfig, SharedPacer};
+use paretobandit::router::{ContextCache, ParetoRouter, Prior, RouterConfig};
+use paretobandit::server::{EngineConfig, EventEngine, Metrics, ServerState, ShardedEngine};
+use paretobandit::sim::hash_features;
+use paretobandit::util::json::Json;
+
+const D: usize = 8;
+const BUDGET: f64 = 4e-4;
+
+fn builder() -> impl Fn(usize) -> ServerState + Send + Sync + 'static {
+    let ledger = Arc::new(SharedPacer::new(PacerConfig::new(BUDGET)));
+    move |shard: usize| {
+        let mut router =
+            ParetoRouter::new(RouterConfig::tabula_rasa(D, Some(BUDGET), 700 + shard as u64));
+        router.use_shared_pacer(ledger.clone());
+        router.add_model("llama", 0.10, 0.10, Prior::Cold);
+        router.add_model("mistral", 0.40, 1.60, Prior::Cold);
+        ServerState::new(
+            router,
+            ContextCache::new(65536),
+            Box::new(|t: &str| {
+                if let Some(rest) = t.strip_prefix("STALL:") {
+                    let ms: u64 = rest
+                        .split_whitespace()
+                        .next()
+                        .and_then(|s| s.parse().ok())
+                        .unwrap_or(300);
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                Ok(hash_features(t, D))
+            }),
+            Arc::new(Metrics::new()),
+        )
+    }
+}
+
+fn spawn_event(cfg: EngineConfig) -> EventEngine {
+    EventEngine::spawn("127.0.0.1:0", cfg, builder()).unwrap()
+}
+
+fn raw(addr: &SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_nodelay(true).unwrap();
+    s
+}
+
+fn route_line(id: u64, prompt: &str) -> String {
+    format!(r#"{{"v":2,"op":"route","id":{id},"prompt":"{prompt}"}}"#) + "\n"
+}
+
+/// Read one response line and parse it; panics on EOF.
+fn read_resp(reader: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).unwrap();
+    assert!(n > 0, "server closed the connection unexpectedly");
+    Json::parse(&line).unwrap()
+}
+
+fn code_of(resp: &Json) -> String {
+    resp.get("code")
+        .and_then(Json::as_str)
+        .unwrap_or_default()
+        .to_string()
+}
+
+#[test]
+fn slow_writer_does_not_stall_other_connections() {
+    let engine = spawn_event(EngineConfig::new(2).merge_every(Duration::from_secs(3600)));
+    let addr = engine.addr;
+
+    // slowloris: one byte every 5 ms — the frame takes ~250 ms to arrive
+    let slow = std::thread::spawn(move || {
+        let mut s = raw(&addr);
+        let frame = route_line(9999, "slow but honest");
+        for b in frame.as_bytes() {
+            s.write_all(std::slice::from_ref(b)).unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let resp = read_resp(&mut r);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(resp.get("id").and_then(Json::as_f64), Some(9999.0));
+    });
+
+    // meanwhile a normal client must complete a full route+feedback run
+    let mut c = ParetoClient::connect(addr).unwrap();
+    let t0 = Instant::now();
+    for i in 0..60u64 {
+        c.route(i, &format!("fast client {i}")).unwrap();
+        c.feedback(i, 0.8, 1e-4).unwrap();
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "fast client starved behind a slow writer"
+    );
+    slow.join().unwrap();
+    engine.stop();
+}
+
+#[test]
+fn mid_frame_disconnects_and_churn_leave_service_intact() {
+    let engine = spawn_event(EngineConfig::new(2).merge_every(Duration::from_secs(3600)));
+    let addr = engine.addr;
+
+    // connections that die mid-frame
+    for i in 0..20 {
+        let mut s = raw(&addr);
+        let _ = s.write_all(format!(r#"{{"v":2,"op":"route","id":{i},"pro"#).as_bytes());
+        drop(s);
+    }
+    // connect/disconnect churn with no data at all
+    for _ in 0..30 {
+        drop(raw(&addr));
+    }
+    // half-open idlers that stay connected but silent for the whole test
+    let idlers: Vec<TcpStream> = (0..5).map(|_| raw(&addr)).collect();
+
+    let mut c = ParetoClient::connect(addr).unwrap();
+    for i in 0..40u64 {
+        let r = c.route(1000 + i, &format!("survivor {i}")).unwrap();
+        assert_eq!(r.id, 1000 + i);
+    }
+    drop(idlers);
+    engine.stop(); // must join cleanly despite the churn above
+}
+
+#[test]
+fn oversized_unterminated_frame_gets_typed_error_then_close() {
+    let engine = spawn_event(
+        EngineConfig::new(1)
+            .merge_every(Duration::from_secs(3600))
+            .max_frame(1024),
+    );
+    let mut s = raw(&engine.addr);
+    // 4 KiB with no newline: the frame can never complete within
+    // max_frame, so the server answers bad_request and closes
+    s.write_all(&vec![b'a'; 4096]).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    let resp = read_resp(&mut r);
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(code_of(&resp), "bad_request");
+    // ... and then EOF
+    let mut rest = String::new();
+    assert_eq!(r.read_line(&mut rest).unwrap(), 0, "expected close after oversize");
+    engine.stop();
+}
+
+#[test]
+fn oversized_terminated_frame_errors_but_connection_survives() {
+    let engine = spawn_event(
+        EngineConfig::new(1)
+            .merge_every(Duration::from_secs(3600))
+            .max_frame(1024),
+    );
+    let mut s = raw(&engine.addr);
+    let mut big = vec![b'b'; 2048];
+    big.push(b'\n');
+    s.write_all(&big).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    let resp = read_resp(&mut r);
+    assert_eq!(code_of(&resp), "bad_request");
+    // the frame boundary was still parseable, so the connection lives
+    s.write_all(route_line(7, "after the flood").as_bytes()).unwrap();
+    let resp = read_resp(&mut r);
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(resp.get("id").and_then(Json::as_f64), Some(7.0));
+    engine.stop();
+}
+
+#[test]
+fn garbage_frames_get_typed_errors_and_service_continues() {
+    let engine = spawn_event(EngineConfig::new(1).merge_every(Duration::from_secs(3600)));
+    let mut s = raw(&engine.addr);
+    let mut r = BufReader::new(s.try_clone().unwrap());
+
+    s.write_all(b"this is not json\n").unwrap();
+    assert_eq!(code_of(&read_resp(&mut r)), "bad_request");
+    s.write_all(b"\"a bare string\"\n").unwrap();
+    assert_eq!(code_of(&read_resp(&mut r)), "bad_request");
+    s.write_all(b"{\"op\":\"no_such_verb\"}\n").unwrap();
+    assert_eq!(code_of(&read_resp(&mut r)), "bad_request");
+    // invalid UTF-8 inside a frame
+    s.write_all(&[0xff, 0xfe, 0xfd, b'\n']).unwrap();
+    assert_eq!(code_of(&read_resp(&mut r)), "bad_request");
+
+    s.write_all(route_line(1, "still here").as_bytes()).unwrap();
+    let resp = read_resp(&mut r);
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+    engine.stop();
+}
+
+#[test]
+fn connection_flood_is_shed_with_typed_unavailable() {
+    let engine = spawn_event(
+        EngineConfig::new(1)
+            .merge_every(Duration::from_secs(3600))
+            .max_conns(8),
+    );
+    let addr = engine.addr;
+
+    // fill every slot, proving each connection is actually admitted
+    let mut residents = Vec::new();
+    for i in 0..8u64 {
+        let mut c = ParetoClient::connect(addr).unwrap();
+        c.route(i, "resident").unwrap();
+        residents.push(c);
+    }
+    // the 9th is turned away with a typed line (or a straight close if
+    // the reject write raced the socket buffer)
+    let s = raw(&addr);
+    let mut r = BufReader::new(s);
+    let mut line = String::new();
+    let n = r.read_line(&mut line).unwrap();
+    if n > 0 {
+        let resp = Json::parse(&line).unwrap();
+        assert_eq!(code_of(&resp), "unavailable");
+    }
+    // residents are unaffected by the shed
+    for (i, c) in residents.iter_mut().enumerate() {
+        c.route(100 + i as u64, "still resident").unwrap();
+    }
+    // freeing slots re-opens the door
+    drop(residents);
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let mut c = ParetoClient::connect(addr).unwrap();
+        match c.route(500, "late arrival") {
+            Ok(_) => break,
+            Err(_) => {
+                assert!(Instant::now() < deadline, "slots never freed after flood");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+    engine.stop();
+}
+
+#[test]
+fn pipelined_requests_complete_out_of_order_matched_by_id() {
+    // two shards: the first request stalls shard 0 for 600 ms, the second
+    // sails through shard 1 — its response must arrive first, and the id
+    // echo is what lets the client pair them up
+    let engine = spawn_event(EngineConfig::new(2).merge_every(Duration::from_secs(3600)));
+    let mut s = raw(&engine.addr);
+    let mut r = BufReader::new(s.try_clone().unwrap());
+
+    let mut burst = String::new();
+    burst.push_str(&route_line(1, "STALL:600 heavy"));
+    burst.push_str(&route_line(2, "light"));
+    s.write_all(burst.as_bytes()).unwrap();
+
+    let first = read_resp(&mut r);
+    let second = read_resp(&mut r);
+    assert_eq!(first.get("id").and_then(Json::as_f64), Some(2.0), "light request should finish first");
+    assert_eq!(first.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(second.get("id").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(second.get("ok").and_then(Json::as_bool), Some(true));
+    engine.stop();
+}
+
+#[test]
+fn saturated_shard_sheds_and_times_out_typed_on_the_event_loop() {
+    let engine = spawn_event(
+        EngineConfig::new(1)
+            .merge_every(Duration::from_secs(3600))
+            .shard_timeout(Duration::from_millis(250))
+            .shard_queue_cap(3),
+    );
+    let mut s = raw(&engine.addr);
+    let mut r = BufReader::new(s.try_clone().unwrap());
+
+    // one wedge + 7 followers in a single burst: 2 more fit under the
+    // queue cap (typed shard_timeout at the deadline), the rest are shed
+    // immediately (typed unavailable)
+    let mut burst = String::new();
+    burst.push_str(&route_line(1, "STALL:1200 wedge"));
+    for id in 2..=8u64 {
+        burst.push_str(&route_line(id, "follower"));
+    }
+    let t0 = Instant::now();
+    s.write_all(burst.as_bytes()).unwrap();
+
+    let mut timeouts = 0;
+    let mut shed = 0;
+    for _ in 0..8 {
+        let resp = read_resp(&mut r);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+        match code_of(&resp).as_str() {
+            "shard_timeout" => timeouts += 1,
+            "unavailable" => shed += 1,
+            other => panic!("unexpected code under saturation: {other}"),
+        }
+    }
+    // every response arrived long before the 1.2 s wedge cleared — the
+    // reactor answered from deadlines and shedding, not from the shard
+    assert!(
+        t0.elapsed() < Duration::from_millis(1100),
+        "saturation answers took {:?} — the loop waited on the wedged shard",
+        t0.elapsed()
+    );
+    assert_eq!(timeouts, 3, "wedge + 2 queued followers time out");
+    assert_eq!(shed, 5, "followers beyond the queue cap are shed");
+
+    // once the wedge clears and late completions drain the zombie load,
+    // the same connection serves again
+    std::thread::sleep(Duration::from_millis(1300));
+    s.write_all(route_line(100, "recovered").as_bytes()).unwrap();
+    let resp = read_resp(&mut r);
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "no recovery after wedge: {resp:?}");
+    engine.stop();
+}
+
+#[test]
+fn saturated_shard_times_out_typed_on_the_threaded_oracle() {
+    // the regression this pins down: Dispatch::forward used a blocking
+    // rx.recv(), so a wedged shard hung the connection thread forever;
+    // it must instead answer a typed shard_timeout within the deadline
+    let cfg = EngineConfig::new(1)
+        .merge_every(Duration::from_secs(3600))
+        .shard_timeout(Duration::from_millis(250));
+    let engine = ShardedEngine::spawn("127.0.0.1:0", cfg, builder()).unwrap();
+    let mut c = ParetoClient::connect(engine.addr).unwrap();
+
+    let t0 = Instant::now();
+    let r1 = c.route(1, "STALL:1200 wedge");
+    let r2 = c.route(2, "follower");
+    let elapsed = t0.elapsed();
+    for (label, r) in [("wedge", r1), ("follower", r2)] {
+        match r {
+            Err(ClientError::Api(e)) => assert_eq!(
+                e.code.as_str(),
+                "shard_timeout",
+                "{label}: wrong code: {e}"
+            ),
+            other => panic!("{label}: expected typed shard_timeout, got {other:?}"),
+        }
+    }
+    assert!(
+        elapsed < Duration::from_millis(1100),
+        "threaded path blocked on a wedged shard for {elapsed:?}"
+    );
+
+    // after the wedge clears the engine serves normally again
+    std::thread::sleep(Duration::from_millis(1300));
+    let r = c.route(3, "recovered").unwrap();
+    assert_eq!(r.id, 3);
+    engine.stop();
+}

@@ -1,0 +1,340 @@
+//! Event-loop vs threaded engine conformance: the reactor path
+//! (`EventEngine`) must be *bit-identical* to the thread-per-connection
+//! oracle (`ShardedEngine`) — same arm choices, same λ trajectory (to the
+//! last mantissa bit), same error codes, same metrics counters — on an
+//! identical randomized workload of interleaved `route` / `route_batch` /
+//! `feedback` / `feedback_batch` / admin verbs over 4 shards.  The two
+//! engines share the shard-worker and merger code (`spawn_shards` /
+//! `spawn_merger`); this suite proves the reactor's dispatch mirror
+//! (round-robin tickets, owner-table claim/peek, sub-batch fan-out)
+//! introduces no drift.
+//!
+//! Determinism preconditions baked into the harness: one sequential
+//! client (so the ticket sequence is the arrival order), timer merges
+//! disabled (only client-driven `sync` cycles run), and rewards/costs
+//! fixed by the script rather than derived from wall-clock anything.
+//!
+//! Override the op count with PB_CONF_OPS on slow hardware.
+
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::Duration;
+
+use paretobandit::client::ParetoClient;
+use paretobandit::pacer::{PacerConfig, SharedPacer};
+use paretobandit::router::{ContextCache, ModelRef, ParetoRouter, Prior, RouterConfig};
+use paretobandit::server::{
+    EngineConfig, EventEngine, Metrics, ServerState, ShardedEngine,
+};
+use paretobandit::sim::hash_features;
+use paretobandit::util::env_or;
+use paretobandit::util::rng::Rng;
+
+const D: usize = 8;
+const BUDGET: f64 = 4e-4;
+const WORKERS: usize = 4;
+
+/// Both engines get byte-identical per-shard builders: same seeds, same
+/// portfolio, same featurizer, and a fresh (but identically configured)
+/// shared dollar ledger per engine.
+fn builder(ledger: Arc<SharedPacer>) -> impl Fn(usize) -> ServerState + Send + Sync + 'static {
+    move |shard: usize| {
+        let mut router =
+            ParetoRouter::new(RouterConfig::tabula_rasa(D, Some(BUDGET), 900 + shard as u64));
+        router.use_shared_pacer(ledger.clone());
+        router.add_model("llama", 0.10, 0.10, Prior::Cold);
+        router.add_model("mistral", 0.40, 1.60, Prior::Cold);
+        ServerState::new(
+            router,
+            ContextCache::new(65536),
+            Box::new(|t: &str| Ok(hash_features(t, D))),
+            Arc::new(Metrics::new()),
+        )
+    }
+}
+
+/// Timer merges off: only `sync` verbs trigger cycles, so both engines
+/// merge at exactly the same points in the request stream.
+fn cfg() -> EngineConfig {
+    EngineConfig::new(WORKERS).merge_every(Duration::from_secs(3600))
+}
+
+enum AnyEngine {
+    Event(EventEngine),
+    Threaded(ShardedEngine),
+}
+
+impl AnyEngine {
+    fn spawn(event: bool) -> AnyEngine {
+        let ledger = Arc::new(SharedPacer::new(PacerConfig::new(BUDGET)));
+        if event {
+            AnyEngine::Event(EventEngine::spawn("127.0.0.1:0", cfg(), builder(ledger)).unwrap())
+        } else {
+            AnyEngine::Threaded(
+                ShardedEngine::spawn("127.0.0.1:0", cfg(), builder(ledger)).unwrap(),
+            )
+        }
+    }
+
+    fn addr(&self) -> SocketAddr {
+        match self {
+            AnyEngine::Event(e) => e.addr,
+            AnyEngine::Threaded(e) => e.addr,
+        }
+    }
+
+    fn stop(self) {
+        match self {
+            AnyEngine::Event(e) => e.stop(),
+            AnyEngine::Threaded(e) => e.stop(),
+        }
+    }
+}
+
+/// One step of the scripted workload.  The script is *data* — generated
+/// once from a seed, then replayed verbatim against both engines.
+enum Op {
+    Route(u64, String),
+    RouteBatch(Vec<(u64, String)>),
+    Feedback(u64, f64, f64),
+    FeedbackBatch(Vec<(u64, f64, f64)>),
+    /// feedback on an id that was already claimed — must answer
+    /// `unknown_id` on both paths
+    DoubleFeedback(u64),
+    AddModel(String, f64, f64),
+    Reprice(f64, f64),
+    SetBudget(f64),
+    Sync,
+}
+
+/// Generate a deterministic interleaving.  Feedback targets are drawn
+/// from ids the script itself routed earlier, so the owner table sees the
+/// same claim/peek sequence on both engines.
+fn make_script(n_ops: usize, seed: u64) -> Vec<Op> {
+    let mut rng = Rng::new(seed);
+    let mut next_id = 0u64;
+    let mut open: Vec<u64> = Vec::new();
+    let mut closed: Vec<u64> = Vec::new();
+    let mut added = 0usize;
+    let mut ops = Vec::new();
+    for _ in 0..n_ops {
+        let roll = rng.below(100);
+        if roll < 30 {
+            let id = next_id;
+            next_id += 1;
+            open.push(id);
+            ops.push(Op::Route(id, format!("prompt {id} salt {}", rng.below(9973))));
+        } else if roll < 50 {
+            let k = rng.range(1, 9);
+            let mut items = Vec::new();
+            for _ in 0..k {
+                let id = next_id;
+                next_id += 1;
+                open.push(id);
+                items.push((id, format!("batch prompt {id} salt {}", rng.below(9973))));
+            }
+            ops.push(Op::RouteBatch(items));
+        } else if roll < 70 && !open.is_empty() {
+            let id = open.swap_remove(rng.below(open.len()));
+            closed.push(id);
+            ops.push(Op::Feedback(
+                id,
+                0.3 + 0.6 * rng.f64(),
+                1e-4 + 6e-4 * rng.f64(),
+            ));
+        } else if roll < 85 && open.len() >= 2 {
+            let k = rng.range(2, 6.min(open.len()));
+            let mut items = Vec::new();
+            for _ in 0..k {
+                let id = open.swap_remove(rng.below(open.len()));
+                closed.push(id);
+                items.push((id, 0.3 + 0.6 * rng.f64(), 1e-4 + 6e-4 * rng.f64()));
+            }
+            ops.push(Op::FeedbackBatch(items));
+        } else if roll < 88 && !closed.is_empty() {
+            ops.push(Op::DoubleFeedback(closed[rng.below(closed.len())]));
+        } else if roll < 91 {
+            added += 1;
+            ops.push(Op::AddModel(
+                format!("hotswap-{added}"),
+                0.2 + 0.1 * (added as f64),
+                0.8,
+            ));
+        } else if roll < 94 {
+            ops.push(Op::Reprice(0.3 + 0.2 * rng.f64(), 1.2 + 0.4 * rng.f64()));
+        } else if roll < 96 {
+            ops.push(Op::SetBudget(3e-4 + 4e-4 * rng.f64()));
+        } else {
+            ops.push(Op::Sync);
+        }
+    }
+    ops
+}
+
+/// Everything observable that must match, flattened to strings so an
+/// assert failure prints a readable diff position.  λ is compared via
+/// `f64::to_bits` — bit-identical, not approximately equal.
+fn run_script(addr: SocketAddr, ops: &[Op]) -> Vec<String> {
+    let mut c = ParetoClient::connect(addr).unwrap();
+    let mut t = Vec::new();
+    for op in ops {
+        match op {
+            Op::Route(id, prompt) => match c.route(*id, prompt) {
+                Ok(r) => t.push(format!(
+                    "route {}:{}:{}:{:016x}:{}:{}",
+                    r.id,
+                    r.arm,
+                    r.model,
+                    r.lambda.to_bits(),
+                    r.forced,
+                    r.shard
+                )),
+                Err(e) => t.push(format!("route err {e}")),
+            },
+            Op::RouteBatch(items) => match c.route_batch(items) {
+                Ok(rs) => {
+                    for r in rs {
+                        match r {
+                            Ok(r) => t.push(format!(
+                                "rb {}:{}:{}:{:016x}:{}:{}",
+                                r.id,
+                                r.arm,
+                                r.model,
+                                r.lambda.to_bits(),
+                                r.forced,
+                                r.shard
+                            )),
+                            Err(e) => t.push(format!("rb err {}", e.code.as_str())),
+                        }
+                    }
+                }
+                Err(e) => t.push(format!("rb transport {e}")),
+            },
+            Op::Feedback(id, reward, cost) => match c.feedback(*id, *reward, *cost) {
+                Ok(arm) => t.push(format!("fb {id}:{arm}")),
+                Err(e) => t.push(format!("fb err {e}")),
+            },
+            Op::FeedbackBatch(items) => match c.feedback_batch(items) {
+                Ok(rs) => {
+                    for (i, r) in rs.iter().enumerate() {
+                        match r {
+                            Ok(arm) => t.push(format!("fbb {i}:{arm}")),
+                            Err(e) => t.push(format!("fbb {i} err {}", e.code.as_str())),
+                        }
+                    }
+                }
+                Err(e) => t.push(format!("fbb transport {e}")),
+            },
+            Op::DoubleFeedback(id) => match c.feedback(*id, 0.5, 1e-4) {
+                Ok(arm) => t.push(format!("dupfb UNEXPECTED_OK {id}:{arm}")),
+                Err(paretobandit::client::ClientError::Api(e)) => {
+                    t.push(format!("dupfb {}", e.code.as_str()))
+                }
+                Err(e) => t.push(format!("dupfb transport {e}")),
+            },
+            Op::AddModel(name, pi, po) => match c.add_model(name, *pi, *po, Some((25.0, 0.7))) {
+                Ok(arm) => t.push(format!("add {name}:{arm}")),
+                Err(e) => t.push(format!("add err {e}")),
+            },
+            Op::Reprice(pi, po) => {
+                match c.reprice(&ModelRef::Name("mistral".into()), *pi, *po) {
+                    Ok(arm) => t.push(format!("reprice {arm}")),
+                    Err(e) => t.push(format!("reprice err {e}")),
+                }
+            }
+            Op::SetBudget(b) => match c.set_budget(*b) {
+                Ok(nb) => t.push(format!("budget {:016x}", nb.to_bits())),
+                Err(e) => t.push(format!("budget err {e}")),
+            },
+            Op::Sync => match c.sync() {
+                Ok(s) => t.push(format!("sync {}:{}", s.synced_shards, s.merges)),
+                Err(e) => t.push(format!("sync err {e}")),
+            },
+        }
+    }
+    // closing sync pins every shard to the merged posterior, then the
+    // deterministic slice of the metrics registry seals the transcript
+    let s = c.sync().unwrap();
+    t.push(format!("final-sync {}:{}", s.synced_shards, s.merges));
+    let m = c.metrics().unwrap();
+    for key in [
+        "requests",
+        "feedbacks",
+        "errors",
+        "total_spend",
+        "mean_cost",
+        "lambda",
+        "policy",
+        "workers",
+        "per_shard",
+        "per_arm",
+    ] {
+        t.push(format!(
+            "metric {key}={}",
+            m.get(key).map(|v| v.to_string()).unwrap_or_default()
+        ));
+    }
+    t
+}
+
+#[test]
+fn event_loop_decisions_are_bit_identical_to_the_threaded_oracle() {
+    let n_ops: usize = env_or("PB_CONF_OPS", 400);
+    for seed in [11u64, 12, 13] {
+        let ops = make_script(n_ops, seed);
+        let ev = AnyEngine::spawn(true);
+        let ev_t = run_script(ev.addr(), &ops);
+        ev.stop();
+        let th = AnyEngine::spawn(false);
+        let th_t = run_script(th.addr(), &ops);
+        th.stop();
+        assert_eq!(
+            ev_t.len(),
+            th_t.len(),
+            "seed {seed}: transcript lengths diverge ({} vs {})",
+            ev_t.len(),
+            th_t.len()
+        );
+        for (i, (a, b)) in ev_t.iter().zip(th_t.iter()).enumerate() {
+            assert_eq!(a, b, "seed {seed}: transcripts diverge at step {i}");
+        }
+    }
+}
+
+#[test]
+fn admin_error_codes_match_across_engines() {
+    // the typed failure paths must agree too: duplicate model names,
+    // unknown model refs, feedback on never-routed ids
+    fn probe(addr: SocketAddr) -> Vec<String> {
+        let mut c = ParetoClient::connect(addr).unwrap();
+        let mut t = Vec::new();
+        let code = |e: paretobandit::client::ClientError| match e {
+            paretobandit::client::ClientError::Api(a) => a.code.as_str().to_string(),
+            paretobandit::client::ClientError::Transport(m) => format!("transport:{m}"),
+        };
+        t.push(match c.add_model("llama", 0.1, 0.1, None) {
+            Ok(_) => "dup-add ok".into(),
+            Err(e) => format!("dup-add {}", code(e)),
+        });
+        t.push(match c.delete_model(&ModelRef::Name("nosuch".into())) {
+            Ok(_) => "del ok".into(),
+            Err(e) => format!("del {}", code(e)),
+        });
+        t.push(match c.feedback(u64::MAX, 0.5, 1e-4) {
+            Ok(_) => "orphan-fb ok".into(),
+            Err(e) => format!("orphan-fb {}", code(e)),
+        });
+        t.push(match c.reprice(&ModelRef::Arm(77), 0.1, 0.1) {
+            Ok(_) => "reprice ok".into(),
+            Err(e) => format!("reprice {}", code(e)),
+        });
+        t
+    }
+    let ev = AnyEngine::spawn(true);
+    let ev_t = probe(ev.addr());
+    ev.stop();
+    let th = AnyEngine::spawn(false);
+    let th_t = probe(th.addr());
+    th.stop();
+    assert_eq!(ev_t, th_t, "admin error transcripts diverge");
+}
