@@ -15,6 +15,10 @@
 //!   ucb_sweep_1024   one decision over a 1024-arm portfolio (scoring sweep)
 //!   log_append       one decision-log `append_decision` frame (capture tax)
 //!   merge_cycle      4-shard feedback_batch + export/merge/adopt cycle
+//!   merge_cycle_512  same cycle over a 512-arm portfolio (streaming-
+//!                    inventory scale: the fold is O(arms), not O(traffic))
+//!   deploy_tick      one SlotManager record_stats + tick over a
+//!                    256-candidate pool at 8 occupied slots (ucb policy)
 //!
 //! Run: `cargo bench --bench routing_hot`.  Env overrides:
 //!   PB_BENCH_SAMPLES   measured samples per bench        (default 400)
@@ -26,9 +30,10 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+use paretobandit::deploy::{build_deploy, DeployAction, SlotManager};
 use paretobandit::log::{CaptureMeta, LogWriter, DEFAULT_SEGMENT_BYTES};
 use paretobandit::router::{
-    FeedbackEvent, ParetoRouter, PolicyHost, Prior, RouteDecision, RouterConfig,
+    FeedbackEvent, ParetoRouter, PolicyHost, Prior, RouteDecision, RouterConfig, SlotStat,
 };
 use paretobandit::util::bench::{bench_batched, bench_each, black_box, BenchStats};
 use paretobandit::util::benchio::{self, BenchEntry};
@@ -213,6 +218,120 @@ fn bench_merge_cycle(samples: usize) -> BenchStats {
     BenchStats::from_samples(ns)
 }
 
+fn bench_merge_cycle_512(samples: usize) -> BenchStats {
+    // the merge cycle at streaming-inventory portfolio scale: the fold
+    // walks every active arm (export + merge + adopt are O(arms·d²)),
+    // so a deployment layer churning hundreds of candidates pays this
+    // per cycle regardless of traffic volume
+    const SHARDS: usize = 4;
+    const ARMS: usize = 512;
+    const EVENTS_PER_SHARD: usize = 256;
+    let mut shards: Vec<ParetoRouter> = (0..SHARDS)
+        .map(|s| {
+            let mut r = ParetoRouter::new(RouterConfig::unconstrained(D, 60 + s as u64));
+            for i in 0..ARMS {
+                let spread = 0.05 + 0.01 * (i % 200) as f64;
+                r.add_model(&format!("m{i}"), spread, spread * 4.0, Prior::Cold);
+            }
+            let mut rng = Rng::new(70 + s as u64);
+            for i in 0..(2 * ARMS) {
+                let x = ctx(&mut rng);
+                r.feedback(i % ARMS, &x, 0.5 + 0.4 * rng.f64(), 2.0e-4);
+            }
+            r
+        })
+        .collect();
+    let queues: Vec<Vec<FeedbackEvent>> = (0..SHARDS)
+        .map(|s| {
+            let mut rng = Rng::new(80 + s as u64);
+            (0..EVENTS_PER_SHARD)
+                .map(|i| FeedbackEvent {
+                    arm: i % ARMS,
+                    context: ctx(&mut rng),
+                    reward: 0.5 + 0.4 * rng.f64(),
+                })
+                .collect()
+        })
+        .collect();
+    let mut ns = Vec::with_capacity(samples);
+    for it in 0..(samples.min(100) + 5) {
+        let t0 = Instant::now();
+        for (r, q) in shards.iter_mut().zip(queues.iter()) {
+            r.feedback_batch(q);
+        }
+        let mut global = shards[0].export_arms();
+        for other in shards.iter().skip(1) {
+            for (g, o) in global.iter_mut().zip(other.export_arms().iter()) {
+                if let (Some(g), Some(o)) = (g.as_mut(), o.as_ref()) {
+                    g.merge(o, 1.0);
+                }
+            }
+        }
+        for r in shards.iter_mut() {
+            r.adopt_arms(&global);
+        }
+        black_box(global.len());
+        if it >= 5 {
+            ns.push(t0.elapsed().as_nanos() as f64);
+        }
+    }
+    BenchStats::from_samples(ns)
+}
+
+/// Confirm a tick's actions against a fake registry: deploys get fresh
+/// slot ids, evicted names rejoin the pool (keeping sizes steady-state).
+fn deploy_exec(mgr: &mut SlotManager, actions: Vec<DeployAction>, next_slot: &mut usize) {
+    for a in actions {
+        match a {
+            DeployAction::Deploy(c) => {
+                mgr.note_deployed(&c.name, *next_slot);
+                *next_slot += 1;
+            }
+            DeployAction::Evict { name, .. } => {
+                mgr.offer(&name, 0.3, 1.2, Some(0.6));
+            }
+        }
+    }
+}
+
+fn bench_deploy_tick(samples: usize) -> BenchStats {
+    // the deployment layer's per-merge-cycle tax: refresh 8 occupants'
+    // stats, then one policy pass over a 256-candidate pool (fill scan +
+    // swap scan).  Evicted incumbents are re-offered so pool depth and
+    // occupancy stay constant across the measured window.
+    let mut mgr = build_deploy("ucb:8", 8).expect("deploy builder");
+    let mut rng = Rng::new(90);
+    for i in 0..256 {
+        mgr.offer(
+            &format!("cand-{i}"),
+            0.1 + rng.f64(),
+            0.4 + 4.0 * rng.f64(),
+            Some(0.35 + 0.6 * rng.f64()),
+        );
+    }
+    let stats: Vec<SlotStat> = (0..8192)
+        .map(|s| SlotStat {
+            n: 64,
+            reward_sum: 64.0 * (0.35 + 0.6 * (((s * 37) % 100) as f64) / 100.0),
+            cost_sum: 64.0 * 1e-4 * (1.0 + ((s * 13) % 7) as f64),
+        })
+        .collect();
+    let mut next_slot = 0usize;
+    // settle: fill all 8 slots and age past the protection window so the
+    // measured ticks exercise the swap path, not just the fill path
+    for _ in 0..32 {
+        mgr.record_stats(&stats);
+        let actions = mgr.tick();
+        deploy_exec(&mut mgr, actions, &mut next_slot);
+    }
+    bench_batched(100, samples, 16, || {
+        mgr.record_stats(&stats);
+        let actions = mgr.tick();
+        deploy_exec(&mut mgr, actions, &mut next_slot);
+        black_box(mgr.occupied());
+    })
+}
+
 fn main() {
     let samples: usize = env_or("PB_BENCH_SAMPLES", 400);
     let out_path: String = env_or("PB_BENCH_OUT", "BENCH_routing.json".to_string());
@@ -233,6 +352,8 @@ fn main() {
     run("ucb_sweep_1024", bench_ucb_sweep_1024(samples));
     run("log_append", bench_log_append(samples));
     run("merge_cycle", bench_merge_cycle(samples));
+    run("merge_cycle_512", bench_merge_cycle_512(samples));
+    run("deploy_tick", bench_deploy_tick(samples));
 
     // load the committed baseline BEFORE merge_write clobbers it (the
     // default trajectory file and baseline are the same path)

@@ -76,6 +76,7 @@ fn serving_scope(path: &str) -> bool {
         || path.starts_with("rust/src/router/")
         || path.starts_with("rust/src/pacer/")
         || path.starts_with("rust/src/log/")
+        || path.starts_with("rust/src/deploy/")
         || path == "rust/src/client.rs"
 }
 

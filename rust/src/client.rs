@@ -420,6 +420,49 @@ impl ParetoClient {
         ]))?)
     }
 
+    /// Offer a model to the deployment layer's candidate pool (the
+    /// `offer_model` verb).  The deployment policy — not the caller —
+    /// decides if and when the candidate occupies one of the K serving
+    /// slots.  `quality` is an optional prior quality hint in `[0, 1]`.
+    /// Returns `(pooled, deployed)` occupancy after the offer.  Servers
+    /// running without `--deploy` reject the verb with `bad_request`.
+    pub fn offer_model(
+        &mut self,
+        name: &str,
+        price_in: f64,
+        price_out: f64,
+        quality: Option<f64>,
+    ) -> ClientResult<(usize, usize)> {
+        let mut fields = vec![
+            ("op", Json::Str("offer_model".into())),
+            ("name", Json::Str(name.to_string())),
+            ("price_in", Json::Num(price_in)),
+            ("price_out", Json::Num(price_out)),
+        ];
+        if let Some(q) = quality {
+            fields.push(("quality", Json::Num(q)));
+        }
+        let resp = Self::expect_ok(self.call_raw(&Self::versioned(fields))?)?;
+        Ok((
+            resp.get("pooled").and_then(Json::as_f64).unwrap_or(0.0) as usize,
+            resp.get("deployed").and_then(Json::as_f64).unwrap_or(0.0) as usize,
+        ))
+    }
+
+    /// Deployment-layer status (the `deploy_status` verb) as raw JSON:
+    /// policy name, slot cap, candidate pool, per-slot incumbents with
+    /// measured reward/cost, and the offer/deploy/evict counters.
+    /// Servers running without `--deploy` reject the verb with
+    /// `bad_request`.
+    pub fn deploy_status(&mut self) -> ClientResult<Json> {
+        Self::expect_ok(
+            self.call_raw(&Self::versioned(vec![(
+                "op",
+                Json::Str("deploy_status".into()),
+            )]))?,
+        )
+    }
+
     /// Persist the server's learned router state to a **server-side**
     /// file (on the sharded engine: the post-merge global posterior).
     /// Returns `(active arms, router step)`.

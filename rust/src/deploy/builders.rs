@@ -1,0 +1,139 @@
+//! Deployment-policy builder registry — the deploy-layer mirror of the
+//! routing-policy registry in `crate::router::builders`.
+//!
+//! A spec string is `name` or `name:arg`:
+//!
+//! | spec              | policy                                   |
+//! |-------------------|------------------------------------------|
+//! | `fifo`            | arrival-order baseline, never swaps      |
+//! | `greedy[:min_obs]`| quality-per-dollar, swap after `min_obs` |
+//! | `ucb[:window]`    | optimistic newcomers, LCB incumbents,    |
+//! |                   | forced-exploration window of `window`    |
+//!
+//! [`build_deploy`] resolves a spec into a ready [`SlotManager`].
+
+use super::manager::SlotManager;
+use super::policy::{DeploymentPolicy, FifoDeploy, GreedyDeploy, UcbDeploy};
+
+/// Default protection window (ticks) for policies that do not derive it
+/// from their own knobs.
+const DEFAULT_PROTECT: u64 = 8;
+
+/// Default `greedy` minimum observation count.
+const GREEDY_MIN_OBS: u64 = 16;
+
+/// Default `ucb` forced-exploration window (ticks).
+const UCB_WINDOW: u64 = 64;
+
+/// One registered deployment policy: builds `(policy, protect_window)`.
+pub struct DeployBuilder {
+    /// spec key
+    pub name: &'static str,
+    /// one-line summary for `--help` / docs
+    pub summary: &'static str,
+    /// spec argument hint (empty if the policy takes none)
+    pub arg_hint: &'static str,
+    build: fn(Option<&str>) -> Result<(Box<dyn DeploymentPolicy>, u64), String>,
+}
+
+fn parse_u64(name: &str, arg: &str) -> Result<u64, String> {
+    arg.parse::<u64>()
+        .map_err(|_| format!("deploy spec '{name}': bad argument '{arg}' (want a non-negative integer)"))
+}
+
+fn build_fifo(arg: Option<&str>) -> Result<(Box<dyn DeploymentPolicy>, u64), String> {
+    if let Some(a) = arg {
+        return Err(format!("deploy spec 'fifo' takes no argument (got '{a}')"));
+    }
+    Ok((Box::new(FifoDeploy), 0))
+}
+
+fn build_greedy(arg: Option<&str>) -> Result<(Box<dyn DeploymentPolicy>, u64), String> {
+    let min_obs = match arg {
+        None => GREEDY_MIN_OBS,
+        Some(a) => parse_u64("greedy", a)?,
+    };
+    Ok((Box::new(GreedyDeploy::new(min_obs)), DEFAULT_PROTECT))
+}
+
+fn build_ucb(arg: Option<&str>) -> Result<(Box<dyn DeploymentPolicy>, u64), String> {
+    let window = match arg {
+        None => UCB_WINDOW,
+        Some(a) => parse_u64("ucb", a)?,
+    };
+    // the forced-exploration window doubles as the manager's uniform
+    // protection window: a newcomer gets `window` undisturbed ticks
+    Ok((Box::new(UcbDeploy::new(window)), window))
+}
+
+/// All registered deployment policies.
+pub const DEPLOY_BUILDERS: &[DeployBuilder] = &[
+    DeployBuilder {
+        name: "fifo",
+        summary: "deploy candidates in arrival order, never swap (baseline)",
+        arg_hint: "",
+        build: build_fifo,
+    },
+    DeployBuilder {
+        name: "greedy",
+        summary: "best prior quality per blended dollar; swap out measured weak incumbents",
+        arg_hint: ":min_obs",
+        build: build_greedy,
+    },
+    DeployBuilder {
+        name: "ucb",
+        summary: "optimistic newcomer scoring with a forced-exploration window per deploy",
+        arg_hint: ":window",
+        build: build_ucb,
+    },
+];
+
+/// Names of every registered deployment policy, registry order.
+pub fn deploy_names() -> Vec<&'static str> {
+    DEPLOY_BUILDERS.iter().map(|b| b.name).collect()
+}
+
+/// Resolve `spec` (`name[:arg]`) into a [`SlotManager`] with `k` slots.
+pub fn build_deploy(spec: &str, k: usize) -> Result<SlotManager, String> {
+    let (name, arg) = match spec.split_once(':') {
+        Some((n, a)) => (n, Some(a)),
+        None => (spec, None),
+    };
+    for b in DEPLOY_BUILDERS {
+        if b.name == name {
+            let (policy, protect) = (b.build)(arg)?;
+            return Ok(SlotManager::new(policy, spec, k, protect));
+        }
+    }
+    Err(format!(
+        "unknown deploy policy '{name}' (have: {})",
+        deploy_names().join(", ")
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_resolve_and_keep_their_full_spelling_as_kind() {
+        for spec in ["fifo", "greedy", "greedy:4", "ucb", "ucb:128"] {
+            let m = build_deploy(spec, 3).unwrap();
+            assert_eq!(m.kind(), spec);
+            assert_eq!(m.k(), 3);
+        }
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_with_the_roster() {
+        let e = build_deploy("nope", 2).unwrap_err();
+        assert!(e.contains("fifo") && e.contains("greedy") && e.contains("ucb"));
+        assert!(build_deploy("ucb:xyz", 2).is_err());
+        assert!(build_deploy("fifo:3", 2).is_err());
+    }
+
+    #[test]
+    fn zero_slots_clamp_to_one() {
+        assert_eq!(build_deploy("fifo", 0).unwrap().k(), 1);
+    }
+}

@@ -1,0 +1,603 @@
+//! [`SlotManager`]: the executive half of the deployment layer.
+//!
+//! The manager owns the candidate pool and the slot ledger, consults its
+//! [`DeploymentPolicy`] on each tick, and emits [`DeployAction`]s for
+//! whoever owns the registry to execute (the merger thread in sharded
+//! serving, the request handler in single-worker serving, the scenario
+//! runner in-process).  It — not the policy — enforces the hard rules:
+//! at most `k` models deployed or in flight, at most one swap per tick,
+//! and no eviction of an incumbent still inside its forced-exploration
+//! protection window.
+//!
+//! Deploy actions are *two-phase*: `tick()` moves a candidate from the
+//! pool to a pending list and emits `DeployAction::Deploy`; the executor
+//! reports back with [`SlotManager::note_deployed`] (carrying the arm id
+//! the registry assigned) or [`SlotManager::deploy_failed`].  Slot
+//! statistics flow in the other direction via
+//! [`SlotManager::record_stats`] from the host's per-slot accumulators.
+
+use crate::router::SlotStat;
+use crate::util::json::Json;
+
+use super::policy::{Candidate, Deployed, DeployCtx, DeploymentPolicy, DEFAULT_QUALITY};
+
+/// What the executor must do to the registry, in order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DeployAction {
+    /// Add this model to the registry (all shards), then confirm with
+    /// `note_deployed(name, arm)` / `deploy_failed(name)`.
+    Deploy(Candidate),
+    /// Remove this slot from the registry (all shards).  The manager has
+    /// already dropped it from its ledger.
+    Evict { slot: usize, name: String },
+}
+
+/// Point-in-time counters for `deploy_status` / metrics.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DeployCounters {
+    pub offers: u64,
+    pub expires: u64,
+    pub deploys: u64,
+    pub evictions: u64,
+}
+
+/// K-slot deployment manager over a boxed [`DeploymentPolicy`].
+pub struct SlotManager {
+    policy: Box<dyn DeploymentPolicy>,
+    /// builder spec key (`fifo` / `greedy` / `ucb`) — snapshot tag
+    kind: String,
+    /// slot concurrency cap
+    k: usize,
+    /// forced-exploration window (ticks) protecting each newcomer
+    protect: u64,
+    /// tick clock
+    t: u64,
+    /// offered candidates, arrival order
+    pool: Vec<Candidate>,
+    /// current occupants
+    deployed: Vec<Deployed>,
+    /// emitted `Deploy` actions awaiting confirmation
+    pending: Vec<Candidate>,
+    counters: DeployCounters,
+}
+
+impl SlotManager {
+    pub fn new(policy: Box<dyn DeploymentPolicy>, kind: &str, k: usize, protect: u64) -> SlotManager {
+        SlotManager {
+            policy,
+            kind: kind.to_string(),
+            k: k.max(1),
+            protect,
+            t: 0,
+            pool: Vec::new(),
+            deployed: Vec::new(),
+            pending: Vec::new(),
+            counters: DeployCounters::default(),
+        }
+    }
+
+    pub fn kind(&self) -> &str {
+        &self.kind
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn tick_clock(&self) -> u64 {
+        self.t
+    }
+
+    pub fn pool_len(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Deployed plus in-flight — the number counted against the cap.
+    pub fn occupied(&self) -> usize {
+        self.deployed.len() + self.pending.len()
+    }
+
+    pub fn deployed_slots(&self) -> &[Deployed] {
+        &self.deployed
+    }
+
+    pub fn counters(&self) -> DeployCounters {
+        self.counters
+    }
+
+    /// Offer a candidate.  Re-offering a pooled name refreshes its prices
+    /// and hint; re-offering a deployed or in-flight name is a no-op.
+    pub fn offer(&mut self, name: &str, price_in: f64, price_out: f64, quality: Option<f64>) {
+        self.counters.offers += 1;
+        let quality = quality.unwrap_or(DEFAULT_QUALITY);
+        if self.deployed.iter().any(|d| d.name == name)
+            || self.pending.iter().any(|c| c.name == name)
+        {
+            return;
+        }
+        if let Some(c) = self.pool.iter_mut().find(|c| c.name == name) {
+            c.price_in = price_in;
+            c.price_out = price_out;
+            c.quality = quality;
+            return;
+        }
+        self.pool.push(Candidate {
+            name: name.to_string(),
+            price_in,
+            price_out,
+            quality,
+            offered_at: self.t,
+        });
+    }
+
+    /// Withdraw a model from the system: drop it from the pool, or emit
+    /// its eviction if it is currently deployed.  Unknown names are a
+    /// no-op (expiry races with eviction under churn).
+    pub fn expire(&mut self, name: &str) -> Vec<DeployAction> {
+        self.counters.expires += 1;
+        self.pool.retain(|c| c.name != name);
+        self.pending.retain(|c| c.name != name);
+        let mut actions = Vec::new();
+        if let Some(i) = self.deployed.iter().position(|d| d.name == name) {
+            let d = self.deployed.remove(i);
+            self.counters.evictions += 1;
+            actions.push(DeployAction::Evict {
+                slot: d.slot,
+                name: d.name,
+            });
+        }
+        actions
+    }
+
+    /// Resize the slot cap.  Shrinking below current occupancy is
+    /// honoured lazily: the next `tick()` evicts the worst incumbents
+    /// (operator command overrides protection windows).
+    pub fn set_slots(&mut self, k: usize) {
+        self.k = k.max(1);
+    }
+
+    /// Refresh per-slot statistics from the host's cumulative
+    /// accumulators (slot-aligned; missing entries keep the last value).
+    pub fn record_stats(&mut self, stats: &[SlotStat]) {
+        for d in &mut self.deployed {
+            if let Some(s) = stats.get(d.slot) {
+                d.stat = *s;
+            }
+        }
+    }
+
+    /// Advance the tick clock and reconcile occupancy: shrink over-cap,
+    /// fill free slots, then consider at most one policy swap.  Returns
+    /// the registry actions to execute, in order.
+    pub fn tick(&mut self) -> Vec<DeployAction> {
+        self.t += 1;
+        let mut actions = Vec::new();
+        // 1. shrink: operator lowered the cap below occupancy
+        while self.occupied() > self.k && !self.deployed.is_empty() {
+            let worst = self
+                .deployed
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| a.value().total_cmp(&b.value()))
+                .map(|(i, _)| i);
+            match worst {
+                None => break,
+                Some(i) => {
+                    let d = self.deployed.remove(i);
+                    self.counters.evictions += 1;
+                    actions.push(DeployAction::Evict {
+                        slot: d.slot,
+                        name: d.name,
+                    });
+                }
+            }
+        }
+        // 2. fill free slots
+        while self.occupied() < self.k && !self.pool.is_empty() {
+            let ctx = DeployCtx {
+                pool: &self.pool,
+                deployed: &self.deployed,
+                t: self.t,
+                protect: self.protect,
+            };
+            let pick = match self.policy.pick_deploy(&ctx) {
+                Some(i) if i < self.pool.len() => i,
+                _ => break,
+            };
+            let c = self.pool.remove(pick);
+            self.pending.push(c.clone());
+            actions.push(DeployAction::Deploy(c));
+        }
+        // 3. at most one swap per tick, only from a settled full house
+        if self.occupied() == self.k
+            && self.pending.is_empty()
+            && !self.pool.is_empty()
+        {
+            let ctx = DeployCtx {
+                pool: &self.pool,
+                deployed: &self.deployed,
+                t: self.t,
+                protect: self.protect,
+            };
+            if let Some((di, ci)) = self.policy.pick_swap(&ctx) {
+                let protected = self
+                    .deployed
+                    .get(di)
+                    .map_or(true, |d| d.age(self.t) < self.protect);
+                if !protected && ci < self.pool.len() {
+                    let d = self.deployed.remove(di);
+                    self.counters.evictions += 1;
+                    actions.push(DeployAction::Evict {
+                        slot: d.slot,
+                        name: d.name,
+                    });
+                    let c = self.pool.remove(ci);
+                    self.pending.push(c.clone());
+                    actions.push(DeployAction::Deploy(c));
+                }
+            }
+        }
+        actions
+    }
+
+    /// Confirm a `Deploy` action: the registry assigned `slot` to `name`.
+    pub fn note_deployed(&mut self, name: &str, slot: usize) {
+        if let Some(i) = self.pending.iter().position(|c| c.name == name) {
+            let c = self.pending.remove(i);
+            self.counters.deploys += 1;
+            self.deployed.push(Deployed {
+                slot,
+                blended: c.blended_per_1k(),
+                quality: c.quality,
+                name: c.name,
+                deployed_at: self.t,
+                base: SlotStat::default(),
+                stat: SlotStat::default(),
+            });
+        }
+    }
+
+    /// A `Deploy` action could not be executed (e.g. duplicate name
+    /// already active); the candidate is dropped.
+    pub fn deploy_failed(&mut self, name: &str) {
+        self.pending.retain(|c| c.name != name);
+    }
+
+    /// Structured status for the `deploy_status` wire verb.
+    pub fn status(&self) -> Json {
+        let deployed = self
+            .deployed
+            .iter()
+            .map(|d| {
+                Json::obj(vec![
+                    ("slot", Json::Num(d.slot as f64)),
+                    ("name", Json::Str(d.name.clone())),
+                    ("blended_per_1k", Json::Num(d.blended)),
+                    ("quality_hint", Json::Num(d.quality)),
+                    ("deployed_at", Json::Num(d.deployed_at as f64)),
+                    ("obs", Json::Num(d.obs() as f64)),
+                    ("mean_reward", Json::Num(d.mean_reward())),
+                    ("mean_cost", Json::Num(d.mean_cost())),
+                    (
+                        "protected",
+                        Json::Bool(d.age(self.t) < self.protect),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("policy", Json::Str(self.kind.clone())),
+            ("slots", Json::Num(self.k as f64)),
+            ("tick", Json::Num(self.t as f64)),
+            ("protect", Json::Num(self.protect as f64)),
+            ("pool", Json::Num(self.pool.len() as f64)),
+            ("pending", Json::Num(self.pending.len() as f64)),
+            ("deployed", Json::Arr(deployed)),
+            ("offers", Json::Num(self.counters.offers as f64)),
+            ("expires", Json::Num(self.counters.expires as f64)),
+            ("deploys", Json::Num(self.counters.deploys as f64)),
+            ("evictions", Json::Num(self.counters.evictions as f64)),
+        ])
+    }
+
+    /// Export the full manager state for snapshot embedding.
+    pub fn export_state(&self) -> Json {
+        let stat_json = |s: &SlotStat| {
+            Json::obj(vec![
+                ("n", Json::Num(s.n as f64)),
+                ("reward_sum", Json::Num(s.reward_sum)),
+                ("cost_sum", Json::Num(s.cost_sum)),
+            ])
+        };
+        let cand_json = |c: &Candidate| {
+            Json::obj(vec![
+                ("name", Json::Str(c.name.clone())),
+                ("price_in", Json::Num(c.price_in)),
+                ("price_out", Json::Num(c.price_out)),
+                ("quality", Json::Num(c.quality)),
+                ("offered_at", Json::Num(c.offered_at as f64)),
+            ])
+        };
+        // pending candidates fold back into the pool: a restore happens
+        // on a fresh registry executor, so in-flight deploys re-run
+        let pool: Vec<Json> = self
+            .pool
+            .iter()
+            .chain(self.pending.iter())
+            .map(|c| cand_json(c))
+            .collect();
+        let deployed: Vec<Json> = self
+            .deployed
+            .iter()
+            .map(|d| {
+                Json::obj(vec![
+                    ("slot", Json::Num(d.slot as f64)),
+                    ("name", Json::Str(d.name.clone())),
+                    ("blended", Json::Num(d.blended)),
+                    ("quality", Json::Num(d.quality)),
+                    ("deployed_at", Json::Num(d.deployed_at as f64)),
+                    ("base", stat_json(&d.base)),
+                    ("stat", stat_json(&d.stat)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("policy", Json::Str(self.kind.clone())),
+            ("k", Json::Num(self.k as f64)),
+            ("protect", Json::Num(self.protect as f64)),
+            ("t", Json::Num(self.t as f64)),
+            ("pool", Json::Arr(pool)),
+            ("deployed", Json::Arr(deployed)),
+            ("offers", Json::Num(self.counters.offers as f64)),
+            ("expires", Json::Num(self.counters.expires as f64)),
+            ("deploys", Json::Num(self.counters.deploys as f64)),
+            ("evictions", Json::Num(self.counters.evictions as f64)),
+        ])
+    }
+
+    /// Restore from an [`SlotManager::export_state`] capture.  The
+    /// policy kind must match this manager's builder spec; the boxed
+    /// policy itself keeps its configured knobs (they are construction
+    /// parameters, not learned state).
+    pub fn restore_state(&mut self, j: &Json) -> Result<(), String> {
+        let kind = j
+            .get("policy")
+            .and_then(Json::as_str)
+            .ok_or("deploy state: missing policy")?;
+        if kind != self.kind {
+            return Err(format!(
+                "deploy state: policy mismatch (snapshot '{kind}', manager '{}')",
+                self.kind
+            ));
+        }
+        let get_u = |o: &Json, k: &str| -> Result<u64, String> {
+            match o.get(k).and_then(Json::as_f64) {
+                Some(x) if x >= 0.0 && x.fract() == 0.0 => Ok(x as u64),
+                _ => Err(format!("deploy state: missing/invalid {k}")),
+            }
+        };
+        let get_f = |o: &Json, k: &str| -> Result<f64, String> {
+            o.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("deploy state: missing/invalid {k}"))
+        };
+        let get_s = |o: &Json, k: &str| -> Result<String, String> {
+            o.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("deploy state: missing/invalid {k}"))
+        };
+        let stat_of = |o: &Json, k: &str| -> Result<SlotStat, String> {
+            let s = o.get(k).ok_or_else(|| format!("deploy state: missing {k}"))?;
+            Ok(SlotStat {
+                n: get_u(s, "n")?,
+                reward_sum: get_f(s, "reward_sum")?,
+                cost_sum: get_f(s, "cost_sum")?,
+            })
+        };
+        let k = get_u(j, "k")? as usize;
+        let protect = get_u(j, "protect")?;
+        let t = get_u(j, "t")?;
+        let mut pool = Vec::new();
+        for c in j
+            .get("pool")
+            .and_then(Json::as_arr)
+            .ok_or("deploy state: missing pool")?
+        {
+            pool.push(Candidate {
+                name: get_s(c, "name")?,
+                price_in: get_f(c, "price_in")?,
+                price_out: get_f(c, "price_out")?,
+                quality: get_f(c, "quality")?,
+                offered_at: get_u(c, "offered_at")?,
+            });
+        }
+        let mut deployed = Vec::new();
+        for d in j
+            .get("deployed")
+            .and_then(Json::as_arr)
+            .ok_or("deploy state: missing deployed")?
+        {
+            deployed.push(Deployed {
+                slot: get_u(d, "slot")? as usize,
+                name: get_s(d, "name")?,
+                blended: get_f(d, "blended")?,
+                quality: get_f(d, "quality")?,
+                deployed_at: get_u(d, "deployed_at")?,
+                base: stat_of(d, "base")?,
+                stat: stat_of(d, "stat")?,
+            });
+        }
+        self.k = k.max(1);
+        self.protect = protect;
+        self.t = t;
+        self.pool = pool;
+        self.deployed = deployed;
+        self.pending.clear();
+        self.counters = DeployCounters {
+            offers: get_u(j, "offers")?,
+            expires: get_u(j, "expires")?,
+            deploys: get_u(j, "deploys")?,
+            evictions: get_u(j, "evictions")?,
+        };
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::builders::build_deploy;
+    use super::*;
+
+    fn exec(m: &mut SlotManager, actions: &[DeployAction], next_slot: &mut usize) {
+        for a in actions {
+            if let DeployAction::Deploy(c) = a {
+                m.note_deployed(&c.name, *next_slot);
+                *next_slot += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn cap_is_never_exceeded_and_fifo_fills_in_order() {
+        let mut m = build_deploy("fifo", 2).unwrap();
+        let mut slot = 0;
+        for i in 0..5 {
+            m.offer(&format!("m{i}"), 1.0, 1.0, None);
+        }
+        let acts = m.tick();
+        assert_eq!(
+            acts.iter().filter(|a| matches!(a, DeployAction::Deploy(_))).count(),
+            2
+        );
+        exec(&mut m, &acts, &mut slot);
+        assert_eq!(m.occupied(), 2);
+        assert_eq!(m.pool_len(), 3);
+        assert_eq!(m.deployed_slots()[0].name, "m0");
+        assert_eq!(m.deployed_slots()[1].name, "m1");
+        // fifo never swaps: further ticks leave occupancy alone
+        assert!(m.tick().is_empty());
+        assert_eq!(m.occupied(), 2);
+    }
+
+    #[test]
+    fn expire_of_deployed_model_evicts_and_frees_the_slot() {
+        let mut m = build_deploy("fifo", 1).unwrap();
+        let mut slot = 0;
+        m.offer("a", 1.0, 1.0, None);
+        m.offer("b", 1.0, 1.0, None);
+        let acts = m.tick();
+        exec(&mut m, &acts, &mut slot);
+        assert_eq!(m.deployed_slots()[0].name, "a");
+        let acts = m.expire("a");
+        assert_eq!(
+            acts,
+            vec![DeployAction::Evict {
+                slot: 0,
+                name: "a".into()
+            }]
+        );
+        let acts = m.tick();
+        exec(&mut m, &acts, &mut slot);
+        assert_eq!(m.deployed_slots()[0].name, "b");
+        // expiring an unknown name is a harmless no-op
+        assert!(m.expire("zzz").is_empty());
+    }
+
+    #[test]
+    fn shrinking_slots_evicts_worst_incumbent() {
+        let mut m = build_deploy("greedy", 2).unwrap();
+        let mut slot = 0;
+        m.offer("good", 1.0, 1.0, Some(0.9));
+        m.offer("bad", 1.0, 1.0, Some(0.2));
+        let acts = m.tick();
+        exec(&mut m, &acts, &mut slot);
+        assert_eq!(m.occupied(), 2);
+        m.set_slots(1);
+        let acts = m.tick();
+        assert_eq!(acts.len(), 1);
+        assert!(matches!(&acts[0], DeployAction::Evict { name, .. } if name == "bad"));
+        assert_eq!(m.occupied(), 1);
+        assert_eq!(m.deployed_slots()[0].name, "good");
+    }
+
+    #[test]
+    fn ucb_swaps_degraded_incumbent_after_protection_window() {
+        let mut m = build_deploy("ucb:4", 1).unwrap();
+        let mut slot = 0;
+        m.offer("old", 1.0, 1.0, Some(0.9));
+        let acts = m.tick();
+        exec(&mut m, &acts, &mut slot);
+        // the incumbent degrades: 100 observations at mean reward 0.1
+        let mut stats = vec![SlotStat::default()];
+        stats[0] = SlotStat {
+            n: 100,
+            reward_sum: 10.0,
+            cost_sum: 0.05,
+        };
+        m.record_stats(&stats);
+        m.offer("new", 1.0, 1.0, Some(0.8));
+        // inside the protection window: no churn no matter how bad
+        let acts = m.tick();
+        assert!(acts.is_empty(), "protected incumbent must not be evicted");
+        for _ in 0..4 {
+            let acts = m.tick();
+            if !acts.is_empty() {
+                assert!(
+                    matches!(&acts[0], DeployAction::Evict { name, .. } if name == "old")
+                );
+                assert!(
+                    matches!(&acts[1], DeployAction::Deploy(c) if c.name == "new")
+                );
+                exec(&mut m, &acts, &mut slot);
+                break;
+            }
+        }
+        assert_eq!(m.deployed_slots()[0].name, "new");
+        assert_eq!(m.counters().evictions, 1);
+    }
+
+    #[test]
+    fn state_roundtrips_through_export_restore() {
+        let mut m = build_deploy("ucb:8", 2).unwrap();
+        let mut slot = 0;
+        m.offer("a", 1.0, 2.0, Some(0.7));
+        m.offer("b", 0.5, 0.5, Some(0.6));
+        m.offer("c", 3.0, 9.0, Some(0.95));
+        let acts = m.tick();
+        exec(&mut m, &acts, &mut slot);
+        m.record_stats(&[
+            SlotStat {
+                n: 7,
+                reward_sum: 4.9,
+                cost_sum: 0.01,
+            },
+            SlotStat {
+                n: 3,
+                reward_sum: 0.9,
+                cost_sum: 0.002,
+            },
+        ]);
+        let st = m.export_state();
+        let mut back = build_deploy("ucb:8", 2).unwrap();
+        back.restore_state(&st).unwrap();
+        assert_eq!(back.export_state().to_string(), st.to_string());
+        assert_eq!(back.occupied(), m.occupied());
+        assert_eq!(back.pool_len(), m.pool_len());
+        assert_eq!(back.counters(), m.counters());
+        // a mismatched policy kind is refused
+        let mut other = build_deploy("fifo", 2).unwrap();
+        assert!(other.restore_state(&st).is_err());
+    }
+
+    #[test]
+    fn failed_deploy_drops_the_candidate() {
+        let mut m = build_deploy("fifo", 1).unwrap();
+        m.offer("dup", 1.0, 1.0, None);
+        let acts = m.tick();
+        assert_eq!(acts.len(), 1);
+        m.deploy_failed("dup");
+        assert_eq!(m.occupied(), 0);
+        assert_eq!(m.pool_len(), 0);
+    }
+}

@@ -1,0 +1,39 @@
+//! Streaming model inventory: a deployment-policy layer over routing.
+//!
+//! The router (Algorithm 1) assumes a fixed portfolio; real serving
+//! fleets see a *stream* of candidate models — new releases, price
+//! drops, deprecations — competing for a bounded number of deployment
+//! slots.  This module adds the upper level of that two-level control
+//! problem (see `docs/deployment.md`):
+//!
+//! * [`DeploymentPolicy`] — pure decision logic over a candidate pool
+//!   and the current slot occupants ([`FifoDeploy`], [`GreedyDeploy`],
+//!   [`UcbDeploy`]).
+//! * [`SlotManager`] — enforces the K-slot cap, the one-swap-per-tick
+//!   budget and per-newcomer forced-exploration protection, and emits
+//!   [`DeployAction`]s that the serving layer executes as ordinary
+//!   registry add/remove operations (so shadows, decision logs and
+//!   replay all keep working unchanged).
+//! * [`build_deploy`] — spec-string registry (`fifo`, `greedy[:n]`,
+//!   `ucb[:w]`) mirroring the routing-policy builder registry.
+//!
+//! Statistics flow *up* from [`crate::router::PolicyHost`]'s per-slot
+//! accumulators ([`crate::router::SlotStat`]) via
+//! [`SlotManager::record_stats`]; occupancy decisions flow *down* as
+//! registry operations.  The manager itself never touches the registry.
+
+mod builders;
+mod manager;
+mod policy;
+
+pub use builders::{build_deploy, deploy_names, DeployBuilder, DEPLOY_BUILDERS};
+pub use manager::{DeployAction, DeployCounters, SlotManager};
+pub use policy::{
+    Candidate, DeployCtx, Deployed, DeploymentPolicy, FifoDeploy, GreedyDeploy, UcbDeploy,
+    DEFAULT_QUALITY,
+};
+
+/// Prior weight a deployed candidate's quality hint carries into the
+/// router when the serving layer registers it (the §4 onboarding
+/// heuristic prior's `n_eff`).
+pub const DEPLOY_PRIOR_N_EFF: f64 = 16.0;

@@ -1,0 +1,452 @@
+//! Deployment policies: offered-candidate pool in, slot occupancy
+//! decisions out.
+//!
+//! A [`DeploymentPolicy`] is the *upper* level of the two-level control
+//! problem (arXiv 2506.17254): it chooses which of the streaming
+//! candidate models occupy the K deployment slots, while the routing
+//! policy below chooses which *deployed* model serves each request.  The
+//! policy is advisory — it proposes deploys and swaps over a
+//! [`DeployCtx`] view; the [`super::SlotManager`] enforces the K-slot
+//! cap, the per-tick swap budget and the forced-exploration protection
+//! window before anything reaches the registry.
+
+use crate::router::SlotStat;
+
+/// Floor for blended $/1k rates in value ratios (a free model would
+/// otherwise divide by zero).
+const BLENDED_FLOOR: f64 = 1e-9;
+
+/// Default prior quality for offers that carry no hint.
+pub const DEFAULT_QUALITY: f64 = 0.5;
+
+/// One offered (not yet deployed) candidate model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Candidate {
+    pub name: String,
+    /// list price, $ per 1M input tokens
+    pub price_in: f64,
+    /// list price, $ per 1M output tokens
+    pub price_out: f64,
+    /// prior quality estimate carried by the offer (r0-like, in [0,1])
+    pub quality: f64,
+    /// manager tick-clock value at offer time
+    pub offered_at: u64,
+}
+
+impl Candidate {
+    /// Blended $/1k-token rate (same 1:1 blend as the registry).
+    pub fn blended_per_1k(&self) -> f64 {
+        (self.price_in + self.price_out) / 2.0 / 1000.0
+    }
+
+    /// Prior quality per blended dollar (the greedy deploy score).
+    pub fn value_hint(&self) -> f64 {
+        self.quality / self.blended_per_1k().max(BLENDED_FLOOR)
+    }
+}
+
+/// One model currently occupying a deployment slot.
+#[derive(Clone, Debug)]
+pub struct Deployed {
+    /// stable registry arm id
+    pub slot: usize,
+    pub name: String,
+    /// blended $/1k rate at deployment
+    pub blended: f64,
+    /// prior quality hint it was deployed with
+    pub quality: f64,
+    /// manager tick-clock value at deployment
+    pub deployed_at: u64,
+    /// cumulative host statistics at deployment time (slot ids are never
+    /// reused so this is normally zero; restores keep it meaningful)
+    pub base: SlotStat,
+    /// latest cumulative host statistics for the slot
+    pub stat: SlotStat,
+}
+
+impl Deployed {
+    /// Observations absorbed since deployment.
+    pub fn obs(&self) -> u64 {
+        self.stat.n.saturating_sub(self.base.n)
+    }
+
+    /// Mean realised reward since deployment; the prior quality hint
+    /// before any observation arrives.
+    pub fn mean_reward(&self) -> f64 {
+        let n = self.obs();
+        if n == 0 {
+            self.quality
+        } else {
+            (self.stat.reward_sum - self.base.reward_sum) / n as f64
+        }
+    }
+
+    /// Mean realised cost since deployment (0.0 before any observation).
+    pub fn mean_cost(&self) -> f64 {
+        let n = self.obs();
+        if n == 0 {
+            0.0
+        } else {
+            (self.stat.cost_sum - self.base.cost_sum) / n as f64
+        }
+    }
+
+    /// Realised quality per blended dollar (the incumbent score).
+    pub fn value(&self) -> f64 {
+        self.mean_reward() / self.blended.max(BLENDED_FLOOR)
+    }
+
+    /// Ticks since deployment.
+    pub fn age(&self, t: u64) -> u64 {
+        t.saturating_sub(self.deployed_at)
+    }
+}
+
+/// Read-only view a policy decides over.
+pub struct DeployCtx<'a> {
+    /// offered candidates, arrival order
+    pub pool: &'a [Candidate],
+    /// current slot occupants
+    pub deployed: &'a [Deployed],
+    /// manager tick clock
+    pub t: u64,
+    /// forced-exploration window (ticks): incumbents younger than this
+    /// are not evictable — the manager vetoes such swaps regardless of
+    /// what the policy proposes
+    pub protect: u64,
+}
+
+impl DeployCtx<'_> {
+    /// Whether the incumbent at `idx` is past its forced-exploration
+    /// window (mirrors the router's §4 onboarding phase: a newcomer gets
+    /// an uninterrupted evaluation window before it can be churned out).
+    pub fn evictable(&self, idx: usize) -> bool {
+        self.deployed
+            .get(idx)
+            .map_or(false, |d| d.age(self.t) >= self.protect)
+    }
+}
+
+/// The deployment-policy interface: pure candidate/incumbent selection.
+/// Implementations never touch the registry — the [`super::SlotManager`]
+/// executes (and may veto) what they propose.
+pub trait DeploymentPolicy: Send {
+    /// Display name.
+    fn name(&self) -> &'static str;
+
+    /// Pick a pool index to deploy into a known-free slot, or `None` to
+    /// leave the slot empty this tick.
+    fn pick_deploy(&mut self, ctx: &DeployCtx) -> Option<usize>;
+
+    /// Propose `(deployed index, pool index)`: evict the incumbent and
+    /// deploy the candidate.  `None` keeps the current occupancy.  Only
+    /// consulted when every slot is occupied.
+    fn pick_swap(&mut self, ctx: &DeployCtx) -> Option<(usize, usize)>;
+}
+
+/// Index of the maximum of `score(i)` over `0..n`; ties keep the first.
+fn argmax(n: usize, score: impl Fn(usize) -> f64) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for i in 0..n {
+        let s = score(i);
+        match best {
+            Some((_, b)) if s <= b => {}
+            _ => best = Some((i, s)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Index of the minimum of `score(i)` over the indices where `keep(i)`;
+/// ties keep the first.
+fn argmin_where(
+    n: usize,
+    keep: impl Fn(usize) -> bool,
+    score: impl Fn(usize) -> f64,
+) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for i in 0..n {
+        if !keep(i) {
+            continue;
+        }
+        let s = score(i);
+        match best {
+            Some((_, b)) if s >= b => {}
+            _ => best = Some((i, s)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// FIFO baseline: deploy candidates strictly in arrival order, never
+/// swap.  The control condition every smarter policy is measured against.
+#[derive(Debug, Default)]
+pub struct FifoDeploy;
+
+impl DeploymentPolicy for FifoDeploy {
+    fn name(&self) -> &'static str {
+        "FifoDeploy"
+    }
+
+    fn pick_deploy(&mut self, ctx: &DeployCtx) -> Option<usize> {
+        // the pool is kept in arrival order, so FIFO is the front
+        if ctx.pool.is_empty() {
+            None
+        } else {
+            Some(0)
+        }
+    }
+
+    fn pick_swap(&mut self, _ctx: &DeployCtx) -> Option<(usize, usize)> {
+        None
+    }
+}
+
+/// Greedy quality-per-dollar: deploy the candidate with the best prior
+/// quality per blended dollar; once full, swap out the worst *observed*
+/// incumbent when a candidate's hint beats it by a relative margin.
+#[derive(Debug)]
+pub struct GreedyDeploy {
+    /// observations an incumbent needs before its realised value can be
+    /// held against it
+    pub min_obs: u64,
+    /// relative improvement a candidate must promise to trigger a swap
+    pub margin: f64,
+}
+
+impl GreedyDeploy {
+    pub fn new(min_obs: u64) -> GreedyDeploy {
+        GreedyDeploy {
+            min_obs,
+            margin: 0.1,
+        }
+    }
+}
+
+impl DeploymentPolicy for GreedyDeploy {
+    fn name(&self) -> &'static str {
+        "GreedyDeploy"
+    }
+
+    fn pick_deploy(&mut self, ctx: &DeployCtx) -> Option<usize> {
+        argmax(ctx.pool.len(), |i| {
+            ctx.pool.get(i).map_or(f64::NEG_INFINITY, Candidate::value_hint)
+        })
+    }
+
+    fn pick_swap(&mut self, ctx: &DeployCtx) -> Option<(usize, usize)> {
+        let ci = argmax(ctx.pool.len(), |i| {
+            ctx.pool.get(i).map_or(f64::NEG_INFINITY, Candidate::value_hint)
+        })?;
+        let cand = ctx.pool.get(ci)?;
+        let di = argmin_where(
+            ctx.deployed.len(),
+            |i| {
+                ctx.evictable(i)
+                    && ctx.deployed.get(i).map_or(false, |d| d.obs() >= self.min_obs)
+            },
+            |i| ctx.deployed.get(i).map_or(f64::INFINITY, Deployed::value),
+        )?;
+        let worst = ctx.deployed.get(di)?;
+        if cand.value_hint() > worst.value() * (1.0 + self.margin) {
+            Some((di, ci))
+        } else {
+            None
+        }
+    }
+}
+
+/// UCB-style deploy policy with forced-exploration windows per newcomer
+/// (mirrors the router's §4 onboarding phase at the deployment level).
+///
+/// Candidates are scored optimistically — their prior quality hint plus
+/// an exploration bonus, per blended dollar — while incumbents are held
+/// to a pessimistic lower confidence bound on realised quality per
+/// dollar that tightens as observations accumulate.  A swap fires only
+/// when the best candidate's optimistic score beats the worst
+/// evictable incumbent's LCB by a relative margin, so a newcomer is
+/// always worth trying once but a well-measured incumbent is hard to
+/// displace on noise.
+#[derive(Debug)]
+pub struct UcbDeploy {
+    /// forced-exploration window (ticks) a newcomer is protected for —
+    /// also installed as the manager's uniform protection window
+    pub window: u64,
+    /// observations before an incumbent's LCB is trusted for eviction
+    pub min_obs: u64,
+    /// exploration bonus scale (reward units)
+    pub bonus: f64,
+    /// relative improvement required to trigger a swap
+    pub margin: f64,
+}
+
+impl UcbDeploy {
+    pub fn new(window: u64) -> UcbDeploy {
+        UcbDeploy {
+            window,
+            min_obs: 16,
+            bonus: 0.25,
+            margin: 0.05,
+        }
+    }
+
+    fn optimistic(&self, c: &Candidate) -> f64 {
+        (c.quality + self.bonus) / c.blended_per_1k().max(BLENDED_FLOOR)
+    }
+
+    fn incumbent_lcb(&self, d: &Deployed) -> f64 {
+        let n = d.obs().max(1) as f64;
+        (d.mean_reward() - self.bonus / n.sqrt()) / d.blended.max(BLENDED_FLOOR)
+    }
+}
+
+impl DeploymentPolicy for UcbDeploy {
+    fn name(&self) -> &'static str {
+        "UcbDeploy"
+    }
+
+    fn pick_deploy(&mut self, ctx: &DeployCtx) -> Option<usize> {
+        argmax(ctx.pool.len(), |i| {
+            ctx.pool.get(i).map_or(f64::NEG_INFINITY, |c| self.optimistic(c))
+        })
+    }
+
+    fn pick_swap(&mut self, ctx: &DeployCtx) -> Option<(usize, usize)> {
+        let ci = argmax(ctx.pool.len(), |i| {
+            ctx.pool.get(i).map_or(f64::NEG_INFINITY, |c| self.optimistic(c))
+        })?;
+        let cand = ctx.pool.get(ci)?;
+        let di = argmin_where(
+            ctx.deployed.len(),
+            |i| {
+                ctx.evictable(i)
+                    && ctx.deployed.get(i).map_or(false, |d| d.obs() >= self.min_obs)
+            },
+            |i| ctx.deployed.get(i).map_or(f64::INFINITY, |d| self.incumbent_lcb(d)),
+        )?;
+        let worst = ctx.deployed.get(di)?;
+        if self.optimistic(cand) > self.incumbent_lcb(worst) * (1.0 + self.margin) {
+            Some((di, ci))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(name: &str, blended_pm: f64, quality: f64, at: u64) -> Candidate {
+        Candidate {
+            name: name.into(),
+            price_in: blended_pm,
+            price_out: blended_pm,
+            quality,
+            offered_at: at,
+        }
+    }
+
+    fn dep(slot: usize, blended_pm: f64, quality: f64, at: u64, n: u64, rsum: f64) -> Deployed {
+        Deployed {
+            slot,
+            name: format!("m{slot}"),
+            blended: blended_pm / 1000.0,
+            quality,
+            deployed_at: at,
+            base: SlotStat::default(),
+            stat: SlotStat {
+                n,
+                reward_sum: rsum,
+                cost_sum: 0.0,
+            },
+        }
+    }
+
+    #[test]
+    fn fifo_deploys_in_arrival_order_and_never_swaps() {
+        let mut p = FifoDeploy;
+        let pool = vec![cand("a", 1.0, 0.2, 0), cand("b", 0.1, 0.9, 1)];
+        let deployed = vec![dep(0, 1.0, 0.1, 0, 100, 5.0)];
+        let ctx = DeployCtx {
+            pool: &pool,
+            deployed: &deployed,
+            t: 100,
+            protect: 0,
+        };
+        assert_eq!(p.pick_deploy(&ctx), Some(0), "front of the pool, not best");
+        assert_eq!(p.pick_swap(&ctx), None);
+    }
+
+    #[test]
+    fn greedy_picks_best_hint_per_dollar() {
+        let mut p = GreedyDeploy::new(4);
+        // b: 0.9 quality at a tenth the price — clearly the best value
+        let pool = vec![cand("a", 1.0, 0.8, 0), cand("b", 0.1, 0.9, 1)];
+        let ctx = DeployCtx {
+            pool: &pool,
+            deployed: &[],
+            t: 5,
+            protect: 0,
+        };
+        assert_eq!(p.pick_deploy(&ctx), Some(1));
+    }
+
+    #[test]
+    fn greedy_swaps_out_a_measured_weak_incumbent() {
+        let mut p = GreedyDeploy::new(8);
+        let pool = vec![cand("new", 1.0, 0.9, 50)];
+        // incumbent 0: well measured, weak (mean reward 0.2)
+        // incumbent 1: unmeasured — ineligible regardless of score
+        let deployed = vec![dep(0, 1.0, 0.5, 0, 100, 20.0), dep(1, 1.0, 0.5, 0, 2, 0.2)];
+        let ctx = DeployCtx {
+            pool: &pool,
+            deployed: &deployed,
+            t: 100,
+            protect: 10,
+        };
+        assert_eq!(p.pick_swap(&ctx), Some((0, 0)));
+        // inside the protection window nothing is evictable
+        let ctx = DeployCtx {
+            pool: &pool,
+            deployed: &deployed,
+            t: 5,
+            protect: 10,
+        };
+        assert_eq!(p.pick_swap(&ctx), None);
+    }
+
+    #[test]
+    fn ucb_is_optimistic_about_newcomers_but_needs_evidence_to_evict() {
+        let mut p = UcbDeploy::new(10);
+        let pool = vec![cand("new", 1.0, 0.7, 90)];
+        // degraded incumbent: 200 obs at mean 0.2
+        let degraded = vec![dep(0, 1.0, 0.9, 0, 200, 40.0)];
+        let ctx = DeployCtx {
+            pool: &pool,
+            deployed: &degraded,
+            t: 100,
+            protect: 10,
+        };
+        assert_eq!(p.pick_swap(&ctx), Some((0, 0)), "degraded incumbent must go");
+        // healthy incumbent: 200 obs at mean 0.85 — the newcomer's
+        // optimism does not displace solid evidence
+        let healthy = vec![dep(0, 1.0, 0.9, 0, 200, 170.0)];
+        let ctx = DeployCtx {
+            pool: &pool,
+            deployed: &healthy,
+            t: 100,
+            protect: 10,
+        };
+        assert_eq!(p.pick_swap(&ctx), None);
+        // an under-observed incumbent is not evictable yet
+        let fresh = vec![dep(0, 1.0, 0.9, 0, 4, 0.4)];
+        let ctx = DeployCtx {
+            pool: &pool,
+            deployed: &fresh,
+            t: 100,
+            protect: 10,
+        };
+        assert_eq!(p.pick_swap(&ctx), None);
+    }
+}

@@ -45,6 +45,7 @@
 pub mod analysis;
 pub mod bandit;
 pub mod client;
+pub mod deploy;
 pub mod exp;
 pub mod linalg;
 pub mod log;

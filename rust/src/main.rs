@@ -5,6 +5,7 @@
 //! paretobandit serve    [--addr 127.0.0.1:7878] [--budget 6.6e-4]
 //!                       [--workers N] [--merge-ms MS] [--restore SNAP]
 //!                       [--policy NAME[:ARG]] [--shadow NAME[,NAME...]]
+//!                       [--deploy NAME[:ARG] --slots K]  (streaming inventory)
 //!                       [--log-dir DIR]      (capture a decision log)
 //!                       [--threaded]         (deprecated conformance oracle)
 //! paretobandit replay   --log-dir DIR [--policy NAME[,NAME...]]
@@ -22,6 +23,7 @@ use std::time::Duration;
 
 use paretobandit::analysis::{lint_main, LintOpts};
 use paretobandit::client::ParetoClient;
+use paretobandit::deploy::{build_deploy, SlotManager, DEPLOY_BUILDERS};
 use paretobandit::exp::{
     conditions, exp1_stationary, exp2_costdrift, exp3_degradation, exp4_onboarding, exp5_warmup,
     exp6_mismatch, exp7_judges, exp8_recovery, exp9_costheuristic, hyperopt, latency, report,
@@ -73,6 +75,16 @@ fn main() {
         "policies" => {
             println!("registered routing policies (--policy / --shadow / spec `policy = ...`):");
             for b in BUILDERS {
+                let arg = if b.arg_hint.is_empty() {
+                    String::new()
+                } else {
+                    format!("  (arg: {})", b.arg_hint)
+                };
+                println!("  {:<14} {}{arg}", b.name, b.summary);
+            }
+            println!();
+            println!("registered deployment policies (serve --deploy / spec `deploy = ...`):");
+            for b in DEPLOY_BUILDERS {
                 let arg = if b.arg_hint.is_empty() {
                     String::new()
                 } else {
@@ -137,6 +149,7 @@ fn main() {
             println!();
             println!("  serve      start the routing server (--addr, --budget, --restore,");
             println!("             --policy NAME[:ARG], --shadow NAME[,NAME...],");
+            println!("             --deploy NAME[:ARG] --slots K for streaming inventory,");
             println!("             --log-dir DIR to capture a decision log,");
             println!("             --threaded for the deprecated oracle engine)");
             println!("  replay     re-drive policies through a captured decision log");
@@ -362,6 +375,24 @@ fn serve(args: &[String]) {
         })
         .unwrap_or_default();
     let log_dir = arg_val(args, "--log-dir");
+    // streaming model inventory: --deploy NAME[:ARG] puts a deployment
+    // policy above the router; --slots caps concurrent deployments
+    let deploy_spec = arg_val(args, "--deploy");
+    let slots: usize = arg_val(args, "--slots")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    if deploy_spec.is_none() && args.iter().any(|a| a == "--slots") {
+        eprintln!("serve: note: --slots has no effect without --deploy");
+    }
+    let mut deploy_mgr: Option<SlotManager> = deploy_spec.as_deref().map(|spec| {
+        match build_deploy(spec, slots) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("serve: --deploy: {e}");
+                std::process::exit(2);
+            }
+        }
+    });
     // one capture-wide step clock: every shard writer stamps frames from
     // the same sequence so `replay` can reconstruct the interleaving
     let log_clock = Arc::new(AtomicU64::new(0));
@@ -449,6 +480,17 @@ fn serve(args: &[String]) {
                 .map(|b| format!(", budget ${b} (overrides --budget)"))
                 .unwrap_or_default()
         );
+    }
+    // a snapshot taken by a deploy-enabled engine embeds the deployment
+    // layer's state under "deploy"; restore it when this launch also
+    // enables --deploy (kind mismatch starts the layer cold, router
+    // state restores regardless)
+    if let (Some(mgr), Some(t)) = (deploy_mgr.as_mut(), &restore) {
+        if let Some(d) = t.1.get("deploy") {
+            if let Err(e) = mgr.restore_state(d) {
+                eprintln!("serve: --restore: deployment layer: {e}; starting it cold");
+            }
+        }
     }
     // probe artifacts once at startup; per-shard builders stay quiet on
     // the expected (surrogate) path instead of warning N times
@@ -582,9 +624,9 @@ fn serve(args: &[String]) {
     }
     let cfg = EngineConfig::new(workers).merge_every(Duration::from_millis(merge_ms.max(1)));
     let spawned = if threaded {
-        ShardedEngine::spawn(&addr, cfg, build).map(AnyEngine::Threaded)
+        ShardedEngine::spawn_deploy(&addr, cfg, deploy_mgr, build).map(AnyEngine::Threaded)
     } else {
-        EventEngine::spawn(&addr, cfg, build).map(AnyEngine::Event)
+        EventEngine::spawn_deploy(&addr, cfg, deploy_mgr, build).map(AnyEngine::Event)
     };
     let engine = match spawned {
         Ok(e) => e,
@@ -599,10 +641,14 @@ fn serve(args: &[String]) {
         format!(", shadows [{}]", shadow_specs.join(", "))
     };
     let mode = if threaded { "threaded oracle" } else { "event loop" };
+    let deploy_note = deploy_spec
+        .as_deref()
+        .map(|s| format!(", deploy {s} ({slots} slot(s))"))
+        .unwrap_or_default();
     println!(
-        "paretobandit serving on {} ({mode}, policy {policy_spec}{shadow_note}, {workers} \
-         shard(s), merge every {merge_ms} ms, budget ${budget}/req); line-JSON protocol v2 \
-         (v1 accepted); op=shutdown to stop",
+        "paretobandit serving on {} ({mode}, policy {policy_spec}{shadow_note}{deploy_note}, \
+         {workers} shard(s), merge every {merge_ms} ms, budget ${budget}/req); line-JSON \
+         protocol v2 (v1 accepted); op=shutdown to stop",
         engine.addr()
     );
     while !engine.is_shutdown() {

@@ -23,6 +23,44 @@ use crate::router::policy::{BatchCtx, FeedbackCtx, PolicyDecision, RouteCtx, Rou
 use crate::router::{FeedbackEvent, Registry, RouteDecision};
 use crate::util::json::Json;
 
+/// Per-slot realised routing statistics the host accumulates for the
+/// deployment layer (`crate::deploy`): observation count plus reward and
+/// cost sums.  Cumulative since host creation (reset on restore); the
+/// deployment policies difference or average them as needed.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SlotStat {
+    pub n: u64,
+    pub reward_sum: f64,
+    pub cost_sum: f64,
+}
+
+impl SlotStat {
+    /// Mean realised reward; 0.0 before any observation.
+    pub fn mean_reward(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.reward_sum / self.n as f64
+        }
+    }
+
+    /// Mean realised cost; 0.0 before any observation.
+    pub fn mean_cost(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.cost_sum / self.n as f64
+        }
+    }
+
+    /// Fold another accumulator in (merger: sum per-shard cumulatives).
+    pub fn merge(&mut self, o: &SlotStat) {
+        self.n += o.n;
+        self.reward_sum += o.reward_sum;
+        self.cost_sum += o.cost_sum;
+    }
+}
+
 /// A routing policy plus the registry/pacer/clock it runs against.
 pub struct PolicyHost {
     policy: Box<dyn RoutingPolicy>,
@@ -37,6 +75,8 @@ pub struct PolicyHost {
     // slot-aligned declared-price mirrors (0.0 on retired slots)
     blended: Vec<f64>,
     c_tilde: Vec<f64>,
+    // slot-aligned realised-outcome accumulators for the deploy layer
+    stats: Vec<SlotStat>,
     // scratch: eligible slots for the current decision
     eligible_buf: Vec<usize>,
     // scratch: policy decisions for the current batch (reused so the
@@ -67,6 +107,7 @@ impl PolicyHost {
             t,
             blended: Vec::new(),
             c_tilde: Vec::new(),
+            stats: Vec::new(),
             eligible_buf: Vec::new(),
             pick_buf: Vec::new(),
         };
@@ -96,6 +137,11 @@ impl PolicyHost {
                     self.c_tilde.push(0.0);
                 }
             }
+        }
+        // stats grow with the slot vector but are never truncated: a
+        // retired slot keeps its history until restore resets everything
+        if self.stats.len() < n {
+            self.stats.resize(n, SlotStat::default());
         }
     }
 
@@ -153,6 +199,35 @@ impl PolicyHost {
     /// Slot-aligned frozen c̃ cost snapshots (0.0 on retired slots).
     pub fn c_tilde_prices(&self) -> &[f64] {
         &self.c_tilde
+    }
+
+    /// Copy the active slot ids into a caller-owned buffer — the
+    /// zero-alloc variant of `registry().active_ids()` for callers that
+    /// scan eligibility under churn (steady-state the buffer's capacity
+    /// is reused; only growth past a previous high-water mark allocates).
+    // lint: no_alloc
+    pub fn active_ids_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend_from_slice(self.registry.active_slots());
+    }
+
+    /// Slot-aligned realised routing outcomes (deploy-layer export).
+    pub fn slot_stats(&self) -> &[SlotStat] {
+        &self.stats
+    }
+
+    /// Record a realised outcome against a slot without touching the
+    /// policy or pacer — the sharded feedback path calls this at arrival
+    /// time (rewards queue for the merge cycle, but the deploy layer
+    /// wants arrival-time statistics).  [`PolicyHost::feedback`] calls it
+    /// internally, so single-worker callers never need to.
+    // lint: no_alloc
+    pub fn note_result(&mut self, arm: usize, reward: f64, cost: f64) {
+        if let Some(s) = self.stats.get_mut(arm) {
+            s.n += 1;
+            s.reward_sum += reward;
+            s.cost_sum += cost;
+        }
     }
 
     // ------------------------------------------------------------------
@@ -297,7 +372,10 @@ impl PolicyHost {
                 .map_or(f64::INFINITY, |p| p.price_ceiling(self.registry.max_blended()))
         };
         self.eligible_buf.clear();
-        for id in 0..self.registry.n_slots() {
+        // walk the maintained active index, not every slot ever added:
+        // under streaming churn the scan stays O(active), and only growth
+        // past the buffer's high-water mark allocates
+        for &id in self.registry.active_slots() {
             if let Some(e) = self.registry.get(id) {
                 if e.blended_per_1k <= ceiling {
                     self.eligible_buf.push(id);
@@ -394,6 +472,7 @@ impl PolicyHost {
     /// [`PolicyHost::use_shared_pacer`]), so no controller is fed twice.
     // lint: no_alloc
     pub fn feedback(&mut self, arm: usize, x: &[f64], reward: f64, cost: f64) {
+        self.note_result(arm, reward, cost);
         let fb = FeedbackCtx {
             arm,
             x,
@@ -438,16 +517,23 @@ impl PolicyHost {
         if self.policy.self_hosted() {
             return self.policy.export_state();
         }
-        let slots = (0..self.registry.n_slots())
-            .map(|id| match self.registry.get(id) {
-                None => Json::Null,
-                Some(e) => Json::obj(vec![
-                    ("name", Json::Str(e.name.clone())),
-                    ("price_in", Json::Num(e.price_in_per_m)),
-                    ("price_out", Json::Num(e.price_out_per_m)),
-                ]),
-            })
-            .collect();
+        let mut slots = Vec::with_capacity(self.registry.n_slots());
+        let mut run = 0usize;
+        for id in 0..self.registry.n_slots() {
+            match self.registry.get(id) {
+                None => run += 1,
+                Some(e) => {
+                    crate::router::state::push_retired_run(&mut slots, run);
+                    run = 0;
+                    slots.push(Json::obj(vec![
+                        ("name", Json::Str(e.name.clone())),
+                        ("price_in", Json::Num(e.price_in_per_m)),
+                        ("price_out", Json::Num(e.price_out_per_m)),
+                    ]));
+                }
+            }
+        }
+        crate::router::state::push_retired_run(&mut slots, run);
         let mut fields = vec![
             ("kind", Json::Str(self.kind.clone())),
             ("t", Json::Num(self.t as f64)),
@@ -481,6 +567,7 @@ impl PolicyHost {
             self.policy.restore_state(st)?;
             self.t = get_t(st)?;
             self.registry = Registry::from_slots(self.policy.portfolio());
+            self.stats.clear();
             self.refresh_prices();
             return Ok(());
         }
@@ -495,8 +582,10 @@ impl PolicyHost {
             .ok_or("restore: missing slots")?;
         let mut slots = Vec::with_capacity(arr.len());
         for s in arr {
-            if matches!(s, Json::Null) {
-                slots.push(None);
+            if let Some(n) = crate::router::state::retired_count(s) {
+                for _ in 0..n {
+                    slots.push(None);
+                }
                 continue;
             }
             let name = s
@@ -514,6 +603,7 @@ impl PolicyHost {
             slots.push(Some((name.to_string(), pi, po)));
         }
         self.registry = Registry::from_slots(slots);
+        self.stats.clear();
         self.refresh_prices();
         if let (Some(p), Some(ps)) = (self.pacer.as_mut(), st.get("pacer")) {
             let f = |k: &str| {

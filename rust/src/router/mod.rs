@@ -14,13 +14,13 @@ mod host;
 mod pareto;
 mod policy;
 mod registry;
-mod state;
+pub(crate) mod state;
 
 pub use builders::{build_policy, policy_names, BuildCtx, ModelSpec, PolicyBuilder, BUILDERS};
 pub use config::{Exploration, RouterConfig};
 pub use floor::{FloorConfig, QualityFloorRouter};
 pub use feedback::{ContextCache, FeedbackEvent, FeedbackQueue, FileStore, Pending};
-pub use host::PolicyHost;
+pub use host::{PolicyHost, SlotStat};
 pub use pareto::{ParetoRouter, Prior, RouteDecision};
 pub use policy::{BatchCtx, FeedbackCtx, PolicyDecision, RouteCtx, RoutingPolicy};
 pub use registry::{ModelEntry, ModelRef, Registry};

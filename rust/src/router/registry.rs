@@ -73,11 +73,19 @@ impl ModelEntry {
 #[derive(Clone, Debug, Default)]
 pub struct Registry {
     slots: Vec<Option<ModelEntry>>,
+    /// Maintained sorted index of active slot ids.  Under streaming churn
+    /// the slot vector grows O(total-ever-added) while the active set stays
+    /// O(K); every active-set scan (eligibility, c_max, cheapest fallback)
+    /// walks this index so routing cost tracks the *live* portfolio size.
+    active: Vec<usize>,
 }
 
 impl Registry {
     pub fn new() -> Registry {
-        Registry { slots: Vec::new() }
+        Registry {
+            slots: Vec::new(),
+            active: Vec::new(),
+        }
     }
 
     /// Register a model; returns its stable arm id.  Unchecked: duplicate
@@ -85,19 +93,25 @@ impl Registry {
     /// names); the wire API registers through [`Registry::try_add`].
     pub fn add(&mut self, name: &str, price_in_per_m: f64, price_out_per_m: f64) -> usize {
         self.slots.push(Some(ModelEntry::new(name, price_in_per_m, price_out_per_m)));
-        self.slots.len() - 1
+        let id = self.slots.len() - 1;
+        self.active.push(id); // ids are appended in increasing order
+        id
     }
 
     /// Rebuild a registry from slot entries `(name, price_in, price_out)`
     /// (snapshot restore).  Retired slots stay `None` so pre-snapshot arm
     /// ids keep their meaning after a warm restart.
     pub fn from_slots(slots: Vec<Option<(String, f64, f64)>>) -> Registry {
-        Registry {
-            slots: slots
-                .into_iter()
-                .map(|s| s.map(|(name, pi, po)| ModelEntry::new(&name, pi, po)))
-                .collect(),
-        }
+        let slots: Vec<Option<ModelEntry>> = slots
+            .into_iter()
+            .map(|s| s.map(|(name, pi, po)| ModelEntry::new(&name, pi, po)))
+            .collect();
+        let active = slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|_| i))
+            .collect();
+        Registry { slots, active }
     }
 
     /// Slot-aligned `(name, price_in, price_out)` entries, `None` for
@@ -130,10 +144,10 @@ impl Registry {
 
     /// First active slot registered under `name`.
     pub fn find(&self, name: &str) -> Option<usize> {
-        self.slots.iter().enumerate().find_map(|(i, s)| match s {
-            Some(e) if e.name == name => Some(i),
-            _ => None,
-        })
+        self.active
+            .iter()
+            .copied()
+            .find(|&i| matches!(self.slots.get(i), Some(Some(e)) if e.name == name))
     }
 
     /// Resolve a wire-level model reference to an active slot id.
@@ -149,6 +163,9 @@ impl Registry {
         match self.slots.get_mut(id) {
             Some(s @ Some(_)) => {
                 *s = None;
+                if let Ok(pos) = self.active.binary_search(&id) {
+                    self.active.remove(pos);
+                }
                 true
             }
             _ => false,
@@ -173,17 +190,21 @@ impl Registry {
         matches!(self.slots.get(id), Some(Some(_)))
     }
 
-    /// Stable ids of all active models.
+    /// Stable ids of all active models (allocates; hot paths use
+    /// [`Registry::active_slots`]).
     pub fn active_ids(&self) -> Vec<usize> {
-        self.slots
-            .iter()
-            .enumerate()
-            .filter_map(|(i, s)| s.as_ref().map(|_| i))
-            .collect()
+        self.active.clone()
+    }
+
+    /// Stable ids of all active models, sorted ascending, borrowed from
+    /// the maintained index — zero-alloc and O(active), independent of
+    /// how many slots have ever been retired.
+    pub fn active_slots(&self) -> &[usize] {
+        &self.active
     }
 
     pub fn n_active(&self) -> usize {
-        self.slots.iter().filter(|s| s.is_some()).count()
+        self.active.len()
     }
 
     pub fn n_slots(&self) -> usize {
@@ -192,19 +213,18 @@ impl Registry {
 
     /// Max blended $/1k rate among active models (c_max in §3.2).
     pub fn max_blended(&self) -> f64 {
-        self.slots
+        self.active
             .iter()
-            .flatten()
+            .filter_map(|&i| self.get(i))
             .map(|e| e.blended_per_1k)
             .fold(0.0, f64::max)
     }
 
     /// Active id with the lowest blended rate (hard-ceiling fallback).
     pub fn cheapest_active(&self) -> Option<usize> {
-        self.slots
+        self.active
             .iter()
-            .enumerate()
-            .filter_map(|(i, s)| s.as_ref().map(|e| (i, e.blended_per_1k)))
+            .filter_map(|&i| self.get(i).map(|e| (i, e.blended_per_1k)))
             .min_by(|a, b| a.1.total_cmp(&b.1))
             .map(|(i, _)| i)
     }
@@ -243,6 +263,38 @@ mod tests {
         // a later add gets a fresh slot, not the retired one
         let id = r.add("new", 1.0, 1.0);
         assert_eq!(id, 4);
+    }
+
+    #[test]
+    fn active_index_tracks_churn() {
+        let mut r = Registry::new();
+        // 200 add/remove cycles: slots grow, active index stays O(live)
+        for i in 0..200 {
+            let id = r.add(&format!("m{i}"), 0.1 + i as f64 * 1e-3, 0.1);
+            if i % 2 == 0 {
+                assert!(r.remove(id));
+            }
+        }
+        assert_eq!(r.n_slots(), 200);
+        assert_eq!(r.n_active(), 100);
+        assert_eq!(r.active_slots().len(), 100);
+        // index is sorted and agrees with a full scan
+        let scan: Vec<usize> = (0..r.n_slots()).filter(|&i| r.is_active(i)).collect();
+        assert_eq!(r.active_slots(), &scan[..]);
+        assert_eq!(r.active_ids(), scan);
+        // index-backed aggregates agree with entry-by-entry recomputation
+        let max = scan
+            .iter()
+            .map(|&i| r.get(i).unwrap().blended_per_1k)
+            .fold(0.0, f64::max);
+        assert_eq!(r.max_blended(), max);
+        let cheapest = r.cheapest_active().unwrap();
+        assert!(scan
+            .iter()
+            .all(|&i| r.get(cheapest).unwrap().blended_per_1k <= r.get(i).unwrap().blended_per_1k));
+        // from_slots round-trip rebuilds the same index
+        let rebuilt = Registry::from_slots(r.slot_entries());
+        assert_eq!(rebuilt.active_slots(), r.active_slots());
     }
 
     #[test]

@@ -13,6 +13,37 @@
 
 use crate::util::json::Json;
 
+/// Shortest run of consecutive tombstoned slots worth run-length
+/// encoding as `{"retired": n}` in snapshots.  Below this the plain
+/// `null` spelling is kept, so pre-churn snapshots stay byte-stable.
+pub(crate) const RETIRED_RUN_MIN: usize = 4;
+
+/// Append a run of `run` tombstoned slots to a snapshot slot array:
+/// long runs collapse to one `{"retired": n}` marker (streaming churn
+/// leaves thousands of dead slots; snapshots must stay O(active)),
+/// short runs keep their literal `null`s.
+pub(crate) fn push_retired_run(out: &mut Vec<Json>, run: usize) {
+    if run >= RETIRED_RUN_MIN {
+        out.push(Json::obj(vec![("retired", Json::Num(run as f64))]));
+    } else {
+        for _ in 0..run {
+            out.push(Json::Null);
+        }
+    }
+}
+
+/// Decode one snapshot slot-array element's tombstone spelling: `null`
+/// counts 1, `{"retired": n}` counts n, anything else is a live slot.
+pub(crate) fn retired_count(s: &Json) -> Option<usize> {
+    if matches!(s, Json::Null) {
+        return Some(1);
+    }
+    match s.get("retired").and_then(Json::as_f64) {
+        Some(n) if n >= 1.0 && n.fract() == 0.0 => Some(n as usize),
+        _ => None,
+    }
+}
+
 /// One arm's learned sufficient statistics (paper Eq. 5 state).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ArmSnap {
@@ -71,24 +102,29 @@ impl RouterState {
     /// `Json::Num` cannot carry 64 significant bits); every other counter
     /// is far below 2^53 and stays numeric.
     pub fn to_json(&self) -> Json {
-        let slots = self
-            .slots
-            .iter()
-            .map(|s| match s {
-                None => Json::Null,
-                Some(s) => Json::obj(vec![
-                    ("name", Json::Str(s.name.clone())),
-                    ("price_in", Json::Num(s.price_in)),
-                    ("price_out", Json::Num(s.price_out)),
-                    ("burnin_left", Json::Num(s.burnin_left as f64)),
-                    ("a", Json::arr_f64(&s.arm.a)),
-                    ("b", Json::arr_f64(&s.arm.b)),
-                    ("last_upd", Json::Num(s.arm.last_upd as f64)),
-                    ("last_play", Json::Num(s.arm.last_play as f64)),
-                    ("n_obs", Json::Num(s.arm.n_obs as f64)),
-                ]),
-            })
-            .collect();
+        let mut slots = Vec::with_capacity(self.slots.len());
+        let mut run = 0usize;
+        for s in &self.slots {
+            match s {
+                None => run += 1,
+                Some(s) => {
+                    push_retired_run(&mut slots, run);
+                    run = 0;
+                    slots.push(Json::obj(vec![
+                        ("name", Json::Str(s.name.clone())),
+                        ("price_in", Json::Num(s.price_in)),
+                        ("price_out", Json::Num(s.price_out)),
+                        ("burnin_left", Json::Num(s.burnin_left as f64)),
+                        ("a", Json::arr_f64(&s.arm.a)),
+                        ("b", Json::arr_f64(&s.arm.b)),
+                        ("last_upd", Json::Num(s.arm.last_upd as f64)),
+                        ("last_play", Json::Num(s.arm.last_play as f64)),
+                        ("n_obs", Json::Num(s.arm.n_obs as f64)),
+                    ]));
+                }
+            }
+        }
+        push_retired_run(&mut slots, run);
         let mut fields = vec![
             ("d", Json::Num(self.d as f64)),
             ("t", Json::Num(self.t as f64)),
@@ -141,8 +177,10 @@ impl RouterState {
             .and_then(Json::as_arr)
             .ok_or("state: missing slots")?;
         for s in arr {
-            if matches!(s, Json::Null) {
-                slots.push(None);
+            if let Some(n) = retired_count(s) {
+                for _ in 0..n {
+                    slots.push(None);
+                }
                 continue;
             }
             let f64s = |k: &str| -> Result<Vec<f64>, String> {
@@ -258,6 +296,39 @@ mod tests {
         let back = RouterState::from_json(&sample().to_json()).unwrap();
         assert_eq!(back.rng.0, [u64::MAX, 1, 0xdead_beef_cafe_f00d, 42]);
         assert_eq!(back.rng.1, Some(-0.5));
+    }
+
+    #[test]
+    fn long_retired_runs_are_run_length_encoded() {
+        let mut st = sample();
+        let live = st.slots[0].clone();
+        st.slots = vec![live.clone()];
+        // 500 streaming-churn tombstones between two live slots
+        for _ in 0..500 {
+            st.slots.push(None);
+        }
+        st.slots.push(live);
+        let j = st.to_json();
+        let arr = j.get("slots").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3, "long run must collapse to one marker");
+        // size bound: the encoding grows with ACTIVE slots, not slots-ever
+        let bytes = j.to_string().len();
+        assert!(bytes < 4096, "snapshot must stay O(active): {bytes} bytes");
+        let back = RouterState::from_json(&j).unwrap();
+        assert_eq!(back, st);
+        assert_eq!(back.slots.len(), 502);
+        assert_eq!(back.n_active(), 2);
+    }
+
+    #[test]
+    fn short_retired_runs_keep_literal_nulls() {
+        // pre-churn snapshots (isolated tombstones) stay byte-stable
+        let j = sample().to_json();
+        let arr = j.get("slots").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert!(matches!(arr[1], Json::Null));
+        let back = RouterState::from_json(&j).unwrap();
+        assert_eq!(back, sample());
     }
 
     #[test]

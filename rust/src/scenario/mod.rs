@@ -8,7 +8,9 @@
 //! * [`spec`] — the schema: a `[scenario]` header plus a schedule of
 //!   timed `[[event]]`s (`set_price`, `degrade_quality`, `add_model`,
 //!   `remove_model`, `set_budget`, `traffic_mix`, `snapshot`,
-//!   `restart`), parsed by the in-tree TOML-subset reader ([`toml`]).
+//!   `restart`, and the streaming-inventory verbs `offer_model` /
+//!   `expire_model` / `set_slots` / `stream_inventory`), parsed by the
+//!   in-tree TOML-subset reader ([`toml`]).
 //! * [`run`] — execution: in-process against any hosted policy
 //!   ([`crate::router::PolicyHost`], [`run_scenario`]), or over the v2
 //!   wire protocol against a live `serve --workers N` engine

@@ -18,9 +18,11 @@
 //! Every source of randomness is seeded, so the same spec + seed yields
 //! a bit-identical run.
 
+use std::collections::HashMap;
 use std::path::Path;
 
 use crate::client::ParetoClient;
+use crate::deploy::{build_deploy, DeployAction, SlotManager, DEPLOY_PRIOR_N_EFF};
 use crate::exp::{stream_order, ExpEnv, StepLog};
 use crate::router::PolicyHost;
 use crate::sim::{EnvView, World};
@@ -155,6 +157,20 @@ fn world_index(world: &World, name: &str) -> Result<usize, String> {
         .ok_or_else(|| format!("model '{name}' is not in the world bank"))
 }
 
+/// Resolve a (possibly synthesized) model name to its world base model:
+/// exact match first, else the `@`-suffix convention — streaming
+/// candidates are named `<base>@sN` and inherit the base model's
+/// quality/latency profile (their *prices* are their own).
+fn world_base_index(world: &World, name: &str) -> Result<usize, String> {
+    if let Ok(i) = world_index(world, name) {
+        return Ok(i);
+    }
+    if let Some((base, _)) = name.split_once('@') {
+        return world_index(world, base);
+    }
+    Err(format!("model '{name}' is not in the world bank"))
+}
+
 /// Resolve a routed decision to the world model that actually serves it.
 ///
 /// Router slot ids and world indices coincide only until hot-swap churn:
@@ -163,7 +179,126 @@ fn world_index(world: &World, name: &str) -> Result<usize, String> {
 /// for `world.models[slot]` (which after churn is a different model — or
 /// out of bounds).
 fn world_model_of(world: &World, name: &str) -> Result<usize, String> {
-    world_index(world, name).map_err(|e| format!("routed to {e}"))
+    world_base_index(world, name).map_err(|e| format!("routed to {e}"))
+}
+
+/// Judge the realised cost of a routed request: the world's simulated
+/// cost, rescaled when the serving model is a streaming candidate whose
+/// offered prices differ from its base model's list prices.
+fn judged_cost(
+    world: &World,
+    p: &crate::sim::Prompt,
+    wm: usize,
+    view: &EnvView,
+    name: &str,
+    cand_blend: &HashMap<String, f64>,
+) -> f64 {
+    let cost = world.cost_view(p, wm, view);
+    match cand_blend.get(name) {
+        Some(b) => cost * (b / world.models[wm].blended_per_1k()),
+        None => cost,
+    }
+}
+
+/// Expand `stream_inventory` generator events into concrete seeded
+/// `offer_model` / `expire_model` events.  Candidate names are
+/// `<base>@s<ordinal>` (globally unique across generators); prices are
+/// the base model's list prices scaled by a seeded multiplier in
+/// [0.5, 2.0); quality hints are seeded uniforms in [0.35, 0.95).
+/// Synthesized events landing at or beyond the run end are dropped, so
+/// open-ended streams stay valid.
+fn expand_events(
+    spec: &ScenarioSpec,
+    world: &World,
+    total: u64,
+) -> Result<Vec<TimedEvent>, String> {
+    if !spec
+        .events
+        .iter()
+        .any(|te| matches!(te.event, Event::StreamInventory { .. }))
+    {
+        return Ok(spec.events.clone());
+    }
+    if spec.deploy.is_none() {
+        return Err(format!(
+            "spec '{}': stream_inventory needs a deploy policy",
+            spec.name
+        ));
+    }
+    let mut out = Vec::with_capacity(spec.events.len());
+    let mut ordinal = 0u64;
+    for te in &spec.events {
+        let Event::StreamInventory {
+            count,
+            every,
+            expire_after,
+            seed,
+        } = &te.event
+        else {
+            out.push(te.clone());
+            continue;
+        };
+        let mut rng = Rng::new(0xD3B1_0C ^ seed.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        for i in 0..*count {
+            let at = te.at + i * every;
+            let bi = rng.below(world.k());
+            let mult = 0.5 + 1.5 * rng.f64();
+            let quality = 0.35 + 0.6 * rng.f64();
+            if at >= total {
+                // keep drawing order stable, drop the off-run tail
+                continue;
+            }
+            let ws = &world.models[bi];
+            let name = format!("{}@s{ordinal}", ws.name);
+            ordinal += 1;
+            out.push(TimedEvent {
+                at,
+                event: Event::OfferModel {
+                    model: name.clone(),
+                    price_in: Some(ws.price_in_per_m * mult),
+                    price_out: Some(ws.price_out_per_m * mult),
+                    quality: Some(quality),
+                },
+            });
+            if let Some(exp) = expire_after {
+                let ex = at + exp;
+                if ex < total {
+                    out.push(TimedEvent {
+                        at: ex,
+                        event: Event::ExpireModel { model: name },
+                    });
+                }
+            }
+        }
+    }
+    out.sort_by_key(|e| e.at); // stable: offers keep arrival order per step
+    Ok(out)
+}
+
+/// Execute the manager's registry actions against an in-process host.
+fn exec_deploy_actions(
+    mgr: &mut SlotManager,
+    actions: Vec<DeployAction>,
+    router: &mut PolicyHost,
+) {
+    for a in actions {
+        match a {
+            DeployAction::Deploy(c) => {
+                match router.try_add_model(
+                    &c.name,
+                    c.price_in,
+                    c.price_out,
+                    Some((DEPLOY_PRIOR_N_EFF, c.quality)),
+                ) {
+                    Some(slot) => mgr.note_deployed(&c.name, slot),
+                    None => mgr.deploy_failed(&c.name),
+                }
+            }
+            DeployAction::Evict { slot, .. } => {
+                router.delete_model(slot);
+            }
+        }
+    }
 }
 
 /// Environment-side multiplier for a `set_price` event: explicit `mult`,
@@ -181,12 +316,15 @@ fn price_mult(world: &World, wi: usize, mult: Option<f64>, pi: Option<f64>, po: 
 
 /// Apply one engine-side event to an in-process hosted policy (+ the env
 /// view).
+#[allow(clippy::too_many_arguments)]
 fn apply_in_process(
     ev: &Event,
     world: &World,
     view: &mut EnvView,
     router: &mut PolicyHost,
     last_snapshot: &mut Option<Json>,
+    deploy: &mut Option<SlotManager>,
+    cand_blend: &mut HashMap<String, f64>,
     opts: &RunOptions,
 ) -> Result<(), String> {
     match ev {
@@ -278,6 +416,45 @@ fn apply_in_process(
             };
             router.restore_state(&st)
         }
+        Event::OfferModel {
+            model,
+            price_in,
+            price_out,
+            quality,
+        } => {
+            let mgr = deploy
+                .as_mut()
+                .ok_or("offer_model: the spec names no deploy policy")?;
+            let (pi, po) = match (price_in, price_out) {
+                (Some(pi), Some(po)) => (*pi, *po),
+                _ => {
+                    let wi = world_base_index(world, model)
+                        .map_err(|e| format!("offer_model: {e}"))?;
+                    (world.models[wi].price_in_per_m, world.models[wi].price_out_per_m)
+                }
+            };
+            cand_blend.insert(model.clone(), (pi + po) / 2.0 / 1000.0);
+            mgr.offer(model, pi, po, *quality);
+            Ok(())
+        }
+        Event::ExpireModel { model } => {
+            let mgr = deploy
+                .as_mut()
+                .ok_or("expire_model: the spec names no deploy policy")?;
+            let actions = mgr.expire(model);
+            exec_deploy_actions(mgr, actions, router);
+            Ok(())
+        }
+        Event::SetSlots { k } => {
+            let mgr = deploy
+                .as_mut()
+                .ok_or("set_slots: the spec names no deploy policy")?;
+            mgr.set_slots(*k);
+            Ok(())
+        }
+        Event::StreamInventory { .. } => {
+            Err("stream_inventory must be expanded before execution".to_string())
+        }
         Event::TrafficMix { .. } => Ok(()), // consumed by the planner
     }
 }
@@ -293,6 +470,7 @@ fn apply_wire(
     world: &World,
     view: &mut EnvView,
     client: &mut ParetoClient,
+    cand_blend: &mut HashMap<String, f64>,
     opts: &RunOptions,
 ) -> Result<(), String> {
     match ev {
@@ -351,6 +529,29 @@ fn apply_wire(
             Some(p) => wire(client.restore(p)),
             None => Err("restart: a wire-driven restart needs a path".to_string()),
         },
+        Event::OfferModel {
+            model,
+            price_in,
+            price_out,
+            quality,
+        } => {
+            // the engine cannot see the simulator: offers always carry
+            // resolved prices over the wire
+            let (pi, po) = match (price_in, price_out) {
+                (Some(pi), Some(po)) => (*pi, *po),
+                _ => {
+                    let wi = world_base_index(world, model)
+                        .map_err(|e| format!("offer_model: {e}"))?;
+                    (world.models[wi].price_in_per_m, world.models[wi].price_out_per_m)
+                }
+            };
+            cand_blend.insert(model.clone(), (pi + po) / 2.0 / 1000.0);
+            wire(client.offer_model(model, pi, po, *quality))
+        }
+        Event::ExpireModel { .. } | Event::SetSlots { .. } => wire(client.inject(ev)),
+        Event::StreamInventory { .. } => {
+            Err("stream_inventory must be expanded before execution".to_string())
+        }
         Event::TrafficMix { .. } => Ok(()),
     }
 }
@@ -369,11 +570,20 @@ pub fn run_scenario(
     opts: &RunOptions,
 ) -> Result<ScenarioRun, String> {
     let segments = plan_segments(spec, env, opts.seed)?;
+    let total: u64 = segments.iter().map(|s| s.len() as u64).sum();
+    let events = expand_events(spec, world, total)?;
+    let mut deploy: Option<SlotManager> = match &spec.deploy {
+        Some(d) => Some(
+            build_deploy(d, spec.slots).map_err(|e| format!("spec '{}': {e}", spec.name))?,
+        ),
+        None => None,
+    };
+    let mut cand_blend: HashMap<String, f64> = HashMap::new();
     let mut view = EnvView::normal(world.k());
     let mut last_snapshot: Option<Json> = None;
     let mut event_log = Vec::new();
     let mut phases = Vec::with_capacity(segments.len());
-    let mut pending: &[TimedEvent] = &spec.events;
+    let mut pending: &[TimedEvent] = &events;
     let mut t = 0u64;
     for seg in &segments {
         let mut log = Vec::with_capacity(seg.len());
@@ -382,8 +592,17 @@ pub fn run_scenario(
                 if te.at > t {
                     break;
                 }
-                apply_in_process(&te.event, world, &mut view, router, &mut last_snapshot, opts)
-                    .map_err(|e| format!("spec '{}' t={}: {e}", spec.name, te.at))?;
+                apply_in_process(
+                    &te.event,
+                    world,
+                    &mut view,
+                    router,
+                    &mut last_snapshot,
+                    &mut deploy,
+                    &mut cand_blend,
+                    opts,
+                )
+                .map_err(|e| format!("spec '{}' t={}: {e}", spec.name, te.at))?;
                 event_log.push(format!("t={} {}", te.at, te.event));
                 pending = &pending[1..];
             }
@@ -397,7 +616,7 @@ pub fn run_scenario(
                 .ok_or_else(|| format!("t={t}: routed to retired slot {}", d.arm))?;
             let wm = world_model_of(world, &name).map_err(|e| format!("t={t}: {e}"))?;
             let reward = world.reward_view(p, wm, &view);
-            let cost = world.cost_view(p, wm, &view);
+            let cost = judged_cost(world, p, wm, &view, &name, &cand_blend);
             router.feedback(d.arm, x, reward, cost);
             log.push(StepLog {
                 prompt: pid,
@@ -406,12 +625,28 @@ pub fn run_scenario(
                 cost,
                 lambda: router.lambda(),
             });
+            // the deployment layer ticks once per step, after feedback:
+            // offers pooled at step t reach the registry before step t+1
+            if let Some(mgr) = deploy.as_mut() {
+                mgr.record_stats(router.slot_stats());
+                let actions = mgr.tick();
+                exec_deploy_actions(mgr, actions, router);
+            }
             t += 1;
         }
         phases.push(log);
     }
     apply_trailing_events(spec, &mut pending, t, &mut event_log, |ev| {
-        apply_in_process(ev, world, &mut view, router, &mut last_snapshot, opts)
+        apply_in_process(
+            ev,
+            world,
+            &mut view,
+            router,
+            &mut last_snapshot,
+            &mut deploy,
+            &mut cand_blend,
+            opts,
+        )
     })?;
     Ok(ScenarioRun { phases, event_log })
 }
@@ -455,10 +690,13 @@ pub fn run_scenario_wire(
     opts: &RunOptions,
 ) -> Result<ScenarioRun, String> {
     let segments = plan_segments(spec, env, opts.seed)?;
+    let total: u64 = segments.iter().map(|s| s.len() as u64).sum();
+    let events = expand_events(spec, world, total)?;
+    let mut cand_blend: HashMap<String, f64> = HashMap::new();
     let mut view = EnvView::normal(world.k());
     let mut event_log = Vec::new();
     let mut phases = Vec::with_capacity(segments.len());
-    let mut pending: &[TimedEvent] = &spec.events;
+    let mut pending: &[TimedEvent] = &events;
     let mut t = 0u64;
     for seg in &segments {
         let mut log = Vec::with_capacity(seg.len());
@@ -467,7 +705,7 @@ pub fn run_scenario_wire(
                 if te.at > t {
                     break;
                 }
-                apply_wire(&te.event, world, &mut view, client, opts)
+                apply_wire(&te.event, world, &mut view, client, &mut cand_blend, opts)
                     .map_err(|e| format!("spec '{}' t={}: {e}", spec.name, te.at))?;
                 event_log.push(format!("t={} {}", te.at, te.event));
                 pending = &pending[1..];
@@ -480,7 +718,7 @@ pub fn run_scenario_wire(
             // after hot-swap churn the two disagree
             let wm = world_model_of(world, &routed.model).map_err(|e| format!("t={t}: {e}"))?;
             let reward = world.reward_view(p, wm, &view);
-            let cost = world.cost_view(p, wm, &view);
+            let cost = judged_cost(world, p, wm, &view, &routed.model, &cand_blend);
             client
                 .feedback(t, reward, cost)
                 .map_err(|e| format!("feedback t={t}: {e}"))?;
@@ -496,7 +734,7 @@ pub fn run_scenario_wire(
         phases.push(log);
     }
     apply_trailing_events(spec, &mut pending, t, &mut event_log, |ev| {
-        apply_wire(ev, world, &mut view, client, opts)
+        apply_wire(ev, world, &mut view, client, &mut cand_blend, opts)
     })?;
     Ok(ScenarioRun { phases, event_log })
 }
@@ -762,6 +1000,83 @@ model = "mistral-large"
         .unwrap_err();
         assert!(e.contains("already active"), "{e}");
         assert!(e.contains("t=50"), "{e}");
+    }
+
+    #[test]
+    fn streaming_inventory_respects_the_slot_cap_and_replays_identically() {
+        let env = ExpEnv::load(FlashScenario::GoodCheap);
+        let spec = ScenarioSpec::from_toml(
+            r#"
+[scenario]
+name = "stream-mini"
+steps = 160
+k = 3
+deploy = "ucb:16"
+slots = 2
+
+[[event]]
+at = 0
+op = "stream_inventory"
+count = 12
+every = 8
+expire_after = 48
+seed = 7
+"#,
+        )
+        .unwrap();
+        let opts = RunOptions {
+            seed: 9,
+            reprice_router: false,
+        };
+        let mut r1 = router(&env, 3, 6.6e-4, 9);
+        let mut r2 = router(&env, 3, 6.6e-4, 9);
+        let a = run_scenario(&spec, &env, &env.world, &mut r1, &opts).unwrap();
+        let b = run_scenario(&spec, &env, &env.world, &mut r2, &opts).unwrap();
+        assert_eq!(a.event_log, b.event_log, "expansion must be seed-stable");
+        assert_eq!(a.phases, b.phases, "streaming runs must replay bit-identically");
+        // the generator expanded into synthesized offers and expires
+        assert!(a.event_log.iter().any(|l| l.contains("offer_model")));
+        assert!(a.event_log.iter().any(|l| l.contains("expire_model")));
+        // manager-deployed candidates never exceed the 2-slot cap on top
+        // of the 3-model initial portfolio
+        let active = r1.registry().n_active();
+        assert!(active <= 5, "slot cap breached: {active} active");
+        // churn happened: candidates were deployed onto fresh slots
+        assert!(r1.registry().n_slots() > 3, "no candidate was ever deployed");
+    }
+
+    #[test]
+    fn deploy_verbs_without_a_deploy_policy_are_an_error() {
+        let env = ExpEnv::load(FlashScenario::GoodCheap);
+        let spec = ScenarioSpec::from_toml(
+            r#"
+[scenario]
+name = "no-deploy"
+steps = 40
+k = 3
+
+[[event]]
+at = 10
+op = "offer_model"
+model = "mistral-large@s0"
+price_in = 0.4
+price_out = 1.6
+"#,
+        )
+        .unwrap();
+        let mut r = router(&env, 3, 6.6e-4, 2);
+        let e = run_scenario(
+            &spec,
+            &env,
+            &env.world,
+            &mut r,
+            &RunOptions {
+                seed: 2,
+                reprice_router: false,
+            },
+        )
+        .unwrap_err();
+        assert!(e.contains("no deploy policy"), "{e}");
     }
 
     #[test]

@@ -26,8 +26,11 @@
 //!
 //! Event verbs (the `op` field): `set_price`, `degrade_quality`,
 //! `add_model`, `remove_model`, `set_budget`, `traffic_mix`, `snapshot`,
-//! `restart`.  See `docs/scenarios.md` for the full schema reference and
-//! the annotated exp2/exp3/exp4 ports.
+//! `restart`, and — for specs that name a `deploy` policy — the
+//! streaming-inventory verbs `offer_model`, `expire_model`, `set_slots`
+//! and the plan-time generator `stream_inventory`.  See
+//! `docs/scenarios.md` for the full schema reference and the annotated
+//! exp2/exp3/exp4 ports.
 
 use std::path::{Path, PathBuf};
 
@@ -90,6 +93,32 @@ pub enum Event {
     /// Warm-restart the router from `path` (or the last in-memory
     /// snapshot when omitted).
     Restart { path: Option<String> },
+    /// Offer a candidate model to the deployment layer (streaming
+    /// inventory; needs a `deploy` policy in the spec or on the server).
+    /// Prices default to the world bank's list prices for the candidate's
+    /// base model; a wire host always injects them explicitly.
+    OfferModel {
+        model: String,
+        price_in: Option<f64>,
+        price_out: Option<f64>,
+        /// prior quality hint in [0,1]
+        quality: Option<f64>,
+    },
+    /// Withdraw a candidate: dropped from the pool, or evicted from its
+    /// slot if deployed.  Unknown names are a no-op.
+    ExpireModel { model: String },
+    /// Resize the deployment slot cap at runtime.
+    SetSlots { k: usize },
+    /// Generator verb: expands at plan time into `count` seeded
+    /// `offer_model` events (and matching `expire_model` events when
+    /// `expire_after` is set) spaced `every` steps starting at this
+    /// event's `at`.  Never travels the wire.
+    StreamInventory {
+        count: u64,
+        every: u64,
+        expire_after: Option<u64>,
+        seed: u64,
+    },
 }
 
 impl Event {
@@ -104,6 +133,10 @@ impl Event {
             Event::TrafficMix { .. } => "traffic_mix",
             Event::Snapshot { .. } => "snapshot",
             Event::Restart { .. } => "restart",
+            Event::OfferModel { .. } => "offer_model",
+            Event::ExpireModel { .. } => "expire_model",
+            Event::SetSlots { .. } => "set_slots",
+            Event::StreamInventory { .. } => "stream_inventory",
         }
     }
 
@@ -180,6 +213,59 @@ impl Event {
             }
             "snapshot" => Ok(Event::Snapshot { path: s("path") }),
             "restart" => Ok(Event::Restart { path: s("path") }),
+            "offer_model" => {
+                let quality = f("quality");
+                if let Some(q) = quality {
+                    if !(0.0..=1.0).contains(&q) {
+                        return Err("offer_model: quality must be in [0,1]".to_string());
+                    }
+                }
+                let (price_in, price_out) = (f("price_in"), f("price_out"));
+                if price_in.is_some() != price_out.is_some() {
+                    return Err(
+                        "offer_model: price_in and price_out must be given together".to_string()
+                    );
+                }
+                Ok(Event::OfferModel {
+                    model: model(op)?,
+                    price_in,
+                    price_out,
+                    quality,
+                })
+            }
+            "expire_model" => Ok(Event::ExpireModel { model: model(op)? }),
+            "set_slots" => {
+                let k = match f("k") {
+                    Some(x) if x >= 1.0 && x.fract() == 0.0 => x as usize,
+                    _ => return Err("set_slots: k must be a positive integer".to_string()),
+                };
+                Ok(Event::SetSlots { k })
+            }
+            "stream_inventory" => {
+                let u = |k: &str, default: Option<u64>| -> Result<Option<u64>, String> {
+                    match j.get(k) {
+                        None => Ok(default),
+                        Some(v) => match v.as_f64() {
+                            Some(x) if x >= 0.0 && x.fract() == 0.0 => Ok(Some(x as u64)),
+                            _ => Err(format!(
+                                "stream_inventory: {k} must be a non-negative integer"
+                            )),
+                        },
+                    }
+                };
+                let count = u("count", None)?
+                    .ok_or("stream_inventory: missing count")?;
+                if count == 0 {
+                    return Err("stream_inventory: count must be >= 1".to_string());
+                }
+                let every = u("every", Some(8))?.unwrap_or(8).max(1);
+                Ok(Event::StreamInventory {
+                    count,
+                    every,
+                    expire_after: u("expire_after", None)?,
+                    seed: u("seed", Some(0))?.unwrap_or(0),
+                })
+            }
             other => Err(format!("unknown event op '{other}'")),
         }
     }
@@ -236,6 +322,30 @@ impl Event {
                     fields.push(("path", Json::Str(p.clone())));
                 }
             }
+            Event::OfferModel {
+                model,
+                price_in,
+                price_out,
+                quality,
+            } => {
+                opt_f(&mut fields, "price_in", *price_in);
+                opt_f(&mut fields, "price_out", *price_out);
+                opt_f(&mut fields, "quality", *quality);
+                fields.push(("model", Json::Str(model.clone())));
+            }
+            Event::ExpireModel { model } => fields.push(("model", Json::Str(model.clone()))),
+            Event::SetSlots { k } => fields.push(("k", Json::Num(*k as f64))),
+            Event::StreamInventory {
+                count,
+                every,
+                expire_after,
+                seed,
+            } => {
+                fields.push(("count", Json::Num(*count as f64)));
+                fields.push(("every", Json::Num(*every as f64)));
+                opt_f(&mut fields, "expire_after", expire_after.map(|x| x as f64));
+                fields.push(("seed", Json::Num(*seed as f64)));
+            }
         }
         Json::obj(fields)
     }
@@ -275,6 +385,12 @@ pub struct ScenarioSpec {
     pub stream_seed: u64,
     /// seed offset for replayed-segment reshuffles
     pub replay_salt: u64,
+    /// deployment policy spec (`fifo` / `greedy[:n]` / `ucb[:w]`, a
+    /// `crate::deploy` builder key); `None` = no deployment layer, and
+    /// the streaming-inventory verbs are rejected at run start
+    pub deploy: Option<String>,
+    /// deployment slot cap K (only meaningful with `deploy`)
+    pub slots: usize,
     /// timeline, stably sorted by `at`
     pub events: Vec<TimedEvent>,
 }
@@ -314,6 +430,13 @@ impl ScenarioSpec {
                 _ => return Err("spec: policy must be a non-empty string".to_string()),
             },
         };
+        let deploy = match sc.get("deploy") {
+            None => None,
+            Some(v) => match v.as_str() {
+                Some(p) if !p.is_empty() => Some(p.to_string()),
+                _ => return Err("spec: deploy must be a non-empty string".to_string()),
+            },
+        };
         let mut events = Vec::new();
         if let Some(arr) = j.get("event").and_then(Json::as_arr) {
             for (i, ev) in arr.iter().enumerate() {
@@ -340,6 +463,8 @@ impl ScenarioSpec {
             policy,
             stream_seed: get_u("stream_seed", 9000)?,
             replay_salt: get_u("replay_salt", 0)?,
+            deploy,
+            slots: get_u("slots", 3)? as usize,
             events,
         })
     }
@@ -464,6 +589,34 @@ phase = 0
                 path: Some("/tmp/s.json".into()),
             },
             Event::Restart { path: None },
+            Event::OfferModel {
+                model: "nova@s1".into(),
+                price_in: Some(0.3),
+                price_out: Some(1.2),
+                quality: Some(0.7),
+            },
+            Event::OfferModel {
+                model: "nova@s2".into(),
+                price_in: None,
+                price_out: None,
+                quality: None,
+            },
+            Event::ExpireModel {
+                model: "nova@s1".into(),
+            },
+            Event::SetSlots { k: 4 },
+            Event::StreamInventory {
+                count: 200,
+                every: 8,
+                expire_after: Some(400),
+                seed: 7,
+            },
+            Event::StreamInventory {
+                count: 5,
+                every: 1,
+                expire_after: None,
+                seed: 0,
+            },
         ];
         for ev in evs {
             let back = Event::from_json(&ev.to_json()).unwrap();
@@ -482,6 +635,13 @@ phase = 0
             r#"{"op":"traffic_mix","stream":"nope"}"#,
             r#"{"op":"warp_reality"}"#,
             r#"{"no_op":1}"#,
+            r#"{"op":"offer_model","model":"m","quality":1.5}"#,
+            r#"{"op":"offer_model","model":"m","price_in":0.5}"#,
+            r#"{"op":"offer_model","price_in":0.5,"price_out":1.0}"#,
+            r#"{"op":"set_slots"}"#,
+            r#"{"op":"set_slots","k":0}"#,
+            r#"{"op":"stream_inventory"}"#,
+            r#"{"op":"stream_inventory","count":0}"#,
         ] {
             let j = Json::parse(bad).unwrap();
             assert!(Event::from_json(&j).is_err(), "{bad}");
@@ -512,6 +672,22 @@ phase = 0
         assert_eq!(spec.policy, None);
         let e = ScenarioSpec::from_toml("[scenario]\nname = \"p\"\npolicy = 3\n").unwrap_err();
         assert!(e.contains("policy"), "{e}");
+    }
+
+    #[test]
+    fn deploy_key_and_slots_parse() {
+        let spec = ScenarioSpec::from_toml(
+            "[scenario]\nname = \"d\"\nsteps = 10\ndeploy = \"ucb:32\"\nslots = 2\n",
+        )
+        .unwrap();
+        assert_eq!(spec.deploy.as_deref(), Some("ucb:32"));
+        assert_eq!(spec.slots, 2);
+        let spec = ScenarioSpec::from_toml("[scenario]\nname = \"d\"\n").unwrap();
+        assert_eq!(spec.deploy, None);
+        assert_eq!(spec.slots, 3, "slots defaults to 3");
+        let e =
+            ScenarioSpec::from_toml("[scenario]\nname = \"d\"\ndeploy = 7\n").unwrap_err();
+        assert!(e.contains("deploy"), "{e}");
     }
 
     #[test]

@@ -44,6 +44,7 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::deploy::{DeployAction, SlotManager, DEPLOY_PRIOR_N_EFF};
 use crate::log::{AdminOp, LogWriter};
 use crate::router::{
     build_policy, BuildCtx, ContextCache, FeedbackEvent, FeedbackQueue, ModelRef, ParetoRouter,
@@ -149,6 +150,10 @@ pub struct ServerState {
     pub shadows: Vec<Shadow>,
     /// append-only decision log (`serve --log-dir`); `None` = no capture
     pub log: Option<LogWriter>,
+    /// deployment layer (`serve --deploy`); `None` rejects the deploy
+    /// verbs with `bad_request`.  On the sharded engine the manager
+    /// lives in the merger, not per shard — this stays `None` there.
+    pub deploy: Option<SlotManager>,
     shadow_pending: ShadowPending,
 }
 
@@ -185,6 +190,7 @@ impl ServerState {
             queue: None,
             shadows: Vec::new(),
             log: None,
+            deploy: None,
             shadow_pending: ShadowPending::new(SHADOW_PENDING_CAP),
         }
     }
@@ -399,6 +405,17 @@ impl ServerState {
                 },
                 false,
             ),
+            Request::OfferModel {
+                id,
+                name,
+                price_in,
+                price_out,
+                quality,
+            } => (
+                self.op_offer_model(*id, name, *price_in, *price_out, *quality),
+                false,
+            ),
+            Request::DeployStatus { id } => (self.op_deploy_status(*id), false),
             Request::Sync { id } => (self.op_sync(*id), false),
             Request::Shutdown { id } => (Response::Shutdown { id: *id }, true),
         }
@@ -602,13 +619,16 @@ impl ServerState {
         self.log_feedback(it, p.arm, queued);
         match self.queue.as_mut() {
             // sharded mode: queue the reward for the batched merge cycle,
-            // but pay the cost to the (shared) pacer right now
+            // but pay the cost to the (shared) pacer right now.  Slot
+            // outcome stats record at arrival so the deployment layer
+            // sees realised rewards without waiting for the merge fold.
             Some(q) => {
                 q.push(FeedbackEvent {
                     arm: p.arm,
                     context: p.context,
                     reward: it.reward,
                 });
+                self.host.note_result(p.arm, it.reward, it.cost);
                 self.host.observe_cost(it.cost);
             }
             None => self.host.feedback(p.arm, &p.context, it.reward, it.cost),
@@ -716,6 +736,103 @@ impl ServerState {
         }
     }
 
+    /// No-deploy rejection shared by every deploy verb: the verbs only
+    /// make sense against a server started with `serve --deploy`.
+    fn no_deploy(verb: &str, id: Option<u64>) -> Response {
+        Response::err(
+            ErrorCode::BadRequest,
+            format!("{verb}: no deployment policy configured (start with serve --deploy <policy>)"),
+            id,
+        )
+    }
+
+    /// `offer_model`: hand a candidate to the deployment layer's pool.
+    /// The policy — not the caller — decides if/when it occupies a slot;
+    /// the manager ticks immediately so a free slot is filled in the
+    /// same call.
+    fn op_offer_model(
+        &mut self,
+        id: Option<u64>,
+        name: &str,
+        price_in: f64,
+        price_out: f64,
+        quality: Option<f64>,
+    ) -> Response {
+        let Some(mgr) = self.deploy.as_mut() else {
+            return Self::no_deploy("offer_model", id);
+        };
+        mgr.offer(name, price_in, price_out, quality);
+        self.deploy_tick();
+        let (pooled, deployed) = self
+            .deploy
+            .as_ref()
+            .map_or((0, 0), |m| (m.pool_len(), m.deployed_slots().len()));
+        Response::Offer {
+            id,
+            name: name.to_string(),
+            pooled,
+            deployed,
+        }
+    }
+
+    /// `deploy_status`: the deployment layer's occupancy report.
+    fn op_deploy_status(&mut self, id: Option<u64>) -> Response {
+        match self.deploy.as_ref() {
+            Some(m) => Response::DeployStatus {
+                id,
+                status: m.status(),
+            },
+            None => Self::no_deploy("deploy_status", id),
+        }
+    }
+
+    /// Advance the deployment layer one step: feed it the latest
+    /// per-slot outcome stats, let the policy decide, and execute the
+    /// resulting actions as ordinary add/delete admin ops (so shadows,
+    /// decision logs and replay see plain portfolio churn).  No-op
+    /// without a manager.
+    pub(crate) fn deploy_tick(&mut self) {
+        let Some(mut mgr) = self.deploy.take() else {
+            return;
+        };
+        mgr.record_stats(self.host.slot_stats());
+        let actions = mgr.tick();
+        self.exec_deploy_actions(&mut mgr, actions);
+        self.deploy = Some(mgr);
+    }
+
+    /// Execute deployment actions against this worker's own registry.
+    /// The manager is passed in (taken out of `self`) because execution
+    /// reuses the ordinary admin handlers on `&mut self`.
+    fn exec_deploy_actions(&mut self, mgr: &mut SlotManager, actions: Vec<DeployAction>) {
+        for a in actions {
+            match a {
+                DeployAction::Deploy(c) => {
+                    let resp = self.op_add_model(
+                        None,
+                        &c.name,
+                        c.price_in,
+                        c.price_out,
+                        Some((DEPLOY_PRIOR_N_EFF, c.quality)),
+                    );
+                    match resp {
+                        Response::AddModel { arm, .. } => {
+                            mgr.note_deployed(&c.name, arm);
+                            self.metrics.record_deploy();
+                        }
+                        _ => mgr.deploy_failed(&c.name),
+                    }
+                }
+                DeployAction::Evict { slot, .. } => {
+                    let resp = self.op_delete_model(None, &ModelRef::Arm(slot));
+                    if matches!(resp, Response::DeleteModel { .. }) {
+                        self.metrics.record_eviction();
+                    }
+                }
+            }
+        }
+    }
+
     /// `inject`: apply one scenario event by mapping it onto the
     /// matching admin op, so an operator (or the scenario engine's wire
     /// host) drives live drift with the same event objects a spec file
@@ -786,6 +903,46 @@ impl ServerState {
                     id,
                 ),
             },
+            Event::OfferModel {
+                model,
+                price_in,
+                price_out,
+                quality,
+            } => match (price_in, price_out) {
+                (Some(pi), Some(po)) => self.op_offer_model(id, model, *pi, *po, *quality),
+                _ => Response::err(
+                    ErrorCode::BadRequest,
+                    "inject: offer_model needs explicit price_in/price_out over the wire",
+                    id,
+                ),
+            },
+            Event::ExpireModel { model } => {
+                let Some(mut mgr) = self.deploy.take() else {
+                    return Self::no_deploy("expire_model", id);
+                };
+                let actions = mgr.expire(model);
+                self.exec_deploy_actions(&mut mgr, actions);
+                self.deploy = Some(mgr);
+                // an expire can free a slot: refill in the same call
+                self.deploy_tick();
+                self.op_deploy_status(id)
+            }
+            Event::SetSlots { k } => {
+                match self.deploy.as_mut() {
+                    Some(m) => m.set_slots(*k),
+                    None => return Self::no_deploy("set_slots", id),
+                }
+                // shrink evicts / growth refills on the next tick — take
+                // it now so the answered status reflects the new cap
+                self.deploy_tick();
+                self.op_deploy_status(id)
+            }
+            Event::StreamInventory { .. } => Response::err(
+                ErrorCode::BadRequest,
+                "inject: stream_inventory is a plan-time generator (expand it \
+                 into offer_model/expire_model events client-side)",
+                id,
+            ),
             // guarded by the is_env_side() early-return above; a typed
             // error keeps a future guard regression from killing the shard
             Event::DegradeQuality { .. } | Event::TrafficMix { .. } => Response::err(
@@ -802,7 +959,13 @@ impl ServerState {
     /// the file holds the post-merge *global* posterior.
     fn op_snapshot(&mut self, id: Option<u64>, path: &str) -> Response {
         self.apply_queued();
-        let st = self.host.export_state();
+        let mut st = self.host.export_state();
+        // the deployment layer rides inside the router snapshot: restore
+        // rebuilds pool + slot occupancy alongside the posterior, so a
+        // warm restart resumes the stream mid-churn bit-identically
+        if let (Json::Obj(map), Some(m)) = (&mut st, self.deploy.as_ref()) {
+            map.insert("deploy".into(), m.export_state());
+        }
         match snapshot::save_value(Path::new(path), Some(self.host.kind()), &st) {
             Ok(()) => Response::Snapshot {
                 id,
@@ -856,6 +1019,15 @@ impl ServerState {
                 if self.shard != 0 {
                     self.host.fork_rng(self.shard as u64);
                 }
+                // best-effort deployment-layer restore: a snapshot from a
+                // deploy-less server (or a different deploy policy) keeps
+                // the current manager fresh rather than failing the
+                // router restore that already succeeded
+                if let (Some(m), Some(d)) = (self.deploy.as_mut(), st.get("deploy")) {
+                    if let Err(e) = m.restore_state(d) {
+                        let _ = e; // kind mismatch: start the manager cold
+                    }
+                }
                 self.cache.clear();
                 self.shadow_pending.clear();
                 if let Some(q) = self.queue.as_mut() {
@@ -881,6 +1053,10 @@ impl ServerState {
     /// drive `sync` work against both deployments.
     fn op_sync(&mut self, id: Option<u64>) -> Response {
         self.apply_queued();
+        // the single worker has no merge cycle to ride: `sync` doubles as
+        // the deployment layer's clock (mirrors the engine, where every
+        // merge cycle ticks the manager)
+        self.deploy_tick();
         Response::Sync {
             id,
             synced_shards: 1,
@@ -1287,6 +1463,125 @@ mod tests {
         // parse errors echo the id so pipelined clients stay correlated
         let e = Request::parse(&Json::parse(r#"{"op":"route","id":31}"#).unwrap()).unwrap_err();
         assert_eq!(e.id, Some(31));
+    }
+
+    #[test]
+    fn deploy_verbs_without_a_manager_are_bad_request() {
+        let mut st = state();
+        let (resp, _) = st.handle(&req(
+            r#"{"op":"offer_model","id":1,"name":"nova","price_in":0.2,"price_out":0.8}"#,
+        ));
+        assert_eq!(code_of(&resp), Some(ErrorCode::BadRequest));
+        let Response::Error(e) = &resp else { unreachable!() };
+        assert!(e.msg.contains("no deployment policy"), "{}", e.msg);
+        let (resp, _) = st.handle(&req(r#"{"op":"deploy_status"}"#));
+        assert_eq!(code_of(&resp), Some(ErrorCode::BadRequest));
+        let (resp, _) = st.handle(&req(
+            r#"{"op":"inject","event":{"op":"expire_model","model":"nova"}}"#,
+        ));
+        assert_eq!(code_of(&resp), Some(ErrorCode::BadRequest));
+    }
+
+    #[test]
+    fn offer_model_deploys_through_the_registry_and_status_reports_it() {
+        let mut st = state();
+        st.deploy = Some(crate::deploy::build_deploy("fifo", 2).unwrap());
+        // two free slots: the first two offers deploy immediately
+        let (resp, _) = st.handle(&req(
+            r#"{"op":"offer_model","id":1,"name":"nova","price_in":0.2,"price_out":0.8,"quality":0.9}"#,
+        ));
+        let Response::Offer { pooled, deployed, .. } = resp else {
+            panic!("offer failed: {resp:?}")
+        };
+        assert_eq!((pooled, deployed), (0, 1));
+        assert_eq!(st.host.registry().find("nova"), Some(2));
+        st.handle(&req(
+            r#"{"op":"offer_model","name":"m2","price_in":1.0,"price_out":1.0}"#,
+        ));
+        // cap reached: the third offer pools (fifo never swaps)
+        let (resp, _) = st.handle(&req(
+            r#"{"op":"offer_model","name":"m3","price_in":1.0,"price_out":1.0}"#,
+        ));
+        let Response::Offer { pooled, deployed, .. } = resp else {
+            panic!("offer failed: {resp:?}")
+        };
+        assert_eq!((pooled, deployed), (1, 2));
+        let (resp, _) = st.handle(&req(r#"{"op":"deploy_status","id":9}"#));
+        let j = resp.to_json();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("id").unwrap().as_f64(), Some(9.0));
+        assert_eq!(j.get("policy").unwrap().as_str(), Some("fifo"));
+        assert_eq!(j.get("deployed").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("pool").unwrap().as_f64(), Some(1.0));
+        // expiring a deployed model frees its slot; the pooled candidate
+        // takes it in the same call
+        let (resp, _) = st.handle(&req(
+            r#"{"op":"inject","id":4,"event":{"op":"expire_model","model":"nova"}}"#,
+        ));
+        let j = resp.to_json();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert!(!st.host.registry().is_active(2), "nova must be retired");
+        assert_eq!(st.host.registry().find("m3"), Some(3));
+        assert_eq!(j.get("deployed").unwrap().as_arr().unwrap().len(), 2);
+        // shrinking the cap evicts down to k in the same call
+        let (resp, _) = st.handle(&req(
+            r#"{"op":"inject","event":{"op":"set_slots","k":1}}"#,
+        ));
+        let j = resp.to_json();
+        assert_eq!(j.get("deployed").unwrap().as_arr().unwrap().len(), 1);
+        // generator events never travel the wire
+        let (resp, _) = st.handle(&req(
+            r#"{"op":"inject","event":{"op":"stream_inventory","count":5}}"#,
+        ));
+        assert_eq!(code_of(&resp), Some(ErrorCode::BadRequest));
+        // churn counters surfaced in the metrics snapshot
+        let (m, _) = st.handle(&req(r#"{"op":"metrics"}"#));
+        let m = m.to_json();
+        assert_eq!(m.get("deploys").unwrap().as_f64(), Some(3.0));
+        assert!(m.get("evictions").unwrap().as_f64().unwrap() >= 2.0);
+    }
+
+    #[test]
+    fn snapshot_carries_the_deployment_layer_state() {
+        let mut st = state();
+        st.deploy = Some(crate::deploy::build_deploy("greedy", 1).unwrap());
+        st.handle(&req(
+            r#"{"op":"offer_model","name":"nova","price_in":0.2,"price_out":0.8,"quality":0.9}"#,
+        ));
+        st.handle(&req(
+            r#"{"op":"offer_model","name":"spare","price_in":1.0,"price_out":1.0,"quality":0.1}"#,
+        ));
+        let dir = std::env::temp_dir().join(format!("pb_api_dep_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("deploy.snap.json");
+        let line = format!(r#"{{"op":"snapshot","path":"{}"}}"#, path.display());
+        let (resp, _) = st.handle(&req(&line));
+        assert!(resp.is_ok(), "{resp:?}");
+        // a fresh server with a fresh manager of the same spec resumes
+        // the stream: slot occupancy and pool come back
+        let mut back = state();
+        back.deploy = Some(crate::deploy::build_deploy("greedy", 1).unwrap());
+        let line = format!(r#"{{"op":"restore","path":"{}"}}"#, path.display());
+        let (resp, _) = back.handle(&req(&line));
+        assert!(resp.is_ok(), "{resp:?}");
+        let m = back.deploy.as_ref().unwrap();
+        assert_eq!(m.occupied(), 1);
+        assert_eq!(m.pool_len(), 1);
+        assert_eq!(m.deployed_slots()[0].name, "nova");
+        assert_eq!(
+            m.export_state().to_string(),
+            st.deploy.as_ref().unwrap().export_state().to_string(),
+            "deployment state must restore bit-identically"
+        );
+        // a manager of a different spec refuses the embedded state and
+        // starts cold instead of failing the router restore
+        let mut cold = state();
+        cold.deploy = Some(crate::deploy::build_deploy("ucb:8", 2).unwrap());
+        let line = format!(r#"{{"op":"restore","path":"{}"}}"#, path.display());
+        let (resp, _) = cold.handle(&req(&line));
+        assert!(resp.is_ok(), "{resp:?}");
+        assert_eq!(cold.deploy.as_ref().unwrap().occupied(), 0);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

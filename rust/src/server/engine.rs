@@ -57,7 +57,8 @@ use super::api::{Job, Reply, ServerState};
 use super::metrics::Metrics;
 use super::proto::{ErrorCode, FeedbackItem, Request, Response, RouteItem};
 use crate::bandit::ArmState;
-use crate::router::FeedbackQueue;
+use crate::deploy::{DeployAction, SlotManager, DEPLOY_PRIOR_N_EFF};
+use crate::router::{FeedbackQueue, ModelRef, SlotStat};
 use crate::util::json::Json;
 
 /// Owner-table capacity *per shard*: ids routed but not yet claimed by
@@ -147,6 +148,8 @@ pub(crate) struct SyncReport {
     /// epoch of the last adopted broadcast (0 = never adopted)
     epoch: u64,
     arms: Vec<Option<ArmState>>,
+    /// slot-aligned cumulative routing outcomes (deployment layer input)
+    stats: Vec<SlotStat>,
 }
 
 pub(crate) enum ShardMsg {
@@ -388,6 +391,8 @@ impl Dispatch {
             | Request::Reprice { .. }
             | Request::SetBudget { .. }
             | Request::Inject { .. }
+            | Request::OfferModel { .. }
+            | Request::DeployStatus { .. }
             | Request::Restore { .. } => {
                 let id = req.id();
                 let (tx, rx) = mpsc::channel();
@@ -665,6 +670,22 @@ impl ShardedEngine {
     where
         F: Fn(usize) -> ServerState + Send + Sync + 'static,
     {
+        Self::spawn_deploy(addr, cfg, None, build)
+    }
+
+    /// [`ShardedEngine::spawn`] plus an optional deployment manager.  The
+    /// manager rides the merger thread: it ticks on the globally folded
+    /// slot stats after every merge cycle and executes its actions as
+    /// serialized admin broadcasts, so shard registries stay aligned.
+    pub fn spawn_deploy<F>(
+        addr: &str,
+        cfg: EngineConfig,
+        deploy: Option<SlotManager>,
+        build: F,
+    ) -> Result<ShardedEngine>
+    where
+        F: Fn(usize) -> ServerState + Send + Sync + 'static,
+    {
         let workers = cfg.workers.max(1);
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
@@ -676,7 +697,13 @@ impl ShardedEngine {
 
         let (shard_txs, shards) = spawn_shards(workers, &metrics, Arc::new(build))?;
         let (merge_tx, merge_rx) = mpsc::channel::<MergeCmd>();
-        let merger = spawn_merger(merge_rx, shard_txs.clone(), metrics.clone(), cfg.merge_interval)?;
+        let merger = spawn_merger(
+            merge_rx,
+            shard_txs.clone(),
+            metrics.clone(),
+            cfg.merge_interval,
+            deploy,
+        )?;
 
         let dispatch = Arc::new(Dispatch {
             shard_txs,
@@ -802,13 +829,14 @@ pub(crate) fn spawn_merger(
     shard_txs: Vec<mpsc::Sender<ShardMsg>>,
     metrics: Arc<Metrics>,
     interval: Duration,
+    deploy: Option<SlotManager>,
 ) -> Result<JoinHandle<()>> {
     // re-floor in case the config was built by hand rather than through
     // merge_every (same liveness concern)
     let interval = interval.max(Duration::from_millis(1));
     Ok(std::thread::Builder::new()
         .name("pb-merger".into())
-        .spawn(move || merger_loop(merge_rx, shard_txs, metrics, interval))?)
+        .spawn(move || merger_loop(merge_rx, shard_txs, metrics, interval, deploy))?)
 }
 
 fn shard_loop(mut state: ServerState, rx: mpsc::Receiver<ShardMsg>) {
@@ -829,6 +857,7 @@ fn shard_loop(mut state: ServerState, rx: mpsc::Receiver<ShardMsg>) {
                     // policies with nothing mergeable report an empty
                     // replica; the fold and broadcast become no-ops
                     arms: state.host.export_arms().unwrap_or_default(),
+                    stats: state.host.slot_stats().to_vec(),
                 });
             }
             ShardMsg::Adopt(e, global) => {
@@ -844,13 +873,119 @@ fn shard_loop(mut state: ServerState, rx: mpsc::Receiver<ShardMsg>) {
     }
 }
 
+/// One merge cycle plus, when a deployment manager rides the merger, one
+/// deployment tick on the freshly folded global slot stats.  The tick's
+/// actions are executed as ordinary serialized admin broadcasts, so every
+/// shard applies the churn in the same order.
+fn cycle_and_deploy(
+    shard_txs: &[mpsc::Sender<ShardMsg>],
+    metrics: &Arc<Metrics>,
+    next_epoch: &mut u64,
+    deploy: &mut Option<SlotManager>,
+    stats_buf: &mut Vec<SlotStat>,
+) -> Vec<usize> {
+    let want_stats = deploy.is_some();
+    let reporters = run_cycle(
+        shard_txs,
+        metrics,
+        next_epoch,
+        want_stats.then_some(&mut *stats_buf),
+    );
+    if let Some(mgr) = deploy.as_mut() {
+        mgr.record_stats(stats_buf);
+        let actions = mgr.tick();
+        deploy_apply(mgr, actions, shard_txs, metrics);
+    }
+    reporters
+}
+
+/// Execute deployment actions as serialized admin broadcasts (the same
+/// path operator add/delete take, so slot ids stay aligned across shards
+/// and decision-log replay sees plain portfolio churn).
+fn deploy_apply(
+    mgr: &mut SlotManager,
+    actions: Vec<DeployAction>,
+    shard_txs: &[mpsc::Sender<ShardMsg>],
+    metrics: &Arc<Metrics>,
+) {
+    for a in actions {
+        match a {
+            DeployAction::Deploy(c) => {
+                let req = Request::AddModel {
+                    id: None,
+                    name: c.name.clone(),
+                    price_in: c.price_in,
+                    price_out: c.price_out,
+                    prior: Some((DEPLOY_PRIOR_N_EFF, c.quality)),
+                };
+                let resp = broadcast_acks(shard_txs, None, |tx, t| {
+                    tx.send(ShardMsg::Job(Job {
+                        req: req.clone(),
+                        resp: Reply::Chan(t),
+                    }))
+                    .is_ok()
+                });
+                match resp {
+                    Response::AddModel { arm, .. } => {
+                        mgr.note_deployed(&c.name, arm);
+                        metrics.record_deploy();
+                    }
+                    _ => mgr.deploy_failed(&c.name),
+                }
+            }
+            DeployAction::Evict { slot, .. } => {
+                let req = Request::DeleteModel {
+                    id: None,
+                    model: ModelRef::Arm(slot),
+                };
+                let resp = broadcast_acks(shard_txs, None, |tx, t| {
+                    tx.send(ShardMsg::Job(Job {
+                        req: req.clone(),
+                        resp: Reply::Chan(t),
+                    }))
+                    .is_ok()
+                });
+                if matches!(resp, Response::DeleteModel { .. }) {
+                    metrics.record_eviction();
+                }
+            }
+        }
+    }
+}
+
+/// Splice the merger-owned deployment state into the snapshot file shard
+/// 0 just wrote (the shard cannot: on the engine the manager lives in the
+/// merger, not in any ServerState).  Best-effort — a failure only leaves
+/// the deployment layer out of an otherwise valid router snapshot.
+fn splice_deploy_state(path: &str, mgr: &SlotManager) {
+    let p = std::path::Path::new(path);
+    if let Ok((tag, mut st)) = crate::scenario::snapshot::load_value(p) {
+        if let Json::Obj(map) = &mut st {
+            map.insert("deploy".into(), mgr.export_state());
+            let _ = crate::scenario::snapshot::save_value(p, tag.as_deref(), &st);
+        }
+    }
+}
+
+/// The deploy verbs' rejection on an engine started without `--deploy`.
+fn no_deploy(verb: &str, id: Option<u64>) -> Response {
+    Response::err(
+        ErrorCode::BadRequest,
+        format!("{verb}: no deployment policy configured (start with serve --deploy <policy>)"),
+        id,
+    )
+}
+
 fn merger_loop(
     rx: mpsc::Receiver<MergeCmd>,
     shard_txs: Vec<mpsc::Sender<ShardMsg>>,
     metrics: Arc<Metrics>,
     interval: Duration,
+    mut deploy: Option<SlotManager>,
 ) {
     let mut next_epoch = 1u64;
+    // reused fold buffer for the global slot stats (deployment input)
+    let mut stats_buf: Vec<SlotStat> = Vec::new();
     // deadline-based timer: every received command would otherwise restart
     // the full interval, so sustained admin traffic at a period shorter
     // than the merge interval would starve timer-driven cycles entirely
@@ -858,17 +993,19 @@ fn merger_loop(
     loop {
         let now = Instant::now();
         if now >= next_fire {
-            run_cycle(&shard_txs, &metrics, &mut next_epoch);
+            cycle_and_deploy(&shard_txs, &metrics, &mut next_epoch, &mut deploy, &mut stats_buf);
             next_fire = Instant::now() + interval;
             continue;
         }
         match rx.recv_timeout(next_fire - now) {
             Err(mpsc::RecvTimeoutError::Timeout) => {
-                run_cycle(&shard_txs, &metrics, &mut next_epoch);
+                cycle_and_deploy(&shard_txs, &metrics, &mut next_epoch, &mut deploy, &mut stats_buf);
                 next_fire = Instant::now() + interval;
             }
             Ok(MergeCmd::Cycle(ack)) => {
-                let shards = run_cycle(&shard_txs, &metrics, &mut next_epoch).len();
+                let shards =
+                    cycle_and_deploy(&shard_txs, &metrics, &mut next_epoch, &mut deploy, &mut stats_buf)
+                        .len();
                 next_fire = Instant::now() + interval;
                 if let Some((id, ack)) = ack {
                     ack.send(Response::Sync {
@@ -880,6 +1017,129 @@ fn merger_loop(
                 }
             }
             Ok(MergeCmd::Admin(req, ack)) => {
+                // deployment verbs are answered here: on the engine the
+                // slot manager lives in the merger (one authority over
+                // the serialized admin order), never in a shard's state
+                match &req {
+                    Request::OfferModel {
+                        id,
+                        name,
+                        price_in,
+                        price_out,
+                        quality,
+                    } => {
+                        let resp = if deploy.is_none() {
+                            no_deploy("offer_model", *id)
+                        } else {
+                            if let Some(mgr) = deploy.as_mut() {
+                                mgr.offer(name, *price_in, *price_out, *quality);
+                            }
+                            // tick immediately so a free slot fills without
+                            // waiting out the merge interval
+                            cycle_and_deploy(
+                                &shard_txs,
+                                &metrics,
+                                &mut next_epoch,
+                                &mut deploy,
+                                &mut stats_buf,
+                            );
+                            next_fire = Instant::now() + interval;
+                            let (pooled, deployed) = deploy
+                                .as_ref()
+                                .map_or((0, 0), |m| (m.pool_len(), m.deployed_slots().len()));
+                            Response::Offer {
+                                id: *id,
+                                name: name.clone(),
+                                pooled,
+                                deployed,
+                            }
+                        };
+                        ack.send(resp);
+                        continue;
+                    }
+                    Request::DeployStatus { id } => {
+                        let resp = match deploy.as_ref() {
+                            None => no_deploy("deploy_status", *id),
+                            Some(mgr) => Response::DeployStatus {
+                                id: *id,
+                                status: mgr.status(),
+                            },
+                        };
+                        ack.send(resp);
+                        continue;
+                    }
+                    Request::Inject {
+                        id,
+                        event: crate::scenario::Event::ExpireModel { model },
+                    } => {
+                        let resp = if deploy.is_none() {
+                            no_deploy("expire_model", *id)
+                        } else {
+                            if let Some(mgr) = deploy.as_mut() {
+                                let actions = mgr.expire(model);
+                                deploy_apply(mgr, actions, &shard_txs, &metrics);
+                            }
+                            cycle_and_deploy(
+                                &shard_txs,
+                                &metrics,
+                                &mut next_epoch,
+                                &mut deploy,
+                                &mut stats_buf,
+                            );
+                            next_fire = Instant::now() + interval;
+                            match deploy.as_ref() {
+                                Some(mgr) => Response::DeployStatus {
+                                    id: *id,
+                                    status: mgr.status(),
+                                },
+                                None => no_deploy("expire_model", *id),
+                            }
+                        };
+                        ack.send(resp);
+                        continue;
+                    }
+                    Request::Inject {
+                        id,
+                        event: crate::scenario::Event::SetSlots { k },
+                    } => {
+                        let resp = if deploy.is_none() {
+                            no_deploy("set_slots", *id)
+                        } else {
+                            if let Some(mgr) = deploy.as_mut() {
+                                mgr.set_slots(*k);
+                            }
+                            cycle_and_deploy(
+                                &shard_txs,
+                                &metrics,
+                                &mut next_epoch,
+                                &mut deploy,
+                                &mut stats_buf,
+                            );
+                            next_fire = Instant::now() + interval;
+                            match deploy.as_ref() {
+                                Some(mgr) => Response::DeployStatus {
+                                    id: *id,
+                                    status: mgr.status(),
+                                },
+                                None => no_deploy("set_slots", *id),
+                            }
+                        };
+                        ack.send(resp);
+                        continue;
+                    }
+                    Request::Inject {
+                        id,
+                        event: crate::scenario::Event::StreamInventory { .. },
+                    } => {
+                        ack.send(Response::err(
+                            ErrorCode::BadRequest,
+                            "stream_inventory is a plan-time generator (expand it into offer_model/expire_model events client-side)",
+                            *id,
+                        ));
+                        continue;
+                    }
+                    _ => {}
+                }
                 // restore: parse the snapshot file ONCE here and
                 // broadcast the parsed state — per-shard file reads
                 // would open a divergence window (the path overwritten
@@ -895,6 +1155,15 @@ fn merger_loop(
                             *id,
                         ),
                         Ok(tagged) => {
+                            // deployment state is merger-owned: restore it
+                            // here, not per-shard.  Best-effort — a kind
+                            // mismatch just starts the manager cold while
+                            // the router state restores normally.
+                            if let (Some(mgr), Some(d)) =
+                                (deploy.as_mut(), tagged.1.get("deploy"))
+                            {
+                                let _ = mgr.restore_state(d);
+                            }
                             let st = Arc::new(tagged);
                             broadcast_acks(&shard_txs, req.id(), |tx, t| {
                                 tx.send(ShardMsg::Restore(*id, st.clone(), t)).is_ok()
@@ -921,7 +1190,13 @@ fn merger_loop(
                 // deltas — refuse rather than persist a partial state
                 // labelled "global"; the operator retries once the
                 // fleet is responsive.
-                let reporters = run_cycle(&shard_txs, &metrics, &mut next_epoch);
+                let reporters = cycle_and_deploy(
+                    &shard_txs,
+                    &metrics,
+                    &mut next_epoch,
+                    &mut deploy,
+                    &mut stats_buf,
+                );
                 next_fire = Instant::now() + interval;
                 let resp = if reporters.len() < shard_txs.len() {
                     Response::err(
@@ -954,6 +1229,14 @@ fn merger_loop(
                         Response::err(ErrorCode::Unavailable, "no shard reachable", req.id())
                     }
                 };
+                // the persisted file holds shard 0's (now-global) router
+                // state; the deployment layer lives up here, so splice its
+                // state into the same file before acking
+                if resp.is_ok() {
+                    if let (Some(mgr), Request::Snapshot { path, .. }) = (deploy.as_ref(), &req) {
+                        splice_deploy_state(path, mgr);
+                    }
+                }
                 let _ = ack.send(resp);
             }
             Ok(MergeCmd::Stop) | Err(mpsc::RecvTimeoutError::Disconnected) => break,
@@ -1025,6 +1308,7 @@ fn run_cycle(
     shard_txs: &[mpsc::Sender<ShardMsg>],
     metrics: &Arc<Metrics>,
     next_epoch: &mut u64,
+    stats_out: Option<&mut Vec<SlotStat>>,
 ) -> Vec<usize> {
     let mut replies = Vec::with_capacity(shard_txs.len());
     for (shard, tx) in shard_txs.iter().enumerate() {
@@ -1043,6 +1327,20 @@ fn run_cycle(
     }
     if reports.is_empty() {
         return reporters;
+    }
+    // fold the per-shard cumulative slot stats into a global view for the
+    // deployment layer (slot ids are aligned across replicas by the
+    // serialized admin order, so elementwise summing is exact)
+    if let Some(out) = stats_out {
+        out.clear();
+        for report in &reports {
+            if out.len() < report.stats.len() {
+                out.resize(report.stats.len(), SlotStat::default());
+            }
+            for (g, s) in out.iter_mut().zip(report.stats.iter()) {
+                g.merge(s);
+            }
+        }
     }
     let base = (0..reports.len())
         .max_by_key(|&i| reports[i].epoch)
@@ -1237,6 +1535,100 @@ mod tests {
         let e = c.delete_model(&ModelRef::Arm(2)).unwrap_err();
         assert_eq!(api_code(&e), Some(ErrorCode::UnknownModel));
         assert_eq!(c.set_budget(5e-4).unwrap(), 5e-4);
+        engine.stop();
+    }
+
+    fn spawn_engine_deploy(
+        workers: usize,
+        spec: &str,
+        k: usize,
+        interval: Duration,
+    ) -> ShardedEngine {
+        let budget = 1e-3;
+        let ledger = Arc::new(SharedPacer::new(PacerConfig::new(budget)));
+        let build = move |shard: usize| {
+            let mut router =
+                ParetoRouter::new(RouterConfig::tabula_rasa(D, Some(budget), 100 + shard as u64));
+            router.use_shared_pacer(ledger.clone());
+            router.add_model("llama", 0.1, 0.1, Prior::Cold);
+            router.add_model("mistral", 0.4, 1.6, Prior::Cold);
+            ServerState::new(
+                router,
+                ContextCache::new(4096),
+                Box::new(|t: &str| Ok(hash_features(t, D))),
+                Arc::new(Metrics::new()),
+            )
+        };
+        let mgr = crate::deploy::build_deploy(spec, k).unwrap();
+        ShardedEngine::spawn_deploy(
+            "127.0.0.1:0",
+            EngineConfig::new(workers).merge_every(interval),
+            Some(mgr),
+            build,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn deployment_layer_rides_the_merger_across_shards() {
+        let engine = spawn_engine_deploy(4, "fifo", 2, Duration::from_secs(60));
+        let metrics = engine.metrics();
+        let mut c = ParetoClient::connect(engine.addr).unwrap();
+        // K=2 slots over the 2-arm base portfolio: first two offers deploy,
+        // the third pools
+        assert_eq!(c.offer_model("nova", 0.2, 1.0, Some(0.9)).unwrap(), (0, 1));
+        assert_eq!(c.offer_model("argo", 0.3, 1.2, None).unwrap(), (0, 2));
+        assert_eq!(c.offer_model("lyra", 0.1, 0.8, None).unwrap(), (1, 2));
+        let st = c.deploy_status().unwrap();
+        assert_eq!(st.get("policy").and_then(|j| j.as_str()), Some("fifo"));
+        assert_eq!(
+            st.get("deployed").and_then(|j| j.as_arr()).map(|a| a.len()),
+            Some(2)
+        );
+        // deployed arms are registered on EVERY shard: the duplicate-name
+        // rejection proves each replica holds the model
+        let e = c.add_model("nova", 0.2, 1.0, None).unwrap_err();
+        assert_eq!(api_code(&e), Some(ErrorCode::DuplicateModel));
+        // routed traffic keeps flowing across the enlarged portfolio
+        for i in 0..12u64 {
+            c.route(i, &format!("deploy traffic {i}")).unwrap();
+            c.feedback(i, 0.8, 1e-4).unwrap();
+        }
+        // expiring an incumbent frees its slot for the pooled candidate
+        c.inject(&crate::scenario::Event::ExpireModel { model: "nova".into() })
+            .unwrap();
+        let st = c.deploy_status().unwrap();
+        let names: Vec<String> = st
+            .get("deployed")
+            .and_then(|j| j.as_arr())
+            .map(|a| {
+                a.iter()
+                    .filter_map(|d| d.get("name").and_then(|n| n.as_str()).map(String::from))
+                    .collect()
+            })
+            .unwrap_or_default();
+        assert!(!names.iter().any(|n| n == "nova"), "expired incumbent evicted");
+        assert!(names.iter().any(|n| n == "lyra"), "pooled candidate promoted");
+        // the eviction really deleted the arm on every replica: the name
+        // is registrable again
+        c.add_model("nova", 0.2, 1.0, None).unwrap();
+        assert_eq!(metrics.deploys.load(Ordering::Relaxed), 3);
+        assert!(metrics.evictions.load(Ordering::Relaxed) >= 1);
+        // shrinking the slot count evicts down to the new cap
+        c.inject(&crate::scenario::Event::SetSlots { k: 1 }).unwrap();
+        let st = c.deploy_status().unwrap();
+        assert_eq!(
+            st.get("deployed").and_then(|j| j.as_arr()).map(|a| a.len()),
+            Some(1)
+        );
+        // snapshots carry the merger-owned deployment state
+        let dir = std::env::temp_dir().join(format!("pb_eng_dep_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snap.json");
+        c.snapshot(path.to_str().unwrap()).unwrap();
+        let (_, st) = crate::scenario::snapshot::load_value(&path).unwrap();
+        assert!(st.get("deploy").is_some(), "snapshot must embed deployment state");
+        let _ = std::fs::remove_dir_all(&dir);
         engine.stop();
     }
 

@@ -188,6 +188,10 @@ pub struct Metrics {
     /// decision-log append/flush failures (capture gaps — never fatal to
     /// serving, but a nonzero count means the log is not replay-complete)
     pub log_errors: AtomicU64,
+    /// candidates promoted into a serving slot by the deployment layer
+    pub deploys: AtomicU64,
+    /// incumbents evicted from a serving slot by the deployment layer
+    pub evictions: AtomicU64,
     pub route_latency: LatencyHisto,
     pub e2e_latency: LatencyHisto,
     pub spend: Mutex<f64>,
@@ -255,6 +259,18 @@ impl Metrics {
     pub fn log_error(&self) {
         // invariant: monotone monitoring counter, Relaxed by design
         self.log_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One candidate promoted into a serving slot (deployment layer).
+    pub fn record_deploy(&self) {
+        // invariant: monotone monitoring counter, Relaxed by design
+        self.deploys.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One incumbent evicted from a serving slot (deployment layer).
+    pub fn record_eviction(&self) {
+        // invariant: monotone monitoring counter, Relaxed by design
+        self.evictions.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_feedback(&self, reward: f64, cost: f64) {
@@ -345,6 +361,9 @@ impl Metrics {
         // invariant: same Relaxed monitoring reads as above
         let log_records = self.log_records.load(Ordering::Relaxed);
         let log_errors = self.log_errors.load(Ordering::Relaxed);
+        // invariant: same Relaxed monitoring reads as above
+        let deploys = self.deploys.load(Ordering::Relaxed);
+        let evictions = self.evictions.load(Ordering::Relaxed);
         let spend = *relock(&self.spend);
         let rsum = *relock(&self.reward_sum);
         Json::obj(vec![
@@ -378,6 +397,8 @@ impl Metrics {
             ("dropped_rewards", Json::Num(dropped as f64)),
             ("log_records", Json::Num(log_records as f64)),
             ("log_errors", Json::Num(log_errors as f64)),
+            ("deploys", Json::Num(deploys as f64)),
+            ("evictions", Json::Num(evictions as f64)),
             (
                 "per_shard",
                 Json::Arr(

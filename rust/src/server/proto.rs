@@ -181,6 +181,22 @@ pub enum Request {
     Compare {
         id: Option<u64>,
     },
+    /// Offer a candidate model to the deployment layer (streaming
+    /// inventory).  Answered `bad_request` when the server was started
+    /// without `--deploy`.
+    OfferModel {
+        id: Option<u64>,
+        name: String,
+        price_in: f64,
+        price_out: f64,
+        /// prior quality hint in [0,1]; the deploy layer defaults it
+        quality: Option<f64>,
+    },
+    /// Deployment-layer status: slot occupancy, pool depth, churn
+    /// counters.  Answered `bad_request` without `--deploy`.
+    DeployStatus {
+        id: Option<u64>,
+    },
     Sync {
         id: Option<u64>,
     },
@@ -398,6 +414,29 @@ impl Request {
             }
             "metrics" => Ok(Request::Metrics { id }),
             "compare" => Ok(Request::Compare { id }),
+            "offer_model" => {
+                let (Some(name), Some(price_in), Some(price_out)) = (
+                    j.get("name").and_then(Json::as_str),
+                    get_f(j, "price_in"),
+                    get_f(j, "price_out"),
+                ) else {
+                    return Err(bad("offer_model: need name, price_in, price_out".to_string()));
+                };
+                let quality = get_f(j, "quality");
+                if let Some(q) = quality {
+                    if !(0.0..=1.0).contains(&q) {
+                        return Err(bad("offer_model: quality must be in [0,1]".to_string()));
+                    }
+                }
+                Ok(Request::OfferModel {
+                    id,
+                    name: name.to_string(),
+                    price_in,
+                    price_out,
+                    quality,
+                })
+            }
+            "deploy_status" => Ok(Request::DeployStatus { id }),
             "sync" => Ok(Request::Sync { id }),
             "shutdown" => Ok(Request::Shutdown { id }),
             other => Err(bad(format!("unknown op '{other}'"))),
@@ -420,6 +459,8 @@ impl Request {
             | Request::Restore { id, .. }
             | Request::Metrics { id }
             | Request::Compare { id }
+            | Request::OfferModel { id, .. }
+            | Request::DeployStatus { id }
             | Request::Sync { id }
             | Request::Shutdown { id } => *id,
         }
@@ -493,6 +534,19 @@ pub enum Response {
         id: Option<u64>,
         synced_shards: usize,
         merges: u64,
+    },
+    /// `offer_model` ack: pool depth and occupancy after the offer (and
+    /// any deploys it immediately triggered).
+    Offer {
+        id: Option<u64>,
+        name: String,
+        pooled: usize,
+        deployed: usize,
+    },
+    /// `deploy_status` report (see [`crate::deploy::SlotManager::status`]).
+    DeployStatus {
+        id: Option<u64>,
+        status: Json,
     },
     Shutdown {
         id: Option<u64>,
@@ -631,6 +685,31 @@ impl Response {
                     ("merges", Json::Num(*merges as f64)),
                 ],
             ),
+            Response::Offer {
+                id,
+                name,
+                pooled,
+                deployed,
+            } => envelope(
+                *id,
+                vec![
+                    ("model", Json::Str(name.clone())),
+                    ("pooled", Json::Num(*pooled as f64)),
+                    ("deployed", Json::Num(*deployed as f64)),
+                ],
+            ),
+            Response::DeployStatus { id, status } => {
+                let mut m = match status {
+                    Json::Obj(m) => m.clone(),
+                    _ => Default::default(),
+                };
+                m.insert("ok".to_string(), Json::Bool(true));
+                m.insert("v".to_string(), Json::Num(PROTO_V as f64));
+                if let Some(id) = id {
+                    m.insert("id".to_string(), Json::Num(*id as f64));
+                }
+                Json::Obj(m)
+            }
             Response::Shutdown { id } => envelope(*id, Vec::new()),
         }
     }
@@ -866,6 +945,61 @@ mod tests {
         .to_json();
         assert_eq!(j.get("arms").unwrap().as_f64(), Some(2.0));
         assert_eq!(j.get("t").unwrap().as_f64(), Some(77.0));
+    }
+
+    #[test]
+    fn deploy_verbs_parse_and_serialize() {
+        match parse_req(
+            r#"{"op":"offer_model","id":3,"name":"nova-2","price_in":0.2,"price_out":0.8,"quality":0.7}"#,
+        )
+        .unwrap()
+        {
+            Request::OfferModel {
+                id,
+                name,
+                price_in,
+                quality,
+                ..
+            } => {
+                assert_eq!(id, Some(3));
+                assert_eq!(name, "nova-2");
+                assert_eq!(price_in, 0.2);
+                assert_eq!(quality, Some(0.7));
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        // quality is optional but must be a probability when present
+        match parse_req(r#"{"op":"offer_model","name":"x","price_in":1,"price_out":1}"#).unwrap() {
+            Request::OfferModel { quality, .. } => assert_eq!(quality, None),
+            other => panic!("wrong variant: {other:?}"),
+        }
+        assert!(
+            parse_req(r#"{"op":"offer_model","name":"x","price_in":1,"price_out":1,"quality":1.5}"#)
+                .is_err()
+        );
+        assert!(parse_req(r#"{"op":"offer_model","name":"x","price_in":1}"#).is_err());
+        assert!(matches!(
+            parse_req(r#"{"op":"deploy_status","id":8}"#).unwrap(),
+            Request::DeployStatus { id: Some(8) }
+        ));
+        let j = Response::Offer {
+            id: Some(3),
+            name: "nova-2".into(),
+            pooled: 4,
+            deployed: 2,
+        }
+        .to_json();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("model").unwrap().as_str(), Some("nova-2"));
+        assert_eq!(j.get("pooled").unwrap().as_f64(), Some(4.0));
+        assert_eq!(j.get("deployed").unwrap().as_f64(), Some(2.0));
+        let j = Response::DeployStatus {
+            id: Some(1),
+            status: Json::obj(vec![("slots", Json::Num(3.0))]),
+        }
+        .to_json();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("slots").unwrap().as_f64(), Some(3.0));
     }
 
     #[test]

@@ -125,6 +125,21 @@ impl EventEngine {
     where
         F: Fn(usize) -> ServerState + Send + Sync + 'static,
     {
+        Self::spawn_deploy(addr, cfg, None, build)
+    }
+
+    /// [`EventEngine::spawn`] plus an optional deployment manager; the
+    /// manager rides the shared merger thread exactly as on the threaded
+    /// engine (deploy verbs are serialized admin commands there).
+    pub fn spawn_deploy<F>(
+        addr: &str,
+        cfg: EngineConfig,
+        deploy: Option<crate::deploy::SlotManager>,
+        build: F,
+    ) -> Result<EventEngine>
+    where
+        F: Fn(usize) -> ServerState + Send + Sync + 'static,
+    {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         let local = listener.local_addr()?;
@@ -137,8 +152,13 @@ impl EventEngine {
 
         let (shard_txs, shards) = spawn_shards(workers, &metrics, Arc::new(build))?;
         let (merge_tx, merge_rx) = mpsc::channel::<MergeCmd>();
-        let merger =
-            spawn_merger(merge_rx, shard_txs.clone(), metrics.clone(), cfg.merge_interval)?;
+        let merger = spawn_merger(
+            merge_rx,
+            shard_txs.clone(),
+            metrics.clone(),
+            cfg.merge_interval,
+            deploy,
+        )?;
 
         let mut poller = Poller::new()?;
         let pipe = Arc::new(WakePipe::new()?);
@@ -801,6 +821,8 @@ impl Reactor {
             | Request::Reprice { .. }
             | Request::SetBudget { .. }
             | Request::Inject { .. }
+            | Request::OfferModel { .. }
+            | Request::DeployStatus { .. }
             | Request::Restore { .. } => {
                 let id = req.id();
                 let tag = self.alloc_tag();

@@ -106,6 +106,39 @@ fn hot_path_does_not_allocate_after_warmup() {
         "route()+feedback() allocated in steady state (refresh cadence included)"
     );
 
+    // --- hot path after registry churn --------------------------------------
+    // 40 add/delete cycles leave the registry with a long tombstone
+    // history; the active-index eligibility scan must keep route() and
+    // feedback() off the heap regardless (a naive full-slot walk stays
+    // alloc-free too, but the index is also what keeps this O(active) —
+    // see benches/routing_hot.rs)
+    for c in 0..40 {
+        let slot = r.add_model(&format!("churn-{c}"), 0.2, 0.9, Prior::Cold);
+        for i in 0..8 {
+            let x = &xs[(c * 8 + i) % xs.len()];
+            let d = r.route(x);
+            r.feedback(d.arm, x, rewards[i % rewards.len()], 2.0e-4);
+        }
+        r.delete_model(slot);
+    }
+    // one settling pass re-sizes any buffer the portfolio peak stretched
+    for i in 0..200 {
+        let x = &xs[i % xs.len()];
+        let d = r.route(x);
+        r.feedback(d.arm, x, rewards[i % rewards.len()], 2.0e-4);
+    }
+    let before = allocs();
+    for i in 0..1_000 {
+        let x = &xs[i % xs.len()];
+        let d = r.route(x);
+        r.feedback(d.arm, x, rewards[i % rewards.len()], 2.0e-4);
+    }
+    assert_eq!(
+        allocs() - before,
+        0,
+        "route()+feedback() allocated after add/delete churn"
+    );
+
     // --- hosted batched path ----------------------------------------------
     let mut host = PolicyHost::new(Box::new(three_model_router(3)), None);
     for i in 0..1_500 {

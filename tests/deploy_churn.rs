@@ -1,0 +1,343 @@
+//! Deployment-layer churn stress (docs/deployment.md).
+//!
+//! Three fronts:
+//!
+//! * **Scenario host** — a 600-event offer/expire stream (≥500 churn
+//!   cycles) runs to completion under every registered deployment
+//!   policy, with no stale-arm errors and an O(active) snapshot: the
+//!   tombstone history of hundreds of retired slots must collapse to
+//!   RLE markers, not grow the state file per-candidate.
+//! * **SlotManager** — a mid-stream snapshot restores bit-identically:
+//!   the restored manager and the donor make the same decisions on the
+//!   same continued stream, byte-for-byte in `export_state`.
+//! * **Wire host** — the ISSUE acceptance shape: a 4-shard engine under
+//!   `--deploy ucb --slots 3` digests a 280-candidate stream (540 churn
+//!   verbs over TCP), never exceeds K deployed, keeps the pool bounded,
+//!   and snapshot → restore carries the deployment layer so the revived
+//!   engine reports identical deployment state and routes like the
+//!   donor.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use paretobandit::client::ParetoClient;
+use paretobandit::deploy::{build_deploy, deploy_names, DeployAction, SlotManager};
+use paretobandit::exp::ExpEnv;
+use paretobandit::pacer::{PacerConfig, SharedPacer};
+use paretobandit::router::{
+    build_policy, BuildCtx, ContextCache, ModelSpec, ParetoRouter, Prior, RouterConfig, SlotStat,
+};
+use paretobandit::scenario::{run_scenario, snapshot, Event, RunOptions, ScenarioSpec};
+use paretobandit::server::{EngineConfig, Metrics, ServerState, ShardedEngine};
+use paretobandit::sim::{hash_features, FlashScenario};
+use paretobandit::util::json::Json;
+
+// ---------------------------------------------------------------- scenario --
+
+fn churn_spec(deploy: &str) -> ScenarioSpec {
+    ScenarioSpec::from_toml(&format!(
+        "[scenario]\n\
+         name = \"churn\"\n\
+         steps = 700\n\
+         k = 3\n\
+         budget = 6.6e-4\n\
+         stream_seed = 9300\n\
+         deploy = \"{deploy}\"\n\
+         slots = 3\n\
+         \n\
+         [[event]]\n\
+         at = 1\n\
+         op = \"stream_inventory\"\n\
+         count = 300\n\
+         every = 2\n\
+         expire_after = 40\n\
+         seed = 77\n"
+    ))
+    .expect("churn spec parses")
+}
+
+#[test]
+fn five_hundred_churn_cycles_run_clean_under_every_deploy_policy() {
+    let env = ExpEnv::load(FlashScenario::GoodCheap);
+    assert_eq!(deploy_names(), vec!["fifo", "greedy", "ucb"]);
+    for dspec in ["fifo", "greedy:8", "ucb:16"] {
+        let spec = churn_spec(dspec);
+        let models: Vec<ModelSpec> = (0..spec.k)
+            .map(|m| {
+                let ws = &env.world.models[m];
+                ModelSpec::new(ws.name, ws.price_in_per_m, ws.price_out_per_m)
+            })
+            .collect();
+        let mut host = build_policy(
+            "paretobandit",
+            &BuildCtx {
+                d: env.d(),
+                budget: spec.budget,
+                seed: 7,
+                models: &models,
+            },
+        )
+        .expect("routing policy builds");
+        let run = run_scenario(
+            &spec,
+            &env,
+            &env.world,
+            &mut host,
+            &RunOptions {
+                seed: 7,
+                reprice_router: true,
+            },
+        )
+        .unwrap_or_else(|e| panic!("{dspec}: scenario failed under churn: {e}"));
+        // every step routed and judged — no stale-arm decision survived
+        assert_eq!(run.flat().len(), 700, "{dspec}");
+        let offers = run.event_log.iter().filter(|l| l.contains("offer_model")).count();
+        let expires = run.event_log.iter().filter(|l| l.contains("expire_model")).count();
+        assert!(
+            offers + expires >= 500,
+            "{dspec}: only {offers} offers + {expires} expires applied"
+        );
+        // snapshot compactness: hundreds of retired slots must collapse
+        // to RLE markers — the state stays O(active), not O(offered)
+        let st = host.export_state();
+        let slots = st
+            .get("slots")
+            .and_then(Json::as_arr)
+            .unwrap_or_else(|| panic!("{dspec}: state has no slots array"));
+        assert!(
+            slots.len() <= 40,
+            "{dspec}: snapshot slot array holds {} entries after {} deploys — \
+             tombstones are not run-length encoded",
+            slots.len(),
+            offers
+        );
+        let bytes = st.to_string().len();
+        assert!(
+            bytes < 400_000,
+            "{dspec}: snapshot grew to {bytes} bytes under churn"
+        );
+    }
+}
+
+// ------------------------------------------------------------- slot manager --
+
+/// Deterministic per-slot cumulative stats at churn cycle `i` (pure
+/// function, so a restored manager can be fed the identical stream).
+fn stats_at(i: u64, len: usize) -> Vec<SlotStat> {
+    (0..len)
+        .map(|s| {
+            let r = 0.35 + 0.6 * (((s * 37) % 100) as f64) / 100.0;
+            let c = 1e-4 * (1.0 + ((s * 13) % 7) as f64);
+            SlotStat {
+                n: i + 1,
+                reward_sum: (i + 1) as f64 * r,
+                cost_sum: (i + 1) as f64 * c,
+            }
+        })
+        .collect()
+}
+
+/// One deterministic churn cycle: offer `c<i>`, expire `c<i-25>`, feed
+/// stats, tick, and confirm deploys with slot id = cycle index.
+fn drive(m: &mut SlotManager, i: u64) {
+    let pi = 0.1 + ((i % 17) as f64) * 0.05;
+    let po = 0.4 + ((i % 11) as f64) * 0.2;
+    let q = 0.35 + ((i % 13) as f64) / 20.0;
+    m.offer(&format!("c{i}"), pi, po, Some(q));
+    if i >= 25 {
+        for a in m.expire(&format!("c{}", i - 25)) {
+            assert!(matches!(a, DeployAction::Evict { .. }));
+        }
+    }
+    m.record_stats(&stats_at(i, 512));
+    for a in m.tick() {
+        if let DeployAction::Deploy(c) = a {
+            // registry slot ids only need to be unique and identical on
+            // both sides; the cycle index is both
+            m.note_deployed(&c.name, i as usize);
+        }
+    }
+}
+
+#[test]
+fn slot_manager_restores_bit_identically_mid_stream() {
+    for spec in ["fifo", "greedy:4", "ucb:8"] {
+        let mut donor = build_deploy(spec, 3).unwrap();
+        for i in 0..250 {
+            drive(&mut donor, i);
+        }
+        let snap = donor.export_state();
+        let mut revived = build_deploy(spec, 3).unwrap();
+        revived.restore_state(&snap).unwrap();
+        assert_eq!(
+            donor.export_state().to_string(),
+            revived.export_state().to_string(),
+            "{spec}: restore must reproduce the captured state byte-for-byte"
+        );
+        // the continued stream produces identical decisions on both sides
+        for i in 250..500 {
+            drive(&mut donor, i);
+            drive(&mut revived, i);
+            if i % 50 == 0 {
+                assert_eq!(
+                    donor.status().to_string(),
+                    revived.status().to_string(),
+                    "{spec}: diverged at cycle {i}"
+                );
+            }
+        }
+        assert_eq!(
+            donor.export_state().to_string(),
+            revived.export_state().to_string(),
+            "{spec}: post-restore stream diverged"
+        );
+        // a wrong-kind snapshot is refused, not half-applied
+        let mut wrong = build_deploy("fifo", 3).unwrap();
+        if spec != "fifo" {
+            assert!(wrong.restore_state(&snap).is_err());
+            assert_eq!(wrong.occupied(), 0);
+        }
+    }
+}
+
+// ------------------------------------------------------------------- wire --
+
+const D: usize = 8;
+const BUDGET: f64 = 1e-3;
+
+fn spawn_deploy_engine(
+    workers: usize,
+    restore_from: Option<std::path::PathBuf>,
+) -> ShardedEngine {
+    let ledger = Arc::new(SharedPacer::new(PacerConfig::new(BUDGET)));
+    let mgr_restore = restore_from.clone();
+    let build = move |shard: usize| {
+        let mut router =
+            ParetoRouter::new(RouterConfig::tabula_rasa(D, Some(BUDGET), 500 + shard as u64));
+        router.use_shared_pacer(ledger.clone());
+        match &restore_from {
+            Some(path) => {
+                let st = snapshot::load(path).expect("snapshot file");
+                router.restore_state(&st).expect("restore");
+                if shard > 0 {
+                    router.fork_rng(shard as u64);
+                }
+            }
+            None => {
+                router.add_model("llama", 0.1, 0.1, Prior::Cold);
+                router.add_model("mistral", 0.4, 1.6, Prior::Cold);
+            }
+        }
+        ServerState::new(
+            router,
+            ContextCache::new(4096),
+            Box::new(|t: &str| Ok(hash_features(t, D))),
+            Arc::new(Metrics::new()),
+        )
+    };
+    // mirror `serve --deploy ucb --slots 3 --restore SNAP`: the manager
+    // is rebuilt from its spec and warm-started from the snapshot's
+    // embedded deploy state before the engine spawns
+    let mut mgr = build_deploy("ucb:16", 3).unwrap();
+    if let Some(path) = &mgr_restore {
+        let (_, st) = snapshot::load_value(path).expect("snapshot value");
+        let d = st.get("deploy").expect("snapshot embeds deploy state");
+        mgr.restore_state(d).expect("deploy restore");
+    }
+    ShardedEngine::spawn_deploy(
+        "127.0.0.1:0",
+        // long interval: deployment ticks come from the churn verbs, so
+        // the decision sequence is deterministic, not timer-raced
+        EngineConfig::new(workers).merge_every(Duration::from_secs(600)),
+        Some(mgr),
+        build,
+    )
+    .unwrap()
+}
+
+/// Route 100 eval prompts (no feedback) and count per-arm allocations.
+fn allocation(c: &mut ParetoClient, id_base: u64, arms: usize) -> Vec<usize> {
+    let mut counts = vec![0usize; arms];
+    for i in 0..100u64 {
+        let r = c.route(id_base + i, &format!("eval prompt {i}")).unwrap();
+        counts[r.arm] += 1;
+    }
+    counts
+}
+
+#[test]
+fn four_shard_engine_digests_a_280_candidate_stream_and_restores() {
+    let engine = spawn_deploy_engine(4, None);
+    let mut c = ParetoClient::connect(engine.addr).unwrap();
+    let mut max_deployed = 0usize;
+    let mut id = 0u64;
+    for i in 0..280u64 {
+        let pi = 0.1 + ((i % 17) as f64) * 0.05;
+        let po = 0.4 + ((i % 11) as f64) * 0.2;
+        let q = 0.35 + ((i % 13) as f64) / 20.0;
+        let (pooled, deployed) = c
+            .offer_model(&format!("cand-{i}"), pi, po, Some(q))
+            .unwrap();
+        assert!(deployed <= 3, "offer {i}: {deployed} deployed breaches K=3");
+        assert!(pooled <= i as usize + 1, "offer {i}: pool leak ({pooled})");
+        max_deployed = max_deployed.max(deployed);
+        if i >= 20 {
+            c.inject(&Event::ExpireModel {
+                model: format!("cand-{}", i - 20),
+            })
+            .unwrap();
+        }
+        // keep routed traffic flowing through the churn; 4 routes per
+        // offer keeps the round-robin ticket ≡ 0 mod 4 for the
+        // allocation comparison below
+        for _ in 0..4 {
+            let r = c.route(id, &format!("churn traffic {id}")).unwrap();
+            c.feedback(id, if r.arm == 1 { 0.9 } else { 0.4 }, 1e-4).unwrap();
+            id += 1;
+        }
+    }
+    assert_eq!(max_deployed, 3, "the stream never filled all 3 slots");
+    let st = c.deploy_status().unwrap();
+    assert_eq!(st.get("policy").and_then(Json::as_str), Some("ucb:16"));
+    let pool = st.get("pool").and_then(Json::as_f64).unwrap();
+    assert!(
+        pool <= 280.0 - 260.0 + 3.0,
+        "expired candidates must leave the pool (pool={pool})"
+    );
+    let evictions = st.get("evictions").and_then(Json::as_f64).unwrap();
+    assert!(evictions >= 1.0, "280 candidates over 3 slots must evict");
+    let offers = st.get("offers").and_then(Json::as_f64).unwrap();
+    let expires = st.get("expires").and_then(Json::as_f64).unwrap();
+    assert_eq!(offers + expires, 540.0, "540 churn verbs over the wire");
+
+    // snapshot: bounded despite ~280 retired slots, deploy state embedded
+    let dir = std::env::temp_dir().join(format!("pb_churn_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("churn.snap.json");
+    c.snapshot(path.to_str().unwrap()).unwrap();
+    let bytes = std::fs::metadata(&path).unwrap().len();
+    assert!(bytes < 300_000, "snapshot is {bytes} bytes after churn");
+    let (_, stj) = snapshot::load_value(&path).unwrap();
+    assert!(stj.get("deploy").is_some());
+
+    let donor_status = c.deploy_status().unwrap().to_string();
+    let donor_alloc = allocation(&mut c, 1_000_000, 8);
+
+    // revive: serve --restore path with the deploy layer warm-started
+    let revived = spawn_deploy_engine(4, Some(path.clone()));
+    let mut rc = ParetoClient::connect(revived.addr).unwrap();
+    assert_eq!(
+        rc.deploy_status().unwrap().to_string(),
+        donor_status,
+        "restored engine must report identical deployment state"
+    );
+    let revived_alloc = allocation(&mut rc, 1_000_000, 8);
+    assert_eq!(
+        revived_alloc, donor_alloc,
+        "restored engine must route like the donor"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+    revived.stop();
+    engine.stop();
+}
